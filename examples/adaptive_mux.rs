@@ -1,0 +1,119 @@
+//! Adaptive-N routing demo: the serving-side extension the paper's
+//! discussion motivates. A `MuxRouter` owns coordinators at several N and
+//! routes each arrival by observed rate — light traffic goes to small N
+//! (low latency, little padding waste), bursts go to large N (throughput).
+//!
+//! The demo drives three phases (idle → burst → idle) and prints which
+//! lane served each phase plus the latency cost.
+//!
+//! ```sh
+//! cargo run --release --example adaptive_mux
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use datamux::coordinator::{CoordinatorConfig, MuxCoordinator, MuxRouter};
+use datamux::runtime::{default_artifacts_dir, ArtifactManifest, ModelRuntime};
+use datamux::util::bench::Table;
+use datamux::util::cli::Args;
+use datamux::util::rng::Rng;
+use datamux::workload::RandomWorkload;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env()
+        .describe("profile", "<auto>", "artifact profile for the lanes")
+        .describe("per-phase", "120", "requests per phase");
+    let manifest = ArtifactManifest::load(default_artifacts_dir())?;
+    // pick the smallest profile that has multiple N variants
+    let profile = match args.str("profile", "") {
+        p if !p.is_empty() => p,
+        _ => {
+            let mut profiles: Vec<&str> = manifest
+                .artifacts
+                .iter()
+                .filter(|a| !a.trained)
+                .map(|a| a.profile.as_str())
+                .collect();
+            profiles.sort();
+            profiles.dedup();
+            profiles
+                .into_iter()
+                .max_by_key(|p| {
+                    manifest
+                        .artifacts
+                        .iter()
+                        .filter(|a| !a.trained && a.profile == *p)
+                        .map(|a| a.n_mux)
+                        .collect::<std::collections::HashSet<_>>()
+                        .len()
+                })
+                .unwrap()
+                .to_string()
+        }
+    };
+
+    let rt = ModelRuntime::cpu()?;
+    let mut lanes = Vec::new();
+    let mut ns: Vec<usize> = manifest
+        .artifacts
+        .iter()
+        .filter(|a| !a.trained && a.profile == profile)
+        .map(|a| a.n_mux)
+        .collect::<std::collections::HashSet<_>>()
+        .into_iter()
+        .collect();
+    ns.sort_unstable();
+    println!("profile {profile}: lanes at N = {ns:?}");
+    for n in &ns {
+        let meta = manifest
+            .artifacts
+            .iter()
+            .filter(|a| !a.trained && a.profile == profile && a.n_mux == *n)
+            .min_by_key(|a| a.batch)
+            .unwrap();
+        let model = rt.load(meta)?;
+        lanes.push(MuxCoordinator::start(
+            model,
+            CoordinatorConfig { max_wait: Duration::from_millis(3), ..Default::default() },
+        )?);
+    }
+    let seq_len = lanes[0].seq_len;
+    let tok = lanes[0].tokenizer.clone();
+    let router = Arc::new(MuxRouter::new(lanes, 20_000.0));
+
+    let mut w = RandomWorkload::new(3, 200, seq_len - 4);
+    let rows: Vec<Vec<i32>> = (0..256).map(|_| w.framed_row(&tok, seq_len)).collect();
+
+    let mut table = Table::new("adaptive_mux: lane selection by offered load",
+                               &["phase", "rate r/s", "lane N (mode)", "mean latency"]);
+    let per_phase = args.usize("per-phase", 120);
+    for (phase, gap_us) in [("idle", 20_000u64), ("burst", 200u64), ("cooldown", 20_000u64)] {
+        let mut rng = Rng::new(7);
+        let mut lane_hits: std::collections::BTreeMap<usize, usize> = Default::default();
+        let mut handles = Vec::new();
+        let t0 = std::time::Instant::now();
+        for i in 0..per_phase {
+            let (n, h) = router.submit_framed(rows[i % rows.len()].clone())?;
+            *lane_hits.entry(n).or_default() += 1;
+            handles.push(h);
+            let jitter = (rng.f64() * gap_us as f64) as u64;
+            std::thread::sleep(Duration::from_micros(gap_us / 2 + jitter / 2));
+        }
+        let mut total_lat = Duration::ZERO;
+        for h in &handles {
+            total_lat += h.wait().latency;
+        }
+        let rate = per_phase as f64 / t0.elapsed().as_secs_f64();
+        let mode = lane_hits.iter().max_by_key(|(_, c)| **c).map(|(n, _)| *n).unwrap_or(0);
+        table.row(&[
+            phase.to_string(),
+            format!("{rate:.0}"),
+            format!("{mode} {lane_hits:?}"),
+            format!("{:?}", total_lat / per_phase as u32),
+        ]);
+    }
+    table.print();
+    println!("burst traffic is routed to deeper-mux lanes; idle traffic stays at small N.");
+    Ok(())
+}

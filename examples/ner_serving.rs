@@ -1,0 +1,106 @@
+//! Token-level serving: the CoNLL-NER-style task through the full stack.
+//!
+//! Demonstrates per-position demultiplexing — each response carries
+//! seq_len x n_tags logits, and accuracy is measured tag-by-tag on
+//! non-padding positions (mirroring python/compile/train.py::eval_task).
+//!
+//! ```sh
+//! cargo run --release --example ner_serving -- --requests 2000
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use datamux::coordinator::{CoordinatorConfig, MuxCoordinator};
+use datamux::runtime::{default_artifacts_dir, ArtifactManifest, ModelRuntime};
+use datamux::util::bench::Table;
+use datamux::util::cli::Args;
+use datamux::util::json::{num, obj, s};
+
+const TAGS: [&str; 5] = ["O", "B-PER", "I-PER", "B-LOC", "I-LOC"];
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env()
+        .describe("requests", "2000", "requests to serve")
+        .describe("show", "3", "how many tagged samples to print");
+    let n_requests = args.usize("requests", 2000);
+
+    let dir = default_artifacts_dir();
+    let manifest = ArtifactManifest::load(&dir)?;
+    let eval = datamux::workload::EvalSet::load(dir.join("eval_ner.json"))?;
+    let mut metas: Vec<_> = manifest
+        .artifacts
+        .iter()
+        .filter(|a| a.trained && a.train_task.as_deref() == Some("ner"))
+        .collect();
+    metas.sort_by_key(|a| a.n_mux);
+    anyhow::ensure!(!metas.is_empty(), "no trained ner artifacts — run `make artifacts`");
+
+    let rt = ModelRuntime::cpu()?;
+    let mut table = Table::new("ner_serving: token-level accuracy through rust",
+                               &["N", "token acc", "throughput r/s"]);
+    let mut rows_out = Vec::new();
+
+    for meta in metas {
+        let model = rt.load(meta)?;
+        let coord = Arc::new(MuxCoordinator::start(
+            model,
+            CoordinatorConfig { max_wait: Duration::from_millis(4), ..Default::default() },
+        )?);
+        let framed = eval.framed_rows(&coord.tokenizer, coord.seq_len)?;
+        let vocab = coord.tokenizer.vocab.clone();
+
+        let t0 = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for i in 0..n_requests {
+            handles.push((i % framed.len(), coord.submit_framed(framed[i % framed.len()].clone())?));
+        }
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        let mut shown = 0usize;
+        for (k, h) in handles {
+            let r = h.wait();
+            let preds = r.pred_tokens();
+            let sample = &eval.samples[k];
+            let row = &framed[k];
+            for (j, (&tok, pred)) in row.iter().zip(&preds).enumerate() {
+                if tok == vocab.pad || tok == vocab.cls || tok == vocab.sep {
+                    continue;
+                }
+                if let Some(&want) = sample.tags.get(j) {
+                    total += 1;
+                    if *pred as i64 == want {
+                        hits += 1;
+                    }
+                }
+            }
+            if shown < args.usize("show", 3) {
+                shown += 1;
+                let words: Vec<String> = row
+                    .iter()
+                    .zip(&preds)
+                    .filter(|(&t, _)| t >= vocab.content_base)
+                    .map(|(&t, &p)| {
+                        format!("t{}/{}", t - vocab.content_base, TAGS[p.min(TAGS.len() - 1)])
+                    })
+                    .collect();
+                println!("  [N={}] {}", meta.n_mux, words.join(" "));
+            }
+        }
+        let wall = t0.elapsed();
+        let acc = hits as f64 / total.max(1) as f64;
+        let tput = n_requests as f64 / wall.as_secs_f64();
+        table.row(&[meta.n_mux.to_string(), format!("{acc:.3}"), format!("{tput:.1}")]);
+        rows_out.push(obj(vec![
+            ("n_mux", num(meta.n_mux as f64)),
+            ("token_accuracy", num(acc)),
+            ("throughput_rps", num(tput)),
+        ]));
+    }
+    table.print();
+    datamux::util::bench::write_results(
+        "ner_serving.json",
+        obj(vec![("task", s("ner")), ("lanes", datamux::util::json::arr(rows_out))]),
+    )?;
+    Ok(())
+}

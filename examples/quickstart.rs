@@ -1,0 +1,84 @@
+//! Quickstart: load a DataMUX artifact and serve a few multiplexed
+//! requests. This is the README copy-paste example.
+//!
+//! ```sh
+//! make artifacts            # once (python, build path)
+//! cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use datamux::coordinator::{CoordinatorConfig, MuxCoordinator};
+use datamux::runtime::{default_artifacts_dir, ArtifactManifest, ModelRuntime};
+
+fn main() -> anyhow::Result<()> {
+    // 1. discover artifacts (built once by `make artifacts`)
+    let manifest = ArtifactManifest::load(default_artifacts_dir())?;
+    let meta = manifest
+        .artifacts
+        .iter()
+        .filter(|a| a.n_mux > 1 && a.task == "cls")
+        .min_by_key(|a| (a.d_model, std::cmp::Reverse(a.trained)))
+        .expect("run `make artifacts` first");
+    println!(
+        "artifact: {} (N={} batch={} d={} trained={})",
+        meta.name, meta.n_mux, meta.batch, meta.d_model, meta.trained
+    );
+
+    // 2. one PJRT client per process; compile + upload weights once
+    let rt = ModelRuntime::cpu()?;
+    let model = rt.load(meta)?;
+    println!(
+        "loaded on {}: compile {:.0?}, weights {:.1} MB uploaded in {:.0?}",
+        rt.platform(),
+        model.compile_time,
+        model.weight_bytes as f64 / 1e6,
+        model.upload_time,
+    );
+
+    // 3. start the mux coordinator: requests are packed N-at-a-time into a
+    //    single model execution and demultiplexed back (paper Fig 1)
+    let coord = Arc::new(MuxCoordinator::start(
+        model,
+        CoordinatorConfig { max_wait: Duration::from_millis(5), ..Default::default() },
+    )?);
+
+    // 4. submit token-text requests concurrently (vocabulary: t0..tN words,
+    //    '[SEP]'-joined sentence pairs — see python/compile/data.py)
+    let texts = [
+        "t64 t65 t120 t7",
+        "t100 t101 [SEP] t100",
+        "t80 t81 t82",
+        "t90 t9 t12 t13 t14",
+        "t20 t21 [SEP] t22 t23",
+        "t55 t66 t77",
+    ];
+    let handles: Vec<_> = texts
+        .iter()
+        .map(|t| coord.submit_text(&t.split(" [SEP] ").collect::<Vec<_>>()).unwrap())
+        .collect();
+
+    for (text, h) in texts.iter().zip(handles) {
+        let r = h.wait();
+        println!(
+            "  {:28} -> class {}  (mux slot {}, group {}, {:?})",
+            text,
+            r.pred_class(),
+            r.slot,
+            r.group,
+            r.latency
+        );
+    }
+
+    // 5. serving stats: note requests-per-execution = N * batch
+    let c = coord.stats.counters.snapshot();
+    println!(
+        "\nstats: {} requests in {} model executions ({} group slots padded)",
+        c.completed,
+        c.groups_executed as usize / meta.batch.max(1),
+        c.slots_padded
+    );
+    println!("{}", coord.stats.e2e_latency.summary().render("e2e latency"));
+    Ok(())
+}

@@ -1,0 +1,156 @@
+//! **End-to-end driver** (DESIGN.md §Examples): serve a real labelled
+//! workload through the full stack — tokenizer → mux batcher → PJRT
+//! executable (trained T-MUX weights) → demux → predictions — and report
+//! accuracy, throughput vs the N=1 baseline, and latency percentiles.
+//!
+//! This is the serving realization of the paper's headline experiment
+//! (Fig 4c: throughput on ~20k MNLI instances) with accuracy measured
+//! *through the rust path*, not in python. Results land in
+//! results/serve_classification.json and EXPERIMENTS.md.
+//!
+//! ```sh
+//! cargo run --release --example serve_classification -- --requests 20000
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use datamux::coordinator::{CoordinatorConfig, MuxCoordinator};
+use datamux::runtime::{default_artifacts_dir, ArtifactManifest, ModelRuntime};
+use datamux::util::bench::Table;
+use datamux::util::cli::Args;
+use datamux::util::json::{arr, num, obj, s};
+use datamux::util::metrics::fmt_ns;
+use datamux::workload::EvalSet;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env()
+        .describe("requests", "20000", "total requests to serve")
+        .describe("clients", "8", "closed-loop client threads")
+        .describe("task", "mnli", "eval task (mnli)")
+        .describe("max-wait-ms", "4", "batcher deadline");
+    let n_requests = args.usize("requests", 20_000);
+    let clients = args.usize("clients", 8);
+    let task = args.str("task", "mnli");
+
+    let dir = default_artifacts_dir();
+    let manifest = ArtifactManifest::load(&dir)?;
+    let eval = EvalSet::load(dir.join(format!("eval_{task}.json")))?;
+    println!(
+        "workload: {} ({} labelled samples, {} classes)",
+        task,
+        eval.samples.len(),
+        eval.n_classes
+    );
+
+    // trained artifacts at every available N (N=1 is the vanilla baseline B1)
+    let mut metas: Vec<_> = manifest
+        .artifacts
+        .iter()
+        .filter(|a| a.trained && a.train_task.as_deref() == Some(task.as_str()))
+        .collect();
+    metas.sort_by_key(|a| a.n_mux);
+    anyhow::ensure!(
+        !metas.is_empty(),
+        "no trained {task} artifacts — run `make artifacts` (with training)"
+    );
+
+    let rt = ModelRuntime::cpu()?;
+    let mut table = Table::new(
+        &format!("serve_classification: {task} over {n_requests} requests"),
+        &["N", "acc(py)", "acc(rust)", "thruput r/s", "speedup", "p50", "p95", "p99"],
+    );
+    let mut results = Vec::new();
+    let mut base_tput = None;
+
+    for meta in metas {
+        let model = rt.load(meta)?;
+        let coord = Arc::new(MuxCoordinator::start(
+            model,
+            CoordinatorConfig {
+                max_wait: Duration::from_millis(args.u64("max-wait-ms", 4)),
+                ..Default::default()
+            },
+        )?);
+        let rows = Arc::new(eval.framed_rows(&coord.tokenizer, coord.seq_len)?);
+        let labels: Vec<i64> = eval.samples.iter().map(|s| s.label).collect();
+
+        // closed-loop: `clients` threads, submit→wait→repeat over the eval set
+        let hits = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let served = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        let per_client = n_requests / clients;
+        for c in 0..clients {
+            let coord = coord.clone();
+            let rows = rows.clone();
+            let labels = labels.clone();
+            let hits = hits.clone();
+            let served = served.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per_client {
+                    let k = (c * per_client + i) % rows.len();
+                    let h = match coord.submit_framed(rows[k].clone()) {
+                        Ok(h) => h,
+                        Err(_) => return,
+                    };
+                    let r = h.wait();
+                    served.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if r.pred_class() as i64 == labels[k] {
+                        hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        let wall = t0.elapsed();
+        let served = served.load(std::sync::atomic::Ordering::Relaxed);
+        let acc = hits.load(std::sync::atomic::Ordering::Relaxed) as f64 / served as f64;
+        let tput = served as f64 / wall.as_secs_f64();
+        let speedup = match base_tput {
+            None => {
+                base_tput = Some(tput);
+                1.0
+            }
+            Some(b) => tput / b,
+        };
+        let lat = coord.stats.e2e_latency.summary();
+        table.row(&[
+            meta.n_mux.to_string(),
+            meta.train_accuracy.map(|a| format!("{a:.3}")).unwrap_or_default(),
+            format!("{acc:.3}"),
+            format!("{tput:.1}"),
+            format!("{speedup:.2}x"),
+            fmt_ns(lat.p50_ns),
+            fmt_ns(lat.p95_ns),
+            fmt_ns(lat.p99_ns),
+        ]);
+        results.push(obj(vec![
+            ("n_mux", num(meta.n_mux as f64)),
+            ("accuracy_rust", num(acc)),
+            ("accuracy_python", num(meta.train_accuracy.unwrap_or(f64::NAN))),
+            ("throughput_rps", num(tput)),
+            ("speedup", num(speedup)),
+            ("p50_ns", num(lat.p50_ns as f64)),
+            ("p95_ns", num(lat.p95_ns as f64)),
+            ("p99_ns", num(lat.p99_ns as f64)),
+            ("served", num(served as f64)),
+        ]));
+        println!("N={} done in {wall:?}", meta.n_mux);
+    }
+
+    table.print();
+    datamux::util::bench::write_results(
+        "serve_classification.json",
+        obj(vec![
+            ("task", s(&task)),
+            ("requests", num(n_requests as f64)),
+            ("clients", num(clients as f64)),
+            ("lanes", arr(results)),
+        ]),
+    )?;
+    println!("\nwrote results/serve_classification.json");
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Network front end demo: start the TCP line-protocol server on a free
+//! port, then act as its own client fleet — each client opens a
+//! connection and sends CLS requests, so tokenization, batching, PJRT
+//! execution and demux all happen server-side.
+//!
+//! ```sh
+//! cargo run --release --example tcp_server -- --clients 8 --per-client 40
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use datamux::coordinator::server::{Server, ServerConfig};
+use datamux::coordinator::{CoordinatorConfig, MuxCoordinator};
+use datamux::runtime::{default_artifacts_dir, ArtifactManifest, ModelRuntime};
+use datamux::util::cli::Args;
+use datamux::util::metrics::Histogram;
+use datamux::workload::RandomWorkload;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env()
+        .describe("clients", "8", "client connections")
+        .describe("per-client", "40", "requests per connection");
+    let clients = args.usize("clients", 8);
+    let per_client = args.usize("per-client", 40);
+
+    let manifest = ArtifactManifest::load(default_artifacts_dir())?;
+    let meta = manifest
+        .artifacts
+        .iter()
+        .filter(|a| a.n_mux > 1 && a.task == "cls")
+        .min_by_key(|a| a.d_model)
+        .expect("run `make artifacts`");
+    println!("serving {} (N={})", meta.name, meta.n_mux);
+    let rt = ModelRuntime::cpu()?;
+    let coord = Arc::new(MuxCoordinator::start(
+        rt.load(meta)?,
+        CoordinatorConfig { max_wait: Duration::from_millis(3), ..Default::default() },
+    )?);
+    let server = Server::start(
+        coord.clone(),
+        ServerConfig { addr: "127.0.0.1:0".into(), max_connections: clients + 2 },
+    )?;
+    println!("listening on {}", server.local_addr);
+
+    let addr = server.local_addr;
+    let rtt = Arc::new(Histogram::new());
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let rtt = rtt.clone();
+        joins.push(std::thread::spawn(move || -> anyhow::Result<usize> {
+            let mut w = RandomWorkload::new(100 + c as u64, 200, 10);
+            let stream = TcpStream::connect(addr)?;
+            stream.set_nodelay(true)?;
+            let mut writer = stream.try_clone()?;
+            let mut reader = BufReader::new(stream);
+            let mut ok = 0;
+            for _ in 0..per_client {
+                let line = format!("CLS {}\n", w.text());
+                let t = Instant::now();
+                writer.write_all(line.as_bytes())?;
+                let mut reply = String::new();
+                reader.read_line(&mut reply)?;
+                rtt.record_duration(t.elapsed());
+                if reply.starts_with("OK") {
+                    ok += 1;
+                }
+            }
+            writer.write_all(b"QUIT\n")?;
+            Ok(ok)
+        }));
+    }
+    let mut total_ok = 0;
+    for j in joins {
+        total_ok += j.join().unwrap()?;
+    }
+    let wall = t0.elapsed();
+    println!(
+        "{total_ok}/{} requests OK in {wall:?} ({:.1} req/s over TCP)",
+        clients * per_client,
+        total_ok as f64 / wall.as_secs_f64()
+    );
+    println!("{}", rtt.summary().render("client RTT"));
+    let c = coord.stats.counters.snapshot();
+    println!(
+        "server: {} executions, {} slots padded",
+        c.groups_executed as usize / meta.batch.max(1),
+        c.slots_padded
+    );
+    server.stop();
+    Ok(())
+}

@@ -1,0 +1,346 @@
+"""AOT lowering: JAX/Pallas models -> HLO text artifacts + weight blobs.
+
+This is the compile-path half of the three-layer architecture. For every
+artifact in the matrix we emit:
+
+  artifacts/<name>.hlo.txt      HLO *text* of the jitted forward graph
+                                (text, NOT serialized proto: jax >= 0.5
+                                emits 64-bit instruction ids that
+                                xla_extension 0.5.1 rejects; the text
+                                parser reassigns ids — see
+                                /opt/xla-example/README.md)
+  artifacts/<wkey>.weights.bin  flat little-endian tensor blob, shared by
+                                all batch-size variants of a config
+  artifacts/manifest.json       the registry rust loads: shapes, vocab
+                                layout, parameter order, parity vectors
+
+Weights are *runtime parameters*, not baked constants: the text format
+would balloon to tens of MB per artifact otherwise, and keeping them as
+parameters lets the rust runtime upload them to the PJRT device once and
+reuse the buffers across every request (`execute_b`).
+
+Parameter order is the jax pytree flatten order of the params dict —
+recorded tensor-by-tensor in the manifest so the rust side never guesses.
+
+Pallas path: artifacts are lowered with ``use_pallas=True`` so the
+shipped HLO is the L1 kernels' lowering (interpret=True -> plain HLO ops
+executable on the CPU PJRT client).
+
+Usage:
+  python -m compile.aot --out ../artifacts              # timing matrix
+  python -m compile.aot --out ../artifacts --trained    # + trained models
+  python -m compile.aot --out ../artifacts --quick      # tiny dev subset
+"""
+import argparse
+import dataclasses
+import json
+import os
+import struct
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import config as C
+from . import data as D
+from . import model as M
+
+MAGIC = b"DMUXW1\n"
+
+
+# ---------------------------------------------------------------------------
+# HLO text lowering (interchange gotcha: text, not .serialize())
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def prune_params(params, cfg: C.ModelConfig):
+    """Drop the task heads the artifact's task doesn't use.
+
+    jax.jit DCEs unused parameters out of the lowered module, so the HLO
+    would expect fewer arguments than the full pytree provides — prune
+    *before* lowering so the weights file and the HLO agree exactly.
+    """
+    used_head = {"cls": "head_cls", "token": "head_token",
+                 "retrieval": "head_retrieval"}[cfg.task]
+    return {k: v for k, v in params.items()
+            if not k.startswith("head_") or k == used_head}
+
+
+def lower_model(params, cfg: C.ModelConfig, batch: int) -> str:
+    """Lower forward_task(params, ids) with params as runtime arguments.
+    `params` must already be pruned (prune_params)."""
+    cfg = dataclasses.replace(cfg, use_pallas=True)
+
+    def fn(p, ids):
+        return M.forward_task(p, cfg, ids)
+
+    ids_spec = jax.ShapeDtypeStruct((batch, cfg.n_mux, cfg.input_len), jnp.int32)
+    params_spec = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+    return to_hlo_text(jax.jit(fn).lower(params_spec, ids_spec))
+
+
+# ---------------------------------------------------------------------------
+# weight blobs
+# ---------------------------------------------------------------------------
+
+def flatten_named(params):
+    """(name, leaf) pairs in the exact order jax flattens the pytree —
+    the order the lowered HLO expects its leading parameters in."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out.append((name, np.asarray(leaf)))
+    return out
+
+
+def write_weights(path, named):
+    """MAGIC + u32 header_len + json header + raw tensor bytes."""
+    tensors = []
+    offset = 0
+    blobs = []
+    for name, arr in named:
+        arr = np.ascontiguousarray(arr, dtype=np.float32)
+        blobs.append(arr.tobytes())
+        tensors.append({
+            "name": name,
+            "shape": list(arr.shape),
+            "dtype": "f32",
+            "offset": offset,
+            "nbytes": len(blobs[-1]),
+        })
+        offset += len(blobs[-1])
+    header = json.dumps({"tensors": tensors}).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        for b in blobs:
+            f.write(b)
+    return tensors
+
+
+# ---------------------------------------------------------------------------
+# parity vectors (bit-level contract between python and rust)
+# ---------------------------------------------------------------------------
+
+def parity_blob(params, cfg: C.ModelConfig, batch: int, seed=77):
+    """Deterministic input + expected output for the integration test.
+    Computed through the pallas path — exactly what rust must reproduce."""
+    pcfg = dataclasses.replace(cfg, use_pallas=True)
+    rng = np.random.RandomState(seed)
+    task_gen = {"cls": D.make_mnli if cfg.n_classes == 3 else D.make_sst2,
+                "token": D.make_ner}.get(cfg.task, D.make_retrieval)
+    ds = task_gen(seed, batch * cfg.n_mux, cfg.seq_len)
+    content = ds.ids[: batch * cfg.n_mux].reshape(batch, cfg.n_mux, cfg.seq_len)
+    ids = np.asarray(M.assemble_input(pcfg, content), np.int32)
+    out = np.asarray(M.forward_task(params, pcfg, jnp.asarray(ids))[0], np.float32)
+    flat = out.reshape(-1)
+    k = min(64, flat.size)
+    idx = rng.choice(flat.size, k, replace=False)
+    return {
+        "ids": ids.reshape(-1).tolist(),
+        "check_indices": idx.tolist(),
+        "check_values": [float(flat[i]) for i in idx],
+        "output_shape": list(out.shape),
+        "tol": 2e-4,
+    }
+
+
+# ---------------------------------------------------------------------------
+# artifact matrix
+# ---------------------------------------------------------------------------
+
+def timing_matrix(quick=False):
+    """(profile, n_mux, batch) combos for the serving/throughput benches."""
+    if quick:
+        return [("tiny", n, b) for n in (1, 4) for b in (1, 2)]
+    combos = []
+    for n in (1, 2, 5, 10, 20, 40):
+        for b in (1, 4, 8):
+            combos.append(("base", n, b))
+    for prof in ("small_wide", "small_deep"):
+        for n in (1, 2, 5, 10, 20):
+            combos.append((prof, n, 4))
+    return combos
+
+
+def make_timing_cfg(prof: str, n_mux: int) -> C.ModelConfig:
+    seq = 16 if prof == "tiny" else 32
+    return C.profile(prof, n_mux=n_mux, seq_len=seq, task="cls", n_classes=3)
+
+
+def emit_artifact(outdir, name, params, cfg, batch, wkey, meta, manifest,
+                  written_weights, parity=True):
+    params = prune_params(params, cfg)
+    hlo_path = os.path.join(outdir, f"{name}.hlo.txt")
+    t0 = time.time()
+    hlo = lower_model(params, cfg, batch)
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+    wfile = f"{wkey}.weights.bin"
+    if wkey not in written_weights:
+        tensors = write_weights(os.path.join(outdir, wfile), flatten_named(params))
+        written_weights[wkey] = tensors
+    entry = {
+        "name": name,
+        "hlo": f"{name}.hlo.txt",
+        "weights": wfile,
+        "profile": meta.get("profile", ""),
+        "n_mux": cfg.n_mux,
+        "seq_len": cfg.seq_len,
+        "input_len": cfg.input_len,
+        "batch": batch,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "task": cfg.task,
+        "n_classes": cfg.n_classes,
+        "mux": cfg.mux_strategy,
+        "demux": cfg.demux_strategy,
+        "vocab_size": cfg.vocab_size,
+        "n_weight_tensors": len(written_weights[wkey]),
+        **meta,
+    }
+    if parity:
+        entry["parity"] = parity_blob(params, cfg, batch)
+    manifest["artifacts"].append(entry)
+    print(f"  {name}: {len(hlo) / 1e6:.2f} MB hlo, {time.time() - t0:.1f}s",
+          flush=True)
+
+
+def build_timing(outdir, manifest, written_weights, quick=False):
+    print("== timing artifacts (random weights, pallas path) ==", flush=True)
+    param_cache = {}
+    for prof, n, b in timing_matrix(quick):
+        cfg = make_timing_cfg(prof, n)
+        wkey = f"{prof}_n{n}"
+        if wkey not in param_cache:
+            param_cache[wkey] = M.init_params(jax.random.PRNGKey(hash(wkey) % 2**31), cfg)
+        name = f"timing_{prof}_n{n}_b{b}"
+        # parity only on the smallest batch variant (keeps manifest compact)
+        emit_artifact(outdir, name, param_cache[wkey], cfg, b, wkey,
+                      {"profile": prof, "trained": False}, manifest,
+                      written_weights, parity=(b == timing_matrix(quick)[0][2] or b == 1))
+
+
+def build_trained(outdir, manifest, written_weights, quick=False):
+    """Train tiny T-MUX models (paper recipe) and export them for the
+    accuracy-through-rust examples."""
+    from . import train as T
+    print("== trained artifacts (warm-up + fine-tune) ==", flush=True)
+    jobs = [("mnli", "cls", 3, (1, 4) if quick else (1, 2, 5, 10)),
+            ("ner", "token", 5, (4,) if quick else (2, 5))]
+    for task, task_kind, ncls, ns in jobs:
+        for n in ns:
+            cfg = C.profile("tiny", n_mux=n, seq_len=16, task=task_kind,
+                            n_classes=ncls)
+            # the paper notes convergence time grows ~linearly with N —
+            # scale both phases accordingly
+            wsteps = 150 if quick else min(300 + 170 * n, 2500)
+            tsteps = 150 if quick else min(400 + 60 * n, 1300)
+            t0 = time.time()
+            params, wacc, acc, per_index = T.train_tmux(
+                cfg, task, warmup_steps=wsteps, task_steps=tsteps,
+                batch=8, seed=13)
+            name = f"trained_{task}_n{n}"
+            print(f"  {name}: warmup_retrieval={wacc:.3f} task_acc={acc:.3f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+            emit_artifact(outdir, name, params, cfg, 4, f"{name}",
+                          {"profile": "tiny", "trained": True,
+                           "train_task": task,
+                           "train_accuracy": round(acc, 4),
+                           "warmup_retrieval_accuracy": round(wacc, 4),
+                           "per_index_accuracy": [round(float(a), 4) for a in per_index]},
+                          manifest, written_weights)
+
+
+def build_eval_sets(outdir, quick=False):
+    """Export labelled eval sets (text form) for the accuracy-through-rust
+    examples — same generators as training, held-out seeds."""
+    n = 200 if quick else 2000
+    for task in ("mnli", "ner", "sst2"):
+        ds = D.TASKS[task](987, n, 16)
+        samples = []
+        for i in range(n):
+            entry = {"text": D.ids_to_text(ds.ids[i])}
+            if ds.token_level:
+                entry["label"] = int(ds.labels[i][0])
+                # align tags with the non-pad prefix of the text tokens
+                n_tok = int((ds.ids[i] != C.PAD_ID).sum())
+                entry["tags"] = [int(t) for t in ds.labels[i][:n_tok]]
+            else:
+                entry["label"] = int(ds.labels[i])
+            samples.append(entry)
+        blob = {
+            "task": task,
+            "seq_len": 16,
+            "n_classes": ds.n_classes,
+            "token_level": ds.token_level,
+            "samples": samples,
+        }
+        path = os.path.join(outdir, f"eval_{task}.json")
+        with open(path, "w") as f:
+            json.dump(blob, f)
+        print(f"  eval_{task}.json: {n} samples", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="tiny dev subset")
+    ap.add_argument("--trained", action="store_true", help="also train+export models")
+    ap.add_argument("--timing", dest="timing", action="store_true", default=True)
+    ap.add_argument("--no-timing", dest="timing", action="store_false")
+    args = ap.parse_args()
+
+    outdir = os.path.abspath(args.out)
+    os.makedirs(outdir, exist_ok=True)
+    manifest = {
+        "version": 1,
+        "vocab": {
+            "pad": C.PAD_ID, "cls": C.CLS_ID, "sep": C.SEP_ID,
+            "eps_pad": C.EPS_PAD_ID, "idx_base": C.IDX_BASE,
+            "max_mux": C.MAX_MUX, "content_base": C.CONTENT_BASE,
+        },
+        "artifacts": [],
+    }
+    written_weights = {}
+    t0 = time.time()
+    if args.timing:
+        build_timing(outdir, manifest, written_weights, quick=args.quick)
+    if args.trained:
+        build_trained(outdir, manifest, written_weights, quick=args.quick)
+    build_eval_sets(outdir, quick=args.quick)
+    # merge: keep previously-built artifacts we didn't regenerate (e.g.
+    # retrained models when only the timing matrix is rebuilt)
+    prev_path = os.path.join(outdir, "manifest.json")
+    if os.path.exists(prev_path):
+        with open(prev_path) as f:
+            prev = json.load(f)
+        new_names = {a["name"] for a in manifest["artifacts"]}
+        for a in prev.get("artifacts", []):
+            if (a["name"] not in new_names
+                    and os.path.exists(os.path.join(outdir, a["hlo"]))
+                    and os.path.exists(os.path.join(outdir, a["weights"]))):
+                manifest["artifacts"].append(a)
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {outdir} "
+          f"in {time.time() - t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Shared configuration for the DataMUX stack.
+
+Everything that must agree between the python compile path (L1/L2) and the
+rust request path (L3) lives here: special-token ids, sequence layout, and
+the model-size profiles used by artifacts and experiments.
+
+The rust mirror of the vocabulary layout is rust/src/tokenizer/mod.rs —
+keep the two in sync (tests on both sides pin the constants).
+"""
+from dataclasses import dataclass, field, asdict
+from typing import Optional
+
+# ---------------------------------------------------------------------------
+# Vocabulary layout (mirrored in rust/src/tokenizer).
+#
+#   0            [PAD]    sequence padding
+#   1            [CLS]    sentence-classification anchor
+#   2            [SEP]    pair separator
+#   3            [EPS]    prefix pad token  (paper's epsilon^pad)
+#   4 .. 4+39    [IDX_i]  prefix index tokens (paper's epsilon^i), i < 40
+#   44 ..        t0, t1, ...  content tokens
+# ---------------------------------------------------------------------------
+PAD_ID = 0
+CLS_ID = 1
+SEP_ID = 2
+EPS_PAD_ID = 3
+IDX_BASE = 4
+MAX_MUX = 40          # largest N supported by the vocab layout (paper's max)
+CONTENT_BASE = IDX_BASE + MAX_MUX  # == 44
+
+
+def idx_token(i: int) -> int:
+    """Prefix index token epsilon^i."""
+    assert 0 <= i < MAX_MUX
+    return IDX_BASE + i
+
+
+@dataclass
+class ModelConfig:
+    """T-MUX transformer configuration (L2).
+
+    ``seq_len`` is the *content* length (including [CLS]/[SEP]); the model
+    input length is ``n_mux + seq_len`` because an N-token prefix is
+    prepended for index-embedding demultiplexing (paper §3.2).
+    """
+    vocab_size: int = 256 + CONTENT_BASE
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 256
+    seq_len: int = 16
+    n_mux: int = 1                     # N — number of multiplexed instances
+    mux_strategy: str = "hadamard"     # hadamard | ortho | binary | learned_hadamard | identity
+    demux_strategy: str = "index_embed"  # index_embed | mlp
+    task: str = "cls"                  # cls | token | retrieval
+    n_classes: int = 3
+    use_pallas: bool = False           # pallas kernels (AOT path) vs jnp ref (train path)
+    dropout: float = 0.0               # kept 0; paper does not rely on dropout
+
+    @property
+    def prefix_len(self) -> int:
+        # Index-embedding demux requires the N-token prefix; other demux
+        # strategies do not consume prefix positions, but we keep the input
+        # layout identical across strategies so artifacts are interchangeable.
+        return self.n_mux if self.demux_strategy == "index_embed" else 0
+
+    @property
+    def input_len(self) -> int:
+        return self.prefix_len + self.seq_len
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def to_dict(self):
+        return asdict(self)
+
+
+@dataclass
+class ImageModelConfig:
+    """MLP / CNN image-model configuration (paper §5, Figs 7/11).
+
+    Images are 20x20 crops (paper A.10); MLP flattens to 400, CNN keeps 2D.
+    """
+    arch: str = "mlp"                # mlp | cnn
+    image_hw: int = 20
+    n_mux: int = 1
+    mux_strategy: str = "ortho"      # identity | ortho | lowrank | rotation
+                                     # | random_kernel | learned_kernel | nonlinear
+    mux_width: int = 1               # activation-map multiplier for nonlinear (1|4|8)
+    hidden: int = 100                # MLP hidden width
+    cnn_hidden: int = 84             # CNN penultimate width
+    n_classes: int = 10
+
+    @property
+    def d_input(self) -> int:
+        return self.image_hw * self.image_hw
+
+    def to_dict(self):
+        return asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# Size profiles. "base"/"small_*" are the throughput-bench backbones
+# (scaled stand-ins for the paper's 12L/768H, 12L/384H, 4L/768H — see
+# DESIGN.md §Hardware-Adaptation); "tiny" is the accuracy-experiment model.
+# ---------------------------------------------------------------------------
+PROFILES = {
+    "tiny":       dict(d_model=128, n_layers=2, n_heads=4, d_ff=256),
+    "base":       dict(d_model=256, n_layers=4, n_heads=8, d_ff=1024),
+    "small_wide": dict(d_model=256, n_layers=2, n_heads=8, d_ff=1024),
+    "small_deep": dict(d_model=128, n_layers=4, n_heads=4, d_ff=512),
+}
+
+
+def profile(name: str, **overrides) -> ModelConfig:
+    cfg = ModelConfig(**{**PROFILES[name], **overrides})
+    return cfg

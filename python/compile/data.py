@@ -1,0 +1,343 @@
+"""Synthetic task family standing in for the paper's datasets.
+
+The environment has no network access, so GLUE / CoNLL / Wikitext / MNIST
+are replaced by procedurally generated tasks with the same *type
+signatures* and a matched difficulty ordering (DESIGN.md §Substitutions):
+
+  sst2-syn  binary sentence cls, unigram-decidable            (easy)
+  qqp-syn   binary pair cls, bag-of-words comparable          (easy)
+  qnli-syn  binary pair cls, needs one lookup                 (medium)
+  mnli-syn  3-class pair cls, needs subset/antonym reasoning  (hard)
+  ner-syn   5-tag token cls, local-context rules              (hard, token-level)
+  retrieval zipfian token stream (warm-up corpus)             (wikitext stand-in)
+  digits    procedural 20x20 digit glyphs                     (MNIST stand-in)
+
+All generators are deterministic in their seed, emit *content token ids*
+(>= config.CONTENT_BASE) of exactly ``seq_len`` positions laid out as
+``[CLS] tokens... [SEP] ... [PAD]...``, and expose the same text form the
+rust tokenizer produces (`t{k}` words) so the serving path does real
+tokenization work.
+"""
+from dataclasses import dataclass
+
+import numpy as np
+
+from . import config as C
+
+# content vocabulary: token ids CONTENT_BASE .. CONTENT_BASE+V-1
+V_CONTENT = 256
+
+# sentiment lexicon for sst2-syn
+_POS = np.arange(0, 24)            # content-relative ids
+_NEG = np.arange(24, 48)
+_NEUTRAL = np.arange(48, V_CONTENT)
+
+# qnli-syn: question tokens ids 0..31 map to answer tokens 32..63
+_N_Q = 32
+
+# mnli-syn: antonym pairs (2k, 2k+1) among ids 64..127
+_ANTO_BASE = 64
+
+# ner-syn: trigger/entity structure
+_TRIG_PER, _TRIG_LOC = 0, 1        # trigger tokens (content-relative)
+_ENTITY = np.arange(8, 72)         # entity-capable tokens
+NER_TAGS = ["O", "B-PER", "I-PER", "B-LOC", "I-LOC"]
+
+
+def ct(rel):
+    """content-relative id -> absolute vocab id"""
+    return np.asarray(rel) + C.CONTENT_BASE
+
+
+@dataclass
+class Batchset:
+    """A generated dataset: fixed-length id rows + labels.
+
+    ids:    (n, seq_len) int32, already [CLS] ... [SEP]-framed and padded
+    labels: (n,) int32 for sentence tasks, (n, seq_len) for token tasks
+    """
+    ids: np.ndarray
+    labels: np.ndarray
+    n_classes: int
+    token_level: bool = False
+
+
+def _frame(rng, parts, seq_len):
+    """[CLS] p0... [SEP] p1... [SEP]... -> pad/truncate to seq_len."""
+    row = [C.CLS_ID]
+    for p in parts:
+        row.extend(int(t) for t in p)
+        row.append(C.SEP_ID)
+    row = row[:seq_len]
+    row += [C.PAD_ID] * (seq_len - len(row))
+    return row
+
+
+def _zipf_tokens(rng, n, vocab=V_CONTENT, a=1.3):
+    """Zipfian content tokens (wikitext-ish marginal distribution)."""
+    z = rng.zipf(a, size=n * 4)
+    z = z[z <= vocab][:n]
+    while len(z) < n:
+        more = rng.zipf(a, size=n * 4)
+        more = more[more <= vocab]
+        z = np.concatenate([z, more])[:n]
+    return ct(z - 1)
+
+
+# ---------------------------------------------------------------------------
+# retrieval warm-up stream (wikitext-103 stand-in)
+# ---------------------------------------------------------------------------
+
+def make_retrieval(seed, n, seq_len):
+    rng = np.random.RandomState(seed)
+    body = seq_len - 1
+    ids = np.empty((n, seq_len), np.int32)
+    for i in range(n):
+        ids[i] = _frame(rng, [_zipf_tokens(rng, body - 1)], seq_len)
+    # labels are the inputs themselves; trainer reads ids directly
+    return Batchset(ids=ids, labels=ids.copy(), n_classes=0)
+
+
+# ---------------------------------------------------------------------------
+# sentence-classification tasks
+# ---------------------------------------------------------------------------
+
+def make_sst2(seed, n, seq_len):
+    """Binary sentiment: label = which lexicon dominates (unigram task)."""
+    rng = np.random.RandomState(seed)
+    ids = np.empty((n, seq_len), np.int32)
+    labels = np.empty((n,), np.int32)
+    body = seq_len - 2
+    for i in range(n):
+        y = rng.randint(2)
+        lex = _POS if y == 1 else _NEG
+        n_sent = rng.randint(2, max(3, body // 2))
+        sent = rng.choice(lex, n_sent)
+        fill = rng.choice(_NEUTRAL, body - n_sent)
+        toks = np.concatenate([sent, fill])
+        rng.shuffle(toks)
+        ids[i] = _frame(rng, [ct(toks)], seq_len)
+        labels[i] = y
+    return Batchset(ids, labels, 2)
+
+
+def make_qqp(seed, n, seq_len):
+    """Paraphrase detection: s2 is a shuffled copy of s1 (y=1) or an
+    independently sampled sentence with some overlap (y=0)."""
+    rng = np.random.RandomState(seed)
+    ids = np.empty((n, seq_len), np.int32)
+    labels = np.empty((n,), np.int32)
+    half = (seq_len - 3) // 2
+    for i in range(n):
+        y = rng.randint(2)
+        s1 = rng.choice(V_CONTENT, half)
+        if y == 1:
+            s2 = s1.copy()
+            rng.shuffle(s2)
+        else:
+            s2 = rng.choice(V_CONTENT, half)
+            keep = rng.randint(0, half // 2 + 1)   # partial overlap distractor
+            s2[:keep] = s1[:keep]
+        ids[i] = _frame(rng, [ct(s1), ct(s2)], seq_len)
+        labels[i] = y
+    return Batchset(ids, labels, 2)
+
+
+def make_qnli(seed, n, seq_len):
+    """Answerability: question token q (in s2) has a fixed answer token
+    a(q) = q + 32; y=1 iff a(q) occurs in the context s1."""
+    rng = np.random.RandomState(seed)
+    ids = np.empty((n, seq_len), np.int32)
+    labels = np.empty((n,), np.int32)
+    ctx_len = seq_len - 5
+    for i in range(n):
+        y = rng.randint(2)
+        q = rng.randint(_N_Q)
+        ans = q + _N_Q
+        ctx = rng.choice(_NEUTRAL, ctx_len)
+        if y == 1:
+            ctx[rng.randint(ctx_len)] = ans
+        else:
+            ctx = np.where(ctx == ans, ans + 1, ctx)  # scrub accidental answers
+        ids[i] = _frame(rng, [ct(ctx), ct([q])], seq_len)
+        labels[i] = y
+    return Batchset(ids, labels, 2)
+
+
+def make_mnli(seed, n, seq_len):
+    """3-class inference. premise p, hypothesis h:
+       entail (0):    h tokens are a subsequence of p
+       contradict(2): h contains the antonym partner of a p token
+       neutral (1):   h tokens disjoint from p and its antonyms
+    """
+    rng = np.random.RandomState(seed)
+    ids = np.empty((n, seq_len), np.int32)
+    labels = np.empty((n,), np.int32)
+    p_len = (seq_len - 3) * 2 // 3
+    h_len = (seq_len - 3) - p_len
+    n_pairs = (V_CONTENT - _ANTO_BASE) // 2
+    for i in range(n):
+        y = rng.randint(3)
+        # premise drawn from antonym-pair region so contradictions exist
+        pair_idx = rng.choice(n_pairs, p_len, replace=False)
+        side = rng.randint(0, 2, p_len)
+        prem = _ANTO_BASE + 2 * pair_idx + side
+        if y == 0:      # entail: subsequence of premise
+            take = np.sort(rng.choice(p_len, min(h_len, p_len), replace=False))
+            hyp = prem[take][:h_len]
+            if len(hyp) < h_len:
+                hyp = np.concatenate([hyp, rng.choice(_NEUTRAL, h_len - len(hyp))])
+        elif y == 2:    # contradict: flip one premise token to its antonym
+            j = rng.randint(p_len)
+            anto = _ANTO_BASE + 2 * pair_idx[j] + (1 - side[j])
+            hyp = rng.choice(_NEUTRAL, h_len)
+            hyp[rng.randint(h_len)] = anto
+        else:           # neutral: tokens from pairs not in the premise
+            unused = np.setdiff1d(np.arange(n_pairs), pair_idx)
+            pick = rng.choice(unused, h_len)
+            hyp = _ANTO_BASE + 2 * pick + rng.randint(0, 2, h_len)
+        ids[i] = _frame(rng, [ct(prem), ct(hyp)], seq_len)
+        labels[i] = y
+    return Batchset(ids, labels, 3)
+
+
+# ---------------------------------------------------------------------------
+# token-level task (CoNLL NER stand-in)
+# ---------------------------------------------------------------------------
+
+def make_ner(seed, n, seq_len):
+    """Tags decided by local context: an entity-capable token is PER/LOC if
+    (and only if) preceded by the corresponding trigger; entities may span
+    two tokens (B-/I- structure). Everything else is O."""
+    rng = np.random.RandomState(seed)
+    ids = np.empty((n, seq_len), np.int32)
+    labels = np.zeros((n, seq_len), np.int32)
+    body = seq_len - 2
+    for i in range(n):
+        toks = rng.choice(_NEUTRAL, body).astype(np.int64)
+        tags = np.zeros(body, np.int64)
+        n_ent = rng.randint(1, 4)
+        pos = 0
+        for _ in range(n_ent):
+            start = rng.randint(pos, max(pos + 1, body - 4))
+            if start + 2 >= body:
+                break
+            kind = rng.randint(2)                 # 0=PER 1=LOC
+            span = rng.randint(1, 3)
+            toks[start] = _TRIG_PER if kind == 0 else _TRIG_LOC
+            tags[start] = 0
+            for s in range(span):
+                if start + 1 + s >= body:
+                    break
+                toks[start + 1 + s] = rng.choice(_ENTITY)
+                tags[start + 1 + s] = (1 + 2 * kind) if s == 0 else (2 + 2 * kind)
+            pos = start + span + 2
+        row = _frame(rng, [ct(toks)], seq_len)
+        ids[i] = row
+        # align tags with frame: [CLS] toks... [SEP]; CLS/SEP/PAD tagged O
+        labels[i, 1:1 + body] = tags
+    return Batchset(ids, labels, len(NER_TAGS), token_level=True)
+
+
+# ---------------------------------------------------------------------------
+# image task (MNIST stand-in): procedural 20x20 digit glyphs
+# ---------------------------------------------------------------------------
+
+# 7-segment style geometry on a 20x20 canvas, with per-sample jitter/noise.
+_SEGS = {           # (row0, col0, row1, col1) in a 0..1 unit box
+    "top":    (0.08, 0.2, 0.08, 0.8),
+    "mid":    (0.5, 0.2, 0.5, 0.8),
+    "bot":    (0.9, 0.2, 0.9, 0.8),
+    "tl":     (0.08, 0.2, 0.5, 0.2),
+    "tr":     (0.08, 0.8, 0.5, 0.8),
+    "bl":     (0.5, 0.2, 0.9, 0.2),
+    "br":     (0.5, 0.8, 0.9, 0.8),
+}
+_DIGIT_SEGS = {
+    0: ["top", "bot", "tl", "tr", "bl", "br"],
+    1: ["tr", "br"],
+    2: ["top", "mid", "bot", "tr", "bl"],
+    3: ["top", "mid", "bot", "tr", "br"],
+    4: ["mid", "tl", "tr", "br"],
+    5: ["top", "mid", "bot", "tl", "br"],
+    6: ["top", "mid", "bot", "tl", "bl", "br"],
+    7: ["top", "tr", "br"],
+    8: ["top", "mid", "bot", "tl", "tr", "bl", "br"],
+    9: ["top", "mid", "bot", "tl", "tr", "br"],
+}
+
+
+def _draw_seg(img, seg, hw, thick=1.6):
+    r0, c0, r1, c1 = seg
+    n = 64
+    rr = np.linspace(r0, r1, n) * (hw - 1)
+    cc = np.linspace(c0, c1, n) * (hw - 1)
+    ys, xs = np.mgrid[0:hw, 0:hw]
+    for r, c in zip(rr[::4], cc[::4]):
+        img += np.exp(-(((ys - r) ** 2 + (xs - c) ** 2) / (2 * (thick / 2) ** 2)))
+    return img
+
+
+_GLYPH_CACHE = {}
+
+
+def _glyph(digit, hw):
+    key = (digit, hw)
+    if key not in _GLYPH_CACHE:
+        img = np.zeros((hw, hw))
+        for name in _DIGIT_SEGS[digit]:
+            img = _draw_seg(img, _SEGS[name], hw)
+        _GLYPH_CACHE[key] = np.clip(img, 0, 1)
+    return _GLYPH_CACHE[key]
+
+
+def make_digits(seed, n, hw=20, noise=0.15, max_shift=2):
+    """(n, hw, hw) float32 in [0,1] + (n,) labels. Shift-jittered, noisy
+    seven-segment glyphs; by construction low-rank like MNIST's top-50 PCs."""
+    rng = np.random.RandomState(seed)
+    xs = np.empty((n, hw, hw), np.float32)
+    ys = rng.randint(0, 10, n).astype(np.int32)
+    for i in range(n):
+        g = _glyph(int(ys[i]), hw)
+        dy, dx = rng.randint(-max_shift, max_shift + 1, 2)
+        img = np.roll(np.roll(g, dy, axis=0), dx, axis=1)
+        img = img * rng.uniform(0.8, 1.2) + rng.randn(hw, hw) * noise
+        xs[i] = np.clip(img, 0, 1)
+    return xs, ys
+
+
+# ---------------------------------------------------------------------------
+# registry + text form (for the rust serving path)
+# ---------------------------------------------------------------------------
+
+TASKS = {
+    "sst2": make_sst2,
+    "qqp": make_qqp,
+    "qnli": make_qnli,
+    "mnli": make_mnli,
+    "ner": make_ner,
+}
+
+TASK_CLASSES = {"sst2": 2, "qqp": 2, "qnli": 2, "mnli": 3, "ner": len(NER_TAGS)}
+TASK_TOKEN_LEVEL = {"sst2": False, "qqp": False, "qnli": False, "mnli": False, "ner": True}
+
+
+def ids_to_text(row) -> str:
+    """Mirror of the rust tokenizer's detokenizer: content ids -> t{k},
+    specials -> bracketed names. Used to exercise the rust tokenize path."""
+    words = []
+    for t in row:
+        t = int(t)
+        if t == C.PAD_ID:
+            continue
+        if t == C.CLS_ID:
+            words.append("[CLS]")
+        elif t == C.SEP_ID:
+            words.append("[SEP]")
+        elif t == C.EPS_PAD_ID:
+            words.append("[EPS]")
+        elif C.IDX_BASE <= t < C.CONTENT_BASE:
+            words.append(f"[IDX{t - C.IDX_BASE}]")
+        else:
+            words.append(f"t{t - C.CONTENT_BASE}")
+    return " ".join(words)

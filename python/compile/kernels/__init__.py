@@ -1,0 +1,7 @@
+"""L1 Pallas kernels + pure-jnp reference oracles.
+
+``mux`` / ``demux`` / ``attention`` are the interpret-mode Pallas kernels
+used by the AOT artifact path; ``ref`` holds the jnp oracles used by the
+training path and by the pytest equivalence sweeps.
+"""
+from . import attention, demux, mux, ref  # noqa: F401

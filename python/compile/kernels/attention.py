@@ -1,0 +1,55 @@
+"""Pallas multi-head self-attention kernel (L1).
+
+The backbone hot-spot: softmax(QK^T / sqrt(dh)) V, computed per
+(batch, head) grid step with the full (L, L) score tile resident in VMEM.
+Sequence lengths in this system are small (input_len = N + seq_len <= 104
+even at N=40), so a flash-style streaming softmax is unnecessary: at
+L=104, the score tile is 104*104*4 ≈ 43 KiB and q/k/v slabs are
+3*104*64*4 ≈ 80 KiB — the whole step fits in VMEM with >100x headroom,
+and the two MXU matmuls dominate.
+
+Numerically-stable softmax (max-subtraction) matches kernels/ref.py
+bit-for-bit under f32 (test_kernels.py pins allclose at 1e-5).
+
+interpret=True — see package docstring.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mha_kernel(q_ref, k_ref, v_ref, o_ref):
+    # q/k/v_ref: (1, 1, L, dh)  o_ref: (1, 1, L, dh)
+    q = q_ref[0, 0]
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    dh = q.shape[-1]
+    scores = jax.lax.dot_general(            # (L, L) MXU matmul
+        q, k,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    m = scores.max(axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    probs = e / e.sum(axis=-1, keepdims=True)
+    out = jax.lax.dot_general(               # (L, dh)
+        probs.astype(v.dtype), v,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def mha_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Batched multi-head attention. q/k/v: (B, H, L, dh) -> (B, H, L, dh)."""
+    B, H, L, dh = q.shape
+    grid = (B, H)
+    spec = pl.BlockSpec((1, 1, L, dh), lambda b, h: (b, h, 0, 0))
+    return pl.pallas_call(
+        _mha_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, L, dh), q.dtype),
+        interpret=True,
+    )(q, k, v)

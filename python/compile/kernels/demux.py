@@ -1,0 +1,131 @@
+"""Pallas demultiplexing kernels (L1).
+
+Two strategies from paper §3.2:
+
+  - index_embed: h^i_j = MLP_shared([h_j ; p_i]) where p_i is the hidden
+    state of the i-th prefix token. The concat is algebraically split into
+    two matmul halves (W1 [h;p] = W1h h + W1p p) so the kernel never
+    materializes the concatenated (L, 2d) tensor — the p_i half is computed
+    once per index and broadcast over positions. This fusion is the L1 perf
+    win recorded in EXPERIMENTS.md §Perf.
+
+  - mlp: N independent 2-layer MLPs over the same combined hidden state
+    (adds parameters proportional to N; unstable per paper A.6 but needed
+    for the Fig 4b / Fig 9 reproductions).
+
+TPU mapping: grid = (batch, index); each step holds the (L, d) hidden slab,
+one (d,) index embedding, and the shared (d,f)/(f,d) weights in VMEM and
+issues two MXU matmuls with a GELU between. For d=256, f=1024, L=72:
+weights 2*256*1024*4 ≈ 2 MiB, activations < 0.5 MiB — comfortably VMEM
+resident, so each (b, i) step is a single fused pipeline stage.
+
+interpret=True everywhere; oracles in kernels/ref.py.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gelu(x):
+    return jax.nn.gelu(x)
+
+
+# ---------------------------------------------------------------------------
+# index-embedding demux (shared MLP conditioned on prefix hidden state)
+# ---------------------------------------------------------------------------
+
+def _demux_index_kernel(h_ref, p_ref, w1h_ref, w1p_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    # h_ref: (1, L, d)  p_ref: (1, 1, d)  o_ref: (1, 1, L, d)
+    h = h_ref[0]                                  # (L, d)
+    p = p_ref[0, 0]                               # (d,)
+    hh = jax.lax.dot_general(                     # (L, f) MXU matmul
+        h, w1h_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    ph = p @ w1p_ref[...]                         # (f,) — once per index
+    z = _gelu(hh + ph[None, :] + b1_ref[...][None, :])
+    out = jax.lax.dot_general(                    # (L, d)
+        z, w2_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) + b2_ref[...][None, :]
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def demux_index_mlp(h: jax.Array, p: jax.Array, w1h, w1p, b1, w2, b2) -> jax.Array:
+    """Batched index-embedding demux.
+
+    h: (B, L, d) combined hidden states
+    p: (B, N, d) per-index embeddings (prefix hidden states)
+    w1h: (d, f), w1p: (d, f), b1: (f,), w2: (f, d), b2: (d,)
+    returns: (B, N, L, d)
+    """
+    B, L, d = h.shape
+    N = p.shape[1]
+    f = w1h.shape[1]
+    grid = (B, N)
+    return pl.pallas_call(
+        _demux_index_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, 1, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((d, f), lambda b, i: (0, 0)),
+            pl.BlockSpec((d, f), lambda b, i: (0, 0)),
+            pl.BlockSpec((f,), lambda b, i: (0,)),
+            pl.BlockSpec((f, d), lambda b, i: (0, 0)),
+            pl.BlockSpec((d,), lambda b, i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, L, d), lambda b, i: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, N, L, d), h.dtype),
+        interpret=True,
+    )(h, p, w1h, w1p, b1, w2, b2)
+
+
+# ---------------------------------------------------------------------------
+# per-index MLP demux (N independent MLPs)
+# ---------------------------------------------------------------------------
+
+def _demux_mlp_kernel(h_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    # h_ref: (1, L, d)  w1_ref: (1, d, f)  w2_ref: (1, f, d)  o_ref: (1, 1, L, d)
+    h = h_ref[0]
+    z = _gelu(
+        jax.lax.dot_general(
+            h, w1_ref[0],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        + b1_ref[0][None, :]
+    )
+    out = jax.lax.dot_general(
+        z, w2_ref[0],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) + b2_ref[0][None, :]
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def demux_mlp(h: jax.Array, w1, b1, w2, b2) -> jax.Array:
+    """Batched per-index MLP demux.
+
+    h: (B, L, d); w1: (N, d, f), b1: (N, f), w2: (N, f, d), b2: (N, d)
+    returns: (B, N, L, d)
+    """
+    B, L, d = h.shape
+    N, _, f = w1.shape
+    grid = (B, N)
+    return pl.pallas_call(
+        _demux_mlp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, d, f), lambda b, i: (i, 0, 0)),
+            pl.BlockSpec((1, f), lambda b, i: (i, 0)),
+            pl.BlockSpec((1, f, d), lambda b, i: (i, 0, 0)),
+            pl.BlockSpec((1, d), lambda b, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, L, d), lambda b, i: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, N, L, d), h.dtype),
+        interpret=True,
+    )(h, w1, b1, w2, b2)

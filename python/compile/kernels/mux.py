@@ -1,0 +1,107 @@
+"""Pallas multiplexing kernels (L1).
+
+The multiplexer (paper eq. 1) computes  x^{1:N} = (1/N) sum_i phi^i(x^i)
+tokenwise. Three transform families are implemented:
+
+  - hadamard: phi^i(x) = x * v_i          (fixed Gaussian vector, diag map)
+  - ortho:    phi^i(x) = W_i x            (fixed random orthogonal matrix)
+  - binary:   phi^i(x) = x * m_i          (0/1 chunk-select mask, paper A.5)
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles (batch,
+token-block); each step keeps an (N, L_BLK, d) slab of embeddings plus the
+(N, d) / (N, d, d) transform resident in VMEM and writes one (L_BLK, d)
+output tile. For hadamard the inner op is a VPU elementwise multiply-
+accumulate; for ortho it is N (L_BLK, d)x(d, d) MXU matmuls accumulated in
+f32. L_BLK is chosen so the slab stays within the VMEM budget:
+N*L_BLK*d*4 + N*d*d*4 + L_BLK*d*4 bytes <= ~12 MiB.
+
+Kernels are lowered with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); numerics are pinned to kernels/ref.py by
+python/tests/test_kernels.py.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Token-block size. 8-sublane aligned; at N=40, d=256:
+# 40*16*256*4 B (slab) + 40*256*4 B (vecs) + 16*256*4 B (out) ≈ 0.7 MiB VMEM.
+L_BLK = 16
+
+
+def _pick_lblk(L: int) -> int:
+    # largest divisor of L that is <= L_BLK keeps the BlockSpec exact
+    for cand in (L_BLK, 8, 4, 2, 1):
+        if L % cand == 0:
+            return cand
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# hadamard / binary (both are elementwise-vector transforms)
+# ---------------------------------------------------------------------------
+
+def _mux_vec_kernel(xs_ref, vec_ref, o_ref, *, n_mux: int):
+    # xs_ref: (1, N, L_BLK, d)  vec_ref: (N, d)  o_ref: (1, L_BLK, d)
+    xs = xs_ref[0]                       # (N, L_BLK, d)
+    v = vec_ref[...]                     # (N, d)
+    acc = (xs * v[:, None, :]).sum(axis=0) * (1.0 / n_mux)
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+def mux_hadamard(xs: jax.Array, vecs: jax.Array) -> jax.Array:
+    """Batched Hadamard mux. xs: (B, N, L, d), vecs: (N, d) -> (B, L, d)."""
+    B, N, L, d = xs.shape
+    lblk = _pick_lblk(L)
+    grid = (B, L // lblk)
+    return pl.pallas_call(
+        functools.partial(_mux_vec_kernel, n_mux=N),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, N, lblk, d), lambda b, l: (b, 0, l, 0)),
+            pl.BlockSpec((N, d), lambda b, l: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, lblk, d), lambda b, l: (b, l, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, L, d), xs.dtype),
+        interpret=True,
+    )(xs, vecs)
+
+
+# Binary masks are numerically identical machinery to hadamard.
+mux_binary = mux_hadamard
+
+
+# ---------------------------------------------------------------------------
+# ortho (dense per-index linear transform)
+# ---------------------------------------------------------------------------
+
+def _mux_ortho_kernel(xs_ref, mat_ref, o_ref, *, n_mux: int):
+    # xs_ref: (1, N, L_BLK, d)  mat_ref: (N, d, d)  o_ref: (1, L_BLK, d)
+    xs = xs_ref[0]
+    m = mat_ref[...]
+    # N MXU matmuls accumulated in f32: out = (1/N) sum_i xs[i] @ m[i]
+    acc = jax.lax.dot_general(
+        xs, m,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    ).sum(axis=0) * (1.0 / n_mux)
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+def mux_ortho(xs: jax.Array, mats: jax.Array) -> jax.Array:
+    """Batched orthogonal mux. xs: (B, N, L, d), mats: (N, d, d) -> (B, L, d)."""
+    B, N, L, d = xs.shape
+    lblk = _pick_lblk(L)
+    grid = (B, L // lblk)
+    return pl.pallas_call(
+        functools.partial(_mux_ortho_kernel, n_mux=N),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, N, lblk, d), lambda b, l: (b, 0, l, 0)),
+            pl.BlockSpec((N, d, d), lambda b, l: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, lblk, d), lambda b, l: (b, l, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, L, d), xs.dtype),
+        interpret=True,
+    )(xs, mats)

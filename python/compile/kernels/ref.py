@@ -1,0 +1,91 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1).
+
+Every kernel in this package has an exact functional twin here; pytest
+asserts allclose between the two across shape/dtype/N sweeps
+(python/tests/test_kernels.py). The training path (L2) also uses these
+reference implementations directly — interpret-mode Pallas is functionally
+identical but slower to trace, so we reserve the Pallas path for the AOT
+artifacts and verify equality in tests.
+
+Shapes follow the paper's notation: N = number of multiplexed instances,
+L = sequence length, d = model width.
+"""
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Multiplexing  (paper eq. 1):  x^{1:N} = (1/N) sum_i phi^i(x^i)
+# ---------------------------------------------------------------------------
+
+def mux_hadamard(xs: jax.Array, vecs: jax.Array) -> jax.Array:
+    """Hadamard multiplexing: phi^i(x) = x * v_i (elementwise).
+
+    xs: (N, L, d) stacked per-instance embeddings
+    vecs: (N, d) fixed Gaussian vectors
+    returns: (L, d) combined representation
+    """
+    return jnp.mean(xs * vecs[:, None, :], axis=0)
+
+
+def mux_ortho(xs: jax.Array, mats: jax.Array) -> jax.Array:
+    """Orthogonal multiplexing: phi^i(x) = W_i x for orthogonal W_i.
+
+    xs: (N, L, d), mats: (N, d, d) -> (L, d)
+    """
+    # out[l, e] = mean_i sum_d xs[i, l, d] mats[i, d, e]
+    return jnp.mean(jnp.einsum("nld,nde->nle", xs, mats), axis=0)
+
+
+def mux_binary(xs: jax.Array, masks: jax.Array) -> jax.Array:
+    """Binary-mask multiplexing (paper A.5): mask_i selects the i-th d/N
+    chunk. Equivalent to Hadamard with 0/1 vectors; masks: (N, d)."""
+    return jnp.mean(xs * masks[:, None, :], axis=0)
+
+
+def demux_index_mlp(h: jax.Array, p: jax.Array, w1h, w1p, b1, w2, b2) -> jax.Array:
+    """Index-embedding demultiplexing (paper §3.2, strategy 2).
+
+    h^i_j = MLP_shared([h_j ; p_i]); the concat is folded into two matmul
+    halves: W1 [h;p] = W1h h + W1p p.
+
+    h: (L, d) combined hidden states
+    p: (N, d) index embeddings (hidden states at the prefix positions)
+    w1h: (d, f), w1p: (d, f), b1: (f,), w2: (f, d), b2: (d,)
+    returns: (N, L, d) demultiplexed hidden states
+    """
+    ph = p @ w1p                                             # (N, f)
+    hh = h @ w1h                                             # (L, f)
+    z = jax.nn.gelu(hh[None, :, :] + ph[:, None, :] + b1)    # (N, L, f)
+    return z @ w2 + b2                                       # (N, L, d)
+
+
+def demux_mlp(h: jax.Array, w1, b1, w2, b2) -> jax.Array:
+    """Per-index MLP demultiplexing (paper §3.2, strategy 1).
+
+    N independent 2-layer MLPs applied to the same combined hidden state.
+
+    h: (L, d); w1: (N, d, f), b1: (N, f), w2: (N, f, d), b2: (N, d)
+    returns: (N, L, d)
+    """
+    z = jax.nn.gelu(jnp.einsum("ld,ndf->nlf", h, w1) + b1[:, None, :])
+    return jnp.einsum("nlf,nfd->nld", z, w2) + b2[:, None, :]
+
+
+# ---------------------------------------------------------------------------
+# Multi-head self-attention (the backbone hot-spot)
+# ---------------------------------------------------------------------------
+
+def mha_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """Scaled dot-product attention per head.
+
+    q, k, v: (H, L, dh); mask: optional (L, L) additive mask.
+    returns: (H, L, dh)
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("hld,hmd->hlm", q, k) / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    if mask is not None:
+        scores = scores + mask
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hlm,hmd->hld", probs, v)

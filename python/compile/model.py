@@ -1,0 +1,444 @@
+"""L2: the T-MUX model (paper §3/§4) plus the MLP/CNN image models (§5).
+
+Pure-jax (no flax in this image): parameters are nested dicts, forward
+functions are pure. Two execution paths share one parameterization:
+
+  - ``use_pallas=False`` — jnp reference ops (kernels/ref.py); used for
+    training (fast to trace on CPU).
+  - ``use_pallas=True``  — interpret-mode Pallas kernels (kernels/*.py);
+    used when lowering AOT inference artifacts so the shipped HLO runs
+    through the L1 kernels.
+
+test_model.py pins the two paths to identical outputs.
+
+Input layout for T-MUX (must match rust/src/coordinator — see config.py):
+
+    ids: (B, N, input_len) int32
+    input_len = prefix_len + seq_len
+    ids[b, i] = prefix^i ++ [CLS] content... [SEP] [PAD]...
+    prefix^i  = [EPS]*i ++ [IDX_i] ++ [EPS]*(N-1-i)        (paper §3.2)
+"""
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import config as C
+from .kernels import attention as kattn
+from .kernels import demux as kdemux
+from .kernels import mux as kmux
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def _dense(key, d_in, d_out, scale=None):
+    scale = scale if scale is not None else (2.0 / (d_in + d_out)) ** 0.5
+    return {
+        "w": jax.random.normal(key, (d_in, d_out)) * scale,
+        "b": jnp.zeros((d_out,)),
+    }
+
+
+def _layer_norm_params(d):
+    return {"g": jnp.ones((d,)), "b": jnp.zeros((d,))}
+
+
+def _random_orthogonal(key, d):
+    a = jax.random.normal(key, (d, d))
+    q, r = jnp.linalg.qr(a)
+    # sign-fix for a haar-uniform orthogonal matrix
+    return q * jnp.sign(jnp.diag(r))[None, :]
+
+
+def init_mux_params(key, cfg: C.ModelConfig):
+    """Fixed (or learned) multiplexing transforms phi^i.
+
+    hadamard/binary: (N, d) vectors; ortho: (N, d, d) matrices.
+    All are *frozen* except for the ``learned_hadamard`` strategy — the
+    trainer masks updates via `trainable_mask` below.
+    """
+    N, d = cfg.n_mux, cfg.d_model
+    s = cfg.mux_strategy
+    if s in ("hadamard", "learned_hadamard"):
+        return {"vecs": jax.random.normal(key, (N, d))}
+    if s == "ortho":
+        keys = jax.random.split(key, N)
+        return {"mats": jnp.stack([_random_orthogonal(k, d) for k in keys])}
+    if s == "binary":
+        chunk = max(d // N, 1)
+        m = jnp.zeros((N, d))
+        for i in range(N):
+            lo = (i * chunk) % d
+            m = m.at[i, lo:lo + chunk].set(1.0)
+        return {"vecs": m}
+    if s == "identity":
+        return {"vecs": jnp.ones((N, d))}
+    raise ValueError(f"unknown mux strategy {s}")
+
+
+def init_params(key, cfg: C.ModelConfig):
+    """Full T-MUX parameter pytree."""
+    keys = jax.random.split(key, 16 + cfg.n_layers)
+    d, f = cfg.d_model, cfg.d_ff
+    params = {
+        "tok_emb": jax.random.normal(keys[0], (cfg.vocab_size, d)) * 0.02,
+        "pos_emb": jax.random.normal(keys[1], (cfg.input_len, d)) * 0.02,
+        "mux": init_mux_params(keys[2], cfg),
+        "layers": [],
+        "ln_f": _layer_norm_params(d),
+    }
+    for li in range(cfg.n_layers):
+        k = jax.random.split(keys[3 + li], 8)
+        params["layers"].append({
+            "ln1": _layer_norm_params(d),
+            "wq": _dense(k[0], d, d), "wk": _dense(k[1], d, d),
+            "wv": _dense(k[2], d, d), "wo": _dense(k[3], d, d),
+            "ln2": _layer_norm_params(d),
+            "ff1": _dense(k[4], d, f), "ff2": _dense(k[5], f, d),
+        })
+    kd = jax.random.split(keys[15], 6)
+    fd = 2 * d   # demux MLP hidden width
+    if cfg.demux_strategy == "index_embed":
+        params["demux"] = {
+            "w1h": jax.random.normal(kd[0], (d, fd)) * (1.0 / math.sqrt(d)),
+            "w1p": jax.random.normal(kd[1], (d, fd)) * (1.0 / math.sqrt(d)),
+            "b1": jnp.zeros((fd,)),
+            "w2": jax.random.normal(kd[2], (fd, d)) * (1.0 / math.sqrt(fd)),
+            "b2": jnp.zeros((d,)),
+        }
+    elif cfg.demux_strategy == "mlp":
+        params["demux"] = {
+            "w1": jax.random.normal(kd[0], (cfg.n_mux, d, fd)) * (1.0 / math.sqrt(d)),
+            "b1": jnp.zeros((cfg.n_mux, fd)),
+            "w2": jax.random.normal(kd[1], (cfg.n_mux, fd, d)) * (1.0 / math.sqrt(fd)),
+            "b2": jnp.zeros((cfg.n_mux, d)),
+        }
+    else:
+        raise ValueError(f"unknown demux strategy {cfg.demux_strategy}")
+    params["head_cls"] = _dense(kd[3], d, cfg.n_classes)
+    params["head_token"] = _dense(kd[4], d, cfg.n_classes)
+    params["head_retrieval"] = _dense(kd[5], d, cfg.vocab_size)
+    return params
+
+
+def trainable_mask(params, cfg: C.ModelConfig):
+    """1/0 pytree: which leaves the optimizer may update.
+
+    The mux transforms are fixed random (paper §3.1) except for the
+    ``learned_hadamard`` ablation (paper A.5).
+    """
+    mask = jax.tree_util.tree_map(lambda _: 1.0, params)
+    if cfg.mux_strategy != "learned_hadamard":
+        mask["mux"] = jax.tree_util.tree_map(lambda _: 0.0, params["mux"])
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x, p, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
+
+
+def _apply_dense(x, p):
+    return x @ p["w"] + p["b"]
+
+
+def _mux(params, cfg: C.ModelConfig, emb):
+    """emb: (B, N, Lin, d) -> (B, Lin, d)."""
+    mp = params["mux"]
+    if cfg.mux_strategy == "ortho":
+        if cfg.use_pallas:
+            return kmux.mux_ortho(emb, mp["mats"])
+        return jax.vmap(lambda x: ref.mux_ortho(x, mp["mats"]))(emb)
+    vecs = mp["vecs"]
+    if cfg.use_pallas:
+        return kmux.mux_hadamard(emb, vecs)
+    return jax.vmap(lambda x: ref.mux_hadamard(x, vecs))(emb)
+
+
+def _attention(cfg: C.ModelConfig, lp, x):
+    """x: (B, L, d) -> (B, L, d) multi-head self-attention."""
+    B, L, d = x.shape
+    H, dh = cfg.n_heads, cfg.d_head
+
+    def split(t):  # (B, L, d) -> (B, H, L, dh)
+        return t.reshape(B, L, H, dh).transpose(0, 2, 1, 3)
+
+    q = split(_apply_dense(x, lp["wq"]))
+    k = split(_apply_dense(x, lp["wk"]))
+    v = split(_apply_dense(x, lp["wv"]))
+    if cfg.use_pallas:
+        o = kattn.mha_attention(q, k, v)
+    else:
+        o = jax.vmap(ref.mha_attention)(q, k, v)
+    o = o.transpose(0, 2, 1, 3).reshape(B, L, d)
+    return _apply_dense(o, lp["wo"])
+
+
+def _encoder(params, cfg: C.ModelConfig, x):
+    """Pre-LN transformer encoder. x: (B, L, d)."""
+    for lp in params["layers"]:
+        x = x + _attention(cfg, lp, _layer_norm(x, lp["ln1"]))
+        h = _apply_dense(jax.nn.gelu(_apply_dense(_layer_norm(x, lp["ln2"]), lp["ff1"])), lp["ff2"])
+        x = x + h
+    return _layer_norm(x, params["ln_f"])
+
+
+def _demux(params, cfg: C.ModelConfig, h, demux_len=None):
+    """h: (B, Lin, d) encoder output -> (B, N, L', d) per-instance states.
+
+    ``demux_len`` restricts demultiplexing to the first L' content
+    positions. The demux MLP is position-wise, so this changes cost, not
+    values. Sentence-classification inference only needs the [CLS]
+    position (demux_len=1) — demuxing all L positions costs O(N*L*d^2)
+    per execution, which erases the multiplexing throughput win at large
+    N (EXPERIMENTS.md §Perf, L2 optimization #1).
+    """
+    dp = params["demux"]
+    P = cfg.prefix_len
+    content = h[:, P:, :]                        # (B, L, d)
+    if demux_len is not None:
+        content = content[:, :demux_len, :]
+    if cfg.demux_strategy == "index_embed":
+        p = h[:, :cfg.n_mux, :]                  # (B, N, d) prefix hidden states
+        if cfg.use_pallas:
+            return kdemux.demux_index_mlp(content, p, dp["w1h"], dp["w1p"],
+                                          dp["b1"], dp["w2"], dp["b2"])
+        return jax.vmap(lambda hh, pp: ref.demux_index_mlp(
+            hh, pp, dp["w1h"], dp["w1p"], dp["b1"], dp["w2"], dp["b2"]))(content, p)
+    # per-index MLP demux
+    if cfg.use_pallas:
+        return kdemux.demux_mlp(content, dp["w1"], dp["b1"], dp["w2"], dp["b2"])
+    return jax.vmap(lambda hh: ref.demux_mlp(
+        hh, dp["w1"], dp["b1"], dp["w2"], dp["b2"]))(content)
+
+
+def forward(params, cfg: C.ModelConfig, ids, demux_len=None):
+    """Full T-MUX forward.
+
+    ids: (B, N, input_len) int32 -> dict of per-task outputs:
+      hidden:    (B, N, L', d)   demultiplexed hidden states
+      cls:       (B, N, n_classes)    sentence-classification logits ([CLS])
+      token:     (B, N, L', n_classes) token-classification logits
+      retrieval: (B, N, L', vocab)     retrieval logits
+    where L' = demux_len or seq_len (see _demux).
+    """
+    B, N, Lin = ids.shape
+    assert N == cfg.n_mux and Lin == cfg.input_len, (ids.shape, cfg)
+    emb = params["tok_emb"][ids] + params["pos_emb"][None, None, :, :]
+    x = _mux(params, cfg, emb)                   # (B, Lin, d)
+    h = _encoder(params, cfg, x)                 # (B, Lin, d)
+    dem = _demux(params, cfg, h, demux_len)      # (B, N, L', d)
+    out = {"hidden": dem}
+    # heads may be pruned for AOT export (aot.prune_params): compute only
+    # the ones present in the pytree
+    if "head_cls" in params:
+        out["cls"] = _apply_dense(dem[:, :, 0, :], params["head_cls"])
+    if "head_token" in params:
+        out["token"] = _apply_dense(dem, params["head_token"])
+    if "head_retrieval" in params:
+        out["retrieval"] = _apply_dense(dem, params["head_retrieval"])
+    return out
+
+
+def forward_task(params, cfg: C.ModelConfig, ids):
+    """Inference entry point lowered by aot.py: returns only the logits the
+    configured task needs (keeps artifacts small and XLA DCE effective).
+    For sentence classification, only the [CLS] position is demultiplexed
+    (identical logits, O(L) less demux work — §Perf L2 #1)."""
+    out = forward(params, cfg, ids, demux_len=1 if cfg.task == "cls" else None)
+    if cfg.task == "cls":
+        return (out["cls"],)
+    if cfg.task == "token":
+        return (out["token"],)
+    if cfg.task == "retrieval":
+        return (out["retrieval"],)
+    raise ValueError(cfg.task)
+
+
+def build_prefix(n_mux: int) -> list[list[int]]:
+    """prefix^i = [EPS]*i + [IDX_i] + [EPS]*(N-1-i) (paper §3.2)."""
+    out = []
+    for i in range(n_mux):
+        row = [C.EPS_PAD_ID] * n_mux
+        row[i] = C.idx_token(i)
+        out.append(row)
+    return out
+
+
+def assemble_input(cfg: C.ModelConfig, content_ids) -> jnp.ndarray:
+    """content_ids: (B, N, seq_len) -> (B, N, input_len) with prefixes."""
+    content_ids = jnp.asarray(content_ids, jnp.int32)
+    B, N, L = content_ids.shape
+    assert N == cfg.n_mux and L == cfg.seq_len
+    if cfg.prefix_len == 0:
+        return content_ids
+    pref = jnp.asarray(build_prefix(N), jnp.int32)          # (N, N)
+    pref = jnp.broadcast_to(pref[None], (B, N, N))
+    return jnp.concatenate([pref, content_ids], axis=2)
+
+
+# ===========================================================================
+# Image models (paper §5): MLP and CNN with mux variants
+# ===========================================================================
+
+def _conv(x, w, b, stride=1):
+    """x: (B, H, W, Cin), w: (kh, kw, Cin, Cout)."""
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def _rotation_matrix(d, theta):
+    """Block-diagonal 2D rotations acting on pixel pairs — the SO(2)
+    separation function of paper A.11, lifted to the flattened image."""
+    c, s = math.cos(theta), math.sin(theta)
+    m = jnp.eye(d)
+    idx = jnp.arange(0, d - 1, 2)
+    m = m.at[idx, idx].set(c)
+    m = m.at[idx, idx + 1].set(-s)
+    m = m.at[idx + 1, idx].set(s)
+    m = m.at[idx + 1, idx + 1].set(c)
+    return m
+
+
+def init_image_mux(key, cfg: C.ImageModelConfig):
+    N, d = cfg.n_mux, cfg.d_input
+    s = cfg.mux_strategy
+    if s == "identity":
+        return {}
+    if s == "ortho":
+        keys = jax.random.split(key, N)
+        return {"mats": jnp.stack([_random_orthogonal(k, d) for k in keys])}
+    if s == "lowrank":
+        # paper A.10: d random orthogonal rows split into N groups, then
+        # rotated by another orthogonal matrix -> N rank-(d/N) transforms
+        k1, k2 = jax.random.split(key)
+        q = _random_orthogonal(k1, d)
+        r = _random_orthogonal(k2, d)
+        rank = d // N
+        mats = []
+        for i in range(N):
+            rows = q[i * rank:(i + 1) * rank, :]            # (rank, d)
+            mats.append(rows.T @ rows @ r)                  # (d, d) rank-deficient
+        return {"mats": jnp.stack(mats)}
+    if s == "rotation":
+        return {"mats": jnp.stack([_rotation_matrix(d, 2 * math.pi * i / max(N, 1))
+                                   for i in range(N)])}
+    if s in ("random_kernel", "learned_kernel"):
+        # slide a 3x3 kernel over each input image before summing (A.11)
+        return {"kernels": jax.random.normal(key, (N, 3, 3, 1, 1))}
+    if s == "nonlinear":
+        # N small 2-layer convnets, 16 3x3 kernels, tanh (A.11); `mux_width`
+        # is the activation-map multiplier for the 4x/8x variants
+        k1, k2 = jax.random.split(key)
+        return {
+            "c1": jax.random.normal(k1, (N, 3, 3, 1, 16)) * 0.3,
+            "b1": jnp.zeros((N, 16)),
+            "c2": jax.random.normal(k2, (N, 3, 3, 16, cfg.mux_width)) * 0.3,
+            "b2": jnp.zeros((N, cfg.mux_width)),
+        }
+    raise ValueError(s)
+
+
+def image_mux_trainable(cfg: C.ImageModelConfig) -> bool:
+    return cfg.mux_strategy in ("learned_kernel", "nonlinear")
+
+
+def apply_image_mux(mux_params, cfg: C.ImageModelConfig, xs):
+    """xs: (B, N, H, W) -> combined representation.
+
+    Linear strategies return (B, d_input); conv strategies return
+    (B, H, W, mux_width) keeping spatial structure.
+    """
+    B, N, Hh, Ww = xs.shape
+    s = cfg.mux_strategy
+    if s in ("identity", "ortho", "lowrank", "rotation"):
+        flat = xs.reshape(B, N, -1)
+        if s == "identity":
+            return flat.mean(axis=1)
+        return jnp.einsum("bnd,nde->be", flat, mux_params["mats"]) / N
+    if s in ("random_kernel", "learned_kernel"):
+        img = xs.reshape(B * N, Hh, Ww, 1)
+        w = mux_params["kernels"]                           # (N,3,3,1,1)
+        # same-padding conv per index, then mean over N
+        y = jax.lax.conv_general_dilated(
+            img, w.reshape(N * 1, 3, 3, 1).transpose(1, 2, 3, 0),
+            (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        # y: (B*N, H, W, N) — take the diagonal (instance i convolved with kernel i)
+        y = y.reshape(B, N, Hh, Ww, N)
+        y = jnp.einsum("bnhwn->bnhw", y)  # diag over the two N axes
+        return y.mean(axis=1)[..., None]                    # (B, H, W, 1)
+    if s == "nonlinear":
+        def per_index(x_i, c1, b1, c2, b2):
+            h = jnp.tanh(jax.lax.conv_general_dilated(
+                x_i[..., None], c1, (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC")) + b1)
+            return jnp.tanh(jax.lax.conv_general_dilated(
+                h, c2, (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC")) + b2)
+        ys = jax.vmap(per_index, in_axes=(1, 0, 0, 0, 0), out_axes=1)(
+            xs, mux_params["c1"], mux_params["b1"], mux_params["c2"], mux_params["b2"])
+        return ys.sum(axis=1)                               # (B, H, W, width)
+    raise ValueError(s)
+
+
+def init_image_params(key, cfg: C.ImageModelConfig):
+    """MLP (A.10): 400 -> 100 -> demux 20*N -> shared readout 20->10.
+    CNN (A.10): LeNet-ish convs -> 84 -> demux 84*N -> shared readout 84->10."""
+    keys = jax.random.split(key, 10)
+    params = {"mux": init_image_mux(keys[0], cfg)}
+    if cfg.arch == "mlp":
+        d_in = cfg.d_input
+        params["fc1"] = _dense(keys[1], d_in, cfg.hidden)
+        params["demux"] = _dense(keys[2], cfg.hidden, 20 * cfg.n_mux)
+        params["readout"] = _dense(keys[3], 20, cfg.n_classes)
+    else:
+        cin = cfg.mux_width if cfg.mux_strategy == "nonlinear" else 1
+        params["c1"] = {"w": jax.random.normal(keys[1], (3, 3, cin, 10)) * 0.3,
+                        "b": jnp.zeros((10,))}
+        params["c2"] = {"w": jax.random.normal(keys[2], (4, 4, 10, 16)) * 0.2,
+                        "b": jnp.zeros((16,))}
+        params["c3"] = {"w": jax.random.normal(keys[3], (3, 3, 16, 120)) * 0.1,
+                        "b": jnp.zeros((120,))}
+        params["fc"] = _dense(keys[4], 120, cfg.cnn_hidden)
+        params["demux"] = _dense(keys[5], cfg.cnn_hidden, cfg.cnn_hidden * cfg.n_mux)
+        params["readout"] = _dense(keys[6], cfg.cnn_hidden, cfg.n_classes)
+    return params
+
+
+def image_forward(params, cfg: C.ImageModelConfig, xs):
+    """xs: (B, N, H, W) -> (B, N, n_classes) tanh outputs (paper A.10 uses
+    tanh targets + MSE)."""
+    B, N = xs.shape[:2]
+    mixed = apply_image_mux(params["mux"], cfg, xs)
+    if cfg.arch == "mlp":
+        if mixed.ndim > 2:                       # conv mux output -> flatten
+            mixed = mixed.reshape(B, -1)
+        h = jnp.tanh(_apply_dense(mixed, params["fc1"]))
+        dem = jnp.tanh(_apply_dense(h, params["demux"])).reshape(B, N, 20)
+    else:
+        img = mixed if mixed.ndim == 4 else mixed.reshape(B, cfg.image_hw, cfg.image_hw, 1)
+        h = jnp.tanh(_conv(img, params["c1"]["w"], params["c1"]["b"]))
+        h = _maxpool2(h)
+        h = jnp.tanh(_conv(h, params["c2"]["w"], params["c2"]["b"]))
+        h = _maxpool2(h)
+        h = jnp.tanh(_conv(h, params["c3"]["w"], params["c3"]["b"]))
+        h = h.reshape(B, -1)
+        h = jnp.tanh(_apply_dense(h, params["fc"]))
+        dem = jnp.tanh(_apply_dense(h, params["demux"])).reshape(B, N, cfg.cnn_hidden)
+    return jnp.tanh(_apply_dense(dem, params["readout"]))   # (B, N, 10)

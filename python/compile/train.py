@@ -1,0 +1,328 @@
+"""Training for T-MUX and the image models (build path only).
+
+Implements the paper's recipe end to end:
+
+  1. *Retrieval warm-up* (§3.3, eq. 3): self-supervised pre-training on a
+     token stream; the model must recover the token at every position of
+     one randomly chosen instance per position (index I ~ U[1, N]).
+  2. *Task fine-tuning* (§4.1, eq. 4): L = (1-a) L_task + a L_retrieval
+     with a = 0.1, starting from the warm-up checkpoint.
+
+No optax in this image, so Adam is implemented here (bias-corrected,
+global-norm clipped) with a trainable-mask so the fixed mux transforms
+stay frozen (§3.1).
+"""
+import time
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import config as C
+from . import data as D
+from . import model as M
+
+
+# ---------------------------------------------------------------------------
+# Adam (optax stand-in)
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    """Optimizer state pytree: {step, m, v}."""
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+    }
+
+
+def adam_update(state, grads, params, mask, lr, b1=0.9, b2=0.999,
+                eps=1e-8, clip=1.0):
+    # global-norm clip
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in leaves) + 1e-12)
+    scale = jnp.minimum(1.0, clip / gnorm)
+    grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    step = state["step"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    t = step.astype(jnp.float32)
+    mhat = jax.tree_util.tree_map(lambda m_: m_ / (1 - b1 ** t), m)
+    vhat = jax.tree_util.tree_map(lambda v_: v_ / (1 - b2 ** t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh, vh, msk: p - msk * lr * mh / (jnp.sqrt(vh) + eps),
+        params, mhat, vhat, mask)
+    return {"step": step, "m": m, "v": v}, new
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def _xent(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[..., None], axis=-1).squeeze(-1)
+
+
+def retrieval_loss(out, ids_content, key):
+    """Paper eq. 3: for each position j, retrieve token w_j^I of one random
+    instance I (memory-saving trick from §3.3).
+
+    out["retrieval"]: (B, N, L, V); ids_content: (B, N, L).
+    """
+    B, N, L, _ = out["retrieval"].shape
+    I = jax.random.randint(key, (B, L), 0, N)               # noqa: E741
+    sel = jnp.take_along_axis(out["retrieval"], I[:, None, :, None], axis=1)[:, 0]
+    tgt = jnp.take_along_axis(ids_content, I[:, None, :], axis=1)[:, 0]
+    mask = (tgt != C.PAD_ID).astype(jnp.float32)
+    per = _xent(sel, tgt) * mask
+    return per.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def retrieval_accuracy(out, ids_content):
+    """Full-retrieval accuracy over *all* instances (the Fig 4b metric)."""
+    pred = out["retrieval"].argmax(-1)
+    mask = ids_content != C.PAD_ID
+    return (jnp.where(mask, pred == ids_content, False).sum()
+            / jnp.maximum(mask.sum(), 1))
+
+
+def cls_loss(out, labels):
+    """labels: (B, N) -> scalar."""
+    return _xent(out["cls"], labels).mean()
+
+
+def token_loss(out, labels, ids_content):
+    """labels: (B, N, L); positions past [SEP]/[PAD] are ignored."""
+    mask = (ids_content != C.PAD_ID) & (ids_content != C.CLS_ID) & (ids_content != C.SEP_ID)
+    per = _xent(out["token"], labels) * mask
+    return per.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# batching: pack instances into (B, N, L) mux groups
+# ---------------------------------------------------------------------------
+
+def pack_groups(rng: np.random.RandomState, ids, labels, batch, n_mux,
+                token_level=None):
+    n = ids.shape[0]
+    take = batch * n_mux
+    idx = rng.randint(0, n, take)
+    gids = ids[idx].reshape(batch, n_mux, -1)
+    # token-level labels are (n, L); sentence labels are (n,)
+    if token_level is None:
+        token_level = labels.ndim == 2
+    if token_level:
+        glab = labels[idx].reshape(batch, n_mux, -1)
+    else:
+        glab = labels[idx].reshape(batch, n_mux)
+    return gids, glab
+
+
+# ---------------------------------------------------------------------------
+# T-MUX training
+# ---------------------------------------------------------------------------
+
+def make_step_fns(cfg: C.ModelConfig, alpha=0.1):
+    """jitted (loss, grads) steps for warm-up and task phases."""
+
+    def warmup_loss_fn(params, content_ids, key):
+        ids = M.assemble_input(cfg, content_ids)
+        out = M.forward(params, cfg, ids)
+        return retrieval_loss(out, content_ids, key)
+
+    def task_loss_fn(params, content_ids, labels, key):
+        ids = M.assemble_input(cfg, content_ids)
+        out = M.forward(params, cfg, ids)
+        if cfg.task == "token":
+            lt = token_loss(out, labels, content_ids)
+        else:
+            lt = cls_loss(out, labels)
+        lr_ = retrieval_loss(out, content_ids, key)
+        return (1 - alpha) * lt + alpha * lr_
+
+    wgrad = jax.jit(jax.value_and_grad(warmup_loss_fn))
+    tgrad = jax.jit(jax.value_and_grad(task_loss_fn))
+    return wgrad, tgrad
+
+
+@dataclass
+class TrainResult:
+    params: dict
+    warmup_acc: float
+    history: list
+    cfg: object = None   # effective config (heads may be resized per task)
+
+
+def warmup(cfg: C.ModelConfig, params=None, steps=400, batch=8, lr=5e-4,
+           seed=0, corpus_size=4096, log_every=0):
+    """Retrieval warm-up pre-training. Returns params + final retrieval acc."""
+    rng = np.random.RandomState(seed)
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = M.init_params(key, cfg)
+    mask = M.trainable_mask(params, cfg)
+    stream = D.make_retrieval(seed + 1, corpus_size, cfg.seq_len)
+    wgrad, _ = make_step_fns(cfg)
+    opt = adam_init(params)
+    hist = []
+    upd = jax.jit(partial(adam_update, lr=lr))
+    for step in range(steps):
+        gids, _ = pack_groups(rng, stream.ids, stream.labels, batch, cfg.n_mux)
+        key, sub = jax.random.split(key)
+        loss, grads = wgrad(params, jnp.asarray(gids), sub)
+        opt, params = upd(opt, grads, params, mask)
+        if log_every and step % log_every == 0:
+            hist.append((step, float(loss)))
+    # measure full retrieval accuracy on held-out stream
+    test = D.make_retrieval(seed + 7, 256, cfg.seq_len)
+    acc = eval_retrieval(params, cfg, test, batch=batch, seed=seed + 9)
+    return TrainResult(params, acc, hist, cfg)
+
+
+def finetune(cfg: C.ModelConfig, params, task: str, steps=400, batch=8,
+             lr=5e-4, alpha=0.1, seed=0, train_size=8192, log_every=0):
+    """Task fine-tuning with the auxiliary retrieval objective (eq. 4)."""
+    rng = np.random.RandomState(seed + 100)
+    key = jax.random.PRNGKey(seed + 100)
+    ds = D.TASKS[task](seed + 3, train_size, cfg.seq_len)
+    if ds.n_classes != cfg.n_classes:
+        # warm-up checkpoints are task-agnostic; resize the task heads here
+        import dataclasses
+        cfg = dataclasses.replace(cfg, n_classes=ds.n_classes)
+        kh = jax.random.PRNGKey(seed + 55)
+        d = cfg.d_model
+        scale = (2.0 / (d + ds.n_classes)) ** 0.5
+        params = dict(params)
+        params["head_cls"] = {"w": jax.random.normal(kh, (d, ds.n_classes)) * scale,
+                              "b": jnp.zeros((ds.n_classes,))}
+        params["head_token"] = {"w": jax.random.normal(kh, (d, ds.n_classes)) * scale,
+                                "b": jnp.zeros((ds.n_classes,))}
+    mask = M.trainable_mask(params, cfg)
+    _, tgrad = make_step_fns(cfg, alpha=alpha)
+    opt = adam_init(params)
+    hist = []
+    upd = jax.jit(partial(adam_update, lr=lr))
+    for step in range(steps):
+        gids, glab = pack_groups(rng, ds.ids, ds.labels, batch, cfg.n_mux,
+                                 ds.token_level)
+        key, sub = jax.random.split(key)
+        loss, grads = tgrad(params, jnp.asarray(gids), jnp.asarray(glab), sub)
+        opt, params = upd(opt, grads, params, mask)
+        if log_every and step % log_every == 0:
+            hist.append((step, float(loss)))
+    return TrainResult(params, float("nan"), hist, cfg)
+
+
+# ---------------------------------------------------------------------------
+# evaluation
+# ---------------------------------------------------------------------------
+
+def eval_retrieval(params, cfg, ds: D.Batchset, batch=8, seed=0):
+    rng = np.random.RandomState(seed)
+    fwd = jax.jit(lambda p, ids: M.forward(p, cfg, ids))
+    accs = []
+    for _ in range(8):
+        gids, _ = pack_groups(rng, ds.ids, ds.labels, batch, cfg.n_mux)
+        out = fwd(params, M.assemble_input(cfg, jnp.asarray(gids)))
+        accs.append(float(retrieval_accuracy(out, jnp.asarray(gids))))
+    return float(np.mean(accs))
+
+
+def eval_task(params, cfg, task: str, n_eval=1024, batch=8, seed=1234):
+    """Returns (overall_acc, per_index_acc[N])."""
+    ds = D.TASKS[task](seed, n_eval, cfg.seq_len)
+    rng = np.random.RandomState(seed + 1)
+    fwd = jax.jit(lambda p, ids: M.forward(p, cfg, ids))
+    hits = np.zeros(cfg.n_mux)
+    tot = np.zeros(cfg.n_mux)
+    iters = max(1, n_eval // (batch * cfg.n_mux))
+    for _ in range(iters):
+        gids, glab = pack_groups(rng, ds.ids, ds.labels, batch, cfg.n_mux,
+                                 ds.token_level)
+        out = fwd(params, M.assemble_input(cfg, jnp.asarray(gids)))
+        if ds.token_level:
+            pred = np.asarray(out["token"].argmax(-1))       # (B, N, L)
+            mask = (gids != C.PAD_ID) & (gids != C.CLS_ID) & (gids != C.SEP_ID)
+            for i in range(cfg.n_mux):
+                m = mask[:, i]
+                hits[i] += (pred[:, i][m] == glab[:, i][m]).sum()
+                tot[i] += m.sum()
+        else:
+            pred = np.asarray(out["cls"].argmax(-1))         # (B, N)
+            hits += (pred == glab).sum(axis=0)
+            tot += pred.shape[0]
+    per_index = hits / np.maximum(tot, 1)
+    return float(hits.sum() / tot.sum()), per_index
+
+
+def train_tmux(cfg: C.ModelConfig, task: str, warmup_steps=400, task_steps=400,
+               batch=8, seed=0, log_every=0):
+    """Full paper recipe: warm-up then fine-tune. Returns
+    (params, warmup_acc, task_acc, per_index_acc)."""
+    w = warmup(cfg, steps=warmup_steps, batch=batch, seed=seed, log_every=log_every)
+    t = finetune(cfg, w.params, task, steps=task_steps, batch=batch, seed=seed,
+                 log_every=log_every)
+    acc, per_index = eval_task(t.params, t.cfg, task, seed=seed + 4321)
+    return t.params, w.warmup_acc, acc, per_index
+
+
+# ---------------------------------------------------------------------------
+# image-model training (paper A.10: SGD, MSE on tanh targets)
+# ---------------------------------------------------------------------------
+
+def train_image(cfg: C.ImageModelConfig, steps=1500, batch=32, lr=0.05,
+                seed=0, train_size=12000, n_eval=2000):
+    """Returns (params, overall_acc, per_index_acc)."""
+    rng = np.random.RandomState(seed)
+    key = jax.random.PRNGKey(seed)
+    params = M.init_image_params(key, cfg)
+    xs, ys = D.make_digits(seed + 1, train_size, cfg.image_hw)
+    mux_trainable = M.image_mux_trainable(cfg)
+
+    def loss_fn(p, xb, yb):
+        out = M.image_forward(p, cfg, xb)                    # (B, N, 10)
+        tgt = jax.nn.one_hot(yb, cfg.n_classes) * 2.0 - 1.0  # tanh targets
+        tgt = jnp.tanh(tgt)
+        return ((out - tgt) ** 2).mean()
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    @jax.jit
+    def sgd(p, g):
+        def upd(path_is_mux, pp, gg):
+            return pp - lr * gg
+        new = jax.tree_util.tree_map(lambda pp, gg: pp - lr * gg, p, g)
+        if not mux_trainable and "mux" in p:
+            new["mux"] = p["mux"]                            # frozen transforms
+        return new
+
+    for _ in range(steps):
+        idx = rng.randint(0, train_size, batch * cfg.n_mux)
+        xb = jnp.asarray(xs[idx].reshape(batch, cfg.n_mux, cfg.image_hw, cfg.image_hw))
+        yb = jnp.asarray(ys[idx].reshape(batch, cfg.n_mux))
+        _, grads = grad_fn(params, xb, yb)
+        params = sgd(params, grads)
+
+    # eval
+    xe, ye = D.make_digits(seed + 5, n_eval, cfg.image_hw)
+    fwd = jax.jit(lambda p, xb: M.image_forward(p, cfg, xb))
+    hits = np.zeros(cfg.n_mux)
+    tot = 0
+    bs = 64
+    iters = n_eval // (bs * cfg.n_mux)
+    for it in range(max(iters, 1)):
+        lo = it * bs * cfg.n_mux
+        hi = lo + bs * cfg.n_mux
+        if hi > n_eval:
+            break
+        xb = jnp.asarray(xe[lo:hi].reshape(bs, cfg.n_mux, cfg.image_hw, cfg.image_hw))
+        yb = ye[lo:hi].reshape(bs, cfg.n_mux)
+        pred = np.asarray(fwd(params, xb).argmax(-1))
+        hits += (pred == yb).sum(axis=0)
+        tot += bs
+    per_index = hits / max(tot, 1)
+    return params, float(per_index.mean()), per_index

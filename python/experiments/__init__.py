@@ -1,0 +1,9 @@
+"""Figure-regeneration experiments (paper evaluation section).
+
+Each module regenerates one paper figure's data on the synthetic task
+family (DESIGN.md §Substitutions) and writes results/<fig>.json plus an
+ascii table. `run_all` executes them in priority order under a wall-clock
+budget. Retrieval warm-up checkpoints are cached per
+(strategy, demux, N, arch) in results/warmup_cache/ and shared across
+figures — the same trick the paper uses (§4.1: one warm-up, many tasks).
+"""

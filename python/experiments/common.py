@@ -1,0 +1,120 @@
+"""Shared experiment infrastructure.
+
+- adaptive retrieval warm-up (train until retrieval accuracy plateaus or
+  a step cap scaled by N — the paper notes convergence time grows ~linearly
+  with N)
+- warm-up checkpoint cache (pickled param pytrees keyed by config)
+- result writing (results/<name>.json) + ascii tables
+"""
+import json
+import os
+import pickle
+import time
+
+import jax
+import numpy as np
+
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile import config as C          # noqa: E402
+from compile import data as D            # noqa: E402
+from compile import model as M           # noqa: E402
+from compile import train as T           # noqa: E402
+
+RESULTS_DIR = os.environ.get(
+    "DATAMUX_RESULTS", os.path.join(os.path.dirname(__file__), "..", "..", "results"))
+CACHE_DIR = os.path.join(RESULTS_DIR, "warmup_cache")
+
+# accuracy-experiment N grid (paper uses up to 40 at d=768; our d=128 tiny
+# model has 6.4 dims/instance at N=20, already beyond the paper's 19 at
+# N=40 — see DESIGN.md §Substitutions)
+N_GRID = [1, 2, 5, 10, 20]
+N_GRID_SHORT = [1, 2, 5, 10]
+
+
+def ensure_dirs():
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    os.makedirs(CACHE_DIR, exist_ok=True)
+
+
+def tiny_cfg(n_mux, task="cls", n_classes=3, **over):
+    return C.profile("tiny", n_mux=n_mux, seq_len=16, task=task,
+                     n_classes=n_classes, **over)
+
+
+def warmup_schedule(n_mux: int) -> int:
+    """Step cap for the retrieval warm-up, scaled ~linearly with N."""
+    return min(300 + 170 * n_mux, 3800)
+
+
+def task_steps(n_mux: int) -> int:
+    return min(400 + 45 * n_mux, 1300)
+
+
+def adaptive_warmup(cfg, seed=0, batch=8, lr=1e-3, target=0.985, check_every=250):
+    """Warm up in chunks, stopping early once retrieval accuracy passes
+    `target`. Returns (params, retrieval_acc, steps_used)."""
+    cap = warmup_schedule(cfg.n_mux)
+    params = None
+    steps_used = 0
+    acc = 0.0
+    while steps_used < cap:
+        chunk = min(check_every, cap - steps_used)
+        res = T.warmup(cfg, params=params, steps=chunk, batch=batch, lr=lr,
+                       seed=seed + steps_used)
+        params, acc = res.params, res.warmup_acc
+        steps_used += chunk
+        if acc >= target:
+            break
+    return params, acc, steps_used
+
+
+def cached_warmup(cfg, seed=0, tag=""):
+    """Warm-up with an on-disk checkpoint cache (shared across figures)."""
+    ensure_dirs()
+    key = (f"{cfg.mux_strategy}_{cfg.demux_strategy}_n{cfg.n_mux}"
+           f"_d{cfg.d_model}_l{cfg.n_layers}_h{cfg.n_heads}_s{seed}{tag}")
+    path = os.path.join(CACHE_DIR, key + ".pkl")
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            blob = pickle.load(f)
+        return blob["params"], blob["acc"], blob["steps"]
+    t0 = time.time()
+    params, acc, steps = adaptive_warmup(cfg, seed=seed)
+    print(f"    [warmup {key}: acc={acc:.3f} in {steps} steps, "
+          f"{time.time() - t0:.0f}s]", flush=True)
+    with open(path, "wb") as f:
+        pickle.dump({"params": jax.device_get(params), "acc": acc, "steps": steps}, f)
+    return params, acc, steps
+
+
+def finetune_eval(cfg, params, task, seed=0, steps=None, lr=1e-3, alpha=0.1):
+    """Fine-tune from a warm-up checkpoint and evaluate.
+    Returns (acc, per_index, params, effective_cfg)."""
+    steps = steps or task_steps(cfg.n_mux)
+    t = T.finetune(cfg, params, task, steps=steps, batch=8, lr=lr,
+                   alpha=alpha, seed=seed)
+    acc, per_index = T.eval_task(t.params, t.cfg, task, seed=seed + 4321)
+    return acc, per_index, t.params, t.cfg
+
+
+def write_result(name: str, payload: dict):
+    ensure_dirs()
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    payload = dict(payload)
+    payload["generated_unix"] = int(time.time())
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {path}", flush=True)
+
+
+def table(title, headers, rows):
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows else len(str(h))
+              for i, h in enumerate(headers)]
+    out = [f"\n== {title} =="]
+    out.append("  ".join(str(h).rjust(w) for h, w in zip(headers, widths)))
+    out.append("-" * (sum(widths) + 2 * len(widths)))
+    for r in rows:
+        out.append("  ".join(str(c).rjust(w) for c, w in zip(r, widths)))
+    print("\n".join(out), flush=True)

@@ -1,0 +1,45 @@
+"""Fig 10 / A.7: backbone size sweep (layers x hidden) without mux.
+
+Paper claims: much smaller models than 12L/768H stay competitive on
+MNLI/NER — the over-parameterization slack that multiplexing exploits.
+
+  python -m experiments.fig10_model_size [--quick]
+"""
+import sys
+
+import jax
+
+from . import common as X
+from compile import model as M
+from compile import train as T
+
+
+def main(quick=False):
+    layer_grid = [1, 2] if quick else [1, 2, 4]
+    width_grid = [64, 128] if quick else [64, 128, 256]
+    results = {}
+    rows = []
+    for nl in layer_grid:
+        for d in width_grid:
+            label = f"{nl}L/{d}H"
+            accs = {}
+            for task, ncls, kind in [("mnli", 3, "cls"), ("ner", 5, "token")]:
+                cfg = X.tiny_cfg(1, task=kind, n_classes=ncls,
+                                 n_layers=nl, d_model=d, d_ff=2 * d)
+                params = M.init_params(jax.random.PRNGKey(0), cfg)
+                t = T.finetune(cfg, params, task, steps=600 if not quick else 200,
+                               batch=16, lr=1e-3, alpha=0.0, seed=0)
+                acc, _ = T.eval_task(t.params, t.cfg, task)
+                accs[task] = acc
+            results[label] = accs
+            rows.append([label, f"{accs['mnli']:.3f}", f"{accs['ner']:.3f}"])
+            print(f"  {label}: mnli={accs['mnli']:.3f} ner={accs['ner']:.3f}", flush=True)
+    X.table("Fig 10: model size sweep (N=1)", ["model", "mnli", "ner"], rows)
+    X.write_result("fig10_model_size", {
+        "results": results,
+        "paper_claim": "small models competitive -> capacity slack for multiplexing",
+    })
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv)

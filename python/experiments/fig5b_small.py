@@ -1,0 +1,42 @@
+"""Fig 5b: multiplexing with smaller backbone capacities.
+
+Paper claims (A2): 12L/384H and 4L/768H still multiplex to N=20 with
+competitive accuracy. Ours scales the pair down: half-width (2L/64H) and
+half-depth (1L/128H) against the tiny default (2L/128H).
+
+  python -m experiments.fig5b_small [--quick]
+"""
+import sys
+
+from . import common as X
+
+VARIANTS = [
+    ("tiny 2L/128H", dict()),
+    ("half-width 2L/64H", dict(d_model=64, d_ff=128)),
+    ("half-depth 1L/128H", dict(n_layers=1)),
+]
+
+
+def main(quick=False):
+    ns = [1, 2, 5] if quick else X.N_GRID_SHORT + [20]
+    results = {}
+    rows = []
+    for label, over in VARIANTS:
+        results[label] = {}
+        for n in ns:
+            cfg = X.tiny_cfg(n, **over)
+            params, wacc, _ = X.cached_warmup(cfg, seed=0)
+            acc, _, _, _ = X.finetune_eval(cfg, params, "mnli", seed=0)
+            results[label][n] = {"retrieval": wacc, "mnli": acc}
+            print(f"  {label} N={n}: retrieval={wacc:.3f} mnli={acc:.3f}", flush=True)
+        rows.append([label] + [f"{results[label][n]['mnli']:.3f}" for n in ns])
+    X.table("Fig 5b: smaller backbones, mnli accuracy", ["model"] + [f"N={n}" for n in ns], rows)
+    X.write_result("fig5b_small", {
+        "ns": ns,
+        "results": results,
+        "paper_claim": "smaller models multiplex to N=20 with competitive accuracy",
+    })
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv)

@@ -1,0 +1,51 @@
+"""Fig 7b: per-index accuracy variance grows with N.
+
+Paper claims (A3): at N=40 mnli accuracy varies ~10 points across mux
+indices. Reads the per-index accuracies stored by fig3 (or recomputes
+mnli if fig3 hasn't run).
+
+  python -m experiments.fig7b_index_variance [--quick]
+"""
+import json
+import os
+import sys
+
+import numpy as np
+
+from . import common as X
+
+
+def main(quick=False):
+    ns = [1, 2, 5] if quick else X.N_GRID
+    fig3_path = os.path.join(X.RESULTS_DIR, "fig3_tasks.json")
+    per_index = {}
+    if os.path.exists(fig3_path):
+        with open(fig3_path) as f:
+            per_index = json.load(f).get("per_index", {})
+    rows = []
+    results = {}
+    for n in ns:
+        key = f"mnli_n{n}"
+        if key in per_index:
+            accs = np.asarray(per_index[key])
+        else:
+            cfg = X.tiny_cfg(n)
+            params, _, _ = X.cached_warmup(cfg, seed=0)
+            _, accs, _, _ = X.finetune_eval(cfg, params, "mnli", seed=0)
+            accs = np.asarray(accs)
+        results[n] = {"mean": float(accs.mean()), "std": float(accs.std()),
+                      "spread": float(accs.max() - accs.min()),
+                      "per_index": [float(a) for a in accs]}
+        rows.append([n, f"{accs.mean():.3f}", f"{accs.std():.3f}",
+                     f"{accs.max()-accs.min():.3f}"])
+        print(f"  N={n}: mean={accs.mean():.3f} spread={accs.max()-accs.min():.3f}", flush=True)
+    X.table("Fig 7b: per-index mnli accuracy variance",
+            ["N", "mean", "std", "max-min"], rows)
+    X.write_result("fig7b_index_variance", {
+        "results": {str(k): v for k, v in results.items()},
+        "paper_claim": "per-index spread grows with N (~10 points at the paper's N=40)",
+    })
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv)

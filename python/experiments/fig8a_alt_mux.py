@@ -1,0 +1,38 @@
+"""Fig 8a / A.5: alternative multiplexing strategies on MNLI + NER.
+
+Paper claims: unfreezing the Hadamard vectors ("Learned") changes little;
+binary chunk-select masking fails to multiplex for large N (mux is more
+than concatenating d/N-dim downsampled inputs).
+
+  python -m experiments.fig8a_alt_mux [--quick]
+"""
+import sys
+
+from . import common as X
+
+STRATS = ["hadamard", "learned_hadamard", "binary"]
+
+
+def main(quick=False):
+    ns = [1, 2, 5] if quick else X.N_GRID
+    results = {}
+    rows = []
+    for strat in STRATS:
+        results[strat] = {}
+        for n in ns:
+            cfg = X.tiny_cfg(n, mux_strategy=strat)
+            params, wacc, _ = X.cached_warmup(cfg, seed=0)
+            acc, _, _, _ = X.finetune_eval(cfg, params, "mnli", seed=0)
+            results[strat][n] = {"retrieval": wacc, "mnli": acc}
+            print(f"  {strat} N={n}: retrieval={wacc:.3f} mnli={acc:.3f}", flush=True)
+        rows.append([strat] + [f"{results[strat][n]['mnli']:.3f}" for n in ns])
+    X.table("Fig 8a: alternative mux strategies (mnli)", ["strategy"] + [f"N={n}" for n in ns], rows)
+    X.write_result("fig8a_alt_mux", {
+        "ns": ns,
+        "results": results,
+        "paper_claim": "learned ~= frozen hadamard; binary fails at large N",
+    })
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv)

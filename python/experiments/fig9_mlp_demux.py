@@ -1,0 +1,46 @@
+"""Fig 9 / A.6: MLP demultiplexing vs index embeddings.
+
+Paper claims: MLP demux works for retrieval but fine-tunes slightly worse
+and is *optimization-unstable* — some N fail to converge at apparently
+arbitrary points (their N=10 failed while N=20 trained). We run 2 seeds
+per N and report best/worst to surface instability.
+
+  python -m experiments.fig9_mlp_demux [--quick]
+"""
+import sys
+
+import numpy as np
+
+from . import common as X
+
+
+def main(quick=False):
+    ns = [1, 2, 5] if quick else X.N_GRID_SHORT
+    results = {}
+    rows = []
+    for demux in ["index_embed", "mlp"]:
+        results[demux] = {}
+        for n in ns:
+            accs = []
+            for seed in (0, 1):
+                cfg = X.tiny_cfg(n, demux_strategy=demux)
+                params, wacc, _ = X.cached_warmup(cfg, seed=seed,
+                                                  tag="" if seed == 0 else f"_s{seed}")
+                acc, _, _, _ = X.finetune_eval(cfg, params, "mnli", seed=seed)
+                accs.append(acc)
+            accs = np.asarray(accs)
+            results[demux][n] = {"best": float(accs.max()), "worst": float(accs.min())}
+            print(f"  {demux} N={n}: best={accs.max():.3f} worst={accs.min():.3f}", flush=True)
+        rows.append([demux] + [f"{results[demux][n]['best']:.2f}/{results[demux][n]['worst']:.2f}"
+                               for n in ns])
+    X.table("Fig 9: demux strategy, mnli best/worst of 2 seeds",
+            ["demux"] + [f"N={n}" for n in ns], rows)
+    X.write_result("fig9_mlp_demux", {
+        "ns": ns,
+        "results": results,
+        "paper_claim": "MLP demux slightly worse + unstable (best/worst gap) vs index embed",
+    })
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv)

@@ -1,0 +1,68 @@
+"""Run all figure experiments in priority order under a wall-clock budget.
+
+  python -m experiments.run_all [--quick] [--budget-min 90]
+
+Priority: warm-up-cache builders first (fig4b seeds the cache for every
+strategy; fig3 the task grid), then the cheaper analyses. If the budget
+expires the remaining figures are listed as skipped in
+results/run_all_status.json — rerun individually.
+"""
+import json
+import os
+import sys
+import time
+import traceback
+
+from . import common as X
+from . import (fig3_tasks, fig4b_retrieval, fig5a_heads, fig5b_small,
+               fig6_robustness, fig7a_mlp_cnn, fig7b_index_variance,
+               fig8a_alt_mux, fig8b_seeds, fig9_mlp_demux,
+               fig10_model_size, fig11_cnn_strategies)
+
+ORDER = [
+    ("fig4b_retrieval", fig4b_retrieval.main),
+    ("fig3_tasks", fig3_tasks.main),
+    ("fig7b_index_variance", fig7b_index_variance.main),
+    ("fig7a_mlp_cnn", fig7a_mlp_cnn.main),
+    ("fig10_model_size", fig10_model_size.main),
+    ("fig8a_alt_mux", fig8a_alt_mux.main),
+    ("fig8b_seeds", fig8b_seeds.main),
+    ("fig9_mlp_demux", fig9_mlp_demux.main),
+    ("fig11_cnn_strategies", fig11_cnn_strategies.main),
+    ("fig5a_heads", fig5a_heads.main),
+    ("fig5b_small", fig5b_small.main),
+    ("fig6_robustness", fig6_robustness.main),
+]
+
+
+def main():
+    quick = "--quick" in sys.argv
+    budget_min = 90.0
+    for i, a in enumerate(sys.argv):
+        if a == "--budget-min" and i + 1 < len(sys.argv):
+            budget_min = float(sys.argv[i + 1])
+    deadline = time.time() + budget_min * 60
+    status = {}
+    for name, fn in ORDER:
+        if time.time() > deadline:
+            status[name] = "skipped (budget)"
+            print(f"== {name}: skipped (budget) ==", flush=True)
+            continue
+        print(f"\n==== {name} (budget left {int(deadline - time.time())}s) ====", flush=True)
+        t0 = time.time()
+        try:
+            fn(quick=quick)
+            status[name] = f"ok ({int(time.time() - t0)}s)"
+        except Exception as e:  # keep the suite going
+            traceback.print_exc()
+            status[name] = f"error: {e}"
+    X.ensure_dirs()
+    with open(os.path.join(X.RESULTS_DIR, "run_all_status.json"), "w") as f:
+        json.dump(status, f, indent=1)
+    print("\n== run_all status ==")
+    for k, v in status.items():
+        print(f"  {k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""AOT pipeline: pruning, weight files, HLO lowering, manifest contract."""
+import json
+import os
+import struct
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import config as C
+from compile import model as M
+
+
+def tiny():
+    return C.profile("tiny", n_mux=2, seq_len=12, task="cls", n_classes=3,
+                     d_model=64, d_ff=128)
+
+
+def test_prune_params_drops_unused_heads():
+    cfg = tiny()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    pruned = aot.prune_params(params, cfg)
+    assert "head_cls" in pruned
+    assert "head_token" not in pruned
+    assert "head_retrieval" not in pruned
+    import dataclasses
+    cfg_tok = dataclasses.replace(cfg, task="token")
+    pruned_tok = aot.prune_params(params, cfg_tok)
+    assert "head_token" in pruned_tok and "head_cls" not in pruned_tok
+
+
+def test_flatten_order_is_deterministic():
+    cfg = tiny()
+    params = aot.prune_params(M.init_params(jax.random.PRNGKey(0), cfg), cfg)
+    a = [n for n, _ in aot.flatten_named(params)]
+    b = [n for n, _ in aot.flatten_named(params)]
+    assert a == b
+    assert len(a) == len(set(a)), "names unique"
+    assert any("tok_emb" in n for n in a)
+
+
+def test_weights_file_roundtrip():
+    cfg = tiny()
+    params = aot.prune_params(M.init_params(jax.random.PRNGKey(1), cfg), cfg)
+    named = aot.flatten_named(params)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "w.bin")
+        tensors = aot.write_weights(path, named)
+        blob = open(path, "rb").read()
+        assert blob[:7] == aot.MAGIC
+        hlen = struct.unpack("<I", blob[7:11])[0]
+        header = json.loads(blob[11:11 + hlen])
+        assert len(header["tensors"]) == len(named)
+        # first tensor data round-trips bit-exactly
+        t0 = header["tensors"][0]
+        start = 11 + hlen + t0["offset"]
+        data = np.frombuffer(blob[start:start + t0["nbytes"]], np.float32)
+        np.testing.assert_array_equal(
+            data, np.asarray(named[0][1], np.float32).reshape(-1))
+        assert tensors == header["tensors"]
+
+
+def test_lower_model_emits_hlo_text():
+    cfg = tiny()
+    params = aot.prune_params(M.init_params(jax.random.PRNGKey(2), cfg), cfg)
+    hlo = aot.lower_model(params, cfg, batch=1)
+    assert "HloModule" in hlo
+    assert "ENTRY" in hlo
+    # parameter count = weight leaves + ids
+    n_leaves = len(aot.flatten_named(params))
+    assert hlo.count("parameter(") >= n_leaves + 1
+
+
+def test_parity_blob_is_self_consistent():
+    cfg = tiny()
+    params = aot.prune_params(M.init_params(jax.random.PRNGKey(3), cfg), cfg)
+    blob = aot.parity_blob(params, cfg, batch=1)
+    assert len(blob["ids"]) == 1 * cfg.n_mux * cfg.input_len
+    assert len(blob["check_indices"]) == len(blob["check_values"])
+    assert np.prod(blob["output_shape"]) >= max(blob["check_indices"]) + 1
+    # values finite
+    assert all(np.isfinite(v) for v in blob["check_values"])
+
+
+def test_manifest_exists_and_matches_schema():
+    """Integration-level: the real artifacts dir written by `make artifacts`."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest_path = os.path.join(art, "manifest.json")
+    if not os.path.exists(manifest_path):
+        pytest.skip("artifacts not built")
+    with open(manifest_path) as f:
+        m = json.load(f)
+    assert m["version"] == 1
+    assert m["vocab"]["content_base"] == C.CONTENT_BASE
+    for a in m["artifacts"]:
+        assert os.path.exists(os.path.join(art, a["hlo"])), a["name"]
+        assert os.path.exists(os.path.join(art, a["weights"])), a["name"]
+        assert a["input_len"] == a["n_mux"] + a["seq_len"]

@@ -1,0 +1,111 @@
+"""Synthetic task generators: determinism, label semantics, balance."""
+import numpy as np
+import pytest
+
+from compile import config as C
+from compile import data as D
+
+
+@pytest.mark.parametrize("task", list(D.TASKS))
+def test_deterministic_in_seed(task):
+    a = D.TASKS[task](7, 64, 16)
+    b = D.TASKS[task](7, 64, 16)
+    np.testing.assert_array_equal(a.ids, b.ids)
+    np.testing.assert_array_equal(a.labels, b.labels)
+    c = D.TASKS[task](8, 64, 16)
+    assert not np.array_equal(a.ids, c.ids)
+
+
+@pytest.mark.parametrize("task", list(D.TASKS))
+def test_frame_layout(task):
+    ds = D.TASKS[task](0, 128, 16)
+    assert ds.ids.shape == (128, 16)
+    assert (ds.ids[:, 0] == C.CLS_ID).all()
+    # ids are valid vocab entries
+    assert ds.ids.min() >= 0
+    assert ds.ids.max() < D.V_CONTENT + C.CONTENT_BASE
+    # no prefix tokens in content
+    assert not ((ds.ids >= C.IDX_BASE) & (ds.ids < C.CONTENT_BASE) & (ds.ids != C.EPS_PAD_ID)).any()
+
+
+@pytest.mark.parametrize("task,ncls", [("sst2", 2), ("qqp", 2), ("qnli", 2), ("mnli", 3)])
+def test_labels_balanced(task, ncls):
+    ds = D.TASKS[task](3, 3000, 16)
+    counts = np.bincount(ds.labels, minlength=ncls)
+    assert ds.n_classes == ncls
+    assert counts.min() > 0.8 * 3000 / ncls, counts
+
+
+def test_sst2_label_semantics():
+    """Label must equal which lexicon the sentiment tokens came from."""
+    ds = D.make_sst2(11, 200, 16)
+    for i in range(200):
+        toks = ds.ids[i] - C.CONTENT_BASE
+        pos = ((toks >= 0) & (toks < 24)).sum()
+        neg = ((toks >= 24) & (toks < 48)).sum()
+        want = 1 if pos > neg else 0
+        assert want == ds.labels[i], (i, pos, neg, ds.labels[i])
+
+
+def test_qnli_label_semantics():
+    """y=1 iff the answer token a(q)=q+32 appears in the context."""
+    ds = D.make_qnli(13, 300, 16)
+    for i in range(300):
+        row = ds.ids[i]
+        sep_positions = np.where(row == C.SEP_ID)[0]
+        ctx = row[1:sep_positions[0]] - C.CONTENT_BASE
+        q = row[sep_positions[0] + 1] - C.CONTENT_BASE
+        has_answer = (ctx == q + 32).any()
+        assert bool(has_answer) == bool(ds.labels[i])
+
+
+def test_ner_tags_follow_triggers():
+    ds = D.make_ner(17, 200, 16)
+    assert ds.token_level
+    for i in range(200):
+        row = ds.ids[i] - C.CONTENT_BASE
+        tags = ds.labels[i]
+        for j in range(1, 15):
+            if tags[j] in (1, 3):  # B-PER / B-LOC
+                trig = row[j - 1]
+                assert trig in (0, 1), f"B tag without trigger at {i},{j}"
+                assert tags[j] == (1 if trig == 0 else 3)
+
+
+def test_retrieval_stream_zipfian():
+    ds = D.make_retrieval(19, 512, 16)
+    toks = ds.ids[ds.ids >= C.CONTENT_BASE] - C.CONTENT_BASE
+    counts = np.bincount(toks, minlength=D.V_CONTENT)
+    assert counts[0] > counts[10] > counts[100], "zipf head heavier than tail"
+
+
+def test_digits_shapes_and_distinguishability():
+    xs, ys = D.make_digits(0, 500)
+    assert xs.shape == (500, 20, 20)
+    assert xs.min() >= 0 and xs.max() <= 1
+    assert set(np.unique(ys)) == set(range(10))
+    # prototype separation: mean image per class differs between classes
+    means = np.stack([xs[ys == d].mean(0) for d in range(10)])
+    d01 = np.abs(means[0] - means[1]).sum()
+    assert d01 > 5.0, "digit glyphs must be distinguishable"
+
+
+def test_digits_low_rank_like_mnist():
+    """Paper A.10: top-50 PCs of MNIST explain ~87% variance; our
+    generator must be comparably low-rank for the d/50 mux argument."""
+    xs, _ = D.make_digits(1, 2000)
+    flat = xs.reshape(2000, -1) - xs.reshape(2000, -1).mean(0)
+    s = np.linalg.svd(flat, compute_uv=False)
+    var = s ** 2
+    explained = var[:50].sum() / var.sum()
+    assert explained > 0.80, f"top-50 PCs explain only {explained:.2f}"
+
+
+def test_ids_to_text_roundtrip_tokens():
+    ds = D.make_mnli(2, 4, 16)
+    text = D.ids_to_text(ds.ids[0])
+    assert text.startswith("[CLS]")
+    assert "[SEP]" in text
+    # every non-special word is t{k}
+    for w in text.split():
+        assert w.startswith("[") or w.startswith("t")

@@ -1,0 +1,205 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+These sweeps are the core correctness signal for the compile path: every
+(kernel, shape, dtype, N) combination must match ref.py within f32
+tolerance. hypothesis is unavailable in this image, so the sweep space is
+enumerated with parametrize (DESIGN.md §Substitutions).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import attention, demux, mux, ref
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# mux kernels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_mux", [1, 2, 5, 8, 20, 40])
+@pytest.mark.parametrize("batch,seq,d", [(1, 8, 32), (2, 16, 64), (3, 24, 128)])
+def test_mux_hadamard_matches_ref(n_mux, batch, seq, d):
+    xs = rand(0, (batch, n_mux, seq, d))
+    vecs = rand(1, (n_mux, d))
+    got = mux.mux_hadamard(xs, vecs)
+    want = jax.vmap(lambda x: ref.mux_hadamard(x, vecs))(xs)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@pytest.mark.parametrize("n_mux", [1, 2, 5, 10, 20])
+@pytest.mark.parametrize("batch,seq,d", [(1, 8, 32), (2, 16, 64)])
+def test_mux_ortho_matches_ref(n_mux, batch, seq, d):
+    xs = rand(2, (batch, n_mux, seq, d))
+    mats = rand(3, (n_mux, d, d), scale=d ** -0.5)
+    got = mux.mux_ortho(xs, mats)
+    want = jax.vmap(lambda x: ref.mux_ortho(x, mats))(xs)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@pytest.mark.parametrize("n_mux", [2, 4, 8])
+def test_mux_binary_matches_ref(n_mux):
+    d = 64
+    xs = rand(4, (2, n_mux, 8, d))
+    chunk = d // n_mux
+    masks = np.zeros((n_mux, d), np.float32)
+    for i in range(n_mux):
+        masks[i, i * chunk:(i + 1) * chunk] = 1.0
+    masks = jnp.asarray(masks)
+    got = mux.mux_binary(xs, masks)
+    want = jax.vmap(lambda x: ref.mux_binary(x, masks))(xs)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_mux_identity_single_instance():
+    """N=1 hadamard with unit vector must be the identity."""
+    xs = rand(5, (2, 1, 16, 64))
+    vecs = jnp.ones((1, 64))
+    np.testing.assert_allclose(mux.mux_hadamard(xs, vecs), xs[:, 0], **TOL)
+
+
+def test_mux_order_dependence():
+    """Permuting instances must change the combined representation
+    (the property that separates DataMUX from mixup)."""
+    xs = rand(6, (1, 4, 8, 32))
+    vecs = rand(7, (4, 32))
+    a = mux.mux_hadamard(xs, vecs)
+    b = mux.mux_hadamard(xs[:, ::-1], vecs)
+    assert not np.allclose(a, b, atol=1e-3)
+
+
+def test_mux_ortho_preserves_norm_per_instance():
+    """Orthogonal phi_i preserve per-instance norms before averaging."""
+    d = 64
+    q, _ = np.linalg.qr(np.random.RandomState(0).randn(d, d))
+    mats = jnp.asarray(q[None], jnp.float32)
+    xs = rand(8, (1, 1, 8, d))
+    out = mux.mux_ortho(xs, mats)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(out[0]), axis=-1),
+        np.linalg.norm(np.asarray(xs[0, 0]), axis=-1),
+        rtol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("seq", [3, 5, 7, 12, 30])
+def test_mux_ragged_seq_lengths(seq):
+    """Block picker must handle L not divisible by the preferred block."""
+    xs = rand(9, (2, 3, seq, 32))
+    vecs = rand(10, (3, 32))
+    got = mux.mux_hadamard(xs, vecs)
+    want = jax.vmap(lambda x: ref.mux_hadamard(x, vecs))(xs)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# demux kernels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_mux", [1, 2, 5, 10, 20, 40])
+@pytest.mark.parametrize("batch,seq,d,f", [(1, 8, 32, 64), (2, 16, 64, 128)])
+def test_demux_index_mlp_matches_ref(n_mux, batch, seq, d, f):
+    h = rand(11, (batch, seq, d))
+    p = rand(12, (batch, n_mux, d))
+    w1h, w1p = rand(13, (d, f), scale=0.1), rand(14, (d, f), scale=0.1)
+    b1 = rand(15, (f,), scale=0.01)
+    w2, b2 = rand(16, (f, d), scale=0.1), rand(17, (d,), scale=0.01)
+    got = demux.demux_index_mlp(h, p, w1h, w1p, b1, w2, b2)
+    want = jax.vmap(lambda hh, pp: ref.demux_index_mlp(hh, pp, w1h, w1p, b1, w2, b2))(h, p)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@pytest.mark.parametrize("n_mux", [1, 2, 5, 10])
+@pytest.mark.parametrize("batch,seq,d,f", [(2, 8, 32, 64)])
+def test_demux_mlp_matches_ref(n_mux, batch, seq, d, f):
+    h = rand(18, (batch, seq, d))
+    w1, b1 = rand(19, (n_mux, d, f), scale=0.1), rand(20, (n_mux, f), scale=0.01)
+    w2, b2 = rand(21, (n_mux, f, d), scale=0.1), rand(22, (n_mux, d), scale=0.01)
+    got = demux.demux_mlp(h, w1, b1, w2, b2)
+    want = jax.vmap(lambda hh: ref.demux_mlp(hh, w1, b1, w2, b2))(h)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_demux_index_distinct_indices_give_distinct_outputs():
+    h = rand(23, (1, 8, 64))
+    p = rand(24, (1, 4, 64))
+    w1h, w1p = rand(25, (64, 128), scale=0.2), rand(26, (64, 128), scale=0.2)
+    out = demux.demux_index_mlp(h, p, w1h, w1p, jnp.zeros(128),
+                                rand(27, (128, 64), scale=0.2), jnp.zeros(64))
+    assert not np.allclose(out[0, 0], out[0, 1], atol=1e-3)
+
+
+def test_demux_concat_split_equivalence():
+    """The two-matmul-halves trick equals a literal concat MLP."""
+    d, f, L, N = 32, 64, 8, 3
+    h = rand(28, (L, d))
+    p = rand(29, (N, d))
+    w1h, w1p = rand(30, (d, f), scale=0.1), rand(31, (d, f), scale=0.1)
+    b1, w2, b2 = rand(32, (f,)), rand(33, (f, d), scale=0.1), rand(34, (d,))
+    w1_full = jnp.concatenate([w1h, w1p], axis=0)          # (2d, f)
+    want = []
+    for i in range(N):
+        cat = jnp.concatenate([h, jnp.broadcast_to(p[i], (L, d))], axis=-1)
+        want.append(jax.nn.gelu(cat @ w1_full + b1) @ w2 + b2)
+    want = jnp.stack(want)
+    got = ref.demux_index_mlp(h, p, w1h, w1p, b1, w2, b2)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# attention kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("batch,heads,seq,dh", [
+    (1, 1, 8, 16), (2, 4, 16, 16), (1, 8, 24, 32), (2, 2, 56, 64),
+])
+def test_mha_matches_ref(batch, heads, seq, dh):
+    q = rand(35, (batch, heads, seq, dh))
+    k = rand(36, (batch, heads, seq, dh))
+    v = rand(37, (batch, heads, seq, dh))
+    got = attention.mha_attention(q, k, v)
+    want = jax.vmap(lambda a, b, c: ref.mha_attention(a, b, c))(q, k, v)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_mha_rows_are_convex_combinations():
+    """Attention outputs are convex combos of V rows: bounded by V extremes."""
+    q = rand(38, (1, 2, 8, 16))
+    k = rand(39, (1, 2, 8, 16))
+    v = rand(40, (1, 2, 8, 16))
+    out = np.asarray(attention.mha_attention(q, k, v))
+    vmin = np.asarray(v).min(axis=2, keepdims=True) - 1e-5
+    vmax = np.asarray(v).max(axis=2, keepdims=True) + 1e-5
+    assert (out >= vmin).all() and (out <= vmax).all()
+
+
+def test_mha_softmax_stability_large_logits():
+    """Max-subtraction must keep huge logits finite."""
+    q = rand(41, (1, 1, 8, 16), scale=100.0)
+    k = rand(42, (1, 1, 8, 16), scale=100.0)
+    v = rand(43, (1, 1, 8, 16))
+    out = np.asarray(attention.mha_attention(q, k, v))
+    assert np.isfinite(out).all()
+
+
+def test_kernels_jit_compatible():
+    """All kernels must trace under jit (the AOT path requirement)."""
+    xs = rand(44, (1, 2, 8, 32))
+    vecs = rand(45, (2, 32))
+    out = jax.jit(mux.mux_hadamard)(xs, vecs)
+    assert out.shape == (1, 8, 32)
+    h = rand(46, (1, 8, 32))
+    p = rand(47, (1, 2, 32))
+    args = (rand(48, (32, 64)), rand(49, (32, 64)), jnp.zeros(64),
+            rand(50, (64, 32)), jnp.zeros(32))
+    out = jax.jit(demux.demux_index_mlp)(h, p, *args)
+    assert out.shape == (1, 2, 8, 32)
+    q = rand(51, (1, 2, 8, 16))
+    out = jax.jit(attention.mha_attention)(q, q, q)
+    assert out.shape == (1, 2, 8, 16)

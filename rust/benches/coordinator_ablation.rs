@@ -1,0 +1,156 @@
+//! Coordinator ablations (DESIGN.md per-experiment index, last rows):
+//! the design choices the paper's serving deployment would tune.
+//!
+//!   1. batcher deadline (max_wait) vs throughput and padding waste
+//!   2. slot policy: Fill vs RotateOffset (paper A3: per-index accuracy
+//!      varies, so spreading load across slots costs nothing here and
+//!      equalizes exposure)
+//!   3. coordinator overhead: group formation + demux routing time with
+//!      the model execution subtracted (target: <5% of execute time)
+//!
+//!   cargo bench --bench coordinator_ablation
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use datamux::coordinator::{CoordinatorConfig, MuxCoordinator, SlotPolicy};
+use datamux::runtime::{default_artifacts_dir, ArtifactManifest, ModelRuntime};
+use datamux::util::bench::{write_results, Table};
+use datamux::util::json::{arr, num, obj, s};
+use datamux::workload::{closed_loop, RandomWorkload};
+
+fn main() -> anyhow::Result<()> {
+    let manifest = ArtifactManifest::load(default_artifacts_dir())?;
+    let rt = ModelRuntime::cpu()?;
+    // smallest N>1 artifact: fast executions isolate coordinator costs
+    let meta = manifest
+        .artifacts
+        .iter()
+        .filter(|a| !a.trained && a.n_mux >= 4)
+        .min_by_key(|a| (a.d_model, a.n_mux, a.batch))
+        .expect("run `make artifacts`");
+    println!("artifact: {} (N={}, B={})", meta.name, meta.n_mux, meta.batch);
+    let mut results = Vec::new();
+
+    // ----- 1. deadline sweep -------------------------------------------
+    let mut t1 = Table::new(
+        "ablation: batcher deadline (8 clients closed loop)",
+        &["max_wait ms", "throughput r/s", "p95 latency", "padded slots/exec"],
+    );
+    for wait_ms in [0u64, 1, 2, 5, 10, 25] {
+        let model = rt.load(meta)?;
+        let coord = Arc::new(MuxCoordinator::start(
+            model,
+            CoordinatorConfig {
+                max_wait: Duration::from_millis(wait_ms),
+                ..Default::default()
+            },
+        )?);
+        let mut w = RandomWorkload::new(5, 200, meta.seq_len - 4);
+        let rows: Vec<Vec<i32>> =
+            (0..64).map(|_| w.framed_row(&coord.tokenizer, meta.seq_len)).collect();
+        let report = closed_loop(&coord, &Arc::new(rows), 8, 40);
+        let c = coord.stats.counters.snapshot();
+        let execs = (c.groups_executed / meta.batch as u64).max(1);
+        let lat = coord.stats.e2e_latency.summary();
+        t1.row(&[
+            wait_ms.to_string(),
+            format!("{:.1}", report.throughput_rps),
+            datamux::util::metrics::fmt_ns(lat.p95_ns),
+            format!("{:.1}", c.slots_padded as f64 / execs as f64),
+        ]);
+        results.push(obj(vec![
+            ("ablation", s("deadline")),
+            ("max_wait_ms", num(wait_ms as f64)),
+            ("throughput_rps", num(report.throughput_rps)),
+            ("p95_ns", num(lat.p95_ns as f64)),
+            ("padded_per_exec", num(c.slots_padded as f64 / execs as f64)),
+        ]));
+    }
+    t1.print();
+
+    // ----- 2. slot policy ------------------------------------------------
+    let mut t2 = Table::new(
+        "ablation: slot assignment policy",
+        &["policy", "throughput r/s", "distinct slots used"],
+    );
+    for (name, policy) in [("Fill", SlotPolicy::Fill), ("RotateOffset", SlotPolicy::RotateOffset)] {
+        let model = rt.load(meta)?;
+        let coord = Arc::new(MuxCoordinator::start(
+            model,
+            CoordinatorConfig {
+                max_wait: Duration::from_millis(2),
+                slot_policy: policy,
+                ..Default::default()
+            },
+        )?);
+        let mut w = RandomWorkload::new(6, 200, meta.seq_len - 4);
+        let rows: Vec<Vec<i32>> =
+            (0..64).map(|_| w.framed_row(&coord.tokenizer, meta.seq_len)).collect();
+        // serial lone submissions expose slot placement
+        let mut slots = std::collections::HashSet::new();
+        let t0 = std::time::Instant::now();
+        for i in 0..48 {
+            let h = coord.submit_framed(rows[i % rows.len()].clone())?;
+            slots.insert(h.wait().slot);
+        }
+        let tput = 48.0 / t0.elapsed().as_secs_f64();
+        t2.row(&[name.to_string(), format!("{tput:.1}"), slots.len().to_string()]);
+        results.push(obj(vec![
+            ("ablation", s("slot_policy")),
+            ("policy", s(name)),
+            ("throughput_rps", num(tput)),
+            ("distinct_slots", num(slots.len() as f64)),
+        ]));
+    }
+    t2.print();
+
+    // ----- 3. coordinator overhead ---------------------------------------
+    // exec-only time (direct run_ids) vs end-to-end through the coordinator
+    let model = rt.load(meta)?;
+    let direct = {
+        let ids = vec![1i32; meta.ids_len()];
+        let stats = datamux::util::bench::bench("direct", 3, 20, || {
+            model.run_ids(&ids).unwrap();
+        });
+        stats.mean
+    };
+    let coord = Arc::new(MuxCoordinator::start(
+        model,
+        CoordinatorConfig { max_wait: Duration::from_millis(0), ..Default::default() },
+    )?);
+    let mut w = RandomWorkload::new(8, 200, meta.seq_len - 4);
+    let rows: Vec<Vec<i32>> =
+        (0..64).map(|_| w.framed_row(&coord.tokenizer, meta.seq_len)).collect();
+    let rows = Arc::new(rows);
+    let capacity = meta.batch * meta.n_mux;
+    let e2e = datamux::util::bench::bench("through-coordinator", 2, 10, || {
+        // saturate one full execution's worth of requests
+        let handles: Vec<_> = (0..capacity)
+            .map(|i| coord.submit_framed(rows[i % rows.len()].clone()).unwrap())
+            .collect();
+        for h in handles {
+            h.wait();
+        }
+    });
+    let overhead = (e2e.mean.as_secs_f64() - direct.as_secs_f64()).max(0.0);
+    let pct = 100.0 * overhead / direct.as_secs_f64();
+    let mut t3 = Table::new("ablation: coordinator overhead per execution",
+                            &["exec only", "through coordinator", "overhead", "% of exec"]);
+    t3.row(&[
+        format!("{direct:?}"),
+        format!("{:?}", e2e.mean),
+        format!("{:.2?}", Duration::from_secs_f64(overhead)),
+        format!("{pct:.1}%"),
+    ]);
+    t3.print();
+    results.push(obj(vec![
+        ("ablation", s("overhead")),
+        ("direct_s", num(direct.as_secs_f64())),
+        ("e2e_s", num(e2e.mean.as_secs_f64())),
+        ("overhead_pct", num(pct)),
+    ]));
+
+    write_results("coordinator_ablation.json", obj(vec![("rows", arr(results))]))?;
+    Ok(())
+}

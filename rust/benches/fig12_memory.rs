@@ -1,0 +1,96 @@
+//! Fig 12 reproduction: inference memory overhead vs N.
+//!
+//! Paper: with a fixed minibatch of 60 inputs, GPU memory grows linearly
+//! in N but with a very gentle slope — ~4x at N=40 vs N=1 — because only
+//! the demultiplexing inputs grow with N while the backbone activation
+//! footprint is fixed.
+//!
+//! Ours, on the CPU plugin, two measurements per N:
+//!   * analytic: weights + model I/O bytes from the artifact metadata
+//!     (the component the paper attributes the growth to), and
+//!   * RSS delta: process resident-set growth across load + execute
+//!     (captures XLA temp buffers).
+//!
+//!   cargo bench --bench fig12_memory
+
+use datamux::runtime::{default_artifacts_dir, ArtifactManifest, ModelRuntime};
+use datamux::util::bench::{write_results, Table};
+use datamux::util::json::{arr, num, obj, s};
+
+fn rss_bytes() -> usize {
+    // /proc/self/statm: pages; field 1 = resident
+    let statm = std::fs::read_to_string("/proc/self/statm").unwrap_or_default();
+    let resident_pages: usize = statm
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    resident_pages * 4096
+}
+
+fn main() -> anyhow::Result<()> {
+    let manifest = ArtifactManifest::load(default_artifacts_dir())?;
+    let rt = ModelRuntime::cpu()?;
+    let profile = std::env::var("BENCH_PROFILE").unwrap_or_else(|_| "base".into());
+    // paper fixes the minibatch at 60 sequences; our closest fixed lane is
+    // batch=8 mux-rows per execution for every N
+    let batch = 8;
+
+    let mut table = Table::new(
+        &format!("Fig 12: memory vs N ({profile}, fixed batch {batch})"),
+        &["N", "weights MB", "io KB", "analytic ratio", "rss delta MB", "rss ratio"],
+    );
+    let mut rows_json = Vec::new();
+    let mut base_analytic: Option<f64> = None;
+    let mut base_rss: Option<f64> = None;
+
+    for n in [1usize, 2, 5, 10, 20, 40] {
+        let Some(meta) = manifest.timing(&profile, n, batch) else { continue };
+        let rss0 = rss_bytes();
+        let model = rt.load(meta)?;
+        // run a few times so XLA temp allocations are materialized
+        let ids = vec![1i32; meta.ids_len()];
+        for _ in 0..3 {
+            model.run_ids(&ids)?;
+        }
+        let rss_delta = rss_bytes().saturating_sub(rss0) as f64;
+        let analytic = model.approx_device_bytes() as f64;
+        let aratio = match base_analytic {
+            None => {
+                base_analytic = Some(analytic);
+                1.0
+            }
+            Some(b) => analytic / b,
+        };
+        let rratio = match base_rss {
+            None => {
+                base_rss = Some(rss_delta.max(1.0));
+                1.0
+            }
+            Some(b) => rss_delta / b,
+        };
+        table.row(&[
+            n.to_string(),
+            format!("{:.1}", model.weight_bytes as f64 / 1e6),
+            format!("{:.1}", (meta.ids_len() * 4 + meta.output_len() * 4) as f64 / 1e3),
+            format!("{aratio:.2}x"),
+            format!("{:.1}", rss_delta / 1e6),
+            format!("{rratio:.2}x"),
+        ]);
+        rows_json.push(obj(vec![
+            ("n_mux", num(n as f64)),
+            ("weights_bytes", num(model.weight_bytes as f64)),
+            ("analytic_ratio", num(aratio)),
+            ("rss_delta_bytes", num(rss_delta)),
+            ("rss_ratio", num(rratio)),
+        ]));
+        drop(model); // keep the sequence comparable (allocator reuse noted)
+    }
+    table.print();
+    println!("paper: memory at N=40 is ~4x N=1 (gentle linear growth)");
+    write_results(
+        "fig12_memory.json",
+        obj(vec![("profile", s(&profile)), ("rows", arr(rows_json))]),
+    )?;
+    Ok(())
+}

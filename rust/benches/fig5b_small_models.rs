@@ -1,0 +1,101 @@
+//! Fig 5b / Fig 4c-inset reproduction: smaller backbones multiplexed to
+//! N=20 give *higher* relative speedup than the full model at N=40.
+//!
+//! Paper: 12L/384H and 4L/768H reach ~25x at N=20 vs 18x for 12L/768H at
+//! N=40. Ours: `small_wide` (2L/256H) and `small_deep` (4L/128H) vs the
+//! `base` profile — the claim under test is the crossover: small models
+//! at N=20 beat base at N=20 in absolute throughput, and their speedup
+//! curves sit above base's.
+//!
+//!   cargo bench --bench fig5b_small_models
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use datamux::coordinator::{CoordinatorConfig, MuxCoordinator};
+use datamux::runtime::{default_artifacts_dir, ArtifactManifest, ModelRuntime};
+use datamux::util::bench::{write_results, Table};
+use datamux::util::json::{arr, num, obj, s};
+use datamux::workload::{batch_pass, RandomWorkload};
+
+fn measure(
+    rt: &ModelRuntime,
+    manifest: &ArtifactManifest,
+    profile: &str,
+    n: usize,
+    batch: usize,
+    base_requests: usize,
+) -> anyhow::Result<Option<f64>> {
+    let Some(meta) = manifest.timing(profile, n, batch) else {
+        return Ok(None);
+    };
+    let model = rt.load(meta)?;
+    let coord = Arc::new(MuxCoordinator::start(
+        model,
+        CoordinatorConfig {
+            max_wait: Duration::from_millis(2),
+            queue_cap: 1 << 16,
+            ..Default::default()
+        },
+    )?);
+    let mut w = RandomWorkload::new(5, 200, meta.seq_len - 4);
+    let rows: Vec<Vec<i32>> =
+        (0..128).map(|_| w.framed_row(&coord.tokenizer, meta.seq_len)).collect();
+        // offline dataset pass (paper A.8): full mux groups
+    let requests = base_requests.max(meta.batch * meta.n_mux * 4);
+    let report = batch_pass(&coord, &rows, requests);
+    Ok(Some(report.throughput_rps))
+}
+
+fn main() -> anyhow::Result<()> {
+    let manifest = ArtifactManifest::load(default_artifacts_dir())?;
+    let rt = ModelRuntime::cpu()?;
+    let base_requests: usize = std::env::var("BENCH_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(320);
+
+    let ns = [1usize, 2, 5, 10, 20];
+    let mut table = Table::new(
+        "Fig 5b: small-backbone throughput (speedup vs own N=1 baseline)",
+        &["profile", "N", "throughput r/s", "speedup", "vs base N=1"],
+    );
+    let mut rows_json = Vec::new();
+    // base profile's N=1 as the cross-profile reference (batch 4 lane)
+    let base_ref = measure(&rt, &manifest, "base", 1, 4, base_requests)?.unwrap_or(f64::NAN);
+
+    for profile in ["base", "small_wide", "small_deep"] {
+        let mut own_base: Option<f64> = None;
+        for &n in &ns {
+            let batch = 4;
+            let Some(tput) = measure(&rt, &manifest, profile, n, batch, base_requests)? else {
+                continue;
+            };
+            let speedup = match own_base {
+                None => {
+                    own_base = Some(tput);
+                    1.0
+                }
+                Some(b) => tput / b,
+            };
+            table.row(&[
+                profile.to_string(),
+                n.to_string(),
+                format!("{tput:.1}"),
+                format!("{speedup:.2}x"),
+                format!("{:.2}x", tput / base_ref),
+            ]);
+            rows_json.push(obj(vec![
+                ("profile", s(profile)),
+                ("n_mux", num(n as f64)),
+                ("throughput_rps", num(tput)),
+                ("speedup", num(speedup)),
+                ("vs_base_n1", num(tput / base_ref)),
+            ]));
+        }
+    }
+    table.print();
+    println!("paper: smaller T-MUX at N=20 reaches ~25x vs base N=1 (> base's 18x at N=40)");
+    write_results("fig5b_small_models.json", obj(vec![("rows", arr(rows_json))]))?;
+    Ok(())
+}

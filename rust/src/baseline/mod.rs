@@ -1,0 +1,29 @@
+//! Baseline serving path (paper's B1): the same coordinator machinery
+//! pointed at an N=1 artifact — one request per model row, batching only
+//! along the batch dimension. Every figure's "1x" reference point.
+//!
+//! Kept as its own module so benches compare `baseline::start` vs
+//! `MuxCoordinator::start` symmetrically and so the non-multiplexed path
+//! stays honest (same queues, same scheduler, same tokenizer — the only
+//! difference is N).
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{CoordinatorConfig, MuxCoordinator};
+use crate::runtime::{ArtifactManifest, ModelRuntime};
+
+/// Start a vanilla (N=1) serving engine for `profile` at batch size
+/// `batch` from the manifest's timing artifacts.
+pub fn start(
+    rt: &ModelRuntime,
+    manifest: &ArtifactManifest,
+    profile: &str,
+    batch: usize,
+    cfg: CoordinatorConfig,
+) -> Result<MuxCoordinator> {
+    let meta = manifest
+        .timing(profile, 1, batch)
+        .ok_or_else(|| anyhow!("no N=1 artifact for profile {profile} batch {batch}"))?;
+    let model = rt.load(meta)?;
+    MuxCoordinator::start(model, cfg)
+}

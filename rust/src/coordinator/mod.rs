@@ -1,0 +1,241 @@
+//! L3 coordinator — the DataMUX serving engine.
+//!
+//! ```text
+//!  submit() ──▶ [bounded queue] ──▶ batcher thread ──▶ [exec queue]
+//!                                                        │
+//!                                     worker thread(s) ◀─┘
+//!                                       assemble ids → PJRT execute
+//!                                       → demux → fulfill handles
+//! ```
+//!
+//! The coordinator owns one AOT-compiled model (one `(profile, N, batch)`
+//! artifact) plus the batcher/worker threads. `MuxRouter` composes
+//! several coordinators and routes by arrival rate (adaptive N).
+
+pub mod batcher;
+pub mod policy;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::runtime::LoadedModel;
+use crate::tokenizer::Tokenizer;
+use crate::util::threadpool::{Channel, OnceCellSync};
+
+pub use batcher::{BatcherConfig, ExecBatch};
+pub use policy::{AdaptiveN, SlotPolicy};
+pub use request::{Request, RequestHandle, Response};
+pub use scheduler::{SharedModel, Stats};
+
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// max time the first request of a batch waits for co-muxed peers
+    pub max_wait: Duration,
+    /// admission queue capacity (senders block beyond this — backpressure)
+    pub queue_cap: usize,
+    /// PJRT worker threads (CPU plugin: 1 is usually right on 1 core)
+    pub n_workers: usize,
+    pub slot_policy: SlotPolicy,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            max_wait: Duration::from_millis(5),
+            queue_cap: 1024,
+            n_workers: 1,
+            slot_policy: SlotPolicy::Fill,
+        }
+    }
+}
+
+/// The serving engine for one loaded model.
+pub struct MuxCoordinator {
+    input: Channel<Request>,
+    pub stats: Arc<Stats>,
+    pub tokenizer: Tokenizer,
+    pub n_mux: usize,
+    pub seq_len: usize,
+    next_id: AtomicU64,
+    batcher: Option<std::thread::JoinHandle<u64>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl MuxCoordinator {
+    pub fn start(model: LoadedModel, cfg: CoordinatorConfig) -> Result<Self> {
+        let tokenizer = Tokenizer::new(
+            crate::tokenizer::default_vocab(),
+            model.meta.vocab_size,
+        );
+        let n_mux = model.meta.n_mux;
+        let seq_len = model.meta.seq_len;
+        let stats = Arc::new(Stats::default());
+        let input: Channel<Request> = Channel::bounded(cfg.queue_cap);
+        let exec: Channel<ExecBatch> = Channel::bounded(cfg.n_workers * 2 + 2);
+
+        let bcfg = BatcherConfig {
+            n_mux,
+            batch: model.meta.batch,
+            max_wait: cfg.max_wait,
+        };
+        let b_in = input.clone();
+        let b_out = exec.clone();
+        let batcher = std::thread::Builder::new()
+            .name("datamux-batcher".into())
+            .spawn(move || batcher::run_batcher(&bcfg, &b_in, &b_out))?;
+
+        let shared = SharedModel(Arc::new(model));
+        let mut workers = Vec::new();
+        for w in 0..cfg.n_workers.max(1) {
+            let model = shared.clone();
+            let exec = exec.clone();
+            let stats = stats.clone();
+            let tok = tokenizer.clone();
+            let policy = cfg.slot_policy;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("datamux-exec-{w}"))
+                    .spawn(move || {
+                        let mut scratch = Vec::new();
+                        while let Some(batch) = exec.recv() {
+                            if let Err(e) = scheduler::execute_batch(
+                                &model, &tok, policy, &stats, batch, &mut scratch,
+                            ) {
+                                eprintln!("worker {w}: execution failed: {e:#}");
+                                return;
+                            }
+                        }
+                    })?,
+            );
+        }
+
+        Ok(MuxCoordinator {
+            input,
+            stats,
+            tokenizer,
+            n_mux,
+            seq_len,
+            next_id: AtomicU64::new(1),
+            batcher: Some(batcher),
+            workers,
+        })
+    }
+
+    /// Submit a framed content row (seq_len ids). Blocks on backpressure.
+    pub fn submit_framed(&self, content: Vec<i32>) -> Result<RequestHandle> {
+        anyhow::ensure!(
+            content.len() == self.seq_len,
+            "content must be framed to seq_len={} (got {})",
+            self.seq_len,
+            content.len()
+        );
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let done = OnceCellSync::new();
+        let handle = RequestHandle { id, done: done.clone() };
+        self.stats.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        let req = Request { id, content, submitted: Instant::now(), done };
+        if self.input.send(req).is_err() {
+            self.stats.counters.rejected.fetch_add(1, Ordering::Relaxed);
+            anyhow::bail!("coordinator is shut down");
+        }
+        Ok(handle)
+    }
+
+    /// Submit text (`t5 t12 ...` or multiple [SEP]-joined parts).
+    pub fn submit_text(&self, parts: &[&str]) -> Result<RequestHandle> {
+        let framed = self
+            .tokenizer
+            .encode_framed(parts, self.seq_len)
+            .map_err(|e| anyhow::anyhow!("tokenize: {e}"))?;
+        self.submit_framed(framed)
+    }
+
+    /// Non-blocking submit; Err(content) when the queue is full.
+    pub fn try_submit_framed(&self, content: Vec<i32>) -> std::result::Result<RequestHandle, Vec<i32>> {
+        if content.len() != self.seq_len {
+            return Err(content);
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let done = OnceCellSync::new();
+        let handle = RequestHandle { id, done: done.clone() };
+        let req = Request { id, content, submitted: Instant::now(), done };
+        match self.input.try_send(req) {
+            Ok(()) => {
+                self.stats.counters.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(handle)
+            }
+            Err(req) => {
+                self.stats.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(req.content)
+            }
+        }
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.input.len()
+    }
+
+    /// Drain and stop. All in-flight requests are completed first.
+    pub fn shutdown(mut self) -> u64 {
+        self.input.close();
+        let batches = self.batcher.take().map(|b| b.join().unwrap_or(0)).unwrap_or(0);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        batches
+    }
+}
+
+impl Drop for MuxCoordinator {
+    fn drop(&mut self) {
+        self.input.close();
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Adaptive-N router over several coordinators (one per N candidate).
+pub struct MuxRouter {
+    /// ascending by n_mux
+    pub lanes: Vec<MuxCoordinator>,
+    adaptive: std::sync::Mutex<AdaptiveN>,
+    epoch: Instant,
+}
+
+impl MuxRouter {
+    pub fn new(mut lanes: Vec<MuxCoordinator>, exec_time_us: f64) -> Self {
+        lanes.sort_by_key(|c| c.n_mux);
+        let candidates = lanes.iter().map(|c| c.n_mux).collect();
+        MuxRouter {
+            lanes,
+            adaptive: std::sync::Mutex::new(AdaptiveN::new(candidates, exec_time_us)),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Route one framed request to the lane adaptive-N selects.
+    pub fn submit_framed(&self, content: Vec<i32>) -> Result<(usize, RequestHandle)> {
+        let depth: usize = self.lanes.iter().map(|l| l.queue_depth()).sum();
+        let n = {
+            let mut a = self.adaptive.lock().unwrap();
+            a.on_arrival(self.epoch.elapsed().as_micros() as u64);
+            a.choose(depth)
+        };
+        let lane = self
+            .lanes
+            .iter()
+            .find(|l| l.n_mux == n)
+            .unwrap_or_else(|| self.lanes.last().unwrap());
+        Ok((lane.n_mux, lane.submit_framed(content)?))
+    }
+}

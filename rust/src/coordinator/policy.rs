@@ -1,0 +1,153 @@
+//! Slot-assignment and executable-selection policies.
+//!
+//! Paper A3 / Fig 7b: accuracy varies across mux indices, so *which slot*
+//! a request lands in matters. `SlotPolicy` controls the group-local
+//! starting offset so long-run per-slot load (and thus exposure to the
+//! weaker indices) can be equalized.
+//!
+//! `AdaptiveN` picks which executable (which N) to route to from the
+//! observed arrival rate — the serving-side extension the paper's
+//! discussion motivates (multiplex more when the queue is deep, keep
+//! latency low when traffic is light).
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotPolicy {
+    /// Always assign slots 0..k in order. Simple; index-0 bias.
+    Fill,
+    /// Rotate the starting slot every group so each index sees the same
+    /// long-run request share.
+    RotateOffset,
+}
+
+impl SlotPolicy {
+    /// Map entry position -> slot index for a group with `n_mux` slots.
+    pub fn slot_of(&self, group_seq: u64, position: usize, n_mux: usize) -> usize {
+        match self {
+            SlotPolicy::Fill => position,
+            SlotPolicy::RotateOffset => (position + (group_seq as usize % n_mux)) % n_mux,
+        }
+    }
+}
+
+/// EWMA arrival-rate estimator driving adaptive-N selection.
+#[derive(Debug)]
+pub struct AdaptiveN {
+    /// candidate N values, ascending (each must have a loaded model)
+    pub candidates: Vec<usize>,
+    ewma_interarrival_us: f64,
+    alpha: f64,
+    last_arrival_us: Option<u64>,
+    /// model execute time estimate (us) — amortization target
+    pub exec_time_us: f64,
+}
+
+impl AdaptiveN {
+    pub fn new(mut candidates: Vec<usize>, exec_time_us: f64) -> Self {
+        candidates.sort_unstable();
+        assert!(!candidates.is_empty());
+        AdaptiveN {
+            candidates,
+            ewma_interarrival_us: 1e6,
+            alpha: 0.2,
+            last_arrival_us: None,
+            exec_time_us,
+        }
+    }
+
+    /// Record an arrival (monotonic microsecond timestamp).
+    pub fn on_arrival(&mut self, now_us: u64) {
+        if let Some(prev) = self.last_arrival_us {
+            let delta = (now_us.saturating_sub(prev)) as f64;
+            self.ewma_interarrival_us =
+                self.alpha * delta + (1.0 - self.alpha) * self.ewma_interarrival_us;
+        }
+        self.last_arrival_us = Some(now_us);
+    }
+
+    pub fn arrival_rate_per_s(&self) -> f64 {
+        if self.ewma_interarrival_us <= 0.0 {
+            return 0.0;
+        }
+        1e6 / self.ewma_interarrival_us
+    }
+
+    /// Choose N: the number of requests expected to arrive within one
+    /// model execution, clamped to the candidate grid. Deep queues ->
+    /// large N (throughput mode); light traffic -> small N (latency mode).
+    pub fn choose(&self, queue_depth: usize) -> usize {
+        let expected = self.arrival_rate_per_s() * self.exec_time_us / 1e6;
+        let want = expected.max(queue_depth as f64).max(1.0);
+        *self
+            .candidates
+            .iter()
+            .find(|&&n| (n as f64) >= want)
+            .unwrap_or(self.candidates.last().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_is_identity() {
+        let p = SlotPolicy::Fill;
+        for pos in 0..8 {
+            assert_eq!(p.slot_of(3, pos, 8), pos);
+        }
+    }
+
+    #[test]
+    fn rotate_covers_all_slots_evenly() {
+        let p = SlotPolicy::RotateOffset;
+        let n = 4;
+        let mut hits = [0usize; 4];
+        for group in 0..100u64 {
+            // one request per group at position 0
+            hits[p.slot_of(group, 0, n)] += 1;
+        }
+        assert!(hits.iter().all(|&h| h == 25), "{hits:?}");
+    }
+
+    #[test]
+    fn rotate_is_bijective_within_group() {
+        let p = SlotPolicy::RotateOffset;
+        let n = 5;
+        for group in 0..7u64 {
+            let mut seen = [false; 5];
+            for pos in 0..n {
+                let s = p.slot_of(group, pos, n);
+                assert!(!seen[s]);
+                seen[s] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_prefers_small_n_when_idle() {
+        let a = AdaptiveN::new(vec![1, 2, 5, 10, 20, 40], 10_000.0);
+        assert_eq!(a.choose(0), 1);
+        assert_eq!(a.choose(1), 1);
+    }
+
+    #[test]
+    fn adaptive_scales_with_queue_depth() {
+        let a = AdaptiveN::new(vec![1, 2, 5, 10, 20, 40], 10_000.0);
+        assert_eq!(a.choose(4), 5);
+        assert_eq!(a.choose(12), 20);
+        assert_eq!(a.choose(100), 40); // clamped to max
+    }
+
+    #[test]
+    fn adaptive_tracks_arrival_rate() {
+        let mut a = AdaptiveN::new(vec![1, 5, 20], 100_000.0); // 100ms exec
+        // 1 arrival every 10ms -> ~10 arrivals per execution -> N=20
+        let mut t = 0u64;
+        for _ in 0..50 {
+            a.on_arrival(t);
+            t += 10_000;
+        }
+        assert!(a.arrival_rate_per_s() > 50.0);
+        assert_eq!(a.choose(0), 20);
+    }
+}

@@ -1,0 +1,94 @@
+//! Request / response types and the completion handle.
+
+use std::time::{Duration, Instant};
+
+use crate::util::threadpool::OnceCellSync;
+
+/// A single inference request: one framed content row (already
+/// `[CLS] ... [SEP] ... [PAD]`-laid-out to the model's seq_len).
+pub struct Request {
+    pub id: u64,
+    pub content: Vec<i32>,
+    pub submitted: Instant,
+    pub(crate) done: OnceCellSync<Response>,
+}
+
+/// The demultiplexed result for one request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// which mux slot (paper's index i) served this request — exposed
+    /// because per-index accuracy varies (paper A3 / Fig 7b)
+    pub slot: usize,
+    /// group sequence number (diagnostics)
+    pub group: u64,
+    /// task logits for this request: cls -> n_classes, token -> seq_len * n_classes
+    pub logits: Vec<f32>,
+    pub n_classes: usize,
+    pub latency: Duration,
+}
+
+impl Response {
+    /// Sentence-level prediction (argmax over class logits).
+    pub fn pred_class(&self) -> usize {
+        argmax(&self.logits[..self.n_classes])
+    }
+
+    /// Token-level predictions (argmax per position).
+    pub fn pred_tokens(&self) -> Vec<usize> {
+        self.logits.chunks_exact(self.n_classes).map(argmax).collect()
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Caller-side handle; `wait()` blocks until the scheduler fulfills it.
+#[derive(Clone)]
+pub struct RequestHandle {
+    pub id: u64,
+    pub(crate) done: OnceCellSync<Response>,
+}
+
+impl RequestHandle {
+    pub fn wait(&self) -> Response {
+        self.done.wait()
+    }
+
+    pub fn wait_timeout(&self, d: Duration) -> Option<Response> {
+        self.done.wait_timeout(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_first_max() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.9]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+        assert_eq!(argmax(&[-5.0, -1.0, -3.0]), 1);
+    }
+
+    #[test]
+    fn response_predictions() {
+        let r = Response {
+            id: 1,
+            slot: 0,
+            group: 0,
+            logits: vec![0.0, 1.0, /* pos2 */ 2.0, 0.5],
+            n_classes: 2,
+            latency: Duration::ZERO,
+        };
+        assert_eq!(r.pred_class(), 1);
+        assert_eq!(r.pred_tokens(), vec![1, 0]);
+    }
+}

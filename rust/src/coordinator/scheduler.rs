@@ -1,0 +1,155 @@
+//! Scheduler: turn ExecBatches into PJRT executions and route the
+//! demultiplexed outputs back to their requests.
+//!
+//! Input assembly mirrors the compile-path layout exactly (pinned by the
+//! parity integration test): for group `g`, slot `i`, the model row is
+//! `prefix^i ++ content`, and the output logits for that request live at
+//! flat offset `(g * n_mux + i) * per_slot_len`.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::batcher::ExecBatch;
+use super::policy::SlotPolicy;
+use super::request::Response;
+use crate::runtime::LoadedModel;
+use crate::tokenizer::Tokenizer;
+use crate::util::metrics::{Counters, Histogram};
+
+/// `LoadedModel` wraps PJRT FFI handles (raw pointers), which the xla
+/// crate does not mark Send/Sync. The PJRT C API is thread-safe for
+/// compilation-free usage (execute / buffer upload), and every model here
+/// is used behind an `Arc` without interior mutation, so sharing across
+/// the scheduler threads is sound.
+pub struct SharedModel(pub Arc<LoadedModel>);
+
+// SAFETY: see type-level comment — PJRT execution and host-to-device
+// transfer are thread-safe in the CPU plugin; we never mutate LoadedModel
+// after construction.
+unsafe impl Send for SharedModel {}
+unsafe impl Sync for SharedModel {}
+
+impl Clone for SharedModel {
+    fn clone(&self) -> Self {
+        SharedModel(self.0.clone())
+    }
+}
+
+impl std::ops::Deref for SharedModel {
+    type Target = LoadedModel;
+    fn deref(&self) -> &LoadedModel {
+        &self.0
+    }
+}
+
+/// Shared serving statistics.
+#[derive(Default)]
+pub struct Stats {
+    pub counters: Counters,
+    /// submit -> response fulfilled
+    pub e2e_latency: Histogram,
+    /// batch formed -> execution done
+    pub exec_latency: Histogram,
+}
+
+/// Per-slot output length (flattened logits) for the model's task.
+pub fn per_slot_len(model: &LoadedModel) -> usize {
+    match model.meta.task.as_str() {
+        "cls" => model.meta.n_classes,
+        "token" => model.meta.seq_len * model.meta.n_classes,
+        other => panic!("unsupported serving task {other}"),
+    }
+}
+
+/// Execute one batch and fulfill its requests. Returns Err only on
+/// runtime failure (callers treat that as fatal for the worker).
+pub fn execute_batch(
+    model: &LoadedModel,
+    tok: &Tokenizer,
+    policy: SlotPolicy,
+    stats: &Stats,
+    batch: ExecBatch,
+    ids_scratch: &mut Vec<i32>,
+) -> anyhow::Result<()> {
+    let n_mux = model.meta.n_mux;
+    let b = model.meta.batch;
+    let input_len = model.meta.input_len;
+    let seq_len = model.meta.seq_len;
+    let prefix_len = input_len - seq_len;
+    debug_assert!(prefix_len == 0 || prefix_len == n_mux);
+    let capacity = b * n_mux;
+    assert!(batch.entries.len() <= capacity, "batcher produced oversized batch");
+
+    // --- assemble the (b, n_mux, input_len) ids tensor -------------------
+    ids_scratch.clear();
+    ids_scratch.resize(capacity * input_len, tok.vocab.pad);
+    // fill every slot with the pad row first (empty slots stay in-distribution)
+    let pad_row = tok.pad_row(seq_len);
+    for g in 0..b {
+        for slot in 0..n_mux {
+            let row = &mut ids_scratch
+                [((g * n_mux) + slot) * input_len..((g * n_mux) + slot + 1) * input_len];
+            if prefix_len > 0 {
+                for (j, p) in row[..prefix_len].iter_mut().enumerate() {
+                    *p = if j == slot {
+                        tok.vocab.idx_base + slot as i32
+                    } else {
+                        tok.vocab.eps_pad
+                    };
+                }
+            }
+            row[prefix_len..].copy_from_slice(&pad_row);
+        }
+    }
+    // place the real requests
+    let mut placement: Vec<(usize, usize)> = Vec::with_capacity(batch.entries.len());
+    for (pos, req) in batch.entries.iter().enumerate() {
+        let g = pos / n_mux;
+        let slot = policy.slot_of(batch.seq.wrapping_add(g as u64), pos % n_mux, n_mux);
+        debug_assert_eq!(req.content.len(), seq_len, "request content must be framed");
+        let row = &mut ids_scratch
+            [((g * n_mux) + slot) * input_len..((g * n_mux) + slot + 1) * input_len];
+        row[prefix_len..].copy_from_slice(&req.content);
+        placement.push((g, slot));
+    }
+    let padded = capacity - batch.entries.len();
+
+    // --- execute ----------------------------------------------------------
+    let t_exec = Instant::now();
+    let out = model.run_ids(ids_scratch)?;
+    stats.exec_latency.record_duration(t_exec.elapsed());
+    stats.counters.groups_executed.fetch_add(b as u64, Ordering::Relaxed);
+    stats.counters.slots_padded.fetch_add(padded as u64, Ordering::Relaxed);
+
+    // --- demux dispatch ----------------------------------------------------
+    let slot_len = per_slot_len(model);
+    let now = Instant::now();
+    for (req, (g, slot)) in batch.entries.into_iter().zip(placement) {
+        let off = ((g * n_mux) + slot) * slot_len;
+        let logits = out[off..off + slot_len].to_vec();
+        let latency = now.duration_since(req.submitted);
+        stats.e2e_latency.record_duration(latency);
+        stats.counters.completed.fetch_add(1, Ordering::Relaxed);
+        req.done.set(Response {
+            id: req.id,
+            slot,
+            group: batch.seq,
+            logits,
+            n_classes: model.meta.n_classes,
+            latency,
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_model_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<SharedModel>();
+    }
+}

@@ -1,0 +1,161 @@
+//! TCP front end: a line protocol over the coordinator.
+//!
+//! Protocol (one request per line):
+//!   `CLS <token text>`                  -> `OK <pred> slot=<i> us=<latency>`
+//!   `TOK <token text>`                  -> `OK <tag ids ...> slot=<i> us=<latency>`
+//!   `STATS`                             -> one-line counters snapshot
+//!   `QUIT`                              -> closes the connection
+//! Errors: `ERR <message>`.
+//!
+//! One OS thread per connection, capped by a semaphore-ish counter — the
+//! heavy lifting (batching, PJRT) happens on the coordinator's threads,
+//! so connection threads only block on the completion handle.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::MuxCoordinator;
+
+pub struct ServerConfig {
+    pub addr: String,
+    pub max_connections: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { addr: "127.0.0.1:7071".into(), max_connections: 64 }
+    }
+}
+
+pub struct Server {
+    pub local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start serving `coord` on `cfg.addr`. Non-blocking; returns the
+    /// bound address (use port 0 to pick a free port).
+    pub fn start(coord: Arc<MuxCoordinator>, cfg: ServerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let live = Arc::new(AtomicUsize::new(0));
+        let accept_thread = std::thread::Builder::new()
+            .name("datamux-accept".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            if live.load(Ordering::Relaxed) >= cfg.max_connections {
+                                let mut s = stream;
+                                let _ = s.write_all(b"ERR too many connections\n");
+                                continue;
+                            }
+                            live.fetch_add(1, Ordering::Relaxed);
+                            let coord = coord.clone();
+                            let live = live.clone();
+                            let stop = stop2.clone();
+                            std::thread::spawn(move || {
+                                let _ = handle_conn(stream, &coord, &stop);
+                                live.fetch_sub(1, Ordering::Relaxed);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Server { local_addr, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, coord: &MuxCoordinator, stop: &AtomicBool) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let line = line?;
+        let reply = handle_line(line.trim(), coord);
+        match reply {
+            Some(r) => {
+                writer.write_all(r.as_bytes())?;
+                writer.write_all(b"\n")?;
+            }
+            None => break, // QUIT
+        }
+    }
+    Ok(())
+}
+
+/// Protocol logic, factored for unit testing without sockets.
+pub fn handle_line(line: &str, coord: &MuxCoordinator) -> Option<String> {
+    let (cmd, rest) = match line.split_once(' ') {
+        Some((c, r)) => (c, r),
+        None => (line, ""),
+    };
+    match cmd {
+        "QUIT" => None,
+        "STATS" => {
+            let c = coord.stats.counters.snapshot();
+            Some(format!(
+                "OK submitted={} completed={} rejected={} groups={} padded={}",
+                c.submitted, c.completed, c.rejected, c.groups_executed, c.slots_padded
+            ))
+        }
+        "CLS" => match coord.submit_text(&rest.split(" [SEP] ").collect::<Vec<_>>()) {
+            Ok(h) => {
+                let r = h.wait();
+                Some(format!(
+                    "OK {} slot={} us={}",
+                    r.pred_class(),
+                    r.slot,
+                    r.latency.as_micros()
+                ))
+            }
+            Err(e) => Some(format!("ERR {e}")),
+        },
+        "TOK" => match coord.submit_text(&[rest]) {
+            Ok(h) => {
+                let r = h.wait();
+                let tags: Vec<String> =
+                    r.pred_tokens().iter().map(|t| t.to_string()).collect();
+                Some(format!(
+                    "OK {} slot={} us={}",
+                    tags.join(","),
+                    r.slot,
+                    r.latency.as_micros()
+                ))
+            }
+            Err(e) => Some(format!("ERR {e}")),
+        },
+        _ => Some(format!("ERR unknown command '{cmd}'")),
+    }
+}

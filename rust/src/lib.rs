@@ -1,0 +1,27 @@
+//! # DataMUX serving stack
+//!
+//! Reproduction of *DataMUX: Data Multiplexing for Neural Networks*
+//! (Murahari et al., NeurIPS 2022) as a three-layer serving system:
+//!
+//! - **Layer 1 (Pallas, build time)** — multiplex / demultiplex / attention
+//!   kernels in `python/compile/kernels/`.
+//! - **Layer 2 (JAX, build time)** — the T-MUX transformer (and MLP / CNN
+//!   variants) in `python/compile/model.py`, AOT-lowered to HLO text.
+//! - **Layer 3 (this crate, request path)** — a rust coordinator that loads
+//!   the AOT artifacts via PJRT and serves *multiplexed* inference: it packs
+//!   `N` user requests into a single model input row, executes once, and
+//!   demultiplexes the outputs back to individual responses (paper Fig 1).
+//!
+//! Python never runs on the request path; after `make artifacts` the rust
+//! binary is self-contained. See DESIGN.md for the system inventory and
+//! EXPERIMENTS.md for the paper-vs-measured record.
+
+pub mod baseline;
+pub mod coordinator;
+pub mod runtime;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;
+
+pub use coordinator::{CoordinatorConfig, MuxCoordinator, MuxRouter};
+pub use runtime::{ArtifactManifest, ModelRuntime};

@@ -1,0 +1,89 @@
+//! `datamux` CLI: serve an artifact over TCP or run one-shot inspection
+//! commands. Examples live in examples/ — this binary is the long-running
+//! leader entrypoint.
+use std::sync::Arc;
+
+use anyhow::Result;
+use datamux::coordinator::server::{Server, ServerConfig};
+use datamux::coordinator::{CoordinatorConfig, MuxCoordinator, SlotPolicy};
+use datamux::runtime::{default_artifacts_dir, ArtifactManifest, ModelRuntime};
+use datamux::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env()
+        .describe("cmd", "serve", "serve | list | parity")
+        .describe("artifacts", "<auto>", "artifacts directory")
+        .describe("artifact", "", "artifact name (default: first trained, else first)")
+        .describe("addr", "127.0.0.1:7071", "TCP bind address for serve")
+        .describe("max-wait-ms", "5", "batcher deadline")
+        .describe("rotate-slots", "false", "rotate slot assignment (paper A3)");
+    let cmd = args.str("cmd", "serve");
+    let dir = match args.str("artifacts", "") {
+        s if s.is_empty() => default_artifacts_dir(),
+        s => s.into(),
+    };
+    let manifest = ArtifactManifest::load(&dir)?;
+
+    match cmd.as_str() {
+        "list" => {
+            println!("{} artifacts in {}", manifest.artifacts.len(), dir.display());
+            for a in &manifest.artifacts {
+                println!(
+                    "  {:32} N={:<3} B={:<2} L={:<3} task={:<6} trained={}",
+                    a.name, a.n_mux, a.batch, a.input_len, a.task, a.trained
+                );
+            }
+            Ok(())
+        }
+        "parity" => {
+            let rt = ModelRuntime::cpu()?;
+            for meta in &manifest.artifacts {
+                if meta.parity.is_some() {
+                    rt.load(meta)?.verify_parity()?;
+                    println!("parity OK: {}", meta.name);
+                }
+            }
+            Ok(())
+        }
+        "serve" => {
+            let name = args.str("artifact", "");
+            let meta = if name.is_empty() {
+                manifest
+                    .artifacts
+                    .iter()
+                    .find(|a| a.trained)
+                    .or_else(|| manifest.artifacts.first())
+                    .ok_or_else(|| anyhow::anyhow!("no artifacts"))?
+            } else {
+                manifest
+                    .find(&name)
+                    .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not found"))?
+            };
+            let rt = ModelRuntime::cpu()?;
+            println!("loading {} (N={}, batch={})", meta.name, meta.n_mux, meta.batch);
+            let model = rt.load(meta)?;
+            let cfg = CoordinatorConfig {
+                max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms", 5)),
+                slot_policy: if args.bool("rotate-slots", false) {
+                    SlotPolicy::RotateOffset
+                } else {
+                    SlotPolicy::Fill
+                },
+                ..Default::default()
+            };
+            let coord = Arc::new(MuxCoordinator::start(model, cfg)?);
+            let server = Server::start(
+                coord,
+                ServerConfig { addr: args.str("addr", "127.0.0.1:7071"), max_connections: 64 },
+            )?;
+            println!("serving on {} — protocol: CLS/TOK/STATS/QUIT", server.local_addr);
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(60));
+            }
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{}", args.usage());
+            std::process::exit(2);
+        }
+    }
+}

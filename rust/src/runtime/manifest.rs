@@ -1,0 +1,246 @@
+//! Artifact manifest: the contract written by `python/compile/aot.py`.
+//!
+//! The manifest pins everything the request path must agree on with the
+//! compile path: vocabulary layout, input shapes, parameter order, and
+//! bit-level parity vectors for the integration tests.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct VocabLayout {
+    pub pad: i32,
+    pub cls: i32,
+    pub sep: i32,
+    pub eps_pad: i32,
+    pub idx_base: i32,
+    pub max_mux: usize,
+    pub content_base: i32,
+}
+
+#[derive(Debug, Clone)]
+pub struct Parity {
+    /// flattened (batch, n_mux, input_len) ids
+    pub ids: Vec<i32>,
+    pub check_indices: Vec<usize>,
+    pub check_values: Vec<f32>,
+    pub output_shape: Vec<usize>,
+    pub tol: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub hlo: PathBuf,
+    pub weights: PathBuf,
+    pub profile: String,
+    pub n_mux: usize,
+    pub seq_len: usize,
+    pub input_len: usize,
+    pub batch: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub task: String,
+    pub n_classes: usize,
+    pub mux: String,
+    pub demux: String,
+    pub vocab_size: usize,
+    pub n_weight_tensors: usize,
+    pub trained: bool,
+    pub train_task: Option<String>,
+    pub train_accuracy: Option<f64>,
+    pub parity: Option<Parity>,
+}
+
+impl ArtifactMeta {
+    /// total i32 elements in the ids input
+    pub fn ids_len(&self) -> usize {
+        self.batch * self.n_mux * self.input_len
+    }
+
+    /// number of logits the artifact produces
+    pub fn output_len(&self) -> usize {
+        match self.task.as_str() {
+            "cls" => self.batch * self.n_mux * self.n_classes,
+            "token" => self.batch * self.n_mux * self.seq_len * self.n_classes,
+            "retrieval" => self.batch * self.n_mux * self.seq_len * self.vocab_size,
+            other => panic!("unknown task {other}"),
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub vocab: VocabLayout,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+fn req_usize(o: &Json, k: &str) -> Result<usize> {
+    o.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("manifest missing '{k}'"))
+}
+
+fn req_str(o: &Json, k: &str) -> Result<String> {
+    Ok(o.get(k)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("manifest missing '{k}'"))?
+        .to_string())
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let root = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let version = req_usize(&root, "version")?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let v = root.get("vocab").ok_or_else(|| anyhow!("manifest missing vocab"))?;
+        let vocab = VocabLayout {
+            pad: req_usize(v, "pad")? as i32,
+            cls: req_usize(v, "cls")? as i32,
+            sep: req_usize(v, "sep")? as i32,
+            eps_pad: req_usize(v, "eps_pad")? as i32,
+            idx_base: req_usize(v, "idx_base")? as i32,
+            max_mux: req_usize(v, "max_mux")?,
+            content_base: req_usize(v, "content_base")? as i32,
+        };
+        let mut artifacts = Vec::new();
+        for a in root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let parity = a.get("parity").map(|p| -> Result<Parity> {
+                let ints = |k: &str| -> Result<Vec<i64>> {
+                    Ok(p.get(k)
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("parity missing {k}"))?
+                        .iter()
+                        .filter_map(Json::as_i64)
+                        .collect())
+                };
+                let floats = |k: &str| -> Result<Vec<f64>> {
+                    Ok(p.get(k)
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("parity missing {k}"))?
+                        .iter()
+                        .filter_map(Json::as_f64)
+                        .collect())
+                };
+                Ok(Parity {
+                    ids: ints("ids")?.iter().map(|&x| x as i32).collect(),
+                    check_indices: ints("check_indices")?.iter().map(|&x| x as usize).collect(),
+                    check_values: floats("check_values")?.iter().map(|&x| x as f32).collect(),
+                    output_shape: ints("output_shape")?.iter().map(|&x| x as usize).collect(),
+                    tol: p.get("tol").and_then(Json::as_f64).unwrap_or(2e-4) as f32,
+                })
+            });
+            let parity = match parity {
+                Some(Ok(p)) => Some(p),
+                Some(Err(e)) => return Err(e),
+                None => None,
+            };
+            artifacts.push(ArtifactMeta {
+                name: req_str(a, "name")?,
+                hlo: dir.join(req_str(a, "hlo")?),
+                weights: dir.join(req_str(a, "weights")?),
+                profile: req_str(a, "profile")?,
+                n_mux: req_usize(a, "n_mux")?,
+                seq_len: req_usize(a, "seq_len")?,
+                input_len: req_usize(a, "input_len")?,
+                batch: req_usize(a, "batch")?,
+                d_model: req_usize(a, "d_model")?,
+                n_layers: req_usize(a, "n_layers")?,
+                n_heads: req_usize(a, "n_heads")?,
+                task: req_str(a, "task")?,
+                n_classes: req_usize(a, "n_classes")?,
+                mux: req_str(a, "mux")?,
+                demux: req_str(a, "demux")?,
+                vocab_size: req_usize(a, "vocab_size")?,
+                n_weight_tensors: req_usize(a, "n_weight_tensors")?,
+                trained: a.get("trained").and_then(Json::as_bool).unwrap_or(false),
+                train_task: a.get("train_task").and_then(Json::as_str).map(String::from),
+                train_accuracy: a.get("train_accuracy").and_then(Json::as_f64),
+                parity,
+            });
+        }
+        Ok(ArtifactManifest { dir, vocab, artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Select a timing artifact by (profile, n_mux, batch).
+    pub fn timing(&self, profile: &str, n_mux: usize, batch: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| !a.trained && a.profile == profile && a.n_mux == n_mux && a.batch == batch)
+    }
+
+    /// Select a trained artifact by task + n_mux.
+    pub fn trained(&self, task: &str, n_mux: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.trained && a.train_task.as_deref() == Some(task) && a.n_mux == n_mux)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "vocab": {"pad":0,"cls":1,"sep":2,"eps_pad":3,"idx_base":4,"max_mux":40,"content_base":44},
+      "artifacts": [{
+        "name": "timing_tiny_n2_b1", "hlo": "t.hlo.txt", "weights": "t.weights.bin",
+        "profile": "tiny", "n_mux": 2, "seq_len": 16, "input_len": 18, "batch": 1,
+        "d_model": 128, "n_layers": 2, "n_heads": 4, "task": "cls", "n_classes": 3,
+        "mux": "hadamard", "demux": "index_embed", "vocab_size": 300,
+        "n_weight_tensors": 30, "trained": false,
+        "parity": {"ids": [1,2,3], "check_indices": [0], "check_values": [0.5],
+                   "output_shape": [1,2,3], "tol": 0.0002}
+      }]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse(SAMPLE, PathBuf::from("/tmp/x")).unwrap();
+        assert_eq!(m.vocab.content_base, 44);
+        let a = m.find("timing_tiny_n2_b1").unwrap();
+        assert_eq!(a.n_mux, 2);
+        assert_eq!(a.ids_len(), 18 * 2);
+        assert_eq!(a.output_len(), 6);
+        assert_eq!(a.parity.as_ref().unwrap().ids, vec![1, 2, 3]);
+        assert!(m.timing("tiny", 2, 1).is_some());
+        assert!(m.timing("tiny", 3, 1).is_none());
+        assert!(m.trained("mnli", 2).is_none());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(ArtifactManifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn token_output_len() {
+        let m = ArtifactManifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let mut a = m.artifacts[0].clone();
+        a.task = "token".into();
+        assert_eq!(a.output_len(), 1 * 2 * 16 * 3);
+    }
+}

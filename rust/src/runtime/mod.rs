@@ -1,0 +1,14 @@
+//! L3 runtime: PJRT loading and execution of the AOT artifacts.
+//!
+//! `manifest` parses the registry written by `python/compile/aot.py`,
+//! `weights` the binary tensor blobs, and `model` wraps the `xla` crate
+//! (PJRT CPU client) to compile HLO text and execute with device-resident
+//! weights. See `/opt/xla-example/` for the reference wiring this adapts.
+
+pub mod manifest;
+pub mod model;
+pub mod weights;
+
+pub use manifest::{ArtifactManifest, ArtifactMeta, Parity, VocabLayout};
+pub use model::{default_artifacts_dir, LoadedModel, ModelRuntime};
+pub use weights::WeightsFile;

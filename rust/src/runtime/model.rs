@@ -1,0 +1,185 @@
+//! PJRT model runtime: load HLO-text artifacts, keep weights device-
+//! resident, execute from the serving hot path.
+//!
+//! One `ModelRuntime` per process (owns the PJRT CPU client); one
+//! `LoadedModel` per artifact (compiled executable + uploaded weight
+//! buffers). `run_ids` is the only thing the coordinator calls per
+//! request group — weights are never re-uploaded.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{ArtifactManifest, ArtifactMeta};
+use super::weights::WeightsFile;
+
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+}
+
+impl ModelRuntime {
+    /// Create the PJRT CPU client (the process-wide device handle).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(ModelRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact and upload its weights.
+    pub fn load(&self, meta: &ArtifactMeta) -> Result<LoadedModel> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.hlo.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", meta.hlo.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", meta.name))?;
+        let compile_time = t0.elapsed();
+
+        let t1 = Instant::now();
+        let wf = WeightsFile::load(&meta.weights)?;
+        if wf.tensors.len() != meta.n_weight_tensors {
+            bail!(
+                "{}: weights file has {} tensors, manifest says {}",
+                meta.name,
+                wf.tensors.len(),
+                meta.n_weight_tensors
+            );
+        }
+        let mut weight_bufs = Vec::with_capacity(wf.tensors.len());
+        for i in 0..wf.tensors.len() {
+            let data = wf.tensor_f32(i)?;
+            let dims = wf.tensors[i].shape.clone();
+            let buf = self
+                .client
+                .buffer_from_host_buffer::<f32>(&data, &dims, None)
+                .map_err(|e| anyhow!("uploading {}: {e:?}", wf.tensors[i].name))?;
+            weight_bufs.push(buf);
+        }
+        let upload_time = t1.elapsed();
+
+        Ok(LoadedModel {
+            meta: meta.clone(),
+            exe,
+            weight_bufs,
+            client: self.client.clone(),
+            weight_bytes: wf.total_bytes(),
+            compile_time,
+            upload_time,
+        })
+    }
+
+    /// Load every artifact in a manifest (used by integration tests).
+    pub fn load_all(&self, manifest: &ArtifactManifest) -> Result<Vec<LoadedModel>> {
+        manifest.artifacts.iter().map(|m| self.load(m)).collect()
+    }
+}
+
+/// A compiled model with device-resident weights.
+pub struct LoadedModel {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    client: xla::PjRtClient,
+    pub weight_bytes: usize,
+    pub compile_time: std::time::Duration,
+    pub upload_time: std::time::Duration,
+}
+
+impl LoadedModel {
+    /// Execute on raw token ids (flattened (batch, n_mux, input_len)).
+    /// Returns the flattened f32 logits.
+    pub fn run_ids(&self, ids: &[i32]) -> Result<Vec<f32>> {
+        if ids.len() != self.meta.ids_len() {
+            bail!(
+                "{}: ids length {} != expected {} (batch {} x n_mux {} x input_len {})",
+                self.meta.name,
+                ids.len(),
+                self.meta.ids_len(),
+                self.meta.batch,
+                self.meta.n_mux,
+                self.meta.input_len
+            );
+        }
+        let ids_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(
+                ids,
+                &[self.meta.batch, self.meta.n_mux, self.meta.input_len],
+                None,
+            )
+            .map_err(|e| anyhow!("uploading ids: {e:?}"))?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.push(&ids_buf);
+        let outs = self
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.meta.name))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching output: {e:?}"))?;
+        // lowered with return_tuple=True -> unwrap the 1-tuple
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let v = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        if v.len() != self.meta.output_len() {
+            bail!(
+                "{}: output length {} != expected {}",
+                self.meta.name,
+                v.len(),
+                self.meta.output_len()
+            );
+        }
+        Ok(v)
+    }
+
+    /// Run the manifest's parity vector and verify bit-level agreement
+    /// with the python compile path (within tol).
+    pub fn verify_parity(&self) -> Result<()> {
+        let parity = self
+            .meta
+            .parity
+            .as_ref()
+            .ok_or_else(|| anyhow!("{} has no parity blob", self.meta.name))?;
+        let out = self.run_ids(&parity.ids)?;
+        for (&i, &want) in parity.check_indices.iter().zip(&parity.check_values) {
+            let got = *out
+                .get(i)
+                .ok_or_else(|| anyhow!("parity index {i} out of range {}", out.len()))?;
+            if (got - want).abs() > parity.tol {
+                bail!(
+                    "{}: parity mismatch at flat index {i}: got {got}, want {want} (tol {})",
+                    self.meta.name,
+                    parity.tol
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Rough device-memory footprint of this model (weights + one io set),
+    /// used by the fig12 memory bench.
+    pub fn approx_device_bytes(&self) -> usize {
+        self.weight_bytes + self.meta.ids_len() * 4 + self.meta.output_len() * 4
+    }
+}
+
+/// Helper: find artifacts dir relative to the repo root (cwd or parents).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| Path::new(".").to_path_buf());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return Path::new("artifacts").to_path_buf();
+        }
+    }
+}

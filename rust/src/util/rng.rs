@@ -1,0 +1,197 @@
+//! Deterministic PRNG (rand-crate stand-in).
+//!
+//! SplitMix64 core — statistically solid for workload generation and
+//! property tests, trivially seedable, no_std-simple. Includes the
+//! samplers the workload generators need (uniform, range, normal via
+//! Box-Muller, zipf via rejection-inversion, exponential for Poisson
+//! arrivals, shuffle).
+
+#[derive(Debug, Clone)]
+struct ZipfCache {
+    n: usize,
+    a: f64,
+    cdf: Vec<f64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    zipf_cache: Option<ZipfCache>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // avoid the all-zero fixed point and decorrelate small seeds
+        Rng { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15), zipf_cache: None }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        // SplitMix64 (Steele, Lea, Flood 2014)
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "below(0)");
+        // Lemire's multiply-shift; bias negligible for our n << 2^64
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform integer in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo);
+        lo + self.below(hi - lo)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Exponential with rate `lambda` (Poisson inter-arrival times).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        -self.f64().max(1e-300).ln() / lambda
+    }
+
+    /// Zipf-distributed integer in [0, n) with exponent `a` (~token and
+    /// request-popularity distributions). Inverse-CDF over a cached
+    /// harmonic table — the (n, a) pair is cached so repeated sampling
+    /// from the same distribution (the common case in workload
+    /// generators) is a binary search.
+    pub fn zipf(&mut self, n: usize, a: f64) -> usize {
+        debug_assert!(n > 0 && a > 0.0);
+        if self
+            .zipf_cache
+            .as_ref()
+            .map(|c| c.n != n || c.a != a)
+            .unwrap_or(true)
+        {
+            let mut cdf = Vec::with_capacity(n);
+            let mut acc = 0.0f64;
+            for k in 1..=n {
+                acc += (k as f64).powf(-a);
+                cdf.push(acc);
+            }
+            let total = acc;
+            for v in &mut cdf {
+                *v /= total;
+            }
+            self.zipf_cache = Some(ZipfCache { n, a, cdf });
+        }
+        let u = self.f64();
+        let cdf = &self.zipf_cache.as_ref().unwrap().cdf;
+        cdf.partition_point(|&c| c < u).min(n - 1)
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.below(i + 1);
+            v.swap(i, j);
+        }
+    }
+
+    /// Split off an independent stream (for per-thread rngs).
+    pub fn split(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(43);
+        assert_ne!(Rng::new(42).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(2);
+        let mut seen = [false; 7];
+        for _ in 0..1_000 {
+            seen[r.below(7)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn uniform_mean_sane() {
+        let mut r = Rng::new(3);
+        let mean: f64 = (0..100_000).map(|_| r.f64()).sum::<f64>() / 100_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments_sane() {
+        let mut r = Rng::new(4);
+        let xs: Vec<f64> = (0..100_000).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn zipf_is_monotone_decreasing() {
+        let mut r = Rng::new(5);
+        let mut counts = [0usize; 16];
+        for _ in 0..200_000 {
+            counts[r.zipf(16, 1.3)] += 1;
+        }
+        assert!(counts[0] > counts[3] && counts[3] > counts[10]);
+    }
+
+    #[test]
+    fn exponential_mean_matches_rate() {
+        let mut r = Rng::new(6);
+        let mean: f64 = (0..100_000).map(|_| r.exponential(2.0)).sum::<f64>() / 100_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(7);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>()); // astronomically unlikely
+    }
+}

@@ -1,0 +1,397 @@
+//! Thread pool + bounded MPMC channel (tokio stand-in).
+//!
+//! The coordinator's event loop is thread-based: worker threads pull mux
+//! groups from a bounded queue (backpressure = blocking senders), and
+//! request completion is signalled through a one-shot cell. Everything is
+//! std-only: `Mutex` + `Condvar`.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+// ---------------------------------------------------------------------------
+// bounded MPMC channel
+// ---------------------------------------------------------------------------
+
+struct ChanInner<T> {
+    q: Mutex<ChanState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+struct ChanState<T> {
+    buf: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded multi-producer multi-consumer channel.
+pub struct Channel<T> {
+    inner: Arc<ChanInner<T>>,
+}
+
+impl<T> Clone for Channel<T> {
+    fn clone(&self) -> Self {
+        Channel { inner: self.inner.clone() }
+    }
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum SendError {
+    Closed,
+}
+
+impl<T> Channel<T> {
+    pub fn bounded(cap: usize) -> Self {
+        assert!(cap > 0);
+        Channel {
+            inner: Arc::new(ChanInner {
+                q: Mutex::new(ChanState { buf: VecDeque::new(), closed: false }),
+                not_empty: Condvar::new(),
+                not_full: Condvar::new(),
+                cap,
+            }),
+        }
+    }
+
+    /// Blocking send; returns Err if the channel is closed (backpressure:
+    /// blocks while full).
+    pub fn send(&self, item: T) -> Result<(), SendError> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(SendError::Closed);
+            }
+            if st.buf.len() < self.inner.cap {
+                st.buf.push_back(item);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking send attempt; Err(item) if full/closed.
+    pub fn try_send(&self, item: T) -> Result<(), T> {
+        let mut st = self.inner.q.lock().unwrap();
+        if st.closed || st.buf.len() >= self.inner.cap {
+            return Err(item);
+        }
+        st.buf.push_back(item);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking receive; None when the channel is closed *and* drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if let Some(item) = st.buf.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Receive with a deadline; None on timeout or closed+drained.
+    pub fn recv_timeout(&self, dur: std::time::Duration) -> Option<T> {
+        let deadline = std::time::Instant::now() + dur;
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if let Some(item) = st.buf.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g, res) = self.inner.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = g;
+            if res.timed_out() && st.buf.is_empty() {
+                return None;
+            }
+        }
+    }
+
+    pub fn try_recv(&self) -> Option<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        let item = st.buf.pop_front();
+        if item.is_some() {
+            self.inner.not_full.notify_one();
+        }
+        item
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.q.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.q.lock().unwrap().closed
+    }
+
+    /// Close: senders fail, receivers drain then get None.
+    pub fn close(&self) {
+        let mut st = self.inner.q.lock().unwrap();
+        st.closed = true;
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// one-shot completion cell (request -> response handoff)
+// ---------------------------------------------------------------------------
+
+struct OnceInner<T> {
+    slot: Mutex<Option<T>>,
+    cv: Condvar,
+}
+
+/// One-shot value cell: the scheduler fulfills it, the caller waits on it.
+pub struct OnceCellSync<T> {
+    inner: Arc<OnceInner<T>>,
+}
+
+impl<T> Clone for OnceCellSync<T> {
+    fn clone(&self) -> Self {
+        OnceCellSync { inner: self.inner.clone() }
+    }
+}
+
+impl<T> Default for OnceCellSync<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> OnceCellSync<T> {
+    pub fn new() -> Self {
+        OnceCellSync {
+            inner: Arc::new(OnceInner { slot: Mutex::new(None), cv: Condvar::new() }),
+        }
+    }
+
+    pub fn set(&self, v: T) {
+        let mut s = self.inner.slot.lock().unwrap();
+        debug_assert!(s.is_none(), "OnceCellSync set twice");
+        *s = Some(v);
+        self.inner.cv.notify_all();
+    }
+
+    pub fn wait(&self) -> T {
+        let mut s = self.inner.slot.lock().unwrap();
+        loop {
+            if let Some(v) = s.take() {
+                return v;
+            }
+            s = self.inner.cv.wait(s).unwrap();
+        }
+    }
+
+    pub fn wait_timeout(&self, dur: std::time::Duration) -> Option<T> {
+        let deadline = std::time::Instant::now() + dur;
+        let mut s = self.inner.slot.lock().unwrap();
+        loop {
+            if let Some(v) = s.take() {
+                return Some(v);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            s = self.inner.cv.wait_timeout(s, deadline - now).unwrap().0;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// thread pool
+// ---------------------------------------------------------------------------
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool. Jobs are closures; `join` waits for queue drain
+/// and worker exit.
+pub struct ThreadPool {
+    chan: Channel<Job>,
+    workers: Vec<JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl ThreadPool {
+    pub fn new(n_workers: usize, queue_cap: usize) -> Self {
+        let chan: Channel<Job> = Channel::bounded(queue_cap.max(1));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let workers = (0..n_workers.max(1))
+            .map(|i| {
+                let c = chan.clone();
+                std::thread::Builder::new()
+                    .name(format!("datamux-worker-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = c.recv() {
+                            job();
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { chan, workers, shutdown }
+    }
+
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.chan.send(Box::new(f)).expect("pool closed");
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.chan.len()
+    }
+
+    /// Close the queue and wait for all workers to finish outstanding jobs.
+    pub fn join(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.chan.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.chan.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::time::Duration;
+
+    #[test]
+    fn channel_fifo_order_single_consumer() {
+        let c = Channel::bounded(16);
+        for i in 0..10 {
+            c.send(i).unwrap();
+        }
+        for i in 0..10 {
+            assert_eq!(c.recv(), Some(i));
+        }
+    }
+
+    #[test]
+    fn channel_backpressure_blocks_then_releases() {
+        let c = Channel::bounded(1);
+        c.send(1u32).unwrap();
+        assert!(c.try_send(2).is_err());
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || c2.send(2).unwrap());
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(c.recv(), Some(1));
+        h.join().unwrap();
+        assert_eq!(c.recv(), Some(2));
+    }
+
+    #[test]
+    fn channel_close_drains_then_none() {
+        let c = Channel::bounded(8);
+        c.send(1).unwrap();
+        c.close();
+        assert_eq!(c.recv(), Some(1));
+        assert_eq!(c.recv(), None);
+        assert_eq!(c.send(2), Err(SendError::Closed));
+    }
+
+    #[test]
+    fn channel_recv_timeout_expires() {
+        let c: Channel<u32> = Channel::bounded(1);
+        let t0 = std::time::Instant::now();
+        assert_eq!(c.recv_timeout(Duration::from_millis(30)), None);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn mpmc_no_loss_no_duplication() {
+        let c = Channel::bounded(4);
+        let n_items = 1000usize;
+        let seen = Arc::new(Mutex::new(vec![0u8; n_items]));
+        let mut consumers = Vec::new();
+        for _ in 0..3 {
+            let c = c.clone();
+            let seen = seen.clone();
+            consumers.push(std::thread::spawn(move || {
+                while let Some(i) = c.recv() {
+                    let mut s = seen.lock().unwrap();
+                    s[i as usize] += 1;
+                }
+            }));
+        }
+        let mut producers = Vec::new();
+        for p in 0..2 {
+            let c = c.clone();
+            producers.push(std::thread::spawn(move || {
+                for i in (p..n_items).step_by(2) {
+                    c.send(i).unwrap();
+                }
+            }));
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        c.close();
+        for h in consumers {
+            h.join().unwrap();
+        }
+        let s = seen.lock().unwrap();
+        assert!(s.iter().all(|&x| x == 1), "every item exactly once");
+    }
+
+    #[test]
+    fn oncecell_handoff() {
+        let cell = OnceCellSync::new();
+        let c2 = cell.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            c2.set(41u32);
+        });
+        assert_eq!(cell.wait(), 41);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn oncecell_timeout() {
+        let cell: OnceCellSync<u32> = OnceCellSync::new();
+        assert_eq!(cell.wait_timeout(Duration::from_millis(20)), None);
+    }
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4, 8);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+}

@@ -1,0 +1,317 @@
+//! Workload generation and load drivers.
+//!
+//! Two sources:
+//!   * `EvalSet` — labelled samples exported by `python/compile/aot.py`
+//!     (same generator that produced the training data), used by the
+//!     accuracy-through-rust examples.
+//!   * `RandomWorkload` — zipfian token text, used by the throughput
+//!     benches where labels don't matter.
+//!
+//! Drivers:
+//!   * `closed_loop` — k concurrent clients, each submit-wait-repeat
+//!     (the paper's Fig 4c throughput measurement shape).
+//!   * `open_loop`  — Poisson arrivals at a target rate (latency-under-
+//!     load bench); unsubmittable requests count as rejected.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::MuxCoordinator;
+use crate::tokenizer::Tokenizer;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// labelled eval sets (exported by aot.py)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct EvalSample {
+    /// framed token text (with [CLS]/[SEP], no padding)
+    pub text: String,
+    /// sentence label, or first token tag for token tasks
+    pub label: i64,
+    /// per-position tags for token-level tasks (empty otherwise)
+    pub tags: Vec<i64>,
+}
+
+#[derive(Debug)]
+pub struct EvalSet {
+    pub task: String,
+    pub seq_len: usize,
+    pub n_classes: usize,
+    pub token_level: bool,
+    pub samples: Vec<EvalSample>,
+}
+
+impl EvalSet {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("eval set: {e}"))?;
+        let samples = root
+            .get("samples")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("eval set missing samples"))?
+            .iter()
+            .map(|s| -> Result<EvalSample> {
+                Ok(EvalSample {
+                    text: s
+                        .get("text")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("sample missing text"))?
+                        .to_string(),
+                    label: s.get("label").and_then(Json::as_i64).unwrap_or(-1),
+                    tags: s
+                        .get("tags")
+                        .and_then(Json::as_arr)
+                        .map(|a| a.iter().filter_map(Json::as_i64).collect())
+                        .unwrap_or_default(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(EvalSet {
+            task: root
+                .get("task")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            seq_len: root.get("seq_len").and_then(Json::as_usize).unwrap_or(16),
+            n_classes: root.get("n_classes").and_then(Json::as_usize).unwrap_or(2),
+            token_level: root.get("token_level").and_then(Json::as_bool).unwrap_or(false),
+            samples,
+        })
+    }
+
+    /// Pre-tokenize all samples into framed rows for a given seq_len.
+    pub fn framed_rows(&self, tok: &Tokenizer, seq_len: usize) -> Result<Vec<Vec<i32>>> {
+        self.samples
+            .iter()
+            .map(|s| {
+                let mut row = tok.encode(&s.text).map_err(|e| anyhow!("tokenize: {e}"))?;
+                row.truncate(seq_len);
+                row.resize(seq_len, tok.vocab.pad);
+                Ok(row)
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// random workload (throughput benches)
+// ---------------------------------------------------------------------------
+
+pub struct RandomWorkload {
+    rng: Rng,
+    pub n_content: usize,
+    pub body_len: usize,
+}
+
+impl RandomWorkload {
+    pub fn new(seed: u64, n_content: usize, body_len: usize) -> Self {
+        RandomWorkload { rng: Rng::new(seed), n_content, body_len }
+    }
+
+    /// One framed content row (ids), zipfian tokens (wikitext-ish).
+    pub fn framed_row(&mut self, tok: &Tokenizer, seq_len: usize) -> Vec<i32> {
+        let mut row = Vec::with_capacity(seq_len);
+        row.push(tok.vocab.cls);
+        for _ in 0..self.body_len.min(seq_len - 2) {
+            let k = self.rng.zipf(self.n_content, 1.3);
+            row.push(tok.vocab.content_base + k as i32);
+        }
+        row.push(tok.vocab.sep);
+        row.truncate(seq_len);
+        row.resize(seq_len, tok.vocab.pad);
+        row
+    }
+
+    /// Token-text form of a row (exercises the tokenize path).
+    pub fn text(&mut self) -> String {
+        let mut words = Vec::with_capacity(self.body_len);
+        for _ in 0..self.body_len {
+            words.push(format!("t{}", self.rng.zipf(self.n_content, 1.3)));
+        }
+        words.join(" ")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// load drivers
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub submitted: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub wall: Duration,
+    pub throughput_rps: f64,
+}
+
+/// Closed-loop driver: `clients` threads, each submitting `per_client`
+/// requests back-to-back (submit -> wait -> next). Rows are cycled from
+/// `rows`. This is the Fig 4c measurement shape: offered load always
+/// saturates the coordinator.
+pub fn closed_loop(
+    coord: &Arc<MuxCoordinator>,
+    rows: &Arc<Vec<Vec<i32>>>,
+    clients: usize,
+    per_client: usize,
+) -> LoadReport {
+    let completed = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let coord = coord.clone();
+        let rows = rows.clone();
+        let completed = completed.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..per_client {
+                let row = rows[(c * per_client + i) % rows.len()].clone();
+                match coord.submit_framed(row) {
+                    Ok(h) => {
+                        h.wait();
+                        completed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(_) => return,
+                }
+            }
+        }));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let wall = t0.elapsed();
+    let done = completed.load(Ordering::Relaxed);
+    LoadReport {
+        submitted: clients * per_client,
+        completed: done,
+        rejected: clients * per_client - done,
+        wall,
+        throughput_rps: done as f64 / wall.as_secs_f64(),
+    }
+}
+
+/// Offline batch pass (the paper's Fig 4c measurement shape: a full
+/// dataset pass, throughput = items / wall). All requests are enqueued up
+/// front so the batcher always forms *full* mux groups; the coordinator's
+/// queue must be sized >= total.
+pub fn batch_pass(
+    coord: &Arc<MuxCoordinator>,
+    rows: &[Vec<i32>],
+    total: usize,
+) -> LoadReport {
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(total);
+    for i in 0..total {
+        match coord.submit_framed(rows[i % rows.len()].clone()) {
+            Ok(h) => handles.push(h),
+            Err(_) => break,
+        }
+    }
+    for h in &handles {
+        h.wait();
+    }
+    let wall = t0.elapsed();
+    LoadReport {
+        submitted: total,
+        completed: handles.len(),
+        rejected: total - handles.len(),
+        wall,
+        throughput_rps: handles.len() as f64 / wall.as_secs_f64(),
+    }
+}
+
+/// Open-loop driver: Poisson arrivals at `rate_rps` for `duration`.
+/// Returns when all accepted requests have completed.
+pub fn open_loop(
+    coord: &Arc<MuxCoordinator>,
+    rows: &Arc<Vec<Vec<i32>>>,
+    rate_rps: f64,
+    duration: Duration,
+    seed: u64,
+) -> LoadReport {
+    let mut rng = Rng::new(seed);
+    let t0 = Instant::now();
+    let mut submitted = 0usize;
+    let mut rejected = 0usize;
+    let mut handles = Vec::new();
+    let mut next_at = Duration::ZERO;
+    while next_at < duration {
+        let now = t0.elapsed();
+        if now < next_at {
+            std::thread::sleep(next_at - now);
+        }
+        let row = rows[submitted % rows.len()].clone();
+        match coord.try_submit_framed(row) {
+            Ok(h) => handles.push(h),
+            Err(_) => rejected += 1,
+        }
+        submitted += 1;
+        next_at += Duration::from_secs_f64(rng.exponential(rate_rps));
+    }
+    for h in &handles {
+        h.wait();
+    }
+    let wall = t0.elapsed();
+    LoadReport {
+        submitted,
+        completed: handles.len(),
+        rejected,
+        wall,
+        throughput_rps: handles.len() as f64 / wall.as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::{default_vocab, Tokenizer};
+
+    #[test]
+    fn random_rows_are_framed() {
+        let tok = Tokenizer::new(default_vocab(), 300);
+        let mut w = RandomWorkload::new(7, 256, 10);
+        for _ in 0..50 {
+            let row = w.framed_row(&tok, 16);
+            assert_eq!(row.len(), 16);
+            assert_eq!(row[0], tok.vocab.cls);
+            assert!(row.iter().all(|&t| t < 300));
+        }
+    }
+
+    #[test]
+    fn random_text_tokenizes() {
+        let tok = Tokenizer::new(default_vocab(), 300);
+        let mut w = RandomWorkload::new(8, 256, 12);
+        let text = w.text();
+        assert!(tok.encode(&text).is_ok());
+    }
+
+    #[test]
+    fn eval_set_parses() {
+        let json = r#"{
+            "task": "mnli", "seq_len": 16, "n_classes": 3, "token_level": false,
+            "samples": [
+                {"text": "[CLS] t1 [SEP] t2 [SEP]", "label": 2},
+                {"text": "[CLS] t3 [SEP]", "label": 0, "tags": [0, 1]}
+            ]
+        }"#;
+        let dir = std::env::temp_dir().join("datamux_test_eval.json");
+        std::fs::write(&dir, json).unwrap();
+        let es = EvalSet::load(&dir).unwrap();
+        assert_eq!(es.task, "mnli");
+        assert_eq!(es.samples.len(), 2);
+        assert_eq!(es.samples[0].label, 2);
+        assert_eq!(es.samples[1].tags, vec![0, 1]);
+        let tok = Tokenizer::new(default_vocab(), 300);
+        let rows = es.framed_rows(&tok, 16).unwrap();
+        assert_eq!(rows[0].len(), 16);
+        assert_eq!(rows[0][0], tok.vocab.cls);
+    }
+}

@@ -1,0 +1,175 @@
+//! End-to-end coordinator integration over real AOT artifacts.
+//!
+//! Uses whatever timing artifacts `make artifacts` produced (the quick
+//! subset is enough). Covers: concurrent submission, completion of every
+//! request, slot accounting, deadline behaviour with partial groups,
+//! graceful shutdown, and the TCP server protocol.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use datamux::coordinator::server::{handle_line, Server, ServerConfig};
+use datamux::coordinator::{CoordinatorConfig, MuxCoordinator, SlotPolicy};
+use datamux::runtime::{default_artifacts_dir, ArtifactManifest, ModelRuntime};
+use datamux::workload::{closed_loop, RandomWorkload};
+
+fn any_mux_artifact(manifest: &ArtifactManifest) -> &datamux::runtime::ArtifactMeta {
+    manifest
+        .artifacts
+        .iter()
+        .filter(|a| !a.trained && a.n_mux > 1)
+        .min_by_key(|a| (a.d_model, a.n_mux))
+        .expect("need at least one N>1 timing artifact (run `make artifacts`)")
+}
+
+#[test]
+fn serves_concurrent_requests_without_loss() {
+    let manifest = ArtifactManifest::load(default_artifacts_dir()).unwrap();
+    let meta = any_mux_artifact(&manifest);
+    let rt = ModelRuntime::cpu().unwrap();
+    let model = rt.load(meta).unwrap();
+    let n_classes = meta.n_classes;
+    let coord = Arc::new(
+        MuxCoordinator::start(
+            model,
+            CoordinatorConfig {
+                max_wait: Duration::from_millis(2),
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    );
+
+    let mut w = RandomWorkload::new(42, 200, meta.seq_len - 4);
+    let rows: Vec<Vec<i32>> =
+        (0..64).map(|_| w.framed_row(&coord.tokenizer, meta.seq_len)).collect();
+    let rows = Arc::new(rows);
+    let report = closed_loop(&coord, &rows, 4, 32);
+    assert_eq!(report.completed, 4 * 32, "every request completed");
+
+    let c = coord.stats.counters.snapshot();
+    assert_eq!(c.submitted, 128);
+    assert_eq!(c.completed, 128);
+    assert!(c.groups_executed > 0);
+    // sanity on response contents via one more request
+    let h = coord.submit_framed(rows[0].clone()).unwrap();
+    let r = h.wait();
+    assert_eq!(r.logits.len(), n_classes);
+    assert!(r.slot < meta.n_mux);
+    assert!(r.logits.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn partial_group_ships_at_deadline() {
+    let manifest = ArtifactManifest::load(default_artifacts_dir()).unwrap();
+    let meta = any_mux_artifact(&manifest);
+    let rt = ModelRuntime::cpu().unwrap();
+    let model = rt.load(meta).unwrap();
+    let coord = MuxCoordinator::start(
+        model,
+        CoordinatorConfig { max_wait: Duration::from_millis(10), ..Default::default() },
+    )
+    .unwrap();
+    // one lone request must still be answered (padded group)
+    let mut w = RandomWorkload::new(7, 200, meta.seq_len - 4);
+    let row = w.framed_row(&coord.tokenizer, meta.seq_len);
+    let t0 = std::time::Instant::now();
+    let h = coord.submit_framed(row).unwrap();
+    let r = h.wait_timeout(Duration::from_secs(30)).expect("deadline flush");
+    assert!(t0.elapsed() >= Duration::from_millis(9), "waited for peers first");
+    assert_eq!(r.slot, 0, "Fill policy: lone request sits in slot 0");
+    let padded = coord.stats.counters.snapshot().slots_padded;
+    assert_eq!(padded as usize, meta.batch * meta.n_mux - 1);
+}
+
+#[test]
+fn rotate_policy_spreads_slots() {
+    let manifest = ArtifactManifest::load(default_artifacts_dir()).unwrap();
+    let meta = any_mux_artifact(&manifest);
+    let rt = ModelRuntime::cpu().unwrap();
+    let model = rt.load(meta).unwrap();
+    let coord = Arc::new(
+        MuxCoordinator::start(
+            model,
+            CoordinatorConfig {
+                max_wait: Duration::from_millis(1),
+                slot_policy: SlotPolicy::RotateOffset,
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    );
+    let mut w = RandomWorkload::new(9, 200, meta.seq_len - 4);
+    let mut slots_seen = std::collections::HashSet::new();
+    for _ in 0..(meta.n_mux * 4) {
+        let row = w.framed_row(&coord.tokenizer, meta.seq_len);
+        let h = coord.submit_framed(row).unwrap();
+        slots_seen.insert(h.wait().slot);
+    }
+    // sequential lone requests under RotateOffset must not all pin slot 0
+    assert!(slots_seen.len() > 1, "rotation should spread slots: {slots_seen:?}");
+}
+
+#[test]
+fn shutdown_completes_inflight_requests() {
+    let manifest = ArtifactManifest::load(default_artifacts_dir()).unwrap();
+    let meta = any_mux_artifact(&manifest);
+    let rt = ModelRuntime::cpu().unwrap();
+    let model = rt.load(meta).unwrap();
+    let coord = MuxCoordinator::start(
+        model,
+        CoordinatorConfig { max_wait: Duration::from_millis(50), ..Default::default() },
+    )
+    .unwrap();
+    let mut w = RandomWorkload::new(11, 200, meta.seq_len - 4);
+    let handles: Vec<_> = (0..5)
+        .map(|_| {
+            let row = w.framed_row(&coord.tokenizer, meta.seq_len);
+            coord.submit_framed(row).unwrap()
+        })
+        .collect();
+    let batches = coord.shutdown(); // must flush the waiting partial batch
+    assert!(batches >= 1);
+    for h in handles {
+        assert!(h.wait_timeout(Duration::from_secs(5)).is_some());
+    }
+}
+
+#[test]
+fn tcp_server_line_protocol() {
+    use std::io::{BufRead, BufReader, Write};
+    let manifest = ArtifactManifest::load(default_artifacts_dir()).unwrap();
+    let meta = any_mux_artifact(&manifest);
+    let rt = ModelRuntime::cpu().unwrap();
+    let model = rt.load(meta).unwrap();
+    let coord = Arc::new(
+        MuxCoordinator::start(
+            model,
+            CoordinatorConfig { max_wait: Duration::from_millis(1), ..Default::default() },
+        )
+        .unwrap(),
+    );
+
+    // protocol unit (no socket)
+    let reply = handle_line("CLS t1 t2 t3", &coord).unwrap();
+    assert!(reply.starts_with("OK "), "{reply}");
+    let reply = handle_line("BOGUS x", &coord).unwrap();
+    assert!(reply.starts_with("ERR"), "{reply}");
+    let reply = handle_line("CLS hello world", &coord).unwrap();
+    assert!(reply.starts_with("ERR"), "unknown words must ERR: {reply}");
+    let stats = handle_line("STATS", &coord).unwrap();
+    assert!(stats.contains("submitted="), "{stats}");
+
+    // over a real socket
+    let server = Server::start(
+        coord.clone(),
+        ServerConfig { addr: "127.0.0.1:0".into(), max_connections: 4 },
+    )
+    .unwrap();
+    let mut stream = std::net::TcpStream::connect(server.local_addr).unwrap();
+    stream.write_all(b"CLS t4 t5\nQUIT\n").unwrap();
+    let mut line = String::new();
+    BufReader::new(stream.try_clone().unwrap()).read_line(&mut line).unwrap();
+    assert!(line.starts_with("OK "), "{line}");
+    server.stop();
+}

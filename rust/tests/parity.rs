@@ -1,0 +1,33 @@
+//! Integration: every artifact in the manifest must load, execute, and
+//! bit-reproduce the python compile path's parity vectors.
+use datamux::runtime::{ArtifactManifest, ModelRuntime, default_artifacts_dir};
+
+#[test]
+fn all_artifacts_load_and_match_python() {
+    let manifest = ArtifactManifest::load(default_artifacts_dir()).expect("manifest");
+    assert!(!manifest.artifacts.is_empty());
+    let rt = ModelRuntime::cpu().expect("pjrt client");
+    for meta in &manifest.artifacts {
+        let model = rt.load(meta).expect("load");
+        if meta.parity.is_some() {
+            model.verify_parity().unwrap_or_else(|e| panic!("{e}"));
+        } else {
+            // still must execute with zeros and produce the right shape
+            let ids = vec![0i32; meta.ids_len()];
+            let out = model.run_ids(&ids).expect("run");
+            assert_eq!(out.len(), meta.output_len());
+        }
+    }
+}
+
+#[test]
+fn repeated_execution_is_deterministic() {
+    let manifest = ArtifactManifest::load(default_artifacts_dir()).expect("manifest");
+    let meta = &manifest.artifacts[0];
+    let rt = ModelRuntime::cpu().expect("pjrt client");
+    let model = rt.load(meta).expect("load");
+    let ids: Vec<i32> = (0..meta.ids_len() as i32).map(|i| i % 40).collect();
+    let a = model.run_ids(&ids).expect("run a");
+    let b = model.run_ids(&ids).expect("run b");
+    assert_eq!(a, b, "weights buffers must be reusable across calls");
+}
