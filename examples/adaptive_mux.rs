@@ -4,7 +4,9 @@
 //! (low latency, little padding waste), bursts go to large N (throughput).
 //!
 //! The demo drives three phases (idle → burst → idle) and prints which
-//! lane served each phase plus the latency cost.
+//! lane served each phase plus the latency cost. The router implements
+//! the same `Submit` trait as a single coordinator, so it is also
+//! network-servable: `datamux --cmd serve --adaptive true`.
 //!
 //! ```sh
 //! cargo run --release --example adaptive_mux
@@ -13,7 +15,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use datamux::coordinator::{CoordinatorConfig, MuxCoordinator, MuxRouter};
+use datamux::coordinator::{EngineBuilder, InferenceRequest, MuxRouter};
 use datamux::runtime::{default_artifacts_dir, ArtifactManifest, ModelRuntime};
 use datamux::util::bench::Table;
 use datamux::util::cli::Args;
@@ -54,7 +56,6 @@ fn main() -> anyhow::Result<()> {
     };
 
     let rt = ModelRuntime::cpu()?;
-    let mut lanes = Vec::new();
     let mut ns: Vec<usize> = manifest
         .artifacts
         .iter()
@@ -65,6 +66,7 @@ fn main() -> anyhow::Result<()> {
         .collect();
     ns.sort_unstable();
     println!("profile {profile}: lanes at N = {ns:?}");
+    let mut models = Vec::new();
     for n in &ns {
         let meta = manifest
             .artifacts
@@ -72,15 +74,12 @@ fn main() -> anyhow::Result<()> {
             .filter(|a| !a.trained && a.profile == profile && a.n_mux == *n)
             .min_by_key(|a| a.batch)
             .unwrap();
-        let model = rt.load(meta)?;
-        lanes.push(MuxCoordinator::start(
-            model,
-            CoordinatorConfig { max_wait: Duration::from_millis(3), ..Default::default() },
-        )?);
+        models.push(rt.load(meta)?);
     }
-    let seq_len = lanes[0].seq_len;
-    let tok = lanes[0].tokenizer.clone();
-    let router = Arc::new(MuxRouter::new(lanes, 20_000.0));
+    let builder = EngineBuilder::new().max_wait_ms(3).exec_time_us(20_000.0);
+    let router: Arc<MuxRouter> = Arc::new(builder.build_router(models)?);
+    let seq_len = router.lanes[0].seq_len;
+    let tok = router.lanes[0].tokenizer.clone();
 
     let mut w = RandomWorkload::new(3, 200, seq_len - 4);
     let rows: Vec<Vec<i32>> = (0..256).map(|_| w.framed_row(&tok, seq_len)).collect();
@@ -94,7 +93,8 @@ fn main() -> anyhow::Result<()> {
         let mut handles = Vec::new();
         let t0 = std::time::Instant::now();
         for i in 0..per_phase {
-            let (n, h) = router.submit_framed(rows[i % rows.len()].clone())?;
+            let req = InferenceRequest::classify_framed(rows[i % rows.len()].clone());
+            let (n, h) = router.submit_routed(req)?;
             *lane_hits.entry(n).or_default() += 1;
             handles.push(h);
             let jitter = (rng.f64() * gap_us as f64) as u64;
@@ -102,7 +102,7 @@ fn main() -> anyhow::Result<()> {
         }
         let mut total_lat = Duration::ZERO;
         for h in &handles {
-            total_lat += h.wait().latency;
+            total_lat += h.wait()?.latency;
         }
         let rate = per_phase as f64 / t0.elapsed().as_secs_f64();
         let mode = lane_hits.iter().max_by_key(|(_, c)| **c).map(|(n, _)| *n).unwrap_or(0);

@@ -11,7 +11,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use datamux::coordinator::{CoordinatorConfig, MuxCoordinator};
+use datamux::coordinator::{EngineBuilder, Submit};
 use datamux::runtime::{default_artifacts_dir, ArtifactManifest, ModelRuntime};
 use datamux::util::bench::Table;
 use datamux::util::cli::Args;
@@ -41,12 +41,10 @@ fn main() -> anyhow::Result<()> {
                                &["N", "token acc", "throughput r/s"]);
     let mut rows_out = Vec::new();
 
+    let builder = EngineBuilder::new().max_wait(Duration::from_millis(4));
     for meta in metas {
         let model = rt.load(meta)?;
-        let coord = Arc::new(MuxCoordinator::start(
-            model,
-            CoordinatorConfig { max_wait: Duration::from_millis(4), ..Default::default() },
-        )?);
+        let coord = Arc::new(builder.build(model)?);
         let framed = eval.framed_rows(&coord.tokenizer, coord.seq_len)?;
         let vocab = coord.tokenizer.vocab.clone();
 
@@ -59,7 +57,7 @@ fn main() -> anyhow::Result<()> {
         let mut total = 0usize;
         let mut shown = 0usize;
         for (k, h) in handles {
-            let r = h.wait();
+            let r = h.wait()?;
             let preds = r.pred_tokens();
             let sample = &eval.samples[k];
             let row = &framed[k];

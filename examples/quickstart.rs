@@ -1,5 +1,6 @@
 //! Quickstart: load a DataMUX artifact and serve a few multiplexed
-//! requests. This is the README copy-paste example.
+//! requests through the unified `Submit` API. This is the README
+//! copy-paste example.
 //!
 //! ```sh
 //! make artifacts            # once (python, build path)
@@ -7,9 +8,8 @@
 //! ```
 
 use std::sync::Arc;
-use std::time::Duration;
 
-use datamux::coordinator::{CoordinatorConfig, MuxCoordinator};
+use datamux::coordinator::{EngineBuilder, InferenceRequest, Submit};
 use datamux::runtime::{default_artifacts_dir, ArtifactManifest, ModelRuntime};
 
 fn main() -> anyhow::Result<()> {
@@ -37,14 +37,11 @@ fn main() -> anyhow::Result<()> {
         model.upload_time,
     );
 
-    // 3. start the mux coordinator: requests are packed N-at-a-time into a
+    // 3. build the mux engine: requests are packed N-at-a-time into a
     //    single model execution and demultiplexed back (paper Fig 1)
-    let coord = Arc::new(MuxCoordinator::start(
-        model,
-        CoordinatorConfig { max_wait: Duration::from_millis(5), ..Default::default() },
-    )?);
+    let coord = Arc::new(EngineBuilder::new().max_wait_ms(5).build(model)?);
 
-    // 4. submit token-text requests concurrently (vocabulary: t0..tN words,
+    // 4. submit typed requests concurrently (vocabulary: t0..tN words,
     //    '[SEP]'-joined sentence pairs — see python/compile/data.py)
     let texts = [
         "t64 t65 t120 t7",
@@ -56,11 +53,11 @@ fn main() -> anyhow::Result<()> {
     ];
     let handles: Vec<_> = texts
         .iter()
-        .map(|t| coord.submit_text(&t.split(" [SEP] ").collect::<Vec<_>>()).unwrap())
+        .map(|t| coord.submit(InferenceRequest::classify_text(*t)).unwrap())
         .collect();
 
     for (text, h) in texts.iter().zip(handles) {
-        let r = h.wait();
+        let r = h.wait()?;
         println!(
             "  {:28} -> class {}  (mux slot {}, group {}, {:?})",
             text,
@@ -72,13 +69,13 @@ fn main() -> anyhow::Result<()> {
     }
 
     // 5. serving stats: note requests-per-execution = N * batch
-    let c = coord.stats.counters.snapshot();
+    let c = coord.counters();
     println!(
         "\nstats: {} requests in {} model executions ({} group slots padded)",
         c.completed,
         c.groups_executed as usize / meta.batch.max(1),
         c.slots_padded
     );
-    println!("{}", coord.stats.e2e_latency.summary().render("e2e latency"));
+    println!("{}", coord.latency().render("e2e latency"));
     Ok(())
 }

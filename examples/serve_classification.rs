@@ -15,7 +15,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use datamux::coordinator::{CoordinatorConfig, MuxCoordinator};
+use datamux::coordinator::{EngineBuilder, Submit};
 use datamux::runtime::{default_artifacts_dir, ArtifactManifest, ModelRuntime};
 use datamux::util::bench::Table;
 use datamux::util::cli::Args;
@@ -63,15 +63,11 @@ fn main() -> anyhow::Result<()> {
     let mut results = Vec::new();
     let mut base_tput = None;
 
+    let builder = EngineBuilder::new()
+        .max_wait(Duration::from_millis(args.u64("max-wait-ms", 4)));
     for meta in metas {
         let model = rt.load(meta)?;
-        let coord = Arc::new(MuxCoordinator::start(
-            model,
-            CoordinatorConfig {
-                max_wait: Duration::from_millis(args.u64("max-wait-ms", 4)),
-                ..Default::default()
-            },
-        )?);
+        let coord = Arc::new(builder.build(model)?);
         let rows = Arc::new(eval.framed_rows(&coord.tokenizer, coord.seq_len)?);
         let labels: Vec<i64> = eval.samples.iter().map(|s| s.label).collect();
 
@@ -94,7 +90,10 @@ fn main() -> anyhow::Result<()> {
                         Ok(h) => h,
                         Err(_) => return,
                     };
-                    let r = h.wait();
+                    let r = match h.wait() {
+                        Ok(r) => r,
+                        Err(_) => return,
+                    };
                     served.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                     if r.pred_class() as i64 == labels[k] {
                         hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);

@@ -1,7 +1,11 @@
-//! Network front end demo: start the TCP line-protocol server on a free
-//! port, then act as its own client fleet — each client opens a
-//! connection and sends CLS requests, so tokenization, batching, PJRT
-//! execution and demux all happen server-side.
+//! Network front end demo: start the TCP server on a free port, then act
+//! as its own client fleet — each client opens a connection and sends
+//! requests, so tokenization, batching, model execution and demux all
+//! happen server-side.
+//!
+//! Phase 1 drives the legacy v1 line protocol (`CLS ...`, lockstep);
+//! phase 2 drives wire protocol v2 (line JSON, pipelined: all requests
+//! ship before the first reply is read, correlated by client id).
 //!
 //! ```sh
 //! cargo run --release --example tcp_server -- --clients 8 --per-client 40
@@ -10,10 +14,9 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
-use datamux::coordinator::server::{Server, ServerConfig};
-use datamux::coordinator::{CoordinatorConfig, MuxCoordinator};
+use datamux::coordinator::{EngineBuilder, Submit};
 use datamux::runtime::{default_artifacts_dir, ArtifactManifest, ModelRuntime};
 use datamux::util::cli::Args;
 use datamux::util::metrics::Histogram;
@@ -35,16 +38,15 @@ fn main() -> anyhow::Result<()> {
         .expect("run `make artifacts`");
     println!("serving {} (N={})", meta.name, meta.n_mux);
     let rt = ModelRuntime::cpu()?;
-    let coord = Arc::new(MuxCoordinator::start(
-        rt.load(meta)?,
-        CoordinatorConfig { max_wait: Duration::from_millis(3), ..Default::default() },
-    )?);
-    let server = Server::start(
-        coord.clone(),
-        ServerConfig { addr: "127.0.0.1:0".into(), max_connections: clients + 2 },
-    )?;
+    let builder = EngineBuilder::new()
+        .max_wait_ms(3)
+        .addr("127.0.0.1:0")
+        .max_connections(clients + 2);
+    let coord = Arc::new(builder.build(rt.load(meta)?)?);
+    let server = builder.serve(coord.clone())?;
     println!("listening on {}", server.local_addr);
 
+    // ---- phase 1: v1 lockstep clients -----------------------------------
     let addr = server.local_addr;
     let rtt = Arc::new(Histogram::new());
     let t0 = Instant::now();
@@ -79,12 +81,50 @@ fn main() -> anyhow::Result<()> {
     }
     let wall = t0.elapsed();
     println!(
-        "{total_ok}/{} requests OK in {wall:?} ({:.1} req/s over TCP)",
+        "v1: {total_ok}/{} requests OK in {wall:?} ({:.1} req/s over TCP, lockstep)",
         clients * per_client,
         total_ok as f64 / wall.as_secs_f64()
     );
-    println!("{}", rtt.summary().render("client RTT"));
-    let c = coord.stats.counters.snapshot();
+    println!("{}", rtt.summary().render("v1 client RTT"));
+
+    // ---- phase 2: one v2 connection, fully pipelined --------------------
+    // window the in-flight count well below the server's per-connection
+    // completion buffer (4096): a client that writes everything without
+    // ever reading replies would eventually have completions shed
+    let window = 1024usize;
+    let mut w = RandomWorkload::new(7, 200, 10);
+    let n_pipelined = clients * per_client;
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let t0 = Instant::now();
+    let mut ok = 0;
+    let mut sent = 0usize;
+    let mut received = 0usize;
+    while received < n_pipelined {
+        while sent < n_pipelined && sent - received < window {
+            let line =
+                format!("{{\"id\":{sent},\"op\":\"classify\",\"text\":\"{}\"}}\n", w.text());
+            writer.write_all(line.as_bytes())?;
+            sent += 1;
+        }
+        let mut reply = String::new();
+        reader.read_line(&mut reply)?;
+        received += 1;
+        if reply.contains("\"ok\":true") {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    writer.write_all(b"{\"op\":\"quit\"}\n")?;
+    println!(
+        "v2: {ok}/{n_pipelined} requests OK in {wall:?} ({:.1} req/s over TCP, \
+         pipelined on one connection)",
+        ok as f64 / wall.as_secs_f64()
+    );
+
+    let c = coord.counters();
     println!(
         "server: {} executions, {} slots padded",
         c.groups_executed as usize / meta.batch.max(1),

@@ -13,7 +13,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use datamux::coordinator::{CoordinatorConfig, MuxCoordinator, SlotPolicy};
+use datamux::coordinator::{CoordinatorConfig, MuxCoordinator, SlotPolicy, Submit};
 use datamux::runtime::{default_artifacts_dir, ArtifactManifest, ModelRuntime};
 use datamux::util::bench::{write_results, Table};
 use datamux::util::json::{arr, num, obj, s};
@@ -92,7 +92,7 @@ fn main() -> anyhow::Result<()> {
         let t0 = std::time::Instant::now();
         for i in 0..48 {
             let h = coord.submit_framed(rows[i % rows.len()].clone())?;
-            slots.insert(h.wait().slot);
+            slots.insert(h.wait()?.slot);
         }
         let tput = 48.0 / t0.elapsed().as_secs_f64();
         t2.row(&[name.to_string(), format!("{tput:.1}"), slots.len().to_string()]);
@@ -130,7 +130,7 @@ fn main() -> anyhow::Result<()> {
             .map(|i| coord.submit_framed(rows[i % rows.len()].clone()).unwrap())
             .collect();
         for h in handles {
-            h.wait();
+            h.wait().expect("response");
         }
     });
     let overhead = (e2e.mean.as_secs_f64() - direct.as_secs_f64()).max(0.0);

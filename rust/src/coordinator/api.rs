@@ -1,0 +1,274 @@
+//! The unified submission API: typed requests, typed errors, and the
+//! [`Submit`] trait every engine front end codes against.
+//!
+//! `Submit` is implemented by both [`super::MuxCoordinator`] (one model)
+//! and [`super::MuxRouter`] (adaptive-N over several models), so the TCP
+//! server, the workload drivers, the benches, and the examples are all
+//! generic over the backend — the paper's A3-style adaptive-N knob is
+//! servable through the exact same plumbing as a fixed-N lane.
+
+use std::time::Duration;
+
+use crate::tokenizer::Tokenizer;
+use crate::util::metrics::{CounterSnapshot, LatencySummary};
+use crate::util::threadpool::Channel;
+
+use super::request::{EngineError, RequestHandle, Response};
+
+/// What the caller wants back from the model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// sentence-level prediction (model task `cls`)
+    Classify,
+    /// per-position tag prediction (model task `token`)
+    TagTokens,
+}
+
+impl TaskKind {
+    /// Map an artifact's task string to the kind it serves.
+    pub fn from_model_task(task: &str) -> Option<TaskKind> {
+        match task {
+            "cls" => Some(TaskKind::Classify),
+            "token" => Some(TaskKind::TagTokens),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TaskKind::Classify => "classify",
+            TaskKind::TagTokens => "tag",
+        }
+    }
+}
+
+/// Request payload: already-framed token ids, or raw token text.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// One framed content row (`[CLS] .. [SEP] .. [PAD]`), exactly
+    /// `seq_len` ids.
+    Framed(Vec<i32>),
+    /// Token text; sentence pairs are ` [SEP] `-joined. Tokenized and
+    /// framed by the engine.
+    Text(String),
+}
+
+/// A typed inference request (replaces the old
+/// `submit_framed`/`submit_text`/`try_submit_framed` trio).
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub task: TaskKind,
+    pub payload: Payload,
+    /// Relative deadline. Expired requests are dropped at batch-assembly
+    /// time with [`EngineError::DeadlineExceeded`], and
+    /// [`RequestHandle::wait_deadline`] stops waiting once it passes.
+    pub deadline: Option<Duration>,
+}
+
+impl InferenceRequest {
+    pub fn classify_framed(ids: Vec<i32>) -> Self {
+        InferenceRequest { task: TaskKind::Classify, payload: Payload::Framed(ids), deadline: None }
+    }
+
+    pub fn classify_text(text: impl Into<String>) -> Self {
+        InferenceRequest {
+            task: TaskKind::Classify,
+            payload: Payload::Text(text.into()),
+            deadline: None,
+        }
+    }
+
+    pub fn tag_framed(ids: Vec<i32>) -> Self {
+        InferenceRequest {
+            task: TaskKind::TagTokens,
+            payload: Payload::Framed(ids),
+            deadline: None,
+        }
+    }
+
+    pub fn tag_text(text: impl Into<String>) -> Self {
+        InferenceRequest {
+            task: TaskKind::TagTokens,
+            payload: Payload::Text(text.into()),
+            deadline: None,
+        }
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+/// Why a submission was not accepted. Unlike the old
+/// `try_submit_framed` (which conflated queue-full and bad-frame in one
+/// `Err(Vec<i32>)`), every cause is distinct and machine-readable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// admission queue is full (non-blocking submit only)
+    QueueFull,
+    /// framed payload length does not match the model's seq_len
+    BadFrame { expected: usize, got: usize },
+    /// text payload failed to tokenize
+    Tokenize(String),
+    /// request task kind does not match what the model serves
+    WrongTask { requested: TaskKind, served: TaskKind },
+    /// the engine has stopped accepting requests
+    Shutdown,
+}
+
+impl SubmitError {
+    /// Stable machine-readable code (used by wire protocol v2).
+    pub fn code(&self) -> &'static str {
+        match self {
+            SubmitError::QueueFull => "queue_full",
+            SubmitError::BadFrame { .. } => "bad_frame",
+            SubmitError::Tokenize(_) => "tokenize",
+            SubmitError::WrongTask { .. } => "wrong_task",
+            SubmitError::Shutdown => "shutdown",
+        }
+    }
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "admission queue is full"),
+            SubmitError::BadFrame { expected, got } => {
+                write!(f, "content must be framed to seq_len={expected} (got {got})")
+            }
+            SubmitError::Tokenize(msg) => write!(f, "tokenize: {msg}"),
+            SubmitError::WrongTask { requested, served } => write!(
+                f,
+                "request kind '{}' but the model serves '{}'",
+                requested.as_str(),
+                served.as_str()
+            ),
+            SubmitError::Shutdown => write!(f, "engine is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// A tagged completion: the request tag plus its outcome. Delivered to a
+/// [`CompletionQueue`] by [`Submit::submit_tagged`].
+pub type CompletionItem = (u64, Result<Response, EngineError>);
+
+/// Queue that receives tagged completions as they happen — the server's
+/// pipelined connections drain one of these instead of blocking a thread
+/// per in-flight request.
+pub type CompletionQueue = Channel<CompletionItem>;
+
+/// A multiplexing inference engine that accepts requests.
+///
+/// Implemented by [`super::MuxCoordinator`] and [`super::MuxRouter`];
+/// object-safe so servers can hold `Arc<dyn Submit>`.
+pub trait Submit: Send + Sync {
+    /// Submit, blocking while the admission queue is full
+    /// (backpressure). Never returns [`SubmitError::QueueFull`].
+    fn submit(&self, req: InferenceRequest) -> Result<RequestHandle, SubmitError>;
+
+    /// Non-blocking submit; [`SubmitError::QueueFull`] when the
+    /// admission queue is full.
+    fn try_submit(&self, req: InferenceRequest) -> Result<RequestHandle, SubmitError>;
+
+    /// Non-blocking submit whose completion is delivered to `out` as
+    /// `(tag, result)` instead of through a handle. Used for pipelined
+    /// serving: one queue fans in completions for a whole connection.
+    /// If `out` is full when the request completes, the completion is
+    /// dropped.
+    fn submit_tagged(
+        &self,
+        req: InferenceRequest,
+        tag: u64,
+        out: &CompletionQueue,
+    ) -> Result<(), SubmitError>;
+
+    /// The task kind the backing model(s) natively serve.
+    fn native_task(&self) -> TaskKind;
+
+    fn tokenizer(&self) -> &Tokenizer;
+
+    fn seq_len(&self) -> usize;
+
+    /// Requests admitted but not yet handed to a worker.
+    fn queue_depth(&self) -> usize;
+
+    /// Aggregated serving counters (summed over lanes for a router).
+    fn counters(&self) -> CounterSnapshot;
+
+    /// End-to-end latency summary (merged over lanes for a router).
+    fn latency(&self) -> LatencySummary;
+
+    /// Convenience: submit one framed row for whatever task the model
+    /// serves. The common path for drivers and benches.
+    fn submit_framed(&self, ids: Vec<i32>) -> Result<RequestHandle, SubmitError> {
+        self.submit(InferenceRequest {
+            task: self.native_task(),
+            payload: Payload::Framed(ids),
+            deadline: None,
+        })
+    }
+
+    /// Convenience: non-blocking framed submit.
+    fn try_submit_framed(&self, ids: Vec<i32>) -> Result<RequestHandle, SubmitError> {
+        self.try_submit(InferenceRequest {
+            task: self.native_task(),
+            payload: Payload::Framed(ids),
+            deadline: None,
+        })
+    }
+
+    /// Convenience: submit ` [SEP] `-joined text parts.
+    fn submit_text(&self, parts: &[&str]) -> Result<RequestHandle, SubmitError> {
+        self.submit(InferenceRequest {
+            task: self.native_task(),
+            payload: Payload::Text(parts.join(" [SEP] ")),
+            deadline: None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_kind_maps_model_tasks() {
+        assert_eq!(TaskKind::from_model_task("cls"), Some(TaskKind::Classify));
+        assert_eq!(TaskKind::from_model_task("token"), Some(TaskKind::TagTokens));
+        assert_eq!(TaskKind::from_model_task("retrieval"), None);
+    }
+
+    #[test]
+    fn submit_error_codes_are_distinct() {
+        let errs = [
+            SubmitError::QueueFull,
+            SubmitError::BadFrame { expected: 16, got: 3 },
+            SubmitError::Tokenize("x".into()),
+            SubmitError::WrongTask {
+                requested: TaskKind::TagTokens,
+                served: TaskKind::Classify,
+            },
+            SubmitError::Shutdown,
+        ];
+        let codes: std::collections::HashSet<_> = errs.iter().map(|e| e.code()).collect();
+        assert_eq!(codes.len(), errs.len());
+        for e in &errs {
+            assert!(!format!("{e}").is_empty());
+        }
+    }
+
+    #[test]
+    fn request_builders() {
+        let r = InferenceRequest::classify_text("t1 t2")
+            .with_deadline(Duration::from_millis(5));
+        assert_eq!(r.task, TaskKind::Classify);
+        assert_eq!(r.deadline, Some(Duration::from_millis(5)));
+        match InferenceRequest::tag_framed(vec![1, 2]).payload {
+            Payload::Framed(ids) => assert_eq!(ids, vec![1, 2]),
+            _ => panic!("expected framed"),
+        }
+    }
+}

@@ -80,6 +80,7 @@ pub fn run_batcher(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::Completion;
     use crate::util::threadpool::OnceCellSync;
 
     fn req(id: u64) -> Request {
@@ -87,7 +88,8 @@ mod tests {
             id,
             content: vec![1, 0, 0, 0],
             submitted: Instant::now(),
-            done: OnceCellSync::new(),
+            deadline: None,
+            done: Completion::cell(OnceCellSync::new()),
         }
     }
 

@@ -1,0 +1,220 @@
+//! [`EngineBuilder`]: one place to configure the whole serving stack.
+//!
+//! Unifies the knobs that used to be scattered across
+//! `CoordinatorConfig`, `BatcherConfig` (derived from the model) and
+//! `ServerConfig`, then builds whichever engine shape is wanted: a
+//! single-model [`MuxCoordinator`], an adaptive-N [`MuxRouter`], or a
+//! TCP [`Server`] over either.
+//!
+//! ```no_run
+//! # use datamux::coordinator::EngineBuilder;
+//! # use datamux::runtime::{ArtifactManifest, ModelRuntime, default_artifacts_dir};
+//! # fn main() -> anyhow::Result<()> {
+//! let manifest = ArtifactManifest::load(default_artifacts_dir())?;
+//! let rt = ModelRuntime::cpu()?;
+//! let engine = std::sync::Arc::new(
+//!     EngineBuilder::new()
+//!         .max_wait_ms(3)
+//!         .queue_cap(4096)
+//!         .build(rt.load(&manifest.artifacts[0])?)?,
+//! );
+//! let server = EngineBuilder::new().addr("127.0.0.1:7071").serve(engine)?;
+//! # drop(server); Ok(()) }
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::runtime::{InferenceBackend, LoadedModel};
+
+use super::api::Submit;
+use super::server::{Server, ServerConfig};
+use super::{CoordinatorConfig, MuxCoordinator, MuxRouter, SlotPolicy};
+
+#[derive(Debug, Clone)]
+pub struct EngineBuilder {
+    coordinator: CoordinatorConfig,
+    addr: String,
+    max_connections: usize,
+    read_timeout: Duration,
+    /// model execute-time estimate driving adaptive-N routing (us)
+    exec_time_us: f64,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        let server = ServerConfig::default();
+        EngineBuilder {
+            coordinator: CoordinatorConfig::default(),
+            addr: server.addr,
+            max_connections: server.max_connections,
+            read_timeout: server.read_timeout,
+            exec_time_us: 20_000.0,
+        }
+    }
+}
+
+impl EngineBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Batcher deadline: how long the first request of a group waits for
+    /// co-muxed peers.
+    pub fn max_wait(mut self, d: Duration) -> Self {
+        self.coordinator.max_wait = d;
+        self
+    }
+
+    pub fn max_wait_ms(self, ms: u64) -> Self {
+        self.max_wait(Duration::from_millis(ms))
+    }
+
+    /// Admission queue capacity (blocking senders beyond this).
+    pub fn queue_cap(mut self, cap: usize) -> Self {
+        self.coordinator.queue_cap = cap;
+        self
+    }
+
+    /// Backend worker threads per coordinator.
+    pub fn n_workers(mut self, n: usize) -> Self {
+        self.coordinator.n_workers = n;
+        self
+    }
+
+    pub fn slot_policy(mut self, p: SlotPolicy) -> Self {
+        self.coordinator.slot_policy = p;
+        self
+    }
+
+    /// TCP bind address for `serve` (port 0 picks a free port).
+    pub fn addr(mut self, addr: impl Into<String>) -> Self {
+        self.addr = addr.into();
+        self
+    }
+
+    pub fn max_connections(mut self, n: usize) -> Self {
+        self.max_connections = n;
+        self
+    }
+
+    /// How often idle connections wake to notice `Server::stop()`.
+    pub fn read_timeout(mut self, d: Duration) -> Self {
+        self.read_timeout = d;
+        self
+    }
+
+    /// Execute-time estimate (us) used by adaptive-N routing.
+    pub fn exec_time_us(mut self, us: f64) -> Self {
+        self.exec_time_us = us;
+        self
+    }
+
+    pub fn coordinator_config(&self) -> &CoordinatorConfig {
+        &self.coordinator
+    }
+
+    pub fn server_config(&self) -> ServerConfig {
+        ServerConfig {
+            addr: self.addr.clone(),
+            max_connections: self.max_connections,
+            read_timeout: self.read_timeout,
+        }
+    }
+
+    /// One serving lane over a PJRT-loaded artifact.
+    pub fn build(&self, model: LoadedModel) -> Result<MuxCoordinator> {
+        MuxCoordinator::start(model, self.coordinator.clone())
+    }
+
+    /// One serving lane over any backend (e.g.
+    /// [`FakeBackend`](crate::runtime::FakeBackend)).
+    pub fn build_backend(&self, backend: Arc<dyn InferenceBackend>) -> Result<MuxCoordinator> {
+        MuxCoordinator::start_backend(backend, self.coordinator.clone())
+    }
+
+    /// Adaptive-N router: one lane per model (paper's A3-style knob).
+    pub fn build_router(&self, models: Vec<LoadedModel>) -> Result<MuxRouter> {
+        let lanes = models
+            .into_iter()
+            .map(|m| self.build(m))
+            .collect::<Result<Vec<_>>>()?;
+        MuxRouter::new(lanes, self.exec_time_us)
+    }
+
+    /// Adaptive-N router over arbitrary backends.
+    pub fn build_router_backends(
+        &self,
+        backends: Vec<Arc<dyn InferenceBackend>>,
+    ) -> Result<MuxRouter> {
+        let lanes = backends
+            .into_iter()
+            .map(|b| self.build_backend(b))
+            .collect::<Result<Vec<_>>>()?;
+        MuxRouter::new(lanes, self.exec_time_us)
+    }
+
+    /// TCP front end over any engine (coordinator or router).
+    pub fn serve(&self, engine: Arc<dyn Submit>) -> Result<Server> {
+        Server::start(engine, self.server_config())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::FakeBackend;
+
+    #[test]
+    fn builder_knobs_land_in_configs() {
+        let b = EngineBuilder::new()
+            .max_wait_ms(7)
+            .queue_cap(32)
+            .n_workers(2)
+            .slot_policy(SlotPolicy::RotateOffset)
+            .addr("127.0.0.1:0")
+            .max_connections(3)
+            .read_timeout(Duration::from_millis(50))
+            .exec_time_us(123.0);
+        assert_eq!(b.coordinator_config().max_wait, Duration::from_millis(7));
+        assert_eq!(b.coordinator_config().queue_cap, 32);
+        assert_eq!(b.coordinator_config().n_workers, 2);
+        assert_eq!(b.coordinator_config().slot_policy, SlotPolicy::RotateOffset);
+        let s = b.server_config();
+        assert_eq!(s.addr, "127.0.0.1:0");
+        assert_eq!(s.max_connections, 3);
+        assert_eq!(s.read_timeout, Duration::from_millis(50));
+    }
+
+    #[test]
+    fn builds_coordinator_and_router_over_fake_backends() {
+        let b = EngineBuilder::new().max_wait_ms(0);
+        let coord = b
+            .build_backend(Arc::new(FakeBackend::new("cls", 2, 1, 8, 3)))
+            .expect("coordinator over fake backend");
+        assert_eq!(coord.n_mux, 2);
+        drop(coord);
+        let router = b
+            .build_router_backends(vec![
+                Arc::new(FakeBackend::new("cls", 2, 1, 8, 3)),
+                Arc::new(FakeBackend::new("cls", 8, 1, 8, 3)),
+            ])
+            .expect("router over fake backends");
+        assert_eq!(router.lanes.len(), 2);
+        assert_eq!(router.lanes[0].n_mux, 2, "lanes sorted ascending by N");
+    }
+
+    #[test]
+    fn router_rejects_mismatched_lanes() {
+        let b = EngineBuilder::new().max_wait_ms(0);
+        let r = b.build_router_backends(vec![
+            Arc::new(FakeBackend::new("cls", 2, 1, 8, 3)),
+            Arc::new(FakeBackend::new("cls", 4, 1, 16, 3)), // different seq_len
+        ]);
+        assert!(r.is_err(), "construct-time validation must reject");
+        let r = b.build_router_backends(vec![]);
+        assert!(r.is_err(), "empty router must be rejected");
+    }
+}

@@ -1,18 +1,24 @@
 //! L3 coordinator — the DataMUX serving engine.
 //!
 //! ```text
-//!  submit() ──▶ [bounded queue] ──▶ batcher thread ──▶ [exec queue]
-//!                                                        │
-//!                                     worker thread(s) ◀─┘
-//!                                       assemble ids → PJRT execute
-//!                                       → demux → fulfill handles
+//!  Submit::submit() ──▶ [bounded queue] ──▶ batcher thread ──▶ [exec queue]
+//!                                                                 │
+//!                                              worker thread(s) ◀─┘
+//!                                                assemble ids → backend execute
+//!                                                → demux → fulfill completions
 //! ```
 //!
-//! The coordinator owns one AOT-compiled model (one `(profile, N, batch)`
-//! artifact) plus the batcher/worker threads. `MuxRouter` composes
-//! several coordinators and routes by arrival rate (adaptive N).
+//! The coordinator owns one [`InferenceBackend`] (usually an
+//! AOT-compiled `(profile, N, batch)` artifact behind PJRT) plus the
+//! batcher/worker threads. [`MuxRouter`] composes several coordinators
+//! and routes by arrival rate (adaptive N). Both implement the
+//! [`Submit`] trait, so every consumer — the TCP server, the workload
+//! drivers, benches and examples — is generic over which one it talks
+//! to.
 
+pub mod api;
 pub mod batcher;
+pub mod engine;
 pub mod policy;
 pub mod request;
 pub mod scheduler;
@@ -24,13 +30,18 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::runtime::LoadedModel;
+use crate::runtime::{InferenceBackend, LoadedModel};
 use crate::tokenizer::Tokenizer;
-use crate::util::threadpool::{Channel, OnceCellSync};
+use crate::util::metrics::{CounterSnapshot, LatencySummary};
+use crate::util::threadpool::{Channel, OnceCellSync, TrySendError};
 
+pub use api::{
+    CompletionItem, CompletionQueue, InferenceRequest, Payload, Submit, SubmitError, TaskKind,
+};
 pub use batcher::{BatcherConfig, ExecBatch};
+pub use engine::EngineBuilder;
 pub use policy::{AdaptiveN, SlotPolicy};
-pub use request::{Request, RequestHandle, Response};
+pub use request::{EngineError, Request, RequestHandle, Response};
 pub use scheduler::{SharedModel, Stats};
 
 #[derive(Debug, Clone)]
@@ -39,7 +50,7 @@ pub struct CoordinatorConfig {
     pub max_wait: Duration,
     /// admission queue capacity (senders block beyond this — backpressure)
     pub queue_cap: usize,
-    /// PJRT worker threads (CPU plugin: 1 is usually right on 1 core)
+    /// backend worker threads (CPU plugin: 1 is usually right on 1 core)
     pub n_workers: usize,
     pub slot_policy: SlotPolicy,
 }
@@ -62,39 +73,46 @@ pub struct MuxCoordinator {
     pub tokenizer: Tokenizer,
     pub n_mux: usize,
     pub seq_len: usize,
+    task: TaskKind,
     next_id: AtomicU64,
     batcher: Option<std::thread::JoinHandle<u64>>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl MuxCoordinator {
+    /// Start over a PJRT-loaded artifact (the production path).
     pub fn start(model: LoadedModel, cfg: CoordinatorConfig) -> Result<Self> {
-        let tokenizer = Tokenizer::new(
-            crate::tokenizer::default_vocab(),
-            model.meta.vocab_size,
-        );
-        let n_mux = model.meta.n_mux;
-        let seq_len = model.meta.seq_len;
+        Self::start_backend(Arc::new(SharedModel(Arc::new(model))), cfg)
+    }
+
+    /// Start over any [`InferenceBackend`] (PJRT model, fake, ...).
+    pub fn start_backend(
+        backend: Arc<dyn InferenceBackend>,
+        cfg: CoordinatorConfig,
+    ) -> Result<Self> {
+        let meta = backend.meta().clone();
+        let task = TaskKind::from_model_task(&meta.task)
+            .ok_or_else(|| anyhow::anyhow!("unsupported serving task '{}'", meta.task))?;
+        let tokenizer =
+            Tokenizer::new(crate::tokenizer::default_vocab(), meta.vocab_size);
+        let n_mux = meta.n_mux;
+        let seq_len = meta.seq_len;
         let stats = Arc::new(Stats::default());
         let input: Channel<Request> = Channel::bounded(cfg.queue_cap);
         let exec: Channel<ExecBatch> = Channel::bounded(cfg.n_workers * 2 + 2);
 
-        let bcfg = BatcherConfig {
-            n_mux,
-            batch: model.meta.batch,
-            max_wait: cfg.max_wait,
-        };
+        let bcfg = BatcherConfig { n_mux, batch: meta.batch, max_wait: cfg.max_wait };
         let b_in = input.clone();
         let b_out = exec.clone();
         let batcher = std::thread::Builder::new()
             .name("datamux-batcher".into())
             .spawn(move || batcher::run_batcher(&bcfg, &b_in, &b_out))?;
 
-        let shared = SharedModel(Arc::new(model));
         let mut workers = Vec::new();
         for w in 0..cfg.n_workers.max(1) {
-            let model = shared.clone();
+            let backend = backend.clone();
             let exec = exec.clone();
+            let input = input.clone();
             let stats = stats.clone();
             let tok = tokenizer.clone();
             let policy = cfg.slot_policy;
@@ -105,10 +123,21 @@ impl MuxCoordinator {
                         let mut scratch = Vec::new();
                         while let Some(batch) = exec.recv() {
                             if let Err(e) = scheduler::execute_batch(
-                                &model, &tok, policy, &stats, batch, &mut scratch,
+                                backend.as_ref(),
+                                &tok,
+                                policy,
+                                &stats,
+                                batch,
+                                &mut scratch,
                             ) {
+                                // the failed batch's waiters were already
+                                // fulfilled with WorkerFailed inside
+                                // execute_batch; poison the intake so new
+                                // submissions fail fast with Shutdown, then
+                                // keep draining so queued waiters are
+                                // answered (not stranded) too.
                                 eprintln!("worker {w}: execution failed: {e:#}");
-                                return;
+                                input.close();
                             }
                         }
                     })?,
@@ -121,60 +150,87 @@ impl MuxCoordinator {
             tokenizer,
             n_mux,
             seq_len,
+            task,
             next_id: AtomicU64::new(1),
             batcher: Some(batcher),
             workers,
         })
     }
 
-    /// Submit a framed content row (seq_len ids). Blocks on backpressure.
-    pub fn submit_framed(&self, content: Vec<i32>) -> Result<RequestHandle> {
-        anyhow::ensure!(
-            content.len() == self.seq_len,
-            "content must be framed to seq_len={} (got {})",
-            self.seq_len,
-            content.len()
-        );
+    /// Validate a typed request and frame its payload.
+    fn prepare(&self, req: InferenceRequest) -> Result<(Vec<i32>, Option<Instant>), SubmitError> {
+        if req.task != self.task {
+            return Err(SubmitError::WrongTask { requested: req.task, served: self.task });
+        }
+        let content = match req.payload {
+            Payload::Framed(ids) => {
+                if ids.len() != self.seq_len {
+                    return Err(SubmitError::BadFrame {
+                        expected: self.seq_len,
+                        got: ids.len(),
+                    });
+                }
+                ids
+            }
+            Payload::Text(text) => self
+                .tokenizer
+                .encode_framed(&text.split(" [SEP] ").collect::<Vec<_>>(), self.seq_len)
+                .map_err(|e| SubmitError::Tokenize(e.to_string()))?,
+        };
+        let deadline = req.deadline.map(|d| Instant::now() + d);
+        Ok((content, deadline))
+    }
+
+    fn make_request(
+        &self,
+        content: Vec<i32>,
+        deadline: Option<Instant>,
+        done: request::Completion,
+    ) -> Request {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let done = OnceCellSync::new();
-        let handle = RequestHandle { id, done: done.clone() };
-        self.stats.counters.submitted.fetch_add(1, Ordering::Relaxed);
-        let req = Request { id, content, submitted: Instant::now(), done };
+        Request { id, content, submitted: Instant::now(), deadline, done }
+    }
+
+    /// Blocking admission (backpressure); `Shutdown` when the intake is
+    /// closed. Shared counter discipline for every submit flavor.
+    fn admit_blocking(&self, req: Request) -> Result<(), SubmitError> {
         if self.input.send(req).is_err() {
             self.stats.counters.rejected.fetch_add(1, Ordering::Relaxed);
-            anyhow::bail!("coordinator is shut down");
+            // the dropped request already fulfilled its completion with
+            // Shutdown; the caller also gets the error synchronously
+            return Err(SubmitError::Shutdown);
         }
-        Ok(handle)
+        self.stats.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(())
     }
 
-    /// Submit text (`t5 t12 ...` or multiple [SEP]-joined parts).
-    pub fn submit_text(&self, parts: &[&str]) -> Result<RequestHandle> {
-        let framed = self
-            .tokenizer
-            .encode_framed(parts, self.seq_len)
-            .map_err(|e| anyhow::anyhow!("tokenize: {e}"))?;
-        self.submit_framed(framed)
-    }
-
-    /// Non-blocking submit; Err(content) when the queue is full.
-    pub fn try_submit_framed(&self, content: Vec<i32>) -> std::result::Result<RequestHandle, Vec<i32>> {
-        if content.len() != self.seq_len {
-            return Err(content);
-        }
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let done = OnceCellSync::new();
-        let handle = RequestHandle { id, done: done.clone() };
-        let req = Request { id, content, submitted: Instant::now(), done };
+    /// Non-blocking admission; distinguishes `QueueFull` from `Shutdown`
+    /// and defuses the handed-back request's completion (the failure is
+    /// reported synchronously instead).
+    fn admit_nonblocking(&self, req: Request) -> Result<(), SubmitError> {
         match self.input.try_send(req) {
             Ok(()) => {
                 self.stats.counters.submitted.fetch_add(1, Ordering::Relaxed);
-                Ok(handle)
+                Ok(())
             }
-            Err(req) => {
+            Err(err) => {
                 self.stats.counters.rejected.fetch_add(1, Ordering::Relaxed);
-                Err(req.content)
+                let submit_err = match &err {
+                    TrySendError::Full(_) => SubmitError::QueueFull,
+                    TrySendError::Closed(_) => SubmitError::Shutdown,
+                };
+                let mut req = err.into_inner();
+                req.done.defuse();
+                Err(submit_err)
             }
         }
+    }
+
+    /// Stop accepting new requests; everything already admitted still
+    /// completes. Submissions return [`SubmitError::Shutdown`] from now
+    /// on.
+    pub fn close_intake(&self) {
+        self.input.close();
     }
 
     pub fn queue_depth(&self) -> usize {
@@ -192,6 +248,64 @@ impl MuxCoordinator {
     }
 }
 
+impl Submit for MuxCoordinator {
+    fn submit(&self, req: InferenceRequest) -> Result<RequestHandle, SubmitError> {
+        let (content, deadline) = self.prepare(req)?;
+        let cell = OnceCellSync::new();
+        let req =
+            self.make_request(content, deadline, request::Completion::cell(cell.clone()));
+        let handle = RequestHandle { id: req.id, deadline, done: cell };
+        self.admit_blocking(req)?;
+        Ok(handle)
+    }
+
+    fn try_submit(&self, req: InferenceRequest) -> Result<RequestHandle, SubmitError> {
+        let (content, deadline) = self.prepare(req)?;
+        let cell = OnceCellSync::new();
+        let req =
+            self.make_request(content, deadline, request::Completion::cell(cell.clone()));
+        let handle = RequestHandle { id: req.id, deadline, done: cell };
+        self.admit_nonblocking(req)?;
+        Ok(handle)
+    }
+
+    fn submit_tagged(
+        &self,
+        req: InferenceRequest,
+        tag: u64,
+        out: &CompletionQueue,
+    ) -> Result<(), SubmitError> {
+        let (content, deadline) = self.prepare(req)?;
+        let req =
+            self.make_request(content, deadline, request::Completion::queue(tag, out.clone()));
+        self.admit_nonblocking(req)
+    }
+
+    fn native_task(&self) -> TaskKind {
+        self.task
+    }
+
+    fn tokenizer(&self) -> &Tokenizer {
+        &self.tokenizer
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn queue_depth(&self) -> usize {
+        self.input.len()
+    }
+
+    fn counters(&self) -> CounterSnapshot {
+        self.stats.counters.snapshot()
+    }
+
+    fn latency(&self) -> LatencySummary {
+        self.stats.e2e_latency.summary()
+    }
+}
+
 impl Drop for MuxCoordinator {
     fn drop(&mut self) {
         self.input.close();
@@ -206,36 +320,118 @@ impl Drop for MuxCoordinator {
 
 /// Adaptive-N router over several coordinators (one per N candidate).
 pub struct MuxRouter {
-    /// ascending by n_mux
+    /// ascending by n_mux; all lanes share seq_len, task and vocabulary
     pub lanes: Vec<MuxCoordinator>,
     adaptive: std::sync::Mutex<AdaptiveN>,
     epoch: Instant,
 }
 
 impl MuxRouter {
-    pub fn new(mut lanes: Vec<MuxCoordinator>, exec_time_us: f64) -> Self {
+    /// Compose lanes into an adaptive-N engine.
+    ///
+    /// Construct-time validation pins the routing invariant: the
+    /// adaptive-N candidate set is exactly the set of lane Ns, so
+    /// `AdaptiveN::choose` can never name an N without a lane. Lanes
+    /// must also agree on seq_len and task, since one typed request must
+    /// be valid on whichever lane routing picks.
+    pub fn new(mut lanes: Vec<MuxCoordinator>, exec_time_us: f64) -> Result<Self> {
+        anyhow::ensure!(!lanes.is_empty(), "MuxRouter needs at least one lane");
         lanes.sort_by_key(|c| c.n_mux);
+        let (seq_len, task) = (lanes[0].seq_len, lanes[0].task);
+        for lane in &lanes {
+            anyhow::ensure!(
+                lane.seq_len == seq_len && lane.task == task,
+                "router lanes must agree on seq_len/task: lane N={} has (seq_len={}, \
+                 task={:?}), expected (seq_len={}, task={:?})",
+                lane.n_mux,
+                lane.seq_len,
+                lane.task,
+                seq_len,
+                task
+            );
+        }
         let candidates = lanes.iter().map(|c| c.n_mux).collect();
-        MuxRouter {
+        Ok(MuxRouter {
             lanes,
             adaptive: std::sync::Mutex::new(AdaptiveN::new(candidates, exec_time_us)),
             epoch: Instant::now(),
-        }
+        })
     }
 
-    /// Route one framed request to the lane adaptive-N selects.
-    pub fn submit_framed(&self, content: Vec<i32>) -> Result<(usize, RequestHandle)> {
+    /// Pick the lane adaptive-N selects for one arrival.
+    fn route(&self) -> &MuxCoordinator {
         let depth: usize = self.lanes.iter().map(|l| l.queue_depth()).sum();
         let n = {
             let mut a = self.adaptive.lock().unwrap();
             a.on_arrival(self.epoch.elapsed().as_micros() as u64);
             a.choose(depth)
         };
-        let lane = self
-            .lanes
+        // `new()` pins candidates == lane Ns, so this lookup always hits;
+        // the debug_assert keeps the invariant loud if that ever drifts.
+        let lane = self.lanes.iter().find(|l| l.n_mux == n);
+        debug_assert!(lane.is_some(), "AdaptiveN chose N={n} but no lane serves it");
+        lane.unwrap_or_else(|| self.lanes.last().unwrap())
+    }
+
+    /// Route one typed request, reporting which lane (by N) took it.
+    pub fn submit_routed(
+        &self,
+        req: InferenceRequest,
+    ) -> Result<(usize, RequestHandle), SubmitError> {
+        let lane = self.route();
+        Ok((lane.n_mux, lane.submit(req)?))
+    }
+
+    /// Drain and stop every lane.
+    pub fn shutdown(self) -> u64 {
+        self.lanes.into_iter().map(|l| l.shutdown()).sum()
+    }
+}
+
+impl Submit for MuxRouter {
+    fn submit(&self, req: InferenceRequest) -> Result<RequestHandle, SubmitError> {
+        self.submit_routed(req).map(|(_, h)| h)
+    }
+
+    fn try_submit(&self, req: InferenceRequest) -> Result<RequestHandle, SubmitError> {
+        self.route().try_submit(req)
+    }
+
+    fn submit_tagged(
+        &self,
+        req: InferenceRequest,
+        tag: u64,
+        out: &CompletionQueue,
+    ) -> Result<(), SubmitError> {
+        self.route().submit_tagged(req, tag, out)
+    }
+
+    fn native_task(&self) -> TaskKind {
+        self.lanes[0].task
+    }
+
+    fn tokenizer(&self) -> &Tokenizer {
+        &self.lanes[0].tokenizer
+    }
+
+    fn seq_len(&self) -> usize {
+        self.lanes[0].seq_len
+    }
+
+    fn queue_depth(&self) -> usize {
+        self.lanes.iter().map(|l| l.queue_depth()).sum()
+    }
+
+    fn counters(&self) -> CounterSnapshot {
+        self.lanes
             .iter()
-            .find(|l| l.n_mux == n)
-            .unwrap_or_else(|| self.lanes.last().unwrap());
-        Ok((lane.n_mux, lane.submit_framed(content)?))
+            .map(|l| l.stats.counters.snapshot())
+            .fold(CounterSnapshot::default(), CounterSnapshot::merge)
+    }
+
+    fn latency(&self) -> LatencySummary {
+        let mut it = self.lanes.iter().map(|l| l.stats.e2e_latency.summary());
+        let first = it.next().expect("router has at least one lane");
+        it.fold(first, LatencySummary::merge)
     }
 }

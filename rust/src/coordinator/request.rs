@@ -1,20 +1,124 @@
-//! Request / response types and the completion handle.
+//! Request / response types and the completion plumbing.
+//!
+//! Every in-flight request carries a [`Completion`]: either a one-shot
+//! cell behind a [`RequestHandle`], or a tagged entry on a shared
+//! [`CompletionQueue`](super::CompletionQueue) (the pipelined-server
+//! path). `Completion` fulfills **exactly once** — and if a `Request` is
+//! dropped unfulfilled anywhere in the engine (queue teardown, worker
+//! death, batcher exit), the drop guard fails it with
+//! [`EngineError::Shutdown`] so callers can never hang on `wait()`.
 
 use std::time::{Duration, Instant};
 
 use crate::util::threadpool::OnceCellSync;
 
-/// A single inference request: one framed content row (already
+use super::api::CompletionQueue;
+
+/// Why a request that was accepted did not produce a response.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineError {
+    /// the executing worker failed; the message carries the cause chain
+    WorkerFailed(String),
+    /// the request's deadline passed before it reached a model execution
+    DeadlineExceeded,
+    /// the engine shut down (or dropped the request) before executing it
+    Shutdown,
+}
+
+impl EngineError {
+    /// Stable machine-readable code (used by wire protocol v2).
+    pub fn code(&self) -> &'static str {
+        match self {
+            EngineError::WorkerFailed(_) => "worker_failed",
+            EngineError::DeadlineExceeded => "deadline",
+            EngineError::Shutdown => "shutdown",
+        }
+    }
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::WorkerFailed(msg) => write!(f, "worker failed: {msg}"),
+            EngineError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            EngineError::Shutdown => write!(f, "engine shut down before execution"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+pub(crate) enum CompletionInner {
+    Cell(OnceCellSync<Result<Response, EngineError>>),
+    Queue { tag: u64, queue: CompletionQueue },
+}
+
+/// Exactly-once completion slot with a fail-on-drop guard.
+pub struct Completion {
+    inner: Option<CompletionInner>,
+}
+
+impl Completion {
+    pub(crate) fn cell(cell: OnceCellSync<Result<Response, EngineError>>) -> Self {
+        Completion { inner: Some(CompletionInner::Cell(cell)) }
+    }
+
+    pub(crate) fn queue(tag: u64, queue: CompletionQueue) -> Self {
+        Completion { inner: Some(CompletionInner::Queue { tag, queue }) }
+    }
+
+    pub(crate) fn fulfill(mut self, result: Result<Response, EngineError>) {
+        Self::deliver(self.inner.take(), result);
+    }
+
+    /// Disarm the drop guard without fulfilling (the caller is reporting
+    /// the failure synchronously instead).
+    pub(crate) fn defuse(&mut self) {
+        self.inner = None;
+    }
+
+    fn deliver(inner: Option<CompletionInner>, result: Result<Response, EngineError>) {
+        match inner {
+            None => {}
+            Some(CompletionInner::Cell(cell)) => cell.set(result),
+            Some(CompletionInner::Queue { tag, queue }) => {
+                // never block an engine thread on a slow consumer; a full
+                // queue drops the completion (consumer gone or stalled)
+                let _ = queue.try_send((tag, result));
+            }
+        }
+    }
+}
+
+impl Drop for Completion {
+    fn drop(&mut self) {
+        Self::deliver(self.inner.take(), Err(EngineError::Shutdown));
+    }
+}
+
+/// A single admitted request: one framed content row (already
 /// `[CLS] ... [SEP] ... [PAD]`-laid-out to the model's seq_len).
 pub struct Request {
     pub id: u64,
     pub content: Vec<i32>,
     pub submitted: Instant,
-    pub(crate) done: OnceCellSync<Response>,
+    /// absolute deadline; expired requests are failed at batch assembly
+    pub deadline: Option<Instant>,
+    pub(crate) done: Completion,
+}
+
+impl Request {
+    pub(crate) fn fulfill(self, result: Result<Response, EngineError>) {
+        self.done.fulfill(result);
+    }
+
+    pub(crate) fn expired(&self, now: Instant) -> bool {
+        self.deadline.map_or(false, |d| d <= now)
+    }
 }
 
 /// The demultiplexed result for one request.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Response {
     pub id: u64,
     /// which mux slot (paper's index i) served this request — exposed
@@ -50,26 +154,50 @@ pub fn argmax(xs: &[f32]) -> usize {
     best
 }
 
-/// Caller-side handle; `wait()` blocks until the scheduler fulfills it.
+/// Caller-side handle; waits until the engine fulfills the request.
 #[derive(Clone)]
 pub struct RequestHandle {
     pub id: u64,
-    pub(crate) done: OnceCellSync<Response>,
+    /// absolute deadline mirrored from the request (drives `wait_deadline`)
+    pub deadline: Option<Instant>,
+    pub(crate) done: OnceCellSync<Result<Response, EngineError>>,
 }
 
 impl RequestHandle {
-    pub fn wait(&self) -> Response {
+    /// Block until the engine fulfills the request. Cannot hang: every
+    /// accepted request is fulfilled with a `Response` or an
+    /// [`EngineError`], even across worker death and shutdown.
+    pub fn wait(&self) -> Result<Response, EngineError> {
         self.done.wait()
     }
 
-    pub fn wait_timeout(&self, d: Duration) -> Option<Response> {
+    /// Wait with a caller-chosen timeout; `None` when it elapses first.
+    pub fn wait_timeout(&self, d: Duration) -> Option<Result<Response, EngineError>> {
         self.done.wait_timeout(d)
+    }
+
+    /// Deadline-aware wait: block until the request's own deadline, then
+    /// give up with [`EngineError::DeadlineExceeded`]. Without a
+    /// deadline this is `wait()`.
+    pub fn wait_deadline(&self) -> Result<Response, EngineError> {
+        match self.deadline {
+            None => self.wait(),
+            Some(dl) => {
+                let now = Instant::now();
+                let left = dl.saturating_duration_since(now);
+                match self.done.wait_timeout(left) {
+                    Some(r) => r,
+                    None => Err(EngineError::DeadlineExceeded),
+                }
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::threadpool::Channel;
 
     #[test]
     fn argmax_picks_first_max() {
@@ -90,5 +218,42 @@ mod tests {
         };
         assert_eq!(r.pred_class(), 1);
         assert_eq!(r.pred_tokens(), vec![1, 0]);
+    }
+
+    #[test]
+    fn dropped_completion_fails_with_shutdown() {
+        let cell = OnceCellSync::new();
+        let handle = RequestHandle { id: 1, deadline: None, done: cell.clone() };
+        drop(Completion::cell(cell));
+        assert_eq!(handle.wait(), Err(EngineError::Shutdown));
+    }
+
+    #[test]
+    fn defused_completion_stays_silent() {
+        let cell: OnceCellSync<Result<Response, EngineError>> = OnceCellSync::new();
+        let mut c = Completion::cell(cell.clone());
+        c.defuse();
+        drop(c);
+        assert!(cell.wait_timeout(Duration::from_millis(20)).is_none());
+    }
+
+    #[test]
+    fn queue_completion_delivers_tagged() {
+        let q: CompletionQueue = Channel::bounded(4);
+        Completion::queue(7, q.clone()).fulfill(Err(EngineError::DeadlineExceeded));
+        let (tag, result) = q.try_recv().expect("tagged completion");
+        assert_eq!(tag, 7);
+        assert_eq!(result, Err(EngineError::DeadlineExceeded));
+    }
+
+    #[test]
+    fn wait_deadline_times_out() {
+        let cell = OnceCellSync::new();
+        let h = RequestHandle {
+            id: 1,
+            deadline: Some(Instant::now() + Duration::from_millis(20)),
+            done: cell,
+        };
+        assert_eq!(h.wait_deadline(), Err(EngineError::DeadlineExceeded));
     }
 }

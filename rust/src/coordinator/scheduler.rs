@@ -1,10 +1,15 @@
-//! Scheduler: turn ExecBatches into PJRT executions and route the
+//! Scheduler: turn ExecBatches into model executions and route the
 //! demultiplexed outputs back to their requests.
 //!
 //! Input assembly mirrors the compile-path layout exactly (pinned by the
 //! parity integration test): for group `g`, slot `i`, the model row is
 //! `prefix^i ++ content`, and the output logits for that request live at
 //! flat offset `(g * n_mux + i) * per_slot_len`.
+//!
+//! Failure discipline: `execute_batch` never strands a caller. Expired
+//! requests are failed with `DeadlineExceeded` before assembly, and if
+//! the backend errors, every request in the batch is failed with
+//! `WorkerFailed` before the error propagates to the worker loop.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -12,8 +17,8 @@ use std::time::Instant;
 
 use super::batcher::ExecBatch;
 use super::policy::SlotPolicy;
-use super::request::Response;
-use crate::runtime::LoadedModel;
+use super::request::{EngineError, Response};
+use crate::runtime::{ArtifactMeta, InferenceBackend, LoadedModel};
 use crate::tokenizer::Tokenizer;
 use crate::util::metrics::{Counters, Histogram};
 
@@ -43,6 +48,16 @@ impl std::ops::Deref for SharedModel {
     }
 }
 
+impl InferenceBackend for SharedModel {
+    fn meta(&self) -> &ArtifactMeta {
+        &self.0.meta
+    }
+
+    fn run_ids(&self, ids: &[i32]) -> anyhow::Result<Vec<f32>> {
+        self.0.run_ids(ids)
+    }
+}
+
 /// Shared serving statistics.
 #[derive(Default)]
 pub struct Stats {
@@ -54,32 +69,50 @@ pub struct Stats {
 }
 
 /// Per-slot output length (flattened logits) for the model's task.
-pub fn per_slot_len(model: &LoadedModel) -> usize {
-    match model.meta.task.as_str() {
-        "cls" => model.meta.n_classes,
-        "token" => model.meta.seq_len * model.meta.n_classes,
+pub fn per_slot_len(meta: &ArtifactMeta) -> usize {
+    match meta.task.as_str() {
+        "cls" => meta.n_classes,
+        "token" => meta.seq_len * meta.n_classes,
         other => panic!("unsupported serving task {other}"),
     }
 }
 
 /// Execute one batch and fulfill its requests. Returns Err only on
-/// runtime failure (callers treat that as fatal for the worker).
+/// backend failure — and by then every request in the batch has already
+/// been fulfilled with [`EngineError::WorkerFailed`], so callers cannot
+/// hang on the error path.
 pub fn execute_batch(
-    model: &LoadedModel,
+    model: &dyn InferenceBackend,
     tok: &Tokenizer,
     policy: SlotPolicy,
     stats: &Stats,
     batch: ExecBatch,
     ids_scratch: &mut Vec<i32>,
 ) -> anyhow::Result<()> {
-    let n_mux = model.meta.n_mux;
-    let b = model.meta.batch;
-    let input_len = model.meta.input_len;
-    let seq_len = model.meta.seq_len;
+    let meta = model.meta();
+    let n_mux = meta.n_mux;
+    let b = meta.batch;
+    let input_len = meta.input_len;
+    let seq_len = meta.seq_len;
     let prefix_len = input_len - seq_len;
     debug_assert!(prefix_len == 0 || prefix_len == n_mux);
     let capacity = b * n_mux;
     assert!(batch.entries.len() <= capacity, "batcher produced oversized batch");
+
+    // --- drop requests whose deadline already passed ---------------------
+    let now = Instant::now();
+    let mut entries = Vec::with_capacity(batch.entries.len());
+    for req in batch.entries {
+        if req.expired(now) {
+            stats.counters.expired.fetch_add(1, Ordering::Relaxed);
+            req.fulfill(Err(EngineError::DeadlineExceeded));
+        } else {
+            entries.push(req);
+        }
+    }
+    if entries.is_empty() {
+        return Ok(());
+    }
 
     // --- assemble the (b, n_mux, input_len) ids tensor -------------------
     ids_scratch.clear();
@@ -103,8 +136,8 @@ pub fn execute_batch(
         }
     }
     // place the real requests
-    let mut placement: Vec<(usize, usize)> = Vec::with_capacity(batch.entries.len());
-    for (pos, req) in batch.entries.iter().enumerate() {
+    let mut placement: Vec<(usize, usize)> = Vec::with_capacity(entries.len());
+    for (pos, req) in entries.iter().enumerate() {
         let g = pos / n_mux;
         let slot = policy.slot_of(batch.seq.wrapping_add(g as u64), pos % n_mux, n_mux);
         debug_assert_eq!(req.content.len(), seq_len, "request content must be framed");
@@ -113,32 +146,44 @@ pub fn execute_batch(
         row[prefix_len..].copy_from_slice(&req.content);
         placement.push((g, slot));
     }
-    let padded = capacity - batch.entries.len();
+    let padded = capacity - entries.len();
 
     // --- execute ----------------------------------------------------------
     let t_exec = Instant::now();
-    let out = model.run_ids(ids_scratch)?;
+    let out = match model.run_ids(ids_scratch) {
+        Ok(out) => out,
+        Err(e) => {
+            // fail every waiter before surfacing the error: wait() must
+            // never hang on worker death
+            let msg = format!("{e:#}");
+            for req in entries {
+                req.fulfill(Err(EngineError::WorkerFailed(msg.clone())));
+            }
+            return Err(e);
+        }
+    };
     stats.exec_latency.record_duration(t_exec.elapsed());
     stats.counters.groups_executed.fetch_add(b as u64, Ordering::Relaxed);
     stats.counters.slots_padded.fetch_add(padded as u64, Ordering::Relaxed);
 
     // --- demux dispatch ----------------------------------------------------
-    let slot_len = per_slot_len(model);
+    let slot_len = per_slot_len(meta);
     let now = Instant::now();
-    for (req, (g, slot)) in batch.entries.into_iter().zip(placement) {
+    for (req, (g, slot)) in entries.into_iter().zip(placement) {
         let off = ((g * n_mux) + slot) * slot_len;
         let logits = out[off..off + slot_len].to_vec();
         let latency = now.duration_since(req.submitted);
         stats.e2e_latency.record_duration(latency);
         stats.counters.completed.fetch_add(1, Ordering::Relaxed);
-        req.done.set(Response {
+        let response = Response {
             id: req.id,
             slot,
             group: batch.seq,
             logits,
-            n_classes: model.meta.n_classes,
+            n_classes: meta.n_classes,
             latency,
-        });
+        };
+        req.fulfill(Ok(response));
     }
     Ok(())
 }

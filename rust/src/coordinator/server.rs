@@ -1,33 +1,81 @@
-//! TCP front end: a line protocol over the coordinator.
+//! TCP front end over any [`Submit`] engine (single coordinator or
+//! adaptive-N router).
 //!
-//! Protocol (one request per line):
-//!   `CLS <token text>`                  -> `OK <pred> slot=<i> us=<latency>`
-//!   `TOK <token text>`                  -> `OK <tag ids ...> slot=<i> us=<latency>`
-//!   `STATS`                             -> one-line counters snapshot
-//!   `QUIT`                              -> closes the connection
-//! Errors: `ERR <message>`.
+//! Two wire protocols share every connection, dispatched per line:
 //!
-//! One OS thread per connection, capped by a semaphore-ish counter — the
-//! heavy lifting (batching, PJRT) happens on the coordinator's threads,
-//! so connection threads only block on the completion handle.
+//! **v1 (legacy, lockstep)** — one request per line, one reply per line,
+//! in order:
+//! ```text
+//!   CLS <token text>   -> OK <pred> slot=<i> us=<latency>
+//!   TOK <token text>   -> OK <tag,tag,..> slot=<i> us=<latency>
+//!   STATS              -> one-line counters snapshot
+//!   QUIT               -> closes the connection
+//!   errors             -> ERR <message>
+//! ```
+//!
+//! **v2 (pipelined, typed)** — any line starting with `{` is a
+//! line-delimited JSON request with a *client-chosen id*. Many requests
+//! may be in flight per connection; replies are correlated by id and
+//! written in completion order (not submission order):
+//! ```text
+//!   {"id":..,"op":"classify"|"tag","text":"t1 t2"|"ids":[..],
+//!    "deadline_ms":N?,"logits":bool?}
+//!   {"id":..,"op":"batch","items":[<op objects without id>..]}
+//!   {"id":..,"op":"stats"} / {"op":"quit"}
+//! -> {"id":..,"ok":true,"pred":N|"tags":[..],"slot":N,"group":N,"us":N}
+//! -> {"id":..,"ok":true,"results":[..]}          (batch, one line)
+//! -> {"id":..,"ok":false,"error":"<code>","message":".."}
+//! ```
+//! Error codes are the stable [`SubmitError::code`] /
+//! [`EngineError::code`] strings plus `bad_json` and `bad_request`.
+//!
+//! One OS reader thread plus one completion-pump thread per connection,
+//! capped by a semaphore-ish counter — the heavy lifting (batching,
+//! model execution) happens on the engine's threads. Completions are
+//! delivered to a per-connection [`CompletionQueue`], so a pipelined
+//! connection never blocks a thread per in-flight request. Reads use a
+//! timeout so `Server::stop()` terminates idle connections promptly.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::Result;
 
-use super::MuxCoordinator;
+use crate::util::json::{num, obj, s, Json};
+use crate::util::threadpool::Channel;
+
+use super::api::{CompletionQueue, InferenceRequest, Payload, Submit, TaskKind};
+use super::request::Response;
+
+/// Completions buffered per connection before the pump writes them out.
+///
+/// Slow-consumer shedding: if a client keeps >CAP requests in flight
+/// while not reading replies (the pump is stuck on TCP backpressure),
+/// further completions for that connection are dropped rather than
+/// blocking the engine's shared scheduler threads — those ids simply
+/// never get a reply line (and a batch containing one never completes).
+/// Well-behaved clients that read replies never get near the cap.
+const PIPELINE_COMPLETION_CAP: usize = 4096;
 
 pub struct ServerConfig {
     pub addr: String,
     pub max_connections: usize,
+    /// Poll interval at which blocked reads re-check the stop flag; also
+    /// bounds how long `Server::stop()` waits on idle connections.
+    pub read_timeout: Duration,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { addr: "127.0.0.1:7071".into(), max_connections: 64 }
+        ServerConfig {
+            addr: "127.0.0.1:7071".into(),
+            max_connections: 64,
+            read_timeout: Duration::from_millis(250),
+        }
     }
 }
 
@@ -38,9 +86,9 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start serving `coord` on `cfg.addr`. Non-blocking; returns the
+    /// Start serving `engine` on `cfg.addr`. Non-blocking; returns the
     /// bound address (use port 0 to pick a free port).
-    pub fn start(coord: Arc<MuxCoordinator>, cfg: ServerConfig) -> Result<Server> {
+    pub fn start(engine: Arc<dyn Submit>, cfg: ServerConfig) -> Result<Server> {
         let listener = TcpListener::bind(&cfg.addr)?;
         let local_addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -59,16 +107,25 @@ impl Server {
                                 continue;
                             }
                             live.fetch_add(1, Ordering::Relaxed);
-                            let coord = coord.clone();
+                            let engine = engine.clone();
                             let live = live.clone();
                             let stop = stop2.clone();
+                            let read_timeout = cfg.read_timeout;
                             std::thread::spawn(move || {
-                                let _ = handle_conn(stream, &coord, &stop);
-                                live.fetch_sub(1, Ordering::Relaxed);
+                                // decrement on drop so a panicking handler
+                                // can't leak a max_connections slot
+                                struct LiveGuard(Arc<AtomicUsize>);
+                                impl Drop for LiveGuard {
+                                    fn drop(&mut self) {
+                                        self.0.fetch_sub(1, Ordering::Relaxed);
+                                    }
+                                }
+                                let _guard = LiveGuard(live);
+                                let _ = handle_conn(stream, &engine, &stop, read_timeout);
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(2));
+                            std::thread::sleep(Duration::from_millis(2));
                         }
                         Err(_) => break,
                     }
@@ -94,29 +151,86 @@ impl Drop for Server {
     }
 }
 
-fn handle_conn(stream: TcpStream, coord: &MuxCoordinator, stop: &AtomicBool) -> Result<()> {
+fn handle_conn(
+    stream: TcpStream,
+    engine: &Arc<dyn Submit>,
+    stop: &AtomicBool,
+    read_timeout: Duration,
+) -> Result<()> {
     stream.set_nodelay(true).ok();
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
+    if !read_timeout.is_zero() {
+        // without this, an idle connection parked in read_line() only
+        // notices `stop` after its *next* line arrives
+        stream.set_read_timeout(Some(read_timeout)).ok();
+    }
+    let writer = Arc::new(Mutex::new(stream.try_clone()?));
+    let mut reader = BufReader::new(stream);
+    // created lazily on the first v2 line: pure-v1 connections never pay
+    // for the pump thread or the completion queue
+    let mut conn: Option<PipelinedConn<TcpStream>> = None;
+    // accumulate raw bytes, not a String: read_line() would discard
+    // partially-read bytes when a read timeout splits a multibyte UTF-8
+    // character, silently corrupting the request line
+    let mut line_buf: Vec<u8> = Vec::new();
+    loop {
         if stop.load(Ordering::Relaxed) {
             break;
         }
-        let line = line?;
-        let reply = handle_line(line.trim(), coord);
-        match reply {
-            Some(r) => {
-                writer.write_all(r.as_bytes())?;
-                writer.write_all(b"\n")?;
+        match reader.read_until(b'\n', &mut line_buf) {
+            Ok(0) => break, // EOF
+            Ok(_) => {
+                let text = String::from_utf8_lossy(&line_buf).into_owned();
+                let l = text.trim();
+                let keep_open = if l.is_empty() {
+                    true
+                } else if l.starts_with('{') {
+                    conn.get_or_insert_with(|| PipelinedConn::new(engine.clone(), writer.clone()))
+                        .handle_line(l)
+                } else {
+                    match handle_line(l, engine.as_ref()) {
+                        Some(reply) => {
+                            write_line(&writer, &reply)?;
+                            true
+                        }
+                        None => false, // QUIT
+                    }
+                };
+                line_buf.clear();
+                if !keep_open {
+                    break;
+                }
             }
-            None => break, // QUIT
+            // timeout: partial bytes stay in `line_buf`; loop to re-check
+            // `stop` and keep reading
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue
+            }
+            Err(_) => break,
         }
     }
     Ok(())
 }
 
-/// Protocol logic, factored for unit testing without sockets.
-pub fn handle_line(line: &str, coord: &MuxCoordinator) -> Option<String> {
+fn write_line<W: Write>(writer: &Mutex<W>, line: &str) -> std::io::Result<()> {
+    let mut w = writer.lock().unwrap();
+    w.write_all(line.as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()
+}
+
+// ---------------------------------------------------------------------------
+// protocol v1 (legacy, lockstep)
+// ---------------------------------------------------------------------------
+
+/// v1 protocol logic, factored for unit testing without sockets.
+pub fn handle_line(line: &str, engine: &dyn Submit) -> Option<String> {
     let (cmd, rest) = match line.split_once(' ') {
         Some((c, r)) => (c, r),
         None => (line, ""),
@@ -124,38 +238,582 @@ pub fn handle_line(line: &str, coord: &MuxCoordinator) -> Option<String> {
     match cmd {
         "QUIT" => None,
         "STATS" => {
-            let c = coord.stats.counters.snapshot();
+            let c = engine.counters();
             Some(format!(
-                "OK submitted={} completed={} rejected={} groups={} padded={}",
-                c.submitted, c.completed, c.rejected, c.groups_executed, c.slots_padded
+                "OK submitted={} completed={} rejected={} groups={} padded={} expired={}",
+                c.submitted, c.completed, c.rejected, c.groups_executed, c.slots_padded, c.expired
             ))
         }
-        "CLS" => match coord.submit_text(&rest.split(" [SEP] ").collect::<Vec<_>>()) {
-            Ok(h) => {
-                let r = h.wait();
-                Some(format!(
-                    "OK {} slot={} us={}",
-                    r.pred_class(),
-                    r.slot,
-                    r.latency.as_micros()
-                ))
+        "CLS" | "TOK" => {
+            // v1 is task-agnostic on submission (back-compat): the
+            // command only picks the reply formatting. CLS splits
+            // sentence pairs on ' [SEP] '; TOK treats the whole line as
+            // one part — both exactly as the legacy protocol did.
+            let payload = if cmd == "CLS" {
+                Payload::Text(rest.to_string())
+            } else {
+                match engine.tokenizer().encode_framed(&[rest], engine.seq_len()) {
+                    Ok(ids) => Payload::Framed(ids),
+                    Err(e) => return Some(format!("ERR tokenize: {e}")),
+                }
+            };
+            let req =
+                InferenceRequest { task: engine.native_task(), payload, deadline: None };
+            match engine.submit(req) {
+                Ok(h) => match h.wait() {
+                    Ok(r) if cmd == "CLS" => Some(format!(
+                        "OK {} slot={} us={}",
+                        r.pred_class(),
+                        r.slot,
+                        r.latency.as_micros()
+                    )),
+                    Ok(r) => {
+                        let tags: Vec<String> =
+                            r.pred_tokens().iter().map(|t| t.to_string()).collect();
+                        Some(format!(
+                            "OK {} slot={} us={}",
+                            tags.join(","),
+                            r.slot,
+                            r.latency.as_micros()
+                        ))
+                    }
+                    Err(e) => Some(format!("ERR {e}")),
+                },
+                Err(e) => Some(format!("ERR {e}")),
             }
-            Err(e) => Some(format!("ERR {e}")),
-        },
-        "TOK" => match coord.submit_text(&[rest]) {
-            Ok(h) => {
-                let r = h.wait();
-                let tags: Vec<String> =
-                    r.pred_tokens().iter().map(|t| t.to_string()).collect();
-                Some(format!(
-                    "OK {} slot={} us={}",
-                    tags.join(","),
-                    r.slot,
-                    r.latency.as_micros()
-                ))
-            }
-            Err(e) => Some(format!("ERR {e}")),
-        },
+        }
         _ => Some(format!("ERR unknown command '{cmd}'")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// protocol v2 (pipelined, typed)
+// ---------------------------------------------------------------------------
+
+struct Pending {
+    /// client-chosen id, echoed verbatim (string, number, anything)
+    id: Json,
+    kind: TaskKind,
+    want_logits: bool,
+    /// set when this request is one item of a BATCH submit
+    batch: Option<(Arc<Mutex<BatchAcc>>, usize)>,
+}
+
+struct BatchAcc {
+    id: Json,
+    remaining: usize,
+    results: Vec<Json>,
+}
+
+/// Per-connection v2 state: a tag allocator, the pending-request table,
+/// and a completion-pump thread that writes replies as results land
+/// (out of submission order when lanes complete at different speeds).
+struct PipelinedConn<W: Write + Send + 'static> {
+    engine: Arc<dyn Submit>,
+    writer: Arc<Mutex<W>>,
+    cq: CompletionQueue,
+    pending: Arc<Mutex<HashMap<u64, Pending>>>,
+    next_tag: u64,
+    pump: Option<std::thread::JoinHandle<()>>,
+}
+
+impl<W: Write + Send + 'static> PipelinedConn<W> {
+    fn new(engine: Arc<dyn Submit>, writer: Arc<Mutex<W>>) -> Self {
+        let cq: CompletionQueue = Channel::bounded(PIPELINE_COMPLETION_CAP);
+        let pending: Arc<Mutex<HashMap<u64, Pending>>> = Arc::new(Mutex::new(HashMap::new()));
+        let pump = {
+            let cq = cq.clone();
+            let pending = pending.clone();
+            let writer = writer.clone();
+            std::thread::Builder::new()
+                .name("datamux-conn-pump".into())
+                .spawn(move || run_completion_pump(&cq, &pending, &writer))
+                .expect("spawn completion pump")
+        };
+        PipelinedConn { engine, writer, cq, pending, next_tag: 1, pump: Some(pump) }
+    }
+
+    /// Handle one v2 line; returns false when the connection should close.
+    fn handle_line(&mut self, line: &str) -> bool {
+        let v = match Json::parse(line) {
+            Ok(v) => v,
+            Err(e) => {
+                self.write_error(&Json::Null, "bad_json", &e.to_string());
+                return true;
+            }
+        };
+        let id = v.get("id").cloned().unwrap_or(Json::Null);
+        match v.get("op").and_then(Json::as_str) {
+            Some("quit") => false,
+            Some("stats") => {
+                let line = attach_id(id, self.stats_json()).to_string();
+                let _ = write_line(&self.writer, &line);
+                true
+            }
+            Some("batch") => {
+                self.handle_batch(&id, &v);
+                true
+            }
+            Some("classify") | Some("tag") => {
+                self.handle_single(&id, &v);
+                true
+            }
+            Some(other) => {
+                self.write_error(&id, "bad_request", &format!("unknown op '{other}'"));
+                true
+            }
+            None => {
+                self.write_error(&id, "bad_request", "missing 'op'");
+                true
+            }
+        }
+    }
+
+    fn handle_single(&mut self, id: &Json, v: &Json) {
+        match parse_task_item(v) {
+            Err(msg) => self.write_error(id, "bad_request", &msg),
+            Ok((req, kind, want_logits)) => {
+                let tag = self.alloc_tag();
+                // register before submitting: the completion may land
+                // before submit_tagged even returns
+                self.pending.lock().unwrap().insert(
+                    tag,
+                    Pending { id: id.clone(), kind, want_logits, batch: None },
+                );
+                if let Err(e) = self.engine.submit_tagged(req, tag, &self.cq) {
+                    self.pending.lock().unwrap().remove(&tag);
+                    self.write_error(id, e.code(), &e.to_string());
+                }
+            }
+        }
+    }
+
+    fn handle_batch(&mut self, id: &Json, v: &Json) {
+        let items = match v.get("items").and_then(Json::as_arr) {
+            Some(items) => items,
+            None => {
+                self.write_error(id, "bad_request", "batch needs an 'items' array");
+                return;
+            }
+        };
+        if items.is_empty() {
+            let line = attach_id(
+                id.clone(),
+                obj(vec![("ok", Json::Bool(true)), ("results", Json::Arr(Vec::new()))]),
+            )
+            .to_string();
+            let _ = write_line(&self.writer, &line);
+            return;
+        }
+        let acc = Arc::new(Mutex::new(BatchAcc {
+            id: id.clone(),
+            remaining: items.len(),
+            results: vec![Json::Null; items.len()],
+        }));
+        for (idx, item) in items.iter().enumerate() {
+            match parse_task_item(item) {
+                Err(msg) => {
+                    self.finish_batch_item(&acc, idx, error_json("bad_request", &msg));
+                }
+                Ok((req, kind, want_logits)) => {
+                    let tag = self.alloc_tag();
+                    self.pending.lock().unwrap().insert(
+                        tag,
+                        Pending {
+                            id: Json::Null,
+                            kind,
+                            want_logits,
+                            batch: Some((acc.clone(), idx)),
+                        },
+                    );
+                    if let Err(e) = self.engine.submit_tagged(req, tag, &self.cq) {
+                        self.pending.lock().unwrap().remove(&tag);
+                        self.finish_batch_item(&acc, idx, error_json(e.code(), &e.to_string()));
+                    }
+                }
+            }
+        }
+    }
+
+    fn finish_batch_item(&self, acc: &Arc<Mutex<BatchAcc>>, idx: usize, result: Json) {
+        if let Some(line) = batch_item_done(acc, idx, result) {
+            let _ = write_line(&self.writer, &line);
+        }
+    }
+
+    fn stats_json(&self) -> Json {
+        let c = self.engine.counters();
+        let l = self.engine.latency();
+        obj(vec![
+            ("ok", Json::Bool(true)),
+            (
+                "stats",
+                obj(vec![
+                    ("submitted", num(c.submitted as f64)),
+                    ("completed", num(c.completed as f64)),
+                    ("rejected", num(c.rejected as f64)),
+                    ("expired", num(c.expired as f64)),
+                    ("groups", num(c.groups_executed as f64)),
+                    ("padded", num(c.slots_padded as f64)),
+                    ("queue_depth", num(self.engine.queue_depth() as f64)),
+                    ("p50_us", num(l.p50_ns as f64 / 1e3)),
+                    ("p99_us", num(l.p99_ns as f64 / 1e3)),
+                ]),
+            ),
+        ])
+    }
+
+    fn write_error(&self, id: &Json, code: &str, msg: &str) {
+        let line = attach_id(id.clone(), error_json(code, msg)).to_string();
+        let _ = write_line(&self.writer, &line);
+    }
+
+    fn alloc_tag(&mut self) -> u64 {
+        let t = self.next_tag;
+        self.next_tag += 1;
+        t
+    }
+}
+
+impl<W: Write + Send + 'static> Drop for PipelinedConn<W> {
+    fn drop(&mut self) {
+        // close the completion queue: the pump drains what already
+        // landed, then exits; late completions are dropped harmlessly
+        self.cq.close();
+        if let Some(p) = self.pump.take() {
+            let _ = p.join();
+        }
+    }
+}
+
+/// Drain tagged completions and write replies, in completion order.
+fn run_completion_pump<W: Write>(
+    cq: &CompletionQueue,
+    pending: &Mutex<HashMap<u64, Pending>>,
+    writer: &Mutex<W>,
+) {
+    while let Some((tag, result)) = cq.recv() {
+        let info = match pending.lock().unwrap().remove(&tag) {
+            Some(info) => info,
+            None => continue, // already answered synchronously
+        };
+        let payload = match result {
+            Ok(r) => success_json(info.kind, info.want_logits, &r),
+            Err(e) => error_json(e.code(), &e.to_string()),
+        };
+        match info.batch {
+            None => {
+                let line = attach_id(info.id, payload).to_string();
+                let _ = write_line(writer, &line);
+            }
+            Some((acc, idx)) => {
+                if let Some(line) = batch_item_done(&acc, idx, payload) {
+                    let _ = write_line(writer, &line);
+                }
+            }
+        }
+    }
+}
+
+/// Record one finished batch item; returns the reply line when the whole
+/// batch is done.
+fn batch_item_done(acc: &Mutex<BatchAcc>, idx: usize, result: Json) -> Option<String> {
+    let mut a = acc.lock().unwrap();
+    a.results[idx] = result;
+    a.remaining -= 1;
+    if a.remaining > 0 {
+        return None;
+    }
+    let results = std::mem::take(&mut a.results);
+    Some(
+        attach_id(
+            a.id.clone(),
+            obj(vec![("ok", Json::Bool(true)), ("results", Json::Arr(results))]),
+        )
+        .to_string(),
+    )
+}
+
+/// Parse one task object (`op`/`text`|`ids`/`deadline_ms`/`logits`) into
+/// a typed request.
+fn parse_task_item(v: &Json) -> Result<(InferenceRequest, TaskKind, bool), String> {
+    let kind = match v.get("op").and_then(Json::as_str) {
+        Some("classify") | None => TaskKind::Classify,
+        Some("tag") => TaskKind::TagTokens,
+        Some(other) => return Err(format!("unknown op '{other}'")),
+    };
+    let payload = if let Some(ids) = v.get("ids").and_then(Json::as_arr) {
+        let mut parsed = Vec::with_capacity(ids.len());
+        for x in ids {
+            // strict: reject floats and out-of-range values instead of
+            // silently truncating/wrapping them into wrong token ids
+            match x.as_f64() {
+                Some(f)
+                    if f.fract() == 0.0
+                        && (i32::MIN as f64..=i32::MAX as f64).contains(&f) =>
+                {
+                    parsed.push(f as i32)
+                }
+                _ => return Err("'ids' must be an array of i32 integers".to_string()),
+            }
+        }
+        Payload::Framed(parsed)
+    } else if let Some(text) = v.get("text").and_then(Json::as_str) {
+        Payload::Text(text.to_string())
+    } else {
+        return Err("missing 'text' or 'ids'".to_string());
+    };
+    // clamp to [0, 1 day]: Duration::from_secs_f64 panics on huge or
+    // non-finite input, and a panic here would kill the connection thread
+    let deadline = v
+        .get("deadline_ms")
+        .and_then(Json::as_f64)
+        .filter(|ms| ms.is_finite())
+        .map(|ms| Duration::from_secs_f64(ms.clamp(0.0, 86_400_000.0) / 1e3));
+    let want_logits = v.get("logits").and_then(Json::as_bool).unwrap_or(false);
+    Ok((InferenceRequest { task: kind, payload, deadline }, kind, want_logits))
+}
+
+fn success_json(kind: TaskKind, want_logits: bool, r: &Response) -> Json {
+    let mut fields = vec![
+        ("ok", Json::Bool(true)),
+        ("slot", num(r.slot as f64)),
+        ("group", num(r.group as f64)),
+        ("us", num(r.latency.as_micros() as f64)),
+    ];
+    match kind {
+        TaskKind::Classify => fields.push(("pred", num(r.pred_class() as f64))),
+        TaskKind::TagTokens => fields.push((
+            "tags",
+            Json::Arr(r.pred_tokens().into_iter().map(|t| num(t as f64)).collect()),
+        )),
+    }
+    if want_logits {
+        fields.push((
+            "logits",
+            Json::Arr(r.logits.iter().map(|&x| num(x as f64)).collect()),
+        ));
+    }
+    obj(fields)
+}
+
+fn error_json(code: &str, msg: &str) -> Json {
+    obj(vec![("ok", Json::Bool(false)), ("error", s(code)), ("message", s(msg))])
+}
+
+fn attach_id(id: Json, payload: Json) -> Json {
+    match payload {
+        Json::Obj(mut m) => {
+            m.insert("id".to_string(), id);
+            Json::Obj(m)
+        }
+        other => other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::EngineError;
+    use crate::coordinator::EngineBuilder;
+    use crate::runtime::FakeBackend;
+    use std::time::Instant;
+
+    fn fake_cls_engine() -> Arc<dyn Submit> {
+        Arc::new(
+            EngineBuilder::new()
+                .max_wait_ms(0)
+                .build_backend(Arc::new(FakeBackend::new("cls", 2, 1, 8, 3)))
+                .unwrap(),
+        )
+    }
+
+    fn new_conn(engine: Arc<dyn Submit>) -> (PipelinedConn<Vec<u8>>, Arc<Mutex<Vec<u8>>>) {
+        let writer = Arc::new(Mutex::new(Vec::new()));
+        (PipelinedConn::new(engine, writer.clone()), writer)
+    }
+
+    fn lines(writer: &Mutex<Vec<u8>>) -> Vec<String> {
+        String::from_utf8(writer.lock().unwrap().clone())
+            .unwrap()
+            .lines()
+            .map(|l| l.to_string())
+            .collect()
+    }
+
+    /// Poll until `n` reply lines landed (completions are asynchronous).
+    fn wait_for_lines(writer: &Mutex<Vec<u8>>, n: usize) -> Vec<String> {
+        let t0 = Instant::now();
+        loop {
+            let ls = lines(writer);
+            if ls.len() >= n {
+                return ls;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "timed out waiting for {n} reply lines; got {ls:?}"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn v1_unknown_command_and_stats() {
+        let engine = fake_cls_engine();
+        let reply = handle_line("BOGUS x", engine.as_ref()).unwrap();
+        assert!(reply.starts_with("ERR"), "{reply}");
+        let stats = handle_line("STATS", engine.as_ref()).unwrap();
+        assert!(stats.contains("submitted="), "{stats}");
+        assert!(handle_line("QUIT", engine.as_ref()).is_none());
+    }
+
+    #[test]
+    fn v1_cls_roundtrip_and_tokenize_error() {
+        let engine = fake_cls_engine();
+        let reply = handle_line("CLS t1 t2 t3", engine.as_ref()).unwrap();
+        assert!(reply.starts_with("OK "), "{reply}");
+        let reply = handle_line("CLS hello world", engine.as_ref()).unwrap();
+        assert!(reply.starts_with("ERR"), "unknown words must ERR: {reply}");
+    }
+
+    #[test]
+    fn v2_malformed_json_and_unknown_op() {
+        let (mut conn, writer) = new_conn(fake_cls_engine());
+        assert!(conn.handle_line("{nope"));
+        assert!(conn.handle_line(r#"{"id":7,"op":"frobnicate"}"#));
+        assert!(conn.handle_line(r#"{"id":8}"#));
+        let ls = lines(&writer);
+        assert_eq!(ls.len(), 3, "{ls:?}");
+        assert!(ls[0].contains("bad_json"), "{}", ls[0]);
+        assert!(ls[1].contains("bad_request") && ls[1].contains("\"id\":7"), "{}", ls[1]);
+        assert!(ls[2].contains("missing 'op'"), "{}", ls[2]);
+    }
+
+    #[test]
+    fn v2_classify_echoes_id_and_predicts() {
+        let (mut conn, writer) = new_conn(fake_cls_engine());
+        assert!(conn.handle_line(r#"{"id":"req-a","op":"classify","text":"t1 t2"}"#));
+        let ls = wait_for_lines(&writer, 1);
+        assert!(ls[0].contains("\"id\":\"req-a\""), "{}", ls[0]);
+        assert!(ls[0].contains("\"ok\":true"), "{}", ls[0]);
+        // [CLS]=1 t1=45 t2=46 [SEP]=2 + padding -> sum=94 -> 94 % 3 = 1
+        assert!(ls[0].contains("\"pred\":1"), "{}", ls[0]);
+    }
+
+    #[test]
+    fn v2_wrong_task_is_typed() {
+        let (mut conn, writer) = new_conn(fake_cls_engine());
+        assert!(conn.handle_line(r#"{"id":1,"op":"tag","text":"t1"}"#));
+        let ls = lines(&writer);
+        assert!(ls[0].contains("wrong_task"), "{}", ls[0]);
+    }
+
+    #[test]
+    fn v2_batch_mixes_success_and_typed_errors() {
+        let (mut conn, writer) = new_conn(fake_cls_engine());
+        // item 0: valid framed ids; item 1: wrong frame length
+        assert!(conn.handle_line(
+            r#"{"id":"b1","op":"batch","items":[
+                {"op":"classify","ids":[1,45,46,2,0,0,0,0]},
+                {"op":"classify","ids":[1,2,3]}]}"#
+                .replace('\n', " ")
+                .trim()
+        ));
+        let ls = wait_for_lines(&writer, 1);
+        assert_eq!(ls.len(), 1, "batch answers on one line: {ls:?}");
+        assert!(ls[0].contains("\"id\":\"b1\""), "{}", ls[0]);
+        // sum(1+45+46+2)=94 -> pred 1
+        assert!(ls[0].contains("\"pred\":1"), "{}", ls[0]);
+        assert!(ls[0].contains("bad_frame"), "{}", ls[0]);
+    }
+
+    #[test]
+    fn v2_hostile_deadline_and_float_ids_are_handled() {
+        let (mut conn, writer) = new_conn(fake_cls_engine());
+        // a huge deadline must not panic Duration::from_secs_f64 — it is
+        // clamped and the request completes normally
+        assert!(conn.handle_line(
+            r#"{"id":1,"op":"classify","text":"t1","deadline_ms":1e300}"#
+        ));
+        let ls = wait_for_lines(&writer, 1);
+        assert!(ls[0].contains("\"ok\":true"), "{}", ls[0]);
+        // non-integer ids are rejected, not silently truncated
+        assert!(conn.handle_line(r#"{"id":2,"op":"classify","ids":[1.5,2,3,4,5,6,7,8]}"#));
+        let ls = wait_for_lines(&writer, 2);
+        assert!(ls[1].contains("bad_request"), "{}", ls[1]);
+    }
+
+    #[test]
+    fn v2_stats_and_quit() {
+        let (mut conn, writer) = new_conn(fake_cls_engine());
+        assert!(conn.handle_line(r#"{"id":0,"op":"stats"}"#));
+        assert!(!conn.handle_line(r#"{"op":"quit"}"#), "quit closes");
+        let ls = lines(&writer);
+        assert!(ls[0].contains("\"queue_depth\""), "{}", ls[0]);
+    }
+
+    #[test]
+    fn v2_queue_full_is_reported_while_pipeline_continues() {
+        let engine: Arc<dyn Submit> = Arc::new(
+            EngineBuilder::new()
+                .max_wait_ms(0)
+                .queue_cap(1)
+                .build_backend(Arc::new(
+                    FakeBackend::new("cls", 2, 1, 8, 3).with_delay(Duration::from_millis(40)),
+                ))
+                .unwrap(),
+        );
+        let (mut conn, writer) = new_conn(engine);
+        let n = 30;
+        for i in 0..n {
+            assert!(conn.handle_line(&format!(
+                r#"{{"id":{i},"op":"classify","ids":[1,45,46,2,0,0,0,{i}]}}"#
+            )));
+        }
+        // every submission eventually produces exactly one reply line:
+        // queue_full synchronously, or a completion through the pump
+        let ls = wait_for_lines(&writer, n);
+        assert_eq!(ls.len(), n);
+        let full = ls.iter().filter(|l| l.contains("queue_full")).count();
+        let ok = ls.iter().filter(|l| l.contains("\"ok\":true")).count();
+        assert!(full >= 1, "expected at least one queue_full: {ls:?}");
+        assert!(ok >= 1, "expected at least one success: {ls:?}");
+        assert_eq!(full + ok, n);
+    }
+
+    #[test]
+    fn pump_writes_replies_in_completion_order_not_submission_order() {
+        let cq: CompletionQueue = Channel::bounded(8);
+        let pending = Mutex::new(HashMap::new());
+        for (tag, id) in [(1u64, "first"), (2, "second")] {
+            pending.lock().unwrap().insert(
+                tag,
+                Pending {
+                    id: s(id),
+                    kind: TaskKind::Classify,
+                    want_logits: false,
+                    batch: None,
+                },
+            );
+        }
+        let resp = |id: u64| Response {
+            id,
+            slot: 0,
+            group: 0,
+            logits: vec![0.0, 1.0],
+            n_classes: 2,
+            latency: Duration::ZERO,
+        };
+        // completions land out of submission order: tag 2 first
+        cq.send((2, Ok(resp(2)))).unwrap();
+        cq.send((1, Err(EngineError::DeadlineExceeded))).unwrap();
+        cq.close();
+        let writer = Mutex::new(Vec::new());
+        run_completion_pump(&cq, &pending, &writer);
+        let ls = lines(&writer);
+        assert_eq!(ls.len(), 2);
+        assert!(ls[0].contains("\"id\":\"second\"") && ls[0].contains("\"ok\":true"), "{}", ls[0]);
+        assert!(ls[1].contains("\"id\":\"first\"") && ls[1].contains("deadline"), "{}", ls[1]);
+        assert!(pending.lock().unwrap().is_empty());
     }
 }

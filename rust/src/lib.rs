@@ -13,8 +13,9 @@
 //!   demultiplexes the outputs back to individual responses (paper Fig 1).
 //!
 //! Python never runs on the request path; after `make artifacts` the rust
-//! binary is self-contained. See DESIGN.md for the system inventory and
-//! EXPERIMENTS.md for the paper-vs-measured record.
+//! binary is self-contained. See DESIGN.md for the system inventory, the
+//! submission API ([`coordinator::Submit`]) and the wire protocol
+//! grammar (v1 + v2).
 
 pub mod baseline;
 pub mod coordinator;
@@ -23,5 +24,8 @@ pub mod tokenizer;
 pub mod util;
 pub mod workload;
 
-pub use coordinator::{CoordinatorConfig, MuxCoordinator, MuxRouter};
-pub use runtime::{ArtifactManifest, ModelRuntime};
+pub use coordinator::{
+    CoordinatorConfig, EngineBuilder, EngineError, InferenceRequest, MuxCoordinator, MuxRouter,
+    Payload, RequestHandle, Response, Submit, SubmitError, TaskKind,
+};
+pub use runtime::{ArtifactManifest, FakeBackend, InferenceBackend, ModelRuntime};

@@ -1,11 +1,10 @@
-//! `datamux` CLI: serve an artifact over TCP or run one-shot inspection
-//! commands. Examples live in examples/ — this binary is the long-running
-//! leader entrypoint.
+//! `datamux` CLI: serve an artifact (or an adaptive-N router over
+//! several) over TCP, or run one-shot inspection commands. Examples live
+//! in examples/ — this binary is the long-running leader entrypoint.
 use std::sync::Arc;
 
 use anyhow::Result;
-use datamux::coordinator::server::{Server, ServerConfig};
-use datamux::coordinator::{CoordinatorConfig, MuxCoordinator, SlotPolicy};
+use datamux::coordinator::{EngineBuilder, SlotPolicy, Submit};
 use datamux::runtime::{default_artifacts_dir, ArtifactManifest, ModelRuntime};
 use datamux::util::cli::Args;
 
@@ -16,7 +15,10 @@ fn main() -> Result<()> {
         .describe("artifact", "", "artifact name (default: first trained, else first)")
         .describe("addr", "127.0.0.1:7071", "TCP bind address for serve")
         .describe("max-wait-ms", "5", "batcher deadline")
-        .describe("rotate-slots", "false", "rotate slot assignment (paper A3)");
+        .describe("queue-cap", "1024", "admission queue capacity")
+        .describe("rotate-slots", "false", "rotate slot assignment (paper A3)")
+        .describe("adaptive", "false", "serve an adaptive-N router over every N of a profile")
+        .describe("profile", "", "profile for --adaptive (default: first with most N lanes)");
     let cmd = args.str("cmd", "serve");
     let dir = match args.str("artifacts", "") {
         s if s.is_empty() => default_artifacts_dir(),
@@ -46,37 +48,70 @@ fn main() -> Result<()> {
             Ok(())
         }
         "serve" => {
-            let name = args.str("artifact", "");
-            let meta = if name.is_empty() {
-                manifest
-                    .artifacts
-                    .iter()
-                    .find(|a| a.trained)
-                    .or_else(|| manifest.artifacts.first())
-                    .ok_or_else(|| anyhow::anyhow!("no artifacts"))?
-            } else {
-                manifest
-                    .find(&name)
-                    .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not found"))?
-            };
-            let rt = ModelRuntime::cpu()?;
-            println!("loading {} (N={}, batch={})", meta.name, meta.n_mux, meta.batch);
-            let model = rt.load(meta)?;
-            let cfg = CoordinatorConfig {
-                max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms", 5)),
-                slot_policy: if args.bool("rotate-slots", false) {
+            let builder = EngineBuilder::new()
+                .max_wait_ms(args.u64("max-wait-ms", 5))
+                .queue_cap(args.usize("queue-cap", 1024))
+                .slot_policy(if args.bool("rotate-slots", false) {
                     SlotPolicy::RotateOffset
                 } else {
                     SlotPolicy::Fill
-                },
-                ..Default::default()
+                })
+                .addr(args.str("addr", "127.0.0.1:7071"))
+                .max_connections(64);
+            let rt = ModelRuntime::cpu()?;
+
+            // both branches produce the same trait object: the server is
+            // generic over whichever engine shape is behind it
+            let engine: Arc<dyn Submit> = if args.bool("adaptive", false) {
+                let profile = match args.str("profile", "") {
+                    p if !p.is_empty() => p,
+                    _ => best_profile(&manifest)
+                        .ok_or_else(|| anyhow::anyhow!("no timing artifacts for --adaptive"))?,
+                };
+                let mut ns: Vec<usize> = manifest
+                    .artifacts
+                    .iter()
+                    .filter(|a| !a.trained && a.profile == profile)
+                    .map(|a| a.n_mux)
+                    .collect();
+                ns.sort_unstable();
+                ns.dedup();
+                let mut models = Vec::new();
+                for n in &ns {
+                    let meta = manifest
+                        .artifacts
+                        .iter()
+                        .filter(|a| !a.trained && a.profile == profile && a.n_mux == *n)
+                        .min_by_key(|a| a.batch)
+                        .unwrap();
+                    println!("lane: {} (N={}, batch={})", meta.name, meta.n_mux, meta.batch);
+                    models.push(rt.load(meta)?);
+                }
+                Arc::new(builder.build_router(models)?)
+            } else {
+                let name = args.str("artifact", "");
+                let meta = if name.is_empty() {
+                    manifest
+                        .artifacts
+                        .iter()
+                        .find(|a| a.trained)
+                        .or_else(|| manifest.artifacts.first())
+                        .ok_or_else(|| anyhow::anyhow!("no artifacts"))?
+                } else {
+                    manifest
+                        .find(&name)
+                        .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not found"))?
+                };
+                println!("loading {} (N={}, batch={})", meta.name, meta.n_mux, meta.batch);
+                Arc::new(builder.build(rt.load(meta)?)?)
             };
-            let coord = Arc::new(MuxCoordinator::start(model, cfg)?);
-            let server = Server::start(
-                coord,
-                ServerConfig { addr: args.str("addr", "127.0.0.1:7071"), max_connections: 64 },
-            )?;
-            println!("serving on {} — protocol: CLS/TOK/STATS/QUIT", server.local_addr);
+
+            let server = builder.serve(engine)?;
+            println!(
+                "serving on {} — v1: CLS/TOK/STATS/QUIT, v2: line JSON \
+                 (classify/tag/batch/stats, pipelined)",
+                server.local_addr
+            );
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(60));
             }
@@ -86,4 +121,28 @@ fn main() -> Result<()> {
             std::process::exit(2);
         }
     }
+}
+
+/// The untrained profile with the most distinct N lanes (best router fit).
+fn best_profile(manifest: &ArtifactManifest) -> Option<String> {
+    let mut profiles: Vec<&str> = manifest
+        .artifacts
+        .iter()
+        .filter(|a| !a.trained)
+        .map(|a| a.profile.as_str())
+        .collect();
+    profiles.sort();
+    profiles.dedup();
+    profiles
+        .into_iter()
+        .max_by_key(|p| {
+            manifest
+                .artifacts
+                .iter()
+                .filter(|a| !a.trained && a.profile == *p)
+                .map(|a| a.n_mux)
+                .collect::<std::collections::HashSet<_>>()
+                .len()
+        })
+        .map(|p| p.to_string())
 }

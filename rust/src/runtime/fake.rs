@@ -1,0 +1,183 @@
+//! A deterministic, artifact-free [`InferenceBackend`].
+//!
+//! Lets the whole serving stack — batcher, scheduler, coordinator,
+//! router, TCP server, both wire protocols — run end-to-end without PJRT
+//! or `make artifacts`. The "model" is a pure function of the content
+//! ids, so tests can verify that demultiplexed responses are routed back
+//! to the right request (no crossed wires):
+//!
+//! * `cls`: the predicted class of a row is
+//!   `sum(content ids) % n_classes` (slot prefix excluded, so the
+//!   prediction is independent of which mux slot served the request).
+//! * `token`: position `j` predicts `(id_j + j) % n_classes`.
+//!
+//! Knobs: a per-execution `delay` (to exercise queueing, deadlines and
+//! backpressure) and `fail_after` (to exercise worker-death recovery).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use anyhow::bail;
+
+use super::manifest::ArtifactMeta;
+use super::InferenceBackend;
+
+pub struct FakeBackend {
+    meta: ArtifactMeta,
+    delay: Duration,
+    /// fail every run_ids call after this many successful ones
+    fail_after: Option<u64>,
+    calls: AtomicU64,
+}
+
+impl FakeBackend {
+    /// A fake `task` ("cls" or "token") model: `input_len` is
+    /// `seq_len + n_mux` (index-prefix layout, like the real artifacts).
+    pub fn new(task: &str, n_mux: usize, batch: usize, seq_len: usize, n_classes: usize) -> Self {
+        let meta = ArtifactMeta {
+            name: format!("fake_{task}_n{n_mux}_b{batch}"),
+            hlo: PathBuf::from("fake.hlo.txt"),
+            weights: PathBuf::from("fake.weights.bin"),
+            profile: "fake".to_string(),
+            n_mux,
+            seq_len,
+            input_len: seq_len + n_mux,
+            batch,
+            d_model: 8,
+            n_layers: 1,
+            n_heads: 1,
+            task: task.to_string(),
+            n_classes,
+            mux: "hadamard".to_string(),
+            demux: "index_embed".to_string(),
+            vocab_size: 300,
+            n_weight_tensors: 0,
+            trained: false,
+            train_task: None,
+            train_accuracy: None,
+            parity: None,
+        };
+        FakeBackend { meta, delay: Duration::ZERO, fail_after: None, calls: AtomicU64::new(0) }
+    }
+
+    /// Sleep this long per execution (models a slow backbone).
+    pub fn with_delay(mut self, delay: Duration) -> Self {
+        self.delay = delay;
+        self
+    }
+
+    /// Succeed `n` executions, then fail every subsequent one.
+    pub fn failing_after(mut self, n: u64) -> Self {
+        self.fail_after = Some(n);
+        self
+    }
+
+    /// The class the fake predicts for a framed content row.
+    pub fn expected_class(content: &[i32], n_classes: usize) -> usize {
+        let sum: i64 = content.iter().map(|&t| t as i64).sum();
+        (sum.rem_euclid(n_classes as i64)) as usize
+    }
+
+    /// The tag the fake predicts at `position` for content id `id`.
+    pub fn expected_tag(id: i32, position: usize, n_classes: usize) -> usize {
+        ((id as i64 + position as i64).rem_euclid(n_classes as i64)) as usize
+    }
+}
+
+impl InferenceBackend for FakeBackend {
+    fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    fn run_ids(&self, ids: &[i32]) -> anyhow::Result<Vec<f32>> {
+        let m = &self.meta;
+        anyhow::ensure!(
+            ids.len() == m.ids_len(),
+            "fake backend: ids length {} != expected {}",
+            ids.len(),
+            m.ids_len()
+        );
+        let n_calls = self.calls.fetch_add(1, Ordering::Relaxed);
+        if let Some(limit) = self.fail_after {
+            if n_calls >= limit {
+                bail!("synthetic backend failure (call {} > limit {})", n_calls + 1, limit);
+            }
+        }
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        let prefix = m.input_len - m.seq_len;
+        let rows = m.batch * m.n_mux;
+        let mut out = vec![0.0f32; m.output_len()];
+        for r in 0..rows {
+            let content = &ids[r * m.input_len + prefix..(r + 1) * m.input_len];
+            match m.task.as_str() {
+                "cls" => {
+                    let k = Self::expected_class(content, m.n_classes);
+                    out[r * m.n_classes + k] = 1.0;
+                }
+                "token" => {
+                    let base = r * m.seq_len * m.n_classes;
+                    for (j, &id) in content.iter().enumerate() {
+                        let k = Self::expected_tag(id, j, m.n_classes);
+                        out[base + j * m.n_classes + k] = 1.0;
+                    }
+                }
+                other => bail!("fake backend: unsupported task {other}"),
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cls_logits_are_content_deterministic_and_slot_independent() {
+        let b = FakeBackend::new("cls", 2, 1, 4, 3);
+        let m = b.meta().clone();
+        // two slots with the same content but different prefixes
+        let content = [1, 40, 7, 0];
+        let mut ids = vec![0i32; m.ids_len()];
+        for slot in 0..2 {
+            let row = &mut ids[slot * m.input_len..(slot + 1) * m.input_len];
+            row[0] = if slot == 0 { 4 } else { 3 };
+            row[1] = if slot == 1 { 5 } else { 3 };
+            row[2..].copy_from_slice(&content);
+        }
+        let out = b.run_ids(&ids).unwrap();
+        let want = FakeBackend::expected_class(&content, 3);
+        for slot in 0..2 {
+            let logits = &out[slot * 3..(slot + 1) * 3];
+            assert_eq!(crate::coordinator::request::argmax(logits), want, "slot {slot}");
+        }
+    }
+
+    #[test]
+    fn token_logits_follow_positions() {
+        let b = FakeBackend::new("token", 1, 1, 3, 5);
+        let m = b.meta().clone();
+        let mut ids = vec![0i32; m.ids_len()];
+        ids[1..].copy_from_slice(&[10, 11, 12]);
+        let out = b.run_ids(&ids).unwrap();
+        for j in 0..3 {
+            let logits = &out[j * 5..(j + 1) * 5];
+            assert_eq!(
+                crate::coordinator::request::argmax(logits),
+                FakeBackend::expected_tag(10 + j as i32, j, 5)
+            );
+        }
+    }
+
+    #[test]
+    fn failing_after_trips() {
+        let b = FakeBackend::new("cls", 1, 1, 2, 2).failing_after(1);
+        let ids = vec![0i32; b.meta().ids_len()];
+        assert!(b.run_ids(&ids).is_ok());
+        assert!(b.run_ids(&ids).is_err());
+        assert!(b.run_ids(&ids).is_err());
+    }
+}

@@ -5,10 +5,28 @@
 //! (PJRT CPU client) to compile HLO text and execute with device-resident
 //! weights. See `/opt/xla-example/` for the reference wiring this adapts.
 
+pub mod fake;
 pub mod manifest;
 pub mod model;
 pub mod weights;
 
+pub use fake::FakeBackend;
 pub use manifest::{ArtifactManifest, ArtifactMeta, Parity, VocabLayout};
 pub use model::{default_artifacts_dir, LoadedModel, ModelRuntime};
 pub use weights::WeightsFile;
+
+/// Anything the coordinator can execute a mux group on.
+///
+/// Implemented by the PJRT-backed
+/// [`SharedModel`](crate::coordinator::SharedModel) and by
+/// [`FakeBackend`] (deterministic, artifact-free — used by tests and
+/// demos). The coordinator only ever calls these two methods on the hot
+/// path.
+pub trait InferenceBackend: Send + Sync {
+    /// Shape / task metadata the engine must agree on with the model.
+    fn meta(&self) -> &ArtifactMeta;
+
+    /// Execute on raw token ids (flattened `(batch, n_mux, input_len)`),
+    /// returning flattened f32 logits of length `meta().output_len()`.
+    fn run_ids(&self, ids: &[i32]) -> anyhow::Result<Vec<f32>>;
+}

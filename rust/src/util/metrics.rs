@@ -127,6 +127,33 @@ pub struct LatencySummary {
 }
 
 impl LatencySummary {
+    /// Approximate merge of two summaries. Count-weighted averages for
+    /// mean and p50 (max would overstate the median by the full
+    /// inter-lane spread when traffic is skewed to a fast lane); max for
+    /// p95/p99 (a conservative bound is the right direction for tails).
+    /// Exact when one side is empty.
+    pub fn merge(self, o: LatencySummary) -> LatencySummary {
+        if self.count == 0 {
+            return o;
+        }
+        if o.count == 0 {
+            return self;
+        }
+        let total = self.count + o.count;
+        let weighted = |a: u64, b: u64| -> u64 {
+            ((a as f64 * self.count as f64 + b as f64 * o.count as f64) / total as f64) as u64
+        };
+        LatencySummary {
+            count: total,
+            mean_ns: (self.mean_ns * self.count as f64 + o.mean_ns * o.count as f64)
+                / total as f64,
+            p50_ns: weighted(self.p50_ns, o.p50_ns),
+            p95_ns: self.p95_ns.max(o.p95_ns),
+            p99_ns: self.p99_ns.max(o.p99_ns),
+            max_ns: self.max_ns.max(o.max_ns),
+        }
+    }
+
     pub fn render(&self, label: &str) -> String {
         format!(
             "{label}: n={} mean={} p50={} p95={} p99={} max={}",
@@ -158,6 +185,7 @@ pub struct Counters {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
     pub rejected: AtomicU64,
+    pub expired: AtomicU64,
     pub groups_executed: AtomicU64,
     pub slots_padded: AtomicU64,
 }
@@ -168,19 +196,35 @@ impl Counters {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
             groups_executed: self.groups_executed.load(Ordering::Relaxed),
             slots_padded: self.slots_padded.load(Ordering::Relaxed),
         }
     }
 }
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CounterSnapshot {
     pub submitted: u64,
     pub completed: u64,
     pub rejected: u64,
+    pub expired: u64,
     pub groups_executed: u64,
     pub slots_padded: u64,
+}
+
+impl CounterSnapshot {
+    /// Field-wise sum — aggregates lanes behind a router.
+    pub fn merge(self, o: CounterSnapshot) -> CounterSnapshot {
+        CounterSnapshot {
+            submitted: self.submitted + o.submitted,
+            completed: self.completed + o.completed,
+            rejected: self.rejected + o.rejected,
+            expired: self.expired + o.expired,
+            groups_executed: self.groups_executed + o.groups_executed,
+            slots_padded: self.slots_padded + o.slots_padded,
+        }
+    }
 }
 
 /// Wall-clock throughput meter.

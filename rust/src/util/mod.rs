@@ -1,8 +1,9 @@
 //! Substrate modules built from scratch for the offline environment.
 //!
-//! Only the `xla` crate (and `anyhow`) is vendored in this image, so the
-//! pieces a serving framework normally pulls from the ecosystem are
-//! implemented here: JSON (`json`), PRNG (`rng`), CLI parsing (`cli`),
+//! Only the `xla` crate (and `anyhow`) are depended on — vendored as
+//! path crates under `rust/vendor/` — so the pieces a serving framework
+//! normally pulls from the ecosystem are implemented here: JSON
+//! (`json`), PRNG (`rng`), CLI parsing (`cli`),
 //! a thread pool + MPMC channel (`threadpool`), latency/throughput
 //! metrics (`metrics`), a criterion-style bench harness (`bench`), and a
 //! small property-testing helper (`proptest`).

@@ -42,6 +42,23 @@ pub enum SendError {
     Closed,
 }
 
+/// Non-blocking send failure: the item is handed back either way, but
+/// the two causes are distinct (the admission path maps them to
+/// different typed submit errors).
+#[derive(Debug)]
+pub enum TrySendError<T> {
+    Full(T),
+    Closed(T),
+}
+
+impl<T> TrySendError<T> {
+    pub fn into_inner(self) -> T {
+        match self {
+            TrySendError::Full(t) | TrySendError::Closed(t) => t,
+        }
+    }
+}
+
 impl<T> Channel<T> {
     pub fn bounded(cap: usize) -> Self {
         assert!(cap > 0);
@@ -72,11 +89,15 @@ impl<T> Channel<T> {
         }
     }
 
-    /// Non-blocking send attempt; Err(item) if full/closed.
-    pub fn try_send(&self, item: T) -> Result<(), T> {
+    /// Non-blocking send attempt; the error distinguishes full from
+    /// closed and hands the item back.
+    pub fn try_send(&self, item: T) -> Result<(), TrySendError<T>> {
         let mut st = self.inner.q.lock().unwrap();
-        if st.closed || st.buf.len() >= self.inner.cap {
-            return Err(item);
+        if st.closed {
+            return Err(TrySendError::Closed(item));
+        }
+        if st.buf.len() >= self.inner.cap {
+            return Err(TrySendError::Full(item));
         }
         st.buf.push_back(item);
         self.inner.not_empty.notify_one();
@@ -300,7 +321,7 @@ mod tests {
     fn channel_backpressure_blocks_then_releases() {
         let c = Channel::bounded(1);
         c.send(1u32).unwrap();
-        assert!(c.try_send(2).is_err());
+        assert!(matches!(c.try_send(2), Err(TrySendError::Full(2))));
         let c2 = c.clone();
         let h = std::thread::spawn(move || c2.send(2).unwrap());
         std::thread::sleep(Duration::from_millis(20));
@@ -317,6 +338,7 @@ mod tests {
         assert_eq!(c.recv(), Some(1));
         assert_eq!(c.recv(), None);
         assert_eq!(c.send(2), Err(SendError::Closed));
+        assert!(matches!(c.try_send(3), Err(TrySendError::Closed(3))));
     }
 
     #[test]

@@ -20,7 +20,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::coordinator::MuxCoordinator;
+use crate::coordinator::{Submit, SubmitError};
 use crate::tokenizer::Tokenizer;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -156,9 +156,10 @@ pub struct LoadReport {
 /// Closed-loop driver: `clients` threads, each submitting `per_client`
 /// requests back-to-back (submit -> wait -> next). Rows are cycled from
 /// `rows`. This is the Fig 4c measurement shape: offered load always
-/// saturates the coordinator.
-pub fn closed_loop(
-    coord: &Arc<MuxCoordinator>,
+/// saturates the engine. Generic over [`Submit`], so it drives a
+/// coordinator and an adaptive-N router identically.
+pub fn closed_loop<S: Submit + ?Sized + 'static>(
+    engine: &Arc<S>,
     rows: &Arc<Vec<Vec<i32>>>,
     clients: usize,
     per_client: usize,
@@ -167,15 +168,17 @@ pub fn closed_loop(
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for c in 0..clients {
-        let coord = coord.clone();
+        let engine = engine.clone();
         let rows = rows.clone();
         let completed = completed.clone();
         handles.push(std::thread::spawn(move || {
             for i in 0..per_client {
                 let row = rows[(c * per_client + i) % rows.len()].clone();
-                match coord.submit_framed(row) {
+                match engine.submit_framed(row) {
                     Ok(h) => {
-                        h.wait();
+                        if h.wait().is_err() {
+                            return;
+                        }
                         completed.fetch_add(1, Ordering::Relaxed);
                     }
                     Err(_) => return,
@@ -199,38 +202,42 @@ pub fn closed_loop(
 
 /// Offline batch pass (the paper's Fig 4c measurement shape: a full
 /// dataset pass, throughput = items / wall). All requests are enqueued up
-/// front so the batcher always forms *full* mux groups; the coordinator's
+/// front so the batcher always forms *full* mux groups; the engine's
 /// queue must be sized >= total.
-pub fn batch_pass(
-    coord: &Arc<MuxCoordinator>,
+pub fn batch_pass<S: Submit + ?Sized>(
+    engine: &Arc<S>,
     rows: &[Vec<i32>],
     total: usize,
 ) -> LoadReport {
     let t0 = Instant::now();
     let mut handles = Vec::with_capacity(total);
     for i in 0..total {
-        match coord.submit_framed(rows[i % rows.len()].clone()) {
+        match engine.submit_framed(rows[i % rows.len()].clone()) {
             Ok(h) => handles.push(h),
             Err(_) => break,
         }
     }
+    let mut completed = 0usize;
     for h in &handles {
-        h.wait();
+        if h.wait().is_ok() {
+            completed += 1;
+        }
     }
     let wall = t0.elapsed();
     LoadReport {
         submitted: total,
-        completed: handles.len(),
-        rejected: total - handles.len(),
+        completed,
+        rejected: total - completed,
         wall,
-        throughput_rps: handles.len() as f64 / wall.as_secs_f64(),
+        throughput_rps: completed as f64 / wall.as_secs_f64(),
     }
 }
 
 /// Open-loop driver: Poisson arrivals at `rate_rps` for `duration`.
-/// Returns when all accepted requests have completed.
-pub fn open_loop(
-    coord: &Arc<MuxCoordinator>,
+/// Returns when all accepted requests have completed. Queue-full
+/// rejections count as rejected; a shut-down engine stops the run.
+pub fn open_loop<S: Submit + ?Sized>(
+    engine: &Arc<S>,
     rows: &Arc<Vec<Vec<i32>>>,
     rate_rps: f64,
     duration: Duration,
@@ -248,23 +255,32 @@ pub fn open_loop(
             std::thread::sleep(next_at - now);
         }
         let row = rows[submitted % rows.len()].clone();
-        match coord.try_submit_framed(row) {
+        match engine.try_submit_framed(row) {
             Ok(h) => handles.push(h),
-            Err(_) => rejected += 1,
+            Err(SubmitError::QueueFull) => rejected += 1,
+            Err(_) => {
+                // shutdown or misconfiguration: count it and stop
+                rejected += 1;
+                submitted += 1;
+                break;
+            }
         }
         submitted += 1;
         next_at += Duration::from_secs_f64(rng.exponential(rate_rps));
     }
+    let mut completed = 0usize;
     for h in &handles {
-        h.wait();
+        if h.wait().is_ok() {
+            completed += 1;
+        }
     }
     let wall = t0.elapsed();
     LoadReport {
         submitted,
-        completed: handles.len(),
+        completed,
         rejected,
         wall,
-        throughput_rps: handles.len() as f64 / wall.as_secs_f64(),
+        throughput_rps: completed as f64 / wall.as_secs_f64(),
     }
 }
 

@@ -1,0 +1,354 @@
+//! Engine API integration tests over the deterministic `FakeBackend` —
+//! no AOT artifacts, no PJRT. Cover the unified `Submit` trait, typed
+//! submit errors, deadline handling, worker-death recovery, the adaptive
+//! router, and the TCP server (wire protocol v1 + v2, pipelined) with a
+//! `MuxRouter` behind it.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use datamux::coordinator::server::{Server, ServerConfig};
+use datamux::runtime::InferenceBackend;
+use datamux::util::json::Json;
+use datamux::{
+    EngineBuilder, EngineError, FakeBackend, InferenceRequest, MuxCoordinator, MuxRouter, Submit,
+    SubmitError,
+};
+
+const SEQ_LEN: usize = 8;
+const N_CLASSES: usize = 3;
+
+fn fake_cls(n_mux: usize) -> Arc<FakeBackend> {
+    Arc::new(FakeBackend::new("cls", n_mux, 1, SEQ_LEN, N_CLASSES))
+}
+
+fn cls_engine(max_wait_ms: u64) -> Arc<MuxCoordinator> {
+    Arc::new(
+        EngineBuilder::new()
+            .max_wait_ms(max_wait_ms)
+            .build_backend(fake_cls(2))
+            .unwrap(),
+    )
+}
+
+/// A framed row `[CLS] t<k> [SEP] pad..` and the class the fake predicts.
+fn framed_row(k: i32) -> (Vec<i32>, usize) {
+    let mut row = vec![0i32; SEQ_LEN];
+    row[0] = 1; // [CLS]
+    row[1] = 44 + k; // t<k>
+    row[2] = 2; // [SEP]
+    let expected = FakeBackend::expected_class(&row, N_CLASSES);
+    (row, expected)
+}
+
+#[test]
+fn typed_submit_errors_are_distinct() {
+    let coord = cls_engine(0);
+    // bad frame: wrong length
+    match coord.submit(InferenceRequest::classify_framed(vec![1, 2, 3])).err() {
+        Some(SubmitError::BadFrame { expected, got }) => {
+            assert_eq!((expected, got), (SEQ_LEN, 3));
+        }
+        other => panic!("expected BadFrame, got {other:?}"),
+    }
+    // tokenize: unknown word
+    match coord.submit(InferenceRequest::classify_text("hello world")).err() {
+        Some(SubmitError::Tokenize(_)) => {}
+        other => panic!("expected Tokenize, got {other:?}"),
+    }
+    // wrong task: tag request against a cls model
+    match coord.submit(InferenceRequest::tag_text("t1 t2")).err() {
+        Some(SubmitError::WrongTask { .. }) => {}
+        other => panic!("expected WrongTask, got {other:?}"),
+    }
+}
+
+#[test]
+fn responses_route_back_to_their_requests() {
+    let coord = cls_engine(1);
+    let mut handles = Vec::new();
+    for i in 0..40 {
+        let (row, expected) = framed_row(i % 100);
+        handles.push((expected, coord.submit_framed(row).unwrap()));
+    }
+    for (expected, h) in handles {
+        let r = h.wait().expect("response");
+        assert_eq!(r.pred_class(), expected, "demux must route to the right caller");
+        assert!(r.slot < 2);
+    }
+    let c = coord.counters();
+    assert_eq!(c.submitted, 40);
+    assert_eq!(c.completed, 40);
+}
+
+#[test]
+fn submit_text_through_trait_matches_framed() {
+    let coord = cls_engine(0);
+    let framed = coord.tokenizer.encode_framed(&["t1 t2", "t3"], SEQ_LEN).unwrap();
+    let expected = FakeBackend::expected_class(&framed, N_CLASSES);
+    let h = coord.submit_text(&["t1 t2", "t3"]).unwrap();
+    assert_eq!(h.wait().unwrap().pred_class(), expected);
+}
+
+#[test]
+fn expired_requests_fail_engine_side_with_deadline() {
+    // each execution takes 400ms and batches carry one request
+    // (max_wait=0), so with a 200ms deadline the first request executes
+    // in time and every queued one expires at batch assembly
+    let coord = Arc::new(
+        EngineBuilder::new()
+            .max_wait_ms(0)
+            .build_backend(Arc::new(
+                FakeBackend::new("cls", 2, 1, SEQ_LEN, N_CLASSES)
+                    .with_delay(Duration::from_millis(400)),
+            ))
+            .unwrap(),
+    );
+    let deadline = Duration::from_millis(200);
+    let mut handles = Vec::new();
+    for i in 0..3 {
+        let (row, _) = framed_row(i);
+        let req = InferenceRequest::classify_framed(row).with_deadline(deadline);
+        handles.push(coord.submit(req).unwrap());
+    }
+    let results: Vec<_> = handles
+        .iter()
+        .map(|h| h.wait_timeout(Duration::from_secs(10)).expect("fulfilled"))
+        .collect();
+    assert!(results[0].is_ok(), "first request executes before its deadline: {results:?}");
+    for r in &results[1..] {
+        assert_eq!(*r, Err(EngineError::DeadlineExceeded), "{results:?}");
+    }
+    assert_eq!(coord.counters().expired, 2);
+
+    // client-side: wait_deadline gives up at the deadline even though
+    // the engine answers later
+    let (row, _) = framed_row(9);
+    let h = coord
+        .submit(InferenceRequest::classify_framed(row).with_deadline(Duration::from_millis(50)))
+        .unwrap();
+    assert_eq!(h.wait_deadline(), Err(EngineError::DeadlineExceeded));
+}
+
+#[test]
+fn worker_death_fails_pending_instead_of_hanging() {
+    let coord = Arc::new(
+        EngineBuilder::new()
+            .max_wait_ms(0)
+            .build_backend(Arc::new(
+                FakeBackend::new("cls", 2, 1, SEQ_LEN, N_CLASSES).failing_after(1),
+            ))
+            .unwrap(),
+    );
+    // first execution succeeds
+    let (row, expected) = framed_row(1);
+    let h = coord.submit_framed(row).unwrap();
+    assert_eq!(h.wait().expect("first execution ok").pred_class(), expected);
+
+    // everything after the backend starts failing is *answered*, never
+    // stranded: WorkerFailed for executed batches, Shutdown once the
+    // poisoned intake closes
+    let mut accepted = Vec::new();
+    let mut saw_shutdown_submit = false;
+    let t0 = Instant::now();
+    while t0.elapsed() < Duration::from_secs(5) {
+        let (row, _) = framed_row(2);
+        match coord.submit_framed(row) {
+            Ok(h) => accepted.push(h),
+            Err(SubmitError::Shutdown) => {
+                saw_shutdown_submit = true;
+                break;
+            }
+            Err(e) => panic!("unexpected submit error: {e:?}"),
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(saw_shutdown_submit, "intake must be poisoned after worker failure");
+    assert!(!accepted.is_empty());
+    for h in accepted {
+        let r = h.wait_timeout(Duration::from_secs(5)).expect("no caller may hang");
+        match r {
+            Err(EngineError::WorkerFailed(_)) | Err(EngineError::Shutdown) => {}
+            other => panic!("expected a failure outcome, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn try_submit_distinguishes_queue_full_from_shutdown() {
+    let coord = Arc::new(
+        EngineBuilder::new()
+            .max_wait_ms(0)
+            .queue_cap(1)
+            .build_backend(Arc::new(
+                FakeBackend::new("cls", 2, 1, SEQ_LEN, N_CLASSES)
+                    .with_delay(Duration::from_millis(100)),
+            ))
+            .unwrap(),
+    );
+    let mut accepted = Vec::new();
+    let mut saw_full = false;
+    for i in 0..64 {
+        let (row, _) = framed_row(i % 10);
+        match coord.try_submit_framed(row) {
+            Ok(h) => accepted.push(h),
+            Err(SubmitError::QueueFull) => {
+                saw_full = true;
+                break;
+            }
+            Err(e) => panic!("unexpected: {e:?}"),
+        }
+    }
+    assert!(saw_full, "tiny queue + slow backend must report QueueFull");
+
+    coord.close_intake();
+    let (row, _) = framed_row(1);
+    assert_eq!(coord.try_submit_framed(row.clone()).err(), Some(SubmitError::Shutdown));
+    assert_eq!(coord.submit_framed(row).err(), Some(SubmitError::Shutdown));
+
+    for h in accepted {
+        assert!(h.wait_timeout(Duration::from_secs(10)).expect("fulfilled").is_ok());
+    }
+}
+
+#[test]
+fn router_serves_bursts_and_aggregates_stats() {
+    let lanes: Vec<Arc<dyn InferenceBackend>> = vec![fake_cls(2), fake_cls(8)];
+    let router = Arc::new(
+        EngineBuilder::new()
+            .max_wait_ms(1)
+            .exec_time_us(10_000.0)
+            .build_router_backends(lanes)
+            .unwrap(),
+    );
+    assert_eq!(router.seq_len(), SEQ_LEN);
+    let mut handles = Vec::new();
+    for i in 0..64 {
+        let (row, expected) = framed_row(i % 30);
+        handles.push((expected, router.submit_framed(row).unwrap()));
+    }
+    for (expected, h) in handles {
+        assert_eq!(h.wait().expect("response").pred_class(), expected);
+    }
+    let c = router.counters();
+    assert_eq!(c.submitted, 64, "router counters aggregate across lanes");
+    assert_eq!(c.completed, 64);
+    assert!(router.latency().count >= 64);
+    assert_eq!(router.queue_depth(), 0);
+}
+
+#[test]
+fn router_behind_server_pipelined_v2_and_v1_back_compat() {
+    let lanes: Vec<Arc<dyn InferenceBackend>> = vec![fake_cls(2), fake_cls(8)];
+    let router: Arc<MuxRouter> =
+        Arc::new(EngineBuilder::new().max_wait_ms(1).build_router_backends(lanes).unwrap());
+    let server = Server::start(
+        router.clone(),
+        ServerConfig { addr: "127.0.0.1:0".into(), max_connections: 4, ..Default::default() },
+    )
+    .unwrap();
+
+    let stream = TcpStream::connect(server.local_addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    // 12 pipelined requests on one connection: all written before any
+    // reply is read; replies are correlated by client-chosen id
+    let n = 12;
+    let mut expected = std::collections::HashMap::new();
+    let mut lines = String::new();
+    for i in 0..n {
+        let (_, pred) = framed_row(i as i32);
+        expected.insert(format!("p{i}"), pred);
+        lines.push_str(&format!(
+            "{{\"id\":\"p{i}\",\"op\":\"classify\",\"text\":\"t{i}\"}}\n"
+        ));
+    }
+    writer.write_all(lines.as_bytes()).unwrap();
+
+    let mut seen = std::collections::HashMap::new();
+    for _ in 0..n {
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        let v = Json::parse(reply.trim()).expect("v2 replies are JSON");
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "{reply}");
+        let id = v.get("id").and_then(Json::as_str).expect("id echoed").to_string();
+        let pred = v.get("pred").and_then(Json::as_usize).expect("pred");
+        seen.insert(id, pred);
+    }
+    assert_eq!(seen, expected, "every id answered with its own prediction");
+
+    // v1 still works on the same connection, against the same router
+    writer.write_all(b"STATS\n").unwrap();
+    let mut stats = String::new();
+    reader.read_line(&mut stats).unwrap();
+    assert!(stats.starts_with("OK submitted="), "{stats}");
+    writer.write_all(b"CLS t1 t2\n").unwrap();
+    let mut cls = String::new();
+    reader.read_line(&mut cls).unwrap();
+    assert!(cls.starts_with("OK "), "{cls}");
+
+    writer.write_all(b"{\"op\":\"quit\"}\n").unwrap();
+    server.stop();
+    assert!(router.counters().completed >= n as u64 + 1);
+}
+
+#[test]
+fn batch_submit_answers_on_one_line() {
+    let coord = cls_engine(1);
+    let server = Server::start(
+        coord,
+        ServerConfig { addr: "127.0.0.1:0".into(), max_connections: 2, ..Default::default() },
+    )
+    .unwrap();
+    let stream = TcpStream::connect(server.local_addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writer
+        .write_all(
+            b"{\"id\":\"B\",\"op\":\"batch\",\"items\":[\
+              {\"op\":\"classify\",\"text\":\"t1\"},\
+              {\"op\":\"classify\",\"text\":\"t2\"},\
+              {\"op\":\"classify\",\"text\":\"nope\"}]}\n",
+        )
+        .unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    let v = Json::parse(reply.trim()).unwrap();
+    assert_eq!(v.get("id").and_then(Json::as_str), Some("B"));
+    let results = v.get("results").and_then(Json::as_arr).expect("results array");
+    assert_eq!(results.len(), 3);
+    assert_eq!(results[0].get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(results[1].get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(results[2].get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(results[2].get("error").and_then(Json::as_str), Some("tokenize"));
+    server.stop();
+}
+
+#[test]
+fn server_stop_terminates_idle_connections() {
+    let server = Server::start(
+        cls_engine(0),
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_connections: 2,
+            read_timeout: Duration::from_millis(100),
+        },
+    )
+    .unwrap();
+    let stream = TcpStream::connect(server.local_addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    std::thread::sleep(Duration::from_millis(50)); // let handle_conn start
+    let t0 = Instant::now();
+    server.stop();
+    // the idle connection's reader wakes on its read timeout, notices the
+    // stop flag and closes: the client sees EOF well within bounds
+    let mut reader = BufReader::new(stream);
+    let mut buf = String::new();
+    let n = reader.read_line(&mut buf).expect("EOF, not a client-side timeout");
+    assert_eq!(n, 0, "server must close the idle connection");
+    assert!(t0.elapsed() < Duration::from_secs(3), "stop latency: {:?}", t0.elapsed());
+}

@@ -1,12 +1,30 @@
 //! Integration: every artifact in the manifest must load, execute, and
 //! bit-reproduce the python compile path's parity vectors.
-use datamux::runtime::{ArtifactManifest, ModelRuntime, default_artifacts_dir};
+//!
+//! Skips (passes with a notice) when artifacts or PJRT are unavailable.
+use datamux::runtime::{default_artifacts_dir, ArtifactManifest, ModelRuntime};
+
+fn setup() -> Option<(ArtifactManifest, ModelRuntime)> {
+    let manifest = match ArtifactManifest::load(default_artifacts_dir()) {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return None;
+        }
+    };
+    match ModelRuntime::cpu() {
+        Ok(rt) => Some((manifest, rt)),
+        Err(e) => {
+            eprintln!("skipping: PJRT unavailable: {e:#}");
+            None
+        }
+    }
+}
 
 #[test]
 fn all_artifacts_load_and_match_python() {
-    let manifest = ArtifactManifest::load(default_artifacts_dir()).expect("manifest");
+    let Some((manifest, rt)) = setup() else { return };
     assert!(!manifest.artifacts.is_empty());
-    let rt = ModelRuntime::cpu().expect("pjrt client");
     for meta in &manifest.artifacts {
         let model = rt.load(meta).expect("load");
         if meta.parity.is_some() {
@@ -22,9 +40,8 @@ fn all_artifacts_load_and_match_python() {
 
 #[test]
 fn repeated_execution_is_deterministic() {
-    let manifest = ArtifactManifest::load(default_artifacts_dir()).expect("manifest");
+    let Some((manifest, rt)) = setup() else { return };
     let meta = &manifest.artifacts[0];
-    let rt = ModelRuntime::cpu().expect("pjrt client");
     let model = rt.load(meta).expect("load");
     let ids: Vec<i32> = (0..meta.ids_len() as i32).map(|i| i % 40).collect();
     let a = model.run_ids(&ids).expect("run a");

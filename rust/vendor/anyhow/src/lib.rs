@@ -1,0 +1,185 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! Implements the subset the datamux crate uses: `Error`, `Result`,
+//! `Context` (on `Result` and `Option`), and the `anyhow!` / `bail!` /
+//! `ensure!` macros. Error chains render with `{:#}` like upstream
+//! (`outer: inner: root`). Not a general replacement — just enough API
+//! surface, implemented with zero dependencies so builds never touch the
+//! network.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Boxed dynamic error with a context chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+    /// contexts added via `.context(..)`, innermost first
+    context: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string(), source: None, context: Vec::new() }
+    }
+
+    pub fn new<E: StdError + Send + Sync + 'static>(e: E) -> Self {
+        Error { msg: e.to_string(), source: Some(Box::new(e)), context: Vec::new() }
+    }
+
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Self {
+        self.context.push(c.to_string());
+        self
+    }
+
+    /// Full chain, outermost first, `: `-joined (what `{:#}` prints).
+    fn chain_string(&self) -> String {
+        let mut parts: Vec<String> = self.context.iter().rev().cloned().collect();
+        parts.push(self.msg.clone());
+        let mut src = self.source.as_ref().and_then(|s| s.source());
+        while let Some(s) = src {
+            parts.push(s.to_string());
+            src = s.source();
+        }
+        parts.join(": ")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain_string())
+        } else {
+            write!(f, "{}", self.context.last().unwrap_or(&self.msg))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain_string())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`, so
+// this blanket conversion (used by `?`) does not overlap the reflexive
+// `From<T> for T` — same trick as upstream anyhow.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::new(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(..)` on fallible values.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "root cause")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Error::new(io_err()).context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root cause");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("doing {}", "x")).unwrap_err();
+        assert_eq!(format!("{e:#}"), "doing x: root cause");
+        let o: Option<u32> = None;
+        assert_eq!(format!("{}", o.context("missing").unwrap_err()), "missing");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "wanted {} to be true", "ok");
+            if !ok {
+                bail!("unreachable");
+            }
+            Ok(7)
+        }
+        assert_eq!(f(true).unwrap(), 7);
+        assert_eq!(format!("{}", f(false).unwrap_err()), "wanted ok to be true");
+        let e = anyhow!("x={}", 3);
+        assert_eq!(format!("{e}"), "x=3");
+    }
+}

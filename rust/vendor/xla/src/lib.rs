@@ -1,0 +1,113 @@
+//! Offline stub of the `xla` (PJRT) crate surface used by
+//! `datamux::runtime::model`.
+//!
+//! This image has no PJRT plugin, so every entry point fails at
+//! `PjRtClient::cpu()` with a clear message; nothing downstream is
+//! reachable. The serving stack remains fully testable through
+//! `datamux::runtime::FakeBackend`, which bypasses PJRT entirely. Swap
+//! this path dependency for the real `xla` crate to execute AOT
+//! artifacts.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable() -> Error {
+    Error(
+        "PJRT backend not available in this offline build; serve through \
+         datamux::runtime::FakeBackend or link the real `xla` crate"
+            .to_string(),
+    )
+}
+
+#[derive(Clone)]
+pub struct PjRtClient(());
+
+pub struct PjRtDevice(());
+
+pub struct PjRtBuffer(());
+
+pub struct PjRtLoadedExecutable(());
+
+pub struct HloModuleProto(());
+
+pub struct XlaComputation(());
+
+pub struct Literal(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable())
+    }
+
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer, Error> {
+        Err(unavailable())
+    }
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(unavailable())
+    }
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable())
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+}
+
+impl Literal {
+    pub fn to_tuple1(self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(format!("{e:?}").contains("not available"));
+    }
+}
