@@ -1,0 +1,366 @@
+//! Engine hot-path bench: coordinator overhead, measured with **zero
+//! artifacts** (FakeBackend) so it runs anywhere — laptops, CI — and the
+//! repo finally has a PR-over-PR perf trajectory.
+//!
+//! Two layers of measurement:
+//!
+//! 1. **legacy vs hot micro-benches** — the pre-change request path is
+//!    reimplemented inline (one mutex round-trip per intake item, full
+//!    pad/prefix tensor re-derivation per execution, per-request logits
+//!    `to_vec`) and raced against the shipped path
+//!    (`Channel::recv_up_to` wave drains, `MuxTemplate::stamp`, shared
+//!    `LogitsView` demux). This keeps the pre-refactor baseline a live,
+//!    machine-local number instead of a stale constant.
+//! 2. **engine end-to-end** — a full batch pass through the real
+//!    coordinator over FakeBackend, reporting non-execute ns/request
+//!    (wall minus measured backend time), batcher wave sizes, scratch
+//!    reallocations, and the queue-wait histogram.
+//!
+//! Results are printed as a table and written to `BENCH_engine.json` at
+//! the repo root. The bench exits non-zero if it produces no results.
+//!
+//!   cargo bench --bench engine_hotpath            # full
+//!   cargo bench --bench engine_hotpath -- --quick # CI-sized
+
+use std::hint::black_box;
+use std::sync::Arc;
+use std::time::Instant;
+
+use datamux::coordinator::scheduler::MuxTemplate;
+use datamux::coordinator::{EngineBuilder, LogitsView, SlotPolicy, Submit};
+use datamux::runtime::{FakeBackend, InferenceBackend};
+use datamux::tokenizer::{default_vocab, Tokenizer};
+use datamux::util::bench::Table;
+use datamux::util::json::{num, obj, s, Json};
+use datamux::util::threadpool::Channel;
+use datamux::workload::{batch_pass, RandomWorkload};
+
+const N_MUX: usize = 8;
+const BATCH: usize = 4;
+const SEQ_LEN: usize = 32;
+const N_CLASSES: usize = 4;
+
+fn median_ns(samples: &mut [f64]) -> f64 {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+/// ns/item to drain `n_items` preloaded items one `recv()` at a time
+/// (the pre-change batcher: one lock + wakeup bookkeeping per request).
+fn bench_intake_legacy(n_items: usize, samples: usize) -> f64 {
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let c: Channel<u64> = Channel::bounded(n_items);
+        for i in 0..n_items {
+            c.send(i as u64).unwrap();
+        }
+        let t0 = Instant::now();
+        for _ in 0..n_items {
+            black_box(c.recv().unwrap());
+        }
+        out.push(t0.elapsed().as_nanos() as f64 / n_items as f64);
+    }
+    median_ns(&mut out)
+}
+
+/// ns/item to drain the same backlog in capacity-sized waves
+/// (`recv_up_to`: one lock acquisition per wave).
+fn bench_intake_hot(n_items: usize, wave: usize, samples: usize) -> f64 {
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let c: Channel<u64> = Channel::bounded(n_items);
+        for i in 0..n_items {
+            c.send(i as u64).unwrap();
+        }
+        let mut buf: Vec<u64> = Vec::with_capacity(wave);
+        let t0 = Instant::now();
+        let mut got = 0usize;
+        while got < n_items {
+            buf.clear();
+            got += c.try_recv_up_to(&mut buf, wave);
+            black_box(buf.last());
+        }
+        out.push(t0.elapsed().as_nanos() as f64 / n_items as f64);
+    }
+    median_ns(&mut out)
+}
+
+/// ns/request to assemble one execution's ids tensor the pre-change way:
+/// re-derive every pad row and slot prefix from the tokenizer, then
+/// place the requests.
+fn bench_assembly_legacy(
+    tok: &Tokenizer,
+    rows: &[Vec<i32>],
+    input_len: usize,
+    iters: usize,
+) -> f64 {
+    let prefix_len = N_MUX;
+    let capacity = BATCH * N_MUX;
+    let mut scratch: Vec<i32> = Vec::new();
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        scratch.clear();
+        scratch.resize(capacity * input_len, tok.vocab.pad);
+        let pad_row = tok.pad_row(SEQ_LEN);
+        for g in 0..BATCH {
+            for slot in 0..N_MUX {
+                let start = ((g * N_MUX) + slot) * input_len;
+                let row = &mut scratch[start..start + input_len];
+                for (j, p) in row[..prefix_len].iter_mut().enumerate() {
+                    *p = if j == slot {
+                        tok.vocab.idx_base + slot as i32
+                    } else {
+                        tok.vocab.eps_pad
+                    };
+                }
+                row[prefix_len..].copy_from_slice(&pad_row);
+            }
+        }
+        for (pos, content) in rows.iter().enumerate() {
+            let start = pos * input_len + prefix_len;
+            scratch[start..start + SEQ_LEN].copy_from_slice(content);
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / capacity as f64);
+        black_box(&scratch);
+    }
+    median_ns(&mut samples)
+}
+
+/// ns/request with the precomputed template: one bulk stamp + placement.
+fn bench_assembly_hot(
+    template: &MuxTemplate,
+    rows: &[Vec<i32>],
+    input_len: usize,
+    iters: usize,
+) -> f64 {
+    let capacity = template.capacity();
+    let mut scratch: Vec<i32> = Vec::with_capacity(template.ids_len());
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        template.stamp(&mut scratch);
+        for (pos, content) in rows.iter().enumerate() {
+            let start = pos * input_len + template.prefix_len;
+            scratch[start..start + SEQ_LEN].copy_from_slice(content);
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / capacity as f64);
+        black_box(&scratch);
+    }
+    median_ns(&mut samples)
+}
+
+/// ns/request to demux one execution's output the pre-change way: one
+/// `to_vec` allocation + copy per request.
+fn bench_demux_legacy(out: &[f32], slot_len: usize, iters: usize) -> f64 {
+    let capacity = BATCH * N_MUX;
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        for r in 0..capacity {
+            let off = r * slot_len;
+            black_box(out[off..off + slot_len].to_vec());
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / capacity as f64);
+    }
+    median_ns(&mut samples)
+}
+
+/// ns/request with shared views: one per-batch buffer conversion, then a
+/// refcount bump + offset per request.
+fn bench_demux_hot(out: &[f32], slot_len: usize, iters: usize) -> f64 {
+    let capacity = BATCH * N_MUX;
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        // the per-batch bulk copy is charged to the hot path (the real
+        // scheduler does `Vec -> Arc<[f32]>` once per execution)
+        let shared: Arc<[f32]> = out.to_vec().into();
+        for r in 0..capacity {
+            black_box(LogitsView::shared(shared.clone(), r * slot_len, slot_len));
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / capacity as f64);
+    }
+    median_ns(&mut samples)
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (intake_items, micro_iters, e2e_batches) =
+        if quick { (512, 60, 16) } else { (4096, 400, 64) };
+    let capacity = BATCH * N_MUX;
+
+    let backend = FakeBackend::new("cls", N_MUX, BATCH, SEQ_LEN, N_CLASSES);
+    let meta = backend.meta().clone();
+    let input_len = meta.input_len;
+    let slot_len = N_CLASSES;
+    let tok = Tokenizer::new(default_vocab(), meta.vocab_size);
+    let template = MuxTemplate::new(&meta, &tok);
+    let mut w = RandomWorkload::new(13, 200, SEQ_LEN - 4);
+    let rows: Vec<Vec<i32>> = (0..capacity).map(|_| w.framed_row(&tok, SEQ_LEN)).collect();
+
+    // ----- legacy vs hot micro-benches ---------------------------------
+    let intake_legacy = bench_intake_legacy(intake_items, 7);
+    let intake_hot = bench_intake_hot(intake_items, capacity, 7);
+    let asm_legacy = bench_assembly_legacy(&tok, &rows, input_len, micro_iters);
+    let asm_hot = bench_assembly_hot(&template, &rows, input_len, micro_iters);
+    let exec_out = vec![0.25f32; capacity * slot_len];
+    let demux_legacy = bench_demux_legacy(&exec_out, slot_len, micro_iters);
+    let demux_hot = bench_demux_hot(&exec_out, slot_len, micro_iters);
+    let coord_legacy = intake_legacy + asm_legacy + demux_legacy;
+    let coord_hot = intake_hot + asm_hot + demux_hot;
+
+    let mut t = Table::new(
+        "engine hot path: coordinator ns/request (legacy = pre-change path)",
+        &["stage", "legacy ns/req", "hot ns/req", "speedup"],
+    );
+    let speedup = |l: f64, h: f64| if h > 0.0 { l / h } else { f64::INFINITY };
+    for (name, l, h) in [
+        ("intake", intake_legacy, intake_hot),
+        ("assembly", asm_legacy, asm_hot),
+        ("demux", demux_legacy, demux_hot),
+        ("total", coord_legacy, coord_hot),
+    ] {
+        t.row(&[
+            name.to_string(),
+            format!("{l:.0}"),
+            format!("{h:.0}"),
+            format!("{:.2}x", speedup(l, h)),
+        ]);
+    }
+    t.print();
+
+    // ----- engine end-to-end over FakeBackend --------------------------
+    // measured backend time, to subtract from the e2e wall clock
+    let ids = vec![1i32; meta.ids_len()];
+    let mut exec_samples: Vec<f64> = (0..micro_iters.max(20))
+        .map(|_| {
+            let t0 = Instant::now();
+            black_box(backend.run_ids(&ids).unwrap());
+            t0.elapsed().as_nanos() as f64
+        })
+        .collect();
+    let exec_ns_per_batch = median_ns(&mut exec_samples);
+
+    let total = capacity * e2e_batches;
+    let engine = Arc::new(
+        EngineBuilder::new()
+            .max_wait_ms(2)
+            .queue_cap(total + 8)
+            .slot_policy(SlotPolicy::Fill)
+            .build_backend(Arc::new(FakeBackend::new(
+                "cls", N_MUX, BATCH, SEQ_LEN, N_CLASSES,
+            )))?,
+    );
+    let report = batch_pass(&engine, &rows, total);
+    anyhow::ensure!(
+        report.completed == total,
+        "e2e pass lost requests: {} of {total}",
+        report.completed
+    );
+    let c = engine.counters();
+    let qw = engine.queue_wait();
+    let execs = (c.groups_executed / BATCH as u64).max(1);
+    let e2e_ns_per_req = report.wall.as_nanos() as f64 / total as f64;
+    let exec_ns_per_req = exec_ns_per_batch * execs as f64 / total as f64;
+    let overhead_ns_per_req = (e2e_ns_per_req - exec_ns_per_req).max(0.0);
+    let avg_wave = c.submitted as f64 / c.intake_waves.max(1) as f64;
+
+    let mut t2 = Table::new(
+        "engine e2e over FakeBackend (no artifacts)",
+        &["metric", "value"],
+    );
+    for (k, v) in [
+        ("requests", format!("{total}")),
+        ("throughput r/s", format!("{:.0}", report.throughput_rps)),
+        ("e2e ns/req", format!("{e2e_ns_per_req:.0}")),
+        ("exec ns/req (measured direct)", format!("{exec_ns_per_req:.0}")),
+        ("coordinator overhead ns/req", format!("{overhead_ns_per_req:.0}")),
+        ("intake waves", format!("{}", c.intake_waves)),
+        ("avg requests/wave", format!("{avg_wave:.1}")),
+        ("scratch reallocs", format!("{}", c.scratch_reallocs)),
+        ("queue-wait p50", datamux::util::metrics::fmt_ns(qw.p50_ns)),
+        ("queue-wait p99", datamux::util::metrics::fmt_ns(qw.p99_ns)),
+    ] {
+        t2.row(&[k.to_string(), v]);
+    }
+    t2.print();
+
+    // ----- BENCH_engine.json at the repo root --------------------------
+    let result = obj(vec![
+        ("schema", s("engine_hotpath/v1")),
+        ("quick", Json::Bool(quick)),
+        (
+            "config",
+            obj(vec![
+                ("n_mux", num(N_MUX as f64)),
+                ("batch", num(BATCH as f64)),
+                ("seq_len", num(SEQ_LEN as f64)),
+                ("n_classes", num(N_CLASSES as f64)),
+                ("requests", num(total as f64)),
+            ]),
+        ),
+        (
+            "legacy_ns_per_request",
+            obj(vec![
+                ("intake", num(intake_legacy)),
+                ("assembly", num(asm_legacy)),
+                ("demux", num(demux_legacy)),
+                ("coordinator", num(coord_legacy)),
+            ]),
+        ),
+        (
+            "hot_ns_per_request",
+            obj(vec![
+                ("intake", num(intake_hot)),
+                ("assembly", num(asm_hot)),
+                ("demux", num(demux_hot)),
+                ("coordinator", num(coord_hot)),
+            ]),
+        ),
+        ("speedup_vs_legacy", num(speedup(coord_legacy, coord_hot))),
+        (
+            "engine",
+            obj(vec![
+                ("throughput_rps", num(report.throughput_rps)),
+                ("e2e_ns_per_request", num(e2e_ns_per_req)),
+                ("exec_ns_per_request", num(exec_ns_per_req)),
+                ("overhead_ns_per_request", num(overhead_ns_per_req)),
+                ("intake_waves", num(c.intake_waves as f64)),
+                ("avg_requests_per_wave", num(avg_wave)),
+                ("scratch_reallocs", num(c.scratch_reallocs as f64)),
+                ("queue_wait_p50_ns", num(qw.p50_ns as f64)),
+                ("queue_wait_p99_ns", num(qw.p99_ns as f64)),
+            ]),
+        ),
+    ]);
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate sits one level below the repo root");
+    let path = root.join("BENCH_engine.json");
+    std::fs::write(&path, result.to_pretty())?;
+
+    // self-check: the file must exist, parse, and carry results —
+    // CI fails the job otherwise
+    let written = std::fs::read_to_string(&path)?;
+    let parsed = Json::parse(&written).map_err(|e| anyhow::anyhow!("reparse: {e}"))?;
+    anyhow::ensure!(
+        parsed.get("engine").and_then(|e| e.get("e2e_ns_per_request")).is_some()
+            && parsed.get("speedup_vs_legacy").and_then(Json::as_f64).is_some(),
+        "BENCH_engine.json is missing results"
+    );
+    println!(
+        "\nwrote {} (coordinator speedup vs pre-change path: {:.2}x)",
+        path.display(),
+        speedup(coord_legacy, coord_hot)
+    );
+    // the acceptance gate: the hot path must stay >=2x cheaper than the
+    // pre-change path, or this bench (and the CI job) fails
+    anyhow::ensure!(
+        speedup(coord_legacy, coord_hot) >= 2.0,
+        "hot-path regression: coordinator speedup vs legacy is {:.2}x (< 2x gate); \
+         legacy={coord_legacy:.0}ns/req hot={coord_hot:.0}ns/req",
+        speedup(coord_legacy, coord_hot)
+    );
+    Ok(())
+}

@@ -201,6 +201,11 @@ pub trait Submit: Send + Sync {
     /// End-to-end latency summary (merged over lanes for a router).
     fn latency(&self) -> LatencySummary;
 
+    /// Queue-wait (submit -> batch formed) summary: the batching delay
+    /// component of latency, separate from execution time (merged over
+    /// lanes for a router).
+    fn queue_wait(&self) -> LatencySummary;
+
     /// Convenience: submit one framed row for whatever task the model
     /// serves. The common path for drivers and benches.
     fn submit_framed(&self, ids: Vec<i32>) -> Result<RequestHandle, SubmitError> {

@@ -41,8 +41,8 @@ pub use api::{
 pub use batcher::{BatcherConfig, ExecBatch};
 pub use engine::EngineBuilder;
 pub use policy::{AdaptiveN, SlotPolicy};
-pub use request::{EngineError, Request, RequestHandle, Response};
-pub use scheduler::{SharedModel, Stats};
+pub use request::{EngineError, LogitsView, Request, RequestHandle, Response};
+pub use scheduler::{MuxTemplate, SharedModel, Stats};
 
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
@@ -101,12 +101,19 @@ impl MuxCoordinator {
         let input: Channel<Request> = Channel::bounded(cfg.queue_cap);
         let exec: Channel<ExecBatch> = Channel::bounded(cfg.n_workers * 2 + 2);
 
+        // derive the empty-slot ids tensor once; workers bulk-copy it
+        // per batch instead of re-deriving pad rows and prefixes
+        let template = Arc::new(scheduler::MuxTemplate::new(&meta, &tokenizer));
+
         let bcfg = BatcherConfig { n_mux, batch: meta.batch, max_wait: cfg.max_wait };
         let b_in = input.clone();
         let b_out = exec.clone();
+        let b_stats = stats.clone();
         let batcher = std::thread::Builder::new()
             .name("datamux-batcher".into())
-            .spawn(move || batcher::run_batcher(&bcfg, &b_in, &b_out))?;
+            .spawn(move || {
+                batcher::run_batcher(&bcfg, &b_in, &b_out, Some(&b_stats.counters))
+            })?;
 
         let mut workers = Vec::new();
         for w in 0..cfg.n_workers.max(1) {
@@ -114,17 +121,19 @@ impl MuxCoordinator {
             let exec = exec.clone();
             let input = input.clone();
             let stats = stats.clone();
-            let tok = tokenizer.clone();
+            let template = template.clone();
             let policy = cfg.slot_policy;
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("datamux-exec-{w}"))
                     .spawn(move || {
-                        let mut scratch = Vec::new();
+                        // worker-owned scratch, reused across batches;
+                        // pre-sized so steady state never reallocates
+                        let mut scratch = Vec::with_capacity(template.ids_len());
                         while let Some(batch) = exec.recv() {
                             if let Err(e) = scheduler::execute_batch(
                                 backend.as_ref(),
-                                &tok,
+                                &template,
                                 policy,
                                 &stats,
                                 batch,
@@ -304,6 +313,10 @@ impl Submit for MuxCoordinator {
     fn latency(&self) -> LatencySummary {
         self.stats.e2e_latency.summary()
     }
+
+    fn queue_wait(&self) -> LatencySummary {
+        self.stats.queue_wait.summary()
+    }
 }
 
 impl Drop for MuxCoordinator {
@@ -431,6 +444,12 @@ impl Submit for MuxRouter {
 
     fn latency(&self) -> LatencySummary {
         let mut it = self.lanes.iter().map(|l| l.stats.e2e_latency.summary());
+        let first = it.next().expect("router has at least one lane");
+        it.fold(first, LatencySummary::merge)
+    }
+
+    fn queue_wait(&self) -> LatencySummary {
+        let mut it = self.lanes.iter().map(|l| l.stats.queue_wait.summary());
         let first = it.next().expect("router has at least one lane");
         it.fold(first, LatencySummary::merge)
     }

@@ -8,6 +8,7 @@
 //! death, batcher exit), the drop guard fails it with
 //! [`EngineError::Shutdown`] so callers can never hang on `wait()`.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::util::threadpool::OnceCellSync;
@@ -117,6 +118,85 @@ impl Request {
     }
 }
 
+/// Zero-copy view into one request's slice of a batch's logits.
+///
+/// The scheduler executes one model call per batch and hands every
+/// response a *view* of the shared flat output (`Arc<[f32]>` plus
+/// offset/len) instead of copying `per_slot_len` floats per request —
+/// steady-state demux performs no per-request copy. Derefs to `[f32]`,
+/// so callers index, slice and iterate it exactly like the `Vec<f32>`
+/// it replaced; use [`LogitsView::to_vec`] only when an owned buffer is
+/// genuinely needed.
+#[derive(Clone)]
+pub struct LogitsView {
+    data: Arc<[f32]>,
+    offset: usize,
+    len: usize,
+}
+
+impl LogitsView {
+    /// View `data[offset..offset + len]` without copying.
+    pub fn shared(data: Arc<[f32]>, offset: usize, len: usize) -> Self {
+        assert!(
+            offset.checked_add(len).is_some_and(|end| end <= data.len()),
+            "logits view [{offset}, {offset}+{len}) out of range for buffer of {}",
+            data.len()
+        );
+        LogitsView { data, offset, len }
+    }
+
+    /// Wrap an owned vector (single-response paths and tests).
+    pub fn from_vec(v: Vec<f32>) -> Self {
+        let len = v.len();
+        LogitsView { data: v.into(), offset: 0, len }
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data[self.offset..self.offset + self.len]
+    }
+
+    /// Copy the view into an owned vector.
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.as_slice().to_vec()
+    }
+
+    /// True when both views share the same underlying batch buffer —
+    /// the zero-copy invariant tests assert on this.
+    pub fn same_buffer(&self, other: &Self) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
+    }
+
+    /// How many views are currently alive on the underlying buffer.
+    pub fn shared_count(&self) -> usize {
+        Arc::strong_count(&self.data)
+    }
+}
+
+impl std::ops::Deref for LogitsView {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<f32>> for LogitsView {
+    fn from(v: Vec<f32>) -> Self {
+        Self::from_vec(v)
+    }
+}
+
+impl std::fmt::Debug for LogitsView {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_list().entries(self.as_slice().iter()).finish()
+    }
+}
+
+impl PartialEq for LogitsView {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
 /// The demultiplexed result for one request.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Response {
@@ -126,8 +206,10 @@ pub struct Response {
     pub slot: usize,
     /// group sequence number (diagnostics)
     pub group: u64,
-    /// task logits for this request: cls -> n_classes, token -> seq_len * n_classes
-    pub logits: Vec<f32>,
+    /// task logits for this request (cls -> n_classes, token ->
+    /// seq_len * n_classes): a shared view of the batch output, not an
+    /// owned copy
+    pub logits: LogitsView,
     pub n_classes: usize,
     pub latency: Duration,
 }
@@ -212,12 +294,37 @@ mod tests {
             id: 1,
             slot: 0,
             group: 0,
-            logits: vec![0.0, 1.0, /* pos2 */ 2.0, 0.5],
+            logits: vec![0.0, 1.0, /* pos2 */ 2.0, 0.5].into(),
             n_classes: 2,
             latency: Duration::ZERO,
         };
         assert_eq!(r.pred_class(), 1);
         assert_eq!(r.pred_tokens(), vec![1, 0]);
+    }
+
+    #[test]
+    fn logits_view_slices_shared_buffer_without_copy() {
+        let batch: Arc<[f32]> = vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0].into();
+        let a = LogitsView::shared(batch.clone(), 0, 3);
+        let b = LogitsView::shared(batch.clone(), 3, 3);
+        assert_eq!(&a[..], &[0.0, 1.0, 2.0]);
+        assert_eq!(&b[..], &[3.0, 4.0, 5.0]);
+        assert_eq!(b.len(), 3);
+        assert!(a.same_buffer(&b), "views share one allocation");
+        assert!(a.shared_count() >= 3); // batch + a + b
+        let c = a.clone();
+        assert!(c.same_buffer(&a));
+        // equality is by contents, not identity
+        assert_eq!(a, LogitsView::from_vec(vec![0.0, 1.0, 2.0]));
+        assert!(!a.same_buffer(&LogitsView::from_vec(vec![0.0, 1.0, 2.0])));
+        assert_eq!(format!("{a:?}"), "[0.0, 1.0, 2.0]");
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn logits_view_rejects_oob() {
+        let batch: Arc<[f32]> = vec![0.0; 4].into();
+        let _ = LogitsView::shared(batch, 2, 3);
     }
 
     #[test]

@@ -6,6 +6,14 @@
 //! `prefix^i ++ content`, and the output logits for that request live at
 //! flat offset `(g * n_mux + i) * per_slot_len`.
 //!
+//! Hot-path memory discipline: the empty-slot ids tensor (pad rows plus
+//! per-slot index prefixes) is derived **once** into a [`MuxTemplate`]
+//! at coordinator startup; per batch it is bulk-copied into a reused
+//! scratch buffer and only the live requests' content regions are
+//! overwritten. Demux hands each response a shared [`LogitsView`] of
+//! the batch output instead of copying per request. Steady state does
+//! no allocation in assembly and no per-request copy in demux.
+//!
 //! Failure discipline: `execute_batch` never strands a caller. Expired
 //! requests are failed with `DeadlineExceeded` before assembly, and if
 //! the backend errors, every request in the batch is failed with
@@ -17,7 +25,7 @@ use std::time::Instant;
 
 use super::batcher::ExecBatch;
 use super::policy::SlotPolicy;
-use super::request::{EngineError, Response};
+use super::request::{EngineError, LogitsView, Response};
 use crate::runtime::{ArtifactMeta, InferenceBackend, LoadedModel};
 use crate::tokenizer::Tokenizer;
 use crate::util::metrics::{Counters, Histogram};
@@ -64,8 +72,12 @@ pub struct Stats {
     pub counters: Counters,
     /// submit -> response fulfilled
     pub e2e_latency: Histogram,
-    /// batch formed -> execution done
+    /// batch formed -> execution done: worker pickup (exec-queue wait
+    /// when all workers are busy) + expiry sweep + assembly + model
     pub exec_latency: Histogram,
+    /// submit -> batch formed: admission queueing plus group-formation
+    /// delay, the batching cost invisible to `exec_latency`
+    pub queue_wait: Histogram,
 }
 
 /// Per-slot output length (flattened logits) for the model's task.
@@ -77,32 +89,119 @@ pub fn per_slot_len(meta: &ArtifactMeta) -> usize {
     }
 }
 
+/// Precomputed `(batch, n_mux, input_len)` ids tensor with every slot
+/// empty: pad rows plus the per-slot index prefix (paper §3.2), derived
+/// once at coordinator startup. Per batch, [`MuxTemplate::stamp`]
+/// resets the scratch buffer with one bulk copy, so steady-state
+/// assembly never re-derives pad rows or prefixes and never allocates.
+pub struct MuxTemplate {
+    ids: Vec<i32>,
+    pub n_mux: usize,
+    pub batch: usize,
+    pub input_len: usize,
+    pub seq_len: usize,
+    pub prefix_len: usize,
+    pub per_slot_len: usize,
+}
+
+impl MuxTemplate {
+    pub fn new(meta: &ArtifactMeta, tok: &Tokenizer) -> Self {
+        let n_mux = meta.n_mux;
+        let b = meta.batch;
+        let input_len = meta.input_len;
+        let seq_len = meta.seq_len;
+        let prefix_len = input_len - seq_len;
+        assert!(
+            prefix_len == 0 || prefix_len == n_mux,
+            "unexpected prefix layout: input_len={input_len} seq_len={seq_len} n_mux={n_mux}"
+        );
+        let pad_row = tok.pad_row(seq_len);
+        let mut ids = vec![tok.vocab.pad; b * n_mux * input_len];
+        for g in 0..b {
+            for slot in 0..n_mux {
+                let start = ((g * n_mux) + slot) * input_len;
+                let row = &mut ids[start..start + input_len];
+                if prefix_len > 0 {
+                    for (j, p) in row[..prefix_len].iter_mut().enumerate() {
+                        *p = if j == slot {
+                            tok.vocab.idx_base + slot as i32
+                        } else {
+                            tok.vocab.eps_pad
+                        };
+                    }
+                }
+                row[prefix_len..].copy_from_slice(&pad_row);
+            }
+        }
+        MuxTemplate {
+            ids,
+            n_mux,
+            batch: b,
+            input_len,
+            seq_len,
+            prefix_len,
+            per_slot_len: per_slot_len(meta),
+        }
+    }
+
+    /// Requests one execution can carry (`batch * n_mux`).
+    pub fn capacity(&self) -> usize {
+        self.batch * self.n_mux
+    }
+
+    /// Total ids per execution (`capacity * input_len`).
+    pub fn ids_len(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Reset `scratch` to the empty-slot tensor with one bulk copy;
+    /// allocation-free once `scratch` has reached full capacity.
+    pub fn stamp(&self, scratch: &mut Vec<i32>) {
+        scratch.clear();
+        scratch.extend_from_slice(&self.ids);
+    }
+
+    /// Index range of the content region of row `(g, slot)` in the
+    /// flattened ids tensor (reuse-safety tests inspect these).
+    pub fn content_range(&self, g: usize, slot: usize) -> std::ops::Range<usize> {
+        let start = ((g * self.n_mux) + slot) * self.input_len + self.prefix_len;
+        start..start + self.seq_len
+    }
+}
+
 /// Execute one batch and fulfill its requests. Returns Err only on
 /// backend failure — and by then every request in the batch has already
 /// been fulfilled with [`EngineError::WorkerFailed`], so callers cannot
 /// hang on the error path.
+///
+/// `template` must be built from the same `ArtifactMeta` as `model`;
+/// `ids_scratch` is a worker-owned buffer reused across batches (its
+/// contents are fully overwritten by [`MuxTemplate::stamp`] plus the
+/// per-request content writes, so nothing from a previous batch can
+/// leak into this one — property-tested by poisoning it between calls).
 pub fn execute_batch(
     model: &dyn InferenceBackend,
-    tok: &Tokenizer,
+    template: &MuxTemplate,
     policy: SlotPolicy,
     stats: &Stats,
     batch: ExecBatch,
     ids_scratch: &mut Vec<i32>,
 ) -> anyhow::Result<()> {
     let meta = model.meta();
-    let n_mux = meta.n_mux;
-    let b = meta.batch;
-    let input_len = meta.input_len;
-    let seq_len = meta.seq_len;
-    let prefix_len = input_len - seq_len;
-    debug_assert!(prefix_len == 0 || prefix_len == n_mux);
-    let capacity = b * n_mux;
+    let n_mux = template.n_mux;
+    let input_len = template.input_len;
+    let seq_len = template.seq_len;
+    let prefix_len = template.prefix_len;
+    let capacity = template.capacity();
     assert!(batch.entries.len() <= capacity, "batcher produced oversized batch");
 
     // --- drop requests whose deadline already passed ---------------------
     let now = Instant::now();
     let mut entries = Vec::with_capacity(batch.entries.len());
     for req in batch.entries {
+        stats
+            .queue_wait
+            .record_duration(batch.formed_at.saturating_duration_since(req.submitted));
         if req.expired(now) {
             stats.counters.expired.fetch_add(1, Ordering::Relaxed);
             req.fulfill(Err(EngineError::DeadlineExceeded));
@@ -115,41 +214,24 @@ pub fn execute_batch(
     }
 
     // --- assemble the (b, n_mux, input_len) ids tensor -------------------
-    ids_scratch.clear();
-    ids_scratch.resize(capacity * input_len, tok.vocab.pad);
-    // fill every slot with the pad row first (empty slots stay in-distribution)
-    let pad_row = tok.pad_row(seq_len);
-    for g in 0..b {
-        for slot in 0..n_mux {
-            let row = &mut ids_scratch
-                [((g * n_mux) + slot) * input_len..((g * n_mux) + slot + 1) * input_len];
-            if prefix_len > 0 {
-                for (j, p) in row[..prefix_len].iter_mut().enumerate() {
-                    *p = if j == slot {
-                        tok.vocab.idx_base + slot as i32
-                    } else {
-                        tok.vocab.eps_pad
-                    };
-                }
-            }
-            row[prefix_len..].copy_from_slice(&pad_row);
-        }
+    // one bulk copy of the precomputed empty-slot tensor (pad rows +
+    // prefixes), then overwrite only the live requests' content regions
+    if ids_scratch.capacity() < template.ids_len() {
+        stats.counters.scratch_reallocs.fetch_add(1, Ordering::Relaxed);
     }
-    // place the real requests
+    template.stamp(ids_scratch);
     let mut placement: Vec<(usize, usize)> = Vec::with_capacity(entries.len());
     for (pos, req) in entries.iter().enumerate() {
         let g = pos / n_mux;
         let slot = policy.slot_of(batch.seq.wrapping_add(g as u64), pos % n_mux, n_mux);
         debug_assert_eq!(req.content.len(), seq_len, "request content must be framed");
-        let row = &mut ids_scratch
-            [((g * n_mux) + slot) * input_len..((g * n_mux) + slot + 1) * input_len];
-        row[prefix_len..].copy_from_slice(&req.content);
+        let start = ((g * n_mux) + slot) * input_len + prefix_len;
+        ids_scratch[start..start + seq_len].copy_from_slice(&req.content);
         placement.push((g, slot));
     }
     let padded = capacity - entries.len();
 
     // --- execute ----------------------------------------------------------
-    let t_exec = Instant::now();
     let out = match model.run_ids(ids_scratch) {
         Ok(out) => out,
         Err(e) => {
@@ -162,16 +244,21 @@ pub fn execute_batch(
             return Err(e);
         }
     };
-    stats.exec_latency.record_duration(t_exec.elapsed());
-    stats.counters.groups_executed.fetch_add(b as u64, Ordering::Relaxed);
+    // "batch formed -> execution done", as documented: includes worker
+    // pickup, the expiry sweep and assembly, not just the backend call
+    stats.exec_latency.record_duration(batch.formed_at.elapsed());
+    stats.counters.groups_executed.fetch_add(template.batch as u64, Ordering::Relaxed);
     stats.counters.slots_padded.fetch_add(padded as u64, Ordering::Relaxed);
 
     // --- demux dispatch ----------------------------------------------------
-    let slot_len = per_slot_len(meta);
+    // share the flat batch output across all responses; each gets an
+    // offset view, not a copy
+    let slot_len = template.per_slot_len;
+    let shared: Arc<[f32]> = out.into();
     let now = Instant::now();
     for (req, (g, slot)) in entries.into_iter().zip(placement) {
         let off = ((g * n_mux) + slot) * slot_len;
-        let logits = out[off..off + slot_len].to_vec();
+        let logits = LogitsView::shared(shared.clone(), off, slot_len);
         let latency = now.duration_since(req.submitted);
         stats.e2e_latency.record_duration(latency);
         stats.counters.completed.fetch_add(1, Ordering::Relaxed);
@@ -191,10 +278,159 @@ pub fn execute_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
+
+    use crate::coordinator::request::{Completion, Request};
+    use crate::runtime::FakeBackend;
+    use crate::tokenizer::{default_vocab, Tokenizer};
+    use crate::util::threadpool::OnceCellSync;
 
     #[test]
     fn shared_model_is_send_sync() {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<SharedModel>();
+    }
+
+    /// The pre-template per-execution derivation, kept as the oracle the
+    /// precomputed tensor must match exactly.
+    fn legacy_empty_tensor(meta: &ArtifactMeta, tok: &Tokenizer) -> Vec<i32> {
+        let prefix_len = meta.input_len - meta.seq_len;
+        let pad_row = tok.pad_row(meta.seq_len);
+        let mut ids = vec![tok.vocab.pad; meta.batch * meta.n_mux * meta.input_len];
+        for g in 0..meta.batch {
+            for slot in 0..meta.n_mux {
+                let start = ((g * meta.n_mux) + slot) * meta.input_len;
+                let row = &mut ids[start..start + meta.input_len];
+                if prefix_len > 0 {
+                    for (j, p) in row[..prefix_len].iter_mut().enumerate() {
+                        *p = if j == slot {
+                            tok.vocab.idx_base + slot as i32
+                        } else {
+                            tok.vocab.eps_pad
+                        };
+                    }
+                }
+                row[prefix_len..].copy_from_slice(&pad_row);
+            }
+        }
+        ids
+    }
+
+    #[test]
+    fn template_matches_legacy_derivation() {
+        for (task, n_mux, batch, seq_len, n_classes) in
+            [("cls", 4, 2, 8, 3), ("cls", 1, 1, 4, 2), ("token", 2, 3, 6, 5)]
+        {
+            let b = FakeBackend::new(task, n_mux, batch, seq_len, n_classes);
+            let tok = Tokenizer::new(default_vocab(), b.meta().vocab_size);
+            let t = MuxTemplate::new(b.meta(), &tok);
+            // wrong size + poison: stamp must fix both
+            let mut scratch = vec![-1; 3];
+            t.stamp(&mut scratch);
+            assert_eq!(scratch, legacy_empty_tensor(b.meta(), &tok));
+            assert_eq!(t.ids_len(), b.meta().ids_len());
+        }
+    }
+
+    fn make_req(
+        id: u64,
+        content: Vec<i32>,
+        cell: OnceCellSync<Result<Response, EngineError>>,
+    ) -> Request {
+        Request {
+            id,
+            content,
+            submitted: Instant::now(),
+            deadline: None,
+            done: Completion::cell(cell),
+        }
+    }
+
+    /// Property: poison the reused ids scratch between batches; after
+    /// `execute_batch`, (a) every response decodes to *its own* content
+    /// (no cross-request or cross-batch leak), (b) all responses of one
+    /// batch share a single logits buffer (zero-copy demux), (c) every
+    /// assembled row carries exactly its request's content or the
+    /// template pad row, and (d) no poisoned cell survives anywhere.
+    #[test]
+    fn prop_poisoned_scratch_never_leaks_between_batches() {
+        const POISON: i32 = 7777;
+        crate::util::proptest::check("scratch poison leak", 25, |g| {
+            let n_mux = g.rng.range(1, 5);
+            let batch = g.rng.range(1, 4);
+            let seq_len = 6;
+            let n_classes = 7;
+            let backend = FakeBackend::new("cls", n_mux, batch, seq_len, n_classes);
+            let tok = Tokenizer::new(default_vocab(), backend.meta().vocab_size);
+            let template = MuxTemplate::new(backend.meta(), &tok);
+            let stats = Stats::default();
+            let mut scratch = Vec::new();
+            let capacity = template.capacity();
+            let pad_row = tok.pad_row(seq_len);
+            for round in 0..4u64 {
+                scratch.clear();
+                scratch.resize(template.ids_len(), POISON);
+                let n_entries = g.rng.range(1, capacity + 1);
+                let mut cells = Vec::new();
+                let mut contents = Vec::new();
+                let mut entries = Vec::new();
+                for pos in 0..n_entries {
+                    // content distinct per (round, pos) so any stale or
+                    // crossed row changes the fake model's prediction
+                    let mut c = vec![tok.vocab.pad; seq_len];
+                    c[0] = tok.vocab.cls;
+                    c[1] = tok.vocab.content_base
+                        + ((round as usize * capacity + pos) % 200) as i32;
+                    let cell = OnceCellSync::new();
+                    cells.push(cell.clone());
+                    contents.push(c.clone());
+                    entries.push(make_req(pos as u64, c, cell));
+                }
+                let eb = ExecBatch { seq: round, entries, formed_at: Instant::now() };
+                execute_batch(&backend, &template, SlotPolicy::Fill, &stats, eb, &mut scratch)
+                    .map_err(|e| e.to_string())?;
+                let mut first: Option<Response> = None;
+                for (pos, cell) in cells.iter().enumerate() {
+                    let r = cell
+                        .wait_timeout(Duration::from_secs(5))
+                        .ok_or_else(|| "request left unfulfilled".to_string())?
+                        .map_err(|e| e.to_string())?;
+                    let want = FakeBackend::expected_class(&contents[pos], n_classes);
+                    if r.pred_class() != want {
+                        return Err(format!(
+                            "round {round} pos {pos}: leaked tokens (pred {}, want {want})",
+                            r.pred_class()
+                        ));
+                    }
+                    match &first {
+                        None => first = Some(r),
+                        Some(f) => {
+                            if !f.logits.same_buffer(&r.logits) {
+                                return Err(format!(
+                                    "round {round} pos {pos}: demux copied instead of sharing"
+                                ));
+                            }
+                        }
+                    }
+                }
+                // assembled tensor: placed rows carry their own content,
+                // every other slot carries the template pad row
+                for pos in 0..capacity {
+                    let range = template.content_range(pos / n_mux, pos % n_mux);
+                    let row = &scratch[range];
+                    let want: &[i32] =
+                        if pos < n_entries { &contents[pos] } else { &pad_row };
+                    if row != want {
+                        return Err(format!(
+                            "round {round} slot {pos}: assembled row {row:?} != {want:?}"
+                        ));
+                    }
+                }
+                if let Some(i) = scratch.iter().position(|&x| x == POISON) {
+                    return Err(format!("round {round}: poison survived at index {i}"));
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -444,6 +444,7 @@ impl<W: Write + Send + 'static> PipelinedConn<W> {
     fn stats_json(&self) -> Json {
         let c = self.engine.counters();
         let l = self.engine.latency();
+        let qw = self.engine.queue_wait();
         obj(vec![
             ("ok", Json::Bool(true)),
             (
@@ -455,9 +456,13 @@ impl<W: Write + Send + 'static> PipelinedConn<W> {
                     ("expired", num(c.expired as f64)),
                     ("groups", num(c.groups_executed as f64)),
                     ("padded", num(c.slots_padded as f64)),
+                    ("intake_waves", num(c.intake_waves as f64)),
+                    ("scratch_reallocs", num(c.scratch_reallocs as f64)),
                     ("queue_depth", num(self.engine.queue_depth() as f64)),
                     ("p50_us", num(l.p50_ns as f64 / 1e3)),
                     ("p99_us", num(l.p99_ns as f64 / 1e3)),
+                    ("queue_wait_p50_us", num(qw.p50_ns as f64 / 1e3)),
+                    ("queue_wait_p99_us", num(qw.p99_ns as f64 / 1e3)),
                 ]),
             ),
         ])
@@ -800,7 +805,7 @@ mod tests {
             id,
             slot: 0,
             group: 0,
-            logits: vec![0.0, 1.0],
+            logits: vec![0.0, 1.0].into(),
             n_classes: 2,
             latency: Duration::ZERO,
         };

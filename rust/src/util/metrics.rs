@@ -188,6 +188,12 @@ pub struct Counters {
     pub expired: AtomicU64,
     pub groups_executed: AtomicU64,
     pub slots_padded: AtomicU64,
+    /// batcher intake drains (lock round-trips); requests/wave =
+    /// submitted / intake_waves is the hot-path amortization factor
+    pub intake_waves: AtomicU64,
+    /// times the ids scratch buffer had to grow mid-serving; 0 after
+    /// warmup is the allocation-free steady-state invariant
+    pub scratch_reallocs: AtomicU64,
 }
 
 impl Counters {
@@ -199,6 +205,8 @@ impl Counters {
             expired: self.expired.load(Ordering::Relaxed),
             groups_executed: self.groups_executed.load(Ordering::Relaxed),
             slots_padded: self.slots_padded.load(Ordering::Relaxed),
+            intake_waves: self.intake_waves.load(Ordering::Relaxed),
+            scratch_reallocs: self.scratch_reallocs.load(Ordering::Relaxed),
         }
     }
 }
@@ -211,6 +219,8 @@ pub struct CounterSnapshot {
     pub expired: u64,
     pub groups_executed: u64,
     pub slots_padded: u64,
+    pub intake_waves: u64,
+    pub scratch_reallocs: u64,
 }
 
 impl CounterSnapshot {
@@ -223,6 +233,8 @@ impl CounterSnapshot {
             expired: self.expired + o.expired,
             groups_executed: self.groups_executed + o.groups_executed,
             slots_padded: self.slots_padded + o.slots_padded,
+            intake_waves: self.intake_waves + o.intake_waves,
+            scratch_reallocs: self.scratch_reallocs + o.scratch_reallocs,
         }
     }
 }

@@ -6,7 +6,7 @@
 //! std-only: `Mutex` + `Condvar`.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -19,6 +19,11 @@ struct ChanInner<T> {
     not_empty: Condvar,
     not_full: Condvar,
     cap: usize,
+    /// Mirror of `buf.len()`, maintained under the lock but readable
+    /// without it. `len()` is called on every router arrival (queue
+    /// depth sums across all lanes) and by server STATS; reading an
+    /// atomic keeps those observers off the hot path's mutex.
+    depth: AtomicUsize,
 }
 
 struct ChanState<T> {
@@ -68,6 +73,7 @@ impl<T> Channel<T> {
                 not_empty: Condvar::new(),
                 not_full: Condvar::new(),
                 cap,
+                depth: AtomicUsize::new(0),
             }),
         }
     }
@@ -82,6 +88,7 @@ impl<T> Channel<T> {
             }
             if st.buf.len() < self.inner.cap {
                 st.buf.push_back(item);
+                self.inner.depth.store(st.buf.len(), Ordering::Relaxed);
                 self.inner.not_empty.notify_one();
                 return Ok(());
             }
@@ -100,6 +107,7 @@ impl<T> Channel<T> {
             return Err(TrySendError::Full(item));
         }
         st.buf.push_back(item);
+        self.inner.depth.store(st.buf.len(), Ordering::Relaxed);
         self.inner.not_empty.notify_one();
         Ok(())
     }
@@ -109,6 +117,7 @@ impl<T> Channel<T> {
         let mut st = self.inner.q.lock().unwrap();
         loop {
             if let Some(item) = st.buf.pop_front() {
+                self.inner.depth.store(st.buf.len(), Ordering::Relaxed);
                 self.inner.not_full.notify_one();
                 return Some(item);
             }
@@ -119,12 +128,79 @@ impl<T> Channel<T> {
         }
     }
 
+    /// Drain up to `max` items into `out` with a single lock acquisition
+    /// per wakeup: blocks until at least one item is available, then
+    /// appends the whole backlog (capped at `max`) in FIFO order.
+    ///
+    /// Returns the number of items appended — 0 only on closed+drained,
+    /// or when `deadline` passes first. This is the batcher's intake
+    /// primitive: under load a full wave of requests costs one mutex
+    /// round-trip instead of one per request.
+    pub fn recv_up_to(
+        &self,
+        out: &mut Vec<T>,
+        max: usize,
+        deadline: Option<std::time::Instant>,
+    ) -> usize {
+        if max == 0 {
+            return 0;
+        }
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if !st.buf.is_empty() {
+                let n = max.min(st.buf.len());
+                out.extend(st.buf.drain(..n));
+                self.inner.depth.store(st.buf.len(), Ordering::Relaxed);
+                // a multi-item drain frees several sender slots at once
+                if n > 1 {
+                    self.inner.not_full.notify_all();
+                } else {
+                    self.inner.not_full.notify_one();
+                }
+                return n;
+            }
+            if st.closed {
+                return 0;
+            }
+            match deadline {
+                None => st = self.inner.not_empty.wait(st).unwrap(),
+                Some(dl) => {
+                    let now = std::time::Instant::now();
+                    if now >= dl {
+                        return 0;
+                    }
+                    st = self.inner.not_empty.wait_timeout(st, dl - now).unwrap().0;
+                }
+            }
+        }
+    }
+
+    /// Non-blocking multi-item drain; single lock acquisition.
+    pub fn try_recv_up_to(&self, out: &mut Vec<T>, max: usize) -> usize {
+        if max == 0 {
+            return 0;
+        }
+        let mut st = self.inner.q.lock().unwrap();
+        let n = max.min(st.buf.len());
+        if n > 0 {
+            out.extend(st.buf.drain(..n));
+            self.inner.depth.store(st.buf.len(), Ordering::Relaxed);
+            if n > 1 {
+                self.inner.not_full.notify_all();
+            } else {
+                self.inner.not_full.notify_one();
+            }
+        }
+        n
+    }
+
     /// Receive with a deadline; None on timeout or closed+drained.
     pub fn recv_timeout(&self, dur: std::time::Duration) -> Option<T> {
         let deadline = std::time::Instant::now() + dur;
         let mut st = self.inner.q.lock().unwrap();
         loop {
             if let Some(item) = st.buf.pop_front() {
+                self.inner.depth.store(st.buf.len(), Ordering::Relaxed);
                 self.inner.not_full.notify_one();
                 return Some(item);
             }
@@ -147,13 +223,16 @@ impl<T> Channel<T> {
         let mut st = self.inner.q.lock().unwrap();
         let item = st.buf.pop_front();
         if item.is_some() {
+            self.inner.depth.store(st.buf.len(), Ordering::Relaxed);
             self.inner.not_full.notify_one();
         }
         item
     }
 
+    /// Queue depth. Lock-free: reads the atomic mirror, so pollers
+    /// (router arrivals, STATS) never contend with senders/receivers.
     pub fn len(&self) -> usize {
-        self.inner.q.lock().unwrap().buf.len()
+        self.inner.depth.load(Ordering::Relaxed)
     }
 
     pub fn is_empty(&self) -> bool {
@@ -383,6 +462,132 @@ mod tests {
         }
         let s = seen.lock().unwrap();
         assert!(s.iter().all(|&x| x == 1), "every item exactly once");
+    }
+
+    #[test]
+    fn recv_up_to_drains_waves_in_fifo_order() {
+        let c = Channel::bounded(64);
+        for i in 0..20 {
+            c.send(i).unwrap();
+        }
+        let mut out = Vec::new();
+        // one lock acquisition grabs a whole wave, capped at max
+        assert_eq!(c.recv_up_to(&mut out, 8, None), 8);
+        assert_eq!(c.try_recv_up_to(&mut out, 100), 12);
+        assert_eq!(out, (0..20).collect::<Vec<_>>());
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.try_recv_up_to(&mut out, 4), 0);
+    }
+
+    #[test]
+    fn recv_up_to_deadline_expires_and_close_drains() {
+        let c: Channel<u32> = Channel::bounded(4);
+        let mut out = Vec::new();
+        let t0 = std::time::Instant::now();
+        let dl = t0 + Duration::from_millis(30);
+        assert_eq!(c.recv_up_to(&mut out, 4, Some(dl)), 0);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        c.send(7).unwrap();
+        c.close();
+        // closed channels still drain their backlog, then report 0
+        assert_eq!(c.recv_up_to(&mut out, 4, None), 1);
+        assert_eq!(out, vec![7]);
+        assert_eq!(c.recv_up_to(&mut out, 4, None), 0);
+    }
+
+    /// Property: mixed single/wave receivers over concurrent producers
+    /// lose nothing, duplicate nothing, and a single consumer always
+    /// observes FIFO order regardless of wave sizes.
+    #[test]
+    fn prop_recv_up_to_no_loss_no_duplication_fifo() {
+        crate::util::proptest::check("recv_up_to exactly-once fifo", 40, |g| {
+            let n_items = g.sized(400);
+            let cap = g.sized(32);
+            let c = Channel::bounded(cap);
+            let producer = {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for i in 0..n_items {
+                        c.send(i).unwrap();
+                    }
+                    c.close();
+                })
+            };
+            let mut got: Vec<usize> = Vec::with_capacity(n_items);
+            loop {
+                // alternate wave drains with single recvs, random widths
+                let wave = g.rng.range(1, 17);
+                if g.rng.below(4) == 0 {
+                    match c.recv() {
+                        Some(i) => got.push(i),
+                        None => break,
+                    }
+                } else if c.recv_up_to(&mut got, wave, None) == 0 {
+                    break;
+                }
+            }
+            producer.join().unwrap();
+            if got.len() != n_items {
+                return Err(format!("lost/duplicated: got {} of {n_items}", got.len()));
+            }
+            for (want, &have) in got.iter().enumerate() {
+                if want != have {
+                    return Err(format!("order violated at {want}: {have}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: multi-consumer wave drains still deliver exactly once.
+    #[test]
+    fn prop_recv_up_to_mpmc_exactly_once() {
+        crate::util::proptest::check("recv_up_to mpmc exactly-once", 15, |g| {
+            let n_items = g.sized(300);
+            let c = Channel::bounded(8);
+            let seen = Arc::new(Mutex::new(vec![0u8; n_items]));
+            let mut consumers = Vec::new();
+            for _ in 0..3 {
+                let c = c.clone();
+                let seen = seen.clone();
+                consumers.push(std::thread::spawn(move || {
+                    let mut buf = Vec::new();
+                    while c.recv_up_to(&mut buf, 5, None) > 0 {
+                        let mut s = seen.lock().unwrap();
+                        for &i in &buf {
+                            s[i] += 1;
+                        }
+                        buf.clear();
+                    }
+                }));
+            }
+            for i in 0..n_items {
+                c.send(i).unwrap();
+            }
+            c.close();
+            for h in consumers {
+                h.join().unwrap();
+            }
+            let s = seen.lock().unwrap();
+            match s.iter().position(|&x| x != 1) {
+                None => Ok(()),
+                Some(i) => Err(format!("item {i} delivered {} times", s[i])),
+            }
+        });
+    }
+
+    #[test]
+    fn len_is_lock_free_mirror() {
+        let c = Channel::bounded(8);
+        assert_eq!(c.len(), 0);
+        c.send(1).unwrap();
+        c.send(2).unwrap();
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.recv(), Some(1));
+        assert_eq!(c.len(), 1);
+        let mut out = Vec::new();
+        c.try_recv_up_to(&mut out, 8);
+        assert_eq!(c.len(), 0);
     }
 
     #[test]

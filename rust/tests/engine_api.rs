@@ -94,9 +94,10 @@ fn submit_text_through_trait_matches_framed() {
 
 #[test]
 fn expired_requests_fail_engine_side_with_deadline() {
-    // each execution takes 400ms and batches carry one request
-    // (max_wait=0), so with a 200ms deadline the first request executes
-    // in time and every queued one expires at batch assembly
+    // each execution takes 400ms; the first request ships alone (its
+    // batch forms before the others are submitted), executes in time,
+    // and the two submitted while the worker is busy expire at batch
+    // assembly (their 200ms deadline passes during the first execution)
     let coord = Arc::new(
         EngineBuilder::new()
             .max_wait_ms(0)
@@ -112,6 +113,12 @@ fn expired_requests_fail_engine_side_with_deadline() {
         let (row, _) = framed_row(i);
         let req = InferenceRequest::classify_framed(row).with_deadline(deadline);
         handles.push(coord.submit(req).unwrap());
+        if i == 0 {
+            // let the first batch ship before queueing the rest: the
+            // wave-draining batcher would otherwise co-mux request 1
+            // into the first execution and serve it in time
+            std::thread::sleep(Duration::from_millis(100));
+        }
     }
     let results: Vec<_> = handles
         .iter()
