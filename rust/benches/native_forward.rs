@@ -1,0 +1,185 @@
+//! Native forward bench: the repo's first *real* end-to-end throughput
+//! number — actual T-MUX math (embedding + fused mux, attention, FFN,
+//! demux, head) executed by `runtime/native` with zero artifacts and no
+//! PJRT, swept over `n_mux ∈ {1,2,4,8,16,32}` in the shape of the
+//! paper's Fig 4c throughput-vs-N curve.
+//!
+//! Two gates, both enforced wherever the bench runs (CI included):
+//!
+//! 1. **fused ≥ 2x naive** — at every N, the optimized forward (blocked
+//!    pre-transposed GEMM, fused mux, arena reuse, thread banding) must
+//!    beat the naive unfused scalar reference (`native::reference`, the
+//!    live in-bench baseline: same weights, same machine, measured in
+//!    the same run — never a stale constant).
+//! 2. **arena_reallocs == 0 in steady state** — after warmup, timed
+//!    forwards must not materialize new tensor arenas.
+//!
+//! Results are printed as a table and written to `BENCH_native.json` at
+//! the repo root (uploaded as a CI artifact next to `BENCH_engine.json`).
+//!
+//!   cargo bench --bench native_forward            # full
+//!   cargo bench --bench native_forward -- --quick # CI-sized
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use datamux::runtime::native::{reference, synthetic_meta, RawWeights};
+use datamux::runtime::{InferenceBackend, NativeBackend, WeightsFile};
+use datamux::util::bench::Table;
+use datamux::util::json::{arr, num, obj, s, Json};
+
+const NS: [usize; 6] = [1, 2, 4, 8, 16, 32];
+const BATCH: usize = 2;
+const SEQ_LEN: usize = 16;
+const D_MODEL: usize = 128;
+const N_LAYERS: usize = 2;
+const N_HEADS: usize = 4;
+const N_CLASSES: usize = 3;
+
+fn median(samples: &mut [f64]) -> f64 {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (warmup, iters, naive_iters): (usize, usize, usize) =
+        if quick { (2, 5, 2) } else { (5, 30, 5) };
+
+    let mut table = Table::new(
+        "native T-MUX forward: throughput vs N (paper Fig 4c shape)",
+        &[
+            "N",
+            "req/s",
+            "vs N=1",
+            "GFLOP/s",
+            "ns/req",
+            "naive ns/req",
+            "fused speedup",
+            "arena reallocs",
+        ],
+    );
+    let mut sweep = Vec::new();
+    let mut base_rps = 0.0f64;
+    let mut min_speedup = f64::INFINITY;
+    let mut steady_arena = 0u64;
+
+    for &n in &NS {
+        let meta = synthetic_meta("cls", n, BATCH, SEQ_LEN, D_MODEL, N_LAYERS, N_HEADS, N_CLASSES);
+        let raw = RawWeights::random(&meta, 2 * D_MODEL, 40 + n as u64);
+        let wf = WeightsFile::parse(raw.to_blob())?;
+        let backend = NativeBackend::from_weights(meta.clone(), wf)?;
+        let ids: Vec<i32> = (0..meta.ids_len())
+            .map(|i| ((i * 131 + 7) % meta.vocab_size) as i32)
+            .collect();
+
+        // warmup settles the tensor arena; the timed loop must not grow it
+        for _ in 0..warmup {
+            black_box(backend.run_ids(&ids)?);
+        }
+        let arena_before = backend.arena_reallocs();
+        let mut samples = Vec::with_capacity(iters);
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let t1 = Instant::now();
+            black_box(backend.run_ids(&ids)?);
+            samples.push(t1.elapsed().as_nanos() as f64);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let arena_delta = backend.arena_reallocs() - arena_before;
+        let fused_ns = median(&mut samples);
+        let requests_per_exec = (BATCH * n) as f64;
+        let rps = requests_per_exec * iters as f64 / wall;
+        let ns_per_req = fused_ns / requests_per_exec;
+        let gflops = backend.dims().flops() / fused_ns; // FLOP/ns == GFLOP/s
+
+        // the live naive unfused baseline: identical weights and inputs,
+        // scalar reference implementation, measured in this same run
+        let mut nsamples = Vec::with_capacity(naive_iters);
+        for _ in 0..naive_iters {
+            let t1 = Instant::now();
+            black_box(reference::forward(&raw, &meta, &ids)?);
+            nsamples.push(t1.elapsed().as_nanos() as f64);
+        }
+        let naive_ns = median(&mut nsamples);
+        let naive_ns_per_req = naive_ns / requests_per_exec;
+        let speedup = naive_ns / fused_ns;
+
+        if n == NS[0] {
+            base_rps = rps;
+        }
+        min_speedup = min_speedup.min(speedup);
+        steady_arena += arena_delta;
+
+        table.row(&[
+            format!("{n}"),
+            format!("{rps:.0}"),
+            format!("{:.2}x", rps / base_rps),
+            format!("{gflops:.2}"),
+            format!("{ns_per_req:.0}"),
+            format!("{naive_ns_per_req:.0}"),
+            format!("{speedup:.2}x"),
+            format!("{arena_delta}"),
+        ]);
+        sweep.push(obj(vec![
+            ("n_mux", num(n as f64)),
+            ("throughput_rps", num(rps)),
+            ("speedup_vs_n1", num(rps / base_rps)),
+            ("gflops", num(gflops)),
+            ("ns_per_request", num(ns_per_req)),
+            ("naive_ns_per_request", num(naive_ns_per_req)),
+            ("fused_speedup", num(speedup)),
+            ("arena_reallocs", num(arena_delta as f64)),
+        ]));
+    }
+    table.print();
+
+    let result = obj(vec![
+        ("schema", s("native_forward/v1")),
+        ("quick", Json::Bool(quick)),
+        (
+            "config",
+            obj(vec![
+                ("batch", num(BATCH as f64)),
+                ("seq_len", num(SEQ_LEN as f64)),
+                ("d_model", num(D_MODEL as f64)),
+                ("n_layers", num(N_LAYERS as f64)),
+                ("n_heads", num(N_HEADS as f64)),
+                ("n_classes", num(N_CLASSES as f64)),
+                ("iters", num(iters as f64)),
+            ]),
+        ),
+        ("sweep", arr(sweep)),
+        ("min_fused_speedup", num(min_speedup)),
+        ("steady_state_arena_reallocs", num(steady_arena as f64)),
+    ]);
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate sits one level below the repo root");
+    let path = root.join("BENCH_native.json");
+    std::fs::write(&path, result.to_pretty())?;
+
+    // self-check: the file must exist, parse, and carry the sweep —
+    // CI fails the job otherwise
+    let written = std::fs::read_to_string(&path)?;
+    let parsed = Json::parse(&written).map_err(|e| anyhow::anyhow!("reparse: {e}"))?;
+    anyhow::ensure!(
+        parsed.get("sweep").and_then(Json::as_arr).map_or(0, |a| a.len()) == NS.len()
+            && parsed.get("min_fused_speedup").and_then(Json::as_f64).is_some(),
+        "BENCH_native.json is missing results"
+    );
+    println!(
+        "\nwrote {} (min fused speedup vs naive reference: {min_speedup:.2}x)",
+        path.display()
+    );
+    // acceptance gates
+    anyhow::ensure!(
+        min_speedup >= 2.0,
+        "fused forward regression: {min_speedup:.2}x < 2x vs the naive unfused in-bench baseline"
+    );
+    anyhow::ensure!(
+        steady_arena == 0,
+        "tensor arena materialized {steady_arena} new workspaces in steady state (must be 0)"
+    );
+    Ok(())
+}

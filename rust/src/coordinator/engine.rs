@@ -27,7 +27,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::runtime::{InferenceBackend, LoadedModel};
+use crate::runtime::{ArtifactMeta, InferenceBackend, LoadedModel, NativeBackend};
 
 use super::api::Submit;
 use super::server::{Server, ServerConfig};
@@ -135,6 +135,13 @@ impl EngineBuilder {
         MuxCoordinator::start_backend(backend, self.coordinator.clone())
     }
 
+    /// One serving lane over the pure-rust native forward
+    /// ([`NativeBackend`]): real T-MUX math executed straight from the
+    /// artifact's weights blob — no PJRT anywhere in the process.
+    pub fn build_native(&self, meta: &ArtifactMeta) -> Result<MuxCoordinator> {
+        self.build_backend(Arc::new(NativeBackend::from_artifact(meta)?))
+    }
+
     /// Adaptive-N router: one lane per model (paper's A3-style knob).
     pub fn build_router(&self, models: Vec<LoadedModel>) -> Result<MuxRouter> {
         let lanes = models
@@ -204,6 +211,23 @@ mod tests {
             .expect("router over fake backends");
         assert_eq!(router.lanes.len(), 2);
         assert_eq!(router.lanes[0].n_mux, 2, "lanes sorted ascending by N");
+    }
+
+    #[test]
+    fn builds_coordinator_over_native_backend() {
+        let native = NativeBackend::random("cls", 2, 1, 8, 16, 1, 2, 3, 3).unwrap();
+        let coord = EngineBuilder::new()
+            .max_wait_ms(0)
+            .build_backend(Arc::new(native))
+            .expect("coordinator over native backend");
+        assert_eq!(coord.n_mux, 2);
+        let mut row = vec![0i32; 8];
+        row[0] = 1; // [CLS]
+        row[1] = 44; // t0
+        let h = coord.submit_framed(row).expect("submit");
+        let r = h.wait().expect("real math round-trips the coordinator");
+        assert!(r.pred_class() < 3);
+        assert_eq!(r.logits.len(), 3);
     }
 
     #[test]

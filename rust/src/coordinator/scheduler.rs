@@ -232,7 +232,23 @@ pub fn execute_batch(
     let padded = capacity - entries.len();
 
     // --- execute ----------------------------------------------------------
-    let out = match model.run_ids(ids_scratch) {
+    // Re-check the demux contract for *every* backend before slicing:
+    // `LoadedModel` validates its own output length, but `FakeBackend`
+    // (and any future backend) is only trusted here. A short or oversized
+    // buffer must fail the batch loudly, not index out of range below.
+    let expected_len = capacity * template.per_slot_len;
+    let run = model.run_ids(ids_scratch).and_then(|out| {
+        anyhow::ensure!(
+            out.len() == expected_len,
+            "backend returned {} logits, expected {} (capacity {} x per_slot {})",
+            out.len(),
+            expected_len,
+            capacity,
+            template.per_slot_len
+        );
+        Ok(out)
+    });
+    let out = match run {
         Ok(out) => out,
         Err(e) => {
             // fail every waiter before surfacing the error: wait() must
@@ -343,6 +359,40 @@ mod tests {
             submitted: Instant::now(),
             deadline: None,
             done: Completion::cell(cell),
+        }
+    }
+
+    /// A backend that violates the output-length contract.
+    struct ShortBackend(ArtifactMeta);
+
+    impl InferenceBackend for ShortBackend {
+        fn meta(&self) -> &ArtifactMeta {
+            &self.0
+        }
+
+        fn run_ids(&self, _ids: &[i32]) -> anyhow::Result<Vec<f32>> {
+            Ok(vec![0.0; 1])
+        }
+    }
+
+    #[test]
+    fn misbehaving_backend_output_fails_batch_loudly() {
+        let meta = FakeBackend::new("cls", 2, 1, 4, 3).meta().clone();
+        let backend = ShortBackend(meta.clone());
+        let tok = Tokenizer::new(default_vocab(), meta.vocab_size);
+        let template = MuxTemplate::new(&meta, &tok);
+        let stats = Stats::default();
+        let mut scratch = Vec::new();
+        let cell = OnceCellSync::new();
+        let req = make_req(1, vec![tok.vocab.pad; 4], cell.clone());
+        let eb = ExecBatch { seq: 0, entries: vec![req], formed_at: Instant::now() };
+        let res = execute_batch(&backend, &template, SlotPolicy::Fill, &stats, eb, &mut scratch);
+        assert!(res.is_err(), "short output must surface as a batch failure");
+        match cell.wait_timeout(Duration::from_secs(1)).expect("fulfilled, never stranded") {
+            Err(EngineError::WorkerFailed(msg)) => {
+                assert!(msg.contains("logits"), "{msg}")
+            }
+            other => panic!("expected WorkerFailed, got {other:?}"),
         }
     }
 

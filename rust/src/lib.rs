@@ -28,4 +28,4 @@ pub use coordinator::{
     CoordinatorConfig, EngineBuilder, EngineError, InferenceRequest, LogitsView, MuxCoordinator,
     MuxRouter, MuxTemplate, Payload, RequestHandle, Response, Submit, SubmitError, TaskKind,
 };
-pub use runtime::{ArtifactManifest, FakeBackend, InferenceBackend, ModelRuntime};
+pub use runtime::{ArtifactManifest, FakeBackend, InferenceBackend, ModelRuntime, NativeBackend};

@@ -1,11 +1,19 @@
 //! `datamux` CLI: serve an artifact (or an adaptive-N router over
 //! several) over TCP, or run one-shot inspection commands. Examples live
 //! in examples/ — this binary is the long-running leader entrypoint.
+//!
+//! `--backend` picks the execution engine: `pjrt` compiles and runs the
+//! artifact's HLO through the XLA CPU client; `native` runs the
+//! pure-rust T-MUX forward (`runtime/native`) straight from the weights
+//! blob, with no PJRT anywhere in the process.
 use std::sync::Arc;
 
 use anyhow::Result;
 use datamux::coordinator::{EngineBuilder, SlotPolicy, Submit};
-use datamux::runtime::{default_artifacts_dir, ArtifactManifest, ModelRuntime};
+use datamux::runtime::{
+    default_artifacts_dir, ArtifactManifest, ArtifactMeta, InferenceBackend, ModelRuntime,
+    NativeBackend,
+};
 use datamux::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -13,6 +21,7 @@ fn main() -> Result<()> {
         .describe("cmd", "serve", "serve | list | parity")
         .describe("artifacts", "<auto>", "artifacts directory")
         .describe("artifact", "", "artifact name (default: first trained, else first)")
+        .describe("backend", "pjrt", "pjrt | native (pure-rust forward, no PJRT)")
         .describe("addr", "127.0.0.1:7071", "TCP bind address for serve")
         .describe("max-wait-ms", "5", "batcher deadline")
         .describe("queue-cap", "1024", "admission queue capacity")
@@ -20,6 +29,9 @@ fn main() -> Result<()> {
         .describe("adaptive", "false", "serve an adaptive-N router over every N of a profile")
         .describe("profile", "", "profile for --adaptive (default: first with most N lanes)");
     let cmd = args.str("cmd", "serve");
+    let backend = args
+        .choice("backend", "pjrt", &["pjrt", "native"])
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
     let dir = match args.str("artifacts", "") {
         s if s.is_empty() => default_artifacts_dir(),
         s => s.into(),
@@ -38,11 +50,27 @@ fn main() -> Result<()> {
             Ok(())
         }
         "parity" => {
-            let rt = ModelRuntime::cpu()?;
-            for meta in &manifest.artifacts {
-                if meta.parity.is_some() {
-                    rt.load(meta)?.verify_parity()?;
-                    println!("parity OK: {}", meta.name);
+            if backend == "native" {
+                for meta in &manifest.artifacts {
+                    if meta.parity.is_none() {
+                        continue;
+                    }
+                    match NativeBackend::from_artifact(meta) {
+                        Ok(model) => {
+                            model.verify_parity()?;
+                            println!("parity OK (native): {}", meta.name);
+                        }
+                        // ortho-mux / retrieval artifacts still need PJRT
+                        Err(e) => println!("skipping {} (native: {e:#})", meta.name),
+                    }
+                }
+            } else {
+                let rt = ModelRuntime::cpu()?;
+                for meta in &manifest.artifacts {
+                    if meta.parity.is_some() {
+                        rt.load(meta)?.verify_parity()?;
+                        println!("parity OK: {}", meta.name);
+                    }
                 }
             }
             Ok(())
@@ -58,10 +86,9 @@ fn main() -> Result<()> {
                 })
                 .addr(args.str("addr", "127.0.0.1:7071"))
                 .max_connections(64);
-            let rt = ModelRuntime::cpu()?;
 
-            // both branches produce the same trait object: the server is
-            // generic over whichever engine shape is behind it
+            // all branches produce the same trait object: the server is
+            // generic over whichever engine shape (and backend) is behind it
             let engine: Arc<dyn Submit> = if args.bool("adaptive", false) {
                 let profile = match args.str("profile", "") {
                     p if !p.is_empty() => p,
@@ -76,7 +103,7 @@ fn main() -> Result<()> {
                     .collect();
                 ns.sort_unstable();
                 ns.dedup();
-                let mut models = Vec::new();
+                let mut metas: Vec<ArtifactMeta> = Vec::new();
                 for n in &ns {
                     let meta = manifest
                         .artifacts
@@ -84,10 +111,26 @@ fn main() -> Result<()> {
                         .filter(|a| !a.trained && a.profile == profile && a.n_mux == *n)
                         .min_by_key(|a| a.batch)
                         .unwrap();
-                    println!("lane: {} (N={}, batch={})", meta.name, meta.n_mux, meta.batch);
-                    models.push(rt.load(meta)?);
+                    println!(
+                        "lane: {} (N={}, batch={}, backend={backend})",
+                        meta.name, meta.n_mux, meta.batch
+                    );
+                    metas.push(meta.clone());
                 }
-                Arc::new(builder.build_router(models)?)
+                if backend == "native" {
+                    let mut lanes: Vec<Arc<dyn InferenceBackend>> = Vec::new();
+                    for meta in &metas {
+                        lanes.push(Arc::new(NativeBackend::from_artifact(meta)?));
+                    }
+                    Arc::new(builder.build_router_backends(lanes)?)
+                } else {
+                    let rt = ModelRuntime::cpu()?;
+                    let mut models = Vec::new();
+                    for meta in &metas {
+                        models.push(rt.load(meta)?);
+                    }
+                    Arc::new(builder.build_router(models)?)
+                }
             } else {
                 let name = args.str("artifact", "");
                 let meta = if name.is_empty() {
@@ -102,8 +145,16 @@ fn main() -> Result<()> {
                         .find(&name)
                         .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not found"))?
                 };
-                println!("loading {} (N={}, batch={})", meta.name, meta.n_mux, meta.batch);
-                Arc::new(builder.build(rt.load(meta)?)?)
+                println!(
+                    "loading {} (N={}, batch={}, backend={backend})",
+                    meta.name, meta.n_mux, meta.batch
+                );
+                if backend == "native" {
+                    Arc::new(builder.build_native(meta)?)
+                } else {
+                    let rt = ModelRuntime::cpu()?;
+                    Arc::new(builder.build(rt.load(meta)?)?)
+                }
             };
 
             let server = builder.serve(engine)?;

@@ -31,6 +31,28 @@ pub struct Parity {
     pub tol: f32,
 }
 
+impl Parity {
+    /// Check `out` against the recorded spot values within
+    /// `tol.max(tol_floor)`. Shared by every backend that claims to
+    /// reproduce the compile path: PJRT uses floor 0 (bit parity),
+    /// the native forward a small floor for its different summation
+    /// order. `name` labels failures.
+    pub fn check(&self, name: &str, out: &[f32], tol_floor: f32) -> Result<()> {
+        let tol = self.tol.max(tol_floor);
+        for (&i, &want) in self.check_indices.iter().zip(&self.check_values) {
+            let got = *out
+                .get(i)
+                .ok_or_else(|| anyhow!("parity index {i} out of range {}", out.len()))?;
+            if (got - want).abs() > tol {
+                bail!(
+                    "{name}: parity mismatch at flat index {i}: got {got}, want {want} (tol {tol})"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
     pub name: String,
@@ -228,6 +250,17 @@ mod tests {
         assert!(m.timing("tiny", 2, 1).is_some());
         assert!(m.timing("tiny", 3, 1).is_none());
         assert!(m.trained("mnli", 2).is_none());
+    }
+
+    #[test]
+    fn parity_check_spots_mismatches_and_honors_tol_floor() {
+        let m = ArtifactManifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let p = m.artifacts[0].parity.as_ref().unwrap();
+        // check index 0 expects 0.5 within tol 2e-4
+        assert!(p.check("x", &[0.5001], 0.0).is_ok());
+        assert!(p.check("x", &[0.501], 0.0).is_err());
+        assert!(p.check("x", &[0.501], 1e-2).is_ok(), "floor widens tol");
+        assert!(p.check("x", &[], 0.0).is_err(), "index out of range");
     }
 
     #[test]

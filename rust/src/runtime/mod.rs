@@ -1,27 +1,31 @@
-//! L3 runtime: PJRT loading and execution of the AOT artifacts.
+//! L3 runtime: loading and execution of the AOT artifacts.
 //!
 //! `manifest` parses the registry written by `python/compile/aot.py`,
-//! `weights` the binary tensor blobs, and `model` wraps the `xla` crate
+//! `weights` the binary tensor blobs, `model` wraps the `xla` crate
 //! (PJRT CPU client) to compile HLO text and execute with device-resident
-//! weights. See `/opt/xla-example/` for the reference wiring this adapts.
+//! weights (see `/opt/xla-example/` for the reference wiring), and
+//! `native` executes the T-MUX forward pass in pure rust directly from
+//! the weights blob — real math with no PJRT dependency.
 
 pub mod fake;
 pub mod manifest;
 pub mod model;
+pub mod native;
 pub mod weights;
 
 pub use fake::FakeBackend;
 pub use manifest::{ArtifactManifest, ArtifactMeta, Parity, VocabLayout};
 pub use model::{default_artifacts_dir, LoadedModel, ModelRuntime};
+pub use native::{NativeBackend, RawWeights};
 pub use weights::WeightsFile;
 
 /// Anything the coordinator can execute a mux group on.
 ///
 /// Implemented by the PJRT-backed
-/// [`SharedModel`](crate::coordinator::SharedModel) and by
-/// [`FakeBackend`] (deterministic, artifact-free — used by tests and
-/// demos). The coordinator only ever calls these two methods on the hot
-/// path.
+/// [`SharedModel`](crate::coordinator::SharedModel), by the pure-rust
+/// [`NativeBackend`] (real math, no PJRT), and by [`FakeBackend`]
+/// (deterministic, artifact-free — used by tests and demos). The
+/// coordinator only ever calls these two methods on the hot path.
 pub trait InferenceBackend: Send + Sync {
     /// Shape / task metadata the engine must agree on with the model.
     fn meta(&self) -> &ArtifactMeta;

@@ -140,7 +140,7 @@ impl LoadedModel {
     }
 
     /// Run the manifest's parity vector and verify bit-level agreement
-    /// with the python compile path (within tol).
+    /// with the python compile path (within the blob's own tol).
     pub fn verify_parity(&self) -> Result<()> {
         let parity = self
             .meta
@@ -148,19 +148,7 @@ impl LoadedModel {
             .as_ref()
             .ok_or_else(|| anyhow!("{} has no parity blob", self.meta.name))?;
         let out = self.run_ids(&parity.ids)?;
-        for (&i, &want) in parity.check_indices.iter().zip(&parity.check_values) {
-            let got = *out
-                .get(i)
-                .ok_or_else(|| anyhow!("parity index {i} out of range {}", out.len()))?;
-            if (got - want).abs() > parity.tol {
-                bail!(
-                    "{}: parity mismatch at flat index {i}: got {got}, want {want} (tol {})",
-                    self.meta.name,
-                    parity.tol
-                );
-            }
-        }
-        Ok(())
+        parity.check(&self.meta.name, &out, 0.0)
     }
 
     /// Rough device-memory footprint of this model (weights + one io set),

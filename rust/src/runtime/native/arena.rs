@@ -1,0 +1,98 @@
+//! Per-worker tensor arenas for the native forward.
+//!
+//! Every intermediate of one forward — residual stream, QKV, attention
+//! scores, FFN hidden, demux activations — lives in a [`Workspace`]
+//! whose buffers are sized once from the artifact's static shapes.
+//! Workspaces are checked out of a shared [`ArenaPool`] per `run_ids`
+//! call and returned afterwards, so each concurrent caller settles on
+//! its own arena and steady-state forwards allocate no tensors. The
+//! [`ArenaPool::reallocs`] counter is the native analogue of the
+//! scheduler's `scratch_reallocs` invariant: it moves only while new
+//! arenas are being materialized, and the `native_forward` bench gates
+//! on it staying flat after warmup.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::Dims;
+
+/// All intermediate tensors of one forward, allocated once.
+pub(crate) struct Workspace {
+    /// residual stream, `(batch * input_len, d_model)`
+    pub x: Vec<f32>,
+    /// layer-normed input / final hidden states, same shape as `x`
+    pub ln: Vec<f32>,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// attention context (heads merged), same shape as `x`
+    pub ctx: Vec<f32>,
+    /// projection output added back into the residual stream
+    pub proj: Vec<f32>,
+    /// attention probabilities, `(batch * n_heads, input_len, input_len)`
+    pub scores: Vec<f32>,
+    /// FFN hidden, `(batch * input_len, d_ff)`
+    pub ffh: Vec<f32>,
+    /// demux prefix projections, `(batch * n_mux, d_demux)`
+    pub pproj: Vec<f32>,
+    /// demux content projections, `(batch * demux_len, d_demux)`
+    pub hproj: Vec<f32>,
+    /// demux MLP hidden, `(batch * n_mux * demux_len, d_demux)`
+    pub z: Vec<f32>,
+    /// demultiplexed hidden states, `(batch * n_mux * demux_len, d_model)`
+    pub dem: Vec<f32>,
+}
+
+impl Workspace {
+    fn new(d: &Dims) -> Workspace {
+        let stream = d.rows() * d.d_model;
+        let lp = d.demux_len();
+        Workspace {
+            x: vec![0.0; stream],
+            ln: vec![0.0; stream],
+            q: vec![0.0; stream],
+            k: vec![0.0; stream],
+            v: vec![0.0; stream],
+            ctx: vec![0.0; stream],
+            proj: vec![0.0; stream],
+            scores: vec![0.0; d.batch * d.n_heads * d.input_len * d.input_len],
+            ffh: vec![0.0; d.rows() * d.d_ff],
+            pproj: vec![0.0; d.batch * d.n_mux * d.d_demux],
+            hproj: vec![0.0; d.batch * lp * d.d_demux],
+            z: vec![0.0; d.batch * d.n_mux * lp * d.d_demux],
+            dem: vec![0.0; d.batch * d.n_mux * lp * d.d_model],
+        }
+    }
+}
+
+/// Reusable [`Workspace`] pool: one per concurrent caller after warmup.
+pub(crate) struct ArenaPool {
+    free: Mutex<Vec<Workspace>>,
+    materializations: AtomicU64,
+}
+
+impl ArenaPool {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> ArenaPool {
+        ArenaPool { free: Mutex::new(Vec::new()), materializations: AtomicU64::new(0) }
+    }
+
+    /// Pop a reusable workspace, or materialize a new one (counted).
+    pub fn checkout(&self, dims: &Dims) -> Workspace {
+        if let Some(ws) = self.free.lock().unwrap().pop() {
+            return ws;
+        }
+        self.materializations.fetch_add(1, Ordering::Relaxed);
+        Workspace::new(dims)
+    }
+
+    pub fn give_back(&self, ws: Workspace) {
+        self.free.lock().unwrap().push(ws);
+    }
+
+    /// Arenas materialized so far. Flat after warmup is the
+    /// allocation-free steady-state invariant the bench enforces.
+    pub fn reallocs(&self) -> u64 {
+        self.materializations.load(Ordering::Relaxed)
+    }
+}

@@ -1,0 +1,216 @@
+//! The fused native T-MUX forward pass.
+//!
+//! Mirrors `python/compile/model.py::forward_task` exactly (pre-LN
+//! encoder, tanh-approximate GELU, index-embedding demux, per-task
+//! head), with the serving-side optimizations:
+//!
+//! * **Fused mux** — the per-slot transformed embeddings
+//!   `phi^i(emb^i)` are never materialized. Each combined row is
+//!   accumulated directly from the token gather:
+//!   `x[b,l] = pos_mux[l] + Σ_s tok[ids[b,s,l]] ⊙ (vecs[s]/N)`, where
+//!   `pos_mux` pre-folds the positional table with the mux mean (the
+//!   shared positional add commutes with the mean over slots).
+//! * **Blocked GEMM** over pre-transposed weights for every projection
+//!   ([`super::gemm`]), row-banded across the thread pool.
+//! * **CLS-only demux** for classification (`demux_len = 1`), matching
+//!   the compile path's `forward_task`.
+//!
+//! Every intermediate *tensor* lives in the caller's [`Workspace`] — no
+//! tensor allocation happens per call beyond the returned logits vector
+//! the [`InferenceBackend`](crate::runtime::InferenceBackend) API
+//! mandates. (When the thread pool is active, each fork-join does a few
+//! small bookkeeping allocations — latch + boxed jobs — which is what
+//! the `arena_reallocs` gate deliberately does *not* count.)
+
+#![allow(clippy::needless_range_loop)]
+
+use anyhow::{bail, Result};
+
+use super::arena::Workspace;
+use super::gemm::{gemm_bt_pooled, parallel_for, SendMut};
+use super::pack::PackedWeights;
+use super::Dims;
+use crate::util::threadpool::ThreadPool;
+
+/// sqrt(2/pi) — the tanh-approximate GELU constant jax.nn.gelu uses.
+const GELU_C: f32 = 0.797_884_6;
+
+#[inline]
+pub(crate) fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (GELU_C * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+/// Row-wise layer norm (eps 1e-5, matching `model.py::_layer_norm`).
+pub(crate) fn layer_norm(src: &[f32], g: &[f32], b: &[f32], dst: &mut [f32], d: usize) {
+    for (srow, drow) in src.chunks_exact(d).zip(dst.chunks_exact_mut(d)) {
+        let mean = srow.iter().sum::<f32>() / d as f32;
+        let mut var = 0.0f32;
+        for &v in srow {
+            var += (v - mean) * (v - mean);
+        }
+        var /= d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for i in 0..d {
+            drow[i] = (srow[i] - mean) * inv * g[i] + b[i];
+        }
+    }
+}
+
+fn softmax_row(row: &mut [f32]) {
+    let mut max = f32::NEG_INFINITY;
+    for &v in row.iter() {
+        if v > max {
+            max = v;
+        }
+    }
+    let mut sum = 0.0f32;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// One full forward: `ids` flattened `(batch, n_mux, input_len)` →
+/// flattened logits (`(B, N, C)` for cls, `(B, N, L, C)` for token).
+pub(crate) fn forward(
+    w: &PackedWeights,
+    tok: &[f32],
+    dims: &Dims,
+    pool: Option<&ThreadPool>,
+    ids: &[i32],
+    ws: &mut Workspace,
+) -> Result<Vec<f32>> {
+    let d = dims.d_model;
+    let li = dims.input_len;
+    let b = dims.batch;
+    let n = dims.n_mux;
+    let rows = dims.rows();
+    for (i, &t) in ids.iter().enumerate() {
+        if t < 0 || t as usize >= dims.vocab_size {
+            bail!("token id {t} at flat index {i} out of range 0..{}", dims.vocab_size);
+        }
+    }
+
+    // ---- fused mux + embedding gather -----------------------------------
+    for bb in 0..b {
+        for l in 0..li {
+            let row = &mut ws.x[(bb * li + l) * d..(bb * li + l + 1) * d];
+            row.copy_from_slice(&w.pos_mux[l * d..(l + 1) * d]);
+            for slot in 0..n {
+                let id = ids[(bb * n + slot) * li + l] as usize;
+                let emb = &tok[id * d..(id + 1) * d];
+                let vec = &w.mux_scaled[slot * d..(slot + 1) * d];
+                for dd in 0..d {
+                    row[dd] += emb[dd] * vec[dd];
+                }
+            }
+        }
+    }
+
+    // ---- pre-LN transformer encoder -------------------------------------
+    let heads = dims.n_heads;
+    let dh = dims.d_head;
+    let scale = 1.0 / (dh as f32).sqrt();
+    for lp in &w.layers {
+        layer_norm(&ws.x, &lp.ln1_g, &lp.ln1_b, &mut ws.ln, d);
+        gemm_bt_pooled(pool, &ws.ln, &lp.wq_t, Some(&lp.bq), &mut ws.q, rows, d, d);
+        gemm_bt_pooled(pool, &ws.ln, &lp.wk_t, Some(&lp.bk), &mut ws.k, rows, d, d);
+        gemm_bt_pooled(pool, &ws.ln, &lp.wv_t, Some(&lp.bv), &mut ws.v, rows, d, d);
+        {
+            // attention fans out over (batch, head): each pair owns its
+            // scores block and a disjoint column stripe of ctx
+            let lsq = li * li;
+            let sptr = SendMut(ws.scores.as_mut_ptr());
+            let cptr = SendMut(ws.ctx.as_mut_ptr());
+            let q = &ws.q;
+            let k = &ws.k;
+            let v = &ws.v;
+            let run = |bh: usize| {
+                let (bb, hh) = (bh / heads, bh % heads);
+                let scores = unsafe { std::slice::from_raw_parts_mut(sptr.0.add(bh * lsq), lsq) };
+                for i in 0..li {
+                    let qrow = &q[(bb * li + i) * d + hh * dh..][..dh];
+                    for j in 0..li {
+                        let krow = &k[(bb * li + j) * d + hh * dh..][..dh];
+                        let mut sdot = 0.0f32;
+                        for t in 0..dh {
+                            sdot += qrow[t] * krow[t];
+                        }
+                        scores[i * li + j] = sdot * scale;
+                    }
+                    softmax_row(&mut scores[i * li..(i + 1) * li]);
+                    let crow = unsafe {
+                        std::slice::from_raw_parts_mut(cptr.0.add((bb * li + i) * d + hh * dh), dh)
+                    };
+                    crow.fill(0.0);
+                    for j in 0..li {
+                        let p = scores[i * li + j];
+                        let vrow = &v[(bb * li + j) * d + hh * dh..][..dh];
+                        for t in 0..dh {
+                            crow[t] += p * vrow[t];
+                        }
+                    }
+                }
+            };
+            match pool {
+                Some(p) if b * heads > 1 => parallel_for(p, b * heads, run),
+                _ => {
+                    for bh in 0..b * heads {
+                        run(bh);
+                    }
+                }
+            }
+        }
+        gemm_bt_pooled(pool, &ws.ctx, &lp.wo_t, Some(&lp.bo), &mut ws.proj, rows, d, d);
+        for (x, p) in ws.x.iter_mut().zip(&ws.proj) {
+            *x += p;
+        }
+        layer_norm(&ws.x, &lp.ln2_g, &lp.ln2_b, &mut ws.ln, d);
+        gemm_bt_pooled(pool, &ws.ln, &lp.ff1_t, Some(&lp.fb1), &mut ws.ffh, rows, d, dims.d_ff);
+        for h in ws.ffh.iter_mut() {
+            *h = gelu(*h);
+        }
+        gemm_bt_pooled(pool, &ws.ffh, &lp.ff2_t, Some(&lp.fb2), &mut ws.proj, rows, dims.d_ff, d);
+        for (x, p) in ws.x.iter_mut().zip(&ws.proj) {
+            *x += p;
+        }
+    }
+    // final hidden states land in ws.ln
+    layer_norm(&ws.x, &w.lnf_g, &w.lnf_b, &mut ws.ln, d);
+
+    // ---- index-embedding demux + head -----------------------------------
+    let fd = dims.d_demux;
+    let lp_out = dims.demux_len();
+    let prefix = dims.prefix_len;
+    for bb in 0..b {
+        // prefix hidden rows are the first n positions of each batch row,
+        // content rows follow — both contiguous, no gather copies
+        let src = &ws.ln[bb * li * d..][..n * d];
+        let dst = &mut ws.pproj[bb * n * fd..][..n * fd];
+        gemm_bt_pooled(pool, src, &w.w1p_t, None, dst, n, d, fd);
+        let src = &ws.ln[(bb * li + prefix) * d..][..lp_out * d];
+        let dst = &mut ws.hproj[bb * lp_out * fd..][..lp_out * fd];
+        gemm_bt_pooled(pool, src, &w.w1h_t, None, dst, lp_out, d, fd);
+    }
+    for bb in 0..b {
+        for slot in 0..n {
+            let pp = &ws.pproj[(bb * n + slot) * fd..][..fd];
+            for l in 0..lp_out {
+                let hp = &ws.hproj[(bb * lp_out + l) * fd..][..fd];
+                let z = &mut ws.z[((bb * n + slot) * lp_out + l) * fd..][..fd];
+                for t in 0..fd {
+                    z[t] = gelu(hp[t] + pp[t] + w.db1[t]);
+                }
+            }
+        }
+    }
+    let zrows = b * n * lp_out;
+    gemm_bt_pooled(pool, &ws.z, &w.w2_t, Some(&w.db2), &mut ws.dem, zrows, fd, d);
+    let mut out = vec![0.0f32; zrows * dims.n_classes];
+    gemm_bt_pooled(pool, &ws.dem, &w.head_t, Some(&w.head_b), &mut out, zrows, d, dims.n_classes);
+    Ok(out)
+}

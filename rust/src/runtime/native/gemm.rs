@@ -1,0 +1,322 @@
+//! Cache-blocked GEMM microkernel over pre-transposed weights, plus the
+//! fork-join helper that fans row bands across [`ThreadPool`].
+//!
+//! Layout contract: activations `a` are `(m, k)` row-major; weights are
+//! stored **pre-transposed** at load time as `bt = W^T`, i.e. `(n, k)`
+//! row-major. Every dot product then streams both operands contiguously
+//! over `k`, which is what lets the compiler vectorize the inner loops —
+//! the naive `(k, n)` layout walks the weight matrix with stride `n` and
+//! defeats both SIMD and the cache.
+//!
+//! Blocking: output columns are processed in [`NC`]-wide tiles so one
+//! tile of `bt` rows stays hot in L2 while every `a` row streams over
+//! it, and the micro-kernel accumulates [`NR`] dot products per `a`-row
+//! pass to amortize the activation loads.
+
+// index-heavy kernels: explicit loops express the blocking structure
+// more directly than iterator chains would
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::util::threadpool::ThreadPool;
+
+/// Output-column tile width: one tile of `bt` (`NC * k * 4` bytes) is
+/// reused across all `m` activation rows before moving on.
+const NC: usize = 64;
+
+/// Micro-kernel width: dot products accumulated per `a`-row pass.
+const NR: usize = 4;
+
+/// Minimum multiply-accumulates before a GEMM is worth fanning out to
+/// the pool; below this the fork-join latency exceeds the win.
+const PAR_MIN_MACS: usize = 1 << 16;
+
+/// `c = a @ bt^T (+ bias)`: `a` is `(m, k)`, `bt` is the pre-transposed
+/// weight `(n, k)`, `c` is `(m, n)`, all row-major. Allocation-free.
+pub fn gemm_bt(
+    a: &[f32],
+    bt: &[f32],
+    bias: Option<&[f32]>,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), m * k, "gemm: a is not (m, k)");
+    assert_eq!(bt.len(), n * k, "gemm: bt is not (n, k)");
+    assert_eq!(c.len(), m * n, "gemm: c is not (m, n)");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), n, "gemm: bias is not (n,)");
+    }
+    let mut jb = 0;
+    while jb < n {
+        let je = (jb + NC).min(n);
+        for i in 0..m {
+            let ar = &a[i * k..(i + 1) * k];
+            let cr = &mut c[i * n..(i + 1) * n];
+            let mut j = jb;
+            while j + NR <= je {
+                let b0 = &bt[j * k..(j + 1) * k];
+                let b1 = &bt[(j + 1) * k..(j + 2) * k];
+                let b2 = &bt[(j + 2) * k..(j + 3) * k];
+                let b3 = &bt[(j + 3) * k..(j + 4) * k];
+                let mut s0 = 0.0f32;
+                let mut s1 = 0.0f32;
+                let mut s2 = 0.0f32;
+                let mut s3 = 0.0f32;
+                for kk in 0..k {
+                    let av = ar[kk];
+                    s0 += av * b0[kk];
+                    s1 += av * b1[kk];
+                    s2 += av * b2[kk];
+                    s3 += av * b3[kk];
+                }
+                match bias {
+                    Some(b) => {
+                        cr[j] = s0 + b[j];
+                        cr[j + 1] = s1 + b[j + 1];
+                        cr[j + 2] = s2 + b[j + 2];
+                        cr[j + 3] = s3 + b[j + 3];
+                    }
+                    None => {
+                        cr[j] = s0;
+                        cr[j + 1] = s1;
+                        cr[j + 2] = s2;
+                        cr[j + 3] = s3;
+                    }
+                }
+                j += NR;
+            }
+            while j < je {
+                let br = &bt[j * k..(j + 1) * k];
+                let mut s = 0.0f32;
+                for kk in 0..k {
+                    s += ar[kk] * br[kk];
+                }
+                cr[j] = s + bias.map_or(0.0, |b| b[j]);
+                j += 1;
+            }
+        }
+        jb = je;
+    }
+}
+
+/// Raw mutable base pointer smuggled into pool jobs. Each job writes a
+/// disjoint element range and [`parallel_for`] joins before the borrow
+/// ends, so no aliasing or escape is possible.
+#[derive(Clone, Copy)]
+pub(crate) struct SendMut(pub *mut f32);
+// SAFETY: see type-level comment — strictly disjoint writes, joined
+// before the underlying unique borrow resumes.
+unsafe impl Send for SendMut {}
+unsafe impl Sync for SendMut {}
+
+/// [`gemm_bt`] with the `m` rows split into one band per pool worker.
+/// Band boundaries never change per-element arithmetic, so the result is
+/// bitwise identical to the serial kernel. Small problems (or no pool)
+/// run serially.
+pub fn gemm_bt_pooled(
+    pool: Option<&ThreadPool>,
+    a: &[f32],
+    bt: &[f32],
+    bias: Option<&[f32]>,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let pool = match pool {
+        Some(p) if m >= 2 && m.saturating_mul(k).saturating_mul(n) >= PAR_MIN_MACS => p,
+        _ => return gemm_bt(a, bt, bias, c, m, k, n),
+    };
+    let bands = pool.n_workers().min(m).max(1);
+    let rows_per = m.div_ceil(bands);
+    let cptr = SendMut(c.as_mut_ptr());
+    parallel_for(pool, bands, |band| {
+        let r0 = band * rows_per;
+        if r0 >= m {
+            return;
+        }
+        let r1 = (r0 + rows_per).min(m);
+        // each band owns rows r0..r1 of `c` — disjoint across bands
+        let cband = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(r0 * n), (r1 - r0) * n) };
+        gemm_bt(&a[r0 * k..r1 * k], bt, bias, cband, r1 - r0, k, n);
+    });
+}
+
+struct Latch {
+    left: Mutex<usize>,
+    cv: Condvar,
+    /// set when any job panicked — the caller re-raises after the join
+    /// instead of silently returning partial output
+    panicked: AtomicBool,
+}
+
+/// Decrements the latch on drop, so the caller is always released.
+struct Done(Arc<Latch>);
+
+impl Drop for Done {
+    fn drop(&mut self) {
+        let mut left = self.0.left.lock().unwrap();
+        *left -= 1;
+        if *left == 0 {
+            self.0.cv.notify_all();
+        }
+    }
+}
+
+/// Run `f(0..n)` on the pool and block until every call has finished.
+/// The closure may borrow locals: the latch wait below guarantees no job
+/// (or its unwind) outlives this call, which is what makes the lifetime
+/// extension sound.
+///
+/// A panic inside a job is caught (keeping the pool worker alive),
+/// recorded on the latch, and re-raised here after all jobs drain — the
+/// caller can never observe a partial result as success, and repeated
+/// panics cannot bleed the pool dry.
+pub fn parallel_for<F: Fn(usize) + Sync>(pool: &ThreadPool, n: usize, f: F) {
+    if n == 0 {
+        return;
+    }
+    if n == 1 {
+        f(0);
+        return;
+    }
+    let latch = Arc::new(Latch {
+        left: Mutex::new(n),
+        cv: Condvar::new(),
+        panicked: AtomicBool::new(false),
+    });
+    let f_ref: &(dyn Fn(usize) + Sync) = &f;
+    // SAFETY: every submitted job drops its `Done` before exiting, and
+    // this function does not return until the latch reaches zero — the
+    // forged 'static lifetime never outlives the borrow of `f`.
+    let f_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f_ref) };
+    for i in 0..n {
+        let done = Done(latch.clone());
+        pool.submit(move || {
+            // AssertUnwindSafe: on panic the caller re-panics below, so
+            // any torn per-band state is never observed as a result
+            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f_static(i)));
+            if ok.is_err() {
+                done.0.panicked.store(true, Ordering::SeqCst);
+            }
+            drop(done);
+        });
+    }
+    let mut left = latch.left.lock().unwrap();
+    while *left > 0 {
+        left = latch.cv.wait(left).unwrap();
+    }
+    drop(left);
+    if latch.panicked.load(Ordering::SeqCst) {
+        panic!("parallel_for: a pool job panicked (see stderr for the original message)");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The textbook ijk loop over the untransposed (k, n) layout.
+    fn naive(a: &[f32], w: &[f32], bias: Option<&[f32]>, m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = bias.map_or(0.0, |b| b[j]);
+                for kk in 0..k {
+                    s += a[i * k + kk] * w[kk * n + j];
+                }
+                c[i * n + j] = s;
+            }
+        }
+        c
+    }
+
+    fn transpose(w: &[f32], k: usize, n: usize) -> Vec<f32> {
+        let mut t = vec![0.0f32; n * k];
+        for kk in 0..k {
+            for j in 0..n {
+                t[j * k + kk] = w[kk * n + j];
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn blocked_kernel_matches_naive_across_shapes() {
+        let mut rng = Rng::new(11);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (8, 16, 64), (5, 33, 66), (17, 64, 130)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let bt = transpose(&w, k, n);
+            let want = naive(&a, &w, Some(&bias), m, k, n);
+            let mut got = vec![0.0f32; m * n];
+            gemm_bt(&a, &bt, Some(&bias), &mut got, m, k, n);
+            for i in 0..want.len() {
+                assert!(
+                    (got[i] - want[i]).abs() <= 1e-4 * (1.0 + want[i].abs()),
+                    "({m},{k},{n})[{i}]: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+            let mut no_bias = vec![0.0f32; m * n];
+            gemm_bt(&a, &bt, None, &mut no_bias, m, k, n);
+            let want_nb = naive(&a, &w, None, m, k, n);
+            for i in 0..want_nb.len() {
+                assert!((no_bias[i] - want_nb[i]).abs() <= 1e-4 * (1.0 + want_nb[i].abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_gemm_is_bitwise_identical_to_serial() {
+        let mut rng = Rng::new(12);
+        let (m, k, n) = (37, 64, 48); // above PAR_MIN_MACS
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let bt: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut serial = vec![0.0f32; m * n];
+        gemm_bt(&a, &bt, Some(&bias), &mut serial, m, k, n);
+        let pool = ThreadPool::new(3, 32);
+        let mut pooled = vec![0.0f32; m * n];
+        gemm_bt_pooled(Some(&pool), &a, &bt, Some(&bias), &mut pooled, m, k, n);
+        assert_eq!(serial, pooled, "row banding must not change the math");
+    }
+
+    #[test]
+    fn parallel_for_visits_every_index_once() {
+        use std::sync::atomic::AtomicUsize;
+        let pool = ThreadPool::new(4, 64);
+        let hits: Vec<AtomicUsize> = (0..40).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(&pool, hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn parallel_for_repanics_on_job_panic_and_keeps_workers_alive() {
+        use std::sync::atomic::AtomicUsize;
+        let pool = ThreadPool::new(2, 16);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            parallel_for(&pool, 4, |i| {
+                if i == 2 {
+                    panic!("synthetic job panic");
+                }
+            });
+        }));
+        assert!(result.is_err(), "caller must observe the job panic, not partial output");
+        // the pool survives: a subsequent fan-out still completes fully
+        let hits: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(&pool, hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+}

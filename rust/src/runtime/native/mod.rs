@@ -1,0 +1,357 @@
+//! Native backend: the full T-MUX forward pass in pure rust, executed
+//! straight from the `WeightsFile`/`ArtifactManifest` format — no PJRT,
+//! no python, no network.
+//!
+//! This is the third [`InferenceBackend`](crate::runtime::InferenceBackend):
+//! `SharedModel` (PJRT) runs the compiled HLO, `FakeBackend` does no
+//! math, and [`NativeBackend`] does the *real* math at hardware speed:
+//!
+//! * `gemm` — cache-blocked dot-product GEMM over pre-transposed
+//!   weights, row-banded across `util::threadpool`;
+//! * `pack` — name-resolved weight loading (jax pytree paths), with the
+//!   token-embedding table borrowed zero-copy from the blob and the mux
+//!   vectors pre-scaled/pre-folded for the fused mux;
+//! * `forward` — embedding + fused index-prefix mux combine, pre-LN
+//!   multi-head self-attention, GELU FFN, final layer norm,
+//!   index-embedding demux, task head;
+//! * `arena` — per-worker tensor arenas so steady-state forwards
+//!   allocate nothing beyond the API-mandated output vector;
+//! * `reference` — the deliberately naive scalar twin, used as the
+//!   proptest oracle and the live baseline the `native_forward` bench
+//!   gates against (≥2x).
+//!
+//! Supported artifact space: `cls`/`token` tasks, `index_embed` demux,
+//! vector mux strategies (hadamard / learned_hadamard / binary /
+//! identity). `ortho` mux and `retrieval` artifacts still need PJRT and
+//! are rejected at load with a clear error.
+
+mod arena;
+mod forward;
+mod gemm;
+mod pack;
+pub mod reference;
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::runtime::manifest::ArtifactMeta;
+use crate::runtime::weights::WeightsFile;
+use crate::runtime::InferenceBackend;
+use crate::util::threadpool::ThreadPool;
+
+pub use pack::RawWeights;
+
+/// Task the native forward serves (`retrieval` artifacts are rejected).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NativeTask {
+    Cls,
+    Token,
+}
+
+/// Every static shape of one artifact, resolved once at load (`d_ff` and
+/// `d_demux` live only in the weights blob, not the manifest).
+#[derive(Debug, Clone)]
+pub struct Dims {
+    pub batch: usize,
+    pub n_mux: usize,
+    pub seq_len: usize,
+    pub prefix_len: usize,
+    pub input_len: usize,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub d_demux: usize,
+    pub n_classes: usize,
+    pub task: NativeTask,
+}
+
+impl Dims {
+    /// Rows of the residual stream: one per (batch, position).
+    pub fn rows(&self) -> usize {
+        self.batch * self.input_len
+    }
+
+    /// Positions demultiplexed: only \[CLS\] for cls (same logits,
+    /// O(L) less demux work — the compile path's `demux_len=1`), every
+    /// content position for token.
+    pub fn demux_len(&self) -> usize {
+        match self.task {
+            NativeTask::Cls => 1,
+            NativeTask::Token => self.seq_len,
+        }
+    }
+
+    pub fn ids_len(&self) -> usize {
+        self.batch * self.n_mux * self.input_len
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.batch * self.n_mux * self.demux_len() * self.n_classes
+    }
+
+    /// Approximate FLOPs of one forward (2 per multiply-accumulate;
+    /// GEMM + attention + mux terms, elementwise/LN work excluded).
+    pub fn flops(&self) -> f64 {
+        let m = self.rows() as f64;
+        let (d, f, fd) = (self.d_model as f64, self.d_ff as f64, self.d_demux as f64);
+        let mux = 2.0 * m * (self.n_mux * self.d_model) as f64;
+        let attn = 2.0
+            * (self.batch * self.n_heads) as f64
+            * (2 * self.input_len * self.input_len * self.d_head) as f64;
+        let per_layer = 2.0 * m * (4.0 * d * d + 2.0 * d * f) + attn;
+        let bn = (self.batch * self.n_mux) as f64;
+        let lp = self.demux_len() as f64;
+        let demux = 2.0 * bn * d * fd
+            + 2.0 * (self.batch as f64) * lp * d * fd
+            + 2.0 * bn * lp * fd * d
+            + 2.0 * bn * lp * d * self.n_classes as f64;
+        mux + self.n_layers as f64 * per_layer + demux
+    }
+}
+
+/// Synthetic [`ArtifactMeta`] for artifact-free native models (tests,
+/// benches, the zero-artifact e2e run) — index-prefix layout, same
+/// conventions as [`FakeBackend`](crate::runtime::FakeBackend).
+#[allow(clippy::too_many_arguments)]
+pub fn synthetic_meta(
+    task: &str,
+    n_mux: usize,
+    batch: usize,
+    seq_len: usize,
+    d_model: usize,
+    n_layers: usize,
+    n_heads: usize,
+    n_classes: usize,
+) -> ArtifactMeta {
+    ArtifactMeta {
+        name: format!("native_{task}_n{n_mux}_b{batch}_d{d_model}"),
+        hlo: PathBuf::from("native.hlo.txt"),
+        weights: PathBuf::from("native.weights.bin"),
+        profile: "native".to_string(),
+        n_mux,
+        seq_len,
+        input_len: seq_len + n_mux,
+        batch,
+        d_model,
+        n_layers,
+        n_heads,
+        task: task.to_string(),
+        n_classes,
+        mux: "hadamard".to_string(),
+        demux: "index_embed".to_string(),
+        vocab_size: 300,
+        // 7 model-level tensors + 1 head pair + 16 per layer (see
+        // RawWeights::random); pack() cross-checks this against the blob
+        n_weight_tensors: 12 + 16 * n_layers,
+        trained: false,
+        train_task: None,
+        train_accuracy: None,
+        parity: None,
+    }
+}
+
+/// Pure-rust T-MUX inference over a weights blob.
+pub struct NativeBackend {
+    meta: ArtifactMeta,
+    dims: Dims,
+    /// owns the blob; the token table is gathered zero-copy out of it
+    wf: WeightsFile,
+    weights: pack::PackedWeights,
+    pool: Option<ThreadPool>,
+    arenas: arena::ArenaPool,
+}
+
+fn make_pool(threads: usize) -> Option<ThreadPool> {
+    if threads <= 1 {
+        None
+    } else {
+        Some(ThreadPool::new(threads, threads * 8))
+    }
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .saturating_sub(1)
+        .clamp(1, 8)
+}
+
+impl NativeBackend {
+    /// Load the artifact's weights blob from disk and pack it.
+    pub fn from_artifact(meta: &ArtifactMeta) -> Result<Self> {
+        let wf = WeightsFile::load(&meta.weights)?;
+        Self::from_weights(meta.clone(), wf)
+    }
+
+    /// Build from an already-parsed blob (tests hand in synthetic ones).
+    pub fn from_weights(meta: ArtifactMeta, wf: WeightsFile) -> Result<Self> {
+        let (dims, weights) = pack::pack(&meta, &wf)?;
+        Ok(NativeBackend {
+            meta,
+            dims,
+            wf,
+            weights,
+            pool: make_pool(default_threads()),
+            arenas: arena::ArenaPool::new(),
+        })
+    }
+
+    /// A randomly-initialized model — real math, zero artifacts.
+    #[allow(clippy::too_many_arguments)]
+    pub fn random(
+        task: &str,
+        n_mux: usize,
+        batch: usize,
+        seq_len: usize,
+        d_model: usize,
+        n_layers: usize,
+        n_heads: usize,
+        n_classes: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        let meta =
+            synthetic_meta(task, n_mux, batch, seq_len, d_model, n_layers, n_heads, n_classes);
+        let raw = RawWeights::random(&meta, 2 * d_model, seed);
+        let wf = WeightsFile::parse(raw.to_blob())?;
+        Self::from_weights(meta, wf)
+    }
+
+    /// GEMM/attention worker threads (`<= 1` runs single-threaded).
+    /// Banding never changes per-element arithmetic, so results are
+    /// bitwise identical across thread counts.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.pool = make_pool(threads);
+        self
+    }
+
+    pub fn dims(&self) -> &Dims {
+        &self.dims
+    }
+
+    /// Tensor-arena materializations so far; flat after warmup is the
+    /// allocation-free steady-state invariant (bench-gated).
+    pub fn arena_reallocs(&self) -> u64 {
+        self.arenas.reallocs()
+    }
+
+    /// Run the manifest's parity vector against the native forward.
+    /// Tolerance gets a floor of 1e-3: the fused path sums in a
+    /// different order than the jax reduction, so bit-parity headroom
+    /// beyond the blob's own `tol` is expected.
+    pub fn verify_parity(&self) -> Result<()> {
+        let parity = self
+            .meta
+            .parity
+            .as_ref()
+            .ok_or_else(|| anyhow!("{} has no parity blob", self.meta.name))?;
+        let out = self.run_ids(&parity.ids)?;
+        parity.check(&self.meta.name, &out, 1e-3)
+    }
+}
+
+impl InferenceBackend for NativeBackend {
+    fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    fn run_ids(&self, ids: &[i32]) -> Result<Vec<f32>> {
+        ensure!(
+            ids.len() == self.dims.ids_len(),
+            "{}: ids length {} != expected {} (batch {} x n_mux {} x input_len {})",
+            self.meta.name,
+            ids.len(),
+            self.dims.ids_len(),
+            self.dims.batch,
+            self.dims.n_mux,
+            self.dims.input_len
+        );
+        let tok = self.wf.tensor_f32_view(self.weights.tok_idx)?;
+        let mut ws = self.arenas.checkout(&self.dims);
+        let result =
+            forward::forward(&self.weights, tok, &self.dims, self.pool.as_ref(), ids, &mut ws);
+        self.arenas.give_back(ws);
+        let out = result?;
+        debug_assert_eq!(out.len(), self.dims.output_len());
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend(task: &str, threads: usize) -> NativeBackend {
+        NativeBackend::random(task, 2, 1, 6, 8, 1, 2, 3, 21)
+            .expect("random backend")
+            .with_threads(threads)
+    }
+
+    #[test]
+    fn native_backend_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<NativeBackend>();
+    }
+
+    #[test]
+    fn output_shapes_match_the_meta_contract() {
+        for task in ["cls", "token"] {
+            let b = backend(task, 1);
+            let ids = vec![1i32; b.meta().ids_len()];
+            let out = b.run_ids(&ids).expect("run");
+            assert_eq!(out.len(), b.meta().output_len(), "{task}");
+            assert_eq!(out.len(), b.dims().output_len(), "{task}");
+        }
+    }
+
+    #[test]
+    fn serial_and_pooled_forwards_are_bitwise_identical() {
+        let serial = backend("cls", 1);
+        let pooled = NativeBackend::random("cls", 2, 1, 6, 8, 1, 2, 3, 21)
+            .unwrap()
+            .with_threads(3);
+        let ids: Vec<i32> = (0..serial.meta().ids_len() as i32).map(|i| i % 44).collect();
+        assert_eq!(serial.run_ids(&ids).unwrap(), pooled.run_ids(&ids).unwrap());
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let b = backend("cls", 1);
+        assert!(b.run_ids(&[0i32; 3]).is_err(), "wrong ids length");
+        let mut ids = vec![1i32; b.meta().ids_len()];
+        ids[0] = 300; // == vocab_size, out of range
+        assert!(b.run_ids(&ids).is_err(), "oob token id");
+        ids[0] = -1;
+        assert!(b.run_ids(&ids).is_err(), "negative token id");
+    }
+
+    #[test]
+    fn arena_settles_after_warmup() {
+        let b = backend("cls", 1);
+        let ids = vec![2i32; b.meta().ids_len()];
+        b.run_ids(&ids).unwrap();
+        assert_eq!(b.arena_reallocs(), 1, "warmup materializes exactly one arena");
+        for _ in 0..4 {
+            b.run_ids(&ids).unwrap();
+        }
+        assert_eq!(b.arena_reallocs(), 1, "steady state must reuse the arena");
+    }
+
+    #[test]
+    fn flops_model_is_positive_and_grows_with_n() {
+        let small = synthetic_meta("cls", 2, 1, 8, 16, 1, 2, 3);
+        let large = synthetic_meta("cls", 8, 1, 8, 16, 1, 2, 3);
+        let raw_s = RawWeights::random(&small, 32, 1);
+        let raw_l = RawWeights::random(&large, 32, 1);
+        let bs = NativeBackend::from_weights(small, WeightsFile::parse(raw_s.to_blob()).unwrap())
+            .unwrap();
+        let bl = NativeBackend::from_weights(large, WeightsFile::parse(raw_l.to_blob()).unwrap())
+            .unwrap();
+        assert!(bs.dims().flops() > 0.0);
+        assert!(bl.dims().flops() > bs.dims().flops(), "longer mux input costs more");
+    }
+}

@@ -1,0 +1,472 @@
+//! Weight resolution and packing for the native forward.
+//!
+//! [`pack`] turns a [`WeightsFile`] (the `DMUXW1` blob `aot.py` writes)
+//! into execution layout: projection matrices are pre-transposed to
+//! `(out, in)` row-major for the dot-product GEMM, the mux vectors are
+//! pre-scaled by `1/N` and their mean is folded into the positional
+//! table (`pos_mux`), and the token-embedding gather table is *not*
+//! copied at all — the backend borrows it from the blob through
+//! [`WeightsFile::tensor_f32_view`]. Tensors are resolved by their jax
+//! pytree path names (`layers/0/wq/w`, `demux/w1h`, ...), never by
+//! position, so a reordered blob fails loudly instead of silently
+//! mis-wiring.
+//!
+//! [`RawWeights`] is the artifact-free twin: tests and benches generate
+//! a random model here, serialize it through the real `DMUXW1` format,
+//! and hand `reference::forward` the same tensors the packed path loads.
+
+#![allow(clippy::needless_range_loop)]
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use super::{Dims, NativeTask};
+use crate::runtime::manifest::ArtifactMeta;
+use crate::runtime::weights::WeightsFile;
+use crate::util::json::{arr, num, obj, s};
+use crate::util::rng::Rng;
+
+/// One encoder layer in execution layout (`*_t` = pre-transposed).
+pub(crate) struct LayerPack {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub wq_t: Vec<f32>,
+    pub bq: Vec<f32>,
+    pub wk_t: Vec<f32>,
+    pub bk: Vec<f32>,
+    pub wv_t: Vec<f32>,
+    pub bv: Vec<f32>,
+    pub wo_t: Vec<f32>,
+    pub bo: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub ff1_t: Vec<f32>,
+    pub fb1: Vec<f32>,
+    pub ff2_t: Vec<f32>,
+    pub fb2: Vec<f32>,
+}
+
+/// Everything the forward needs besides the borrowed token table.
+pub(crate) struct PackedWeights {
+    /// index of `tok_emb` in the blob — gathered zero-copy per forward
+    pub tok_idx: usize,
+    /// `pos_mux[l] = pos_emb[l] ⊙ mean_n vecs[n]`: the position term of
+    /// the fused mux (the shared positional add commutes with the mean
+    /// over slots, so it is applied once, pre-multiplied)
+    pub pos_mux: Vec<f32>,
+    /// `vecs[n] / N` — per-slot Hadamard vector with the mux mean folded in
+    pub mux_scaled: Vec<f32>,
+    pub layers: Vec<LayerPack>,
+    pub lnf_g: Vec<f32>,
+    pub lnf_b: Vec<f32>,
+    pub w1h_t: Vec<f32>,
+    pub w1p_t: Vec<f32>,
+    pub db1: Vec<f32>,
+    pub w2_t: Vec<f32>,
+    pub db2: Vec<f32>,
+    pub head_t: Vec<f32>,
+    pub head_b: Vec<f32>,
+}
+
+/// Name-indexed access to a weights blob with shape validation.
+struct Resolver<'a> {
+    wf: &'a WeightsFile,
+    by_name: HashMap<&'a str, usize>,
+}
+
+impl<'a> Resolver<'a> {
+    fn new(wf: &'a WeightsFile) -> Resolver<'a> {
+        let by_name = wf.tensors.iter().enumerate().map(|(i, t)| (t.name.as_str(), i)).collect();
+        Resolver { wf, by_name }
+    }
+
+    fn idx(&self, name: &str) -> Result<usize> {
+        self.by_name
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("weights blob missing tensor '{name}'"))
+    }
+
+    fn shape_of(&self, name: &str) -> Result<&'a [usize]> {
+        Ok(&self.wf.tensors[self.idx(name)?].shape)
+    }
+
+    fn view(&self, name: &str, shape: &[usize]) -> Result<&'a [f32]> {
+        let i = self.idx(name)?;
+        let t = &self.wf.tensors[i];
+        ensure!(
+            t.shape.as_slice() == shape,
+            "tensor '{name}' shape {:?} != expected {:?}",
+            t.shape,
+            shape
+        );
+        self.wf.tensor_f32_view(i)
+    }
+
+    fn vec(&self, name: &str, shape: &[usize]) -> Result<Vec<f32>> {
+        Ok(self.view(name, shape)?.to_vec())
+    }
+
+    /// `(rows, cols)` tensor copied transposed to `(cols, rows)`.
+    fn transposed(&self, name: &str, rows: usize, cols: usize) -> Result<Vec<f32>> {
+        let src = self.view(name, &[rows, cols])?;
+        let mut out = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                out[c * rows + r] = src[r * cols + c];
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Validate the artifact against the blob and build execution layout.
+pub(crate) fn pack(meta: &ArtifactMeta, wf: &WeightsFile) -> Result<(Dims, PackedWeights)> {
+    match meta.mux.as_str() {
+        "hadamard" | "learned_hadamard" | "binary" | "identity" => {}
+        other => bail!(
+            "native backend: unsupported mux strategy '{other}' \
+             (vector strategies only; ortho needs per-slot matrices)"
+        ),
+    }
+    ensure!(
+        meta.demux == "index_embed",
+        "native backend: unsupported demux strategy '{}'",
+        meta.demux
+    );
+    let task = match meta.task.as_str() {
+        "cls" => NativeTask::Cls,
+        "token" => NativeTask::Token,
+        other => bail!("native backend: unsupported task '{other}'"),
+    };
+    ensure!(meta.n_layers >= 1, "native backend: model needs at least one layer");
+    ensure!(
+        meta.input_len == meta.seq_len + meta.n_mux,
+        "native backend: expected index-prefix layout input_len = seq_len + n_mux, \
+         got {} != {} + {}",
+        meta.input_len,
+        meta.seq_len,
+        meta.n_mux
+    );
+    ensure!(
+        meta.n_heads >= 1 && meta.d_model % meta.n_heads == 0,
+        "native backend: d_model {} not divisible by n_heads {}",
+        meta.d_model,
+        meta.n_heads
+    );
+    if meta.n_weight_tensors != 0 {
+        ensure!(
+            wf.tensors.len() == meta.n_weight_tensors,
+            "{}: weights file has {} tensors, manifest says {}",
+            meta.name,
+            wf.tensors.len(),
+            meta.n_weight_tensors
+        );
+    }
+
+    let d = meta.d_model;
+    let head_name = match task {
+        NativeTask::Cls => "head_cls",
+        NativeTask::Token => "head_token",
+    };
+    let r = Resolver::new(wf);
+
+    // hidden widths live only in the blob, not the manifest
+    let ff1_shape = r.shape_of("layers/0/ff1/w")?;
+    ensure!(
+        ff1_shape.len() == 2 && ff1_shape[0] == d,
+        "layers/0/ff1/w must be (d_model, d_ff), got {ff1_shape:?}"
+    );
+    let d_ff = ff1_shape[1];
+    let w1h_shape = r.shape_of("demux/w1h")?;
+    ensure!(
+        w1h_shape.len() == 2 && w1h_shape[0] == d,
+        "demux/w1h must be (d_model, d_demux), got {w1h_shape:?}"
+    );
+    let d_demux = w1h_shape[1];
+
+    let dims = Dims {
+        batch: meta.batch,
+        n_mux: meta.n_mux,
+        seq_len: meta.seq_len,
+        prefix_len: meta.n_mux,
+        input_len: meta.input_len,
+        vocab_size: meta.vocab_size,
+        d_model: d,
+        n_layers: meta.n_layers,
+        n_heads: meta.n_heads,
+        d_head: d / meta.n_heads,
+        d_ff,
+        d_demux,
+        n_classes: meta.n_classes,
+        task,
+    };
+
+    let mut layers = Vec::with_capacity(meta.n_layers);
+    for li in 0..meta.n_layers {
+        let p = |stem: &str| format!("layers/{li}/{stem}");
+        layers.push(LayerPack {
+            ln1_g: r.vec(&p("ln1/g"), &[d])?,
+            ln1_b: r.vec(&p("ln1/b"), &[d])?,
+            wq_t: r.transposed(&p("wq/w"), d, d)?,
+            bq: r.vec(&p("wq/b"), &[d])?,
+            wk_t: r.transposed(&p("wk/w"), d, d)?,
+            bk: r.vec(&p("wk/b"), &[d])?,
+            wv_t: r.transposed(&p("wv/w"), d, d)?,
+            bv: r.vec(&p("wv/b"), &[d])?,
+            wo_t: r.transposed(&p("wo/w"), d, d)?,
+            bo: r.vec(&p("wo/b"), &[d])?,
+            ln2_g: r.vec(&p("ln2/g"), &[d])?,
+            ln2_b: r.vec(&p("ln2/b"), &[d])?,
+            ff1_t: r.transposed(&p("ff1/w"), d, d_ff)?,
+            fb1: r.vec(&p("ff1/b"), &[d_ff])?,
+            ff2_t: r.transposed(&p("ff2/w"), d_ff, d)?,
+            fb2: r.vec(&p("ff2/b"), &[d])?,
+        });
+    }
+
+    let vecs = r.view("mux/vecs", &[meta.n_mux, d])?;
+    let inv_n = 1.0 / meta.n_mux as f32;
+    let mux_scaled: Vec<f32> = vecs.iter().map(|v| v * inv_n).collect();
+    let mut mean = vec![0.0f32; d];
+    for n in 0..meta.n_mux {
+        for dd in 0..d {
+            mean[dd] += vecs[n * d + dd] * inv_n;
+        }
+    }
+    let pos = r.view("pos_emb", &[meta.input_len, d])?;
+    let mut pos_mux = vec![0.0f32; meta.input_len * d];
+    for l in 0..meta.input_len {
+        for dd in 0..d {
+            pos_mux[l * d + dd] = pos[l * d + dd] * mean[dd];
+        }
+    }
+    // shape + alignment validated once here; the forward gathers from the
+    // blob without copying
+    r.view("tok_emb", &[meta.vocab_size, d])?;
+    let tok_idx = r.idx("tok_emb")?;
+
+    let packed = PackedWeights {
+        tok_idx,
+        pos_mux,
+        mux_scaled,
+        layers,
+        lnf_g: r.vec("ln_f/g", &[d])?,
+        lnf_b: r.vec("ln_f/b", &[d])?,
+        w1h_t: r.transposed("demux/w1h", d, d_demux)?,
+        w1p_t: r.transposed("demux/w1p", d, d_demux)?,
+        db1: r.vec("demux/b1", &[d_demux])?,
+        w2_t: r.transposed("demux/w2", d_demux, d)?,
+        db2: r.vec("demux/b2", &[d])?,
+        head_t: r.transposed(&format!("{head_name}/w"), d, meta.n_classes)?,
+        head_b: r.vec(&format!("{head_name}/b"), &[meta.n_classes])?,
+    };
+    Ok((dims, packed))
+}
+
+/// Named tensors in the exact jax pytree flatten order `aot.py` writes —
+/// an artifact-free stand-in for a trained weights blob.
+pub struct RawWeights {
+    /// `(pytree path, shape, row-major data)`
+    pub tensors: Vec<(String, Vec<usize>, Vec<f32>)>,
+}
+
+impl RawWeights {
+    pub fn get(&self, name: &str) -> Option<(&[usize], &[f32])> {
+        self.tensors
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|(_, shape, data)| (shape.as_slice(), data.as_slice()))
+    }
+
+    /// A randomly-initialized T-MUX model for `meta`'s shapes, in the
+    /// init scales `python/compile/model.py::init_params` uses.
+    /// Deterministic in `(meta shapes, seed)`.
+    pub fn random(meta: &ArtifactMeta, d_ff: usize, seed: u64) -> RawWeights {
+        let d = meta.d_model;
+        let fd = 2 * d; // demux MLP hidden width (model.py: fd = 2 * d)
+        let n_cls = meta.n_classes;
+        let mut rng = Rng::new(seed);
+        let mut tensors: Vec<(String, Vec<usize>, Vec<f32>)> = Vec::new();
+        fn gauss(rng: &mut Rng, len: usize, scale: f64) -> Vec<f32> {
+            (0..len).map(|_| (rng.normal() * scale) as f32).collect()
+        }
+        fn dense_scale(d_in: usize, d_out: usize) -> f64 {
+            (2.0 / (d_in + d_out) as f64).sqrt()
+        }
+        let head = match meta.task.as_str() {
+            "token" => "head_token",
+            _ => "head_cls",
+        };
+        // jax flattens dicts alphabetically; this order mirrors aot.py
+        tensors.push(("demux/b1".into(), vec![fd], vec![0.0; fd]));
+        tensors.push(("demux/b2".into(), vec![d], vec![0.0; d]));
+        let demux_scale = 1.0 / (d as f64).sqrt();
+        tensors.push(("demux/w1h".into(), vec![d, fd], gauss(&mut rng, d * fd, demux_scale)));
+        tensors.push(("demux/w1p".into(), vec![d, fd], gauss(&mut rng, d * fd, demux_scale)));
+        let w2_scale = 1.0 / (fd as f64).sqrt();
+        tensors.push(("demux/w2".into(), vec![fd, d], gauss(&mut rng, fd * d, w2_scale)));
+        tensors.push((format!("{head}/b"), vec![n_cls], vec![0.0; n_cls]));
+        tensors.push((
+            format!("{head}/w"),
+            vec![d, n_cls],
+            gauss(&mut rng, d * n_cls, dense_scale(d, n_cls)),
+        ));
+        for li in 0..meta.n_layers {
+            let p = |stem: &str| format!("layers/{li}/{stem}");
+            let ff_scale = dense_scale(d, d_ff);
+            tensors.push((p("ff1/b"), vec![d_ff], vec![0.0; d_ff]));
+            tensors.push((p("ff1/w"), vec![d, d_ff], gauss(&mut rng, d * d_ff, ff_scale)));
+            tensors.push((p("ff2/b"), vec![d], vec![0.0; d]));
+            tensors.push((p("ff2/w"), vec![d_ff, d], gauss(&mut rng, d_ff * d, ff_scale)));
+            tensors.push((p("ln1/b"), vec![d], vec![0.0; d]));
+            tensors.push((p("ln1/g"), vec![d], vec![1.0; d]));
+            tensors.push((p("ln2/b"), vec![d], vec![0.0; d]));
+            tensors.push((p("ln2/g"), vec![d], vec![1.0; d]));
+            for w in ["wk", "wo", "wq", "wv"] {
+                tensors.push((p(&format!("{w}/b")), vec![d], vec![0.0; d]));
+                tensors.push((
+                    p(&format!("{w}/w")),
+                    vec![d, d],
+                    gauss(&mut rng, d * d, dense_scale(d, d)),
+                ));
+            }
+        }
+        tensors.push(("ln_f/b".into(), vec![d], vec![0.0; d]));
+        tensors.push(("ln_f/g".into(), vec![d], vec![1.0; d]));
+        tensors.push((
+            "mux/vecs".into(),
+            vec![meta.n_mux, d],
+            gauss(&mut rng, meta.n_mux * d, 1.0),
+        ));
+        tensors.push((
+            "pos_emb".into(),
+            vec![meta.input_len, d],
+            gauss(&mut rng, meta.input_len * d, 0.02),
+        ));
+        tensors.push((
+            "tok_emb".into(),
+            vec![meta.vocab_size, d],
+            gauss(&mut rng, meta.vocab_size * d, 0.02),
+        ));
+        RawWeights { tensors }
+    }
+
+    /// Serialize as a `DMUXW1` blob — byte-compatible with
+    /// `aot.py::write_weights`, so loading goes through the real
+    /// [`WeightsFile`] parser.
+    pub fn to_blob(&self) -> Vec<u8> {
+        let mut entries = Vec::new();
+        let mut offset = 0usize;
+        for (name, shape, data) in &self.tensors {
+            let nbytes = data.len() * 4;
+            entries.push(obj(vec![
+                ("name", s(name)),
+                ("shape", arr(shape.iter().map(|&x| num(x as f64)))),
+                ("dtype", s("f32")),
+                ("offset", num(offset as f64)),
+                ("nbytes", num(nbytes as f64)),
+            ]));
+            offset += nbytes;
+        }
+        let header = obj(vec![("tensors", arr(entries))]).to_string();
+        let mut out = Vec::with_capacity(11 + header.len() + offset);
+        out.extend_from_slice(b"DMUXW1\n");
+        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        for (_, _, data) in &self.tensors {
+            for &v in data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Total tensor count (what the manifest's `n_weight_tensors` pins).
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ArtifactMeta {
+        super::super::synthetic_meta("cls", 2, 1, 6, 8, 1, 2, 3)
+    }
+
+    #[test]
+    fn random_blob_roundtrips_through_the_weights_parser() {
+        let m = meta();
+        let raw = RawWeights::random(&m, 16, 5);
+        let wf = WeightsFile::parse(raw.to_blob()).expect("parse");
+        assert_eq!(wf.tensors.len(), raw.len());
+        for (i, (name, shape, data)) in raw.tensors.iter().enumerate() {
+            assert_eq!(&wf.tensors[i].name, name);
+            assert_eq!(&wf.tensors[i].shape, shape);
+            assert_eq!(wf.tensor_f32_view(i).expect("view"), data.as_slice());
+        }
+    }
+
+    #[test]
+    fn pack_resolves_by_name_and_transposes() {
+        let m = meta();
+        let raw = RawWeights::random(&m, 16, 6);
+        let wf = WeightsFile::parse(raw.to_blob()).unwrap();
+        let (dims, packed) = pack(&m, &wf).expect("pack");
+        assert_eq!(dims.d_ff, 16);
+        assert_eq!(dims.d_demux, 16);
+        assert_eq!(dims.d_head, 4);
+        let (shape, wq) = raw.get("layers/0/wq/w").unwrap();
+        let d = shape[0];
+        for r in 0..d {
+            for c in 0..d {
+                assert_eq!(packed.layers[0].wq_t[c * d + r], wq[r * d + c]);
+            }
+        }
+        // fused mux precomputation: vecs/N and pos ⊙ mean(vecs)
+        let (_, vecs) = raw.get("mux/vecs").unwrap();
+        let (_, pos) = raw.get("pos_emb").unwrap();
+        let n = m.n_mux;
+        for dd in 0..d {
+            let mean: f32 = (0..n).map(|s| vecs[s * d + dd]).sum::<f32>() / n as f32;
+            assert!((packed.pos_mux[dd] - pos[dd] * mean).abs() < 1e-6);
+            assert!((packed.mux_scaled[dd] - vecs[dd] / n as f32).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn pack_rejects_unsupported_configs() {
+        let mut m = meta();
+        m.mux = "ortho".into();
+        let raw = RawWeights::random(&meta(), 16, 7);
+        let wf = WeightsFile::parse(raw.to_blob()).unwrap();
+        assert!(pack(&m, &wf).is_err(), "ortho mux must be rejected");
+        let mut m = meta();
+        m.demux = "mlp".into();
+        let wf = WeightsFile::parse(raw.to_blob()).unwrap();
+        assert!(pack(&m, &wf).is_err(), "mlp demux must be rejected");
+        let mut m = meta();
+        m.task = "retrieval".into();
+        let wf = WeightsFile::parse(raw.to_blob()).unwrap();
+        assert!(pack(&m, &wf).is_err(), "retrieval must be rejected");
+    }
+
+    #[test]
+    fn pack_reports_missing_tensors_by_name() {
+        let m = meta();
+        let mut raw = RawWeights::random(&m, 16, 8);
+        raw.tensors.retain(|(n, _, _)| n != "demux/w1h");
+        let wf = WeightsFile::parse(raw.to_blob()).unwrap();
+        let mut m2 = m.clone();
+        m2.n_weight_tensors = raw.len();
+        let err = pack(&m2, &wf).unwrap_err().to_string();
+        assert!(err.contains("demux/w1h"), "{err}");
+    }
+}

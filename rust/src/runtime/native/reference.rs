@@ -1,0 +1,268 @@
+//! Straightforward scalar T-MUX forward from raw tensors — the oracle
+//! for the optimized native path and the live "naive unfused" baseline
+//! in `benches/native_forward.rs` (same pattern as `engine_hotpath`'s
+//! inline legacy path: the baseline is measured on the same machine,
+//! never a stale constant).
+//!
+//! Deliberately unoptimized: the per-slot transformed embeddings
+//! `phi^i(x^i)` are fully materialized before the mux mean, every
+//! projection is a textbook ijk triple loop over the blob's untransposed
+//! `(in, out)` layout (stride-`n` weight walks), nothing is blocked,
+//! pre-transposed, fused, arena-reused, or threaded, and every
+//! intermediate allocates. Keep it that way — its slowness is the point.
+
+#![allow(clippy::needless_range_loop)]
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use super::pack::RawWeights;
+use crate::runtime::manifest::ArtifactMeta;
+
+fn tensor<'a>(raw: &'a RawWeights, name: &str) -> Result<(&'a [usize], &'a [f32])> {
+    raw.get(name).ok_or_else(|| anyhow!("reference: missing tensor '{name}'"))
+}
+
+/// Naive `(m, k) @ (k, n) + bias` over the untransposed weight layout.
+fn matmul(a: &[f32], w: &[f32], bias: Option<&[f32]>, m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = bias.map_or(0.0, |b| b[j]);
+            for kk in 0..k {
+                s += a[i * k + kk] * w[kk * n + j];
+            }
+            c[i * n + j] = s;
+        }
+    }
+    c
+}
+
+fn layer_norm(x: &[f32], g: &[f32], b: &[f32], d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    for (row, orow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for i in 0..d {
+            orow[i] = (row[i] - mean) * inv * g[i] + b[i];
+        }
+    }
+    out
+}
+
+fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (0.797_884_6 * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+/// One unfused scalar forward over `ids` (flattened `(B, N, input_len)`).
+pub fn forward(raw: &RawWeights, meta: &ArtifactMeta, ids: &[i32]) -> Result<Vec<f32>> {
+    let b = meta.batch;
+    let n = meta.n_mux;
+    let li = meta.input_len;
+    let d = meta.d_model;
+    ensure!(ids.len() == b * n * li, "reference: ids length {}", ids.len());
+    ensure!(meta.demux == "index_embed", "reference: demux {}", meta.demux);
+    let (tok_shape, tok) = tensor(raw, "tok_emb")?;
+    let vocab = tok_shape[0];
+    let (_, pos) = tensor(raw, "pos_emb")?;
+    let (_, vecs) = tensor(raw, "mux/vecs")?;
+    let (ff1_shape, _) = tensor(raw, "layers/0/ff1/w")?;
+    let d_ff = ff1_shape[1];
+    let (w1h_shape, _) = tensor(raw, "demux/w1h")?;
+    let fd = w1h_shape[1];
+
+    // ---- embeddings, per-slot transforms, mux mean (all materialized) ---
+    let mut emb = vec![0.0f32; b * n * li * d];
+    for bb in 0..b {
+        for slot in 0..n {
+            for l in 0..li {
+                let id = ids[(bb * n + slot) * li + l];
+                ensure!(id >= 0 && (id as usize) < vocab, "reference: token id {id} oob");
+                let base = ((bb * n + slot) * li + l) * d;
+                for dd in 0..d {
+                    emb[base + dd] = tok[id as usize * d + dd] + pos[l * d + dd];
+                }
+            }
+        }
+    }
+    // phi^i(x^i), materialized per slot before summing — the unfused path
+    let mut slotted = vec![0.0f32; b * n * li * d];
+    for bb in 0..b {
+        for slot in 0..n {
+            for l in 0..li {
+                let base = ((bb * n + slot) * li + l) * d;
+                for dd in 0..d {
+                    slotted[base + dd] = emb[base + dd] * vecs[slot * d + dd];
+                }
+            }
+        }
+    }
+    let rows = b * li;
+    let mut x = vec![0.0f32; rows * d];
+    for bb in 0..b {
+        for l in 0..li {
+            for dd in 0..d {
+                let mut acc = 0.0f32;
+                for slot in 0..n {
+                    acc += slotted[((bb * n + slot) * li + l) * d + dd];
+                }
+                x[(bb * li + l) * d + dd] = acc / n as f32;
+            }
+        }
+    }
+
+    // ---- encoder ---------------------------------------------------------
+    let heads = meta.n_heads;
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    for layer in 0..meta.n_layers {
+        let p = |stem: &str| format!("layers/{layer}/{stem}");
+        let ln1 = layer_norm(
+            &x,
+            tensor(raw, &p("ln1/g"))?.1,
+            tensor(raw, &p("ln1/b"))?.1,
+            d,
+        );
+        let q = matmul(
+            &ln1,
+            tensor(raw, &p("wq/w"))?.1,
+            Some(tensor(raw, &p("wq/b"))?.1),
+            rows,
+            d,
+            d,
+        );
+        let k = matmul(
+            &ln1,
+            tensor(raw, &p("wk/w"))?.1,
+            Some(tensor(raw, &p("wk/b"))?.1),
+            rows,
+            d,
+            d,
+        );
+        let v = matmul(
+            &ln1,
+            tensor(raw, &p("wv/w"))?.1,
+            Some(tensor(raw, &p("wv/b"))?.1),
+            rows,
+            d,
+            d,
+        );
+        let mut ctx = vec![0.0f32; rows * d];
+        for bb in 0..b {
+            for hh in 0..heads {
+                for i in 0..li {
+                    let mut scores = vec![0.0f32; li];
+                    for j in 0..li {
+                        let mut s = 0.0f32;
+                        for t in 0..dh {
+                            s += q[(bb * li + i) * d + hh * dh + t]
+                                * k[(bb * li + j) * d + hh * dh + t];
+                        }
+                        scores[j] = s * scale;
+                    }
+                    let max = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let mut sum = 0.0f32;
+                    for sv in scores.iter_mut() {
+                        *sv = (*sv - max).exp();
+                        sum += *sv;
+                    }
+                    for sv in scores.iter_mut() {
+                        *sv /= sum;
+                    }
+                    for j in 0..li {
+                        for t in 0..dh {
+                            ctx[(bb * li + i) * d + hh * dh + t] +=
+                                scores[j] * v[(bb * li + j) * d + hh * dh + t];
+                        }
+                    }
+                }
+            }
+        }
+        let attn = matmul(
+            &ctx,
+            tensor(raw, &p("wo/w"))?.1,
+            Some(tensor(raw, &p("wo/b"))?.1),
+            rows,
+            d,
+            d,
+        );
+        for i in 0..x.len() {
+            x[i] += attn[i];
+        }
+        let ln2 = layer_norm(
+            &x,
+            tensor(raw, &p("ln2/g"))?.1,
+            tensor(raw, &p("ln2/b"))?.1,
+            d,
+        );
+        let mut h = matmul(
+            &ln2,
+            tensor(raw, &p("ff1/w"))?.1,
+            Some(tensor(raw, &p("ff1/b"))?.1),
+            rows,
+            d,
+            d_ff,
+        );
+        for v in h.iter_mut() {
+            *v = gelu(*v);
+        }
+        let ff = matmul(
+            &h,
+            tensor(raw, &p("ff2/w"))?.1,
+            Some(tensor(raw, &p("ff2/b"))?.1),
+            rows,
+            d_ff,
+            d,
+        );
+        for i in 0..x.len() {
+            x[i] += ff[i];
+        }
+    }
+    let hfinal = layer_norm(&x, tensor(raw, "ln_f/g")?.1, tensor(raw, "ln_f/b")?.1, d);
+
+    // ---- index-embedding demux + head ------------------------------------
+    let prefix = li - meta.seq_len;
+    ensure!(prefix == n, "reference: prefix layout {prefix} != n_mux {n}");
+    let lp = match meta.task.as_str() {
+        "cls" => 1,
+        "token" => meta.seq_len,
+        other => bail!("reference: unsupported task '{other}'"),
+    };
+    let w1h = tensor(raw, "demux/w1h")?.1;
+    let w1p = tensor(raw, "demux/w1p")?.1;
+    let b1 = tensor(raw, "demux/b1")?.1;
+    let w2 = tensor(raw, "demux/w2")?.1;
+    let b2 = tensor(raw, "demux/b2")?.1;
+    let head = match meta.task.as_str() {
+        "token" => "head_token",
+        _ => "head_cls",
+    };
+    let hw = tensor(raw, &format!("{head}/w"))?.1;
+    let hb = tensor(raw, &format!("{head}/b"))?.1;
+    let n_cls = meta.n_classes;
+    let mut out = vec![0.0f32; b * n * lp * n_cls];
+    for bb in 0..b {
+        // prefix hidden states (index embeddings) and content positions
+        let mut pproj = vec![0.0f32; n * fd];
+        for slot in 0..n {
+            let row = &hfinal[(bb * li + slot) * d..(bb * li + slot + 1) * d];
+            let dst = matmul(row, w1p, None, 1, d, fd);
+            pproj[slot * fd..(slot + 1) * fd].copy_from_slice(&dst);
+        }
+        for l in 0..lp {
+            let row = &hfinal[(bb * li + prefix + l) * d..(bb * li + prefix + l + 1) * d];
+            let hproj = matmul(row, w1h, None, 1, d, fd);
+            for slot in 0..n {
+                let mut z = vec![0.0f32; fd];
+                for t in 0..fd {
+                    z[t] = gelu(hproj[t] + pproj[slot * fd + t] + b1[t]);
+                }
+                let dem = matmul(&z, w2, Some(b2), 1, fd, d);
+                let logits = matmul(&dem, hw, Some(hb), 1, d, n_cls);
+                let base = ((bb * n + slot) * lp + l) * n_cls;
+                out[base..base + n_cls].copy_from_slice(&logits);
+            }
+        }
+    }
+    Ok(out)
+}

@@ -39,7 +39,7 @@ impl WeightsFile {
         Self::parse(bytes)
     }
 
-    pub fn parse(bytes: Vec<u8>) -> Result<Self> {
+    pub fn parse(mut bytes: Vec<u8>) -> Result<Self> {
         if bytes.len() < MAGIC.len() + 4 || &bytes[..MAGIC.len()] != MAGIC {
             bail!("not a DMUXW1 weights file");
         }
@@ -93,15 +93,31 @@ impl WeightsFile {
             }
             tensors.push(meta);
         }
-        let data = bytes[data_start..].to_vec();
+        // Split the blob in place: drain the magic+header prefix so the
+        // incoming allocation *becomes* the tensor data. The previous
+        // `bytes[data_start..].to_vec()` held the full file plus a copy of
+        // the data section alive at once — 2x peak RSS on load.
+        bytes.drain(..data_start);
+        let data = bytes;
         let total: usize = tensors.iter().map(|t| t.nbytes).sum();
         if data.len() != total {
             bail!("weights data length {} != header total {}", data.len(), total);
         }
+        for t in &tensors {
+            if t.offset % 4 != 0 || t.offset + t.nbytes > data.len() {
+                bail!(
+                    "tensor {} range {}..{} invalid for data length {}",
+                    t.name,
+                    t.offset,
+                    t.offset + t.nbytes,
+                    data.len()
+                );
+            }
+        }
         Ok(WeightsFile { tensors, data })
     }
 
-    /// f32 view of one tensor's data.
+    /// Owned f32 copy of one tensor's data.
     pub fn tensor_f32(&self, idx: usize) -> Result<Vec<f32>> {
         let t = self.tensors.get(idx).ok_or_else(|| anyhow!("tensor index {idx} oob"))?;
         let raw = &self.data[t.offset..t.offset + t.nbytes];
@@ -109,6 +125,27 @@ impl WeightsFile {
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect())
+    }
+
+    /// Zero-copy f32 view of one tensor's data — the native backend
+    /// borrows its gather tables (embeddings) straight out of the blob
+    /// instead of cloning them.
+    ///
+    /// Assumes a little-endian host (the on-disk format is LE; every
+    /// supported target is). Errs on the pathological case of a
+    /// 4-unaligned allocation, where callers must fall back to
+    /// [`tensor_f32`](Self::tensor_f32).
+    pub fn tensor_f32_view(&self, idx: usize) -> Result<&[f32]> {
+        let t = self.tensors.get(idx).ok_or_else(|| anyhow!("tensor index {idx} oob"))?;
+        let raw = &self.data[t.offset..t.offset + t.nbytes];
+        // SAFETY: every f32 bit pattern is valid; align_to hands back
+        // non-empty prefix/suffix only when the allocation is unaligned,
+        // which we reject below instead of mis-reading.
+        let (pre, mid, post) = unsafe { raw.align_to::<f32>() };
+        if !pre.is_empty() || !post.is_empty() {
+            bail!("weights allocation is not 4-byte aligned; use tensor_f32");
+        }
+        Ok(mid)
     }
 
     pub fn total_bytes(&self) -> usize {
@@ -150,6 +187,29 @@ mod tests {
     }
 
     #[test]
+    fn zero_copy_view_matches_copying_reader() {
+        let w = WeightsFile::parse(sample_file()).unwrap();
+        for i in 0..w.tensors.len() {
+            assert_eq!(w.tensor_f32_view(i).unwrap(), w.tensor_f32(i).unwrap().as_slice());
+        }
+        assert!(w.tensor_f32_view(9).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_tensor_offsets() {
+        let header = br#"{"tensors": [
+            {"name": "a", "shape": [2, 2], "dtype": "f32", "offset": 8, "nbytes": 16}
+        ]}"#;
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(header);
+        bytes.extend_from_slice(&[0u8; 16]);
+        // total nbytes matches data length, but offset 8 + 16 runs past it
+        assert!(WeightsFile::parse(bytes).is_err());
+    }
+
+    #[test]
     fn rejects_bad_magic() {
         let mut b = sample_file();
         b[0] = b'X';
@@ -165,9 +225,6 @@ mod tests {
 
     #[test]
     fn rejects_shape_mismatch() {
-        let b = sample_file();
-        let s = String::from_utf8_lossy(&b).replace("[2, 2]", "[2, 3]");
-        // header length changed -> rebuild properly
         let header = br#"{"tensors": [
             {"name": "a", "shape": [2, 3], "dtype": "f32", "offset": 0, "nbytes": 16}
         ]}"#;
@@ -177,6 +234,5 @@ mod tests {
         bytes.extend_from_slice(header);
         bytes.extend_from_slice(&[0u8; 16]);
         assert!(WeightsFile::parse(bytes).is_err());
-        let _ = s;
     }
 }

@@ -86,6 +86,18 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Value of `name` validated against a closed set — for mode flags
+    /// like `--backend pjrt|native`, where a typo must not silently fall
+    /// back to the default.
+    pub fn choice(&self, name: &str, default: &str, allowed: &[&str]) -> Result<String, String> {
+        let v = self.str(name, default);
+        if allowed.contains(&v.as_str()) {
+            Ok(v)
+        } else {
+            Err(format!("--{name}: expected one of {}, got '{v}'", allowed.join("|")))
+        }
+    }
+
     /// Comma-separated list of usize, e.g. `--n-values 1,2,5,10`.
     pub fn usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
         match self.flags.get(name) {
@@ -144,5 +156,15 @@ mod tests {
     fn bad_numbers_fall_back() {
         let a = Args::parse(&argv(&["--n", "abc"]));
         assert_eq!(a.usize("n", 9), 9);
+    }
+
+    #[test]
+    fn choice_validates_closed_set() {
+        let a = Args::parse(&argv(&["--backend", "native"]));
+        assert_eq!(a.choice("backend", "pjrt", &["pjrt", "native"]).unwrap(), "native");
+        assert_eq!(a.choice("missing", "pjrt", &["pjrt", "native"]).unwrap(), "pjrt");
+        let bad = Args::parse(&argv(&["--backend", "tpu"]));
+        let err = bad.choice("backend", "pjrt", &["pjrt", "native"]).unwrap_err();
+        assert!(err.contains("pjrt|native"), "{err}");
     }
 }

@@ -360,6 +360,11 @@ impl ThreadPool {
         self.chan.len()
     }
 
+    /// Worker threads in the pool (fan-out width for fork-join callers).
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
     /// Close the queue and wait for all workers to finish outstanding jobs.
     pub fn join(mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
