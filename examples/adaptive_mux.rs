@@ -1,12 +1,14 @@
 //! Adaptive-N routing demo: the serving-side extension the paper's
-//! discussion motivates. A `MuxRouter` owns coordinators at several N and
-//! routes each arrival by observed rate — light traffic goes to small N
-//! (low latency, little padding waste), bursts go to large N (throughput).
+//! discussion motivates. A `MuxRouter` owns one shared admission queue
+//! and a work-stealing lane per N — light traffic is pulled by the
+//! small-N lane (low latency, little padding waste), bursts engage the
+//! large-N lanes (throughput), decided at *pull* time by the adaptive
+//! gate rather than per arrival.
 //!
 //! The demo drives three phases (idle → burst → idle) and prints which
-//! lane served each phase plus the latency cost. The router implements
-//! the same `Submit` trait as a single coordinator, so it is also
-//! network-servable: `datamux --cmd serve --adaptive true`.
+//! lanes pulled each phase's traffic plus the latency cost. The router
+//! implements the same `Submit` trait as a single coordinator, so it is
+//! also network-servable: `datamux --cmd serve --adaptive true`.
 //!
 //! ```sh
 //! cargo run --release --example adaptive_mux
@@ -15,7 +17,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use datamux::coordinator::{EngineBuilder, InferenceRequest, MuxRouter};
+use datamux::coordinator::{EngineBuilder, InferenceRequest, LaneStatus, MuxRouter, Submit};
 use datamux::runtime::{default_artifacts_dir, ArtifactManifest, ModelRuntime};
 use datamux::util::bench::Table;
 use datamux::util::cli::Args;
@@ -78,25 +80,30 @@ fn main() -> anyhow::Result<()> {
     }
     let builder = EngineBuilder::new().max_wait_ms(3).exec_time_us(20_000.0);
     let router: Arc<MuxRouter> = Arc::new(builder.build_router(models)?);
-    let seq_len = router.lanes[0].seq_len;
-    let tok = router.lanes[0].tokenizer.clone();
+    let seq_len = router.seq_len();
+    let tok = router.tokenizer().clone();
 
     let mut w = RandomWorkload::new(3, 200, seq_len - 4);
     let rows: Vec<Vec<i32>> = (0..256).map(|_| w.framed_row(&tok, seq_len)).collect();
 
-    let mut table = Table::new("adaptive_mux: lane selection by offered load",
-                               &["phase", "rate r/s", "lane N (mode)", "mean latency"]);
+    // lanes are identified by pull-time completion deltas: with
+    // work-stealing dispatch the serving lane is decided when a lane
+    // pulls from the shared queue, not when the request is submitted
+    let per_lane_completed = |status: &[LaneStatus]| -> std::collections::BTreeMap<usize, u64> {
+        status.iter().map(|l| (l.n_mux, l.completed)).collect()
+    };
+
+    let mut table = Table::new("adaptive_mux: which lanes pull at each offered load",
+                               &["phase", "rate r/s", "completed per lane N", "mean latency"]);
     let per_phase = args.usize("per-phase", 120);
     for (phase, gap_us) in [("idle", 20_000u64), ("burst", 200u64), ("cooldown", 20_000u64)] {
         let mut rng = Rng::new(7);
-        let mut lane_hits: std::collections::BTreeMap<usize, usize> = Default::default();
+        let before = per_lane_completed(&router.lane_status());
         let mut handles = Vec::new();
         let t0 = std::time::Instant::now();
         for i in 0..per_phase {
             let req = InferenceRequest::classify_framed(rows[i % rows.len()].clone());
-            let (n, h) = router.submit_routed(req)?;
-            *lane_hits.entry(n).or_default() += 1;
-            handles.push(h);
+            handles.push(router.submit(req)?);
             let jitter = (rng.f64() * gap_us as f64) as u64;
             std::thread::sleep(Duration::from_micros(gap_us / 2 + jitter / 2));
         }
@@ -105,15 +112,19 @@ fn main() -> anyhow::Result<()> {
             total_lat += h.wait()?.latency;
         }
         let rate = per_phase as f64 / t0.elapsed().as_secs_f64();
-        let mode = lane_hits.iter().max_by_key(|(_, c)| **c).map(|(n, _)| *n).unwrap_or(0);
+        let after = per_lane_completed(&router.lane_status());
+        let served: Vec<String> = after
+            .iter()
+            .map(|(n, c)| format!("N={n}:{}", c - before.get(n).copied().unwrap_or(0)))
+            .collect();
         table.row(&[
             phase.to_string(),
             format!("{rate:.0}"),
-            format!("{mode} {lane_hits:?}"),
+            served.join(" "),
             format!("{:?}", total_lat / per_phase as u32),
         ]);
     }
     table.print();
-    println!("burst traffic is routed to deeper-mux lanes; idle traffic stays at small N.");
+    println!("burst traffic is pulled by deeper-mux lanes; idle traffic stays at small N.");
     Ok(())
 }

@@ -1,0 +1,400 @@
+//! Router scaling bench: offered-load sweep over adaptive-N lane sets
+//! of **native** backends (`runtime/native`: the real T-MUX forward on
+//! random weights — zero artifacts, zero PJRT, runs anywhere, CI
+//! included), then a mid-run lane kill.
+//!
+//! Per lane set (small-N-only vs. small+large), lane capacity is
+//! *measured* (a direct `run_ids` probe per backend) and an open-loop
+//! Poisson driver offers fractions of the aggregate. Two gates make the
+//! bench (and the CI job) **exit non-zero**:
+//!
+//! 1. **Zero rejects with spare capacity** — any sweep point offered
+//!    below aggregate capacity must finish with zero `QueueFull`
+//!    rejects: the shared admission queue + pull-gate engage the
+//!    large-N lane as backlog grows, so capacity anywhere means no
+//!    rejects. (This was the herding bug: the per-arrival router
+//!    rejected on one lane's full queue while a sibling idled.)
+//! 2. **Failover loses nothing** — mid-run, the large native lane's
+//!    backend starts failing (a delegating fail-after-k wrapper;
+//!    `NativeBackend` itself has no failure knob). The lane must die
+//!    and hand its unexecuted waves back; the survivor completes
+//!    everything else: zero `Shutdown` answers, every request
+//!    answered, at most one failed batch.
+//!
+//! Results are printed as tables and written to `BENCH_router.json` at
+//! the repo root (uploaded by CI next to `BENCH_engine.json` /
+//! `BENCH_native.json`).
+//!
+//!   cargo bench --bench router_scaling            # full
+//!   cargo bench --bench router_scaling -- --quick # CI-sized
+
+use std::hint::black_box;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use datamux::coordinator::EngineBuilder;
+use datamux::runtime::{ArtifactMeta, InferenceBackend, NativeBackend};
+use datamux::util::bench::{bench, Table};
+use datamux::util::json::{num, obj, s, Json};
+use datamux::workload::{open_loop, RandomWorkload};
+use datamux::{EngineError, Submit};
+
+const SEQ_LEN: usize = 24;
+const BATCH: usize = 1;
+const D_MODEL: usize = 128;
+const N_LAYERS: usize = 2;
+const N_HEADS: usize = 4;
+const N_CLASSES: usize = 3;
+const SMALL_N: usize = 2;
+const LARGE_N: usize = 8;
+
+fn native_lane(n_mux: usize, seed: u64) -> anyhow::Result<Arc<dyn InferenceBackend>> {
+    let b = NativeBackend::random(
+        "cls",
+        n_mux,
+        BATCH,
+        SEQ_LEN,
+        D_MODEL,
+        N_LAYERS,
+        N_HEADS,
+        N_CLASSES,
+        seed,
+    )?;
+    Ok(Arc::new(b))
+}
+
+/// Measured sustained-lane estimate: requests per second one lane can
+/// serve with full waves (`batch * n_mux` per execution).
+fn probe(backend: &Arc<dyn InferenceBackend>) -> (f64, f64) {
+    let ids = vec![1i32; backend.meta().ids_len()];
+    let t = bench("probe", 2, 5, || {
+        black_box(backend.run_ids(&ids).unwrap());
+    });
+    let exec_us = t.mean.as_secs_f64() * 1e6;
+    let capacity = (backend.meta().batch * backend.meta().n_mux) as f64 / t.mean.as_secs_f64();
+    (capacity, exec_us)
+}
+
+struct SweepPoint {
+    fraction: f64,
+    target_rps: f64,
+    offered_rps: f64,
+    submitted: usize,
+    completed: usize,
+    rejected: usize,
+    p99_us: f64,
+    lanes: Vec<Json>,
+}
+
+fn sweep_lane_set(
+    backends: &[Arc<dyn InferenceBackend>],
+    capacity_rps: f64,
+    exec_us: f64,
+    fractions: &[f64],
+    duration: Duration,
+    table: &mut Table,
+) -> anyhow::Result<Vec<SweepPoint>> {
+    let ns: Vec<usize> = backends.iter().map(|b| b.meta().n_mux).collect();
+    let mut points = Vec::new();
+    for (i, &fraction) in fractions.iter().enumerate() {
+        let target = capacity_rps * fraction;
+        let router = Arc::new(
+            EngineBuilder::new()
+                .max_wait_ms(3)
+                .queue_cap(1024)
+                .exec_time_us(exec_us)
+                .build_router_backends(backends.to_vec())?,
+        );
+        let mut w = RandomWorkload::new(21 + i as u64, 200, SEQ_LEN - 4);
+        let rows: Vec<Vec<i32>> =
+            (0..128).map(|_| w.framed_row(router.tokenizer(), SEQ_LEN)).collect();
+        let report = open_loop(&router, &Arc::new(rows), target, duration, 5 + i as u64);
+        let offered = report.submitted as f64 / report.wall.as_secs_f64();
+        let lat = router.latency();
+        let lanes: Vec<Json> = router
+            .lane_status()
+            .iter()
+            .map(|l| {
+                obj(vec![
+                    ("n_mux", num(l.n_mux as f64)),
+                    ("alive", Json::Bool(l.alive)),
+                    ("pulls", num(l.pulls as f64)),
+                    ("completed", num(l.completed as f64)),
+                ])
+            })
+            .collect();
+        table.row(&[
+            format!("{ns:?}"),
+            format!("{target:.0} ({fraction:.2}x)"),
+            report.submitted.to_string(),
+            report.completed.to_string(),
+            report.rejected.to_string(),
+            format!("{:.0}", lat.p99_ns as f64 / 1e3),
+        ]);
+        points.push(SweepPoint {
+            fraction,
+            target_rps: target,
+            offered_rps: offered,
+            submitted: report.submitted,
+            completed: report.completed,
+            rejected: report.rejected,
+            p99_us: lat.p99_ns as f64 / 1e3,
+            lanes,
+        });
+    }
+    Ok(points)
+}
+
+/// Delegating backend that fails every `run_ids` after the first `k`
+/// calls — failure injection for the mid-run lane kill (the native
+/// backend itself has, deliberately, no failure knob).
+struct FailAfter {
+    inner: Arc<dyn InferenceBackend>,
+    k: u64,
+    calls: AtomicU64,
+}
+
+impl InferenceBackend for FailAfter {
+    fn meta(&self) -> &ArtifactMeta {
+        self.inner.meta()
+    }
+
+    fn run_ids(&self, ids: &[i32]) -> anyhow::Result<Vec<f32>> {
+        if self.calls.fetch_add(1, Ordering::Relaxed) >= self.k {
+            anyhow::bail!("injected lane failure (mid-run kill)");
+        }
+        self.inner.run_ids(ids)
+    }
+}
+
+struct FailoverReport {
+    requests: usize,
+    completed: usize,
+    worker_failed: usize,
+    shutdown: usize,
+    requeued: u64,
+    dead_lane_is_dead: bool,
+    survivor_alive: bool,
+}
+
+/// Kill the large native lane after 3 executions; the surviving native
+/// lane must finish the remaining work with zero `Shutdown` answers and
+/// no stranded waiters.
+fn failover_run(
+    small: &Arc<dyn InferenceBackend>,
+    large: &Arc<dyn InferenceBackend>,
+    exec_us: f64,
+    requests: usize,
+) -> anyhow::Result<FailoverReport> {
+    let failing: Arc<dyn InferenceBackend> =
+        Arc::new(FailAfter { inner: large.clone(), k: 3, calls: AtomicU64::new(0) });
+    let router = Arc::new(
+        EngineBuilder::new()
+            .max_wait_ms(3)
+            .queue_cap(requests + 8)
+            .exec_time_us(exec_us)
+            .build_router_backends(vec![small.clone(), failing])?,
+    );
+    let mut w = RandomWorkload::new(77, 200, SEQ_LEN - 4);
+    let rows: Vec<Vec<i32>> =
+        (0..128).map(|_| w.framed_row(router.tokenizer(), SEQ_LEN)).collect();
+    let mut handles = Vec::with_capacity(requests);
+    for i in 0..requests {
+        handles.push(router.submit_framed(rows[i % rows.len()].clone())?);
+    }
+    let (mut completed, mut worker_failed, mut shutdown) = (0usize, 0usize, 0usize);
+    for h in &handles {
+        match h.wait_timeout(Duration::from_secs(300)).expect("stranded waiter") {
+            Ok(_) => completed += 1,
+            Err(EngineError::WorkerFailed(_)) => worker_failed += 1,
+            Err(EngineError::Shutdown) => shutdown += 1,
+            Err(EngineError::DeadlineExceeded) => unreachable!("no deadlines set"),
+        }
+    }
+    // the dead flag lands just after the failed batch is answered; give
+    // the worker thread a moment before reading lane health
+    let t0 = std::time::Instant::now();
+    while router.live_lanes() > 1 && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let status = router.lane_status();
+    let dead = status.iter().find(|l| l.n_mux == LARGE_N).expect("large lane");
+    let survivor = status.iter().find(|l| l.n_mux == SMALL_N).expect("small lane");
+    Ok(FailoverReport {
+        requests,
+        completed,
+        worker_failed,
+        shutdown,
+        requeued: dead.requeued,
+        dead_lane_is_dead: !dead.alive,
+        survivor_alive: survivor.alive,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (duration, fractions, failover_requests): (Duration, &[f64], usize) = if quick {
+        (Duration::from_millis(500), &[0.3, 1.5], 120)
+    } else {
+        (Duration::from_millis(1200), &[0.2, 0.35, 0.5, 1.5], 400)
+    };
+
+    // two native lanes (small N, large N) — the paper's adaptive-N
+    // serving shape, executed as real T-MUX math on random weights
+    let small = native_lane(SMALL_N, 11)?;
+    let large = native_lane(LARGE_N, 12)?;
+    let (cap_small, exec_small_us) = probe(&small);
+    let (cap_large, exec_large_us) = probe(&large);
+    println!(
+        "native lanes: N={SMALL_N} ≈ {cap_small:.0} r/s ({exec_small_us:.0}us/exec), \
+         N={LARGE_N} ≈ {cap_large:.0} r/s ({exec_large_us:.0}us/exec)"
+    );
+
+    // ----- offered-load sweep per lane set ------------------------------
+    let mut table = Table::new(
+        "router scaling (native lanes): offered load vs completed/rejected",
+        &["lanes", "target r/s", "submitted", "completed", "rejected", "p99 us"],
+    );
+    let sets: [(Vec<Arc<dyn InferenceBackend>>, f64); 2] = [
+        (vec![small.clone()], cap_small),
+        (vec![small.clone(), large.clone()], cap_small + cap_large),
+    ];
+    let mut sets_json = Vec::new();
+    let mut spare_capacity_rejects = 0usize;
+    for (backends, capacity) in &sets {
+        let points =
+            sweep_lane_set(backends, *capacity, exec_large_us, fractions, duration, &mut table)?;
+        spare_capacity_rejects += points
+            .iter()
+            .filter(|p| p.fraction < 1.0)
+            .map(|p| p.rejected)
+            .sum::<usize>();
+        let ns: Vec<Json> = backends.iter().map(|b| num(b.meta().n_mux as f64)).collect();
+        sets_json.push(obj(vec![
+            ("lanes", Json::Arr(ns)),
+            ("capacity_rps", num(*capacity)),
+            (
+                "sweep",
+                Json::Arr(
+                    points
+                        .into_iter()
+                        .map(|p| {
+                            obj(vec![
+                                ("fraction", num(p.fraction)),
+                                ("target_rps", num(p.target_rps)),
+                                ("offered_rps", num(p.offered_rps)),
+                                ("submitted", num(p.submitted as f64)),
+                                ("completed", num(p.completed as f64)),
+                                ("rejected", num(p.rejected as f64)),
+                                ("p99_us", num(p.p99_us)),
+                                ("lanes", Json::Arr(p.lanes)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+    table.print();
+
+    // ----- failover: kill the large lane mid-run ------------------------
+    let f = failover_run(&small, &large, exec_large_us, failover_requests)?;
+    let mut t2 =
+        Table::new("router failover: large native lane dies mid-run", &["metric", "value"]);
+    for (k, v) in [
+        ("requests", f.requests.to_string()),
+        ("completed", f.completed.to_string()),
+        ("worker_failed (one batch max)", f.worker_failed.to_string()),
+        ("shutdown answers (must be 0)", f.shutdown.to_string()),
+        ("requeued to survivor", f.requeued.to_string()),
+        (
+            "large lane dead / small lane alive",
+            format!("{} / {}", f.dead_lane_is_dead, f.survivor_alive),
+        ),
+    ] {
+        t2.row(&[k.to_string(), v]);
+    }
+    t2.print();
+
+    // ----- BENCH_router.json at the repo root ---------------------------
+    let zero_rejects_gate = spare_capacity_rejects == 0;
+    let failover_gate = f.shutdown == 0
+        && f.completed + f.worker_failed == f.requests
+        && f.worker_failed <= LARGE_N * BATCH
+        && f.dead_lane_is_dead
+        && f.survivor_alive;
+    let result = obj(vec![
+        ("schema", s("router_scaling/v1")),
+        ("quick", Json::Bool(quick)),
+        (
+            "config",
+            obj(vec![
+                ("seq_len", num(SEQ_LEN as f64)),
+                ("batch", num(BATCH as f64)),
+                ("d_model", num(D_MODEL as f64)),
+                ("n_layers", num(N_LAYERS as f64)),
+                ("small_n", num(SMALL_N as f64)),
+                ("large_n", num(LARGE_N as f64)),
+                ("probe_capacity_small_rps", num(cap_small)),
+                ("probe_capacity_large_rps", num(cap_large)),
+                ("duration_ms", num(duration.as_millis() as f64)),
+            ]),
+        ),
+        ("lane_sets", Json::Arr(sets_json)),
+        (
+            "failover",
+            obj(vec![
+                ("requests", num(f.requests as f64)),
+                ("completed", num(f.completed as f64)),
+                ("worker_failed", num(f.worker_failed as f64)),
+                ("shutdown", num(f.shutdown as f64)),
+                ("requeued", num(f.requeued as f64)),
+                ("dead_lane_is_dead", Json::Bool(f.dead_lane_is_dead)),
+                ("survivor_alive", Json::Bool(f.survivor_alive)),
+            ]),
+        ),
+        (
+            "gates",
+            obj(vec![
+                ("zero_rejects_with_spare_capacity", Json::Bool(zero_rejects_gate)),
+                ("failover_no_shutdown_no_loss", Json::Bool(failover_gate)),
+            ]),
+        ),
+    ]);
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate sits one level below the repo root");
+    let path = root.join("BENCH_router.json");
+    std::fs::write(&path, result.to_pretty())?;
+
+    // self-check: the file must exist, parse, and carry results
+    let written = std::fs::read_to_string(&path)?;
+    let parsed = Json::parse(&written).map_err(|e| anyhow::anyhow!("reparse: {e}"))?;
+    anyhow::ensure!(
+        parsed.get("lane_sets").and_then(Json::as_arr).is_some_and(|a| a.len() == 2)
+            && parsed.get("failover").and_then(|x| x.get("completed")).is_some(),
+        "BENCH_router.json is missing results"
+    );
+    println!("\nwrote {}", path.display());
+
+    // the acceptance gates: fail the bench (and the CI job) loudly
+    anyhow::ensure!(
+        zero_rejects_gate,
+        "router rejected {spare_capacity_rejects} request(s) at sub-capacity offered load — \
+         QueueFull with spare lane capacity is the herding bug this redesign removes"
+    );
+    anyhow::ensure!(
+        failover_gate,
+        "failover gate failed: completed={} worker_failed={} shutdown={} of {} \
+         (dead_lane_is_dead={} survivor_alive={})",
+        f.completed,
+        f.worker_failed,
+        f.shutdown,
+        f.requests,
+        f.dead_lane_is_dead,
+        f.survivor_alive
+    );
+    println!("gates OK: zero sub-capacity rejects; lane death lost nothing");
+    Ok(())
+}

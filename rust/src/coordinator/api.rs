@@ -151,6 +151,23 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
+/// Health and progress of one serving lane, as reported by
+/// [`Submit::lane_status`]. A router reports one entry per lane; a
+/// standalone coordinator reports a single entry for itself.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaneStatus {
+    pub n_mux: usize,
+    /// false once the lane's worker failed — a dead lane never takes
+    /// work again, and an engine is only `Shutdown` when no lane is alive
+    pub alive: bool,
+    /// exec batches this lane formed (waves pulled from its queue source)
+    pub pulls: u64,
+    /// requests this lane handed back to the shared queue when it died
+    pub requeued: u64,
+    /// requests this lane answered with a response
+    pub completed: u64,
+}
+
 /// A tagged completion: the request tag plus its outcome. Delivered to a
 /// [`CompletionQueue`] by [`Submit::submit_tagged`].
 pub type CompletionItem = (u64, Result<Response, EngineError>);
@@ -205,6 +222,12 @@ pub trait Submit: Send + Sync {
     /// component of latency, separate from execution time (merged over
     /// lanes for a router).
     fn queue_wait(&self) -> LatencySummary;
+
+    /// Per-lane health and progress (one entry per lane for a router, a
+    /// single self-entry for a coordinator). Default: no lane detail.
+    fn lane_status(&self) -> Vec<LaneStatus> {
+        Vec::new()
+    }
 
     /// Convenience: submit one framed row for whatever task the model
     /// serves. The common path for drivers and benches.

@@ -15,12 +15,13 @@
 //!   * no request waits longer than `max_wait` before its batch ships
 //!     (modulo executor time)
 
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
-use super::request::Request;
+use super::dispatch::LaneControl;
+use super::request::{EngineError, Request};
 use crate::util::metrics::Counters;
-use crate::util::threadpool::Channel;
+use crate::util::threadpool::{Channel, TrySendError};
 
 /// One model execution's worth of requests (up to batch * n_mux).
 pub struct ExecBatch {
@@ -78,6 +79,7 @@ pub fn run_batcher(
         seq += 1;
         if let Some(c) = counters {
             c.intake_waves.fetch_add(waves, Ordering::Relaxed);
+            c.batches_formed.fetch_add(1, Ordering::Relaxed);
         }
         let batch = ExecBatch { seq, entries, formed_at: Instant::now() };
         if output.send(batch).is_err() {
@@ -86,6 +88,142 @@ pub fn run_batcher(
     }
     output.close();
     seq
+}
+
+/// Pull-gated batcher over a **shared** admission queue (the router's
+/// work-stealing dispatch). Unlike [`run_batcher`], the input channel is
+/// not owned by this lane: every lane of a router pulls waves from the
+/// same queue, each sized to its own `batch * n_mux` capacity, and the
+/// `gate` closure (the router's [`AdaptiveN`](super::AdaptiveN)
+/// pull-gate) decides per wakeup whether the current backlog/rate
+/// justifies this lane's N. A closed shared queue bypasses the gate
+/// (drain mode), so the admitted backlog always completes on shutdown.
+///
+/// Lane health: when `lane.dead` is set (this lane's worker failed) the
+/// batcher stops pulling immediately. A wave it already holds when the
+/// exec channel closes under it is handed back to the shared queue via
+/// [`requeue_entries`] — re-queued for a sibling lane, or failed loudly;
+/// never silently dropped. Returns the number of batches formed and
+/// closes `output` on exit.
+///
+/// `poll` is the *initial* tick: while a lane finds nothing to do
+/// (gated off, or gate open but the queue stays empty), consecutive
+/// idle ticks back off exponentially up to `20 * poll`, so an idle
+/// router costs almost no CPU; the backoff resets the moment a wave is
+/// pulled. A lane that passes the gate parks *inside* `recv_up_to` on
+/// the queue's condvar, so arrival latency is unaffected by backoff —
+/// only how fast a gated-off lane notices it is newly justified (and
+/// how fast shutdown/death is noticed) is bounded by the backed-off
+/// tick.
+pub fn run_pull_batcher(
+    cfg: &BatcherConfig,
+    shared: &Channel<Request>,
+    output: &Channel<ExecBatch>,
+    lane: &LaneControl,
+    gate: &dyn Fn() -> bool,
+    poll: Duration,
+    counters: Option<&Counters>,
+) -> u64 {
+    let capacity = cfg.capacity();
+    let max_idle = poll * 20;
+    let mut idle = poll;
+    let mut seq = 0u64;
+    // reused across poll ticks; a replacement is only allocated when a
+    // formed wave is actually handed off, so idle ticks allocate nothing
+    let mut entries: Vec<Request> = Vec::with_capacity(capacity);
+    'pull: loop {
+        if lane.dead.load(Ordering::Acquire) {
+            break;
+        }
+        let draining = shared.is_closed();
+        if !draining && !gate() {
+            // not this lane's turn: sleep one (backed-off) tick, then
+            // re-check the gate (backlog may have grown) and health
+            std::thread::sleep(idle);
+            idle = (idle * 2).min(max_idle);
+            continue;
+        }
+        // bounded block: wake at most one tick later to re-check
+        // gate/health (arrivals wake the condvar immediately)
+        if shared.recv_up_to(&mut entries, capacity, Some(Instant::now() + idle)) == 0 {
+            if draining && shared.is_empty() {
+                break; // closed + drained: shutdown complete
+            }
+            idle = (idle * 2).min(max_idle);
+            continue;
+        }
+        idle = poll;
+        let mut waves = 1u64;
+        let deadline = Instant::now() + cfg.max_wait;
+        while entries.len() < capacity {
+            if shared.recv_up_to(&mut entries, capacity - entries.len(), Some(deadline)) == 0 {
+                break; // deadline passed, or closed + drained
+            }
+            waves += 1;
+        }
+        seq += 1;
+        if let Some(c) = counters {
+            c.intake_waves.fetch_add(waves, Ordering::Relaxed);
+            c.batches_formed.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut batch = ExecBatch {
+            seq,
+            entries: std::mem::replace(&mut entries, Vec::with_capacity(capacity)),
+            formed_at: Instant::now(),
+        };
+        // hand off to this lane's workers. try_send (not send) so a wave
+        // is never lost to a closed channel: on worker death the batch
+        // comes back and is returned to the shared queue.
+        loop {
+            match output.try_send(batch) {
+                Ok(()) => continue 'pull,
+                Err(TrySendError::Closed(b)) => {
+                    requeue_entries(shared, b.entries, &lane.requeued);
+                    break 'pull;
+                }
+                Err(TrySendError::Full(b)) => {
+                    if lane.dead.load(Ordering::Acquire) {
+                        requeue_entries(shared, b.entries, &lane.requeued);
+                        break 'pull;
+                    }
+                    batch = b;
+                    std::thread::sleep(poll);
+                }
+            }
+        }
+    }
+    output.close();
+    seq
+}
+
+/// Return pulled-but-unexecuted requests to the shared queue (lane-death
+/// path), preserving their original submit timestamps. Requests that
+/// cannot go back are failed **loudly**: `WorkerFailed` when the queue
+/// is full, `Shutdown` (via the completion drop guard) when it is
+/// closed — never silently lost.
+pub(crate) fn requeue_entries(
+    shared: &Channel<Request>,
+    entries: Vec<Request>,
+    requeued: &AtomicU64,
+) {
+    for req in entries {
+        match shared.try_send(req) {
+            Ok(()) => {
+                requeued.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(TrySendError::Full(req)) => {
+                req.fulfill(Err(EngineError::WorkerFailed(
+                    "lane died and the shared queue is full; request could not be re-queued"
+                        .to_string(),
+                )));
+            }
+            Err(TrySendError::Closed(req)) => {
+                // router is shutting down (or every lane is dead): the
+                // drop guard answers Shutdown
+                drop(req);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -173,5 +311,150 @@ mod tests {
         input.close();
         run_batcher(&cfg(2, 1, 10), &input, &output, None);
         assert!(output.recv().is_none());
+    }
+
+    #[test]
+    fn pull_batcher_drains_closed_shared_queue_ignoring_gate() {
+        let shared = Channel::bounded(64);
+        let output = Channel::bounded(64);
+        for i in 0..8 {
+            shared.send(req(i)).unwrap();
+        }
+        shared.close();
+        let lane = LaneControl::default();
+        // gate always says no — but a closed queue is drain mode
+        let n = run_pull_batcher(
+            &cfg(4, 2, 5),
+            &shared,
+            &output,
+            &lane,
+            &|| false,
+            Duration::from_millis(1),
+            None,
+        );
+        assert_eq!(n, 1);
+        let b = output.recv().expect("backlog still ships on shutdown");
+        assert_eq!(b.entries.len(), 8);
+        assert!(output.recv().is_none(), "output closed on exit");
+        assert_eq!(lane.requeued.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn pull_batcher_waits_for_the_gate_to_open() {
+        let shared = Channel::bounded(64);
+        let output: Channel<ExecBatch> = Channel::bounded(64);
+        shared.send(req(0)).unwrap();
+        shared.send(req(1)).unwrap();
+        let open = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let h = {
+            let shared = shared.clone();
+            let output = output.clone();
+            let open = open.clone();
+            std::thread::spawn(move || {
+                let lane = LaneControl::default();
+                let gate = || open.load(Ordering::Relaxed);
+                run_pull_batcher(
+                    &cfg(2, 1, 1),
+                    &shared,
+                    &output,
+                    &lane,
+                    &gate,
+                    Duration::from_millis(1),
+                    None,
+                )
+            })
+        };
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(output.try_recv().is_none(), "gated lane must not pull");
+        open.store(true, Ordering::Relaxed);
+        let b = output.recv().expect("open gate releases the wave");
+        assert_eq!(b.entries.len(), 2);
+        shared.close();
+        assert_eq!(h.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn pull_batcher_requeues_wave_when_exec_channel_is_closed() {
+        let shared = Channel::bounded(64);
+        let output: Channel<ExecBatch> = Channel::bounded(1);
+        output.close(); // worker already died
+        for i in 0..4 {
+            shared.send(req(i)).unwrap();
+        }
+        let lane = LaneControl::default();
+        let n = run_pull_batcher(
+            &cfg(4, 1, 1),
+            &shared,
+            &output,
+            &lane,
+            &|| true,
+            Duration::from_millis(1),
+            None,
+        );
+        assert_eq!(n, 1, "the wave was formed before the dead handoff");
+        assert_eq!(lane.requeued.load(Ordering::Relaxed), 4, "whole wave handed back");
+        assert_eq!(shared.len(), 4, "requests are back in the shared queue");
+        let mut back = Vec::new();
+        shared.try_recv_up_to(&mut back, 8);
+        let ids: Vec<u64> = back.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3], "requeue preserves wave order");
+    }
+
+    #[test]
+    fn pull_batcher_stops_immediately_when_marked_dead() {
+        let shared = Channel::bounded(8);
+        let output: Channel<ExecBatch> = Channel::bounded(8);
+        shared.send(req(0)).unwrap();
+        let lane = LaneControl::default();
+        lane.dead.store(true, Ordering::Release);
+        let n = run_pull_batcher(
+            &cfg(2, 1, 1),
+            &shared,
+            &output,
+            &lane,
+            &|| true,
+            Duration::from_millis(1),
+            None,
+        );
+        assert_eq!(n, 0);
+        assert_eq!(shared.len(), 1, "a dead lane never pulls");
+        assert!(output.recv().is_none(), "output closed on exit");
+    }
+
+    #[test]
+    fn requeue_fails_loudly_when_queue_full_or_closed() {
+        // full queue -> WorkerFailed
+        let shared: Channel<Request> = Channel::bounded(1);
+        shared.send(req(99)).unwrap();
+        let cell = OnceCellSync::new();
+        let r = Request {
+            id: 1,
+            content: vec![0; 4],
+            submitted: Instant::now(),
+            deadline: None,
+            done: Completion::cell(cell.clone()),
+        };
+        let requeued = AtomicU64::new(0);
+        requeue_entries(&shared, vec![r], &requeued);
+        assert_eq!(requeued.load(Ordering::Relaxed), 0);
+        match cell.wait_timeout(Duration::from_secs(1)).expect("answered") {
+            Err(EngineError::WorkerFailed(msg)) => assert!(msg.contains("re-queued"), "{msg}"),
+            other => panic!("expected WorkerFailed, got {other:?}"),
+        }
+        // closed queue -> Shutdown via the drop guard
+        shared.close();
+        let cell2 = OnceCellSync::new();
+        let r2 = Request {
+            id: 2,
+            content: vec![0; 4],
+            submitted: Instant::now(),
+            deadline: None,
+            done: Completion::cell(cell2.clone()),
+        };
+        requeue_entries(&shared, vec![r2], &requeued);
+        match cell2.wait_timeout(Duration::from_secs(1)).expect("answered") {
+            Err(EngineError::Shutdown) => {}
+            other => panic!("expected Shutdown, got {other:?}"),
+        }
     }
 }

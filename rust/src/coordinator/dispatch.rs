@@ -1,0 +1,279 @@
+//! Work-stealing dispatch for the adaptive-N router.
+//!
+//! The pre-redesign `MuxRouter` pushed every arrival into one of several
+//! fully independent coordinator lanes, which realized the paper's
+//! adapt-N-to-load knob (§A3 / Fig 4c) as a *per-arrival* decision with
+//! three bug classes: a full small-N lane rejected `QueueFull` while a
+//! large-N sibling sat idle, a lane whose worker died kept receiving
+//! traffic forever and answered `Shutdown`, and the all-lane depth sum
+//! herded bursts onto the already-backlogged lane.
+//!
+//! This module inverts the data flow: **all submits enter one bounded
+//! queue owned by the router** ([`DispatchState::queue`]), and each lane
+//! *pulls* waves sized to its own `batch * n_mux` capacity
+//! ([`run_pull_batcher`](super::batcher::run_pull_batcher)). `AdaptiveN`
+//! is demoted from per-arrival chooser to a pull-gate: a lane only pulls
+//! when the current backlog/rate justifies its N — small-N lanes serve
+//! idle traffic, large-N lanes engage as the backlog grows, and any lane
+//! may steal any request, so capacity anywhere means no rejects.
+//!
+//! Lane health: a lane whose worker fails is marked dead, stops pulling,
+//! and its formed-but-unexecuted waves are returned to the shared queue
+//! (or failed loudly) — never silently routed to again. Only when the
+//! *last* lane dies is the shared queue closed and its backlog failed
+//! with `Shutdown`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::runtime::InferenceBackend;
+use crate::tokenizer::Tokenizer;
+use crate::util::threadpool::Channel;
+
+use super::api::LaneStatus;
+use super::batcher::{self, BatcherConfig, ExecBatch};
+use super::policy::AdaptiveN;
+use super::request::Request;
+use super::scheduler::{self, MuxTemplate, Stats};
+use super::CoordinatorConfig;
+
+/// How often a gated-off (or idle) lane re-checks the pull-gate and its
+/// health flags. Bounds both gate responsiveness and shutdown latency;
+/// well under any realistic model execution time.
+pub(crate) const PULL_POLL: Duration = Duration::from_micros(500);
+
+/// State shared by the router's admission path and every lane: the
+/// single bounded admission queue, the adaptive-N pull-gate, and the
+/// live-lane count that decides when `Shutdown` becomes the truth.
+pub struct DispatchState {
+    /// the one admission queue all lanes pull from
+    pub queue: Channel<Request>,
+    gate: Mutex<AdaptiveN>,
+    epoch: Instant,
+    live: AtomicUsize,
+}
+
+impl DispatchState {
+    pub fn new(candidates: Vec<usize>, exec_time_us: f64, queue_cap: usize) -> Self {
+        let n_lanes = candidates.len();
+        DispatchState {
+            queue: Channel::bounded(queue_cap),
+            gate: Mutex::new(AdaptiveN::new(candidates, exec_time_us)),
+            epoch: Instant::now(),
+            live: AtomicUsize::new(n_lanes),
+        }
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Record one admission into the rate estimate.
+    pub fn on_arrival(&self) {
+        self.gate.lock().unwrap().on_arrival(self.now_us());
+    }
+
+    /// Pull-gate decision for a lane multiplexing `lane_n` requests.
+    /// Applies rate decay first, so a stale burst estimate cannot keep
+    /// large lanes engaged on idle traffic.
+    pub fn should_pull(&self, lane_n: usize) -> bool {
+        let depth = self.queue.len();
+        let mut g = self.gate.lock().unwrap();
+        g.decay(self.now_us());
+        g.should_pull(lane_n, depth)
+    }
+
+    /// A lane died: retire its N from the candidate grid so the gate
+    /// never targets it again. When the *last* lane dies, close the
+    /// admission queue and fail its backlog — from here on submissions
+    /// (and only from here on) answer `Shutdown`.
+    pub fn lane_died(&self, lane_n: usize) {
+        self.gate.lock().unwrap().remove_candidate(lane_n);
+        if self.live.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.queue.close();
+            // nobody will pull again: drain what was admitted, dropping
+            // each request so its completion guard answers Shutdown
+            let mut orphans: Vec<Request> = Vec::new();
+            while self.queue.try_recv_up_to(&mut orphans, 64) > 0 {
+                orphans.clear();
+            }
+        }
+    }
+
+    pub fn live_lanes(&self) -> usize {
+        self.live.load(Ordering::Acquire)
+    }
+}
+
+/// Per-lane health and dispatch counters.
+#[derive(Default)]
+pub struct LaneControl {
+    /// set on the first worker failure; the puller stops immediately
+    pub dead: AtomicBool,
+    /// requests this lane returned to the shared queue when it died
+    pub requeued: AtomicU64,
+}
+
+/// One serving lane of the work-stealing router: a pull-gated batcher
+/// plus worker thread(s) over one `(N, batch)` backend. Unlike a
+/// standalone [`MuxCoordinator`](super::MuxCoordinator), a lane owns no
+/// admission queue — it pulls from [`DispatchState::queue`].
+///
+/// Failure bound: when the backend starts failing, each worker that is
+/// *mid-execution* answers its batch `WorkerFailed` — so with
+/// `n_workers` workers up to `n_workers` batches can fail before the
+/// dead flag stops the lane (exactly one with the default single
+/// worker, which is what the router-scaling bench and the engine tests
+/// gate on). Batches still queued when the flag lands are re-queued,
+/// never failed.
+pub struct Lane {
+    pub n_mux: usize,
+    pub stats: Arc<Stats>,
+    control: Arc<LaneControl>,
+    puller: Option<std::thread::JoinHandle<u64>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Lane {
+    /// Spawn the lane's puller and workers against the shared dispatch
+    /// state. `tokenizer` must agree with the router's (validated by the
+    /// caller along with seq_len/task).
+    pub fn start(
+        backend: Arc<dyn InferenceBackend>,
+        cfg: &CoordinatorConfig,
+        state: &Arc<DispatchState>,
+        tokenizer: &Tokenizer,
+    ) -> Result<Lane> {
+        let meta = backend.meta().clone();
+        let n_mux = meta.n_mux;
+        let batch = meta.batch;
+        let template = Arc::new(MuxTemplate::new(&meta, tokenizer));
+        let stats = Arc::new(Stats::default());
+        let control = Arc::new(LaneControl::default());
+        let n_workers = cfg.n_workers.max(1);
+        // keep the exec buffer shallow: batches parked here cannot be
+        // stolen by sibling lanes, only re-queued on death
+        let exec: Channel<ExecBatch> = Channel::bounded(n_workers);
+        let bcfg = BatcherConfig { n_mux, batch, max_wait: cfg.max_wait };
+
+        let puller = {
+            let state = state.clone();
+            let exec = exec.clone();
+            let control = control.clone();
+            let stats = stats.clone();
+            std::thread::Builder::new()
+                .name(format!("datamux-lane{n_mux}-pull"))
+                .spawn(move || {
+                    let gate = || state.should_pull(n_mux);
+                    batcher::run_pull_batcher(
+                        &bcfg,
+                        &state.queue,
+                        &exec,
+                        &control,
+                        &gate,
+                        PULL_POLL,
+                        Some(&stats.counters),
+                    )
+                })?
+        };
+
+        let mut workers = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let backend = backend.clone();
+            let exec = exec.clone();
+            let state = state.clone();
+            let control = control.clone();
+            let stats = stats.clone();
+            let template = template.clone();
+            let policy = cfg.slot_policy;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("datamux-lane{n_mux}-exec-{w}"))
+                    .spawn(move || {
+                        let mut scratch = Vec::with_capacity(template.ids_len());
+                        while let Some(b) = exec.recv() {
+                            if control.dead.load(Ordering::Acquire) {
+                                // a sibling worker failed while this
+                                // batch sat queued: hand it back rather
+                                // than executing against a dead backend
+                                batcher::requeue_entries(
+                                    &state.queue,
+                                    b.entries,
+                                    &control.requeued,
+                                );
+                                continue;
+                            }
+                            if let Err(e) = scheduler::execute_batch(
+                                backend.as_ref(),
+                                &template,
+                                policy,
+                                &stats,
+                                b,
+                                &mut scratch,
+                            ) {
+                                // the failed batch's waiters were already
+                                // answered WorkerFailed inside
+                                // execute_batch. Mark the lane dead so it
+                                // is never pulled for again, hand its
+                                // formed-but-unexecuted waves back to the
+                                // shared queue, and let siblings carry on.
+                                eprintln!(
+                                    "router lane N={n_mux} worker {w}: execution failed: \
+                                     {e:#}; lane marked dead"
+                                );
+                                let first = !control.dead.swap(true, Ordering::AcqRel);
+                                exec.close();
+                                while let Some(stranded) = exec.try_recv() {
+                                    batcher::requeue_entries(
+                                        &state.queue,
+                                        stranded.entries,
+                                        &control.requeued,
+                                    );
+                                }
+                                if first {
+                                    state.lane_died(n_mux);
+                                }
+                                break;
+                            }
+                        }
+                    })?,
+            );
+        }
+
+        Ok(Lane { n_mux, stats, control, puller: Some(puller), workers })
+    }
+
+    pub fn alive(&self) -> bool {
+        !self.control.dead.load(Ordering::Acquire)
+    }
+
+    pub fn status(&self) -> LaneStatus {
+        let c = self.stats.counters.snapshot();
+        LaneStatus {
+            n_mux: self.n_mux,
+            alive: self.alive(),
+            pulls: c.batches_formed,
+            requeued: self.control.requeued.load(Ordering::Relaxed),
+            completed: c.completed,
+        }
+    }
+
+    /// Join the lane's threads; returns the number of batches it formed.
+    /// The caller must have closed (or drained) the shared queue first.
+    pub(crate) fn join(&mut self) -> u64 {
+        let batches = self.puller.take().map(|p| p.join().unwrap_or(0)).unwrap_or(0);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        batches
+    }
+}
+
+impl Drop for Lane {
+    fn drop(&mut self) {
+        self.join();
+    }
+}

@@ -30,6 +30,7 @@ use anyhow::Result;
 use crate::runtime::{ArtifactMeta, InferenceBackend, LoadedModel, NativeBackend};
 
 use super::api::Submit;
+use super::scheduler::SharedModel;
 use super::server::{Server, ServerConfig};
 use super::{CoordinatorConfig, MuxCoordinator, MuxRouter, SlotPolicy};
 
@@ -142,25 +143,23 @@ impl EngineBuilder {
         self.build_backend(Arc::new(NativeBackend::from_artifact(meta)?))
     }
 
-    /// Adaptive-N router: one lane per model (paper's A3-style knob).
+    /// Adaptive-N router: one work-stealing lane per model (paper's
+    /// A3-style knob) pulling from a single shared admission queue of
+    /// `queue_cap` requests.
     pub fn build_router(&self, models: Vec<LoadedModel>) -> Result<MuxRouter> {
-        let lanes = models
-            .into_iter()
-            .map(|m| self.build(m))
-            .collect::<Result<Vec<_>>>()?;
-        MuxRouter::new(lanes, self.exec_time_us)
+        let mut backends: Vec<Arc<dyn InferenceBackend>> = Vec::with_capacity(models.len());
+        for m in models {
+            backends.push(Arc::new(SharedModel(Arc::new(m))));
+        }
+        self.build_router_backends(backends)
     }
 
-    /// Adaptive-N router over arbitrary backends.
+    /// Adaptive-N router over arbitrary backends (PJRT, native, fake).
     pub fn build_router_backends(
         &self,
         backends: Vec<Arc<dyn InferenceBackend>>,
     ) -> Result<MuxRouter> {
-        let lanes = backends
-            .into_iter()
-            .map(|b| self.build_backend(b))
-            .collect::<Result<Vec<_>>>()?;
-        MuxRouter::new(lanes, self.exec_time_us)
+        MuxRouter::start_backends(backends, self.coordinator.clone(), self.exec_time_us)
     }
 
     /// TCP front end over any engine (coordinator or router).
@@ -209,8 +208,11 @@ mod tests {
                 Arc::new(FakeBackend::new("cls", 8, 1, 8, 3)),
             ])
             .expect("router over fake backends");
-        assert_eq!(router.lanes.len(), 2);
-        assert_eq!(router.lanes[0].n_mux, 2, "lanes sorted ascending by N");
+        let lanes = router.lane_status();
+        assert_eq!(lanes.len(), 2);
+        assert_eq!(lanes[0].n_mux, 2, "lanes sorted ascending by N");
+        assert!(lanes.iter().all(|l| l.alive), "all lanes start alive");
+        assert_eq!(router.live_lanes(), 2);
     }
 
     #[test]

@@ -1,23 +1,32 @@
 //! L3 coordinator — the DataMUX serving engine.
 //!
 //! ```text
+//!  MuxCoordinator (one model):
 //!  Submit::submit() ──▶ [bounded queue] ──▶ batcher thread ──▶ [exec queue]
 //!                                                                 │
 //!                                              worker thread(s) ◀─┘
 //!                                                assemble ids → backend execute
 //!                                                → demux → fulfill completions
+//!
+//!  MuxRouter (adaptive N, work-stealing):
+//!  Submit::submit() ──▶ [one shared bounded queue] ◀── pull ── lane N=2  ──▶ exec
+//!                                                 ◀── pull ── lane N=20 ──▶ exec
+//!                        (AdaptiveN pull-gate: a lane pulls only when
+//!                         backlog/rate justifies its N; dead lanes stop
+//!                         pulling and hand their waves back)
 //! ```
 //!
 //! The coordinator owns one [`InferenceBackend`] (usually an
 //! AOT-compiled `(profile, N, batch)` artifact behind PJRT) plus the
-//! batcher/worker threads. [`MuxRouter`] composes several coordinators
-//! and routes by arrival rate (adaptive N). Both implement the
-//! [`Submit`] trait, so every consumer — the TCP server, the workload
-//! drivers, benches and examples — is generic over which one it talks
-//! to.
+//! batcher/worker threads. [`MuxRouter`] owns one shared admission
+//! queue and a set of lanes (one per N candidate) that *pull* work from
+//! it (see [`dispatch`]). Both implement the [`Submit`] trait, so every
+//! consumer — the TCP server, the workload drivers, benches and
+//! examples — is generic over which one it talks to.
 
 pub mod api;
 pub mod batcher;
+pub mod dispatch;
 pub mod engine;
 pub mod policy;
 pub mod request;
@@ -36,9 +45,11 @@ use crate::util::metrics::{CounterSnapshot, LatencySummary};
 use crate::util::threadpool::{Channel, OnceCellSync, TrySendError};
 
 pub use api::{
-    CompletionItem, CompletionQueue, InferenceRequest, Payload, Submit, SubmitError, TaskKind,
+    CompletionItem, CompletionQueue, InferenceRequest, LaneStatus, Payload, Submit, SubmitError,
+    TaskKind,
 };
 pub use batcher::{BatcherConfig, ExecBatch};
+pub use dispatch::{DispatchState, Lane};
 pub use engine::EngineBuilder;
 pub use policy::{AdaptiveN, SlotPolicy};
 pub use request::{EngineError, LogitsView, Request, RequestHandle, Response};
@@ -64,6 +75,33 @@ impl Default for CoordinatorConfig {
             slot_policy: SlotPolicy::Fill,
         }
     }
+}
+
+/// Validate a typed request against an engine's (task, seq_len) and
+/// frame its payload — the shared admission front half of both
+/// [`MuxCoordinator`] and [`MuxRouter`].
+fn prepare_request(
+    tokenizer: &Tokenizer,
+    seq_len: usize,
+    task: TaskKind,
+    req: InferenceRequest,
+) -> Result<(Vec<i32>, Option<Instant>), SubmitError> {
+    if req.task != task {
+        return Err(SubmitError::WrongTask { requested: req.task, served: task });
+    }
+    let content = match req.payload {
+        Payload::Framed(ids) => {
+            if ids.len() != seq_len {
+                return Err(SubmitError::BadFrame { expected: seq_len, got: ids.len() });
+            }
+            ids
+        }
+        Payload::Text(text) => tokenizer
+            .encode_framed(&text.split(" [SEP] ").collect::<Vec<_>>(), seq_len)
+            .map_err(|e| SubmitError::Tokenize(e.to_string()))?,
+    };
+    let deadline = req.deadline.map(|d| Instant::now() + d);
+    Ok((content, deadline))
 }
 
 /// The serving engine for one loaded model.
@@ -168,26 +206,7 @@ impl MuxCoordinator {
 
     /// Validate a typed request and frame its payload.
     fn prepare(&self, req: InferenceRequest) -> Result<(Vec<i32>, Option<Instant>), SubmitError> {
-        if req.task != self.task {
-            return Err(SubmitError::WrongTask { requested: req.task, served: self.task });
-        }
-        let content = match req.payload {
-            Payload::Framed(ids) => {
-                if ids.len() != self.seq_len {
-                    return Err(SubmitError::BadFrame {
-                        expected: self.seq_len,
-                        got: ids.len(),
-                    });
-                }
-                ids
-            }
-            Payload::Text(text) => self
-                .tokenizer
-                .encode_framed(&text.split(" [SEP] ").collect::<Vec<_>>(), self.seq_len)
-                .map_err(|e| SubmitError::Tokenize(e.to_string()))?,
-        };
-        let deadline = req.deadline.map(|d| Instant::now() + d);
-        Ok((content, deadline))
+        prepare_request(&self.tokenizer, self.seq_len, self.task, req)
     }
 
     fn make_request(
@@ -317,6 +336,19 @@ impl Submit for MuxCoordinator {
     fn queue_wait(&self) -> LatencySummary {
         self.stats.queue_wait.summary()
     }
+
+    fn lane_status(&self) -> Vec<LaneStatus> {
+        let c = self.stats.counters.snapshot();
+        vec![LaneStatus {
+            n_mux: self.n_mux,
+            // worker death poisons the intake, so a closed input channel
+            // is exactly "this lane no longer takes work"
+            alive: !self.input.is_closed(),
+            pulls: c.batches_formed,
+            requeued: 0,
+            completed: c.completed,
+        }]
+    }
 }
 
 impl Drop for MuxCoordinator {
@@ -331,83 +363,176 @@ impl Drop for MuxCoordinator {
     }
 }
 
-/// Adaptive-N router over several coordinators (one per N candidate).
+/// Adaptive-N router: one **shared bounded admission queue** feeding a
+/// set of work-stealing lanes (one per N candidate).
+///
+/// Every submit enters the shared queue; each lane pulls waves sized to
+/// its own `batch * n_mux` capacity, gated by [`AdaptiveN`] (see
+/// [`dispatch`]). Consequences the per-arrival design could not offer:
+///
+/// * `try_submit` only reports `QueueFull` when the *router* is full —
+///   a burst can never be rejected while any lane has spare capacity.
+/// * A lane whose worker dies stops pulling and hands its unexecuted
+///   waves back to the shared queue for the surviving lanes; it is
+///   never routed to again.
+/// * `Shutdown` is only reported once **all** lanes are dead (or the
+///   intake was explicitly closed).
 pub struct MuxRouter {
+    state: Arc<DispatchState>,
     /// ascending by n_mux; all lanes share seq_len, task and vocabulary
-    pub lanes: Vec<MuxCoordinator>,
-    adaptive: std::sync::Mutex<AdaptiveN>,
-    epoch: Instant,
+    lanes: Vec<Lane>,
+    /// admission-side counters (submitted / rejected); execution-side
+    /// counters accumulate in each lane's stats
+    pub stats: Arc<Stats>,
+    tokenizer: Tokenizer,
+    seq_len: usize,
+    task: TaskKind,
+    next_id: AtomicU64,
 }
 
 impl MuxRouter {
-    /// Compose lanes into an adaptive-N engine.
+    /// Start a router over one backend per lane.
     ///
-    /// Construct-time validation pins the routing invariant: the
-    /// adaptive-N candidate set is exactly the set of lane Ns, so
-    /// `AdaptiveN::choose` can never name an N without a lane. Lanes
-    /// must also agree on seq_len and task, since one typed request must
-    /// be valid on whichever lane routing picks.
-    pub fn new(mut lanes: Vec<MuxCoordinator>, exec_time_us: f64) -> Result<Self> {
-        anyhow::ensure!(!lanes.is_empty(), "MuxRouter needs at least one lane");
-        lanes.sort_by_key(|c| c.n_mux);
-        let (seq_len, task) = (lanes[0].seq_len, lanes[0].task);
-        for lane in &lanes {
+    /// Construct-time validation pins the dispatch invariant: the
+    /// adaptive-N candidate grid is exactly the set of lane Ns, and all
+    /// lanes agree on seq_len, task and vocabulary, so any admitted
+    /// request is valid on whichever lane steals it.
+    pub fn start_backends(
+        backends: Vec<Arc<dyn InferenceBackend>>,
+        cfg: CoordinatorConfig,
+        exec_time_us: f64,
+    ) -> Result<Self> {
+        anyhow::ensure!(!backends.is_empty(), "MuxRouter needs at least one lane");
+        let mut backends = backends;
+        backends.sort_by_key(|b| b.meta().n_mux);
+        let m0 = backends[0].meta().clone();
+        let task = TaskKind::from_model_task(&m0.task)
+            .ok_or_else(|| anyhow::anyhow!("unsupported serving task '{}'", m0.task))?;
+        for b in &backends {
+            let m = b.meta();
             anyhow::ensure!(
-                lane.seq_len == seq_len && lane.task == task,
-                "router lanes must agree on seq_len/task: lane N={} has (seq_len={}, \
-                 task={:?}), expected (seq_len={}, task={:?})",
-                lane.n_mux,
-                lane.seq_len,
-                lane.task,
-                seq_len,
-                task
+                m.seq_len == m0.seq_len && m.task == m0.task && m.vocab_size == m0.vocab_size,
+                "router lanes must agree on seq_len/task/vocab: lane N={} has (seq_len={}, \
+                 task={}, vocab={}), expected (seq_len={}, task={}, vocab={})",
+                m.n_mux,
+                m.seq_len,
+                m.task,
+                m.vocab_size,
+                m0.seq_len,
+                m0.task,
+                m0.vocab_size
             );
         }
-        let candidates = lanes.iter().map(|c| c.n_mux).collect();
+        let tokenizer = Tokenizer::new(crate::tokenizer::default_vocab(), m0.vocab_size);
+        let candidates: Vec<usize> = backends.iter().map(|b| b.meta().n_mux).collect();
+        let state = Arc::new(DispatchState::new(candidates, exec_time_us, cfg.queue_cap));
+        let lanes = backends
+            .into_iter()
+            .map(|b| Lane::start(b, &cfg, &state, &tokenizer))
+            .collect::<Result<Vec<_>>>()?;
         Ok(MuxRouter {
+            state,
             lanes,
-            adaptive: std::sync::Mutex::new(AdaptiveN::new(candidates, exec_time_us)),
-            epoch: Instant::now(),
+            stats: Arc::new(Stats::default()),
+            tokenizer,
+            seq_len: m0.seq_len,
+            task,
+            next_id: AtomicU64::new(1),
         })
     }
 
-    /// Pick the lane adaptive-N selects for one arrival.
-    fn route(&self) -> &MuxCoordinator {
-        let depth: usize = self.lanes.iter().map(|l| l.queue_depth()).sum();
-        let n = {
-            let mut a = self.adaptive.lock().unwrap();
-            a.on_arrival(self.epoch.elapsed().as_micros() as u64);
-            a.choose(depth)
-        };
-        // `new()` pins candidates == lane Ns, so this lookup always hits;
-        // the debug_assert keeps the invariant loud if that ever drifts.
-        let lane = self.lanes.iter().find(|l| l.n_mux == n);
-        debug_assert!(lane.is_some(), "AdaptiveN chose N={n} but no lane serves it");
-        lane.unwrap_or_else(|| self.lanes.last().unwrap())
+    /// Lanes still pulling work.
+    pub fn live_lanes(&self) -> usize {
+        self.state.live_lanes()
     }
 
-    /// Route one typed request, reporting which lane (by N) took it.
-    pub fn submit_routed(
+    /// Stop accepting new requests; everything already admitted still
+    /// completes on whatever lanes remain.
+    pub fn close_intake(&self) {
+        self.state.queue.close();
+    }
+
+    /// Shared admission into the one queue; counter discipline matches
+    /// the coordinator's (`submitted` on accept, `rejected` otherwise).
+    fn admit(&self, req: Request, blocking: bool) -> Result<(), SubmitError> {
+        self.state.on_arrival();
+        let outcome = if blocking {
+            // the dropped request already fulfilled its completion with
+            // Shutdown; the caller also gets the error synchronously
+            self.state.queue.send(req).map_err(|_| SubmitError::Shutdown)
+        } else {
+            match self.state.queue.try_send(req) {
+                Ok(()) => Ok(()),
+                Err(err) => {
+                    let submit_err = match &err {
+                        TrySendError::Full(_) => SubmitError::QueueFull,
+                        TrySendError::Closed(_) => SubmitError::Shutdown,
+                    };
+                    let mut req = err.into_inner();
+                    req.done.defuse();
+                    Err(submit_err)
+                }
+            }
+        };
+        match outcome {
+            Ok(()) => {
+                self.stats.counters.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(e) => {
+                self.stats.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    fn make_request(
+        &self,
+        content: Vec<i32>,
+        deadline: Option<Instant>,
+        done: request::Completion,
+    ) -> Request {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        Request { id, content, submitted: Instant::now(), deadline, done }
+    }
+
+    /// Shared body of `submit` / `try_submit` (cell-completion flavor).
+    fn submit_with(
         &self,
         req: InferenceRequest,
-    ) -> Result<(usize, RequestHandle), SubmitError> {
-        let lane = self.route();
-        Ok((lane.n_mux, lane.submit(req)?))
+        blocking: bool,
+    ) -> Result<RequestHandle, SubmitError> {
+        let (content, deadline) = prepare_request(&self.tokenizer, self.seq_len, self.task, req)?;
+        let cell = OnceCellSync::new();
+        let req =
+            self.make_request(content, deadline, request::Completion::cell(cell.clone()));
+        let handle = RequestHandle { id: req.id, deadline, done: cell };
+        self.admit(req, blocking)?;
+        Ok(handle)
     }
 
-    /// Drain and stop every lane.
-    pub fn shutdown(self) -> u64 {
-        self.lanes.into_iter().map(|l| l.shutdown()).sum()
+    /// Drain and stop every lane; returns the total batches formed.
+    pub fn shutdown(mut self) -> u64 {
+        self.state.queue.close();
+        self.lanes.iter_mut().map(Lane::join).sum()
+    }
+}
+
+impl Drop for MuxRouter {
+    fn drop(&mut self) {
+        // close the shared queue before the lanes drop-join, or their
+        // pullers would wait for work forever
+        self.state.queue.close();
     }
 }
 
 impl Submit for MuxRouter {
     fn submit(&self, req: InferenceRequest) -> Result<RequestHandle, SubmitError> {
-        self.submit_routed(req).map(|(_, h)| h)
+        self.submit_with(req, true)
     }
 
     fn try_submit(&self, req: InferenceRequest) -> Result<RequestHandle, SubmitError> {
-        self.route().try_submit(req)
+        self.submit_with(req, false)
     }
 
     fn submit_tagged(
@@ -416,30 +541,35 @@ impl Submit for MuxRouter {
         tag: u64,
         out: &CompletionQueue,
     ) -> Result<(), SubmitError> {
-        self.route().submit_tagged(req, tag, out)
+        let (content, deadline) = prepare_request(&self.tokenizer, self.seq_len, self.task, req)?;
+        let req =
+            self.make_request(content, deadline, request::Completion::queue(tag, out.clone()));
+        self.admit(req, false)
     }
 
     fn native_task(&self) -> TaskKind {
-        self.lanes[0].task
+        self.task
     }
 
     fn tokenizer(&self) -> &Tokenizer {
-        &self.lanes[0].tokenizer
+        &self.tokenizer
     }
 
     fn seq_len(&self) -> usize {
-        self.lanes[0].seq_len
+        self.seq_len
     }
 
     fn queue_depth(&self) -> usize {
-        self.lanes.iter().map(|l| l.queue_depth()).sum()
+        self.state.queue.len()
     }
 
     fn counters(&self) -> CounterSnapshot {
+        // admission counters live router-side, execution counters
+        // lane-side; merged they read like one engine
         self.lanes
             .iter()
             .map(|l| l.stats.counters.snapshot())
-            .fold(CounterSnapshot::default(), CounterSnapshot::merge)
+            .fold(self.stats.counters.snapshot(), CounterSnapshot::merge)
     }
 
     fn latency(&self) -> LatencySummary {
@@ -452,5 +582,9 @@ impl Submit for MuxRouter {
         let mut it = self.lanes.iter().map(|l| l.stats.queue_wait.summary());
         let first = it.next().expect("router has at least one lane");
         it.fold(first, LatencySummary::merge)
+    }
+
+    fn lane_status(&self) -> Vec<LaneStatus> {
+        self.lanes.iter().map(Lane::status).collect()
     }
 }

@@ -5,10 +5,15 @@
 //! starting offset so long-run per-slot load (and thus exposure to the
 //! weaker indices) can be equalized.
 //!
-//! `AdaptiveN` picks which executable (which N) to route to from the
-//! observed arrival rate — the serving-side extension the paper's
-//! discussion motivates (multiplex more when the queue is deep, keep
-//! latency low when traffic is light).
+//! `AdaptiveN` estimates the arrival rate and maps it (plus the current
+//! backlog) onto the candidate N grid — the serving-side extension the
+//! paper's discussion motivates (multiplex more when the queue is deep,
+//! keep latency low when traffic is light). Since the shared-queue
+//! router redesign it is a **pull gate**, not a per-arrival chooser:
+//! every lane asks `should_pull(its_n, depth)` before taking work from
+//! the shared admission queue, so small-N lanes serve light traffic and
+//! large-N lanes engage as the backlog (or rate) grows. Dead lanes are
+//! retired from the candidate grid with [`AdaptiveN::remove_candidate`].
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SlotPolicy {
@@ -64,6 +69,35 @@ impl AdaptiveN {
         self.last_arrival_us = Some(now_us);
     }
 
+    /// Fold an observed quiet gap into the rate estimate.
+    ///
+    /// `on_arrival` only updates the EWMA *when requests arrive*, so
+    /// after a burst stops the estimate froze at burst rate forever and
+    /// kept large-N lanes engaged on idle traffic. Called at
+    /// choose/pull time, this blends the elapsed silence (`now -
+    /// last_arrival`) into the EWMA whenever it exceeds the current
+    /// estimate — one-sided, so in-burst calls (tiny gaps) are no-ops
+    /// and repeated idle calls converge the estimate onto the quiet
+    /// gap. `last_arrival_us` is deliberately untouched: the next real
+    /// arrival still sees the full gap.
+    pub fn decay(&mut self, now_us: u64) {
+        if let Some(prev) = self.last_arrival_us {
+            let gap = (now_us.saturating_sub(prev)) as f64;
+            if gap > self.ewma_interarrival_us {
+                self.ewma_interarrival_us =
+                    self.alpha * gap + (1.0 - self.alpha) * self.ewma_interarrival_us;
+            }
+        }
+    }
+
+    /// Retire one candidate (a lane died). The grid may become empty —
+    /// `choose_checked` then reports `None` and no lane pulls.
+    pub fn remove_candidate(&mut self, n: usize) {
+        if let Some(i) = self.candidates.iter().position(|&c| c == n) {
+            self.candidates.remove(i);
+        }
+    }
+
     pub fn arrival_rate_per_s(&self) -> f64 {
         if self.ewma_interarrival_us <= 0.0 {
             return 0.0;
@@ -74,14 +108,33 @@ impl AdaptiveN {
     /// Choose N: the number of requests expected to arrive within one
     /// model execution, clamped to the candidate grid. Deep queues ->
     /// large N (throughput mode); light traffic -> small N (latency mode).
-    pub fn choose(&self, queue_depth: usize) -> usize {
+    /// `None` when every candidate has been retired.
+    pub fn choose_checked(&self, queue_depth: usize) -> Option<usize> {
         let expected = self.arrival_rate_per_s() * self.exec_time_us / 1e6;
         let want = expected.max(queue_depth as f64).max(1.0);
-        *self
-            .candidates
+        self.candidates
             .iter()
-            .find(|&&n| (n as f64) >= want)
-            .unwrap_or(self.candidates.last().unwrap())
+            .copied()
+            .find(|&n| (n as f64) >= want)
+            .or_else(|| self.candidates.last().copied())
+    }
+
+    /// `choose_checked`, for callers that know candidates remain.
+    pub fn choose(&self, queue_depth: usize) -> usize {
+        self.choose_checked(queue_depth).expect("AdaptiveN has no candidates left")
+    }
+
+    /// Pull-gate: may a lane multiplexing `lane_n` requests take work
+    /// from the shared queue right now? True for every live lane whose N
+    /// does not exceed the chosen target — when idle only the smallest
+    /// lane pulls; as backlog/rate grows, progressively larger lanes
+    /// engage (the smallest live lane always qualifies, so admitted work
+    /// can never sit unpulled while any lane is alive).
+    pub fn should_pull(&self, lane_n: usize, queue_depth: usize) -> bool {
+        match self.choose_checked(queue_depth) {
+            Some(n) => lane_n <= n,
+            None => false,
+        }
     }
 }
 
@@ -149,5 +202,69 @@ mod tests {
         }
         assert!(a.arrival_rate_per_s() > 50.0);
         assert_eq!(a.choose(0), 20);
+    }
+
+    #[test]
+    fn rate_decays_after_burst_stops() {
+        let mut a = AdaptiveN::new(vec![1, 5, 20], 100_000.0); // 100ms exec
+        let mut t = 0u64;
+        for _ in 0..50 {
+            a.on_arrival(t);
+            t += 10_000;
+        }
+        assert_eq!(a.choose(0), 20, "mid-burst the rate estimate wants large N");
+        // the burst stops; pull-time decay observes 5s of silence and
+        // the stale burst-rate estimate must come down to the idle choice
+        let quiet = t + 5_000_000;
+        for _ in 0..40 {
+            a.decay(quiet);
+        }
+        assert!(a.arrival_rate_per_s() < 5.0, "rate={}", a.arrival_rate_per_s());
+        assert_eq!(a.choose(0), 1, "after silence the smallest N serves");
+        // a fresh burst still re-engages large N (depth path is intact)
+        assert_eq!(a.choose(50), 20);
+    }
+
+    #[test]
+    fn decay_is_a_noop_during_active_traffic() {
+        let mut a = AdaptiveN::new(vec![1, 5, 20], 100_000.0);
+        let mut t = 0u64;
+        for _ in 0..20 {
+            a.on_arrival(t);
+            t += 10_000;
+        }
+        let before = a.arrival_rate_per_s();
+        a.decay(t + 1_000); // 1ms since last arrival: shorter than the EWMA
+        assert_eq!(a.arrival_rate_per_s(), before);
+    }
+
+    #[test]
+    fn pull_gate_prefers_small_lanes_idle_and_opens_up_under_backlog() {
+        let a = AdaptiveN::new(vec![2, 8, 20], 10_000.0);
+        // idle: only the smallest lane pulls
+        assert!(a.should_pull(2, 0));
+        assert!(!a.should_pull(8, 0));
+        assert!(!a.should_pull(20, 0));
+        // moderate backlog: mid lane engages, the largest stays gated
+        assert!(a.should_pull(2, 6));
+        assert!(a.should_pull(8, 6));
+        assert!(!a.should_pull(20, 6));
+        // deep backlog: everyone pulls
+        assert!(a.should_pull(2, 50));
+        assert!(a.should_pull(8, 50));
+        assert!(a.should_pull(20, 50));
+    }
+
+    #[test]
+    fn retired_candidates_stop_pulling_and_empty_grid_gates_everyone() {
+        let mut a = AdaptiveN::new(vec![2, 8], 10_000.0);
+        a.remove_candidate(2);
+        // with the small lane dead, the idle choice falls to N=8
+        assert_eq!(a.choose_checked(0), Some(8));
+        assert!(a.should_pull(8, 0));
+        a.remove_candidate(8);
+        assert_eq!(a.choose_checked(0), None);
+        assert!(!a.should_pull(8, 0));
+        assert!(!a.should_pull(2, 0));
     }
 }

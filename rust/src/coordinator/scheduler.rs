@@ -263,7 +263,13 @@ pub fn execute_batch(
     // "batch formed -> execution done", as documented: includes worker
     // pickup, the expiry sweep and assembly, not just the backend call
     stats.exec_latency.record_duration(batch.formed_at.elapsed());
-    stats.counters.groups_executed.fetch_add(template.batch as u64, Ordering::Relaxed);
+    // count only the groups actually occupied by requests: a partial
+    // batch of k entries fills ceil(k / n_mux) groups (entry `pos` lands
+    // in group `pos / n_mux` under every slot policy), not the template's
+    // full `batch` — the fixed counter makes padded-group waste visible
+    // as `slots_padded` rather than inflating throughput accounting
+    let occupied_groups = entries.len().div_ceil(n_mux) as u64;
+    stats.counters.groups_executed.fetch_add(occupied_groups, Ordering::Relaxed);
     stats.counters.slots_padded.fetch_add(padded as u64, Ordering::Relaxed);
 
     // --- demux dispatch ----------------------------------------------------
@@ -393,6 +399,42 @@ mod tests {
                 assert!(msg.contains("logits"), "{msg}")
             }
             other => panic!("expected WorkerFailed, got {other:?}"),
+        }
+    }
+
+    /// Pins the partial-batch counter semantics: `groups_executed`
+    /// counts occupied groups (`ceil(entries / n_mux)`), not the
+    /// template's full `batch` per execution.
+    #[test]
+    fn groups_executed_counts_occupied_groups_only() {
+        // n_mux=4, batch=3: capacity 12, template would claim 3 groups
+        for (n_entries, want_groups) in [(1usize, 1u64), (4, 1), (5, 2), (9, 3), (12, 3)] {
+            let backend = FakeBackend::new("cls", 4, 3, 6, 3);
+            let tok = Tokenizer::new(default_vocab(), backend.meta().vocab_size);
+            let template = MuxTemplate::new(backend.meta(), &tok);
+            let stats = Stats::default();
+            let mut scratch = Vec::new();
+            let mut cells = Vec::new();
+            let mut entries = Vec::new();
+            for pos in 0..n_entries {
+                let mut c = vec![tok.vocab.pad; 6];
+                c[0] = tok.vocab.cls;
+                let cell = OnceCellSync::new();
+                cells.push(cell.clone());
+                entries.push(make_req(pos as u64, c, cell));
+            }
+            let eb = ExecBatch { seq: 1, entries, formed_at: Instant::now() };
+            execute_batch(&backend, &template, SlotPolicy::Fill, &stats, eb, &mut scratch)
+                .expect("fake backend executes");
+            let c = stats.counters.snapshot();
+            assert_eq!(
+                c.groups_executed, want_groups,
+                "{n_entries} entries must occupy {want_groups} groups"
+            );
+            assert_eq!(c.slots_padded, (12 - n_entries) as u64);
+            for cell in cells {
+                assert!(cell.wait_timeout(Duration::from_secs(1)).is_some());
+            }
         }
     }
 

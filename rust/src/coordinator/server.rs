@@ -445,6 +445,22 @@ impl<W: Write + Send + 'static> PipelinedConn<W> {
         let c = self.engine.counters();
         let l = self.engine.latency();
         let qw = self.engine.queue_wait();
+        // per-lane health: which Ns are alive, how many waves each
+        // pulled, and what a dead lane handed back to the shared queue
+        let lanes: Vec<Json> = self
+            .engine
+            .lane_status()
+            .iter()
+            .map(|lane| {
+                obj(vec![
+                    ("n_mux", num(lane.n_mux as f64)),
+                    ("alive", Json::Bool(lane.alive)),
+                    ("pulls", num(lane.pulls as f64)),
+                    ("requeued", num(lane.requeued as f64)),
+                    ("completed", num(lane.completed as f64)),
+                ])
+            })
+            .collect();
         obj(vec![
             ("ok", Json::Bool(true)),
             (
@@ -463,6 +479,7 @@ impl<W: Write + Send + 'static> PipelinedConn<W> {
                     ("p99_us", num(l.p99_ns as f64 / 1e3)),
                     ("queue_wait_p50_us", num(qw.p50_ns as f64 / 1e3)),
                     ("queue_wait_p99_us", num(qw.p99_ns as f64 / 1e3)),
+                    ("lanes", Json::Arr(lanes)),
                 ]),
             ),
         ])
@@ -755,6 +772,16 @@ mod tests {
         assert!(!conn.handle_line(r#"{"op":"quit"}"#), "quit closes");
         let ls = lines(&writer);
         assert!(ls[0].contains("\"queue_depth\""), "{}", ls[0]);
+        // a single coordinator reports itself as one healthy lane
+        let v = Json::parse(&ls[0]).unwrap();
+        let lanes = v
+            .get("stats")
+            .and_then(|s| s.get("lanes"))
+            .and_then(Json::as_arr)
+            .expect("stats carry per-lane health");
+        assert_eq!(lanes.len(), 1, "{}", ls[0]);
+        assert_eq!(lanes[0].get("alive").and_then(Json::as_bool), Some(true));
+        assert_eq!(lanes[0].get("n_mux").and_then(Json::as_usize), Some(2));
     }
 
     #[test]

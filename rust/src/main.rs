@@ -157,14 +157,27 @@ fn main() -> Result<()> {
                 }
             };
 
-            let server = builder.serve(engine)?;
+            let server = builder.serve(engine.clone())?;
             println!(
                 "serving on {} — v1: CLS/TOK/STATS/QUIT, v2: line JSON \
                  (classify/tag/batch/stats, pipelined)",
                 server.local_addr
             );
+            // watch lane health: a dead lane stops pulling from the
+            // shared queue and is reported once, loudly; the process
+            // keeps serving on whatever lanes survive
+            let mut dead_seen: std::collections::HashSet<usize> = Default::default();
             loop {
-                std::thread::sleep(std::time::Duration::from_secs(60));
+                std::thread::sleep(std::time::Duration::from_secs(5));
+                for lane in engine.lane_status() {
+                    if !lane.alive && dead_seen.insert(lane.n_mux) {
+                        eprintln!(
+                            "WARNING: lane N={} died after {} pulls; {} request(s) \
+                             re-queued to surviving lanes",
+                            lane.n_mux, lane.pulls, lane.requeued
+                        );
+                    }
+                }
             }
         }
         other => {

@@ -191,6 +191,9 @@ pub struct Counters {
     /// batcher intake drains (lock round-trips); requests/wave =
     /// submitted / intake_waves is the hot-path amortization factor
     pub intake_waves: AtomicU64,
+    /// exec batches formed by the batcher — for a router lane this is
+    /// the number of waves it *pulled* from the shared admission queue
+    pub batches_formed: AtomicU64,
     /// times the ids scratch buffer had to grow mid-serving; 0 after
     /// warmup is the allocation-free steady-state invariant
     pub scratch_reallocs: AtomicU64,
@@ -206,6 +209,7 @@ impl Counters {
             groups_executed: self.groups_executed.load(Ordering::Relaxed),
             slots_padded: self.slots_padded.load(Ordering::Relaxed),
             intake_waves: self.intake_waves.load(Ordering::Relaxed),
+            batches_formed: self.batches_formed.load(Ordering::Relaxed),
             scratch_reallocs: self.scratch_reallocs.load(Ordering::Relaxed),
         }
     }
@@ -220,6 +224,7 @@ pub struct CounterSnapshot {
     pub groups_executed: u64,
     pub slots_padded: u64,
     pub intake_waves: u64,
+    pub batches_formed: u64,
     pub scratch_reallocs: u64,
 }
 
@@ -234,6 +239,7 @@ impl CounterSnapshot {
             groups_executed: self.groups_executed + o.groups_executed,
             slots_padded: self.slots_padded + o.slots_padded,
             intake_waves: self.intake_waves + o.intake_waves,
+            batches_formed: self.batches_formed + o.batches_formed,
             scratch_reallocs: self.scratch_reallocs + o.scratch_reallocs,
         }
     }

@@ -20,10 +20,13 @@ struct ChanInner<T> {
     not_full: Condvar,
     cap: usize,
     /// Mirror of `buf.len()`, maintained under the lock but readable
-    /// without it. `len()` is called on every router arrival (queue
-    /// depth sums across all lanes) and by server STATS; reading an
-    /// atomic keeps those observers off the hot path's mutex.
+    /// without it. `len()` is called on every router pull-gate check
+    /// (shared-queue depth) and by server STATS; reading an atomic
+    /// keeps those observers off the hot path's mutex.
     depth: AtomicUsize,
+    /// Mirror of `ChanState::closed`, readable without the lock — the
+    /// router's pull batchers check for drain mode every poll tick.
+    closed: AtomicBool,
 }
 
 struct ChanState<T> {
@@ -74,6 +77,7 @@ impl<T> Channel<T> {
                 not_full: Condvar::new(),
                 cap,
                 depth: AtomicUsize::new(0),
+                closed: AtomicBool::new(false),
             }),
         }
     }
@@ -239,14 +243,18 @@ impl<T> Channel<T> {
         self.len() == 0
     }
 
+    /// Lock-free: reads the atomic mirror (pollers never contend with
+    /// senders/receivers). Send/recv paths still read the authoritative
+    /// flag under the lock.
     pub fn is_closed(&self) -> bool {
-        self.inner.q.lock().unwrap().closed
+        self.inner.closed.load(Ordering::Acquire)
     }
 
     /// Close: senders fail, receivers drain then get None.
     pub fn close(&self) {
         let mut st = self.inner.q.lock().unwrap();
         st.closed = true;
+        self.inner.closed.store(true, Ordering::Release);
         self.inner.not_empty.notify_all();
         self.inner.not_full.notify_all();
     }

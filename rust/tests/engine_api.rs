@@ -1,8 +1,9 @@
 //! Engine API integration tests over the deterministic `FakeBackend` —
 //! no AOT artifacts, no PJRT. Cover the unified `Submit` trait, typed
-//! submit errors, deadline handling, worker-death recovery, the adaptive
-//! router, and the TCP server (wire protocol v1 + v2, pipelined) with a
-//! `MuxRouter` behind it.
+//! submit errors, deadline handling, worker-death recovery, the
+//! shared-queue work-stealing router (lane death, pull-gate dispatch,
+//! no-reject-while-capacity), and the TCP server (wire protocol v1 +
+//! v2, pipelined) with a `MuxRouter` behind it.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -244,6 +245,156 @@ fn router_serves_bursts_and_aggregates_stats() {
     assert_eq!(c.completed, 64);
     assert!(router.latency().count >= 64);
     assert_eq!(router.queue_depth(), 0);
+}
+
+/// Regression: the per-arrival router herded traffic onto a dead lane
+/// forever (it kept answering `Shutdown` while a healthy sibling sat
+/// idle). With shared-queue work-stealing dispatch, killing one lane's
+/// backend mid-burst must lose nothing: the dead lane's unexecuted
+/// waves return to the shared queue, the survivor completes them, and
+/// `Shutdown` never appears while a lane is alive.
+#[test]
+fn router_lane_death_mid_burst_steals_work_to_survivor() {
+    let backends: Vec<Arc<dyn InferenceBackend>> = vec![
+        // healthy small lane: 2 requests per 5ms execution
+        Arc::new(
+            FakeBackend::new("cls", 2, 1, SEQ_LEN, N_CLASSES)
+                .with_delay(Duration::from_millis(5)),
+        ),
+        // large lane dies on its first execution
+        Arc::new(FakeBackend::new("cls", 8, 1, SEQ_LEN, N_CLASSES).failing_after(0)),
+    ];
+    let router = Arc::new(
+        EngineBuilder::new()
+            .max_wait_ms(1)
+            .queue_cap(512)
+            .exec_time_us(5_000.0)
+            .build_router_backends(backends)
+            .unwrap(),
+    );
+    let n = 160;
+    let mut handles = Vec::new();
+    for i in 0..n {
+        let (row, expected) = framed_row(i as i32 % 30);
+        handles.push((expected, router.submit_framed(row).unwrap()));
+    }
+    let (mut ok, mut failed) = (0usize, 0usize);
+    for (expected, h) in handles {
+        match h.wait_timeout(Duration::from_secs(60)).expect("no request may be stranded") {
+            Ok(r) => {
+                assert_eq!(r.pred_class(), expected, "stolen work still demuxes correctly");
+                ok += 1;
+            }
+            Err(EngineError::WorkerFailed(_)) => failed += 1,
+            Err(e) => panic!("got {e:?} — Shutdown is only legal once ALL lanes are dead"),
+        }
+    }
+    assert_eq!(ok + failed, n, "every request answered");
+    assert!(
+        failed <= 8,
+        "only the one failed execution may fail its batch, got {failed}"
+    );
+    // lane health is visible and correct: N=8 dead, N=2 still serving.
+    // (the dead flag is set by the worker thread just after it answers
+    // the failed batch, so give it a moment to land)
+    let t0 = Instant::now();
+    while router.live_lanes() > 1 && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let status = router.lane_status();
+    let dead = status.iter().find(|l| l.n_mux == 8).expect("N=8 lane listed");
+    let alive = status.iter().find(|l| l.n_mux == 2).expect("N=2 lane listed");
+    assert!(!dead.alive, "failed lane must be marked dead: {status:?}");
+    assert!(alive.alive, "healthy lane must stay alive: {status:?}");
+    assert_eq!(router.live_lanes(), 1);
+    // the dead lane is never routed to again: new submissions keep working
+    let (row, expected) = framed_row(3);
+    let h = router.submit_framed(row).unwrap();
+    assert_eq!(h.wait().expect("survivor serves new traffic").pred_class(), expected);
+}
+
+/// Pins the shared-queue admission invariant: a burst up to the
+/// router's `queue_cap` is never rejected, regardless of which lanes
+/// are busy — `try_submit` only answers `QueueFull` when the *router*
+/// is full. (The per-arrival design fragmented capacity per lane and
+/// could herd a burst onto one full lane while a sibling idled; the
+/// *sustained-load* form of that regression — no rejects at offered
+/// loads below aggregate lane capacity — is gated by
+/// `benches/router_scaling.rs`, where the old herding design fails.)
+#[test]
+fn try_submit_never_rejects_while_any_lane_has_capacity() {
+    let backends: Vec<Arc<dyn InferenceBackend>> = vec![
+        Arc::new(
+            FakeBackend::new("cls", 2, 1, SEQ_LEN, N_CLASSES)
+                .with_delay(Duration::from_millis(20)),
+        ),
+        Arc::new(
+            FakeBackend::new("cls", 20, 1, SEQ_LEN, N_CLASSES)
+                .with_delay(Duration::from_millis(20)),
+        ),
+    ];
+    let router = Arc::new(
+        EngineBuilder::new()
+            .max_wait_ms(1)
+            .queue_cap(64)
+            .build_router_backends(backends)
+            .unwrap(),
+    );
+    let mut handles = Vec::new();
+    for i in 0..60 {
+        let (row, expected) = framed_row(i % 25);
+        let h = router
+            .try_submit_framed(row)
+            .expect("a 60-deep burst must never be rejected by a 64-deep shared queue");
+        handles.push((expected, h));
+    }
+    for (expected, h) in handles {
+        let r = h.wait_timeout(Duration::from_secs(30)).expect("fulfilled").expect("ok");
+        assert_eq!(r.pred_class(), expected);
+    }
+    assert_eq!(router.counters().rejected, 0, "zero rejects with spare capacity");
+}
+
+/// `Shutdown` is the router's answer only once every lane is dead; by
+/// then every accepted request has been answered (never stranded).
+#[test]
+fn router_reports_shutdown_only_when_all_lanes_are_dead() {
+    let backends: Vec<Arc<dyn InferenceBackend>> = vec![
+        Arc::new(FakeBackend::new("cls", 2, 1, SEQ_LEN, N_CLASSES).failing_after(0)),
+        Arc::new(FakeBackend::new("cls", 8, 1, SEQ_LEN, N_CLASSES).failing_after(0)),
+    ];
+    let router = Arc::new(
+        EngineBuilder::new()
+            .max_wait_ms(0)
+            .queue_cap(256)
+            .build_router_backends(backends)
+            .unwrap(),
+    );
+    let mut accepted = Vec::new();
+    let mut saw_shutdown = false;
+    let t0 = Instant::now();
+    while t0.elapsed() < Duration::from_secs(10) {
+        let (row, _) = framed_row(1);
+        match router.submit_framed(row) {
+            Ok(h) => accepted.push(h),
+            Err(SubmitError::Shutdown) => {
+                saw_shutdown = true;
+                break;
+            }
+            Err(e) => panic!("unexpected submit error: {e:?}"),
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(saw_shutdown, "with every lane dead the router must answer Shutdown");
+    assert_eq!(router.live_lanes(), 0);
+    assert!(router.lane_status().iter().all(|l| !l.alive), "{:?}", router.lane_status());
+    assert!(!accepted.is_empty());
+    for h in accepted {
+        match h.wait_timeout(Duration::from_secs(5)).expect("no caller may hang") {
+            Err(EngineError::WorkerFailed(_)) | Err(EngineError::Shutdown) => {}
+            other => panic!("expected a failure outcome, got {other:?}"),
+        }
+    }
 }
 
 #[test]
