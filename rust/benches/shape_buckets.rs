@@ -1,0 +1,247 @@
+//! Shape-bucket bench: throughput vs request-length distribution, real
+//! T-MUX math (`NativeBackend`), zero artifacts.
+//!
+//! Two engines over the **same weights** run in the same process:
+//!
+//! * **bucketed** — sequence-length buckets `{SHORT, MID, MAX}`; a
+//!   request only pays attention/GEMM for its own bucket's shape;
+//! * **pad-to-max** — the live baseline: the identical engine with the
+//!   single terminal bucket, i.e. exactly the pre-bucketing behavior,
+//!   measured in the same run on the same machine (never a stale
+//!   constant).
+//!
+//! Both are driven with the same unpadded rows across three length
+//! distributions (uniform-short, bimodal, all-max). Attention is
+//! O(input_len²), so short requests in a pad-to-max engine pay a
+//! quadratic tax — the uniform-short sweep is where bucketing must win.
+//!
+//! Gates (enforced wherever the bench runs, CI included):
+//!
+//! 1. **uniform-short ≥ 2x** — bucketed throughput at least doubles the
+//!    live pad-to-max baseline on the short-request distribution.
+//! 2. **scratch_reallocs == 0** on every engine in steady state (the
+//!    per-bucket worker scratches are pre-sized).
+//! 3. **arena_reallocs flat** after per-bucket warmup on the measured
+//!    passes (the native workspace pool is keyed on the bucket).
+//!
+//! Results are printed as a table and written to `BENCH_shapes.json` at
+//! the repo root (uploaded as a CI artifact next to the other benches).
+//!
+//!   cargo bench --bench shape_buckets            # full
+//!   cargo bench --bench shape_buckets -- --quick # CI-sized
+
+use std::sync::Arc;
+
+use datamux::runtime::NativeBackend;
+use datamux::util::bench::Table;
+use datamux::util::json::{arr, num, obj, s, Json};
+use datamux::util::rng::Rng;
+use datamux::workload::batch_pass;
+use datamux::{EngineBuilder, MuxCoordinator, Submit};
+
+const N_MUX: usize = 4;
+const BATCH: usize = 2;
+const SEQ_MAX: usize = 96;
+const BUCKETS: [usize; 2] = [24, 48]; // + SEQ_MAX terminal
+const D_MODEL: usize = 32;
+const N_LAYERS: usize = 1;
+const N_HEADS: usize = 4;
+const N_CLASSES: usize = 3;
+const SEED: u64 = 424242;
+
+/// One framed unpadded row of `content_len` total tokens.
+fn row(rng: &mut Rng, content_len: usize) -> Vec<i32> {
+    assert!((2..=SEQ_MAX).contains(&content_len));
+    let mut r = Vec::with_capacity(content_len);
+    r.push(1); // [CLS]
+    for _ in 0..content_len - 2 {
+        r.push(44 + rng.below(200) as i32);
+    }
+    r.push(2); // [SEP]
+    r
+}
+
+/// A request-length distribution: framed row lengths for one sweep.
+struct Dist {
+    name: &'static str,
+    lens: fn(&mut Rng) -> usize,
+}
+
+const DISTS: [Dist; 3] = [
+    // everything fits the smallest bucket: the quadratic-win case
+    Dist { name: "uniform_short", lens: |r| 4 + r.below(17) }, // 4..=20
+    // half short, half near-max: realistic mixed traffic
+    Dist {
+        name: "bimodal",
+        lens: |r| if r.below(2) == 0 { 4 + r.below(17) } else { 80 + r.below(15) },
+    },
+    // worst case for bucketing: everything lands in the terminal bucket
+    Dist { name: "all_max", lens: |r| 88 + r.below(7) }, // 88..=94
+];
+
+fn backend() -> anyhow::Result<NativeBackend> {
+    NativeBackend::random(
+        "cls", N_MUX, BATCH, SEQ_MAX, D_MODEL, N_LAYERS, N_HEADS, N_CLASSES, SEED,
+    )
+}
+
+fn engine(
+    buckets: Vec<usize>,
+    queue_cap: usize,
+) -> anyhow::Result<(Arc<MuxCoordinator>, Arc<NativeBackend>)> {
+    let be = Arc::new(backend()?);
+    let coord = Arc::new(
+        EngineBuilder::new()
+            .max_wait_ms(1)
+            .queue_cap(queue_cap)
+            .buckets(buckets)
+            .build_backend(be.clone())?,
+    );
+    Ok((coord, be))
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let requests: usize = if quick { 64 } else { 512 };
+
+    // warmup rows touch every bucket so the measured pass materializes
+    // no new arenas (the steady-state gate)
+    let warmup_rows: Vec<Vec<i32>> = {
+        let mut rng = Rng::new(SEED ^ 1);
+        [4usize, 8, 30, 40, 90, 94].iter().map(|&l| row(&mut rng, l)).collect()
+    };
+
+    let mut table = Table::new(
+        "shape buckets: throughput vs request-length distribution (native math)",
+        &[
+            "distribution",
+            "bucketed r/s",
+            "pad-to-max r/s",
+            "speedup",
+            "bucketed pad-toks",
+            "pad-to-max pad-toks",
+        ],
+    );
+    let mut sweep = Vec::new();
+    let mut short_speedup = 0.0f64;
+    let mut total_scratch = 0u64;
+    let mut total_arena_growth = 0u64;
+
+    for dist in &DISTS {
+        // fresh engines per distribution so counters and queues are clean;
+        // identical weights via the shared seed
+        let (bucketed, be_b) = engine(BUCKETS.to_vec(), requests + 16)?;
+        let (padmax, be_p) = engine(Vec::new(), requests + 16)?;
+        let mut rng = Rng::new(SEED ^ 0xd15b);
+        let rows: Vec<Vec<i32>> =
+            (0..requests).map(|_| row(&mut rng, (dist.lens)(&mut rng))).collect();
+
+        let mut results = Vec::new();
+        for (eng, be) in [(&bucketed, &be_b), (&padmax, &be_p)] {
+            let w = batch_pass(eng, &warmup_rows, warmup_rows.len());
+            anyhow::ensure!(w.completed == warmup_rows.len(), "warmup lost requests");
+            // measure the timed pass only: counters are deltas past the
+            // warmup, so the reported padding waste (and the realloc
+            // gates) reflect the distribution, not the warmup waves
+            let arena_before = be.arena_reallocs();
+            let before = eng.counters();
+            let report = batch_pass(eng, &rows, requests);
+            anyhow::ensure!(
+                report.completed == requests,
+                "{}: lost requests: {} of {requests}",
+                dist.name,
+                report.completed
+            );
+            let arena_growth = be.arena_reallocs() - arena_before;
+            let c = eng.counters();
+            total_scratch += c.scratch_reallocs - before.scratch_reallocs;
+            total_arena_growth += arena_growth;
+            results.push((
+                report.throughput_rps,
+                c.tokens_padded - before.tokens_padded,
+                arena_growth,
+            ));
+        }
+        let (b_rps, b_pad, _) = results[0];
+        let (p_rps, p_pad, _) = results[1];
+        let speedup = b_rps / p_rps;
+        if dist.name == "uniform_short" {
+            short_speedup = speedup;
+        }
+        table.row(&[
+            dist.name.to_string(),
+            format!("{b_rps:.0}"),
+            format!("{p_rps:.0}"),
+            format!("{speedup:.2}x"),
+            format!("{b_pad}"),
+            format!("{p_pad}"),
+        ]);
+        sweep.push(obj(vec![
+            ("distribution", s(dist.name)),
+            ("requests", num(requests as f64)),
+            ("bucketed_rps", num(b_rps)),
+            ("padmax_rps", num(p_rps)),
+            ("speedup_vs_padmax", num(speedup)),
+            ("bucketed_tokens_padded", num(b_pad as f64)),
+            ("padmax_tokens_padded", num(p_pad as f64)),
+        ]));
+    }
+    table.print();
+
+    let result = obj(vec![
+        ("schema", s("shape_buckets/v1")),
+        ("quick", Json::Bool(quick)),
+        (
+            "config",
+            obj(vec![
+                ("n_mux", num(N_MUX as f64)),
+                ("batch", num(BATCH as f64)),
+                ("seq_len_max", num(SEQ_MAX as f64)),
+                ("buckets", arr(BUCKETS.iter().map(|&b| num(b as f64)))),
+                ("d_model", num(D_MODEL as f64)),
+                ("n_layers", num(N_LAYERS as f64)),
+                ("n_heads", num(N_HEADS as f64)),
+                ("requests", num(requests as f64)),
+            ]),
+        ),
+        ("sweep", arr(sweep)),
+        ("uniform_short_speedup", num(short_speedup)),
+        ("steady_state_scratch_reallocs", num(total_scratch as f64)),
+        ("steady_state_arena_reallocs", num(total_arena_growth as f64)),
+    ]);
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate sits one level below the repo root");
+    let path = root.join("BENCH_shapes.json");
+    std::fs::write(&path, result.to_pretty())?;
+
+    // self-check: the file must exist, parse, and carry the sweep —
+    // CI fails the job otherwise
+    let written = std::fs::read_to_string(&path)?;
+    let parsed = Json::parse(&written).map_err(|e| anyhow::anyhow!("reparse: {e}"))?;
+    anyhow::ensure!(
+        parsed.get("sweep").and_then(Json::as_arr).map_or(0, |a| a.len()) == DISTS.len()
+            && parsed.get("uniform_short_speedup").and_then(Json::as_f64).is_some(),
+        "BENCH_shapes.json is missing results"
+    );
+    println!(
+        "\nwrote {} (uniform-short speedup vs live pad-to-max baseline: {short_speedup:.2}x)",
+        path.display()
+    );
+    // acceptance gates
+    anyhow::ensure!(
+        short_speedup >= 2.0,
+        "bucketing regression: uniform-short throughput is only {short_speedup:.2}x the live \
+         pad-to-max baseline (gate: >= 2x)"
+    );
+    anyhow::ensure!(
+        total_scratch == 0,
+        "worker scratch grew mid-serving ({total_scratch} reallocs; must be 0 per bucket)"
+    );
+    anyhow::ensure!(
+        total_arena_growth == 0,
+        "native arenas materialized {total_arena_growth} new workspaces after warmup \
+         (must be 0 per bucket)"
+    );
+    Ok(())
+}

@@ -45,11 +45,13 @@ impl TaskKind {
 /// Request payload: already-framed token ids, or raw token text.
 #[derive(Debug, Clone)]
 pub enum Payload {
-    /// One framed content row (`[CLS] .. [SEP] .. [PAD]`), exactly
-    /// `seq_len` ids.
+    /// One framed content row (`[CLS] .. [SEP] ..`), `1..=seq_len` ids.
+    /// Padding is **not** required (nor useful): the engine assigns the
+    /// row to its sequence-length bucket and pads to the bucket at
+    /// batch assembly. Max-length pre-padded rows still work.
     Framed(Vec<i32>),
     /// Token text; sentence pairs are ` [SEP] `-joined. Tokenized and
-    /// framed by the engine.
+    /// framed (unpadded) by the engine.
     Text(String),
 }
 
@@ -107,8 +109,11 @@ impl InferenceRequest {
 pub enum SubmitError {
     /// admission queue is full (non-blocking submit only)
     QueueFull,
-    /// framed payload length does not match the model's seq_len
+    /// framed payload is empty (a row needs at least its `[CLS]`)
     BadFrame { expected: usize, got: usize },
+    /// content exceeds the model's maximum sequence length — returned
+    /// instead of silently truncating the tail of the sentence
+    TooLong { got: usize, max: usize },
     /// text payload failed to tokenize
     Tokenize(String),
     /// request task kind does not match what the model serves
@@ -123,6 +128,7 @@ impl SubmitError {
         match self {
             SubmitError::QueueFull => "queue_full",
             SubmitError::BadFrame { .. } => "bad_frame",
+            SubmitError::TooLong { .. } => "too_long",
             SubmitError::Tokenize(_) => "tokenize",
             SubmitError::WrongTask { .. } => "wrong_task",
             SubmitError::Shutdown => "shutdown",
@@ -135,7 +141,10 @@ impl std::fmt::Display for SubmitError {
         match self {
             SubmitError::QueueFull => write!(f, "admission queue is full"),
             SubmitError::BadFrame { expected, got } => {
-                write!(f, "content must be framed to seq_len={expected} (got {got})")
+                write!(f, "content must be 1..={expected} framed ids (got {got})")
+            }
+            SubmitError::TooLong { got, max } => {
+                write!(f, "content is {got} tokens, model max is {max}")
             }
             SubmitError::Tokenize(msg) => write!(f, "tokenize: {msg}"),
             SubmitError::WrongTask { requested, served } => write!(
@@ -150,6 +159,17 @@ impl std::fmt::Display for SubmitError {
 }
 
 impl std::error::Error for SubmitError {}
+
+/// Per-bucket execution counts of one lane: how many waves ran at this
+/// sequence length and how many requests they carried. Padding waste is
+/// the gap between `entries * seq_len` and the actual token counts —
+/// observable before/after bucketing via the `tokens_padded` counter.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BucketStatus {
+    pub seq_len: usize,
+    pub waves: u64,
+    pub entries: u64,
+}
 
 /// Health and progress of one serving lane, as reported by
 /// [`Submit::lane_status`]. A router reports one entry per lane; a
@@ -166,6 +186,8 @@ pub struct LaneStatus {
     pub requeued: u64,
     /// requests this lane answered with a response
     pub completed: u64,
+    /// per-bucket waves/entries, aligned with [`Submit::buckets`]
+    pub buckets: Vec<BucketStatus>,
 }
 
 /// A tagged completion: the request tag plus its outcome. Delivered to a
@@ -207,7 +229,15 @@ pub trait Submit: Send + Sync {
 
     fn tokenizer(&self) -> &Tokenizer;
 
+    /// The model's maximum sequence length (the terminal bucket).
     fn seq_len(&self) -> usize;
+
+    /// The sequence-length buckets this engine executes, ascending; the
+    /// last is always [`Submit::seq_len`]. A pad-to-max engine reports
+    /// the single terminal bucket.
+    fn buckets(&self) -> Vec<usize> {
+        vec![self.seq_len()]
+    }
 
     /// Requests admitted but not yet handed to a worker.
     fn queue_depth(&self) -> usize;
@@ -273,7 +303,8 @@ mod tests {
     fn submit_error_codes_are_distinct() {
         let errs = [
             SubmitError::QueueFull,
-            SubmitError::BadFrame { expected: 16, got: 3 },
+            SubmitError::BadFrame { expected: 16, got: 0 },
+            SubmitError::TooLong { got: 40, max: 16 },
             SubmitError::Tokenize("x".into()),
             SubmitError::WrongTask {
                 requested: TaskKind::TagTokens,

@@ -1,7 +1,7 @@
 //! The mux batcher — the serving realization of the paper's contribution.
 //!
 //! Incoming requests are grouped into *multiplex groups* of `n_mux` slots
-//! and further into a model batch of `batch` groups, i.e. one PJRT
+//! and further into a model batch of `batch` groups, i.e. one model
 //! execution serves up to `batch * n_mux` requests. Group formation is
 //! deadline-driven: the batch ships when full OR when the oldest queued
 //! request has waited `max_wait` — the standard dynamic-batching
@@ -9,23 +9,44 @@
 //! representation of N requests*, which is what multiplies throughput
 //! (paper Fig 4c) instead of memory (Fig 12).
 //!
+//! Shape discipline: admission is a [`BucketQueues`] — one FIFO per
+//! sequence-length bucket — and every formed wave drains a single
+//! bucket, so an [`ExecBatch`] is **shape-homogeneous** by construction
+//! (the scheduler stamps one bucket template per wave and the backend
+//! executes at that runtime length). Batchers pull the *deepest*
+//! non-empty bucket first, with a round-robin probe every
+//! [`ANTI_STARVE_PERIOD`]-th wave so a quiet bucket is never starved by
+//! a saturated sibling; when everything is empty they park on a
+//! rotating bucket's condvar with a bounded tick (backing off while
+//! idle), so a single-bucket engine parks exactly like the old
+//! one-channel design while a multi-bucket engine notices any arrival
+//! within one park tick.
+//!
 //! Invariants (property-tested in tests/):
-//!   * no request is dropped, duplicated, or reordered across groups
-//!   * a batch never carries more than `batch * n_mux` requests
+//!   * no request is dropped, duplicated, or reordered within its bucket
+//!   * a batch never carries more than `batch * n_mux` requests, and
+//!     never mixes buckets
 //!   * no request waits longer than `max_wait` before its batch ships
-//!     (modulo executor time)
+//!     once its bucket has been picked, and a non-empty bucket is
+//!     picked within [`ANTI_STARVE_PERIOD`] waves (modulo executor
+//!     time)
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
+use super::buckets::BucketQueues;
 use super::dispatch::LaneControl;
 use super::request::{EngineError, Request};
 use crate::util::metrics::Counters;
-use crate::util::threadpool::{Channel, TrySendError};
+use crate::util::threadpool::TrySendError;
 
-/// One model execution's worth of requests (up to batch * n_mux).
+/// One model execution's worth of requests (up to batch * n_mux), all
+/// from one sequence-length bucket.
 pub struct ExecBatch {
     pub seq: u64,
+    /// index into the engine's bucket registry — selects the worker's
+    /// template and scratch for this wave
+    pub bucket: usize,
     pub entries: Vec<Request>,
     pub formed_at: Instant,
 }
@@ -43,35 +64,109 @@ impl BatcherConfig {
     }
 }
 
-/// Pull requests from `input`, form deadline-bounded ExecBatches, push to
-/// `output`. Runs until `input` is closed and drained; then closes
-/// `output`. Returns the number of batches formed.
+/// Every this-many formed waves, the bucket choice is a round-robin
+/// probe instead of deepest-first — the anti-starvation valve: under
+/// sustained saturation of one bucket, a lone request in a quiet
+/// bucket is still served within a few wave times instead of losing
+/// the deepest() race forever.
+const ANTI_STARVE_PERIOD: u64 = 4;
+
+/// Pick the bucket to serve next, parking when everything is empty.
 ///
-/// Intake is wave-based: each [`Channel::recv_up_to`] drain grabs the
-/// whole queued backlog (capped at batch capacity) with one lock
-/// acquisition, so under load a full batch costs O(1) mutex round-trips
-/// instead of one per request. FIFO order, the no-loss invariant, and
-/// the `max_wait` deadline are unchanged. When `counters` is given,
-/// drains are tallied into `intake_waves` (requests-per-wave is the
+/// `round` is the number of waves formed so far: most rounds pick the
+/// deepest non-empty bucket, every [`ANTI_STARVE_PERIOD`]-th round
+/// probes the buckets round-robin (see the constant).
+///
+/// Returns the chosen bucket (the park may already have pulled a first
+/// wave into `entries`), or `None` when the queues are closed and
+/// drained (shutdown) or the park tick expired empty (caller re-loops
+/// to re-check health/gates, backing its tick off). The park is on a
+/// rotating bucket's condvar so any single arrival wakes a sleeping
+/// batcher within one tick — and immediately in the single-bucket
+/// case, where the rotation always parks on the only (and therefore
+/// correct) queue, with no deadline at all.
+fn pick_bucket(
+    input: &BucketQueues,
+    entries: &mut Vec<Request>,
+    capacity: usize,
+    park_seq: &mut usize,
+    tick: Duration,
+    round: u64,
+) -> Option<usize> {
+    let choice = if round % ANTI_STARVE_PERIOD == ANTI_STARVE_PERIOD - 1 {
+        input.nonempty_from((round / ANTI_STARVE_PERIOD) as usize % input.count())
+    } else {
+        input.deepest()
+    };
+    if let Some(b) = choice {
+        return Some(b);
+    }
+    if input.is_closed() {
+        return None;
+    }
+    let b = *park_seq % input.count();
+    *park_seq += 1;
+    // single bucket: an unbounded park is safe (close wakes the condvar)
+    // and costs zero idle CPU, exactly the pre-bucket batcher behavior
+    let deadline = if input.count() == 1 { None } else { Some(Instant::now() + tick) };
+    if input.recv_wave(b, entries, capacity, deadline) > 0 {
+        Some(b)
+    } else {
+        None
+    }
+}
+
+/// Pull requests from `input`, form deadline-bounded shape-homogeneous
+/// ExecBatches, push to `output`. Runs until `input` is closed and
+/// drained; then closes `output`. Returns the number of batches formed.
+///
+/// Intake is wave-based: each drain grabs the chosen bucket's whole
+/// backlog (capped at batch capacity) with one lock acquisition, so
+/// under load a full batch costs O(1) mutex round-trips instead of one
+/// per request. FIFO order per bucket, the no-loss invariant, and the
+/// `max_wait` deadline are unchanged. When `counters` is given, drains
+/// are tallied into `intake_waves` (requests-per-wave is the
 /// amortization factor benches watch).
 pub fn run_batcher(
     cfg: &BatcherConfig,
-    input: &Channel<Request>,
-    output: &Channel<ExecBatch>,
+    input: &BucketQueues,
+    output: &crate::util::threadpool::Channel<ExecBatch>,
     counters: Option<&Counters>,
 ) -> u64 {
     let capacity = cfg.capacity();
+    let poll = Duration::from_millis(1);
+    let max_idle = poll * 20;
+    let mut idle = poll;
+    let mut park_seq = 0usize;
     let mut seq = 0u64;
+    let mut entries: Vec<Request> = Vec::with_capacity(capacity);
     loop {
-        let mut entries: Vec<Request> = Vec::with_capacity(capacity);
-        // block for the first wave of the next batch
-        let mut waves = 1u64;
-        if input.recv_up_to(&mut entries, capacity, None) == 0 {
-            break; // closed + drained
+        let bucket = match pick_bucket(input, &mut entries, capacity, &mut park_seq, idle, seq) {
+            Some(b) => {
+                idle = poll;
+                b
+            }
+            None => {
+                if input.is_closed() && input.is_empty() {
+                    break; // closed + drained
+                }
+                // empty park tick: back off so an idle multi-bucket
+                // batcher costs ~no CPU, then re-check
+                idle = (idle * 2).min(max_idle);
+                continue;
+            }
+        };
+        // first wave of this batch (unless the park already pulled one)
+        if entries.is_empty()
+            && input.recv_wave(bucket, &mut entries, capacity, Some(Instant::now() + poll)) == 0
+        {
+            continue; // raced with close/another consumer
         }
+        let mut waves = 1u64;
         let deadline = Instant::now() + cfg.max_wait;
         while entries.len() < capacity {
-            if input.recv_up_to(&mut entries, capacity - entries.len(), Some(deadline)) == 0 {
+            if input.recv_wave(bucket, &mut entries, capacity - entries.len(), Some(deadline)) == 0
+            {
                 break; // deadline passed, or closed + drained
             }
             waves += 1;
@@ -81,7 +176,12 @@ pub fn run_batcher(
             c.intake_waves.fetch_add(waves, Ordering::Relaxed);
             c.batches_formed.fetch_add(1, Ordering::Relaxed);
         }
-        let batch = ExecBatch { seq, entries, formed_at: Instant::now() };
+        let batch = ExecBatch {
+            seq,
+            bucket,
+            entries: std::mem::replace(&mut entries, Vec::with_capacity(capacity)),
+            formed_at: Instant::now(),
+        };
         if output.send(batch).is_err() {
             break;
         }
@@ -90,35 +190,33 @@ pub fn run_batcher(
     seq
 }
 
-/// Pull-gated batcher over a **shared** admission queue (the router's
-/// work-stealing dispatch). Unlike [`run_batcher`], the input channel is
-/// not owned by this lane: every lane of a router pulls waves from the
-/// same queue, each sized to its own `batch * n_mux` capacity, and the
-/// `gate` closure (the router's [`AdaptiveN`](super::AdaptiveN)
-/// pull-gate) decides per wakeup whether the current backlog/rate
-/// justifies this lane's N. A closed shared queue bypasses the gate
-/// (drain mode), so the admitted backlog always completes on shutdown.
+/// Pull-gated batcher over a **shared** admission queue set (the
+/// router's work-stealing dispatch). Unlike [`run_batcher`], the bucket
+/// queues are not owned by this lane: every lane of a router pulls
+/// waves from the same [`BucketQueues`], each sized to its own
+/// `batch * n_mux` capacity, and the `gate` closure (the router's
+/// [`AdaptiveN`](super::AdaptiveN) pull-gate) decides per wakeup
+/// whether the current backlog/rate justifies this lane's N. Each pull
+/// drains the deepest non-empty bucket, so stolen waves stay
+/// shape-homogeneous. A closed shared queue bypasses the gate (drain
+/// mode), so the admitted backlog always completes on shutdown.
 ///
 /// Lane health: when `lane.dead` is set (this lane's worker failed) the
 /// batcher stops pulling immediately. A wave it already holds when the
-/// exec channel closes under it is handed back to the shared queue via
-/// [`requeue_entries`] — re-queued for a sibling lane, or failed loudly;
-/// never silently dropped. Returns the number of batches formed and
-/// closes `output` on exit.
+/// exec channel closes under it is handed back to the shared queues via
+/// [`requeue_entries`] — re-queued (by bucket) for a sibling lane, or
+/// failed loudly; never silently dropped. Returns the number of batches
+/// formed and closes `output` on exit.
 ///
 /// `poll` is the *initial* tick: while a lane finds nothing to do
-/// (gated off, or gate open but the queue stays empty), consecutive
+/// (gated off, or gate open but the queues stay empty), consecutive
 /// idle ticks back off exponentially up to `20 * poll`, so an idle
 /// router costs almost no CPU; the backoff resets the moment a wave is
-/// pulled. A lane that passes the gate parks *inside* `recv_up_to` on
-/// the queue's condvar, so arrival latency is unaffected by backoff —
-/// only how fast a gated-off lane notices it is newly justified (and
-/// how fast shutdown/death is noticed) is bounded by the backed-off
-/// tick.
+/// pulled.
 pub fn run_pull_batcher(
     cfg: &BatcherConfig,
-    shared: &Channel<Request>,
-    output: &Channel<ExecBatch>,
+    shared: &BucketQueues,
+    output: &crate::util::threadpool::Channel<ExecBatch>,
     lane: &LaneControl,
     gate: &dyn Fn() -> bool,
     poll: Duration,
@@ -127,6 +225,7 @@ pub fn run_pull_batcher(
     let capacity = cfg.capacity();
     let max_idle = poll * 20;
     let mut idle = poll;
+    let mut park_seq = 0usize;
     let mut seq = 0u64;
     // reused across poll ticks; a replacement is only allocated when a
     // formed wave is actually handed off, so idle ticks allocate nothing
@@ -143,11 +242,40 @@ pub fn run_pull_batcher(
             idle = (idle * 2).min(max_idle);
             continue;
         }
-        // bounded block: wake at most one tick later to re-check
-        // gate/health (arrivals wake the condvar immediately)
-        if shared.recv_up_to(&mut entries, capacity, Some(Instant::now() + idle)) == 0 {
+        // pick the deepest bucket (with the round-robin anti-starvation
+        // probe, like run_batcher); when all are empty, park bounded on
+        // a rotating bucket so arrivals (and close) wake us promptly.
+        // Multi-bucket parks are capped well below the backed-off idle
+        // tick: an arrival in a bucket we are NOT parked on cannot wake
+        // the condvar, so the cap — not the backoff — bounds its wait.
+        let park_cap = if shared.count() == 1 { idle } else { idle.min(Duration::from_millis(2)) };
+        let choice = if seq % ANTI_STARVE_PERIOD == ANTI_STARVE_PERIOD - 1 {
+            shared.nonempty_from((seq / ANTI_STARVE_PERIOD) as usize % shared.count())
+        } else {
+            shared.deepest()
+        };
+        let bucket = match choice {
+            Some(b) => b,
+            None => {
+                if draining {
+                    break; // closed + drained: shutdown complete
+                }
+                let b = park_seq % shared.count();
+                park_seq += 1;
+                if shared.recv_wave(b, &mut entries, capacity, Some(Instant::now() + park_cap))
+                    == 0
+                {
+                    idle = (idle * 2).min(max_idle);
+                    continue;
+                }
+                b
+            }
+        };
+        if entries.is_empty()
+            && shared.recv_wave(bucket, &mut entries, capacity, Some(Instant::now() + poll)) == 0
+        {
             if draining && shared.is_empty() {
-                break; // closed + drained: shutdown complete
+                break;
             }
             idle = (idle * 2).min(max_idle);
             continue;
@@ -156,7 +284,9 @@ pub fn run_pull_batcher(
         let mut waves = 1u64;
         let deadline = Instant::now() + cfg.max_wait;
         while entries.len() < capacity {
-            if shared.recv_up_to(&mut entries, capacity - entries.len(), Some(deadline)) == 0 {
+            if shared.recv_wave(bucket, &mut entries, capacity - entries.len(), Some(deadline))
+                == 0
+            {
                 break; // deadline passed, or closed + drained
             }
             waves += 1;
@@ -168,12 +298,13 @@ pub fn run_pull_batcher(
         }
         let mut batch = ExecBatch {
             seq,
+            bucket,
             entries: std::mem::replace(&mut entries, Vec::with_capacity(capacity)),
             formed_at: Instant::now(),
         };
         // hand off to this lane's workers. try_send (not send) so a wave
         // is never lost to a closed channel: on worker death the batch
-        // comes back and is returned to the shared queue.
+        // comes back and is returned to the shared queues.
         loop {
             match output.try_send(batch) {
                 Ok(()) => continue 'pull,
@@ -196,13 +327,13 @@ pub fn run_pull_batcher(
     seq
 }
 
-/// Return pulled-but-unexecuted requests to the shared queue (lane-death
-/// path), preserving their original submit timestamps. Requests that
-/// cannot go back are failed **loudly**: `WorkerFailed` when the queue
-/// is full, `Shutdown` (via the completion drop guard) when it is
-/// closed — never silently lost.
+/// Return pulled-but-unexecuted requests to the shared queues (lane-death
+/// path), each to its own bucket, preserving original submit timestamps.
+/// Requests that cannot go back are failed **loudly**: `WorkerFailed`
+/// when the bucket queue is full, `Shutdown` (via the completion drop
+/// guard) when it is closed — never silently lost.
 pub(crate) fn requeue_entries(
-    shared: &Channel<Request>,
+    shared: &BucketQueues,
     entries: Vec<Request>,
     requeued: &AtomicU64,
 ) {
@@ -230,16 +361,25 @@ pub(crate) fn requeue_entries(
 mod tests {
     use super::*;
     use crate::coordinator::request::Completion;
-    use crate::util::threadpool::OnceCellSync;
+    use crate::util::threadpool::{Channel, OnceCellSync};
 
     fn req(id: u64) -> Request {
+        req_in(id, 0)
+    }
+
+    fn req_in(id: u64, bucket: usize) -> Request {
         Request {
             id,
             content: vec![1, 0, 0, 0],
+            bucket,
             submitted: Instant::now(),
             deadline: None,
             done: Completion::cell(OnceCellSync::new()),
         }
+    }
+
+    fn queues(n_buckets: usize, cap: usize) -> BucketQueues {
+        BucketQueues::new(n_buckets, cap)
     }
 
     fn cfg(n_mux: usize, batch: usize, wait_ms: u64) -> BatcherConfig {
@@ -248,7 +388,7 @@ mod tests {
 
     #[test]
     fn ships_full_batch_immediately() {
-        let input = Channel::bounded(64);
+        let input = queues(1, 64);
         let output = Channel::bounded(64);
         for i in 0..8 {
             input.send(req(i)).unwrap();
@@ -261,13 +401,14 @@ mod tests {
         assert_eq!(counters.intake_waves.load(std::sync::atomic::Ordering::Relaxed), 1);
         let b = output.recv().unwrap();
         assert_eq!(b.entries.len(), 8);
+        assert_eq!(b.bucket, 0);
         let ids: Vec<u64> = b.entries.iter().map(|r| r.id).collect();
         assert_eq!(ids, (0..8).collect::<Vec<_>>(), "arrival order preserved");
     }
 
     #[test]
     fn ships_partial_batch_at_deadline() {
-        let input = Channel::bounded(64);
+        let input = queues(1, 64);
         let output: Channel<ExecBatch> = Channel::bounded(64);
         input.send(req(0)).unwrap();
         input.send(req(1)).unwrap();
@@ -289,7 +430,7 @@ mod tests {
 
     #[test]
     fn splits_across_batches_without_loss() {
-        let input = Channel::bounded(256);
+        let input = queues(1, 256);
         let output = Channel::bounded(256);
         for i in 0..50 {
             input.send(req(i)).unwrap();
@@ -306,16 +447,75 @@ mod tests {
 
     #[test]
     fn closes_output_on_exit() {
-        let input: Channel<Request> = Channel::bounded(4);
+        let input = queues(1, 4);
         let output = Channel::bounded(4);
         input.close();
         run_batcher(&cfg(2, 1, 10), &input, &output, None);
         assert!(output.recv().is_none());
     }
 
+    /// Waves never mix buckets: a mixed backlog ships as one wave per
+    /// shape, deepest bucket first, FIFO within each bucket.
+    #[test]
+    fn waves_are_shape_homogeneous_and_deepest_first() {
+        let input = queues(3, 64);
+        let output = Channel::bounded(64);
+        // bucket 2 is deepest (3 entries), bucket 0 has 2, bucket 1 has 1
+        for (id, b) in [(0u64, 2), (1, 0), (2, 2), (3, 1), (4, 2), (5, 0)] {
+            input.send(req_in(id, b)).unwrap();
+        }
+        input.close();
+        let n = run_batcher(&cfg(4, 2, 5), &input, &output, None);
+        assert_eq!(n, 3, "one wave per bucket");
+        let mut seen: Vec<(usize, Vec<u64>)> = Vec::new();
+        while let Some(b) = output.recv() {
+            assert!(
+                b.entries.iter().all(|r| r.bucket == b.bucket),
+                "wave mixes buckets: {:?}",
+                b.entries.iter().map(|r| r.bucket).collect::<Vec<_>>()
+            );
+            seen.push((b.bucket, b.entries.iter().map(|r| r.id).collect()));
+        }
+        assert_eq!(seen[0], (2, vec![0, 2, 4]), "deepest bucket ships first");
+        // remaining buckets drain too, FIFO within each
+        assert!(seen.contains(&(0, vec![1, 5])));
+        assert!(seen.contains(&(1, vec![3])));
+    }
+
+    /// Anti-starvation: a lone request in a quiet bucket must be served
+    /// within [`ANTI_STARVE_PERIOD`] waves even while a sibling bucket
+    /// holds a deep backlog that wins deepest-first on every other round.
+    #[test]
+    fn starved_bucket_is_served_within_the_anti_starve_period() {
+        let input = queues(2, 64);
+        let output = Channel::bounded(64);
+        input.send(req_in(999, 0)).unwrap(); // the lone quiet-bucket request
+        for i in 0..40 {
+            input.send(req_in(i, 1)).unwrap(); // deep saturated bucket
+        }
+        input.close();
+        let n = run_batcher(&cfg(2, 2, 1), &input, &output, None); // capacity 4
+        assert!(n >= 10, "backlog takes many waves: {n}");
+        let mut pos_of_quiet = None;
+        let mut i = 0usize;
+        while let Some(b) = output.recv() {
+            if b.bucket == 0 {
+                assert_eq!(b.entries.len(), 1);
+                assert_eq!(b.entries[0].id, 999);
+                pos_of_quiet = Some(i);
+            }
+            i += 1;
+        }
+        let pos = pos_of_quiet.expect("quiet bucket served");
+        assert!(
+            pos < ANTI_STARVE_PERIOD as usize,
+            "quiet bucket served at wave {pos}, must beat the anti-starve period"
+        );
+    }
+
     #[test]
     fn pull_batcher_drains_closed_shared_queue_ignoring_gate() {
-        let shared = Channel::bounded(64);
+        let shared = queues(1, 64);
         let output = Channel::bounded(64);
         for i in 0..8 {
             shared.send(req(i)).unwrap();
@@ -341,7 +541,7 @@ mod tests {
 
     #[test]
     fn pull_batcher_waits_for_the_gate_to_open() {
-        let shared = Channel::bounded(64);
+        let shared = std::sync::Arc::new(queues(1, 64));
         let output: Channel<ExecBatch> = Channel::bounded(64);
         shared.send(req(0)).unwrap();
         shared.send(req(1)).unwrap();
@@ -375,11 +575,11 @@ mod tests {
 
     #[test]
     fn pull_batcher_requeues_wave_when_exec_channel_is_closed() {
-        let shared = Channel::bounded(64);
+        let shared = queues(2, 64);
         let output: Channel<ExecBatch> = Channel::bounded(1);
         output.close(); // worker already died
         for i in 0..4 {
-            shared.send(req(i)).unwrap();
+            shared.send(req_in(i, 1)).unwrap();
         }
         let lane = LaneControl::default();
         let n = run_pull_batcher(
@@ -394,15 +594,16 @@ mod tests {
         assert_eq!(n, 1, "the wave was formed before the dead handoff");
         assert_eq!(lane.requeued.load(Ordering::Relaxed), 4, "whole wave handed back");
         assert_eq!(shared.len(), 4, "requests are back in the shared queue");
+        assert_eq!(shared.depth(1), 4, "requeue routes to the right bucket");
         let mut back = Vec::new();
-        shared.try_recv_up_to(&mut back, 8);
+        shared.try_recv_any(&mut back, 8);
         let ids: Vec<u64> = back.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3], "requeue preserves wave order");
     }
 
     #[test]
     fn pull_batcher_stops_immediately_when_marked_dead() {
-        let shared = Channel::bounded(8);
+        let shared = queues(1, 8);
         let output: Channel<ExecBatch> = Channel::bounded(8);
         shared.send(req(0)).unwrap();
         let lane = LaneControl::default();
@@ -424,12 +625,13 @@ mod tests {
     #[test]
     fn requeue_fails_loudly_when_queue_full_or_closed() {
         // full queue -> WorkerFailed
-        let shared: Channel<Request> = Channel::bounded(1);
+        let shared = queues(1, 1);
         shared.send(req(99)).unwrap();
         let cell = OnceCellSync::new();
         let r = Request {
             id: 1,
             content: vec![0; 4],
+            bucket: 0,
             submitted: Instant::now(),
             deadline: None,
             done: Completion::cell(cell.clone()),
@@ -447,6 +649,7 @@ mod tests {
         let r2 = Request {
             id: 2,
             content: vec![0; 4],
+            bucket: 0,
             submitted: Instant::now(),
             deadline: None,
             done: Completion::cell(cell2.clone()),

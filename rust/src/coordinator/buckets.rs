@@ -1,0 +1,283 @@
+//! Sequence-length buckets: the shape registry of the request path.
+//!
+//! The engine used to bake ONE `seq_len` end-to-end: every request was
+//! padded to the model max at submission, every template stamped the max
+//! shape, and the native forward paid O(seq_len²) attention on `[PAD]`
+//! tokens. [`Buckets`] is the small sorted registry of sequence lengths
+//! the engine executes instead (e.g. `{32, 64, 128}` with 128 the model
+//! max): a request is admitted **unpadded**, assigned the smallest
+//! bucket that fits it, and only ever padded to *that bucket's* length
+//! at batch assembly.
+//!
+//! [`BucketQueues`] is the admission structure that keeps waves
+//! shape-homogeneous: one bounded FIFO per bucket, requests routed by
+//! their bucket index at admission, and batchers pulling whole waves
+//! from the **deepest** non-empty bucket — so one model execution only
+//! ever carries rows of a single shape, while arrival order is
+//! preserved within each shape class.
+
+use std::time::Instant;
+
+use crate::util::threadpool::{Channel, SendError, TrySendError};
+
+use super::request::Request;
+
+/// Sorted registry of the sequence lengths the engine executes. The
+/// largest bucket is always the model's `seq_len` (the compiled /
+/// trained maximum), so every admissible request has a home.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Buckets {
+    /// ascending, deduplicated, last == seq_len_max
+    lens: Vec<usize>,
+}
+
+impl Buckets {
+    /// Build from requested bucket lengths plus the mandatory
+    /// `seq_len_max` terminal bucket. Requested lengths outside
+    /// `1..=seq_len_max` are ignored; duplicates collapse.
+    pub fn new(requested: &[usize], seq_len_max: usize) -> Buckets {
+        assert!(seq_len_max >= 1, "model seq_len must be positive");
+        let mut lens: Vec<usize> = requested
+            .iter()
+            .copied()
+            .filter(|&l| (1..seq_len_max).contains(&l))
+            .collect();
+        lens.push(seq_len_max);
+        lens.sort_unstable();
+        lens.dedup();
+        Buckets { lens }
+    }
+
+    /// The degenerate single-bucket registry: pad-to-max, the pre-bucket
+    /// behavior (and the only option for shape-baked PJRT backends).
+    pub fn single(seq_len_max: usize) -> Buckets {
+        Buckets::new(&[], seq_len_max)
+    }
+
+    pub fn lens(&self) -> &[usize] {
+        &self.lens
+    }
+
+    pub fn count(&self) -> usize {
+        self.lens.len()
+    }
+
+    pub fn max_len(&self) -> usize {
+        *self.lens.last().unwrap()
+    }
+
+    pub fn len_of(&self, idx: usize) -> usize {
+        self.lens[idx]
+    }
+
+    /// Index of the smallest bucket that fits a `content_len`-token row;
+    /// `None` when the row exceeds the model max (reject at admission).
+    pub fn index_for(&self, content_len: usize) -> Option<usize> {
+        if content_len == 0 {
+            return None;
+        }
+        self.lens.iter().position(|&l| l >= content_len)
+    }
+}
+
+/// One bounded admission FIFO per bucket, closed and drained as a unit.
+///
+/// `queue_cap` applies **per bucket**: a burst of one shape cannot
+/// starve admission of another (per-shape head-of-line isolation), and
+/// the single-bucket default behaves exactly like the old one-channel
+/// admission queue.
+#[derive(Clone)]
+pub struct BucketQueues {
+    qs: Vec<Channel<Request>>,
+}
+
+impl BucketQueues {
+    pub fn new(n_buckets: usize, cap_per_bucket: usize) -> BucketQueues {
+        assert!(n_buckets >= 1);
+        BucketQueues { qs: (0..n_buckets).map(|_| Channel::bounded(cap_per_bucket)).collect() }
+    }
+
+    pub fn count(&self) -> usize {
+        self.qs.len()
+    }
+
+    /// The channel backing bucket `idx` (batchers pull waves off it).
+    pub fn queue(&self, idx: usize) -> &Channel<Request> {
+        &self.qs[idx]
+    }
+
+    /// Blocking admission, routed by the request's own bucket
+    /// (backpressure per bucket). Err when closed.
+    pub fn send(&self, req: Request) -> Result<(), SendError> {
+        self.qs[req.bucket].send(req)
+    }
+
+    /// Non-blocking admission; `Full`/`Closed` hand the request back.
+    pub fn try_send(&self, req: Request) -> Result<(), TrySendError<Request>> {
+        self.qs[req.bucket].try_send(req)
+    }
+
+    /// Total queued across buckets (lock-free mirror reads).
+    pub fn len(&self) -> usize {
+        self.qs.iter().map(Channel::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.qs.iter().all(Channel::is_empty)
+    }
+
+    pub fn depth(&self, idx: usize) -> usize {
+        self.qs[idx].len()
+    }
+
+    /// The deepest non-empty bucket — the "deepest eligible bucket" rule
+    /// batchers pull by. Ties break toward the *larger* bucket (its
+    /// waves amortize more padding headroom).
+    pub fn deepest(&self) -> Option<usize> {
+        let mut best: Option<(usize, usize)> = None;
+        for (i, q) in self.qs.iter().enumerate() {
+            let d = q.len();
+            if d > 0 && best.map_or(true, |(_, bd)| d >= bd) {
+                best = Some((i, d));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// First non-empty bucket scanning cyclically from `start` — the
+    /// batchers' round-robin anti-starvation probe (a quiet bucket must
+    /// not wait forever behind a saturated sibling that always wins the
+    /// deepest-first rule).
+    pub fn nonempty_from(&self, start: usize) -> Option<usize> {
+        let n = self.qs.len();
+        (0..n).map(|k| (start + k) % n).find(|&i| !self.qs[i].is_empty())
+    }
+
+    /// Close every bucket: senders fail, receivers drain then stop.
+    pub fn close(&self) {
+        for q in &self.qs {
+            q.close();
+        }
+    }
+
+    pub fn is_closed(&self) -> bool {
+        // buckets are closed as a unit; the first one answers for all
+        self.qs[0].is_closed()
+    }
+
+    /// Drain up to `max` requests from any bucket into `out`
+    /// (non-blocking). Used by teardown paths that fail the backlog.
+    pub fn try_recv_any(&self, out: &mut Vec<Request>, max: usize) -> usize {
+        let mut got = 0;
+        for q in &self.qs {
+            if got >= max {
+                break;
+            }
+            got += q.try_recv_up_to(out, max - got);
+        }
+        got
+    }
+
+    /// Bounded park on one bucket's condvar: wait for a wave on bucket
+    /// `idx` until `deadline` (`None` = until close). Returns the number
+    /// of requests appended to `out`.
+    pub fn recv_wave(
+        &self,
+        idx: usize,
+        out: &mut Vec<Request>,
+        max: usize,
+        deadline: Option<Instant>,
+    ) -> usize {
+        self.qs[idx].recv_up_to(out, max, deadline)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Completion;
+    use crate::util::threadpool::OnceCellSync;
+    use std::time::Instant;
+
+    fn req(id: u64, bucket: usize) -> Request {
+        Request {
+            id,
+            content: vec![1],
+            bucket,
+            submitted: Instant::now(),
+            deadline: None,
+            done: Completion::cell(OnceCellSync::new()),
+        }
+    }
+
+    #[test]
+    fn buckets_sort_dedup_and_pin_the_max() {
+        let b = Buckets::new(&[64, 16, 16, 200, 0, 32], 128);
+        assert_eq!(b.lens(), &[16, 32, 64, 128], "oversize and zero dropped, max appended");
+        assert_eq!(b.max_len(), 128);
+        assert_eq!(Buckets::single(16).lens(), &[16]);
+        assert_eq!(Buckets::new(&[16], 16).lens(), &[16], "max-dup collapses");
+    }
+
+    #[test]
+    fn index_for_picks_smallest_fitting_bucket() {
+        let b = Buckets::new(&[16, 32, 64], 128);
+        assert_eq!(b.index_for(1), Some(0));
+        assert_eq!(b.index_for(16), Some(0));
+        assert_eq!(b.index_for(17), Some(1));
+        assert_eq!(b.index_for(64), Some(2));
+        assert_eq!(b.index_for(65), Some(3));
+        assert_eq!(b.index_for(128), Some(3));
+        assert_eq!(b.index_for(129), None, "over the model max");
+        assert_eq!(b.index_for(0), None, "empty rows have no bucket");
+    }
+
+    #[test]
+    fn queues_route_by_bucket_and_report_the_deepest() {
+        let q = BucketQueues::new(3, 8);
+        assert!(q.deepest().is_none());
+        q.send(req(1, 0)).unwrap();
+        q.send(req(2, 2)).unwrap();
+        q.send(req(3, 2)).unwrap();
+        assert_eq!(q.len(), 3);
+        assert_eq!((q.depth(0), q.depth(1), q.depth(2)), (1, 0, 2));
+        assert_eq!(q.deepest(), Some(2));
+        let mut out = Vec::new();
+        assert_eq!(q.recv_wave(2, &mut out, 8, None), 2);
+        assert_eq!(out.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(q.deepest(), Some(0));
+    }
+
+    #[test]
+    fn deepest_ties_break_toward_the_larger_bucket() {
+        let q = BucketQueues::new(3, 8);
+        q.send(req(1, 0)).unwrap();
+        q.send(req(2, 1)).unwrap();
+        assert_eq!(q.deepest(), Some(1), "equal depths pick the larger shape");
+    }
+
+    #[test]
+    fn nonempty_from_scans_cyclically() {
+        let q = BucketQueues::new(3, 8);
+        assert_eq!(q.nonempty_from(0), None);
+        q.send(req(1, 1)).unwrap();
+        assert_eq!(q.nonempty_from(0), Some(1));
+        assert_eq!(q.nonempty_from(1), Some(1));
+        assert_eq!(q.nonempty_from(2), Some(1), "wraps past the end");
+        q.send(req(2, 2)).unwrap();
+        assert_eq!(q.nonempty_from(2), Some(2), "starts at the probe index");
+    }
+
+    #[test]
+    fn close_is_unit_wide_and_drain_any_sweeps_all_buckets() {
+        let q = BucketQueues::new(2, 4);
+        q.send(req(1, 0)).unwrap();
+        q.send(req(2, 1)).unwrap();
+        q.close();
+        assert!(q.is_closed());
+        assert!(q.send(req(3, 0)).is_err());
+        let mut out = Vec::new();
+        assert_eq!(q.try_recv_any(&mut out, 10), 2);
+        assert_eq!(q.try_recv_any(&mut out, 10), 0);
+    }
+}

@@ -33,8 +33,9 @@ use crate::runtime::InferenceBackend;
 use crate::tokenizer::Tokenizer;
 use crate::util::threadpool::Channel;
 
-use super::api::LaneStatus;
+use super::api::{BucketStatus, LaneStatus};
 use super::batcher::{self, BatcherConfig, ExecBatch};
+use super::buckets::{BucketQueues, Buckets};
 use super::policy::AdaptiveN;
 use super::request::Request;
 use super::scheduler::{self, MuxTemplate, Stats};
@@ -49,18 +50,25 @@ pub(crate) const PULL_POLL: Duration = Duration::from_micros(500);
 /// single bounded admission queue, the adaptive-N pull-gate, and the
 /// live-lane count that decides when `Shutdown` becomes the truth.
 pub struct DispatchState {
-    /// the one admission queue all lanes pull from
-    pub queue: Channel<Request>,
+    /// the one admission queue set all lanes pull from: one bounded
+    /// FIFO per sequence-length bucket, requests routed by shape at
+    /// admission so every stolen wave is shape-homogeneous
+    pub queue: BucketQueues,
     gate: Mutex<AdaptiveN>,
     epoch: Instant,
     live: AtomicUsize,
 }
 
 impl DispatchState {
-    pub fn new(candidates: Vec<usize>, exec_time_us: f64, queue_cap: usize) -> Self {
+    pub fn new(
+        candidates: Vec<usize>,
+        exec_time_us: f64,
+        queue_cap: usize,
+        n_buckets: usize,
+    ) -> Self {
         let n_lanes = candidates.len();
         DispatchState {
-            queue: Channel::bounded(queue_cap),
+            queue: BucketQueues::new(n_buckets, queue_cap),
             gate: Mutex::new(AdaptiveN::new(candidates, exec_time_us)),
             epoch: Instant::now(),
             live: AtomicUsize::new(n_lanes),
@@ -94,10 +102,11 @@ impl DispatchState {
         self.gate.lock().unwrap().remove_candidate(lane_n);
         if self.live.fetch_sub(1, Ordering::AcqRel) == 1 {
             self.queue.close();
-            // nobody will pull again: drain what was admitted, dropping
-            // each request so its completion guard answers Shutdown
+            // nobody will pull again: drain what was admitted (every
+            // bucket), dropping each request so its completion guard
+            // answers Shutdown
             let mut orphans: Vec<Request> = Vec::new();
-            while self.queue.try_recv_up_to(&mut orphans, 64) > 0 {
+            while self.queue.try_recv_any(&mut orphans, 64) > 0 {
                 orphans.clear();
             }
         }
@@ -140,18 +149,28 @@ pub struct Lane {
 impl Lane {
     /// Spawn the lane's puller and workers against the shared dispatch
     /// state. `tokenizer` must agree with the router's (validated by the
-    /// caller along with seq_len/task).
+    /// caller along with seq_len/task), and `buckets` is the router's
+    /// shared bucket registry — the lane derives one template (and one
+    /// worker scratch) per bucket, since any stolen wave arrives tagged
+    /// with its bucket index.
     pub fn start(
         backend: Arc<dyn InferenceBackend>,
         cfg: &CoordinatorConfig,
         state: &Arc<DispatchState>,
         tokenizer: &Tokenizer,
+        buckets: &Buckets,
     ) -> Result<Lane> {
         let meta = backend.meta().clone();
         let n_mux = meta.n_mux;
         let batch = meta.batch;
-        let template = Arc::new(MuxTemplate::new(&meta, tokenizer));
-        let stats = Arc::new(Stats::default());
+        let templates: Arc<Vec<MuxTemplate>> = Arc::new(
+            buckets
+                .lens()
+                .iter()
+                .map(|&l| MuxTemplate::for_bucket(&meta, tokenizer, l))
+                .collect(),
+        );
+        let stats = Arc::new(Stats::for_buckets(buckets.lens()));
         let control = Arc::new(LaneControl::default());
         let n_workers = cfg.n_workers.max(1);
         // keep the exec buffer shallow: batches parked here cannot be
@@ -187,13 +206,18 @@ impl Lane {
             let state = state.clone();
             let control = control.clone();
             let stats = stats.clone();
-            let template = template.clone();
+            let templates = templates.clone();
             let policy = cfg.slot_policy;
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("datamux-lane{n_mux}-exec-{w}"))
                     .spawn(move || {
-                        let mut scratch = Vec::with_capacity(template.ids_len());
+                        // one pre-sized scratch per bucket: the
+                        // scratch_reallocs == 0 invariant holds per shape
+                        let mut scratch: Vec<Vec<i32>> = templates
+                            .iter()
+                            .map(|t| Vec::with_capacity(t.ids_len()))
+                            .collect();
                         while let Some(b) = exec.recv() {
                             if control.dead.load(Ordering::Acquire) {
                                 // a sibling worker failed while this
@@ -206,13 +230,14 @@ impl Lane {
                                 );
                                 continue;
                             }
+                            let bucket = b.bucket;
                             if let Err(e) = scheduler::execute_batch(
                                 backend.as_ref(),
-                                &template,
+                                &templates[bucket],
                                 policy,
                                 &stats,
                                 b,
-                                &mut scratch,
+                                &mut scratch[bucket],
                             ) {
                                 // the failed batch's waiters were already
                                 // answered WorkerFailed inside
@@ -258,6 +283,12 @@ impl Lane {
             pulls: c.batches_formed,
             requeued: self.control.requeued.load(Ordering::Relaxed),
             completed: c.completed,
+            buckets: self
+                .stats
+                .bucket_snapshot()
+                .into_iter()
+                .map(|(seq_len, waves, entries)| BucketStatus { seq_len, waves, entries })
+                .collect(),
         }
     }
 

@@ -85,6 +85,14 @@ impl EngineBuilder {
         self
     }
 
+    /// Sequence-length buckets (e.g. `[32, 64]`). The model's seq_len is
+    /// always the terminal bucket; lengths a backend cannot execute are
+    /// dropped at engine start. Empty (the default) = pad-to-max.
+    pub fn buckets(mut self, lens: Vec<usize>) -> Self {
+        self.coordinator.buckets = lens;
+        self
+    }
+
     pub fn slot_policy(mut self, p: SlotPolicy) -> Self {
         self.coordinator.slot_policy = p;
         self
@@ -180,6 +188,7 @@ mod tests {
             .queue_cap(32)
             .n_workers(2)
             .slot_policy(SlotPolicy::RotateOffset)
+            .buckets(vec![8, 16])
             .addr("127.0.0.1:0")
             .max_connections(3)
             .read_timeout(Duration::from_millis(50))
@@ -188,6 +197,7 @@ mod tests {
         assert_eq!(b.coordinator_config().queue_cap, 32);
         assert_eq!(b.coordinator_config().n_workers, 2);
         assert_eq!(b.coordinator_config().slot_policy, SlotPolicy::RotateOffset);
+        assert_eq!(b.coordinator_config().buckets, vec![8, 16]);
         let s = b.server_config();
         assert_eq!(s.addr, "127.0.0.1:0");
         assert_eq!(s.max_connections, 3);
@@ -230,6 +240,61 @@ mod tests {
         let r = h.wait().expect("real math round-trips the coordinator");
         assert!(r.pred_class() < 3);
         assert_eq!(r.logits.len(), 3);
+    }
+
+    #[test]
+    fn bucketed_coordinator_serves_short_rows_and_reports_buckets() {
+        let coord = EngineBuilder::new()
+            .max_wait_ms(0)
+            .buckets(vec![4, 2])
+            .build_backend(Arc::new(FakeBackend::new("cls", 2, 1, 8, 3)))
+            .unwrap();
+        assert_eq!(coord.buckets(), vec![2, 4, 8], "sorted + terminal max bucket");
+        // a 3-token unpadded row lands in the 4-bucket
+        let h = coord.submit_framed(vec![1, 45, 2]).expect("short rows are admissible");
+        let r = h.wait().expect("served");
+        assert_eq!(r.pred_class(), (1 + 45 + 2) % 3, "unpadded row predicts like padded");
+        let lanes = coord.lane_status();
+        let b = &lanes[0].buckets;
+        assert_eq!(b.iter().map(|x| x.seq_len).collect::<Vec<_>>(), vec![2, 4, 8]);
+        assert_eq!(b[1].waves, 1, "the 4-bucket executed the wave");
+        assert_eq!(b[1].entries, 1);
+        assert_eq!(b[0].waves + b[2].waves, 0, "other buckets untouched");
+        // bucketed tokens_padded: capacity 2 * bucket 4 - 3 carried = 5
+        assert_eq!(coord.counters().tokens_padded, 5);
+        // over-length and empty rows are typed errors
+        use crate::coordinator::api::SubmitError;
+        match coord.submit_framed(vec![1; 9]).err() {
+            Some(SubmitError::TooLong { got: 9, max: 8 }) => {}
+            other => panic!("expected TooLong, got {other:?}"),
+        }
+        match coord.submit_framed(Vec::new()).err() {
+            Some(SubmitError::BadFrame { got: 0, .. }) => {}
+            other => panic!("expected BadFrame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pjrt_style_backend_degrades_to_pad_to_max() {
+        /// A backend that (like PJRT) only executes its baked shape.
+        struct BakedShape(FakeBackend);
+        impl crate::runtime::InferenceBackend for BakedShape {
+            fn meta(&self) -> &crate::runtime::ArtifactMeta {
+                self.0.meta()
+            }
+            fn run_ids(&self, ids: &[i32]) -> anyhow::Result<Vec<f32>> {
+                self.0.run_ids(ids)
+            }
+            // default supports_seq_len / run_ids_at: baked shape only
+        }
+        let coord = EngineBuilder::new()
+            .max_wait_ms(0)
+            .buckets(vec![2, 4])
+            .build_backend(Arc::new(BakedShape(FakeBackend::new("cls", 2, 1, 8, 3))))
+            .unwrap();
+        assert_eq!(coord.buckets(), vec![8], "requested buckets dropped, terminal kept");
+        let h = coord.submit_framed(vec![1, 45, 2]).expect("short rows still admissible");
+        assert_eq!(h.wait().expect("served").pred_class(), (1 + 45 + 2) % 3);
     }
 
     #[test]

@@ -2,19 +2,24 @@
 //!
 //! ```text
 //!  MuxCoordinator (one model):
-//!  Submit::submit() ──▶ [bounded queue] ──▶ batcher thread ──▶ [exec queue]
+//!  Submit::submit() ──▶ [bucket queues] ──▶ batcher thread ──▶ [exec queue]
 //!                                                                 │
 //!                                              worker thread(s) ◀─┘
 //!                                                assemble ids → backend execute
 //!                                                → demux → fulfill completions
 //!
 //!  MuxRouter (adaptive N, work-stealing):
-//!  Submit::submit() ──▶ [one shared bounded queue] ◀── pull ── lane N=2  ──▶ exec
-//!                                                 ◀── pull ── lane N=20 ──▶ exec
+//!  Submit::submit() ──▶ [shared bucket queues] ◀── pull ── lane N=2  ──▶ exec
+//!                                              ◀── pull ── lane N=20 ──▶ exec
 //!                        (AdaptiveN pull-gate: a lane pulls only when
 //!                         backlog/rate justifies its N; dead lanes stop
 //!                         pulling and hand their waves back)
 //! ```
+//!
+//! Admission is sequence-length-bucketed ([`buckets`]): a request is
+//! admitted unpadded, routed to the queue of the smallest bucket that
+//! fits it, and every formed wave is shape-homogeneous — the backend
+//! executes at the bucket's runtime shape, not the compile-time max.
 //!
 //! The coordinator owns one [`InferenceBackend`] (usually an
 //! AOT-compiled `(profile, N, batch)` artifact behind PJRT) plus the
@@ -26,6 +31,7 @@
 
 pub mod api;
 pub mod batcher;
+pub mod buckets;
 pub mod dispatch;
 pub mod engine;
 pub mod policy;
@@ -40,15 +46,16 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::runtime::{InferenceBackend, LoadedModel};
-use crate::tokenizer::Tokenizer;
+use crate::tokenizer::{TokenizeError, Tokenizer};
 use crate::util::metrics::{CounterSnapshot, LatencySummary};
 use crate::util::threadpool::{Channel, OnceCellSync, TrySendError};
 
 pub use api::{
-    CompletionItem, CompletionQueue, InferenceRequest, LaneStatus, Payload, Submit, SubmitError,
-    TaskKind,
+    BucketStatus, CompletionItem, CompletionQueue, InferenceRequest, LaneStatus, Payload, Submit,
+    SubmitError, TaskKind,
 };
 pub use batcher::{BatcherConfig, ExecBatch};
+pub use buckets::{BucketQueues, Buckets};
 pub use dispatch::{DispatchState, Lane};
 pub use engine::EngineBuilder;
 pub use policy::{AdaptiveN, SlotPolicy};
@@ -59,11 +66,17 @@ pub use scheduler::{MuxTemplate, SharedModel, Stats};
 pub struct CoordinatorConfig {
     /// max time the first request of a batch waits for co-muxed peers
     pub max_wait: Duration,
-    /// admission queue capacity (senders block beyond this — backpressure)
+    /// admission queue capacity **per bucket** (senders block beyond
+    /// this — backpressure; per-shape head-of-line isolation)
     pub queue_cap: usize,
     /// backend worker threads (CPU plugin: 1 is usually right on 1 core)
     pub n_workers: usize,
     pub slot_policy: SlotPolicy,
+    /// requested sequence-length buckets (e.g. `[32, 64]`); the model's
+    /// seq_len is always appended as the terminal bucket, and lengths
+    /// the backend cannot execute (shape-baked PJRT) are dropped with a
+    /// notice. Empty = pad-to-max, the pre-bucket behavior.
+    pub buckets: Vec<usize>,
 }
 
 impl Default for CoordinatorConfig {
@@ -73,44 +86,84 @@ impl Default for CoordinatorConfig {
             queue_cap: 1024,
             n_workers: 1,
             slot_policy: SlotPolicy::Fill,
+            buckets: Vec::new(),
         }
     }
 }
 
-/// Validate a typed request against an engine's (task, seq_len) and
+/// Resolve the effective bucket registry for a set of backends: the
+/// requested lengths each backend can execute, plus the mandatory
+/// terminal `seq_len` bucket. Unsupported requests are dropped loudly
+/// (stderr), not errors — a PJRT artifact simply serves pad-to-max.
+fn resolve_buckets(
+    requested: &[usize],
+    seq_len_max: usize,
+    backends: &[Arc<dyn InferenceBackend>],
+) -> Buckets {
+    let supported: Vec<usize> = requested
+        .iter()
+        .copied()
+        .filter(|&l| {
+            let ok = (1..=seq_len_max).contains(&l)
+                && backends.iter().all(|b| b.supports_seq_len(l));
+            if !ok {
+                eprintln!(
+                    "datamux: dropping requested bucket {l} (backend only executes \
+                     1..={seq_len_max} or is shape-baked)"
+                );
+            }
+            ok
+        })
+        .collect();
+    Buckets::new(&supported, seq_len_max)
+}
+
+/// Validate a typed request against an engine's (task, buckets) and
 /// frame its payload — the shared admission front half of both
-/// [`MuxCoordinator`] and [`MuxRouter`].
+/// [`MuxCoordinator`] and [`MuxRouter`]. Returns the **unpadded**
+/// content row, its bucket index, and the absolute deadline.
 fn prepare_request(
     tokenizer: &Tokenizer,
-    seq_len: usize,
+    buckets: &Buckets,
     task: TaskKind,
     req: InferenceRequest,
-) -> Result<(Vec<i32>, Option<Instant>), SubmitError> {
+) -> Result<(Vec<i32>, usize, Option<Instant>), SubmitError> {
     if req.task != task {
         return Err(SubmitError::WrongTask { requested: req.task, served: task });
     }
+    let max = buckets.max_len();
     let content = match req.payload {
         Payload::Framed(ids) => {
-            if ids.len() != seq_len {
-                return Err(SubmitError::BadFrame { expected: seq_len, got: ids.len() });
+            if ids.is_empty() {
+                return Err(SubmitError::BadFrame { expected: max, got: 0 });
+            }
+            if ids.len() > max {
+                return Err(SubmitError::TooLong { got: ids.len(), max });
             }
             ids
         }
         Payload::Text(text) => tokenizer
-            .encode_framed(&text.split(" [SEP] ").collect::<Vec<_>>(), seq_len)
-            .map_err(|e| SubmitError::Tokenize(e.to_string()))?,
+            .encode_framed_unpadded(&text.split(" [SEP] ").collect::<Vec<_>>(), max)
+            .map_err(|e| match e {
+                TokenizeError::TooLong { got, max } => SubmitError::TooLong { got, max },
+                other => SubmitError::Tokenize(other.to_string()),
+            })?,
     };
+    let bucket = buckets
+        .index_for(content.len())
+        .expect("length validated against the terminal bucket");
     let deadline = req.deadline.map(|d| Instant::now() + d);
-    Ok((content, deadline))
+    Ok((content, bucket, deadline))
 }
 
 /// The serving engine for one loaded model.
 pub struct MuxCoordinator {
-    input: Channel<Request>,
+    input: BucketQueues,
     pub stats: Arc<Stats>,
     pub tokenizer: Tokenizer,
     pub n_mux: usize,
     pub seq_len: usize,
+    buckets: Buckets,
     task: TaskKind,
     next_id: AtomicU64,
     batcher: Option<std::thread::JoinHandle<u64>>,
@@ -123,7 +176,7 @@ impl MuxCoordinator {
         Self::start_backend(Arc::new(SharedModel(Arc::new(model))), cfg)
     }
 
-    /// Start over any [`InferenceBackend`] (PJRT model, fake, ...).
+    /// Start over any [`InferenceBackend`] (PJRT model, native, fake...).
     pub fn start_backend(
         backend: Arc<dyn InferenceBackend>,
         cfg: CoordinatorConfig,
@@ -135,13 +188,22 @@ impl MuxCoordinator {
             Tokenizer::new(crate::tokenizer::default_vocab(), meta.vocab_size);
         let n_mux = meta.n_mux;
         let seq_len = meta.seq_len;
-        let stats = Arc::new(Stats::default());
-        let input: Channel<Request> = Channel::bounded(cfg.queue_cap);
+        let buckets =
+            resolve_buckets(&cfg.buckets, seq_len, std::slice::from_ref(&backend));
+        let stats = Arc::new(Stats::for_buckets(buckets.lens()));
+        let input = BucketQueues::new(buckets.count(), cfg.queue_cap);
         let exec: Channel<ExecBatch> = Channel::bounded(cfg.n_workers * 2 + 2);
 
-        // derive the empty-slot ids tensor once; workers bulk-copy it
-        // per batch instead of re-deriving pad rows and prefixes
-        let template = Arc::new(scheduler::MuxTemplate::new(&meta, &tokenizer));
+        // derive each bucket's empty-slot ids tensor once; workers
+        // bulk-copy the right one per batch instead of re-deriving pad
+        // rows and prefixes
+        let templates: Arc<Vec<MuxTemplate>> = Arc::new(
+            buckets
+                .lens()
+                .iter()
+                .map(|&l| scheduler::MuxTemplate::for_bucket(&meta, &tokenizer, l))
+                .collect(),
+        );
 
         let bcfg = BatcherConfig { n_mux, batch: meta.batch, max_wait: cfg.max_wait };
         let b_in = input.clone();
@@ -159,23 +221,28 @@ impl MuxCoordinator {
             let exec = exec.clone();
             let input = input.clone();
             let stats = stats.clone();
-            let template = template.clone();
+            let templates = templates.clone();
             let policy = cfg.slot_policy;
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("datamux-exec-{w}"))
                     .spawn(move || {
-                        // worker-owned scratch, reused across batches;
-                        // pre-sized so steady state never reallocates
-                        let mut scratch = Vec::with_capacity(template.ids_len());
+                        // worker-owned scratch, one per bucket, reused
+                        // across batches; pre-sized so steady state never
+                        // reallocates (the invariant holds per shape)
+                        let mut scratch: Vec<Vec<i32>> = templates
+                            .iter()
+                            .map(|t| Vec::with_capacity(t.ids_len()))
+                            .collect();
                         while let Some(batch) = exec.recv() {
+                            let bucket = batch.bucket;
                             if let Err(e) = scheduler::execute_batch(
                                 backend.as_ref(),
-                                &template,
+                                &templates[bucket],
                                 policy,
                                 &stats,
                                 batch,
-                                &mut scratch,
+                                &mut scratch[bucket],
                             ) {
                                 // the failed batch's waiters were already
                                 // fulfilled with WorkerFailed inside
@@ -197,6 +264,7 @@ impl MuxCoordinator {
             tokenizer,
             n_mux,
             seq_len,
+            buckets,
             task,
             next_id: AtomicU64::new(1),
             batcher: Some(batcher),
@@ -204,19 +272,24 @@ impl MuxCoordinator {
         })
     }
 
-    /// Validate a typed request and frame its payload.
-    fn prepare(&self, req: InferenceRequest) -> Result<(Vec<i32>, Option<Instant>), SubmitError> {
-        prepare_request(&self.tokenizer, self.seq_len, self.task, req)
+    /// Validate a typed request and frame its payload (unpadded) into
+    /// its sequence-length bucket.
+    fn prepare(
+        &self,
+        req: InferenceRequest,
+    ) -> Result<(Vec<i32>, usize, Option<Instant>), SubmitError> {
+        prepare_request(&self.tokenizer, &self.buckets, self.task, req)
     }
 
     fn make_request(
         &self,
         content: Vec<i32>,
+        bucket: usize,
         deadline: Option<Instant>,
         done: request::Completion,
     ) -> Request {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        Request { id, content, submitted: Instant::now(), deadline, done }
+        Request { id, content, bucket, submitted: Instant::now(), deadline, done }
     }
 
     /// Blocking admission (backpressure); `Shutdown` when the intake is
@@ -278,20 +351,20 @@ impl MuxCoordinator {
 
 impl Submit for MuxCoordinator {
     fn submit(&self, req: InferenceRequest) -> Result<RequestHandle, SubmitError> {
-        let (content, deadline) = self.prepare(req)?;
+        let (content, bucket, deadline) = self.prepare(req)?;
         let cell = OnceCellSync::new();
         let req =
-            self.make_request(content, deadline, request::Completion::cell(cell.clone()));
+            self.make_request(content, bucket, deadline, request::Completion::cell(cell.clone()));
         let handle = RequestHandle { id: req.id, deadline, done: cell };
         self.admit_blocking(req)?;
         Ok(handle)
     }
 
     fn try_submit(&self, req: InferenceRequest) -> Result<RequestHandle, SubmitError> {
-        let (content, deadline) = self.prepare(req)?;
+        let (content, bucket, deadline) = self.prepare(req)?;
         let cell = OnceCellSync::new();
         let req =
-            self.make_request(content, deadline, request::Completion::cell(cell.clone()));
+            self.make_request(content, bucket, deadline, request::Completion::cell(cell.clone()));
         let handle = RequestHandle { id: req.id, deadline, done: cell };
         self.admit_nonblocking(req)?;
         Ok(handle)
@@ -303,9 +376,13 @@ impl Submit for MuxCoordinator {
         tag: u64,
         out: &CompletionQueue,
     ) -> Result<(), SubmitError> {
-        let (content, deadline) = self.prepare(req)?;
-        let req =
-            self.make_request(content, deadline, request::Completion::queue(tag, out.clone()));
+        let (content, bucket, deadline) = self.prepare(req)?;
+        let req = self.make_request(
+            content,
+            bucket,
+            deadline,
+            request::Completion::queue(tag, out.clone()),
+        );
         self.admit_nonblocking(req)
     }
 
@@ -319,6 +396,10 @@ impl Submit for MuxCoordinator {
 
     fn seq_len(&self) -> usize {
         self.seq_len
+    }
+
+    fn buckets(&self) -> Vec<usize> {
+        self.buckets.lens().to_vec()
     }
 
     fn queue_depth(&self) -> usize {
@@ -347,6 +428,12 @@ impl Submit for MuxCoordinator {
             pulls: c.batches_formed,
             requeued: 0,
             completed: c.completed,
+            buckets: self
+                .stats
+                .bucket_snapshot()
+                .into_iter()
+                .map(|(seq_len, waves, entries)| BucketStatus { seq_len, waves, entries })
+                .collect(),
         }]
     }
 }
@@ -386,6 +473,7 @@ pub struct MuxRouter {
     pub stats: Arc<Stats>,
     tokenizer: Tokenizer,
     seq_len: usize,
+    buckets: Buckets,
     task: TaskKind,
     next_id: AtomicU64,
 }
@@ -424,11 +512,19 @@ impl MuxRouter {
             );
         }
         let tokenizer = Tokenizer::new(crate::tokenizer::default_vocab(), m0.vocab_size);
+        // a bucket is only usable if EVERY lane can execute it (any lane
+        // may steal any wave); the terminal max bucket always is
+        let buckets = resolve_buckets(&cfg.buckets, m0.seq_len, &backends);
         let candidates: Vec<usize> = backends.iter().map(|b| b.meta().n_mux).collect();
-        let state = Arc::new(DispatchState::new(candidates, exec_time_us, cfg.queue_cap));
+        let state = Arc::new(DispatchState::new(
+            candidates,
+            exec_time_us,
+            cfg.queue_cap,
+            buckets.count(),
+        ));
         let lanes = backends
             .into_iter()
-            .map(|b| Lane::start(b, &cfg, &state, &tokenizer))
+            .map(|b| Lane::start(b, &cfg, &state, &tokenizer, &buckets))
             .collect::<Result<Vec<_>>>()?;
         Ok(MuxRouter {
             state,
@@ -436,6 +532,7 @@ impl MuxRouter {
             stats: Arc::new(Stats::default()),
             tokenizer,
             seq_len: m0.seq_len,
+            buckets,
             task,
             next_id: AtomicU64::new(1),
         })
@@ -489,11 +586,12 @@ impl MuxRouter {
     fn make_request(
         &self,
         content: Vec<i32>,
+        bucket: usize,
         deadline: Option<Instant>,
         done: request::Completion,
     ) -> Request {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        Request { id, content, submitted: Instant::now(), deadline, done }
+        Request { id, content, bucket, submitted: Instant::now(), deadline, done }
     }
 
     /// Shared body of `submit` / `try_submit` (cell-completion flavor).
@@ -502,10 +600,11 @@ impl MuxRouter {
         req: InferenceRequest,
         blocking: bool,
     ) -> Result<RequestHandle, SubmitError> {
-        let (content, deadline) = prepare_request(&self.tokenizer, self.seq_len, self.task, req)?;
+        let (content, bucket, deadline) =
+            prepare_request(&self.tokenizer, &self.buckets, self.task, req)?;
         let cell = OnceCellSync::new();
         let req =
-            self.make_request(content, deadline, request::Completion::cell(cell.clone()));
+            self.make_request(content, bucket, deadline, request::Completion::cell(cell.clone()));
         let handle = RequestHandle { id: req.id, deadline, done: cell };
         self.admit(req, blocking)?;
         Ok(handle)
@@ -541,9 +640,14 @@ impl Submit for MuxRouter {
         tag: u64,
         out: &CompletionQueue,
     ) -> Result<(), SubmitError> {
-        let (content, deadline) = prepare_request(&self.tokenizer, self.seq_len, self.task, req)?;
-        let req =
-            self.make_request(content, deadline, request::Completion::queue(tag, out.clone()));
+        let (content, bucket, deadline) =
+            prepare_request(&self.tokenizer, &self.buckets, self.task, req)?;
+        let req = self.make_request(
+            content,
+            bucket,
+            deadline,
+            request::Completion::queue(tag, out.clone()),
+        );
         self.admit(req, false)
     }
 
@@ -557,6 +661,10 @@ impl Submit for MuxRouter {
 
     fn seq_len(&self) -> usize {
         self.seq_len
+    }
+
+    fn buckets(&self) -> Vec<usize> {
+        self.buckets.lens().to_vec()
     }
 
     fn queue_depth(&self) -> usize {

@@ -97,11 +97,19 @@ impl Drop for Completion {
     }
 }
 
-/// A single admitted request: one framed content row (already
-/// `[CLS] ... [SEP] ... [PAD]`-laid-out to the model's seq_len).
+/// A single admitted request: one framed content row
+/// (`[CLS] ... [SEP] ...`), **unpadded** — padding to the request's
+/// sequence-length bucket happens at batch assembly, against the
+/// bucket's precomputed template.
 pub struct Request {
     pub id: u64,
+    /// framed ids, `1..=seq_len_max` tokens, no trailing `[PAD]`s needed
     pub content: Vec<i32>,
+    /// index into the engine's [`Buckets`](super::Buckets) registry —
+    /// the smallest bucket whose length fits `content`; assigned at
+    /// admission so queues and batchers can route by shape without
+    /// re-deriving it
+    pub bucket: usize,
     pub submitted: Instant,
     /// absolute deadline; expired requests are failed at batch assembly
     pub deadline: Option<Instant>,

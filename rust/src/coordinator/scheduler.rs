@@ -66,6 +66,16 @@ impl InferenceBackend for SharedModel {
     }
 }
 
+/// Per-bucket execution tallies (one per registered sequence-length
+/// bucket): how many waves executed at this shape and how many requests
+/// they carried. Exposed through `Submit::lane_status()` and v2 STATS
+/// so padding waste is observable per shape.
+pub struct BucketTally {
+    pub seq_len: usize,
+    pub waves: std::sync::atomic::AtomicU64,
+    pub entries: std::sync::atomic::AtomicU64,
+}
+
 /// Shared serving statistics.
 #[derive(Default)]
 pub struct Stats {
@@ -78,24 +88,68 @@ pub struct Stats {
     /// submit -> batch formed: admission queueing plus group-formation
     /// delay, the batching cost invisible to `exec_latency`
     pub queue_wait: Histogram,
+    /// one tally per bucket, aligned with the engine's bucket registry;
+    /// empty when the consumer doesn't track buckets (unit tests)
+    pub per_bucket: Vec<BucketTally>,
 }
 
-/// Per-slot output length (flattened logits) for the model's task.
+impl Stats {
+    /// Stats with one tally slot per bucket length.
+    pub fn for_buckets(lens: &[usize]) -> Stats {
+        Stats {
+            per_bucket: lens
+                .iter()
+                .map(|&seq_len| BucketTally {
+                    seq_len,
+                    waves: Default::default(),
+                    entries: Default::default(),
+                })
+                .collect(),
+            ..Stats::default()
+        }
+    }
+
+    /// Snapshot the per-bucket tallies as `(seq_len, waves, entries)`.
+    pub fn bucket_snapshot(&self) -> Vec<(usize, u64, u64)> {
+        self.per_bucket
+            .iter()
+            .map(|t| {
+                (t.seq_len, t.waves.load(Ordering::Relaxed), t.entries.load(Ordering::Relaxed))
+            })
+            .collect()
+    }
+}
+
+/// Per-slot output length (flattened logits) for the model's task at
+/// the model's full sequence length.
 pub fn per_slot_len(meta: &ArtifactMeta) -> usize {
+    per_slot_len_at(meta, meta.seq_len)
+}
+
+/// Per-slot output length at a runtime bucket length (`token` logits
+/// scale with the executed shape; `cls` is shape-independent).
+pub fn per_slot_len_at(meta: &ArtifactMeta, seq_len: usize) -> usize {
     match meta.task.as_str() {
         "cls" => meta.n_classes,
-        "token" => meta.seq_len * meta.n_classes,
+        "token" => seq_len * meta.n_classes,
         other => panic!("unsupported serving task {other}"),
     }
 }
 
 /// Precomputed `(batch, n_mux, input_len)` ids tensor with every slot
 /// empty: pad rows plus the per-slot index prefix (paper §3.2), derived
-/// once at coordinator startup. Per batch, [`MuxTemplate::stamp`]
-/// resets the scratch buffer with one bulk copy, so steady-state
-/// assembly never re-derives pad rows or prefixes and never allocates.
+/// once per **bucket** at engine startup (`seq_len` here is the bucket
+/// length, `input_len = prefix + bucket`). Per batch,
+/// [`MuxTemplate::stamp`] resets the scratch buffer with one bulk copy,
+/// so steady-state assembly never re-derives pad rows or prefixes and
+/// never allocates — including the bucket's pad row, which lives in
+/// [`MuxTemplate::pad_row`] instead of being rebuilt by
+/// `Tokenizer::pad_row` per call.
 pub struct MuxTemplate {
     ids: Vec<i32>,
+    /// the bucket's empty content row (`[CLS]` anchor + `[PAD]`s),
+    /// computed once — serving paths and tests read it from here
+    pad_row: Vec<i32>,
     pub n_mux: usize,
     pub batch: usize,
     pub input_len: usize,
@@ -105,17 +159,38 @@ pub struct MuxTemplate {
 }
 
 impl MuxTemplate {
+    /// Template at the model's full sequence length (the terminal
+    /// bucket / pad-to-max behavior).
     pub fn new(meta: &ArtifactMeta, tok: &Tokenizer) -> Self {
+        Self::for_bucket(meta, tok, meta.seq_len)
+    }
+
+    /// Template for one sequence-length bucket: the stamped tensor is
+    /// `(batch, n_mux, prefix + bucket_len)` — everything downstream
+    /// (assembly, backend call, demux offsets) uses these runtime
+    /// shapes, never the compile-time maximum.
+    pub fn for_bucket(meta: &ArtifactMeta, tok: &Tokenizer, bucket_len: usize) -> Self {
         let n_mux = meta.n_mux;
         let b = meta.batch;
-        let input_len = meta.input_len;
-        let seq_len = meta.seq_len;
-        let prefix_len = input_len - seq_len;
+        let max_prefix = meta.input_len - meta.seq_len;
         assert!(
-            prefix_len == 0 || prefix_len == n_mux,
-            "unexpected prefix layout: input_len={input_len} seq_len={seq_len} n_mux={n_mux}"
+            max_prefix == 0 || max_prefix == n_mux,
+            "unexpected prefix layout: input_len={} seq_len={} n_mux={n_mux}",
+            meta.input_len,
+            meta.seq_len
         );
-        let pad_row = tok.pad_row(seq_len);
+        assert!(
+            (1..=meta.seq_len).contains(&bucket_len),
+            "bucket {bucket_len} outside 1..={}",
+            meta.seq_len
+        );
+        let seq_len = bucket_len;
+        let prefix_len = max_prefix;
+        let input_len = prefix_len + seq_len;
+        // the one pad row this bucket will ever build ([CLS] anchor kept
+        // so empty slots stay in-distribution)
+        let mut pad_row = vec![tok.vocab.pad; seq_len];
+        pad_row[0] = tok.vocab.cls;
         let mut ids = vec![tok.vocab.pad; b * n_mux * input_len];
         for g in 0..b {
             for slot in 0..n_mux {
@@ -135,13 +210,19 @@ impl MuxTemplate {
         }
         MuxTemplate {
             ids,
+            pad_row,
             n_mux,
             batch: b,
             input_len,
             seq_len,
             prefix_len,
-            per_slot_len: per_slot_len(meta),
+            per_slot_len: per_slot_len_at(meta, seq_len),
         }
+    }
+
+    /// The bucket's precomputed empty content row.
+    pub fn pad_row(&self) -> &[i32] {
+        &self.pad_row
     }
 
     /// Requests one execution can carry (`batch * n_mux`).
@@ -174,11 +255,16 @@ impl MuxTemplate {
 /// been fulfilled with [`EngineError::WorkerFailed`], so callers cannot
 /// hang on the error path.
 ///
-/// `template` must be built from the same `ArtifactMeta` as `model`;
-/// `ids_scratch` is a worker-owned buffer reused across batches (its
-/// contents are fully overwritten by [`MuxTemplate::stamp`] plus the
-/// per-request content writes, so nothing from a previous batch can
-/// leak into this one — property-tested by poisoning it between calls).
+/// `template` must be the one built for `batch.bucket` (same
+/// `ArtifactMeta` as `model`, bucket sequence length): the wave is
+/// shape-homogeneous by construction, the backend executes at
+/// `template.seq_len`, and request contents — unpadded, any length up
+/// to the bucket — land over the template's pre-stamped pad rows.
+/// `ids_scratch` is a worker-owned per-bucket buffer reused across
+/// batches (its contents are fully overwritten by
+/// [`MuxTemplate::stamp`] plus the per-request content writes, so
+/// nothing from a previous batch can leak into this one —
+/// property-tested by poisoning it between calls).
 pub fn execute_batch(
     model: &dyn InferenceBackend,
     template: &MuxTemplate,
@@ -221,12 +307,20 @@ pub fn execute_batch(
     }
     template.stamp(ids_scratch);
     let mut placement: Vec<(usize, usize)> = Vec::with_capacity(entries.len());
+    let mut content_tokens = 0usize;
     for (pos, req) in entries.iter().enumerate() {
         let g = pos / n_mux;
         let slot = policy.slot_of(batch.seq.wrapping_add(g as u64), pos % n_mux, n_mux);
-        debug_assert_eq!(req.content.len(), seq_len, "request content must be framed");
+        debug_assert!(
+            !req.content.is_empty() && req.content.len() <= seq_len,
+            "request content ({}) must fit its bucket ({seq_len})",
+            req.content.len()
+        );
+        // unpadded content lands over the template's pre-stamped pad
+        // row; the tail beyond content.len() is already [PAD]
         let start = ((g * n_mux) + slot) * input_len + prefix_len;
-        ids_scratch[start..start + seq_len].copy_from_slice(&req.content);
+        ids_scratch[start..start + req.content.len()].copy_from_slice(&req.content);
+        content_tokens += req.content.len();
         placement.push((g, slot));
     }
     let padded = capacity - entries.len();
@@ -237,7 +331,7 @@ pub fn execute_batch(
     // (and any future backend) is only trusted here. A short or oversized
     // buffer must fail the batch loudly, not index out of range below.
     let expected_len = capacity * template.per_slot_len;
-    let run = model.run_ids(ids_scratch).and_then(|out| {
+    let run = model.run_ids_at(ids_scratch, seq_len).and_then(|out| {
         anyhow::ensure!(
             out.len() == expected_len,
             "backend returned {} logits, expected {} (capacity {} x per_slot {})",
@@ -271,6 +365,15 @@ pub fn execute_batch(
     let occupied_groups = entries.len().div_ceil(n_mux) as u64;
     stats.counters.groups_executed.fetch_add(occupied_groups, Ordering::Relaxed);
     stats.counters.slots_padded.fetch_add(padded as u64, Ordering::Relaxed);
+    // wasted token-positions in the executed content tensor: empty-slot
+    // rows plus each live row's pad tail — the number bucketing drives
+    // down (a pad-to-max engine wastes (max - len) per request)
+    let wasted = capacity * seq_len - content_tokens;
+    stats.counters.tokens_padded.fetch_add(wasted as u64, Ordering::Relaxed);
+    if let Some(tally) = stats.per_bucket.get(batch.bucket) {
+        tally.waves.fetch_add(1, Ordering::Relaxed);
+        tally.entries.fetch_add(entries.len() as u64, Ordering::Relaxed);
+    }
 
     // --- demux dispatch ----------------------------------------------------
     // share the flat batch output across all responses; each gets an
@@ -362,6 +465,7 @@ mod tests {
         Request {
             id,
             content,
+            bucket: 0,
             submitted: Instant::now(),
             deadline: None,
             done: Completion::cell(cell),
@@ -391,7 +495,7 @@ mod tests {
         let mut scratch = Vec::new();
         let cell = OnceCellSync::new();
         let req = make_req(1, vec![tok.vocab.pad; 4], cell.clone());
-        let eb = ExecBatch { seq: 0, entries: vec![req], formed_at: Instant::now() };
+        let eb = ExecBatch { seq: 0, bucket: 0, entries: vec![req], formed_at: Instant::now() };
         let res = execute_batch(&backend, &template, SlotPolicy::Fill, &stats, eb, &mut scratch);
         assert!(res.is_err(), "short output must surface as a batch failure");
         match cell.wait_timeout(Duration::from_secs(1)).expect("fulfilled, never stranded") {
@@ -423,7 +527,7 @@ mod tests {
                 cells.push(cell.clone());
                 entries.push(make_req(pos as u64, c, cell));
             }
-            let eb = ExecBatch { seq: 1, entries, formed_at: Instant::now() };
+            let eb = ExecBatch { seq: 1, bucket: 0, entries, formed_at: Instant::now() };
             execute_batch(&backend, &template, SlotPolicy::Fill, &stats, eb, &mut scratch)
                 .expect("fake backend executes");
             let c = stats.counters.snapshot();
@@ -436,6 +540,70 @@ mod tests {
                 assert!(cell.wait_timeout(Duration::from_secs(1)).is_some());
             }
         }
+    }
+
+    /// Bucketed templates: shapes shrink with the bucket, the pad row is
+    /// precomputed per bucket, and the stamped tensor matches what the
+    /// full-shape derivation would produce at that length.
+    #[test]
+    fn bucket_template_shrinks_shapes_and_precomputes_the_pad_row() {
+        let b = FakeBackend::new("token", 4, 2, 8, 5);
+        let tok = Tokenizer::new(default_vocab(), b.meta().vocab_size);
+        for bucket_len in [1usize, 3, 8] {
+            let t = MuxTemplate::for_bucket(b.meta(), &tok, bucket_len);
+            assert_eq!(t.seq_len, bucket_len);
+            assert_eq!(t.prefix_len, 4);
+            assert_eq!(t.input_len, 4 + bucket_len);
+            assert_eq!(t.per_slot_len, bucket_len * 5, "token logits scale with the bucket");
+            assert_eq!(t.ids_len(), 2 * 4 * (4 + bucket_len));
+            assert_eq!(t.pad_row(), &tok.pad_row(bucket_len)[..], "one pad row per bucket");
+            let mut scratch = Vec::new();
+            t.stamp(&mut scratch);
+            // every content region is exactly the bucket's pad row
+            for g in 0..2 {
+                for slot in 0..4 {
+                    assert_eq!(&scratch[t.content_range(g, slot)], t.pad_row());
+                }
+            }
+        }
+        // cls per-slot output is bucket-independent
+        let c = FakeBackend::new("cls", 2, 1, 8, 3);
+        let t = MuxTemplate::for_bucket(c.meta(), &tok, 4);
+        assert_eq!(t.per_slot_len, 3);
+    }
+
+    /// `tokens_padded` counts wasted token-positions: empty-slot rows
+    /// plus each live row's pad tail, at the executed bucket length.
+    #[test]
+    fn tokens_padded_counts_wasted_positions_at_the_bucket_length() {
+        let backend = FakeBackend::new("cls", 2, 2, 8, 3); // capacity 4
+        let tok = Tokenizer::new(default_vocab(), backend.meta().vocab_size);
+        let template = MuxTemplate::for_bucket(backend.meta(), &tok, 4);
+        let stats = Stats::for_buckets(&[4, 8]);
+        let mut scratch = Vec::new();
+        // two live requests of 2 and 3 tokens in the 4-bucket
+        let mut cells = Vec::new();
+        let mut entries = Vec::new();
+        for (pos, len) in [(0u64, 2usize), (1, 3)] {
+            let mut c = vec![tok.vocab.pad; len];
+            c[0] = tok.vocab.cls;
+            let cell = OnceCellSync::new();
+            cells.push(cell.clone());
+            entries.push(make_req(pos, c, cell));
+        }
+        let eb = ExecBatch { seq: 0, bucket: 0, entries, formed_at: Instant::now() };
+        execute_batch(&backend, &template, SlotPolicy::Fill, &stats, eb, &mut scratch)
+            .expect("fake backend executes");
+        for cell in cells {
+            assert!(cell.wait_timeout(Duration::from_secs(1)).unwrap().is_ok());
+        }
+        let c = stats.counters.snapshot();
+        // capacity 4 * bucket 4 = 16 positions, 5 carried content tokens
+        assert_eq!(c.tokens_padded, 16 - 5);
+        assert_eq!(c.slots_padded, 2);
+        let buckets = stats.bucket_snapshot();
+        assert_eq!(buckets[0], (4, 1, 2), "bucket 4: one wave, two entries");
+        assert_eq!(buckets[1], (8, 0, 0), "bucket 8 untouched");
     }
 
     /// Property: poison the reused ids scratch between batches; after
@@ -478,7 +646,8 @@ mod tests {
                     contents.push(c.clone());
                     entries.push(make_req(pos as u64, c, cell));
                 }
-                let eb = ExecBatch { seq: round, entries, formed_at: Instant::now() };
+                let eb =
+                    ExecBatch { seq: round, bucket: 0, entries, formed_at: Instant::now() };
                 execute_batch(&backend, &template, SlotPolicy::Fill, &stats, eb, &mut scratch)
                     .map_err(|e| e.to_string())?;
                 let mut first: Option<Response> = None;

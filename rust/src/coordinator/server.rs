@@ -240,8 +240,15 @@ pub fn handle_line(line: &str, engine: &dyn Submit) -> Option<String> {
         "STATS" => {
             let c = engine.counters();
             Some(format!(
-                "OK submitted={} completed={} rejected={} groups={} padded={} expired={}",
-                c.submitted, c.completed, c.rejected, c.groups_executed, c.slots_padded, c.expired
+                "OK submitted={} completed={} rejected={} groups={} padded={} \
+                 tokens_padded={} expired={}",
+                c.submitted,
+                c.completed,
+                c.rejected,
+                c.groups_executed,
+                c.slots_padded,
+                c.tokens_padded,
+                c.expired
             ))
         }
         "CLS" | "TOK" => {
@@ -252,7 +259,8 @@ pub fn handle_line(line: &str, engine: &dyn Submit) -> Option<String> {
             let payload = if cmd == "CLS" {
                 Payload::Text(rest.to_string())
             } else {
-                match engine.tokenizer().encode_framed(&[rest], engine.seq_len()) {
+                // unpadded: the engine assigns the bucket and pads there
+                match engine.tokenizer().encode_framed_unpadded(&[rest], engine.seq_len()) {
                     Ok(ids) => Payload::Framed(ids),
                     Err(e) => return Some(format!("ERR tokenize: {e}")),
                 }
@@ -445,19 +453,55 @@ impl<W: Write + Send + 'static> PipelinedConn<W> {
         let c = self.engine.counters();
         let l = self.engine.latency();
         let qw = self.engine.queue_wait();
+        let status = self.engine.lane_status();
         // per-lane health: which Ns are alive, how many waves each
-        // pulled, and what a dead lane handed back to the shared queue
-        let lanes: Vec<Json> = self
-            .engine
-            .lane_status()
+        // pulled, what a dead lane handed back to the shared queue, and
+        // the per-bucket wave/entry split
+        let lanes: Vec<Json> = status
             .iter()
             .map(|lane| {
+                let lane_buckets: Vec<Json> = lane
+                    .buckets
+                    .iter()
+                    .map(|b| {
+                        obj(vec![
+                            ("seq_len", num(b.seq_len as f64)),
+                            ("waves", num(b.waves as f64)),
+                            ("entries", num(b.entries as f64)),
+                        ])
+                    })
+                    .collect();
                 obj(vec![
                     ("n_mux", num(lane.n_mux as f64)),
                     ("alive", Json::Bool(lane.alive)),
                     ("pulls", num(lane.pulls as f64)),
                     ("requeued", num(lane.requeued as f64)),
                     ("completed", num(lane.completed as f64)),
+                    ("buckets", Json::Arr(lane_buckets)),
+                ])
+            })
+            .collect();
+        // engine-wide per-bucket aggregate (lanes share one registry)
+        let mut agg: Vec<(usize, u64, u64)> = Vec::new();
+        for lane in &status {
+            for b in &lane.buckets {
+                match agg.iter_mut().find(|(l, _, _)| *l == b.seq_len) {
+                    Some(slot) => {
+                        slot.1 += b.waves;
+                        slot.2 += b.entries;
+                    }
+                    None => agg.push((b.seq_len, b.waves, b.entries)),
+                }
+            }
+        }
+        agg.sort_unstable_by_key(|&(l, _, _)| l);
+        let buckets: Vec<Json> = agg
+            .into_iter()
+            .map(|(seq_len, waves, entries)| {
+                obj(vec![
+                    ("seq_len", num(seq_len as f64)),
+                    ("waves", num(waves as f64)),
+                    ("entries", num(entries as f64)),
                 ])
             })
             .collect();
@@ -472,6 +516,7 @@ impl<W: Write + Send + 'static> PipelinedConn<W> {
                     ("expired", num(c.expired as f64)),
                     ("groups", num(c.groups_executed as f64)),
                     ("padded", num(c.slots_padded as f64)),
+                    ("tokens_padded", num(c.tokens_padded as f64)),
                     ("intake_waves", num(c.intake_waves as f64)),
                     ("scratch_reallocs", num(c.scratch_reallocs as f64)),
                     ("queue_depth", num(self.engine.queue_depth() as f64)),
@@ -479,6 +524,7 @@ impl<W: Write + Send + 'static> PipelinedConn<W> {
                     ("p99_us", num(l.p99_ns as f64 / 1e3)),
                     ("queue_wait_p50_us", num(qw.p50_ns as f64 / 1e3)),
                     ("queue_wait_p99_us", num(qw.p99_ns as f64 / 1e3)),
+                    ("buckets", Json::Arr(buckets)),
                     ("lanes", Json::Arr(lanes)),
                 ]),
             ),
@@ -733,20 +779,24 @@ mod tests {
     #[test]
     fn v2_batch_mixes_success_and_typed_errors() {
         let (mut conn, writer) = new_conn(fake_cls_engine());
-        // item 0: valid framed ids; item 1: wrong frame length
+        // item 0: valid framed ids; item 1: over the model max (9 > 8);
+        // item 2: short unpadded ids are now *valid* (bucketed)
         assert!(conn.handle_line(
             r#"{"id":"b1","op":"batch","items":[
                 {"op":"classify","ids":[1,45,46,2,0,0,0,0]},
-                {"op":"classify","ids":[1,2,3]}]}"#
+                {"op":"classify","ids":[1,2,3,4,5,6,7,8,9]},
+                {"op":"classify","ids":[1,45,46,2]}]}"#
                 .replace('\n', " ")
                 .trim()
         ));
         let ls = wait_for_lines(&writer, 1);
         assert_eq!(ls.len(), 1, "batch answers on one line: {ls:?}");
         assert!(ls[0].contains("\"id\":\"b1\""), "{}", ls[0]);
-        // sum(1+45+46+2)=94 -> pred 1
-        assert!(ls[0].contains("\"pred\":1"), "{}", ls[0]);
-        assert!(ls[0].contains("bad_frame"), "{}", ls[0]);
+        // sum(1+45+46+2)=94 -> pred 1, for both the padded and the
+        // unpadded form of the same content
+        assert_eq!(ls[0].matches("\"pred\":1").count(), 2, "{}", ls[0]);
+        assert!(ls[0].contains("too_long"), "{}", ls[0]);
+        assert!(!ls[0].contains("bad_frame"), "{}", ls[0]);
     }
 
     #[test]

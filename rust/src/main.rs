@@ -24,7 +24,13 @@ fn main() -> Result<()> {
         .describe("backend", "pjrt", "pjrt | native (pure-rust forward, no PJRT)")
         .describe("addr", "127.0.0.1:7071", "TCP bind address for serve")
         .describe("max-wait-ms", "5", "batcher deadline")
-        .describe("queue-cap", "1024", "admission queue capacity")
+        .describe("queue-cap", "1024", "admission queue capacity (per bucket)")
+        .describe(
+            "buckets",
+            "",
+            "sequence-length buckets, e.g. 32,64,128 (model max always included; \
+             native backend only)",
+        )
         .describe("rotate-slots", "false", "rotate slot assignment (paper A3)")
         .describe("adaptive", "false", "serve an adaptive-N router over every N of a profile")
         .describe("profile", "", "profile for --adaptive (default: first with most N lanes)");
@@ -79,6 +85,7 @@ fn main() -> Result<()> {
             let builder = EngineBuilder::new()
                 .max_wait_ms(args.u64("max-wait-ms", 5))
                 .queue_cap(args.usize("queue-cap", 1024))
+                .buckets(args.usize_list("buckets", &[]))
                 .slot_policy(if args.bool("rotate-slots", false) {
                     SlotPolicy::RotateOffset
                 } else {
@@ -160,8 +167,9 @@ fn main() -> Result<()> {
             let server = builder.serve(engine.clone())?;
             println!(
                 "serving on {} — v1: CLS/TOK/STATS/QUIT, v2: line JSON \
-                 (classify/tag/batch/stats, pipelined)",
-                server.local_addr
+                 (classify/tag/batch/stats, pipelined); seq-len buckets {:?}",
+                server.local_addr,
+                engine.buckets()
             );
             // watch lane health: a dead lane stops pulling from the
             // shared queue and is reported once, loudly; the process

@@ -91,12 +91,29 @@ impl InferenceBackend for FakeBackend {
     }
 
     fn run_ids(&self, ids: &[i32]) -> anyhow::Result<Vec<f32>> {
+        self.run_ids_at(ids, self.meta.seq_len)
+    }
+
+    /// Shape-polymorphic: any content length up to the baked maximum.
+    fn supports_seq_len(&self, seq_len: usize) -> bool {
+        (1..=self.meta.seq_len).contains(&seq_len)
+    }
+
+    fn run_ids_at(&self, ids: &[i32], seq_len: usize) -> anyhow::Result<Vec<f32>> {
         let m = &self.meta;
         anyhow::ensure!(
-            ids.len() == m.ids_len(),
-            "fake backend: ids length {} != expected {}",
+            self.supports_seq_len(seq_len),
+            "fake backend: seq_len {seq_len} outside 1..={}",
+            m.seq_len
+        );
+        let prefix = m.input_len - m.seq_len;
+        let input_len = prefix + seq_len;
+        let rows = m.batch * m.n_mux;
+        anyhow::ensure!(
+            ids.len() == rows * input_len,
+            "fake backend: ids length {} != expected {} at seq_len {seq_len}",
             ids.len(),
-            m.ids_len()
+            rows * input_len
         );
         let n_calls = self.calls.fetch_add(1, Ordering::Relaxed);
         if let Some(limit) = self.fail_after {
@@ -107,24 +124,26 @@ impl InferenceBackend for FakeBackend {
         if !self.delay.is_zero() {
             std::thread::sleep(self.delay);
         }
-        let prefix = m.input_len - m.seq_len;
-        let rows = m.batch * m.n_mux;
-        let mut out = vec![0.0f32; m.output_len()];
+        let per_slot = match m.task.as_str() {
+            "cls" => m.n_classes,
+            "token" => seq_len * m.n_classes,
+            other => bail!("fake backend: unsupported task {other}"),
+        };
+        let mut out = vec![0.0f32; rows * per_slot];
         for r in 0..rows {
-            let content = &ids[r * m.input_len + prefix..(r + 1) * m.input_len];
+            let content = &ids[r * input_len + prefix..(r + 1) * input_len];
             match m.task.as_str() {
                 "cls" => {
                     let k = Self::expected_class(content, m.n_classes);
                     out[r * m.n_classes + k] = 1.0;
                 }
-                "token" => {
-                    let base = r * m.seq_len * m.n_classes;
+                _ => {
+                    let base = r * seq_len * m.n_classes;
                     for (j, &id) in content.iter().enumerate() {
                         let k = Self::expected_tag(id, j, m.n_classes);
                         out[base + j * m.n_classes + k] = 1.0;
                     }
                 }
-                other => bail!("fake backend: unsupported task {other}"),
             }
         }
         Ok(out)
@@ -170,6 +189,37 @@ mod tests {
                 FakeBackend::expected_tag(10 + j as i32, j, 5)
             );
         }
+    }
+
+    #[test]
+    fn run_ids_at_serves_shorter_buckets_with_same_predictions() {
+        // pad id is 0, so a padded-to-max row and its unpadded bucket row
+        // sum identically: the prediction must not depend on the bucket
+        let b = FakeBackend::new("cls", 2, 1, 8, 3);
+        let m = b.meta().clone();
+        let content = [1i32, 50, 7, 2]; // 4 tokens, bucket 4
+        let make_ids = |seq: usize| {
+            let li = m.n_mux + seq;
+            let mut ids = vec![0i32; m.n_mux * li];
+            for slot in 0..2 {
+                let row = &mut ids[slot * li..(slot + 1) * li];
+                row[..2].copy_from_slice(&[3, 3]);
+                row[slot] = 4 + slot as i32;
+                row[2..2 + content.len()].copy_from_slice(&content);
+            }
+            ids
+        };
+        let out_full = b.run_ids(&make_ids(8)).unwrap();
+        let out_short = b.run_ids_at(&make_ids(4), 4).unwrap();
+        assert_eq!(out_short.len(), 2 * 3, "cls output is bucket-independent");
+        assert_eq!(out_full, out_short, "same logits at every bucket");
+        // token task output shrinks with the bucket
+        let t = FakeBackend::new("token", 1, 1, 8, 5);
+        let ids: Vec<i32> = vec![3, 10, 11, 12];
+        let out = t.run_ids_at(&ids, 3).unwrap();
+        assert_eq!(out.len(), 3 * 5);
+        assert!(t.run_ids_at(&ids, 9).is_err(), "beyond the baked max");
+        assert!(t.run_ids_at(&ids, 0).is_err(), "zero-length bucket");
     }
 
     #[test]

@@ -28,9 +28,36 @@ pub use weights::WeightsFile;
 /// coordinator only ever calls these two methods on the hot path.
 pub trait InferenceBackend: Send + Sync {
     /// Shape / task metadata the engine must agree on with the model.
+    /// `meta().seq_len` is the *maximum* sequence length; shape-
+    /// polymorphic backends also execute shorter bucketed shapes (see
+    /// [`InferenceBackend::run_ids_at`]).
     fn meta(&self) -> &ArtifactMeta;
 
     /// Execute on raw token ids (flattened `(batch, n_mux, input_len)`),
     /// returning flattened f32 logits of length `meta().output_len()`.
     fn run_ids(&self, ids: &[i32]) -> anyhow::Result<Vec<f32>>;
+
+    /// Can this backend execute a wave whose content rows are `seq_len`
+    /// tokens long? Compiled backends (PJRT) bake one shape, so the
+    /// default accepts only `meta().seq_len`; the native and fake
+    /// backends accept any `1..=meta().seq_len` — that is what lets the
+    /// scheduler run sequence-length buckets.
+    fn supports_seq_len(&self, seq_len: usize) -> bool {
+        seq_len == self.meta().seq_len
+    }
+
+    /// Execute at a runtime sequence length: `ids` is the flattened
+    /// `(batch, n_mux, prefix_len + seq_len)` tensor and the result has
+    /// `batch * n_mux * demux_len(seq_len) * n_classes` logits. The
+    /// default only serves the baked shape and delegates to
+    /// [`InferenceBackend::run_ids`].
+    fn run_ids_at(&self, ids: &[i32], seq_len: usize) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(
+            seq_len == self.meta().seq_len,
+            "{}: backend only executes its baked seq_len {} (asked for {seq_len})",
+            self.meta().name,
+            self.meta().seq_len
+        );
+        self.run_ids(ids)
+    }
 }

@@ -2,14 +2,18 @@
 //!
 //! Every intermediate of one forward — residual stream, QKV, attention
 //! scores, FFN hidden, demux activations — lives in a [`Workspace`]
-//! whose buffers are sized once from the artifact's static shapes.
-//! Workspaces are checked out of a shared [`ArenaPool`] per `run_ids`
-//! call and returned afterwards, so each concurrent caller settles on
-//! its own arena and steady-state forwards allocate no tensors. The
+//! whose buffers are sized from the *runtime* shape of the call: since
+//! the forward became shape-polymorphic, the pool is keyed on the
+//! sequence-length bucket, and a checkout only reuses a workspace built
+//! for the same bucket (buffer sizes are exact, not sliced — `forward`
+//! walks whole buffers with `chunks_exact`). Each concurrent caller
+//! settles on one arena **per bucket it serves**, so a mixed-bucket
+//! serving loop still allocates no tensors after per-bucket warmup. The
 //! [`ArenaPool::reallocs`] counter is the native analogue of the
 //! scheduler's `scratch_reallocs` invariant: it moves only while new
-//! arenas are being materialized, and the `native_forward` bench gates
-//! on it staying flat after warmup.
+//! `(bucket, worker)` arenas are being materialized, and the
+//! `native_forward` / `shape_buckets` benches gate on it staying flat
+//! after warmup.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -65,9 +69,12 @@ impl Workspace {
     }
 }
 
-/// Reusable [`Workspace`] pool: one per concurrent caller after warmup.
+/// Reusable [`Workspace`] pool keyed on the sequence-length bucket: one
+/// workspace per (bucket, concurrent caller) after warmup.
 pub(crate) struct ArenaPool {
-    free: Mutex<Vec<Workspace>>,
+    /// `(bucket seq_len, workspace)` — small linear scan; bucket counts
+    /// are single digits
+    free: Mutex<Vec<(usize, Workspace)>>,
     materializations: AtomicU64,
 }
 
@@ -77,21 +84,25 @@ impl ArenaPool {
         ArenaPool { free: Mutex::new(Vec::new()), materializations: AtomicU64::new(0) }
     }
 
-    /// Pop a reusable workspace, or materialize a new one (counted).
+    /// Pop a reusable workspace built for `dims.seq_len`, or materialize
+    /// a new one (counted).
     pub fn checkout(&self, dims: &Dims) -> Workspace {
-        if let Some(ws) = self.free.lock().unwrap().pop() {
-            return ws;
+        {
+            let mut free = self.free.lock().unwrap();
+            if let Some(i) = free.iter().position(|(l, _)| *l == dims.seq_len) {
+                return free.swap_remove(i).1;
+            }
         }
         self.materializations.fetch_add(1, Ordering::Relaxed);
         Workspace::new(dims)
     }
 
-    pub fn give_back(&self, ws: Workspace) {
-        self.free.lock().unwrap().push(ws);
+    pub fn give_back(&self, seq_len: usize, ws: Workspace) {
+        self.free.lock().unwrap().push((seq_len, ws));
     }
 
-    /// Arenas materialized so far. Flat after warmup is the
-    /// allocation-free steady-state invariant the bench enforces.
+    /// Arenas materialized so far. Flat after per-bucket warmup is the
+    /// allocation-free steady-state invariant the benches enforce.
     pub fn reallocs(&self) -> u64 {
         self.materializations.load(Ordering::Relaxed)
     }

@@ -54,11 +54,36 @@ fn gelu(x: f32) -> f32 {
     0.5 * x * (1.0 + (0.797_884_6 * (x + 0.044_715 * x * x * x)).tanh())
 }
 
-/// One unfused scalar forward over `ids` (flattened `(B, N, input_len)`).
+/// One unfused scalar forward over `ids` (flattened `(B, N, input_len)`)
+/// at the artifact's full sequence length.
 pub fn forward(raw: &RawWeights, meta: &ArtifactMeta, ids: &[i32]) -> Result<Vec<f32>> {
+    forward_at(raw, meta, meta.seq_len, ids)
+}
+
+/// The scalar forward at a runtime sequence length `seq_len <=
+/// meta.seq_len` (a bucket): `ids` is flattened `(B, N, n_mux +
+/// seq_len)`. Parameterized exactly like the fused native path so the
+/// bucketed parity proptest can pin every bucket against this oracle.
+pub fn forward_at(
+    raw: &RawWeights,
+    meta: &ArtifactMeta,
+    seq_len: usize,
+    ids: &[i32],
+) -> Result<Vec<f32>> {
     let b = meta.batch;
     let n = meta.n_mux;
-    let li = meta.input_len;
+    ensure!(
+        (1..=meta.seq_len).contains(&seq_len),
+        "reference: seq_len {seq_len} outside 1..={}",
+        meta.seq_len
+    );
+    ensure!(
+        meta.input_len == meta.seq_len + n,
+        "reference: prefix layout {} != {} + {n}",
+        meta.input_len,
+        meta.seq_len
+    );
+    let li = n + seq_len;
     let d = meta.d_model;
     ensure!(ids.len() == b * n * li, "reference: ids length {}", ids.len());
     ensure!(meta.demux == "index_embed", "reference: demux {}", meta.demux);
@@ -221,11 +246,10 @@ pub fn forward(raw: &RawWeights, meta: &ArtifactMeta, ids: &[i32]) -> Result<Vec
     let hfinal = layer_norm(&x, tensor(raw, "ln_f/g")?.1, tensor(raw, "ln_f/b")?.1, d);
 
     // ---- index-embedding demux + head ------------------------------------
-    let prefix = li - meta.seq_len;
-    ensure!(prefix == n, "reference: prefix layout {prefix} != n_mux {n}");
+    let prefix = n;
     let lp = match meta.task.as_str() {
         "cls" => 1,
-        "token" => meta.seq_len,
+        "token" => seq_len,
         other => bail!("reference: unsupported task '{other}'"),
     };
     let w1h = tensor(raw, "demux/w1h")?.1;

@@ -20,6 +20,10 @@ pub struct Tokenizer {
 pub enum TokenizeError {
     UnknownWord(String),
     ContentIdOutOfRange(usize),
+    /// The framed row (`[CLS]` + content + separators) does not fit in
+    /// `max` positions. Returned instead of silently truncating — a
+    /// truncated tail used to corrupt the end of the sentence.
+    TooLong { got: usize, max: usize },
 }
 
 impl std::fmt::Display for TokenizeError {
@@ -27,6 +31,9 @@ impl std::fmt::Display for TokenizeError {
         match self {
             TokenizeError::UnknownWord(w) => write!(f, "unknown word '{w}'"),
             TokenizeError::ContentIdOutOfRange(k) => write!(f, "content id t{k} out of range"),
+            TokenizeError::TooLong { got, max } => {
+                write!(f, "framed input is {got} tokens, max is {max}")
+            }
         }
     }
 }
@@ -75,17 +82,34 @@ impl Tokenizer {
         text.split_whitespace().map(|w| self.token_id(w)).collect()
     }
 
-    /// `[CLS] part0... [SEP] part1... [SEP]` padded/truncated to seq_len —
-    /// the exact frame `python/compile/data.py::_frame` produces.
+    /// `[CLS] part0... [SEP] part1... [SEP]` padded to exactly `seq_len`
+    /// — the frame `python/compile/data.py::_frame` produces. Inputs
+    /// that do not fit are rejected with [`TokenizeError::TooLong`]
+    /// (never silently truncated: a clipped tail corrupts the sentence).
     pub fn encode_framed(&self, parts: &[&str], seq_len: usize) -> Result<Vec<i32>, TokenizeError> {
-        let mut row = Vec::with_capacity(seq_len);
+        let mut row = self.encode_framed_unpadded(parts, seq_len)?;
+        row.resize(seq_len, self.vocab.pad);
+        Ok(row)
+    }
+
+    /// The framed row **without padding**: `[CLS] part0... [SEP] ...`,
+    /// validated to fit in `max_len` positions. This is the bucketed
+    /// submission form — the engine pads to the request's sequence-length
+    /// bucket at batch assembly, not here.
+    pub fn encode_framed_unpadded(
+        &self,
+        parts: &[&str],
+        max_len: usize,
+    ) -> Result<Vec<i32>, TokenizeError> {
+        let mut row = Vec::with_capacity(max_len.min(64));
         row.push(self.vocab.cls);
         for p in parts {
             row.extend(self.encode(p)?);
             row.push(self.vocab.sep);
         }
-        row.truncate(seq_len);
-        row.resize(seq_len, self.vocab.pad);
+        if row.len() > max_len {
+            return Err(TokenizeError::TooLong { got: row.len(), max: max_len });
+        }
         Ok(row)
     }
 
@@ -184,12 +208,38 @@ mod tests {
     }
 
     #[test]
-    fn framed_truncates_long_input() {
+    fn framed_rejects_long_input_instead_of_truncating() {
         let t = tok();
         let long = (0..20).map(|i| format!("t{i}")).collect::<Vec<_>>().join(" ");
-        let row = t.encode_framed(&[&long], 8).unwrap();
+        // 20 content tokens + [CLS] + [SEP] = 22 > 8: typed error, not a
+        // silently clipped tail
+        match t.encode_framed(&[&long], 8) {
+            Err(TokenizeError::TooLong { got, max }) => {
+                assert_eq!((got, max), (22, 8));
+            }
+            other => panic!("expected TooLong, got {other:?}"),
+        }
+        // exactly at the limit still fits
+        let six = (0..6).map(|i| format!("t{i}")).collect::<Vec<_>>().join(" ");
+        let row = t.encode_framed(&[&six], 8).unwrap();
         assert_eq!(row.len(), 8);
         assert_eq!(row[0], 1);
+        assert_eq!(row[7], 2, "no padding needed at the exact fit");
+    }
+
+    #[test]
+    fn unpadded_frame_has_no_padding_and_validates_length() {
+        let t = tok();
+        let row = t.encode_framed_unpadded(&["t1 t2", "t3"], 10).unwrap();
+        assert_eq!(row, vec![1, 45, 46, 2, 47, 2], "no trailing [PAD]s");
+        // the padded form is the unpadded form plus [PAD] fill
+        let padded = t.encode_framed(&["t1 t2", "t3"], 10).unwrap();
+        assert_eq!(&padded[..row.len()], &row[..]);
+        assert!(padded[row.len()..].iter().all(|&x| x == 0));
+        assert!(matches!(
+            t.encode_framed_unpadded(&["t1 t2 t3 t4"], 4),
+            Err(TokenizeError::TooLong { got: 6, max: 4 })
+        ));
     }
 
     #[test]

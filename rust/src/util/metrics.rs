@@ -188,6 +188,11 @@ pub struct Counters {
     pub expired: AtomicU64,
     pub groups_executed: AtomicU64,
     pub slots_padded: AtomicU64,
+    /// wasted token-positions in executed content tensors: empty-slot
+    /// rows plus each live row's pad tail, at the executed bucket
+    /// length — `slots_padded` counts whole empty slots, this counts
+    /// the finer-grained padding waste that length bucketing removes
+    pub tokens_padded: AtomicU64,
     /// batcher intake drains (lock round-trips); requests/wave =
     /// submitted / intake_waves is the hot-path amortization factor
     pub intake_waves: AtomicU64,
@@ -208,6 +213,7 @@ impl Counters {
             expired: self.expired.load(Ordering::Relaxed),
             groups_executed: self.groups_executed.load(Ordering::Relaxed),
             slots_padded: self.slots_padded.load(Ordering::Relaxed),
+            tokens_padded: self.tokens_padded.load(Ordering::Relaxed),
             intake_waves: self.intake_waves.load(Ordering::Relaxed),
             batches_formed: self.batches_formed.load(Ordering::Relaxed),
             scratch_reallocs: self.scratch_reallocs.load(Ordering::Relaxed),
@@ -223,6 +229,7 @@ pub struct CounterSnapshot {
     pub expired: u64,
     pub groups_executed: u64,
     pub slots_padded: u64,
+    pub tokens_padded: u64,
     pub intake_waves: u64,
     pub batches_formed: u64,
     pub scratch_reallocs: u64,
@@ -238,6 +245,7 @@ impl CounterSnapshot {
             expired: self.expired + o.expired,
             groups_executed: self.groups_executed + o.groups_executed,
             slots_padded: self.slots_padded + o.slots_padded,
+            tokens_padded: self.tokens_padded + o.tokens_padded,
             intake_waves: self.intake_waves + o.intake_waves,
             batches_formed: self.batches_formed + o.batches_formed,
             scratch_reallocs: self.scratch_reallocs + o.scratch_reallocs,

@@ -47,13 +47,23 @@ fn framed_row(k: i32) -> (Vec<i32>, usize) {
 #[test]
 fn typed_submit_errors_are_distinct() {
     let coord = cls_engine(0);
-    // bad frame: wrong length
-    match coord.submit(InferenceRequest::classify_framed(vec![1, 2, 3])).err() {
+    // over the model max: typed TooLong, never a silent truncation
+    match coord.submit(InferenceRequest::classify_framed(vec![1; SEQ_LEN + 2])).err() {
+        Some(SubmitError::TooLong { got, max }) => {
+            assert_eq!((got, max), (SEQ_LEN + 2, SEQ_LEN));
+        }
+        other => panic!("expected TooLong, got {other:?}"),
+    }
+    // empty frame: BadFrame
+    match coord.submit(InferenceRequest::classify_framed(Vec::new())).err() {
         Some(SubmitError::BadFrame { expected, got }) => {
-            assert_eq!((expected, got), (SEQ_LEN, 3));
+            assert_eq!((expected, got), (SEQ_LEN, 0));
         }
         other => panic!("expected BadFrame, got {other:?}"),
     }
+    // short unpadded frames are admissible now (bucketed admission)
+    let h = coord.submit(InferenceRequest::classify_framed(vec![1, 45, 2])).unwrap();
+    assert!(h.wait().is_ok());
     // tokenize: unknown word
     match coord.submit(InferenceRequest::classify_text("hello world")).err() {
         Some(SubmitError::Tokenize(_)) => {}

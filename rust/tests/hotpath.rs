@@ -110,6 +110,60 @@ fn reused_buffers_never_leak_across_batches() {
     assert_eq!(c.scratch_reallocs, 0, "scratch must never grow mid-serving");
 }
 
+/// Mixed-length serving keeps every hot-path invariant: per-bucket
+/// worker scratches never grow (`scratch_reallocs == 0`), demux routes
+/// every unpadded row back to its own caller, and the padding-waste
+/// counter reflects bucket-length (not max-length) padding.
+#[test]
+fn bucketed_mixed_lengths_keep_scratch_invariant_and_route_correctly() {
+    let coord = Arc::new(
+        EngineBuilder::new()
+            .max_wait_ms(1)
+            .queue_cap(4096)
+            .buckets(vec![2, 4])
+            .build_backend(Arc::new(FakeBackend::new(
+                "cls", N_MUX, BATCH, SEQ_LEN, N_CLASSES,
+            )))
+            .unwrap(),
+    );
+    // unpadded rows of every length 1..=SEQ_LEN, repeated across waves
+    let mut total = 0u64;
+    for wave in 0..20 {
+        let handles: Vec<_> = (1..=SEQ_LEN)
+            .map(|len| {
+                let mut r = vec![0i32; len];
+                r[0] = 1; // [CLS]
+                if len > 1 {
+                    r[1] = 44 + ((wave * 17 + len) % 200) as i32;
+                }
+                let want = FakeBackend::expected_class(&r, N_CLASSES);
+                (want, coord.submit_framed(r).unwrap())
+            })
+            .collect();
+        for (want, h) in handles {
+            let r = h
+                .wait_timeout(Duration::from_secs(10))
+                .expect("fulfilled")
+                .expect("response");
+            assert_eq!(r.pred_class(), want, "wave {wave}: bucketed demux crossed wires");
+            total += 1;
+        }
+    }
+    let c = coord.counters();
+    assert_eq!(c.completed, total);
+    assert_eq!(c.scratch_reallocs, 0, "per-bucket scratch must never grow mid-serving");
+    assert!(c.tokens_padded > 0, "partial waves + short rows leave padding");
+    // the per-bucket split accounts for every request
+    let lanes = coord.lane_status();
+    let entries: u64 = lanes[0].buckets.iter().map(|b| b.entries).sum();
+    assert_eq!(entries, total);
+    assert_eq!(
+        lanes[0].buckets.iter().map(|b| b.seq_len).collect::<Vec<_>>(),
+        vec![2, 4, SEQ_LEN]
+    );
+    assert!(lanes[0].buckets.iter().all(|b| b.waves > 0), "{:?}", lanes[0].buckets);
+}
+
 #[test]
 fn wave_and_queue_wait_accounting_is_populated() {
     let coord = engine(2);

@@ -62,6 +62,80 @@ fn prop_native_forward_matches_scalar_reference() {
     });
 }
 
+/// Property: the fused native forward at **every bucket length** of a
+/// random model matches the scalar reference parameterized the same way
+/// (`reference::forward_at`), within 1e-4, across tasks and thread
+/// counts. This is the bucketed twin of the full-shape proptest above —
+/// it pins the whole shape-polymorphic surface: runtime attention
+/// shapes, positional-table prefixes, demux offsets, per-bucket arenas.
+#[test]
+fn prop_bucketed_native_forward_matches_scalar_reference_at_every_bucket() {
+    datamux::util::proptest::check("bucketed native forward vs reference", 6, |g| {
+        let n_heads = [1usize, 2][g.rng.below(2)];
+        let d_model = n_heads * [4usize, 8][g.rng.below(2)];
+        let n_layers = g.rng.range(1, 3);
+        let n_mux = g.rng.range(1, 4);
+        let batch = g.rng.range(1, 3);
+        let seq_len_max = g.rng.range(6, 12);
+        let n_classes = g.rng.range(2, 5);
+        let task = if g.rng.below(2) == 0 { "cls" } else { "token" };
+        let threads = if g.rng.below(2) == 0 { 1 } else { 3 };
+        let seed = g.rng.next_u64();
+        let meta = synthetic_meta(
+            task, n_mux, batch, seq_len_max, d_model, n_layers, n_heads, n_classes,
+        );
+        let raw = RawWeights::random(&meta, 2 * d_model, seed);
+        let wf = WeightsFile::parse(raw.to_blob()).map_err(|e| e.to_string())?;
+        let backend = NativeBackend::from_weights(meta.clone(), wf)
+            .map_err(|e| e.to_string())?
+            .with_threads(threads);
+        // every bucket length of this model, not a sample
+        for bucket in 1..=seq_len_max {
+            let li = n_mux + bucket;
+            let ids: Vec<i32> = (0..batch * n_mux * li)
+                .map(|_| g.rng.below(meta.vocab_size) as i32)
+                .collect();
+            let got = backend.run_ids_at(&ids, bucket).map_err(|e| e.to_string())?;
+            let want =
+                reference::forward_at(&raw, &meta, bucket, &ids).map_err(|e| e.to_string())?;
+            if got.len() != want.len() {
+                return Err(format!(
+                    "bucket {bucket}: output length {} != reference {}",
+                    got.len(),
+                    want.len()
+                ));
+            }
+            for i in 0..got.len() {
+                let tol = 1e-4 * (1.0 + want[i].abs());
+                if (got[i] - want[i]).abs() > tol {
+                    return Err(format!(
+                        "task {task} d={d_model} h={n_heads} l={n_layers} n={n_mux} \
+                         b={batch} threads={threads} bucket={bucket}: logit {i} fused {} \
+                         vs reference {}",
+                        got[i], want[i]
+                    ));
+                }
+            }
+        }
+        // per-bucket arenas settle: a second pass over all buckets must
+        // not materialize anything new
+        let before = backend.arena_reallocs();
+        for bucket in 1..=seq_len_max {
+            let li = n_mux + bucket;
+            let ids: Vec<i32> = vec![1; batch * n_mux * li];
+            backend.run_ids_at(&ids, bucket).map_err(|e| e.to_string())?;
+        }
+        if backend.arena_reallocs() != before {
+            return Err(format!(
+                "arena grew after warmup: {} -> {}",
+                before,
+                backend.arena_reallocs()
+            ));
+        }
+        Ok(())
+    });
+}
+
 /// End-to-end over real math with zero artifacts: TCP server, wire
 /// protocol v2, typed engine underneath, `NativeBackend` doing the
 /// actual transformer forward. Requests are submitted lock-step so each
@@ -142,6 +216,133 @@ fn native_end_to_end_server_v2_with_zero_artifacts() {
     writer.write_all(b"{\"op\":\"quit\"}\n").unwrap();
     server.stop();
     assert!(engine.counters().completed >= 8);
+}
+
+/// End-to-end bucketed serving over real math: a TCP server on a
+/// native-backend engine with buckets {4, 8, 16}, driven by a
+/// mixed-length workload. Pins: (a) per-request correctness at every
+/// bucket against a hand-assembled single-slot execution of the same
+/// backend, (b) zero rejects across the whole run, (c) v2 STATS
+/// reporting per-bucket waves/entries and the padding-waste counter.
+#[test]
+fn bucketed_server_serves_mixed_lengths_with_zero_rejects() {
+    const SEQ_MAX: usize = 16;
+    const NCLS: usize = 3;
+    let backend =
+        Arc::new(NativeBackend::random("cls", 2, 1, SEQ_MAX, 16, 1, 2, NCLS, 7).unwrap());
+    let meta = backend.meta().clone();
+    let tok = Tokenizer::new(default_vocab(), meta.vocab_size);
+    let bucket_lens = [4usize, 8, 16];
+    let bucket_of = |len: usize| *bucket_lens.iter().find(|&&b| b >= len).unwrap();
+
+    // oracle: run the same unpadded content alone (slot 0) through the
+    // backend at its bucket's shape
+    let expected_pred = |content: &[i32]| -> usize {
+        let b = bucket_of(content.len());
+        let template = MuxTemplate::for_bucket(&meta, &tok, b);
+        let mut ids = Vec::new();
+        template.stamp(&mut ids);
+        let range = template.content_range(0, 0);
+        ids[range][..content.len()].copy_from_slice(content);
+        let out = backend.run_ids_at(&ids, b).unwrap();
+        argmax(&out[..NCLS])
+    };
+
+    let engine = Arc::new(
+        EngineBuilder::new()
+            .max_wait_ms(0)
+            .buckets(vec![4, 8])
+            .build_backend(backend.clone())
+            .unwrap(),
+    );
+    assert_eq!(engine.buckets(), vec![4, 8, 16]);
+    let server = Server::start(
+        engine.clone(),
+        ServerConfig { addr: "127.0.0.1:0".into(), max_connections: 2, ..Default::default() },
+    )
+    .unwrap();
+    let stream = TcpStream::connect(server.local_addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    // lock-step phase: one request per bucket class, correctness pinned
+    let mut used_lens = Vec::new();
+    for (i, body) in [1usize, 2, 5, 6, 11, 14].into_iter().enumerate() {
+        let text: String =
+            (0..body).map(|k| format!("t{}", (i * 7 + k) % 50)).collect::<Vec<_>>().join(" ");
+        let content = tok.encode_framed_unpadded(&[&text], SEQ_MAX).unwrap();
+        used_lens.push(content.len());
+        let want = expected_pred(&content);
+        let ids_json: Vec<String> = content.iter().map(|x| x.to_string()).collect();
+        let line = format!(
+            "{{\"id\":\"m{i}\",\"op\":\"classify\",\"ids\":[{}]}}\n",
+            ids_json.join(",")
+        );
+        writer.write_all(line.as_bytes()).unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        let v = Json::parse(reply.trim()).expect("v2 replies are JSON");
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "{reply}");
+        assert_eq!(
+            v.get("pred").and_then(Json::as_usize),
+            Some(want),
+            "bucket {} must serve the same math as a direct call: {reply}",
+            bucket_of(content.len())
+        );
+    }
+    assert!(
+        used_lens.iter().any(|&l| l <= 4)
+            && used_lens.iter().any(|&l| l > 4 && l <= 8)
+            && used_lens.iter().any(|&l| l > 8),
+        "workload must cover all three buckets: {used_lens:?}"
+    );
+
+    // burst phase: pipeline mixed lengths, every one answered ok
+    let n = 24;
+    let mut lines = String::new();
+    for i in 0..n {
+        let body = 1 + (i * 5) % 13; // 1..=13 content tokens -> all buckets
+        let text: String =
+            (0..body).map(|k| format!("t{}", (i + k) % 50)).collect::<Vec<_>>().join(" ");
+        lines.push_str(&format!("{{\"id\":\"b{i}\",\"op\":\"classify\",\"text\":\"{text}\"}}\n"));
+    }
+    writer.write_all(lines.as_bytes()).unwrap();
+    let mut ok = 0;
+    for _ in 0..n {
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        let v = Json::parse(reply.trim()).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "{reply}");
+        ok += 1;
+    }
+    assert_eq!(ok, n, "zero rejects across the mixed-length burst");
+
+    // stats phase: per-bucket waves visible, padding waste counted
+    writer.write_all(b"{\"id\":\"s\",\"op\":\"stats\"}\n").unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    let v = Json::parse(reply.trim()).unwrap();
+    let stats = v.get("stats").expect("stats object");
+    assert_eq!(stats.get("rejected").and_then(Json::as_usize), Some(0), "{reply}");
+    assert!(stats.get("tokens_padded").and_then(Json::as_usize).unwrap_or(0) > 0, "{reply}");
+    let buckets = stats.get("buckets").and_then(Json::as_arr).expect("buckets array");
+    assert_eq!(buckets.len(), 3, "{reply}");
+    let entries: usize = buckets
+        .iter()
+        .map(|b| b.get("entries").and_then(Json::as_usize).unwrap_or(0))
+        .sum();
+    assert_eq!(entries, 6 + n, "every request tallied under its bucket: {reply}");
+    for b in buckets {
+        assert!(
+            b.get("waves").and_then(Json::as_usize).unwrap_or(0) > 0,
+            "all three buckets saw traffic: {reply}"
+        );
+    }
+
+    writer.write_all(b"{\"op\":\"quit\"}\n").unwrap();
+    server.stop();
+    assert_eq!(engine.counters().completed, (6 + n) as u64);
 }
 
 /// When real artifacts exist, the native forward must reproduce the
