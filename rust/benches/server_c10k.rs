@@ -1,0 +1,617 @@
+//! C10K server bench: one epoll reactor thread vs. thousands of
+//! concurrent sockets, then SLO-tiered admission under overload.
+//!
+//! The server front end is the event-driven reactor (`coordinator/
+//! reactor`): every socket lives on a single event-loop thread, so
+//! concurrent connections cost buffers, not threads. The engine behind
+//! it is a `FakeBackend` with a fixed per-wave delay — deterministic
+//! capacity, no artifacts, runs in CI.
+//!
+//! Three phases, each with a gate that makes the bench (and the CI job)
+//! **exit non-zero**:
+//!
+//! 1. **C10K hold** — 5,000 clients connect concurrently, each sends
+//!    one v2 classify, and every one gets its answer back through one
+//!    reactor thread (`/proc` is checked: exactly one
+//!    `datamux-reactor`). The bench side drives its own nonblocking
+//!    sockets through the same `Poller` the reactor uses.
+//! 2. **SLO tiers** — an open-loop driver offers a 20% `high` (250 ms
+//!    deadline) / 80% `bulk` (50 ms deadline) mix. At sub-capacity
+//!    load nothing is shed: zero high-priority rejects. At 3x
+//!    capacity, bulk is shed fast with typed `overloaded`/`deadline`
+//!    errors while the high tier's client-observed p99 stays inside
+//!    its SLO — strict-priority drain plus deadline-aware admission.
+//! 3. **Pre-expired work** — requests with `deadline_ms: 0` are all
+//!    answered with the typed `expired` error and the engine's
+//!    per-class `completed` counters do not move: expired work is
+//!    never executed.
+//!
+//! Results are printed as tables and written to `BENCH_server.json` at
+//! the repo root (uploaded by CI next to the other BENCH artifacts).
+//!
+//!   cargo bench --bench server_c10k            # full
+//!   cargo bench --bench server_c10k -- --quick # CI-sized
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::os::fd::AsRawFd;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use datamux::coordinator::reactor::{raise_nofile_limit, Poller};
+use datamux::coordinator::server::{Server, ServerConfig};
+use datamux::coordinator::EngineBuilder;
+use datamux::util::bench::Table;
+use datamux::util::json::{num, obj, s, Json};
+use datamux::{FakeBackend, Submit};
+
+const N_MUX: usize = 8;
+const BATCH: usize = 4;
+const SEQ_LEN: usize = 16;
+const N_CLASSES: usize = 3;
+/// Per-wave execution delay: capacity = BATCH * N_MUX / EXEC_DELAY.
+const EXEC_DELAY: Duration = Duration::from_millis(4);
+const QUEUE_CAP: usize = 8192;
+
+const C10K_TARGET: usize = 5000;
+const SLO_CONNS: usize = 32;
+const HIGH_DEADLINE_MS: u64 = 250;
+const BULK_DEADLINE_MS: u64 = 50;
+/// Client-observed p99 budget for the high tier under overload.
+const HIGH_SLO_MS: f64 = 150.0;
+
+// ---------------------------------------------------------------- phase 1
+
+struct C10kReport {
+    attempted: usize,
+    connected: usize,
+    answered: usize,
+    errors: usize,
+    wall: Duration,
+}
+
+/// Connect `conns` sockets (all concurrently live), send one classify
+/// per socket, and drain every reply through a bench-side `Poller`.
+fn c10k_hold(addr: SocketAddr, conns: usize) -> anyhow::Result<C10kReport> {
+    let t0 = Instant::now();
+    let mut streams = Vec::with_capacity(conns);
+    for i in 0..conns {
+        streams.push(TcpStream::connect(addr)?);
+        // give the single accept loop air so the listen backlog (128)
+        // never overflows into SYN retransmits
+        if i % 512 == 511 {
+            thread::sleep(Duration::from_millis(1));
+        }
+    }
+    let connected = streams.len();
+    for (i, st) in streams.iter_mut().enumerate() {
+        let line = format!("{{\"id\":{i},\"op\":\"classify\",\"ids\":[1,2,3,4]}}\n");
+        st.write_all(line.as_bytes())?;
+    }
+    let mut poller = Poller::new()?;
+    for (i, st) in streams.iter().enumerate() {
+        st.set_nonblocking(true)?;
+        poller.add(st.as_raw_fd(), i as u64, true, false)?;
+    }
+    let mut bufs: Vec<Vec<u8>> = vec![Vec::new(); conns];
+    let mut done = vec![false; conns];
+    let (mut answered, mut errors) = (0usize, 0usize);
+    let mut evs = Vec::new();
+    let give_up = Instant::now() + Duration::from_secs(60);
+    while answered + errors < conns && Instant::now() < give_up {
+        evs.clear();
+        poller.wait(&mut evs, Some(Duration::from_millis(200)))?;
+        for ev in &evs {
+            let i = ev.token as usize;
+            if done[i] {
+                continue;
+            }
+            let mut chunk = [0u8; 4096];
+            loop {
+                match (&streams[i]).read(&mut chunk) {
+                    Ok(0) => break,
+                    Ok(n) => bufs[i].extend_from_slice(&chunk[..n]),
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(_) => break,
+                }
+            }
+            if let Some(pos) = bufs[i].iter().position(|&b| b == b'\n') {
+                done[i] = true;
+                let line = String::from_utf8_lossy(&bufs[i][..pos]);
+                let ok = Json::parse(&line)
+                    .ok()
+                    .and_then(|v| v.get("ok").and_then(Json::as_bool))
+                    == Some(true);
+                if ok {
+                    answered += 1;
+                } else {
+                    errors += 1;
+                }
+                poller.remove(streams[i].as_raw_fd()).ok();
+            }
+        }
+    }
+    Ok(C10kReport { attempted: conns, connected, answered, errors, wall: t0.elapsed() })
+}
+
+// ---------------------------------------------------------------- phase 2
+
+struct Reply {
+    id: String,
+    ok: bool,
+    code: String,
+    at: Instant,
+}
+
+fn spawn_reader(stream: TcpStream, sink: Arc<Mutex<Vec<Reply>>>) -> thread::JoinHandle<()> {
+    thread::spawn(move || {
+        stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+        let mut r = BufReader::new(stream);
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match r.read_line(&mut line) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {
+                    let Ok(v) = Json::parse(line.trim()) else { continue };
+                    sink.lock().unwrap().push(Reply {
+                        id: v.get("id").and_then(Json::as_str).unwrap_or("").to_string(),
+                        ok: v.get("ok").and_then(Json::as_bool) == Some(true),
+                        code: v.get("error").and_then(Json::as_str).unwrap_or("").to_string(),
+                        at: Instant::now(),
+                    });
+                }
+            }
+        }
+    })
+}
+
+struct SloOutcome {
+    target_rps: f64,
+    offered_rps: f64,
+    sent_high: usize,
+    sent_bulk: usize,
+    ok_high: usize,
+    ok_bulk: usize,
+    rej_high: usize,
+    rej_bulk: usize,
+    unanswered: usize,
+    high_p99_ms: f64,
+    bulk_rej_codes: HashMap<String, usize>,
+}
+
+/// Open-loop paced mix over `SLO_CONNS` pipelined connections: 20%
+/// `high` (generous deadline), 80% `bulk` (tight deadline). Every
+/// request gets exactly one reply — a prediction or a typed error.
+fn slo_run(addr: SocketAddr, target_rps: f64, duration: Duration) -> anyhow::Result<SloOutcome> {
+    let mut streams = Vec::with_capacity(SLO_CONNS);
+    let replies: Arc<Mutex<Vec<Reply>>> = Arc::default();
+    let mut readers = Vec::with_capacity(SLO_CONNS);
+    for _ in 0..SLO_CONNS {
+        let st = TcpStream::connect(addr)?;
+        readers.push(spawn_reader(st.try_clone()?, replies.clone()));
+        streams.push(st);
+    }
+    let total = (target_rps * duration.as_secs_f64()) as usize;
+    let mut sent: HashMap<String, (Instant, bool)> = HashMap::with_capacity(total);
+    let t0 = Instant::now();
+    for i in 0..total {
+        let due = t0 + Duration::from_secs_f64(i as f64 / target_rps);
+        let now = Instant::now();
+        if due > now {
+            thread::sleep(due - now);
+        }
+        let high = i % 5 == 0;
+        let (id, prio, dl) = if high {
+            (format!("h{i}"), "high", HIGH_DEADLINE_MS)
+        } else {
+            (format!("b{i}"), "bulk", BULK_DEADLINE_MS)
+        };
+        let line = format!(
+            "{{\"id\":\"{id}\",\"op\":\"classify\",\"ids\":[1,2,3,4],\
+             \"priority\":\"{prio}\",\"deadline_ms\":{dl}}}\n"
+        );
+        streams[i % SLO_CONNS].write_all(line.as_bytes())?;
+        sent.insert(id, (Instant::now(), high));
+    }
+    let offered_rps = total as f64 / t0.elapsed().as_secs_f64();
+    // every request is answered (prediction or typed shed); wait it out
+    let give_up = Instant::now() + Duration::from_secs(30);
+    while replies.lock().unwrap().len() < total && Instant::now() < give_up {
+        thread::sleep(Duration::from_millis(10));
+    }
+    for st in &streams {
+        st.shutdown(Shutdown::Both).ok();
+    }
+    for h in readers {
+        h.join().ok();
+    }
+
+    let replies = replies.lock().unwrap();
+    let mut out = SloOutcome {
+        target_rps,
+        offered_rps,
+        sent_high: sent.values().filter(|(_, h)| *h).count(),
+        sent_bulk: sent.values().filter(|(_, h)| !*h).count(),
+        ok_high: 0,
+        ok_bulk: 0,
+        rej_high: 0,
+        rej_bulk: 0,
+        unanswered: 0,
+        high_p99_ms: 0.0,
+        bulk_rej_codes: HashMap::new(),
+    };
+    let mut high_lat_ms: Vec<f64> = Vec::new();
+    let mut matched = 0usize;
+    for r in replies.iter() {
+        let Some(&(sent_at, high)) = sent.get(&r.id) else { continue };
+        matched += 1;
+        match (high, r.ok) {
+            (true, true) => {
+                out.ok_high += 1;
+                high_lat_ms.push(r.at.duration_since(sent_at).as_secs_f64() * 1e3);
+            }
+            (true, false) => out.rej_high += 1,
+            (false, true) => out.ok_bulk += 1,
+            (false, false) => {
+                out.rej_bulk += 1;
+                *out.bulk_rej_codes.entry(r.code.clone()).or_insert(0) += 1;
+            }
+        }
+    }
+    out.unanswered = total - matched;
+    high_lat_ms.sort_by(f64::total_cmp);
+    if !high_lat_ms.is_empty() {
+        let idx = ((high_lat_ms.len() as f64 * 0.99) as usize).min(high_lat_ms.len() - 1);
+        out.high_p99_ms = high_lat_ms[idx];
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------- phase 3
+
+/// Send `n` requests whose deadline already passed (`deadline_ms: 0`)
+/// across all three priority classes; count typed `expired` replies.
+fn expired_run(addr: SocketAddr, n: usize) -> anyhow::Result<(usize, usize)> {
+    let mut c = TcpStream::connect(addr)?;
+    c.set_read_timeout(Some(Duration::from_secs(10)))?;
+    let prios = ["high", "normal", "bulk"];
+    for i in 0..n {
+        let p = prios[i % prios.len()];
+        c.write_all(
+            format!(
+                "{{\"id\":\"x{i}\",\"op\":\"classify\",\"ids\":[1,2,3,4],\
+                 \"priority\":\"{p}\",\"deadline_ms\":0}}\n"
+            )
+            .as_bytes(),
+        )?;
+    }
+    let mut r = BufReader::new(c);
+    let mut expired = 0usize;
+    let mut line = String::new();
+    for _ in 0..n {
+        line.clear();
+        if r.read_line(&mut line)? == 0 {
+            break;
+        }
+        let v = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("reply parse: {e}"))?;
+        if v.get("error").and_then(Json::as_str) == Some("expired") {
+            expired += 1;
+        }
+    }
+    Ok((n, expired))
+}
+
+// ------------------------------------------------------------------ stats
+
+struct ClassSnap {
+    priority: String,
+    completed: f64,
+    shed_expired: f64,
+    shed_overloaded: f64,
+    queue_wait_p99_us: f64,
+}
+
+/// One-shot v2 STATS: the per-priority-class admission/queue accounting
+/// this PR adds to the protocol.
+fn fetch_classes(addr: SocketAddr) -> anyhow::Result<Vec<ClassSnap>> {
+    let mut c = TcpStream::connect(addr)?;
+    c.set_read_timeout(Some(Duration::from_secs(10)))?;
+    c.write_all(b"{\"id\":0,\"op\":\"stats\"}\n")?;
+    let mut line = String::new();
+    BufReader::new(c).read_line(&mut line)?;
+    let v = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("stats parse: {e}"))?;
+    let classes = v
+        .get("stats")
+        .and_then(|st| st.get("classes"))
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("no per-class stats in STATS reply"))?;
+    Ok(classes
+        .iter()
+        .map(|cl| {
+            let f = |k: &str| cl.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+            ClassSnap {
+                priority: cl.get("priority").and_then(Json::as_str).unwrap_or("").to_string(),
+                completed: f("completed"),
+                shed_expired: f("shed_expired"),
+                shed_overloaded: f("shed_overloaded"),
+                queue_wait_p99_us: f("queue_wait_p99_us"),
+            }
+        })
+        .collect())
+}
+
+fn class<'a>(snaps: &'a [ClassSnap], name: &str) -> &'a ClassSnap {
+    snaps.iter().find(|c| c.priority == name).expect("priority class in STATS")
+}
+
+fn reactor_threads() -> usize {
+    let mut n = 0;
+    if let Ok(dir) = std::fs::read_dir("/proc/self/task") {
+        for t in dir.flatten() {
+            let comm = std::fs::read_to_string(t.path().join("comm")).unwrap_or_default();
+            if comm.trim() == "datamux-reactor" {
+                n += 1;
+            }
+        }
+    }
+    n
+}
+
+fn slo_json(o: &SloOutcome) -> Json {
+    let codes: Vec<Json> = {
+        let mut pairs: Vec<(&String, &usize)> = o.bulk_rej_codes.iter().collect();
+        pairs.sort();
+        pairs
+            .into_iter()
+            .map(|(k, v)| obj(vec![("code", s(k)), ("count", num(*v as f64))]))
+            .collect()
+    };
+    obj(vec![
+        ("target_rps", num(o.target_rps)),
+        ("offered_rps", num(o.offered_rps)),
+        ("sent_high", num(o.sent_high as f64)),
+        ("sent_bulk", num(o.sent_bulk as f64)),
+        ("ok_high", num(o.ok_high as f64)),
+        ("ok_bulk", num(o.ok_bulk as f64)),
+        ("rej_high", num(o.rej_high as f64)),
+        ("rej_bulk", num(o.rej_bulk as f64)),
+        ("unanswered", num(o.unanswered as f64)),
+        ("high_p99_ms", num(o.high_p99_ms)),
+        ("bulk_reject_codes", Json::Arr(codes)),
+    ])
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (sub_dur, over_dur, expired_n) = if quick {
+        (Duration::from_millis(700), Duration::from_millis(900), 48)
+    } else {
+        (Duration::from_millis(2500), Duration::from_millis(2500), 96)
+    };
+    let capacity_rps = (BATCH * N_MUX) as f64 / EXEC_DELAY.as_secs_f64();
+
+    // the bench process holds both ends of every socket: ~2 fds per conn
+    let want = (C10K_TARGET * 2 + 1024) as u64;
+    let nofile = raise_nofile_limit(want);
+    let conns = if (nofile as usize) < C10K_TARGET * 2 + 256 {
+        let fit = (nofile as usize).saturating_sub(256) / 2;
+        println!("NOFILE limit {nofile} < {want}: holding {fit} conns instead of {C10K_TARGET}");
+        fit
+    } else {
+        C10K_TARGET
+    };
+
+    let backend = FakeBackend::new("cls", N_MUX, BATCH, SEQ_LEN, N_CLASSES).with_delay(EXEC_DELAY);
+    let engine: Arc<dyn Submit> = Arc::new(
+        EngineBuilder::new().max_wait_ms(2).queue_cap(QUEUE_CAP).build_backend(Arc::new(backend))?,
+    );
+    let server = Server::start(
+        engine,
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_connections: conns + 64,
+            ..ServerConfig::default()
+        },
+    )?;
+    let addr = server.local_addr;
+    println!(
+        "server on {addr}: wave {} x {EXEC_DELAY:?} => capacity {capacity_rps:.0} r/s",
+        BATCH * N_MUX
+    );
+
+    // ----- phase 1: C10K hold -------------------------------------------
+    let hold = c10k_hold(addr, conns)?;
+    let one_reactor = reactor_threads() == 1;
+    let mut t1 =
+        Table::new("C10K: concurrent conns through one reactor thread", &["metric", "value"]);
+    for (k, v) in [
+        ("connections attempted", hold.attempted.to_string()),
+        ("connections held", hold.connected.to_string()),
+        ("replies ok", hold.answered.to_string()),
+        ("replies error", hold.errors.to_string()),
+        ("reactor threads", reactor_threads().to_string()),
+        ("wall", format!("{:.2}s", hold.wall.as_secs_f64())),
+    ] {
+        t1.row(&[k.to_string(), v]);
+    }
+    t1.print();
+
+    // ----- phase 2: SLO tiers at sub-capacity, then 3x overload ---------
+    let sub = slo_run(addr, capacity_rps * 0.35, sub_dur)?;
+    let before_over = fetch_classes(addr)?;
+    let over = slo_run(addr, capacity_rps * 3.0, over_dur)?;
+    let after_over = fetch_classes(addr)?;
+    let bulk_shed_server = (class(&after_over, "bulk").shed_expired
+        + class(&after_over, "bulk").shed_overloaded)
+        - (class(&before_over, "bulk").shed_expired
+            + class(&before_over, "bulk").shed_overloaded);
+    let mut t2 = Table::new(
+        "SLO tiers: 20% high(250ms) / 80% bulk(50ms)",
+        &["run", "target r/s", "high ok/rej", "bulk ok/rej", "high p99 ms", "unanswered"],
+    );
+    for (name, o) in [("0.35x", &sub), ("3.0x", &over)] {
+        t2.row(&[
+            name.to_string(),
+            format!("{:.0}", o.target_rps),
+            format!("{}/{}", o.ok_high, o.rej_high),
+            format!("{}/{}", o.ok_bulk, o.rej_bulk),
+            format!("{:.1}", o.high_p99_ms),
+            o.unanswered.to_string(),
+        ]);
+    }
+    t2.print();
+    println!(
+        "server-side: bulk shed {bulk_shed_server:.0} during overload; \
+         high queue_wait p99 {:.0}us cumulative",
+        class(&after_over, "high").queue_wait_p99_us
+    );
+
+    // ----- phase 3: pre-expired work is shed, never executed ------------
+    let done_before = fetch_classes(addr)?;
+    let (expired_sent, expired_replies) = expired_run(addr, expired_n)?;
+    let done_after = fetch_classes(addr)?;
+    let executed_delta: f64 = done_after.iter().map(|c| c.completed).sum::<f64>()
+        - done_before.iter().map(|c| c.completed).sum::<f64>();
+    println!(
+        "pre-expired: {expired_replies}/{expired_sent} typed 'expired' replies, \
+         completed delta {executed_delta:.0}"
+    );
+
+    server.stop();
+
+    // ----- BENCH_server.json at the repo root ---------------------------
+    let c10k_gate = hold.connected >= C10K_TARGET
+        && hold.answered == hold.attempted
+        && hold.errors == 0
+        && one_reactor;
+    let subcap_gate = sub.rej_high == 0 && sub.unanswered == 0;
+    let slo_gate = over.high_p99_ms <= HIGH_SLO_MS && over.rej_high == 0;
+    let shed_gate = over.rej_bulk > 0 && bulk_shed_server > 0.0 && over.unanswered == 0;
+    let expired_gate = expired_replies == expired_sent && executed_delta == 0.0;
+    let result = obj(vec![
+        ("schema", s("server_c10k/v1")),
+        ("quick", Json::Bool(quick)),
+        (
+            "config",
+            obj(vec![
+                ("n_mux", num(N_MUX as f64)),
+                ("batch", num(BATCH as f64)),
+                ("exec_delay_ms", num(EXEC_DELAY.as_secs_f64() * 1e3)),
+                ("capacity_rps", num(capacity_rps)),
+                ("c10k_target", num(C10K_TARGET as f64)),
+                ("slo_conns", num(SLO_CONNS as f64)),
+                ("high_deadline_ms", num(HIGH_DEADLINE_MS as f64)),
+                ("bulk_deadline_ms", num(BULK_DEADLINE_MS as f64)),
+                ("high_slo_ms", num(HIGH_SLO_MS)),
+                ("nofile_limit", num(nofile as f64)),
+            ]),
+        ),
+        (
+            "c10k",
+            obj(vec![
+                ("attempted", num(hold.attempted as f64)),
+                ("connected", num(hold.connected as f64)),
+                ("answered", num(hold.answered as f64)),
+                ("errors", num(hold.errors as f64)),
+                ("wall_s", num(hold.wall.as_secs_f64())),
+                ("one_reactor_thread", Json::Bool(one_reactor)),
+            ]),
+        ),
+        ("subcapacity", slo_json(&sub)),
+        ("overload", slo_json(&over)),
+        (
+            "overload_server_classes",
+            Json::Arr(
+                after_over
+                    .iter()
+                    .map(|c| {
+                        obj(vec![
+                            ("priority", s(&c.priority)),
+                            ("completed", num(c.completed)),
+                            ("shed_expired", num(c.shed_expired)),
+                            ("shed_overloaded", num(c.shed_overloaded)),
+                            ("queue_wait_p99_us", num(c.queue_wait_p99_us)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "expired",
+            obj(vec![
+                ("sent", num(expired_sent as f64)),
+                ("typed_expired_replies", num(expired_replies as f64)),
+                ("executed_delta", num(executed_delta)),
+            ]),
+        ),
+        (
+            "gates",
+            obj(vec![
+                ("c10k_held_and_answered", Json::Bool(c10k_gate)),
+                ("zero_high_rejects_subcapacity", Json::Bool(subcap_gate)),
+                ("high_p99_within_slo_under_overload", Json::Bool(slo_gate)),
+                ("bulk_shed_with_typed_errors", Json::Bool(shed_gate)),
+                ("expired_never_executed", Json::Bool(expired_gate)),
+            ]),
+        ),
+    ]);
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate sits one level below the repo root");
+    let path = root.join("BENCH_server.json");
+    std::fs::write(&path, result.to_pretty())?;
+
+    // self-check: the file must exist, parse, and carry results
+    let written = std::fs::read_to_string(&path)?;
+    let parsed = Json::parse(&written).map_err(|e| anyhow::anyhow!("reparse: {e}"))?;
+    anyhow::ensure!(
+        parsed.get("c10k").and_then(|x| x.get("answered")).is_some()
+            && parsed.get("overload").and_then(|x| x.get("high_p99_ms")).is_some(),
+        "BENCH_server.json is missing results"
+    );
+    println!("\nwrote {}", path.display());
+
+    // the acceptance gates: fail the bench (and the CI job) loudly
+    anyhow::ensure!(
+        c10k_gate,
+        "C10K gate failed: connected={} answered={} errors={} of {} (one_reactor={one_reactor})",
+        hold.connected,
+        hold.answered,
+        hold.errors,
+        hold.attempted
+    );
+    anyhow::ensure!(
+        subcap_gate,
+        "sub-capacity gate failed: {} high rejects, {} unanswered — admission must not shed \
+         high-priority work when there is spare capacity",
+        sub.rej_high,
+        sub.unanswered
+    );
+    anyhow::ensure!(
+        slo_gate,
+        "overload SLO gate failed: high p99 {:.1}ms (budget {HIGH_SLO_MS}ms), {} high rejects",
+        over.high_p99_ms,
+        over.rej_high
+    );
+    anyhow::ensure!(
+        shed_gate,
+        "overload shed gate failed: rej_bulk={} server_shed={bulk_shed_server:.0} unanswered={} \
+         — bulk must be shed fast with typed errors, not left to time out",
+        over.rej_bulk,
+        over.unanswered
+    );
+    anyhow::ensure!(
+        expired_gate,
+        "expired gate failed: {expired_replies}/{expired_sent} typed replies, \
+         completed delta {executed_delta:.0} — pre-expired work must never execute"
+    );
+    println!(
+        "gates OK: {} conns on one reactor thread; high p99 {:.1}ms under 3x overload; \
+         bulk shed fast; expired never executed",
+        hold.connected, over.high_p99_ms
+    );
+    Ok(())
+}

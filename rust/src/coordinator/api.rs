@@ -42,6 +42,60 @@ impl TaskKind {
     }
 }
 
+/// SLO class of a request. Admission keeps one FIFO per class inside
+/// every sequence-length bucket and batchers drain the highest class
+/// first, so under overload high-priority traffic keeps its latency SLO
+/// while lower classes queue behind it (and are shed first by
+/// deadline-aware admission). Strict priority is deliberate: bulk
+/// starvation under sustained high-class saturation is the documented
+/// contract, not a bug.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// latency-sensitive: drained first, shed last
+    High,
+    /// the default class
+    #[default]
+    Normal,
+    /// throughput traffic: drained last, shed first under overload
+    Bulk,
+}
+
+/// Number of priority classes (indexes `0..N_CLASSES` via
+/// [`Priority::index`], high first).
+pub const N_PRIORITY_CLASSES: usize = 3;
+
+impl Priority {
+    /// All classes, highest first — iteration order for drains/reports.
+    pub const ALL: [Priority; N_PRIORITY_CLASSES] =
+        [Priority::High, Priority::Normal, Priority::Bulk];
+
+    /// Dense index, 0 = highest class.
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Wire name (v2 `priority` field).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Bulk => "bulk",
+        }
+    }
+
+    /// Parse a wire name; `None` for anything else (the server answers
+    /// `bad_request` rather than silently defaulting a typo).
+    pub fn from_str(s: &str) -> Option<Priority> {
+        match s {
+            "high" => Some(Priority::High),
+            "normal" => Some(Priority::Normal),
+            "bulk" => Some(Priority::Bulk),
+            _ => None,
+        }
+    }
+}
+
 /// Request payload: already-framed token ids, or raw token text.
 #[derive(Debug, Clone)]
 pub enum Payload {
@@ -61,15 +115,26 @@ pub enum Payload {
 pub struct InferenceRequest {
     pub task: TaskKind,
     pub payload: Payload,
-    /// Relative deadline. Expired requests are dropped at batch-assembly
-    /// time with [`EngineError::DeadlineExceeded`], and
+    /// Relative deadline. A deadline that is already zero at submit time
+    /// is rejected with [`SubmitError::Expired`]; one that provably
+    /// cannot be met given queue depth and drain rate is rejected with
+    /// [`SubmitError::Overloaded`]; requests that expire while queued
+    /// are dropped at batch-assembly time with
+    /// [`EngineError::DeadlineExceeded`], and
     /// [`RequestHandle::wait_deadline`] stops waiting once it passes.
     pub deadline: Option<Duration>,
+    /// SLO class (default [`Priority::Normal`]).
+    pub priority: Priority,
 }
 
 impl InferenceRequest {
     pub fn classify_framed(ids: Vec<i32>) -> Self {
-        InferenceRequest { task: TaskKind::Classify, payload: Payload::Framed(ids), deadline: None }
+        InferenceRequest {
+            task: TaskKind::Classify,
+            payload: Payload::Framed(ids),
+            deadline: None,
+            priority: Priority::Normal,
+        }
     }
 
     pub fn classify_text(text: impl Into<String>) -> Self {
@@ -77,6 +142,7 @@ impl InferenceRequest {
             task: TaskKind::Classify,
             payload: Payload::Text(text.into()),
             deadline: None,
+            priority: Priority::Normal,
         }
     }
 
@@ -85,6 +151,7 @@ impl InferenceRequest {
             task: TaskKind::TagTokens,
             payload: Payload::Framed(ids),
             deadline: None,
+            priority: Priority::Normal,
         }
     }
 
@@ -93,11 +160,17 @@ impl InferenceRequest {
             task: TaskKind::TagTokens,
             payload: Payload::Text(text.into()),
             deadline: None,
+            priority: Priority::Normal,
         }
     }
 
     pub fn with_deadline(mut self, deadline: Duration) -> Self {
         self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
         self
     }
 }
@@ -118,6 +191,13 @@ pub enum SubmitError {
     Tokenize(String),
     /// request task kind does not match what the model serves
     WrongTask { requested: TaskKind, served: TaskKind },
+    /// the request's deadline had already expired at submit time — shed
+    /// at admission instead of being silently dropped at batch assembly
+    Expired,
+    /// the request's deadline provably cannot be met given the queued
+    /// work ahead of its class and the engine's measured drain rate —
+    /// shed fast at admission instead of expiring in the queue
+    Overloaded,
     /// the engine has stopped accepting requests
     Shutdown,
 }
@@ -131,6 +211,8 @@ impl SubmitError {
             SubmitError::TooLong { .. } => "too_long",
             SubmitError::Tokenize(_) => "tokenize",
             SubmitError::WrongTask { .. } => "wrong_task",
+            SubmitError::Expired => "expired",
+            SubmitError::Overloaded => "overloaded",
             SubmitError::Shutdown => "shutdown",
         }
     }
@@ -153,6 +235,10 @@ impl std::fmt::Display for SubmitError {
                 requested.as_str(),
                 served.as_str()
             ),
+            SubmitError::Expired => write!(f, "deadline already expired at submit"),
+            SubmitError::Overloaded => {
+                write!(f, "deadline cannot be met at current load (shed at admission)")
+            }
             SubmitError::Shutdown => write!(f, "engine is shut down"),
         }
     }
@@ -188,6 +274,25 @@ pub struct LaneStatus {
     pub completed: u64,
     /// per-bucket waves/entries, aligned with [`Submit::buckets`]
     pub buckets: Vec<BucketStatus>,
+}
+
+/// Per-priority-class serving status, as reported by
+/// [`Submit::class_status`] — one entry per [`Priority`], highest
+/// first. Queue-wait percentiles are the SLO-facing number: how long
+/// this class's requests sat in admission before batch formation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassStatus {
+    pub priority: Priority,
+    /// requests of this class currently queued (all buckets)
+    pub depth: usize,
+    /// requests of this class answered with a response
+    pub completed: u64,
+    /// shed at admission: deadline already expired at submit
+    pub shed_expired: u64,
+    /// shed at admission: deadline provably unmeetable at current load
+    pub shed_overloaded: u64,
+    /// submit -> batch-formed wait for this class
+    pub queue_wait: LatencySummary,
 }
 
 /// A tagged completion: the request tag plus its outcome. Delivered to a
@@ -259,6 +364,12 @@ pub trait Submit: Send + Sync {
         Vec::new()
     }
 
+    /// Per-priority-class depth/progress/shedding (one entry per
+    /// [`Priority`], highest first). Default: no class detail.
+    fn class_status(&self) -> Vec<ClassStatus> {
+        Vec::new()
+    }
+
     /// Convenience: submit one framed row for whatever task the model
     /// serves. The common path for drivers and benches.
     fn submit_framed(&self, ids: Vec<i32>) -> Result<RequestHandle, SubmitError> {
@@ -266,6 +377,7 @@ pub trait Submit: Send + Sync {
             task: self.native_task(),
             payload: Payload::Framed(ids),
             deadline: None,
+            priority: Priority::Normal,
         })
     }
 
@@ -275,6 +387,7 @@ pub trait Submit: Send + Sync {
             task: self.native_task(),
             payload: Payload::Framed(ids),
             deadline: None,
+            priority: Priority::Normal,
         })
     }
 
@@ -284,6 +397,7 @@ pub trait Submit: Send + Sync {
             task: self.native_task(),
             payload: Payload::Text(parts.join(" [SEP] ")),
             deadline: None,
+            priority: Priority::Normal,
         })
     }
 }
@@ -310,6 +424,8 @@ mod tests {
                 requested: TaskKind::TagTokens,
                 served: TaskKind::Classify,
             },
+            SubmitError::Expired,
+            SubmitError::Overloaded,
             SubmitError::Shutdown,
         ];
         let codes: std::collections::HashSet<_> = errs.iter().map(|e| e.code()).collect();
@@ -325,9 +441,23 @@ mod tests {
             .with_deadline(Duration::from_millis(5));
         assert_eq!(r.task, TaskKind::Classify);
         assert_eq!(r.deadline, Some(Duration::from_millis(5)));
+        assert_eq!(r.priority, Priority::Normal);
+        let r = InferenceRequest::classify_text("t").with_priority(Priority::High);
+        assert_eq!(r.priority, Priority::High);
         match InferenceRequest::tag_framed(vec![1, 2]).payload {
             Payload::Framed(ids) => assert_eq!(ids, vec![1, 2]),
             _ => panic!("expected framed"),
         }
+    }
+
+    #[test]
+    fn priority_wire_names_round_trip() {
+        for (i, p) in Priority::ALL.into_iter().enumerate() {
+            assert_eq!(p.index(), i, "ALL is ordered highest-first by index");
+            assert_eq!(Priority::from_str(p.as_str()), Some(p));
+        }
+        assert_eq!(Priority::from_str("urgent"), None);
+        assert_eq!(Priority::default(), Priority::Normal);
+        assert!(Priority::High < Priority::Bulk, "ordering follows drain order");
     }
 }

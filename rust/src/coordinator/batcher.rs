@@ -374,6 +374,7 @@ mod tests {
             bucket,
             submitted: Instant::now(),
             deadline: None,
+            priority: crate::coordinator::Priority::Normal,
             done: Completion::cell(OnceCellSync::new()),
         }
     }
@@ -634,6 +635,7 @@ mod tests {
             bucket: 0,
             submitted: Instant::now(),
             deadline: None,
+            priority: crate::coordinator::Priority::Normal,
             done: Completion::cell(cell.clone()),
         };
         let requeued = AtomicU64::new(0);
@@ -652,6 +654,7 @@ mod tests {
             bucket: 0,
             submitted: Instant::now(),
             deadline: None,
+            priority: crate::coordinator::Priority::Normal,
             done: Completion::cell(cell2.clone()),
         };
         requeue_entries(&shared, vec![r2], &requeued);

@@ -10,16 +10,19 @@
 //! at batch assembly.
 //!
 //! [`BucketQueues`] is the admission structure that keeps waves
-//! shape-homogeneous: one bounded FIFO per bucket, requests routed by
-//! their bucket index at admission, and batchers pulling whole waves
-//! from the **deepest** non-empty bucket — so one model execution only
-//! ever carries rows of a single shape, while arrival order is
-//! preserved within each shape class.
+//! shape-homogeneous: one bounded, class-prioritized FIFO per bucket
+//! ([`PrioChannel`] — one entry per [`Priority`] class), requests
+//! routed by their `(bucket, priority)` at admission, and batchers
+//! pulling whole waves from the **deepest** non-empty bucket, highest
+//! class first within the wave — so one model execution only ever
+//! carries rows of a single shape, high-priority rows board first, and
+//! arrival order is preserved within each `(shape, class)` pair.
 
 use std::time::Instant;
 
-use crate::util::threadpool::{Channel, SendError, TrySendError};
+use crate::util::threadpool::{PrioChannel, SendError, TrySendError};
 
+use super::api::N_PRIORITY_CLASSES;
 use super::request::Request;
 
 /// Sorted registry of the sequence lengths the engine executes. The
@@ -80,21 +83,27 @@ impl Buckets {
     }
 }
 
-/// One bounded admission FIFO per bucket, closed and drained as a unit.
+/// One bounded, class-prioritized admission FIFO per bucket, closed and
+/// drained as a unit.
 ///
-/// `queue_cap` applies **per bucket**: a burst of one shape cannot
-/// starve admission of another (per-shape head-of-line isolation), and
-/// the single-bucket default behaves exactly like the old one-channel
-/// admission queue.
+/// `queue_cap` applies **per bucket per priority class**: a burst of
+/// one shape cannot starve admission of another (per-shape head-of-line
+/// isolation), and a flood of bulk traffic cannot consume a higher
+/// class's admission slots. The single-bucket, all-normal default
+/// behaves exactly like the old one-channel admission queue.
 #[derive(Clone)]
 pub struct BucketQueues {
-    qs: Vec<Channel<Request>>,
+    qs: Vec<PrioChannel<Request>>,
 }
 
 impl BucketQueues {
     pub fn new(n_buckets: usize, cap_per_bucket: usize) -> BucketQueues {
         assert!(n_buckets >= 1);
-        BucketQueues { qs: (0..n_buckets).map(|_| Channel::bounded(cap_per_bucket)).collect() }
+        BucketQueues {
+            qs: (0..n_buckets)
+                .map(|_| PrioChannel::bounded(N_PRIORITY_CLASSES, cap_per_bucket))
+                .collect(),
+        }
     }
 
     pub fn count(&self) -> usize {
@@ -102,32 +111,47 @@ impl BucketQueues {
     }
 
     /// The channel backing bucket `idx` (batchers pull waves off it).
-    pub fn queue(&self, idx: usize) -> &Channel<Request> {
+    pub fn queue(&self, idx: usize) -> &PrioChannel<Request> {
         &self.qs[idx]
     }
 
-    /// Blocking admission, routed by the request's own bucket
-    /// (backpressure per bucket). Err when closed.
+    /// Blocking admission, routed by the request's own
+    /// `(bucket, priority)` (backpressure per bucket+class). Err when
+    /// closed.
     pub fn send(&self, req: Request) -> Result<(), SendError> {
-        self.qs[req.bucket].send(req)
+        let class = req.priority.index();
+        self.qs[req.bucket].send(req, class)
     }
 
     /// Non-blocking admission; `Full`/`Closed` hand the request back.
     pub fn try_send(&self, req: Request) -> Result<(), TrySendError<Request>> {
-        self.qs[req.bucket].try_send(req)
+        let class = req.priority.index();
+        self.qs[req.bucket].try_send(req, class)
     }
 
     /// Total queued across buckets (lock-free mirror reads).
     pub fn len(&self) -> usize {
-        self.qs.iter().map(Channel::len).sum()
+        self.qs.iter().map(PrioChannel::len).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.qs.iter().all(Channel::is_empty)
+        self.qs.iter().all(PrioChannel::is_empty)
     }
 
     pub fn depth(&self, idx: usize) -> usize {
         self.qs[idx].len()
+    }
+
+    /// Queued work at `class` or higher across all buckets — the depth
+    /// a new arrival of `class` queues behind, whichever bucket a
+    /// batcher drains next (feeds the admission overload check).
+    pub fn depth_at_or_above(&self, class: usize) -> usize {
+        self.qs.iter().map(|q| q.depth_at_or_above(class)).sum()
+    }
+
+    /// Queued work of exactly `class` across all buckets (STATS depth).
+    pub fn depth_class(&self, class: usize) -> usize {
+        self.qs.iter().map(|q| q.depth_class(class)).sum()
     }
 
     /// The deepest non-empty bucket — the "deepest eligible bucket" rule
@@ -199,13 +223,20 @@ mod tests {
     use crate::util::threadpool::OnceCellSync;
     use std::time::Instant;
 
+    use crate::coordinator::Priority;
+
     fn req(id: u64, bucket: usize) -> Request {
+        req_at(id, bucket, Priority::Normal)
+    }
+
+    fn req_at(id: u64, bucket: usize, priority: Priority) -> Request {
         Request {
             id,
             content: vec![1],
             bucket,
             submitted: Instant::now(),
             deadline: None,
+            priority,
             done: Completion::cell(OnceCellSync::new()),
         }
     }
@@ -266,6 +297,36 @@ mod tests {
         assert_eq!(q.nonempty_from(2), Some(1), "wraps past the end");
         q.send(req(2, 2)).unwrap();
         assert_eq!(q.nonempty_from(2), Some(2), "starts at the probe index");
+    }
+
+    #[test]
+    fn waves_board_high_class_first_within_a_bucket() {
+        let q = BucketQueues::new(2, 8);
+        q.send(req_at(1, 1, Priority::Bulk)).unwrap();
+        q.send(req_at(2, 1, Priority::High)).unwrap();
+        q.send(req_at(3, 1, Priority::Normal)).unwrap();
+        q.send(req_at(4, 1, Priority::High)).unwrap();
+        assert_eq!(q.depth_at_or_above(Priority::High.index()), 2);
+        assert_eq!(q.depth_at_or_above(Priority::Bulk.index()), 4);
+        let mut out = Vec::new();
+        assert_eq!(q.recv_wave(1, &mut out, 8, None), 4);
+        assert_eq!(
+            out.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![2, 4, 3, 1],
+            "high first, then normal, then bulk; FIFO within a class"
+        );
+    }
+
+    #[test]
+    fn class_caps_isolate_admission_per_priority() {
+        let q = BucketQueues::new(1, 1);
+        q.send(req_at(1, 0, Priority::Bulk)).unwrap();
+        assert!(
+            matches!(q.try_send(req_at(2, 0, Priority::Bulk)), Err(TrySendError::Full(_))),
+            "bulk is at its cap"
+        );
+        q.try_send(req_at(3, 0, Priority::High))
+            .expect("a saturated bulk class must not consume high slots");
     }
 
     #[test]

@@ -40,6 +40,8 @@ pub struct EngineBuilder {
     addr: String,
     max_connections: usize,
     read_timeout: Duration,
+    max_line: usize,
+    write_buf_cap: usize,
     /// model execute-time estimate driving adaptive-N routing (us)
     exec_time_us: f64,
 }
@@ -52,6 +54,8 @@ impl Default for EngineBuilder {
             addr: server.addr,
             max_connections: server.max_connections,
             read_timeout: server.read_timeout,
+            max_line: server.max_line,
+            write_buf_cap: server.write_buf_cap,
             exec_time_us: 20_000.0,
         }
     }
@@ -109,9 +113,23 @@ impl EngineBuilder {
         self
     }
 
-    /// How often idle connections wake to notice `Server::stop()`.
+    /// Drain grace for `Server::stop()` and flush-closes.
     pub fn read_timeout(mut self, d: Duration) -> Self {
         self.read_timeout = d;
+        self
+    }
+
+    /// Longest accepted request line (bytes); beyond it the client gets
+    /// a typed `oversized_line` error and a disconnect.
+    pub fn max_line(mut self, bytes: usize) -> Self {
+        self.max_line = bytes;
+        self
+    }
+
+    /// Per-connection write backlog allowed before a slow consumer is
+    /// disconnected.
+    pub fn write_buf_cap(mut self, bytes: usize) -> Self {
+        self.write_buf_cap = bytes;
         self
     }
 
@@ -130,6 +148,8 @@ impl EngineBuilder {
             addr: self.addr.clone(),
             max_connections: self.max_connections,
             read_timeout: self.read_timeout,
+            max_line: self.max_line,
+            write_buf_cap: self.write_buf_cap,
         }
     }
 
@@ -192,6 +212,8 @@ mod tests {
             .addr("127.0.0.1:0")
             .max_connections(3)
             .read_timeout(Duration::from_millis(50))
+            .max_line(512)
+            .write_buf_cap(4096)
             .exec_time_us(123.0);
         assert_eq!(b.coordinator_config().max_wait, Duration::from_millis(7));
         assert_eq!(b.coordinator_config().queue_cap, 32);
@@ -202,6 +224,8 @@ mod tests {
         assert_eq!(s.addr, "127.0.0.1:0");
         assert_eq!(s.max_connections, 3);
         assert_eq!(s.read_timeout, Duration::from_millis(50));
+        assert_eq!(s.max_line, 512);
+        assert_eq!(s.write_buf_cap, 4096);
     }
 
     #[test]

@@ -35,12 +35,13 @@ pub mod buckets;
 pub mod dispatch;
 pub mod engine;
 pub mod policy;
+pub mod reactor;
 pub mod request;
 pub mod scheduler;
 pub mod server;
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -51,8 +52,8 @@ use crate::util::metrics::{CounterSnapshot, LatencySummary};
 use crate::util::threadpool::{Channel, OnceCellSync, TrySendError};
 
 pub use api::{
-    BucketStatus, CompletionItem, CompletionQueue, InferenceRequest, LaneStatus, Payload, Submit,
-    SubmitError, TaskKind,
+    BucketStatus, ClassStatus, CompletionItem, CompletionQueue, InferenceRequest, LaneStatus,
+    Payload, Priority, Submit, SubmitError, TaskKind, N_PRIORITY_CLASSES,
 };
 pub use batcher::{BatcherConfig, ExecBatch};
 pub use buckets::{BucketQueues, Buckets};
@@ -60,7 +61,7 @@ pub use dispatch::{DispatchState, Lane};
 pub use engine::EngineBuilder;
 pub use policy::{AdaptiveN, SlotPolicy};
 pub use request::{EngineError, LogitsView, Request, RequestHandle, Response};
-pub use scheduler::{MuxTemplate, SharedModel, Stats};
+pub use scheduler::{ClassTally, MuxTemplate, SharedModel, Stats};
 
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
@@ -121,15 +122,22 @@ fn resolve_buckets(
 /// Validate a typed request against an engine's (task, buckets) and
 /// frame its payload — the shared admission front half of both
 /// [`MuxCoordinator`] and [`MuxRouter`]. Returns the **unpadded**
-/// content row, its bucket index, and the absolute deadline.
+/// content row, its bucket index, the absolute deadline, and the
+/// request's priority class. A deadline that has already expired
+/// (relative duration zero) is rejected here with
+/// [`SubmitError::Expired`] — the engine never queues provably-dead
+/// work only to sweep it at batch assembly.
 fn prepare_request(
     tokenizer: &Tokenizer,
     buckets: &Buckets,
     task: TaskKind,
     req: InferenceRequest,
-) -> Result<(Vec<i32>, usize, Option<Instant>), SubmitError> {
+) -> Result<(Vec<i32>, usize, Option<Instant>, Priority), SubmitError> {
     if req.task != task {
         return Err(SubmitError::WrongTask { requested: req.task, served: task });
+    }
+    if req.deadline.is_some_and(|d| d.is_zero()) {
+        return Err(SubmitError::Expired);
     }
     let max = buckets.max_len();
     let content = match req.payload {
@@ -153,7 +161,101 @@ fn prepare_request(
         .index_for(content.len())
         .expect("length validated against the terminal bucket");
     let deadline = req.deadline.map(|d| Instant::now() + d);
-    Ok((content, bucket, deadline))
+    Ok((content, bucket, deadline, req.priority))
+}
+
+/// Below this completions/sec estimate the [`DrainMeter`] is considered
+/// cold (engine idle or just started) and the overload check admits
+/// everything — shedding must never fire on a warming engine, or
+/// sub-capacity traffic would see spurious rejects.
+const MIN_DRAIN_RATE: f64 = 1.0;
+
+/// A deadline is only declared unmeetable when the estimated queue wait
+/// exceeds the remaining budget by this factor. >1 keeps the check
+/// conservative: "provably cannot be met", not "might be tight".
+const OVERLOAD_MARGIN: f64 = 2.0;
+
+/// Completion-rate estimator feeding deadline-aware admission shedding.
+/// Sampled at submit time from the engine's cumulative `completed`
+/// counter; windows shorter than 50ms are ignored so per-request calls
+/// stay cheap and the EWMA is not dominated by timer noise.
+struct DrainMeter {
+    inner: Mutex<DrainWindow>,
+}
+
+struct DrainWindow {
+    last_completed: u64,
+    last_at: Instant,
+    /// completions/sec EWMA; 0.0 until the first window closes
+    rate: f64,
+}
+
+impl DrainMeter {
+    fn new() -> Self {
+        DrainMeter {
+            inner: Mutex::new(DrainWindow {
+                last_completed: 0,
+                last_at: Instant::now(),
+                rate: 0.0,
+            }),
+        }
+    }
+
+    /// Update with the cumulative completion count; returns the current
+    /// completions/sec estimate (0.0 while cold).
+    fn observe(&self, completed: u64) -> f64 {
+        let mut w = self.inner.lock().unwrap();
+        let dt = w.last_at.elapsed();
+        if dt >= Duration::from_millis(50) {
+            let inst = completed.saturating_sub(w.last_completed) as f64 / dt.as_secs_f64();
+            w.rate = if w.rate == 0.0 { inst } else { 0.7 * w.rate + 0.3 * inst };
+            w.last_completed = completed;
+            w.last_at = Instant::now();
+        }
+        w.rate
+    }
+}
+
+/// Deadline-aware admission check (requests without a deadline always
+/// pass). `Expired` when the absolute deadline has already passed;
+/// `Overloaded` when the queue depth at or above the request's class,
+/// divided by the measured drain rate, provably exceeds the remaining
+/// budget (with [`OVERLOAD_MARGIN`] headroom). The caller records the
+/// shed in its per-class tallies.
+fn admission_check(
+    meter: &DrainMeter,
+    completed: u64,
+    depth_ahead: usize,
+    deadline: Option<Instant>,
+) -> Result<(), SubmitError> {
+    let Some(dl) = deadline else { return Ok(()) };
+    let remaining = dl.saturating_duration_since(Instant::now());
+    if remaining.is_zero() {
+        return Err(SubmitError::Expired);
+    }
+    let rate = meter.observe(completed);
+    if rate >= MIN_DRAIN_RATE && depth_ahead as f64 / rate > remaining.as_secs_f64() * OVERLOAD_MARGIN
+    {
+        return Err(SubmitError::Overloaded);
+    }
+    Ok(())
+}
+
+/// Record a shed admission (`Expired` / `Overloaded`) in the right
+/// per-class tally, passing the error through. Other submit errors
+/// (validation failures) pass through untallied.
+fn note_shed(stats: &Stats, priority: Priority, err: SubmitError) -> SubmitError {
+    let t = &stats.per_class[priority.index()];
+    match err {
+        SubmitError::Expired => {
+            t.shed_expired.fetch_add(1, Ordering::Relaxed);
+        }
+        SubmitError::Overloaded => {
+            t.shed_overloaded.fetch_add(1, Ordering::Relaxed);
+        }
+        _ => {}
+    }
+    err
 }
 
 /// The serving engine for one loaded model.
@@ -166,6 +268,7 @@ pub struct MuxCoordinator {
     buckets: Buckets,
     task: TaskKind,
     next_id: AtomicU64,
+    drain: DrainMeter,
     batcher: Option<std::thread::JoinHandle<u64>>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
@@ -267,18 +370,28 @@ impl MuxCoordinator {
             buckets,
             task,
             next_id: AtomicU64::new(1),
+            drain: DrainMeter::new(),
             batcher: Some(batcher),
             workers,
         })
     }
 
     /// Validate a typed request and frame its payload (unpadded) into
-    /// its sequence-length bucket.
+    /// its sequence-length bucket, then run the deadline-aware admission
+    /// check (expired / unmeetable deadlines are shed here with a typed
+    /// error, tallied per class).
     fn prepare(
         &self,
         req: InferenceRequest,
-    ) -> Result<(Vec<i32>, usize, Option<Instant>), SubmitError> {
-        prepare_request(&self.tokenizer, &self.buckets, self.task, req)
+    ) -> Result<(Vec<i32>, usize, Option<Instant>, Priority), SubmitError> {
+        let priority = req.priority;
+        let parts = prepare_request(&self.tokenizer, &self.buckets, self.task, req)
+            .map_err(|e| note_shed(&self.stats, priority, e))?;
+        let completed = self.stats.counters.completed.load(Ordering::Relaxed);
+        let ahead = self.input.depth_at_or_above(priority.index());
+        admission_check(&self.drain, completed, ahead, parts.2)
+            .map_err(|e| note_shed(&self.stats, priority, e))?;
+        Ok(parts)
     }
 
     fn make_request(
@@ -286,10 +399,11 @@ impl MuxCoordinator {
         content: Vec<i32>,
         bucket: usize,
         deadline: Option<Instant>,
+        priority: Priority,
         done: request::Completion,
     ) -> Request {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        Request { id, content, bucket, submitted: Instant::now(), deadline, done }
+        Request { id, content, bucket, submitted: Instant::now(), deadline, priority, done }
     }
 
     /// Blocking admission (backpressure); `Shutdown` when the intake is
@@ -351,20 +465,30 @@ impl MuxCoordinator {
 
 impl Submit for MuxCoordinator {
     fn submit(&self, req: InferenceRequest) -> Result<RequestHandle, SubmitError> {
-        let (content, bucket, deadline) = self.prepare(req)?;
+        let (content, bucket, deadline, priority) = self.prepare(req)?;
         let cell = OnceCellSync::new();
-        let req =
-            self.make_request(content, bucket, deadline, request::Completion::cell(cell.clone()));
+        let req = self.make_request(
+            content,
+            bucket,
+            deadline,
+            priority,
+            request::Completion::cell(cell.clone()),
+        );
         let handle = RequestHandle { id: req.id, deadline, done: cell };
         self.admit_blocking(req)?;
         Ok(handle)
     }
 
     fn try_submit(&self, req: InferenceRequest) -> Result<RequestHandle, SubmitError> {
-        let (content, bucket, deadline) = self.prepare(req)?;
+        let (content, bucket, deadline, priority) = self.prepare(req)?;
         let cell = OnceCellSync::new();
-        let req =
-            self.make_request(content, bucket, deadline, request::Completion::cell(cell.clone()));
+        let req = self.make_request(
+            content,
+            bucket,
+            deadline,
+            priority,
+            request::Completion::cell(cell.clone()),
+        );
         let handle = RequestHandle { id: req.id, deadline, done: cell };
         self.admit_nonblocking(req)?;
         Ok(handle)
@@ -376,11 +500,12 @@ impl Submit for MuxCoordinator {
         tag: u64,
         out: &CompletionQueue,
     ) -> Result<(), SubmitError> {
-        let (content, bucket, deadline) = self.prepare(req)?;
+        let (content, bucket, deadline, priority) = self.prepare(req)?;
         let req = self.make_request(
             content,
             bucket,
             deadline,
+            priority,
             request::Completion::queue(tag, out.clone()),
         );
         self.admit_nonblocking(req)
@@ -436,6 +561,14 @@ impl Submit for MuxCoordinator {
                 .collect(),
         }]
     }
+
+    fn class_status(&self) -> Vec<ClassStatus> {
+        let mut classes = self.stats.class_snapshot();
+        for c in &mut classes {
+            c.depth = self.input.depth_class(c.priority.index());
+        }
+        classes
+    }
 }
 
 impl Drop for MuxCoordinator {
@@ -476,6 +609,7 @@ pub struct MuxRouter {
     buckets: Buckets,
     task: TaskKind,
     next_id: AtomicU64,
+    drain: DrainMeter,
 }
 
 impl MuxRouter {
@@ -535,6 +669,7 @@ impl MuxRouter {
             buckets,
             task,
             next_id: AtomicU64::new(1),
+            drain: DrainMeter::new(),
         })
     }
 
@@ -588,10 +723,33 @@ impl MuxRouter {
         content: Vec<i32>,
         bucket: usize,
         deadline: Option<Instant>,
+        priority: Priority,
         done: request::Completion,
     ) -> Request {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        Request { id, content, bucket, submitted: Instant::now(), deadline, done }
+        Request { id, content, bucket, submitted: Instant::now(), deadline, priority, done }
+    }
+
+    /// Router-side admission front half: validate + frame, then the
+    /// deadline-aware check against the shared queue depth and the
+    /// lanes' merged completion rate. Sheds are tallied in the router's
+    /// admission-side per-class stats.
+    fn prepare(
+        &self,
+        req: InferenceRequest,
+    ) -> Result<(Vec<i32>, usize, Option<Instant>, Priority), SubmitError> {
+        let priority = req.priority;
+        let parts = prepare_request(&self.tokenizer, &self.buckets, self.task, req)
+            .map_err(|e| note_shed(&self.stats, priority, e))?;
+        let completed: u64 = self
+            .lanes
+            .iter()
+            .map(|l| l.stats.counters.completed.load(Ordering::Relaxed))
+            .sum();
+        let ahead = self.state.queue.depth_at_or_above(priority.index());
+        admission_check(&self.drain, completed, ahead, parts.2)
+            .map_err(|e| note_shed(&self.stats, priority, e))?;
+        Ok(parts)
     }
 
     /// Shared body of `submit` / `try_submit` (cell-completion flavor).
@@ -600,11 +758,15 @@ impl MuxRouter {
         req: InferenceRequest,
         blocking: bool,
     ) -> Result<RequestHandle, SubmitError> {
-        let (content, bucket, deadline) =
-            prepare_request(&self.tokenizer, &self.buckets, self.task, req)?;
+        let (content, bucket, deadline, priority) = self.prepare(req)?;
         let cell = OnceCellSync::new();
-        let req =
-            self.make_request(content, bucket, deadline, request::Completion::cell(cell.clone()));
+        let req = self.make_request(
+            content,
+            bucket,
+            deadline,
+            priority,
+            request::Completion::cell(cell.clone()),
+        );
         let handle = RequestHandle { id: req.id, deadline, done: cell };
         self.admit(req, blocking)?;
         Ok(handle)
@@ -640,12 +802,12 @@ impl Submit for MuxRouter {
         tag: u64,
         out: &CompletionQueue,
     ) -> Result<(), SubmitError> {
-        let (content, bucket, deadline) =
-            prepare_request(&self.tokenizer, &self.buckets, self.task, req)?;
+        let (content, bucket, deadline, priority) = self.prepare(req)?;
         let req = self.make_request(
             content,
             bucket,
             deadline,
+            priority,
             request::Completion::queue(tag, out.clone()),
         );
         self.admit(req, false)
@@ -694,5 +856,23 @@ impl Submit for MuxRouter {
 
     fn lane_status(&self) -> Vec<LaneStatus> {
         self.lanes.iter().map(Lane::status).collect()
+    }
+
+    fn class_status(&self) -> Vec<ClassStatus> {
+        // sheds are tallied admission-side (router stats); queue-wait and
+        // completions accumulate in whichever lane executed the request
+        let mut classes = self.stats.class_snapshot();
+        for lane in &self.lanes {
+            for (acc, lc) in classes.iter_mut().zip(lane.stats.class_snapshot()) {
+                acc.completed += lc.completed;
+                acc.shed_expired += lc.shed_expired;
+                acc.shed_overloaded += lc.shed_overloaded;
+                acc.queue_wait = LatencySummary::merge(acc.queue_wait.clone(), lc.queue_wait);
+            }
+        }
+        for c in &mut classes {
+            c.depth = self.state.queue.depth_class(c.priority.index());
+        }
+        classes
     }
 }

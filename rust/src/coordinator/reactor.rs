@@ -1,0 +1,1013 @@
+//! Nonblocking connection reactor: one epoll event loop owning every
+//! client socket.
+//!
+//! The pre-reactor server spawned one detached OS thread per accepted
+//! connection — a few hundred clients exhausted the box while the
+//! engine underneath can multiplex 40 requests per forward pass. This
+//! module replaces that with the classic single-threaded reactor shape:
+//!
+//! ```text
+//!   [listener] ─┐
+//!   [waker]    ─┤ epoll ──▶ per-conn rbuf ──▶ complete lines ──▶ Handler
+//!   [conn fds] ─┘    ▲                                             │
+//!                    └── per-conn wbuf ◀── Outbox ops (send/close/…)┘
+//! ```
+//!
+//! * **Poller** is a minimal epoll wrapper over raw `extern "C"`
+//!   bindings — the workspace builds offline with no `libc` crate, and
+//!   `std` already links the platform C library, so the four syscall
+//!   symbols resolve at link time.
+//! * **Reactor** runs the loop on one named thread. Connections live in
+//!   a slab; tokens are `(generation << 32) | slot` so a stale event for
+//!   a recycled slot can never be misrouted to a new connection.
+//! * **Read path**: incremental line framing into a bounded per-conn
+//!   `rbuf`. A line longer than `max_line` triggers
+//!   [`Handler::on_oversize`] (stage a typed goodbye) and a flush-close
+//!   — the buffer is bounded, a hostile client cannot balloon memory.
+//! * **Write path**: replies append to a per-conn `wbuf` and flush
+//!   opportunistically; `EPOLLOUT` interest exists only while bytes are
+//!   buffered. A consumer whose backlog exceeds `write_buf_cap` after a
+//!   flush attempt is **disconnected** — backpressure by eviction, so a
+//!   slow reader can never block the loop or other connections.
+//! * **Handlers** never touch sockets: they stage [`Outbox`] ops
+//!   (send / close / pause / resume), applied by the loop after each
+//!   callback. `pause`/`resume` drop and restore read interest — the
+//!   v1 lockstep protocol parks a connection while its one in-flight
+//!   request executes, without blocking a thread.
+//! * **Stop** drains: live connections get `drain_grace` to flush their
+//!   write buffers, then everything is force-closed and the loop thread
+//!   joins — no orphaned threads, no leaked sockets.
+//!
+//! Cross-thread completion delivery (the engine finishing a request on
+//! a worker thread) pokes the [`Waker`] — a nonblocking socketpair the
+//! loop polls like any other fd — and the loop calls
+//! [`Handler::on_wake`] to drain staged results.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// raw epoll / rlimit FFI (no libc crate; std links the platform libc)
+// ---------------------------------------------------------------------------
+
+/// Mirrors `struct epoll_event`. x86-64 Linux declares it packed; other
+/// architectures use natural alignment.
+#[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+#[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+#[repr(C)]
+struct RLimit {
+    rlim_cur: u64,
+    rlim_max: u64,
+}
+
+extern "C" {
+    fn epoll_create1(flags: i32) -> i32;
+    fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+    fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout_ms: i32) -> i32;
+    fn close(fd: i32) -> i32;
+    fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+    fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+}
+
+const EPOLL_CLOEXEC: i32 = 0x80000;
+const EPOLL_CTL_ADD: i32 = 1;
+const EPOLL_CTL_DEL: i32 = 2;
+const EPOLL_CTL_MOD: i32 = 3;
+const EPOLLIN: u32 = 0x1;
+const EPOLLOUT: u32 = 0x4;
+const EPOLLERR: u32 = 0x8;
+const EPOLLHUP: u32 = 0x10;
+const EPOLLRDHUP: u32 = 0x2000;
+const RLIMIT_NOFILE: i32 = 7;
+
+/// Raise the process's open-file soft limit toward `want` (capped at
+/// the hard limit) and return the resulting soft limit. Best-effort:
+/// C10K-scale benches call this so 5000 sockets don't hit the default
+/// 1024-fd ceiling; failure just leaves the current limit in place.
+pub fn raise_nofile_limit(want: u64) -> u64 {
+    unsafe {
+        let mut lim = RLimit { rlim_cur: 0, rlim_max: 0 };
+        if getrlimit(RLIMIT_NOFILE, &mut lim) != 0 {
+            return 0;
+        }
+        if lim.rlim_cur < want {
+            let new = RLimit { rlim_cur: want.min(lim.rlim_max), rlim_max: lim.rlim_max };
+            let _ = setrlimit(RLIMIT_NOFILE, &new);
+            if getrlimit(RLIMIT_NOFILE, &mut lim) != 0 {
+                return new.rlim_cur;
+            }
+        }
+        lim.rlim_cur
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Poller: minimal epoll wrapper
+// ---------------------------------------------------------------------------
+
+/// One readiness event out of [`Poller::wait`].
+#[derive(Debug, Clone, Copy)]
+pub struct PollEvent {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    /// peer hung up or the fd errored — treat the connection as gone
+    pub hangup: bool,
+}
+
+/// Level-triggered epoll instance. `token` is an opaque u64 returned
+/// with each event; interest is (readable, writable) per fd.
+pub struct Poller {
+    epfd: i32,
+    raw: Vec<EpollEvent>,
+}
+
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Poller { epfd, raw: vec![EpollEvent { events: 0, data: 0 }; 1024] })
+    }
+
+    fn mask(readable: bool, writable: bool) -> u32 {
+        let mut m = EPOLLRDHUP;
+        if readable {
+            m |= EPOLLIN;
+        }
+        if writable {
+            m |= EPOLLOUT;
+        }
+        m
+    }
+
+    fn ctl(&self, op: i32, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        let mut ev = EpollEvent { events, data: token };
+        if unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) } != 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    pub fn add(&self, fd: RawFd, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, Self::mask(readable, writable), token)
+    }
+
+    pub fn modify(&self, fd: RawFd, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, Self::mask(readable, writable), token)
+    }
+
+    pub fn remove(&self, fd: RawFd) -> io::Result<()> {
+        // a non-null event pointer keeps pre-2.6.9 kernels happy
+        self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Wait for readiness, appending into `out`. `None` blocks
+    /// indefinitely. Returns the number of events delivered; EINTR is
+    /// retried internally.
+    pub fn wait(
+        &mut self,
+        out: &mut Vec<PollEvent>,
+        timeout: Option<Duration>,
+    ) -> io::Result<usize> {
+        let ms: i32 = match timeout {
+            None => -1,
+            Some(t) => t.as_millis().min(i32::MAX as u128) as i32,
+        };
+        let n = loop {
+            let n = unsafe {
+                epoll_wait(self.epfd, self.raw.as_mut_ptr(), self.raw.len() as i32, ms)
+            };
+            if n >= 0 {
+                break n as usize;
+            }
+            let err = io::Error::last_os_error();
+            if err.kind() != io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+        };
+        for ev in &self.raw[..n] {
+            // copy out of the (possibly packed) struct before testing bits
+            let bits = ev.events;
+            let token = ev.data;
+            out.push(PollEvent {
+                token,
+                readable: bits & EPOLLIN != 0,
+                writable: bits & EPOLLOUT != 0,
+                hangup: bits & (EPOLLERR | EPOLLHUP | EPOLLRDHUP) != 0,
+            });
+        }
+        Ok(n)
+    }
+}
+
+impl Drop for Poller {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.epfd);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Handler contract
+// ---------------------------------------------------------------------------
+
+/// Identifies one live connection: `(generation << 32) | slab slot`.
+/// After the connection closes the id is never reused (the slot is, the
+/// generation is not), so late ops targeting it are dropped harmlessly.
+pub type ConnId = u64;
+
+enum Op {
+    Send(Vec<u8>),
+    Close,
+    Pause,
+    Resume,
+}
+
+/// Staged connection operations. Handlers never touch sockets directly;
+/// they stage ops here and the loop applies them after the callback
+/// returns — so a handler can reply to any connection (completion
+/// fan-out), disconnect, or toggle read interest, all race-free.
+#[derive(Default)]
+pub struct Outbox {
+    ops: Vec<(ConnId, Op)>,
+}
+
+impl Outbox {
+    /// Queue bytes for `conn`. Flushed opportunistically; if the
+    /// conn's backlog exceeds the reactor's `write_buf_cap` after a
+    /// flush attempt, the conn is disconnected as a slow consumer.
+    pub fn send(&mut self, conn: ConnId, bytes: Vec<u8>) {
+        self.ops.push((conn, Op::Send(bytes)));
+    }
+
+    /// Flush what is queued for `conn`, then disconnect it.
+    pub fn close(&mut self, conn: ConnId) {
+        self.ops.push((conn, Op::Close));
+    }
+
+    /// Stop reading from `conn` (v1 lockstep: park until the in-flight
+    /// request completes). Already-buffered bytes are kept.
+    pub fn pause(&mut self, conn: ConnId) {
+        self.ops.push((conn, Op::Pause));
+    }
+
+    /// Restore read interest on `conn` and re-scan its buffered input
+    /// for complete lines.
+    pub fn resume(&mut self, conn: ConnId) {
+        self.ops.push((conn, Op::Resume));
+    }
+}
+
+/// Protocol logic plugged into the reactor. Runs on the reactor thread;
+/// `Send` so the loop thread can own it.
+pub trait Handler: Send + 'static {
+    /// One complete line arrived on `conn` (newline and any trailing
+    /// `\r` stripped).
+    fn on_line(&mut self, conn: ConnId, line: &str, out: &mut Outbox);
+
+    /// The [`Waker`] was poked from another thread: drain staged work
+    /// (e.g. engine completions) and reply via `out`.
+    fn on_wake(&mut self, out: &mut Outbox);
+
+    /// `conn` exceeded `max_line` without a newline. Stage a goodbye;
+    /// the reactor flush-closes the connection right after.
+    fn on_oversize(&mut self, conn: ConnId, out: &mut Outbox) {
+        let _ = (conn, out);
+    }
+
+    /// `conn` is gone (peer EOF, hangup, backpressure eviction, or
+    /// stop). Drop any per-conn state; replies staged for it are
+    /// discarded.
+    fn on_close(&mut self, conn: ConnId) {
+        let _ = conn;
+    }
+}
+
+/// Cross-thread wakeup handle: poke it and the reactor loop calls
+/// [`Handler::on_wake`]. Cloneable, nonblocking, coalescing (multiple
+/// pokes before the loop runs collapse into one wake).
+#[derive(Clone)]
+pub struct Waker {
+    pipe: Arc<UnixStream>,
+}
+
+impl Waker {
+    pub fn wake(&self) {
+        // WouldBlock means the pipe already holds unread pokes — the
+        // loop is waking anyway, dropping this byte is correct
+        let _ = (&*self.pipe).write(&[1u8]);
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ReactorConfig {
+    /// accepts beyond this are turned away with a best-effort error line
+    pub max_connections: usize,
+    /// read-buffer bound: a line longer than this is an oversize close
+    pub max_line: usize,
+    /// write-backlog bound: a conn buffering more than this after a
+    /// flush attempt is disconnected as a slow consumer
+    pub write_buf_cap: usize,
+    /// on stop (and per-conn flush-close), how long a connection gets
+    /// to drain its write buffer before being force-closed
+    pub drain_grace: Duration,
+}
+
+impl Default for ReactorConfig {
+    fn default() -> Self {
+        ReactorConfig {
+            max_connections: 64,
+            max_line: 64 * 1024,
+            write_buf_cap: 256 * 1024,
+            drain_grace: Duration::from_millis(250),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the reactor proper
+// ---------------------------------------------------------------------------
+
+const TOKEN_LISTENER: u64 = u64::MAX;
+const TOKEN_WAKER: u64 = u64::MAX - 1;
+/// poll tick while idle: bounds how stale a `closing` deadline sweep
+/// can get; all real work is event-driven
+const POLL_TICK: Duration = Duration::from_millis(100);
+
+struct Conn {
+    stream: TcpStream,
+    token: ConnId,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    /// already-written prefix of `wbuf`
+    wpos: usize,
+    paused: bool,
+    /// flush-then-close mode: no more reads, close once `wbuf` drains
+    /// or `close_by` passes
+    closing: bool,
+    close_by: Option<Instant>,
+    /// interest currently registered with the poller
+    want_read: bool,
+    want_write: bool,
+}
+
+impl Conn {
+    fn pending_write(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+}
+
+/// Owns the event loop thread. Dropping (or [`Reactor::stop`]) drains
+/// and joins — the no-orphaned-threads guarantee `Server::stop` builds
+/// on.
+pub struct Reactor {
+    local_addr: SocketAddr,
+    waker: Waker,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Reactor {
+    /// Take ownership of a bound listener and start the loop thread.
+    pub fn start<H: Handler>(
+        listener: TcpListener,
+        cfg: ReactorConfig,
+        handler: H,
+    ) -> io::Result<Reactor> {
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let (wake_tx, wake_rx) = UnixStream::pair()?;
+        wake_tx.set_nonblocking(true)?;
+        wake_rx.set_nonblocking(true)?;
+        let poller = Poller::new()?;
+        poller.add(listener.as_raw_fd(), TOKEN_LISTENER, true, false)?;
+        poller.add(wake_rx.as_raw_fd(), TOKEN_WAKER, true, false)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut lp = EventLoop {
+            poller,
+            listener,
+            wake_rx,
+            cfg,
+            handler,
+            stop: stop.clone(),
+            conns: Vec::new(),
+            gens: Vec::new(),
+            free: Vec::new(),
+            n_live: 0,
+            outbox: Outbox::default(),
+        };
+        let thread = std::thread::Builder::new()
+            .name("datamux-reactor".into())
+            .spawn(move || lp.run())?;
+        let waker = Waker { pipe: Arc::new(wake_tx) };
+        Ok(Reactor { local_addr, waker, stop, thread: Some(thread) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    pub fn waker(&self) -> Waker {
+        self.waker.clone()
+    }
+
+    /// Stop the loop: live connections get `drain_grace` to flush, then
+    /// everything closes and the thread joins. Idempotent.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        self.waker.wake();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Reactor {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+struct EventLoop<H: Handler> {
+    poller: Poller,
+    listener: TcpListener,
+    wake_rx: UnixStream,
+    cfg: ReactorConfig,
+    handler: H,
+    stop: Arc<AtomicBool>,
+    /// slab; `None` slots are free (their indices live in `free`)
+    conns: Vec<Option<Conn>>,
+    /// per-slot generation, bumped on close so stale tokens never match
+    gens: Vec<u32>,
+    free: Vec<usize>,
+    n_live: usize,
+    outbox: Outbox,
+}
+
+impl<H: Handler> EventLoop<H> {
+    fn run(&mut self) {
+        let mut events: Vec<PollEvent> = Vec::with_capacity(1024);
+        let mut stopping = false;
+        let mut stop_deadline = Instant::now();
+        loop {
+            if !stopping && self.stop.load(Ordering::Acquire) {
+                stopping = true;
+                stop_deadline = Instant::now() + self.cfg.drain_grace;
+                let _ = self.poller.remove(self.listener.as_raw_fd());
+                for idx in 0..self.conns.len() {
+                    self.begin_close(idx);
+                }
+            }
+            if stopping && (self.n_live == 0 || Instant::now() >= stop_deadline) {
+                for idx in 0..self.conns.len() {
+                    self.close_conn(idx, true);
+                }
+                return;
+            }
+            events.clear();
+            if self.poller.wait(&mut events, Some(POLL_TICK)).is_err() {
+                return; // epoll fd itself failed; nothing sane left to do
+            }
+            for i in 0..events.len() {
+                let ev = events[i];
+                match ev.token {
+                    TOKEN_LISTENER => {
+                        if !stopping {
+                            self.accept_ready();
+                        }
+                    }
+                    TOKEN_WAKER => {
+                        let mut sink = [0u8; 64];
+                        while matches!((&self.wake_rx).read(&mut sink), Ok(n) if n > 0) {}
+                        self.handler.on_wake(&mut self.outbox);
+                        self.apply_outbox();
+                    }
+                    token => self.conn_event(token, ev),
+                }
+            }
+            self.sweep_closing();
+        }
+    }
+
+    // -- slab ------------------------------------------------------------
+
+    fn slot_of(&self, token: ConnId) -> Option<usize> {
+        let idx = (token & 0xffff_ffff) as usize;
+        let generation = (token >> 32) as u32;
+        match self.conns.get(idx) {
+            Some(Some(_)) if self.gens[idx] == generation => Some(idx),
+            _ => None,
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if self.n_live >= self.cfg.max_connections {
+                        // best effort; the accepted fd is blocking but the
+                        // message is one small write
+                        let mut s = stream;
+                        let _ = s.write_all(b"ERR too many connections\n");
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let idx = match self.free.pop() {
+                        Some(i) => i,
+                        None => {
+                            self.conns.push(None);
+                            self.gens.push(0);
+                            self.conns.len() - 1
+                        }
+                    };
+                    let token = ((self.gens[idx] as u64) << 32) | idx as u64;
+                    if self.poller.add(stream.as_raw_fd(), token, true, false).is_err() {
+                        self.free.push(idx);
+                        continue;
+                    }
+                    self.conns[idx] = Some(Conn {
+                        stream,
+                        token,
+                        rbuf: Vec::new(),
+                        wbuf: Vec::new(),
+                        wpos: 0,
+                        paused: false,
+                        closing: false,
+                        close_by: None,
+                        want_read: true,
+                        want_write: false,
+                    });
+                    self.n_live += 1;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+    }
+
+    // -- per-connection event handling -----------------------------------
+
+    fn conn_event(&mut self, token: ConnId, ev: PollEvent) {
+        let Some(idx) = self.slot_of(token) else { return };
+        if ev.writable {
+            if !self.flush(idx) {
+                return;
+            }
+            // a closing conn that just drained is done
+            if let Some(Some(c)) = self.conns.get(idx) {
+                if c.closing && c.pending_write() == 0 {
+                    self.close_conn(idx, true);
+                    return;
+                }
+            }
+        }
+        if ev.readable {
+            if !self.read_ready(idx) {
+                return;
+            }
+        }
+        if ev.hangup {
+            // only after read: a FIN with final data still delivers it
+            self.close_conn(idx, true);
+            return;
+        }
+        self.update_interest(idx);
+    }
+
+    /// Pull everything currently readable into rbuf and dispatch
+    /// complete lines. Returns false if the conn was closed.
+    fn read_ready(&mut self, idx: usize) -> bool {
+        let mut chunk = [0u8; 4096];
+        loop {
+            let conn = match &mut self.conns[idx] {
+                Some(c) => c,
+                None => return false,
+            };
+            if conn.paused || conn.closing {
+                return true;
+            }
+            match conn.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.close_conn(idx, true);
+                    return false;
+                }
+                Ok(n) => {
+                    conn.rbuf.extend_from_slice(&chunk[..n]);
+                    if !self.drain_lines(idx) {
+                        return false;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.close_conn(idx, true);
+                    return false;
+                }
+            }
+        }
+    }
+
+    /// Dispatch every complete buffered line on `idx` (stopping early if
+    /// a handler pauses or closes it). Returns false if the conn closed.
+    fn drain_lines(&mut self, idx: usize) -> bool {
+        loop {
+            let (token, raw) = {
+                let conn = match &mut self.conns[idx] {
+                    Some(c) => c,
+                    None => return false,
+                };
+                if conn.paused || conn.closing {
+                    return true;
+                }
+                match conn.rbuf.iter().position(|&b| b == b'\n') {
+                    None => {
+                        if conn.rbuf.len() > self.cfg.max_line {
+                            let token = conn.token;
+                            self.handler.on_oversize(token, &mut self.outbox);
+                            self.apply_outbox();
+                            self.begin_close(idx);
+                            return false;
+                        }
+                        return true;
+                    }
+                    Some(pos) => {
+                        let mut raw: Vec<u8> = conn.rbuf.drain(..=pos).collect();
+                        raw.pop(); // the newline
+                        if raw.last() == Some(&b'\r') {
+                            raw.pop();
+                        }
+                        (conn.token, raw)
+                    }
+                }
+            };
+            let line = String::from_utf8_lossy(&raw);
+            self.handler.on_line(token, &line, &mut self.outbox);
+            self.apply_outbox();
+        }
+    }
+
+    /// Apply staged handler ops. Runs after every handler callback, so
+    /// a `pause` staged by `on_line` takes effect before the next
+    /// buffered line is dispatched.
+    fn apply_outbox(&mut self) {
+        while !self.outbox.ops.is_empty() {
+            let ops = std::mem::take(&mut self.outbox.ops);
+            for (token, op) in ops {
+                let Some(idx) = self.slot_of(token) else { continue };
+                match op {
+                    Op::Send(bytes) => {
+                        {
+                            let conn = self.conns[idx].as_mut().unwrap();
+                            conn.wbuf.extend_from_slice(&bytes);
+                        }
+                        if !self.flush(idx) {
+                            continue;
+                        }
+                        let evict = {
+                            let conn = self.conns[idx].as_mut().unwrap();
+                            conn.pending_write() > self.cfg.write_buf_cap
+                        };
+                        if evict {
+                            // slow consumer: evict rather than let one
+                            // unread backlog grow without bound
+                            self.close_conn(idx, true);
+                            continue;
+                        }
+                        self.update_interest(idx);
+                    }
+                    Op::Close => self.begin_close(idx),
+                    Op::Pause => {
+                        self.conns[idx].as_mut().unwrap().paused = true;
+                        self.update_interest(idx);
+                    }
+                    Op::Resume => {
+                        self.conns[idx].as_mut().unwrap().paused = false;
+                        self.update_interest(idx);
+                        // lines may already be buffered from before the
+                        // pause; dispatch them now (may stage more ops,
+                        // picked up by the outer while)
+                        self.drain_lines(idx);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Write as much buffered output as the socket accepts. Returns
+    /// false if the conn was closed by a write error.
+    fn flush(&mut self, idx: usize) -> bool {
+        loop {
+            let conn = match &mut self.conns[idx] {
+                Some(c) => c,
+                None => return false,
+            };
+            if conn.pending_write() == 0 {
+                conn.wbuf.clear();
+                conn.wpos = 0;
+                return true;
+            }
+            match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+                Ok(0) => {
+                    self.close_conn(idx, true);
+                    return false;
+                }
+                Ok(n) => {
+                    conn.wpos += n;
+                    // compact once fully drained (cheap; keeps the buffer
+                    // reusable without unbounded growth of the dead prefix)
+                    if conn.wpos == conn.wbuf.len() {
+                        conn.wbuf.clear();
+                        conn.wpos = 0;
+                        return true;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.close_conn(idx, true);
+                    return false;
+                }
+            }
+        }
+    }
+
+    /// Reconcile the poller's interest with the conn's state: read while
+    /// not paused/closing, write while output is buffered.
+    fn update_interest(&mut self, idx: usize) {
+        let Some(Some(conn)) = self.conns.get_mut(idx) else { return };
+        let want_read = !conn.paused && !conn.closing;
+        let want_write = conn.pending_write() > 0;
+        if want_read != conn.want_read || want_write != conn.want_write {
+            conn.want_read = want_read;
+            conn.want_write = want_write;
+            let fd = conn.stream.as_raw_fd();
+            let token = conn.token;
+            let _ = self.poller.modify(fd, token, want_read, want_write);
+        }
+    }
+
+    /// Flush-then-close: drain what we can now; if output remains, keep
+    /// the conn write-only until it drains or `drain_grace` passes.
+    fn begin_close(&mut self, idx: usize) {
+        {
+            let Some(Some(conn)) = self.conns.get_mut(idx) else { return };
+            if conn.closing {
+                return;
+            }
+            conn.closing = true;
+            conn.close_by = Some(Instant::now() + self.cfg.drain_grace);
+        }
+        if !self.flush(idx) {
+            return; // write error already closed it
+        }
+        let drained = self.conns[idx].as_ref().is_some_and(|c| c.pending_write() == 0);
+        if drained {
+            self.close_conn(idx, true);
+        } else {
+            self.update_interest(idx);
+        }
+    }
+
+    /// Force-close `closing` conns whose drain grace has passed.
+    fn sweep_closing(&mut self) {
+        let now = Instant::now();
+        for idx in 0..self.conns.len() {
+            let overdue = self.conns[idx]
+                .as_ref()
+                .is_some_and(|c| c.closing && c.close_by.is_some_and(|t| now >= t));
+            if overdue {
+                self.close_conn(idx, true);
+            }
+        }
+    }
+
+    fn close_conn(&mut self, idx: usize, notify: bool) {
+        let Some(conn) = self.conns.get_mut(idx).and_then(Option::take) else { return };
+        let token = conn.token;
+        let _ = self.poller.remove(conn.stream.as_raw_fd());
+        self.gens[idx] = self.gens[idx].wrapping_add(1);
+        self.free.push(idx);
+        self.n_live -= 1;
+        drop(conn); // closes the fd
+        if notify {
+            self.handler.on_close(token);
+            self.apply_outbox();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    fn connect(addr: SocketAddr) -> TcpStream {
+        let s = TcpStream::connect(addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s
+    }
+
+    fn read_line(s: &mut TcpStream) -> String {
+        let mut out = Vec::new();
+        let mut b = [0u8; 1];
+        loop {
+            match s.read(&mut b) {
+                Ok(0) => break,
+                Ok(_) if b[0] == b'\n' => break,
+                Ok(_) => out.push(b[0]),
+                Err(e) => panic!("read: {e}"),
+            }
+        }
+        String::from_utf8(out).unwrap()
+    }
+
+    /// Echoes each line back; records closes for assertions.
+    struct Echo {
+        closed: Arc<Mutex<Vec<ConnId>>>,
+    }
+
+    impl Handler for Echo {
+        fn on_line(&mut self, conn: ConnId, line: &str, out: &mut Outbox) {
+            out.send(conn, format!("echo {line}\n").into_bytes());
+        }
+
+        fn on_wake(&mut self, _out: &mut Outbox) {}
+
+        fn on_oversize(&mut self, conn: ConnId, out: &mut Outbox) {
+            out.send(conn, b"ERR line too long\n".to_vec());
+        }
+
+        fn on_close(&mut self, conn: ConnId) {
+            self.closed.lock().unwrap().push(conn);
+        }
+    }
+
+    fn echo_reactor(cfg: ReactorConfig) -> (Reactor, Arc<Mutex<Vec<ConnId>>>) {
+        let closed: Arc<Mutex<Vec<ConnId>>> = Arc::default();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let r = Reactor::start(listener, cfg, Echo { closed: closed.clone() }).unwrap();
+        (r, closed)
+    }
+
+    #[test]
+    fn poller_reports_readiness() {
+        let (a, b) = UnixStream::pair().unwrap();
+        a.set_nonblocking(true).unwrap();
+        b.set_nonblocking(true).unwrap();
+        let mut p = Poller::new().unwrap();
+        p.add(b.as_raw_fd(), 7, true, false).unwrap();
+        let mut evs = Vec::new();
+        assert_eq!(p.wait(&mut evs, Some(Duration::from_millis(10))).unwrap(), 0, "quiet fd");
+        (&a).write_all(b"x").unwrap();
+        evs.clear();
+        assert_eq!(p.wait(&mut evs, Some(Duration::from_secs(2))).unwrap(), 1);
+        assert_eq!(evs[0].token, 7);
+        assert!(evs[0].readable);
+        p.remove(b.as_raw_fd()).unwrap();
+    }
+
+    #[test]
+    fn lines_split_across_writes_reassemble() {
+        let (mut r, _closed) = echo_reactor(ReactorConfig::default());
+        let mut c = connect(r.local_addr());
+        c.write_all(b"hel").unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        c.write_all(b"lo\nwor").unwrap();
+        assert_eq!(read_line(&mut c), "echo hello");
+        c.write_all(b"ld\n").unwrap();
+        assert_eq!(read_line(&mut c), "echo world");
+        r.stop();
+    }
+
+    #[test]
+    fn oversized_line_gets_typed_error_then_disconnect() {
+        let cfg = ReactorConfig { max_line: 64, ..ReactorConfig::default() };
+        let (mut r, closed) = echo_reactor(cfg);
+        let mut c = connect(r.local_addr());
+        c.write_all(&vec![b'x'; 400]).unwrap(); // no newline, over the cap
+        assert_eq!(read_line(&mut c), "ERR line too long");
+        let mut rest = Vec::new();
+        c.read_to_end(&mut rest).expect("server closes after the error");
+        assert!(rest.is_empty());
+        r.stop();
+        assert_eq!(closed.lock().unwrap().len(), 1, "handler told about the close");
+    }
+
+    #[test]
+    fn stop_closes_live_connections_and_joins_the_thread() {
+        let (mut r, closed) = echo_reactor(ReactorConfig::default());
+        let mut c1 = connect(r.local_addr());
+        let mut c2 = connect(r.local_addr());
+        c1.write_all(b"ping\n").unwrap();
+        assert_eq!(read_line(&mut c1), "echo ping");
+        r.stop(); // joins: after this the loop thread is gone
+        let mut rest = Vec::new();
+        c1.read_to_end(&mut rest).expect("clean EOF");
+        c2.read_to_end(&mut rest).expect("clean EOF");
+        assert_eq!(closed.lock().unwrap().len(), 2, "both conns saw on_close");
+        // no datamux-reactor thread survives
+        let mut names = String::new();
+        for t in std::fs::read_dir("/proc/self/task").unwrap() {
+            let p = t.unwrap().path().join("comm");
+            names.push_str(&std::fs::read_to_string(p).unwrap_or_default());
+        }
+        assert!(!names.contains("datamux-reactor"), "orphaned reactor thread: {names}");
+    }
+
+    #[test]
+    fn over_capacity_accept_is_turned_away() {
+        let cfg = ReactorConfig { max_connections: 1, ..ReactorConfig::default() };
+        let (mut r, _closed) = echo_reactor(cfg);
+        let mut keep = connect(r.local_addr());
+        keep.write_all(b"a\n").unwrap();
+        assert_eq!(read_line(&mut keep), "echo a");
+        let mut extra = connect(r.local_addr());
+        assert_eq!(read_line(&mut extra), "ERR too many connections");
+        let mut rest = Vec::new();
+        extra.read_to_end(&mut rest).expect("refused conn is closed");
+        // the original connection still works
+        keep.write_all(b"b\n").unwrap();
+        assert_eq!(read_line(&mut keep), "echo b");
+        r.stop();
+    }
+
+    #[test]
+    fn slow_reader_is_evicted_without_stalling_others() {
+        /// Answers "blast" with a 256 KiB payload — amplification that
+        /// outruns kernel socket buffering once the client stops reading.
+        struct Blast {
+            closed: Arc<Mutex<Vec<ConnId>>>,
+        }
+        impl Handler for Blast {
+            fn on_line(&mut self, conn: ConnId, line: &str, out: &mut Outbox) {
+                if line == "ping" {
+                    out.send(conn, b"pong\n".to_vec());
+                } else {
+                    let mut big = vec![b'z'; 256 * 1024];
+                    big.push(b'\n');
+                    out.send(conn, big);
+                }
+            }
+
+            fn on_wake(&mut self, _out: &mut Outbox) {}
+
+            fn on_close(&mut self, conn: ConnId) {
+                self.closed.lock().unwrap().push(conn);
+            }
+        }
+
+        let closed: Arc<Mutex<Vec<ConnId>>> = Arc::default();
+        let cfg = ReactorConfig { write_buf_cap: 8 * 1024, ..ReactorConfig::default() };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let mut r = Reactor::start(listener, cfg, Blast { closed: closed.clone() }).unwrap();
+
+        let mut slow = connect(r.local_addr());
+        let mut fast = connect(r.local_addr());
+        // 128 requests x 256 KiB replies = 32 MiB aimed at a client that
+        // never reads: far past socket buffers plus the 8 KiB wbuf cap
+        for _ in 0..128 {
+            slow.write_all(b"blast\n").unwrap();
+        }
+        // the healthy connection keeps getting prompt answers meanwhile
+        for _ in 0..3 {
+            fast.write_all(b"ping\n").unwrap();
+            assert_eq!(read_line(&mut fast), "pong");
+        }
+        // the reactor evicts the slow reader instead of buffering forever
+        let t0 = Instant::now();
+        while closed.lock().unwrap().is_empty() && t0.elapsed() < Duration::from_secs(10) {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(closed.lock().unwrap().len(), 1, "slow reader evicted");
+        // the evicted socket terminates (EOF after draining what the
+        // kernel already buffered, or a reset — either ends the conn)
+        let _ = slow.read_to_end(&mut Vec::new());
+        // and the fast connection is still live afterwards
+        fast.write_all(b"ping\n").unwrap();
+        assert_eq!(read_line(&mut fast), "pong");
+        r.stop();
+    }
+
+    #[test]
+    fn raise_nofile_limit_reports_a_positive_limit() {
+        let lim = raise_nofile_limit(1024);
+        assert!(lim >= 256, "soft NOFILE limit unreasonably low: {lim}");
+    }
+}

@@ -113,6 +113,9 @@ pub struct Request {
     pub submitted: Instant,
     /// absolute deadline; expired requests are failed at batch assembly
     pub deadline: Option<Instant>,
+    /// SLO class — routes the request into its class FIFO within the
+    /// bucket queue and keys per-class queue-wait accounting
+    pub priority: super::Priority,
     pub(crate) done: Completion,
 }
 

@@ -23,6 +23,7 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
+use super::api::{ClassStatus, Priority, N_PRIORITY_CLASSES};
 use super::batcher::ExecBatch;
 use super::policy::SlotPolicy;
 use super::request::{EngineError, LogitsView, Response};
@@ -76,6 +77,21 @@ pub struct BucketTally {
     pub entries: std::sync::atomic::AtomicU64,
 }
 
+/// Per-priority-class serving tallies, indexed by [`Priority::index`].
+/// `queue_wait` is the per-class view of [`Stats::queue_wait`]; the shed
+/// counters are bumped at admission (not here) so STATS can report how
+/// much work each class lost to deadline-aware shedding.
+#[derive(Default)]
+pub struct ClassTally {
+    /// submit -> batch formed, for requests of this class
+    pub queue_wait: Histogram,
+    pub completed: std::sync::atomic::AtomicU64,
+    /// rejected at submit: deadline already expired
+    pub shed_expired: std::sync::atomic::AtomicU64,
+    /// rejected at submit: deadline provably unmeetable at current load
+    pub shed_overloaded: std::sync::atomic::AtomicU64,
+}
+
 /// Shared serving statistics.
 #[derive(Default)]
 pub struct Stats {
@@ -91,6 +107,8 @@ pub struct Stats {
     /// one tally per bucket, aligned with the engine's bucket registry;
     /// empty when the consumer doesn't track buckets (unit tests)
     pub per_bucket: Vec<BucketTally>,
+    /// one tally per SLO priority class, indexed by `Priority::index()`
+    pub per_class: [ClassTally; N_PRIORITY_CLASSES],
 }
 
 impl Stats {
@@ -115,6 +133,26 @@ impl Stats {
             .iter()
             .map(|t| {
                 (t.seq_len, t.waves.load(Ordering::Relaxed), t.entries.load(Ordering::Relaxed))
+            })
+            .collect()
+    }
+
+    /// Snapshot the per-class tallies as [`ClassStatus`] entries.
+    /// `depth` is left at zero — queue depth lives with whoever owns the
+    /// queues, so `Submit::class_status` implementations fill it in.
+    pub fn class_snapshot(&self) -> Vec<ClassStatus> {
+        Priority::ALL
+            .iter()
+            .map(|&p| {
+                let t = &self.per_class[p.index()];
+                ClassStatus {
+                    priority: p,
+                    depth: 0,
+                    completed: t.completed.load(Ordering::Relaxed),
+                    shed_expired: t.shed_expired.load(Ordering::Relaxed),
+                    shed_overloaded: t.shed_overloaded.load(Ordering::Relaxed),
+                    queue_wait: t.queue_wait.summary(),
+                }
             })
             .collect()
     }
@@ -285,9 +323,9 @@ pub fn execute_batch(
     let now = Instant::now();
     let mut entries = Vec::with_capacity(batch.entries.len());
     for req in batch.entries {
-        stats
-            .queue_wait
-            .record_duration(batch.formed_at.saturating_duration_since(req.submitted));
+        let waited = batch.formed_at.saturating_duration_since(req.submitted);
+        stats.queue_wait.record_duration(waited);
+        stats.per_class[req.priority.index()].queue_wait.record_duration(waited);
         if req.expired(now) {
             stats.counters.expired.fetch_add(1, Ordering::Relaxed);
             req.fulfill(Err(EngineError::DeadlineExceeded));
@@ -387,6 +425,7 @@ pub fn execute_batch(
         let latency = now.duration_since(req.submitted);
         stats.e2e_latency.record_duration(latency);
         stats.counters.completed.fetch_add(1, Ordering::Relaxed);
+        stats.per_class[req.priority.index()].completed.fetch_add(1, Ordering::Relaxed);
         let response = Response {
             id: req.id,
             slot,
@@ -468,6 +507,7 @@ mod tests {
             bucket: 0,
             submitted: Instant::now(),
             deadline: None,
+            priority: Priority::Normal,
             done: Completion::cell(cell),
         }
     }
@@ -539,6 +579,46 @@ mod tests {
             for cell in cells {
                 assert!(cell.wait_timeout(Duration::from_secs(1)).is_some());
             }
+        }
+    }
+
+    /// Per-class tallies: completions and queue-wait samples land in the
+    /// request's priority class, not a global bucket.
+    #[test]
+    fn per_class_tallies_track_completions_by_priority() {
+        let backend = FakeBackend::new("cls", 4, 1, 6, 3);
+        let tok = Tokenizer::new(default_vocab(), backend.meta().vocab_size);
+        let template = MuxTemplate::new(backend.meta(), &tok);
+        let stats = Stats::default();
+        let mut scratch = Vec::new();
+        let mut cells = Vec::new();
+        let mut entries = Vec::new();
+        for (pos, prio) in
+            [(0u64, Priority::High), (1, Priority::Normal), (2, Priority::Bulk), (3, Priority::High)]
+        {
+            let mut c = vec![tok.vocab.pad; 6];
+            c[0] = tok.vocab.cls;
+            let cell = OnceCellSync::new();
+            cells.push(cell.clone());
+            let mut req = make_req(pos, c, cell);
+            req.priority = prio;
+            entries.push(req);
+        }
+        let eb = ExecBatch { seq: 0, bucket: 0, entries, formed_at: Instant::now() };
+        execute_batch(&backend, &template, SlotPolicy::Fill, &stats, eb, &mut scratch)
+            .expect("fake backend executes");
+        for cell in cells {
+            assert!(cell.wait_timeout(Duration::from_secs(1)).unwrap().is_ok());
+        }
+        let classes = stats.class_snapshot();
+        assert_eq!(classes.len(), N_PRIORITY_CLASSES);
+        assert_eq!(classes[Priority::High.index()].completed, 2);
+        assert_eq!(classes[Priority::Normal.index()].completed, 1);
+        assert_eq!(classes[Priority::Bulk.index()].completed, 1);
+        for (c, want) in classes.iter().zip([2u64, 1, 1]) {
+            assert_eq!(c.queue_wait.count, want, "{:?} queue-wait samples", c.priority);
+            assert_eq!(c.shed_expired, 0);
+            assert_eq!(c.shed_overloaded, 0);
         }
     }
 

@@ -1,5 +1,5 @@
 //! TCP front end over any [`Submit`] engine (single coordinator or
-//! adaptive-N router).
+//! adaptive-N router), served by one event-loop thread.
 //!
 //! Two wire protocols share every connection, dispatched per line:
 //!
@@ -19,7 +19,7 @@
 //! written in completion order (not submission order):
 //! ```text
 //!   {"id":..,"op":"classify"|"tag","text":"t1 t2"|"ids":[..],
-//!    "deadline_ms":N?,"logits":bool?}
+//!    "deadline_ms":N?,"priority":"high"|"normal"|"bulk"?,"logits":bool?}
 //!   {"id":..,"op":"batch","items":[<op objects without id>..]}
 //!   {"id":..,"op":"stats"} / {"op":"quit"}
 //! -> {"id":..,"ok":true,"pred":N|"tags":[..],"slot":N,"group":N,"us":N}
@@ -27,19 +27,24 @@
 //! -> {"id":..,"ok":false,"error":"<code>","message":".."}
 //! ```
 //! Error codes are the stable [`SubmitError::code`] /
-//! [`EngineError::code`] strings plus `bad_json` and `bad_request`.
+//! [`EngineError::code`] strings plus `bad_json`, `bad_request`, and
+//! `oversized_line`. `priority` feeds SLO-tiered admission: per-class
+//! queue entries, deadline-aware shedding (`expired` / `overloaded`
+//! rejections at submit time), and a per-class `classes` array in v2
+//! STATS with queue-wait percentiles.
 //!
-//! One OS reader thread plus one completion-pump thread per connection,
-//! capped by a semaphore-ish counter — the heavy lifting (batching,
-//! model execution) happens on the engine's threads. Completions are
-//! delivered to a per-connection [`CompletionQueue`], so a pipelined
-//! connection never blocks a thread per in-flight request. Reads use a
-//! timeout so `Server::stop()` terminates idle connections promptly.
+//! **Threading**: one [`Reactor`] thread owns every socket (accept,
+//! framing, writes, backpressure — see `reactor.rs`), and one
+//! `datamux-completions` pump thread moves engine completions from the
+//! shared [`CompletionQueue`] into a staging buffer and pokes the
+//! reactor's waker. All protocol state lives on the reactor thread, so
+//! it needs no locks. The v1 lockstep contract is kept by pausing a
+//! connection's read interest while its one request is in flight —
+//! no blocked thread, just a parked fd. `Server::stop()` drains and
+//! joins both threads: no orphaned threads, no leaked sockets.
 
-use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::collections::{HashMap, HashSet};
+use std::net::TcpListener;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -48,25 +53,32 @@ use anyhow::Result;
 use crate::util::json::{num, obj, s, Json};
 use crate::util::threadpool::Channel;
 
-use super::api::{CompletionQueue, InferenceRequest, Payload, Submit, TaskKind};
+use super::api::{
+    CompletionItem, CompletionQueue, InferenceRequest, Payload, Priority, Submit, TaskKind,
+};
+use super::reactor::{ConnId, Handler, Outbox, Reactor, ReactorConfig};
 use super::request::Response;
 
-/// Completions buffered per connection before the pump writes them out.
-///
-/// Slow-consumer shedding: if a client keeps >CAP requests in flight
-/// while not reading replies (the pump is stuck on TCP backpressure),
-/// further completions for that connection are dropped rather than
-/// blocking the engine's shared scheduler threads — those ids simply
-/// never get a reply line (and a batch containing one never completes).
-/// Well-behaved clients that read replies never get near the cap.
-const PIPELINE_COMPLETION_CAP: usize = 4096;
+/// Engine completions in transit between the pump thread and the
+/// reactor. Purely a hand-off buffer: per-connection backpressure is the
+/// reactor's job (slow consumers are evicted when their write buffer
+/// exceeds `write_buf_cap`), so this never accumulates per-client debt.
+const COMPLETION_QUEUE_CAP: usize = 65536;
 
 pub struct ServerConfig {
     pub addr: String,
     pub max_connections: usize,
-    /// Poll interval at which blocked reads re-check the stop flag; also
-    /// bounds how long `Server::stop()` waits on idle connections.
+    /// Drain grace: how long `Server::stop()` (and any flush-close) waits
+    /// for a connection's buffered replies to reach the wire before
+    /// force-closing it. (Name kept from the thread-per-connection
+    /// server, where it was the blocking-read poll interval.)
     pub read_timeout: Duration,
+    /// Longest accepted request line; beyond it the client gets a typed
+    /// `oversized_line` error and a disconnect.
+    pub max_line: usize,
+    /// Per-connection write backlog allowed after a flush attempt; a
+    /// consumer further behind than this is disconnected.
+    pub write_buf_cap: usize,
 }
 
 impl Default for ServerConfig {
@@ -75,14 +87,17 @@ impl Default for ServerConfig {
             addr: "127.0.0.1:7071".into(),
             max_connections: 64,
             read_timeout: Duration::from_millis(250),
+            max_line: 64 * 1024,
+            write_buf_cap: 256 * 1024,
         }
     }
 }
 
 pub struct Server {
     pub local_addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
+    reactor: Option<Reactor>,
+    cq: CompletionQueue,
+    pump: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
@@ -91,145 +106,120 @@ impl Server {
     pub fn start(engine: Arc<dyn Submit>, cfg: ServerConfig) -> Result<Server> {
         let listener = TcpListener::bind(&cfg.addr)?;
         let local_addr = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let live = Arc::new(AtomicUsize::new(0));
-        let accept_thread = std::thread::Builder::new()
-            .name("datamux-accept".into())
+        let cq: CompletionQueue = Channel::bounded(COMPLETION_QUEUE_CAP);
+        let staging: Arc<Mutex<Vec<CompletionItem>>> = Arc::default();
+        let handler = SessionHandler {
+            engine,
+            cq: cq.clone(),
+            staging: staging.clone(),
+            max_line: cfg.max_line,
+            pending: HashMap::new(),
+            conns: HashMap::new(),
+            next_tag: 1,
+        };
+        let reactor = Reactor::start(
+            listener,
+            ReactorConfig {
+                max_connections: cfg.max_connections,
+                max_line: cfg.max_line,
+                write_buf_cap: cfg.write_buf_cap,
+                drain_grace: cfg.read_timeout,
+            },
+            handler,
+        )?;
+        let waker = reactor.waker();
+        let pump_cq = cq.clone();
+        let pump = std::thread::Builder::new()
+            .name("datamux-completions".into())
             .spawn(move || {
-                while !stop2.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            if live.load(Ordering::Relaxed) >= cfg.max_connections {
-                                let mut s = stream;
-                                let _ = s.write_all(b"ERR too many connections\n");
-                                continue;
-                            }
-                            live.fetch_add(1, Ordering::Relaxed);
-                            let engine = engine.clone();
-                            let live = live.clone();
-                            let stop = stop2.clone();
-                            let read_timeout = cfg.read_timeout;
-                            std::thread::spawn(move || {
-                                // decrement on drop so a panicking handler
-                                // can't leak a max_connections slot
-                                struct LiveGuard(Arc<AtomicUsize>);
-                                impl Drop for LiveGuard {
-                                    fn drop(&mut self) {
-                                        self.0.fetch_sub(1, Ordering::Relaxed);
-                                    }
-                                }
-                                let _guard = LiveGuard(live);
-                                let _ = handle_conn(stream, &engine, &stop, read_timeout);
-                            });
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(2));
-                        }
-                        Err(_) => break,
-                    }
+                while let Some(item) = pump_cq.recv() {
+                    staging.lock().unwrap().push(item);
+                    waker.wake();
                 }
             })?;
-        Ok(Server { local_addr, stop, accept_thread: Some(accept_thread) })
+        Ok(Server { local_addr, reactor: Some(reactor), cq, pump: Some(pump) })
     }
 
+    /// Stop serving: the reactor drains and closes every live
+    /// connection, then both the reactor and the completion pump join.
     pub fn stop(mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        if let Some(mut r) = self.reactor.take() {
+            r.stop();
+        }
+        self.cq.close();
+        if let Some(p) = self.pump.take() {
+            let _ = p.join();
         }
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
-        }
+        self.shutdown();
     }
-}
-
-fn handle_conn(
-    stream: TcpStream,
-    engine: &Arc<dyn Submit>,
-    stop: &AtomicBool,
-    read_timeout: Duration,
-) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    if !read_timeout.is_zero() {
-        // without this, an idle connection parked in read_line() only
-        // notices `stop` after its *next* line arrives
-        stream.set_read_timeout(Some(read_timeout)).ok();
-    }
-    let writer = Arc::new(Mutex::new(stream.try_clone()?));
-    let mut reader = BufReader::new(stream);
-    // created lazily on the first v2 line: pure-v1 connections never pay
-    // for the pump thread or the completion queue
-    let mut conn: Option<PipelinedConn<TcpStream>> = None;
-    // accumulate raw bytes, not a String: read_line() would discard
-    // partially-read bytes when a read timeout splits a multibyte UTF-8
-    // character, silently corrupting the request line
-    let mut line_buf: Vec<u8> = Vec::new();
-    loop {
-        if stop.load(Ordering::Relaxed) {
-            break;
-        }
-        match reader.read_until(b'\n', &mut line_buf) {
-            Ok(0) => break, // EOF
-            Ok(_) => {
-                let text = String::from_utf8_lossy(&line_buf).into_owned();
-                let l = text.trim();
-                let keep_open = if l.is_empty() {
-                    true
-                } else if l.starts_with('{') {
-                    conn.get_or_insert_with(|| PipelinedConn::new(engine.clone(), writer.clone()))
-                        .handle_line(l)
-                } else {
-                    match handle_line(l, engine.as_ref()) {
-                        Some(reply) => {
-                            write_line(&writer, &reply)?;
-                            true
-                        }
-                        None => false, // QUIT
-                    }
-                };
-                line_buf.clear();
-                if !keep_open {
-                    break;
-                }
-            }
-            // timeout: partial bytes stay in `line_buf`; loop to re-check
-            // `stop` and keep reading
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock
-                        | std::io::ErrorKind::TimedOut
-                        | std::io::ErrorKind::Interrupted
-                ) =>
-            {
-                continue
-            }
-            Err(_) => break,
-        }
-    }
-    Ok(())
-}
-
-fn write_line<W: Write>(writer: &Mutex<W>, line: &str) -> std::io::Result<()> {
-    let mut w = writer.lock().unwrap();
-    w.write_all(line.as_bytes())?;
-    w.write_all(b"\n")?;
-    w.flush()
 }
 
 // ---------------------------------------------------------------------------
 // protocol v1 (legacy, lockstep)
 // ---------------------------------------------------------------------------
 
-/// v1 protocol logic, factored for unit testing without sockets.
+fn v1_stats(engine: &dyn Submit) -> String {
+    let c = engine.counters();
+    format!(
+        "OK submitted={} completed={} rejected={} groups={} padded={} \
+         tokens_padded={} expired={}",
+        c.submitted,
+        c.completed,
+        c.rejected,
+        c.groups_executed,
+        c.slots_padded,
+        c.tokens_padded,
+        c.expired
+    )
+}
+
+/// Build the task-agnostic v1 request for a CLS/TOK line. The command
+/// only picks reply formatting; CLS splits sentence pairs on ` [SEP] `
+/// and TOK treats the whole line as one part — exactly as the legacy
+/// protocol did.
+fn v1_request(cmd: &str, rest: &str, engine: &dyn Submit) -> Result<InferenceRequest, String> {
+    let payload = if cmd == "CLS" {
+        Payload::Text(rest.to_string())
+    } else {
+        // unpadded: the engine assigns the bucket and pads there
+        match engine.tokenizer().encode_framed_unpadded(&[rest], engine.seq_len()) {
+            Ok(ids) => Payload::Framed(ids),
+            Err(e) => return Err(format!("tokenize: {e}")),
+        }
+    };
+    Ok(InferenceRequest {
+        task: engine.native_task(),
+        payload,
+        deadline: None,
+        priority: Priority::Normal,
+    })
+}
+
+fn v1_reply(kind: TaskKind, result: &Result<Response, super::request::EngineError>) -> String {
+    match result {
+        Ok(r) if kind == TaskKind::Classify => {
+            format!("OK {} slot={} us={}", r.pred_class(), r.slot, r.latency.as_micros())
+        }
+        Ok(r) => {
+            let tags: Vec<String> = r.pred_tokens().iter().map(|t| t.to_string()).collect();
+            format!("OK {} slot={} us={}", tags.join(","), r.slot, r.latency.as_micros())
+        }
+        Err(e) => format!("ERR {e}"),
+    }
+}
+
+/// v1 protocol logic, factored for unit testing without sockets. This is
+/// the *blocking* form (submit + wait inline); the reactor path submits
+/// tagged and parks the connection instead.
 pub fn handle_line(line: &str, engine: &dyn Submit) -> Option<String> {
     let (cmd, rest) = match line.split_once(' ') {
         Some((c, r)) => (c, r),
@@ -237,56 +227,16 @@ pub fn handle_line(line: &str, engine: &dyn Submit) -> Option<String> {
     };
     match cmd {
         "QUIT" => None,
-        "STATS" => {
-            let c = engine.counters();
-            Some(format!(
-                "OK submitted={} completed={} rejected={} groups={} padded={} \
-                 tokens_padded={} expired={}",
-                c.submitted,
-                c.completed,
-                c.rejected,
-                c.groups_executed,
-                c.slots_padded,
-                c.tokens_padded,
-                c.expired
-            ))
-        }
+        "STATS" => Some(v1_stats(engine)),
         "CLS" | "TOK" => {
-            // v1 is task-agnostic on submission (back-compat): the
-            // command only picks the reply formatting. CLS splits
-            // sentence pairs on ' [SEP] '; TOK treats the whole line as
-            // one part — both exactly as the legacy protocol did.
-            let payload = if cmd == "CLS" {
-                Payload::Text(rest.to_string())
-            } else {
-                // unpadded: the engine assigns the bucket and pads there
-                match engine.tokenizer().encode_framed_unpadded(&[rest], engine.seq_len()) {
-                    Ok(ids) => Payload::Framed(ids),
-                    Err(e) => return Some(format!("ERR tokenize: {e}")),
-                }
+            let req = match v1_request(cmd, rest, engine) {
+                Ok(req) => req,
+                Err(msg) => return Some(format!("ERR {msg}")),
             };
-            let req =
-                InferenceRequest { task: engine.native_task(), payload, deadline: None };
+            let kind =
+                if cmd == "CLS" { TaskKind::Classify } else { TaskKind::TagTokens };
             match engine.submit(req) {
-                Ok(h) => match h.wait() {
-                    Ok(r) if cmd == "CLS" => Some(format!(
-                        "OK {} slot={} us={}",
-                        r.pred_class(),
-                        r.slot,
-                        r.latency.as_micros()
-                    )),
-                    Ok(r) => {
-                        let tags: Vec<String> =
-                            r.pred_tokens().iter().map(|t| t.to_string()).collect();
-                        Some(format!(
-                            "OK {} slot={} us={}",
-                            tags.join(","),
-                            r.slot,
-                            r.latency.as_micros()
-                        ))
-                    }
-                    Err(e) => Some(format!("ERR {e}")),
-                },
+                Ok(h) => Some(v1_reply(kind, &h.wait())),
                 Err(e) => Some(format!("ERR {e}")),
             }
         }
@@ -295,17 +245,8 @@ pub fn handle_line(line: &str, engine: &dyn Submit) -> Option<String> {
 }
 
 // ---------------------------------------------------------------------------
-// protocol v2 (pipelined, typed)
+// reactor handler: all per-connection protocol state, single-threaded
 // ---------------------------------------------------------------------------
-
-struct Pending {
-    /// client-chosen id, echoed verbatim (string, number, anything)
-    id: Json,
-    kind: TaskKind,
-    want_logits: bool,
-    /// set when this request is one item of a BATCH submit
-    batch: Option<(Arc<Mutex<BatchAcc>>, usize)>,
-}
 
 struct BatchAcc {
     id: Json,
@@ -313,104 +254,157 @@ struct BatchAcc {
     results: Vec<Json>,
 }
 
-/// Per-connection v2 state: a tag allocator, the pending-request table,
-/// and a completion-pump thread that writes replies as results land
-/// (out of submission order when lanes complete at different speeds).
-struct PipelinedConn<W: Write + Send + 'static> {
-    engine: Arc<dyn Submit>,
-    writer: Arc<Mutex<W>>,
-    cq: CompletionQueue,
-    pending: Arc<Mutex<HashMap<u64, Pending>>>,
-    next_tag: u64,
-    pump: Option<std::thread::JoinHandle<()>>,
+enum ReplyKind {
+    /// lockstep CLS/TOK: reply then resume the paused connection
+    V1 { kind: TaskKind },
+    V2 {
+        /// client-chosen id, echoed verbatim (string, number, anything)
+        id: Json,
+        kind: TaskKind,
+        want_logits: bool,
+        /// set when this request is one item of a BATCH submit
+        batch: Option<(Arc<Mutex<BatchAcc>>, usize)>,
+    },
 }
 
-impl<W: Write + Send + 'static> PipelinedConn<W> {
-    fn new(engine: Arc<dyn Submit>, writer: Arc<Mutex<W>>) -> Self {
-        let cq: CompletionQueue = Channel::bounded(PIPELINE_COMPLETION_CAP);
-        let pending: Arc<Mutex<HashMap<u64, Pending>>> = Arc::new(Mutex::new(HashMap::new()));
-        let pump = {
-            let cq = cq.clone();
-            let pending = pending.clone();
-            let writer = writer.clone();
-            std::thread::Builder::new()
-                .name("datamux-conn-pump".into())
-                .spawn(move || run_completion_pump(&cq, &pending, &writer))
-                .expect("spawn completion pump")
-        };
-        PipelinedConn { engine, writer, cq, pending, next_tag: 1, pump: Some(pump) }
+struct Pending {
+    conn: ConnId,
+    reply: ReplyKind,
+}
+
+#[derive(Default)]
+struct ConnState {
+    /// in-flight tags, so a closing connection can drop its pendings
+    tags: HashSet<u64>,
+}
+
+struct SessionHandler {
+    engine: Arc<dyn Submit>,
+    cq: CompletionQueue,
+    /// completions parked by the pump thread until `on_wake` runs
+    staging: Arc<Mutex<Vec<CompletionItem>>>,
+    max_line: usize,
+    pending: HashMap<u64, Pending>,
+    conns: HashMap<ConnId, ConnState>,
+    next_tag: u64,
+}
+
+fn line_bytes(j: &Json) -> Vec<u8> {
+    let mut b = j.to_string().into_bytes();
+    b.push(b'\n');
+    b
+}
+
+impl SessionHandler {
+    fn alloc_tag(&mut self) -> u64 {
+        let t = self.next_tag;
+        self.next_tag += 1;
+        t
     }
 
-    /// Handle one v2 line; returns false when the connection should close.
-    fn handle_line(&mut self, line: &str) -> bool {
-        let v = match Json::parse(line) {
+    fn track(&mut self, conn: ConnId, tag: u64, reply: ReplyKind) {
+        self.conns.entry(conn).or_default().tags.insert(tag);
+        self.pending.insert(tag, Pending { conn, reply });
+    }
+
+    fn untrack(&mut self, conn: ConnId, tag: u64) {
+        self.pending.remove(&tag);
+        if let Some(cs) = self.conns.get_mut(&conn) {
+            cs.tags.remove(&tag);
+        }
+    }
+
+    fn send_error(&self, out: &mut Outbox, conn: ConnId, id: &Json, code: &str, msg: &str) {
+        out.send(conn, line_bytes(&attach_id(id.clone(), error_json(code, msg))));
+    }
+
+    fn v1_line(&mut self, conn: ConnId, l: &str, out: &mut Outbox) {
+        let (cmd, rest) = match l.split_once(' ') {
+            Some((c, r)) => (c, r),
+            None => (l, ""),
+        };
+        match cmd {
+            "QUIT" => out.close(conn),
+            "STATS" => out.send(conn, format!("{}\n", v1_stats(self.engine.as_ref())).into_bytes()),
+            "CLS" | "TOK" => {
+                let req = match v1_request(cmd, rest, self.engine.as_ref()) {
+                    Ok(req) => req,
+                    Err(msg) => {
+                        out.send(conn, format!("ERR {msg}\n").into_bytes());
+                        return;
+                    }
+                };
+                let kind =
+                    if cmd == "CLS" { TaskKind::Classify } else { TaskKind::TagTokens };
+                let tag = self.alloc_tag();
+                // register before submitting: the completion may land
+                // before submit_tagged even returns
+                self.track(conn, tag, ReplyKind::V1 { kind });
+                match self.engine.submit_tagged(req, tag, &self.cq) {
+                    Ok(()) => out.pause(conn), // lockstep: park until the reply
+                    Err(e) => {
+                        self.untrack(conn, tag);
+                        out.send(conn, format!("ERR {e}\n").into_bytes());
+                    }
+                }
+            }
+            _ => out.send(conn, format!("ERR unknown command '{cmd}'\n").into_bytes()),
+        }
+    }
+
+    fn v2_line(&mut self, conn: ConnId, l: &str, out: &mut Outbox) {
+        let v = match Json::parse(l) {
             Ok(v) => v,
             Err(e) => {
-                self.write_error(&Json::Null, "bad_json", &e.to_string());
-                return true;
+                self.send_error(out, conn, &Json::Null, "bad_json", &e.to_string());
+                return;
             }
         };
         let id = v.get("id").cloned().unwrap_or(Json::Null);
         match v.get("op").and_then(Json::as_str) {
-            Some("quit") => false,
+            Some("quit") => out.close(conn),
             Some("stats") => {
-                let line = attach_id(id, self.stats_json()).to_string();
-                let _ = write_line(&self.writer, &line);
-                true
+                out.send(conn, line_bytes(&attach_id(id, stats_json(self.engine.as_ref()))));
             }
-            Some("batch") => {
-                self.handle_batch(&id, &v);
-                true
-            }
-            Some("classify") | Some("tag") => {
-                self.handle_single(&id, &v);
-                true
-            }
+            Some("batch") => self.v2_batch(conn, &id, &v, out),
+            Some("classify") | Some("tag") => self.v2_single(conn, &id, &v, out),
             Some(other) => {
-                self.write_error(&id, "bad_request", &format!("unknown op '{other}'"));
-                true
+                self.send_error(out, conn, &id, "bad_request", &format!("unknown op '{other}'"));
             }
-            None => {
-                self.write_error(&id, "bad_request", "missing 'op'");
-                true
-            }
+            None => self.send_error(out, conn, &id, "bad_request", "missing 'op'"),
         }
     }
 
-    fn handle_single(&mut self, id: &Json, v: &Json) {
+    fn v2_single(&mut self, conn: ConnId, id: &Json, v: &Json, out: &mut Outbox) {
         match parse_task_item(v) {
-            Err(msg) => self.write_error(id, "bad_request", &msg),
+            Err(msg) => self.send_error(out, conn, id, "bad_request", &msg),
             Ok((req, kind, want_logits)) => {
                 let tag = self.alloc_tag();
-                // register before submitting: the completion may land
-                // before submit_tagged even returns
-                self.pending.lock().unwrap().insert(
+                self.track(
+                    conn,
                     tag,
-                    Pending { id: id.clone(), kind, want_logits, batch: None },
+                    ReplyKind::V2 { id: id.clone(), kind, want_logits, batch: None },
                 );
                 if let Err(e) = self.engine.submit_tagged(req, tag, &self.cq) {
-                    self.pending.lock().unwrap().remove(&tag);
-                    self.write_error(id, e.code(), &e.to_string());
+                    self.untrack(conn, tag);
+                    self.send_error(out, conn, id, e.code(), &e.to_string());
                 }
             }
         }
     }
 
-    fn handle_batch(&mut self, id: &Json, v: &Json) {
+    fn v2_batch(&mut self, conn: ConnId, id: &Json, v: &Json, out: &mut Outbox) {
         let items = match v.get("items").and_then(Json::as_arr) {
             Some(items) => items,
             None => {
-                self.write_error(id, "bad_request", "batch needs an 'items' array");
+                self.send_error(out, conn, id, "bad_request", "batch needs an 'items' array");
                 return;
             }
         };
         if items.is_empty() {
-            let line = attach_id(
-                id.clone(),
-                obj(vec![("ok", Json::Bool(true)), ("results", Json::Arr(Vec::new()))]),
-            )
-            .to_string();
-            let _ = write_line(&self.writer, &line);
+            let empty =
+                obj(vec![("ok", Json::Bool(true)), ("results", Json::Arr(Vec::new()))]);
+            out.send(conn, line_bytes(&attach_id(id.clone(), empty)));
             return;
         }
         let acc = Arc::new(Mutex::new(BatchAcc {
@@ -421,13 +415,17 @@ impl<W: Write + Send + 'static> PipelinedConn<W> {
         for (idx, item) in items.iter().enumerate() {
             match parse_task_item(item) {
                 Err(msg) => {
-                    self.finish_batch_item(&acc, idx, error_json("bad_request", &msg));
+                    if let Some(line) = batch_item_done(&acc, idx, error_json("bad_request", &msg))
+                    {
+                        out.send(conn, format!("{line}\n").into_bytes());
+                    }
                 }
                 Ok((req, kind, want_logits)) => {
                     let tag = self.alloc_tag();
-                    self.pending.lock().unwrap().insert(
+                    self.track(
+                        conn,
                         tag,
-                        Pending {
+                        ReplyKind::V2 {
                             id: Json::Null,
                             kind,
                             want_logits,
@@ -435,153 +433,86 @@ impl<W: Write + Send + 'static> PipelinedConn<W> {
                         },
                     );
                     if let Err(e) = self.engine.submit_tagged(req, tag, &self.cq) {
-                        self.pending.lock().unwrap().remove(&tag);
-                        self.finish_batch_item(&acc, idx, error_json(e.code(), &e.to_string()));
+                        self.untrack(conn, tag);
+                        if let Some(line) =
+                            batch_item_done(&acc, idx, error_json(e.code(), &e.to_string()))
+                        {
+                            out.send(conn, format!("{line}\n").into_bytes());
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Handler for SessionHandler {
+    fn on_line(&mut self, conn: ConnId, line: &str, out: &mut Outbox) {
+        let l = line.trim();
+        if l.is_empty() {
+            return;
+        }
+        if l.starts_with('{') {
+            self.v2_line(conn, l, out);
+        } else {
+            self.v1_line(conn, l, out);
+        }
+    }
+
+    fn on_wake(&mut self, out: &mut Outbox) {
+        let items = std::mem::take(&mut *self.staging.lock().unwrap());
+        for (tag, result) in items {
+            let Some(p) = self.pending.remove(&tag) else {
+                continue; // conn closed, or already answered synchronously
+            };
+            if let Some(cs) = self.conns.get_mut(&p.conn) {
+                cs.tags.remove(&tag);
+            }
+            match p.reply {
+                ReplyKind::V1 { kind } => {
+                    out.send(p.conn, format!("{}\n", v1_reply(kind, &result)).into_bytes());
+                    out.resume(p.conn); // release the lockstep pause
+                }
+                ReplyKind::V2 { id, kind, want_logits, batch } => {
+                    let payload = match &result {
+                        Ok(r) => success_json(kind, want_logits, r),
+                        Err(e) => error_json(e.code(), &e.to_string()),
+                    };
+                    match batch {
+                        None => out.send(p.conn, line_bytes(&attach_id(id, payload))),
+                        Some((acc, idx)) => {
+                            if let Some(line) = batch_item_done(&acc, idx, payload) {
+                                out.send(p.conn, format!("{line}\n").into_bytes());
+                            }
+                        }
                     }
                 }
             }
         }
     }
 
-    fn finish_batch_item(&self, acc: &Arc<Mutex<BatchAcc>>, idx: usize, result: Json) {
-        if let Some(line) = batch_item_done(acc, idx, result) {
-            let _ = write_line(&self.writer, &line);
-        }
+    fn on_oversize(&mut self, conn: ConnId, out: &mut Outbox) {
+        self.send_error(
+            out,
+            conn,
+            &Json::Null,
+            "oversized_line",
+            &format!("request line exceeds the {} byte limit", self.max_line),
+        );
     }
 
-    fn stats_json(&self) -> Json {
-        let c = self.engine.counters();
-        let l = self.engine.latency();
-        let qw = self.engine.queue_wait();
-        let status = self.engine.lane_status();
-        // per-lane health: which Ns are alive, how many waves each
-        // pulled, what a dead lane handed back to the shared queue, and
-        // the per-bucket wave/entry split
-        let lanes: Vec<Json> = status
-            .iter()
-            .map(|lane| {
-                let lane_buckets: Vec<Json> = lane
-                    .buckets
-                    .iter()
-                    .map(|b| {
-                        obj(vec![
-                            ("seq_len", num(b.seq_len as f64)),
-                            ("waves", num(b.waves as f64)),
-                            ("entries", num(b.entries as f64)),
-                        ])
-                    })
-                    .collect();
-                obj(vec![
-                    ("n_mux", num(lane.n_mux as f64)),
-                    ("alive", Json::Bool(lane.alive)),
-                    ("pulls", num(lane.pulls as f64)),
-                    ("requeued", num(lane.requeued as f64)),
-                    ("completed", num(lane.completed as f64)),
-                    ("buckets", Json::Arr(lane_buckets)),
-                ])
-            })
-            .collect();
-        // engine-wide per-bucket aggregate (lanes share one registry)
-        let mut agg: Vec<(usize, u64, u64)> = Vec::new();
-        for lane in &status {
-            for b in &lane.buckets {
-                match agg.iter_mut().find(|(l, _, _)| *l == b.seq_len) {
-                    Some(slot) => {
-                        slot.1 += b.waves;
-                        slot.2 += b.entries;
-                    }
-                    None => agg.push((b.seq_len, b.waves, b.entries)),
-                }
-            }
-        }
-        agg.sort_unstable_by_key(|&(l, _, _)| l);
-        let buckets: Vec<Json> = agg
-            .into_iter()
-            .map(|(seq_len, waves, entries)| {
-                obj(vec![
-                    ("seq_len", num(seq_len as f64)),
-                    ("waves", num(waves as f64)),
-                    ("entries", num(entries as f64)),
-                ])
-            })
-            .collect();
-        obj(vec![
-            ("ok", Json::Bool(true)),
-            (
-                "stats",
-                obj(vec![
-                    ("submitted", num(c.submitted as f64)),
-                    ("completed", num(c.completed as f64)),
-                    ("rejected", num(c.rejected as f64)),
-                    ("expired", num(c.expired as f64)),
-                    ("groups", num(c.groups_executed as f64)),
-                    ("padded", num(c.slots_padded as f64)),
-                    ("tokens_padded", num(c.tokens_padded as f64)),
-                    ("intake_waves", num(c.intake_waves as f64)),
-                    ("scratch_reallocs", num(c.scratch_reallocs as f64)),
-                    ("queue_depth", num(self.engine.queue_depth() as f64)),
-                    ("p50_us", num(l.p50_ns as f64 / 1e3)),
-                    ("p99_us", num(l.p99_ns as f64 / 1e3)),
-                    ("queue_wait_p50_us", num(qw.p50_ns as f64 / 1e3)),
-                    ("queue_wait_p99_us", num(qw.p99_ns as f64 / 1e3)),
-                    ("buckets", Json::Arr(buckets)),
-                    ("lanes", Json::Arr(lanes)),
-                ]),
-            ),
-        ])
-    }
-
-    fn write_error(&self, id: &Json, code: &str, msg: &str) {
-        let line = attach_id(id.clone(), error_json(code, msg)).to_string();
-        let _ = write_line(&self.writer, &line);
-    }
-
-    fn alloc_tag(&mut self) -> u64 {
-        let t = self.next_tag;
-        self.next_tag += 1;
-        t
-    }
-}
-
-impl<W: Write + Send + 'static> Drop for PipelinedConn<W> {
-    fn drop(&mut self) {
-        // close the completion queue: the pump drains what already
-        // landed, then exits; late completions are dropped harmlessly
-        self.cq.close();
-        if let Some(p) = self.pump.take() {
-            let _ = p.join();
-        }
-    }
-}
-
-/// Drain tagged completions and write replies, in completion order.
-fn run_completion_pump<W: Write>(
-    cq: &CompletionQueue,
-    pending: &Mutex<HashMap<u64, Pending>>,
-    writer: &Mutex<W>,
-) {
-    while let Some((tag, result)) = cq.recv() {
-        let info = match pending.lock().unwrap().remove(&tag) {
-            Some(info) => info,
-            None => continue, // already answered synchronously
-        };
-        let payload = match result {
-            Ok(r) => success_json(info.kind, info.want_logits, &r),
-            Err(e) => error_json(e.code(), &e.to_string()),
-        };
-        match info.batch {
-            None => {
-                let line = attach_id(info.id, payload).to_string();
-                let _ = write_line(writer, &line);
-            }
-            Some((acc, idx)) => {
-                if let Some(line) = batch_item_done(&acc, idx, payload) {
-                    let _ = write_line(writer, &line);
-                }
+    fn on_close(&mut self, conn: ConnId) {
+        if let Some(cs) = self.conns.remove(&conn) {
+            for tag in cs.tags {
+                self.pending.remove(&tag);
             }
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// protocol v2 parsing / formatting
+// ---------------------------------------------------------------------------
 
 /// Record one finished batch item; returns the reply line when the whole
 /// batch is done.
@@ -602,8 +533,8 @@ fn batch_item_done(acc: &Mutex<BatchAcc>, idx: usize, result: Json) -> Option<St
     )
 }
 
-/// Parse one task object (`op`/`text`|`ids`/`deadline_ms`/`logits`) into
-/// a typed request.
+/// Parse one task object (`op`/`text`|`ids`/`deadline_ms`/`priority`/
+/// `logits`) into a typed request.
 fn parse_task_item(v: &Json) -> Result<(InferenceRequest, TaskKind, bool), String> {
     let kind = match v.get("op").and_then(Json::as_str) {
         Some("classify") | None => TaskKind::Classify,
@@ -632,14 +563,23 @@ fn parse_task_item(v: &Json) -> Result<(InferenceRequest, TaskKind, bool), Strin
         return Err("missing 'text' or 'ids'".to_string());
     };
     // clamp to [0, 1 day]: Duration::from_secs_f64 panics on huge or
-    // non-finite input, and a panic here would kill the connection thread
+    // non-finite input, and a panic here would kill the reactor thread
     let deadline = v
         .get("deadline_ms")
         .and_then(Json::as_f64)
         .filter(|ms| ms.is_finite())
         .map(|ms| Duration::from_secs_f64(ms.clamp(0.0, 86_400_000.0) / 1e3));
+    let priority = match v.get("priority") {
+        None => Priority::Normal,
+        Some(p) => match p.as_str().and_then(Priority::from_str) {
+            Some(p) => p,
+            None => {
+                return Err(format!("unknown priority {p}; use \"high\"|\"normal\"|\"bulk\""))
+            }
+        },
+    };
     let want_logits = v.get("logits").and_then(Json::as_bool).unwrap_or(false);
-    Ok((InferenceRequest { task: kind, payload, deadline }, kind, want_logits))
+    Ok((InferenceRequest { task: kind, payload, deadline, priority }, kind, want_logits))
 }
 
 fn success_json(kind: TaskKind, want_logits: bool, r: &Response) -> Json {
@@ -679,12 +619,112 @@ fn attach_id(id: Json, payload: Json) -> Json {
     }
 }
 
+fn stats_json(engine: &dyn Submit) -> Json {
+    let c = engine.counters();
+    let l = engine.latency();
+    let qw = engine.queue_wait();
+    let status = engine.lane_status();
+    // per-lane health: which Ns are alive, how many waves each pulled,
+    // what a dead lane handed back to the shared queue, and the
+    // per-bucket wave/entry split
+    let lanes: Vec<Json> = status
+        .iter()
+        .map(|lane| {
+            let lane_buckets: Vec<Json> = lane
+                .buckets
+                .iter()
+                .map(|b| {
+                    obj(vec![
+                        ("seq_len", num(b.seq_len as f64)),
+                        ("waves", num(b.waves as f64)),
+                        ("entries", num(b.entries as f64)),
+                    ])
+                })
+                .collect();
+            obj(vec![
+                ("n_mux", num(lane.n_mux as f64)),
+                ("alive", Json::Bool(lane.alive)),
+                ("pulls", num(lane.pulls as f64)),
+                ("requeued", num(lane.requeued as f64)),
+                ("completed", num(lane.completed as f64)),
+                ("buckets", Json::Arr(lane_buckets)),
+            ])
+        })
+        .collect();
+    // engine-wide per-bucket aggregate (lanes share one registry)
+    let mut agg: Vec<(usize, u64, u64)> = Vec::new();
+    for lane in &status {
+        for b in &lane.buckets {
+            match agg.iter_mut().find(|(l, _, _)| *l == b.seq_len) {
+                Some(slot) => {
+                    slot.1 += b.waves;
+                    slot.2 += b.entries;
+                }
+                None => agg.push((b.seq_len, b.waves, b.entries)),
+            }
+        }
+    }
+    agg.sort_unstable_by_key(|&(l, _, _)| l);
+    let buckets: Vec<Json> = agg
+        .into_iter()
+        .map(|(seq_len, waves, entries)| {
+            obj(vec![
+                ("seq_len", num(seq_len as f64)),
+                ("waves", num(waves as f64)),
+                ("entries", num(entries as f64)),
+            ])
+        })
+        .collect();
+    // SLO tiers: admission/queue/completion accounting per priority class
+    let classes: Vec<Json> = engine
+        .class_status()
+        .iter()
+        .map(|cl| {
+            obj(vec![
+                ("priority", s(cl.priority.as_str())),
+                ("depth", num(cl.depth as f64)),
+                ("completed", num(cl.completed as f64)),
+                ("shed_expired", num(cl.shed_expired as f64)),
+                ("shed_overloaded", num(cl.shed_overloaded as f64)),
+                ("queue_wait_p50_us", num(cl.queue_wait.p50_ns as f64 / 1e3)),
+                ("queue_wait_p99_us", num(cl.queue_wait.p99_ns as f64 / 1e3)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        (
+            "stats",
+            obj(vec![
+                ("submitted", num(c.submitted as f64)),
+                ("completed", num(c.completed as f64)),
+                ("rejected", num(c.rejected as f64)),
+                ("expired", num(c.expired as f64)),
+                ("groups", num(c.groups_executed as f64)),
+                ("padded", num(c.slots_padded as f64)),
+                ("tokens_padded", num(c.tokens_padded as f64)),
+                ("intake_waves", num(c.intake_waves as f64)),
+                ("scratch_reallocs", num(c.scratch_reallocs as f64)),
+                ("queue_depth", num(engine.queue_depth() as f64)),
+                ("p50_us", num(l.p50_ns as f64 / 1e3)),
+                ("p99_us", num(l.p99_ns as f64 / 1e3)),
+                ("queue_wait_p50_us", num(qw.p50_ns as f64 / 1e3)),
+                ("queue_wait_p99_us", num(qw.p99_ns as f64 / 1e3)),
+                ("buckets", Json::Arr(buckets)),
+                ("classes", Json::Arr(classes)),
+                ("lanes", Json::Arr(lanes)),
+            ]),
+        ),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::EngineError;
     use crate::coordinator::EngineBuilder;
     use crate::runtime::FakeBackend;
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::net::TcpStream;
     use std::time::Instant;
 
     fn fake_cls_engine() -> Arc<dyn Submit> {
@@ -696,33 +736,26 @@ mod tests {
         )
     }
 
-    fn new_conn(engine: Arc<dyn Submit>) -> (PipelinedConn<Vec<u8>>, Arc<Mutex<Vec<u8>>>) {
-        let writer = Arc::new(Mutex::new(Vec::new()));
-        (PipelinedConn::new(engine, writer.clone()), writer)
+    fn start(engine: Arc<dyn Submit>) -> Server {
+        Server::start(engine, ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() })
+            .expect("server starts")
     }
 
-    fn lines(writer: &Mutex<Vec<u8>>) -> Vec<String> {
-        String::from_utf8(writer.lock().unwrap().clone())
-            .unwrap()
-            .lines()
-            .map(|l| l.to_string())
-            .collect()
+    fn client(srv: &Server) -> BufReader<TcpStream> {
+        let s = TcpStream::connect(srv.local_addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        BufReader::new(s)
     }
 
-    /// Poll until `n` reply lines landed (completions are asynchronous).
-    fn wait_for_lines(writer: &Mutex<Vec<u8>>, n: usize) -> Vec<String> {
-        let t0 = Instant::now();
-        loop {
-            let ls = lines(writer);
-            if ls.len() >= n {
-                return ls;
-            }
-            assert!(
-                t0.elapsed() < Duration::from_secs(10),
-                "timed out waiting for {n} reply lines; got {ls:?}"
-            );
-            std::thread::sleep(Duration::from_millis(5));
-        }
+    fn send(c: &mut BufReader<TcpStream>, line: &str) {
+        c.get_mut().write_all(line.as_bytes()).unwrap();
+        c.get_mut().write_all(b"\n").unwrap();
+    }
+
+    fn recv(c: &mut BufReader<TcpStream>) -> String {
+        let mut line = String::new();
+        c.read_line(&mut line).expect("read reply");
+        line.trim_end().to_string()
     }
 
     #[test]
@@ -745,93 +778,142 @@ mod tests {
     }
 
     #[test]
-    fn v2_malformed_json_and_unknown_op() {
-        let (mut conn, writer) = new_conn(fake_cls_engine());
-        assert!(conn.handle_line("{nope"));
-        assert!(conn.handle_line(r#"{"id":7,"op":"frobnicate"}"#));
-        assert!(conn.handle_line(r#"{"id":8}"#));
-        let ls = lines(&writer);
-        assert_eq!(ls.len(), 3, "{ls:?}");
-        assert!(ls[0].contains("bad_json"), "{}", ls[0]);
-        assert!(ls[1].contains("bad_request") && ls[1].contains("\"id\":7"), "{}", ls[1]);
-        assert!(ls[2].contains("missing 'op'"), "{}", ls[2]);
+    fn v1_over_socket_is_lockstep_and_quits() {
+        let srv = start(fake_cls_engine());
+        let mut c = client(&srv);
+        send(&mut c, "CLS t1 t2");
+        assert!(recv(&mut c).starts_with("OK "), "CLS answers");
+        send(&mut c, "BOGUS");
+        assert!(recv(&mut c).starts_with("ERR unknown command"));
+        send(&mut c, "STATS");
+        assert!(recv(&mut c).contains("submitted="));
+        send(&mut c, "QUIT");
+        let mut rest = Vec::new();
+        c.get_mut().read_to_end(&mut rest).expect("QUIT closes the conn");
+        srv.stop();
     }
 
     #[test]
     fn v2_classify_echoes_id_and_predicts() {
-        let (mut conn, writer) = new_conn(fake_cls_engine());
-        assert!(conn.handle_line(r#"{"id":"req-a","op":"classify","text":"t1 t2"}"#));
-        let ls = wait_for_lines(&writer, 1);
-        assert!(ls[0].contains("\"id\":\"req-a\""), "{}", ls[0]);
-        assert!(ls[0].contains("\"ok\":true"), "{}", ls[0]);
+        let srv = start(fake_cls_engine());
+        let mut c = client(&srv);
+        send(&mut c, r#"{"id":"req-a","op":"classify","text":"t1 t2"}"#);
+        let reply = recv(&mut c);
+        assert!(reply.contains("\"id\":\"req-a\""), "{reply}");
+        assert!(reply.contains("\"ok\":true"), "{reply}");
         // [CLS]=1 t1=45 t2=46 [SEP]=2 + padding -> sum=94 -> 94 % 3 = 1
-        assert!(ls[0].contains("\"pred\":1"), "{}", ls[0]);
+        assert!(reply.contains("\"pred\":1"), "{reply}");
+        srv.stop();
     }
 
     #[test]
-    fn v2_wrong_task_is_typed() {
-        let (mut conn, writer) = new_conn(fake_cls_engine());
-        assert!(conn.handle_line(r#"{"id":1,"op":"tag","text":"t1"}"#));
-        let ls = lines(&writer);
-        assert!(ls[0].contains("wrong_task"), "{}", ls[0]);
+    fn v2_malformed_json_unknown_op_and_priority_typo() {
+        let srv = start(fake_cls_engine());
+        let mut c = client(&srv);
+        send(&mut c, "{nope");
+        assert!(recv(&mut c).contains("bad_json"));
+        send(&mut c, r#"{"id":7,"op":"frobnicate"}"#);
+        let reply = recv(&mut c);
+        assert!(reply.contains("bad_request") && reply.contains("\"id\":7"), "{reply}");
+        send(&mut c, r#"{"id":8}"#);
+        assert!(recv(&mut c).contains("missing 'op'"));
+        // a typo'd priority is a typed rejection, not a silent default
+        send(&mut c, r#"{"id":9,"op":"classify","text":"t1","priority":"urgent"}"#);
+        let reply = recv(&mut c);
+        assert!(reply.contains("bad_request") && reply.contains("priority"), "{reply}");
+        srv.stop();
+    }
+
+    #[test]
+    fn v2_interleaved_pipelined_ids_all_answered() {
+        let srv = start(fake_cls_engine());
+        let mut c = client(&srv);
+        // burst of pipelined requests in one write, varying content
+        let mut burst = String::new();
+        for i in 0..16 {
+            burst.push_str(&format!(
+                "{{\"id\":\"q{i}\",\"op\":\"classify\",\"ids\":[1,45,46,2,0,0,0,{i}]}}\n"
+            ));
+        }
+        c.get_mut().write_all(burst.as_bytes()).unwrap();
+        let mut seen = HashSet::new();
+        for _ in 0..16 {
+            let reply = recv(&mut c);
+            assert!(reply.contains("\"ok\":true"), "{reply}");
+            let id = Json::parse(&reply)
+                .unwrap()
+                .get("id")
+                .and_then(Json::as_str)
+                .unwrap()
+                .to_string();
+            assert!(seen.insert(id), "duplicate id in {reply}");
+        }
+        assert_eq!(seen.len(), 16, "every pipelined id answered exactly once");
+        srv.stop();
     }
 
     #[test]
     fn v2_batch_mixes_success_and_typed_errors() {
-        let (mut conn, writer) = new_conn(fake_cls_engine());
+        let srv = start(fake_cls_engine());
+        let mut c = client(&srv);
         // item 0: valid framed ids; item 1: over the model max (9 > 8);
-        // item 2: short unpadded ids are now *valid* (bucketed)
-        assert!(conn.handle_line(
-            r#"{"id":"b1","op":"batch","items":[
+        // item 2: short unpadded ids are *valid* (bucketed)
+        send(
+            &mut c,
+            &r#"{"id":"b1","op":"batch","items":[
                 {"op":"classify","ids":[1,45,46,2,0,0,0,0]},
                 {"op":"classify","ids":[1,2,3,4,5,6,7,8,9]},
                 {"op":"classify","ids":[1,45,46,2]}]}"#
-                .replace('\n', " ")
-                .trim()
-        ));
-        let ls = wait_for_lines(&writer, 1);
-        assert_eq!(ls.len(), 1, "batch answers on one line: {ls:?}");
-        assert!(ls[0].contains("\"id\":\"b1\""), "{}", ls[0]);
+                .replace('\n', " "),
+        );
+        let reply = recv(&mut c);
+        assert!(reply.contains("\"id\":\"b1\""), "{reply}");
         // sum(1+45+46+2)=94 -> pred 1, for both the padded and the
         // unpadded form of the same content
-        assert_eq!(ls[0].matches("\"pred\":1").count(), 2, "{}", ls[0]);
-        assert!(ls[0].contains("too_long"), "{}", ls[0]);
-        assert!(!ls[0].contains("bad_frame"), "{}", ls[0]);
+        assert_eq!(reply.matches("\"pred\":1").count(), 2, "{reply}");
+        assert!(reply.contains("too_long"), "{reply}");
+        assert!(!reply.contains("bad_frame"), "{reply}");
+        srv.stop();
     }
 
     #[test]
     fn v2_hostile_deadline_and_float_ids_are_handled() {
-        let (mut conn, writer) = new_conn(fake_cls_engine());
+        let srv = start(fake_cls_engine());
+        let mut c = client(&srv);
         // a huge deadline must not panic Duration::from_secs_f64 — it is
         // clamped and the request completes normally
-        assert!(conn.handle_line(
-            r#"{"id":1,"op":"classify","text":"t1","deadline_ms":1e300}"#
-        ));
-        let ls = wait_for_lines(&writer, 1);
-        assert!(ls[0].contains("\"ok\":true"), "{}", ls[0]);
+        send(&mut c, r#"{"id":1,"op":"classify","text":"t1","deadline_ms":1e300}"#);
+        assert!(recv(&mut c).contains("\"ok\":true"));
         // non-integer ids are rejected, not silently truncated
-        assert!(conn.handle_line(r#"{"id":2,"op":"classify","ids":[1.5,2,3,4,5,6,7,8]}"#));
-        let ls = wait_for_lines(&writer, 2);
-        assert!(ls[1].contains("bad_request"), "{}", ls[1]);
+        send(&mut c, r#"{"id":2,"op":"classify","ids":[1.5,2,3,4,5,6,7,8]}"#);
+        assert!(recv(&mut c).contains("bad_request"));
+        srv.stop();
     }
 
     #[test]
-    fn v2_stats_and_quit() {
-        let (mut conn, writer) = new_conn(fake_cls_engine());
-        assert!(conn.handle_line(r#"{"id":0,"op":"stats"}"#));
-        assert!(!conn.handle_line(r#"{"op":"quit"}"#), "quit closes");
-        let ls = lines(&writer);
-        assert!(ls[0].contains("\"queue_depth\""), "{}", ls[0]);
-        // a single coordinator reports itself as one healthy lane
-        let v = Json::parse(&ls[0]).unwrap();
-        let lanes = v
-            .get("stats")
-            .and_then(|s| s.get("lanes"))
-            .and_then(Json::as_arr)
-            .expect("stats carry per-lane health");
-        assert_eq!(lanes.len(), 1, "{}", ls[0]);
+    fn v2_stats_carry_classes_and_lanes_then_quit() {
+        let srv = start(fake_cls_engine());
+        let mut c = client(&srv);
+        send(&mut c, r#"{"id":"w","op":"classify","text":"t1 t2","priority":"high"}"#);
+        assert!(recv(&mut c).contains("\"ok\":true"));
+        send(&mut c, r#"{"id":0,"op":"stats"}"#);
+        let reply = recv(&mut c);
+        let v = Json::parse(&reply).unwrap();
+        let stats = v.get("stats").expect("stats object");
+        let lanes = stats.get("lanes").and_then(Json::as_arr).expect("lane health");
+        assert_eq!(lanes.len(), 1, "{reply}");
         assert_eq!(lanes[0].get("alive").and_then(Json::as_bool), Some(true));
-        assert_eq!(lanes[0].get("n_mux").and_then(Json::as_usize), Some(2));
+        let classes = stats.get("classes").and_then(Json::as_arr).expect("SLO classes");
+        assert_eq!(classes.len(), 3, "one entry per priority class: {reply}");
+        let names: Vec<&str> =
+            classes.iter().filter_map(|c| c.get("priority").and_then(Json::as_str)).collect();
+        assert_eq!(names, ["high", "normal", "bulk"], "{reply}");
+        let high_done = classes[0].get("completed").and_then(Json::as_usize);
+        assert_eq!(high_done, Some(1), "the high-priority classify is tallied: {reply}");
+        send(&mut c, r#"{"op":"quit"}"#);
+        let mut rest = Vec::new();
+        c.get_mut().read_to_end(&mut rest).expect("quit closes the conn");
+        srv.stop();
     }
 
     #[test]
@@ -845,57 +927,80 @@ mod tests {
                 ))
                 .unwrap(),
         );
-        let (mut conn, writer) = new_conn(engine);
+        let srv = start(engine);
+        let mut c = client(&srv);
         let n = 30;
+        let mut burst = String::new();
         for i in 0..n {
-            assert!(conn.handle_line(&format!(
-                r#"{{"id":{i},"op":"classify","ids":[1,45,46,2,0,0,0,{i}]}}"#
-            )));
+            burst.push_str(&format!(
+                "{{\"id\":{i},\"op\":\"classify\",\"ids\":[1,45,46,2,0,0,0,{i}]}}\n"
+            ));
         }
+        c.get_mut().write_all(burst.as_bytes()).unwrap();
         // every submission eventually produces exactly one reply line:
         // queue_full synchronously, or a completion through the pump
-        let ls = wait_for_lines(&writer, n);
-        assert_eq!(ls.len(), n);
-        let full = ls.iter().filter(|l| l.contains("queue_full")).count();
-        let ok = ls.iter().filter(|l| l.contains("\"ok\":true")).count();
-        assert!(full >= 1, "expected at least one queue_full: {ls:?}");
-        assert!(ok >= 1, "expected at least one success: {ls:?}");
-        assert_eq!(full + ok, n);
+        let mut full = 0;
+        let mut ok = 0;
+        for _ in 0..n {
+            let reply = recv(&mut c);
+            if reply.contains("queue_full") {
+                full += 1;
+            } else if reply.contains("\"ok\":true") {
+                ok += 1;
+            } else {
+                panic!("unexpected reply: {reply}");
+            }
+        }
+        assert!(full >= 1, "expected at least one queue_full (got {ok} ok)");
+        assert!(ok >= 1, "expected at least one success (got {full} queue_full)");
+        srv.stop();
     }
 
     #[test]
-    fn pump_writes_replies_in_completion_order_not_submission_order() {
-        let cq: CompletionQueue = Channel::bounded(8);
-        let pending = Mutex::new(HashMap::new());
-        for (tag, id) in [(1u64, "first"), (2, "second")] {
-            pending.lock().unwrap().insert(
-                tag,
-                Pending {
-                    id: s(id),
-                    kind: TaskKind::Classify,
-                    want_logits: false,
-                    batch: None,
-                },
-            );
+    fn oversized_line_is_a_typed_error_then_disconnect() {
+        let engine = fake_cls_engine();
+        let srv = Server::start(
+            engine,
+            ServerConfig { addr: "127.0.0.1:0".into(), max_line: 256, ..Default::default() },
+        )
+        .unwrap();
+        let mut c = client(&srv);
+        let huge = format!("{{\"id\":1,\"op\":\"classify\",\"text\":\"{}\"", "t1 ".repeat(400));
+        c.get_mut().write_all(huge.as_bytes()).unwrap(); // no newline, over the cap
+        let reply = recv(&mut c);
+        assert!(reply.contains("oversized_line"), "{reply}");
+        let mut rest = Vec::new();
+        c.get_mut().read_to_end(&mut rest).expect("server closes after the error");
+        assert!(rest.is_empty());
+        srv.stop();
+    }
+
+    #[test]
+    fn stop_closes_live_connections_and_leaves_no_server_threads() {
+        let srv = start(fake_cls_engine());
+        let mut busy = client(&srv);
+        send(&mut busy, r#"{"id":1,"op":"classify","text":"t1"}"#);
+        assert!(recv(&mut busy).contains("\"ok\":true"));
+        let mut idle = client(&srv);
+        std::thread::sleep(Duration::from_millis(30)); // let the accept land
+        let t0 = Instant::now();
+        srv.stop();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "stop() must not hang on live connections"
+        );
+        // both connections see EOF, not a hang: the old thread-per-conn
+        // server orphaned its detached reader threads here
+        let mut rest = Vec::new();
+        busy.get_mut().read_to_end(&mut rest).expect("busy conn sees EOF");
+        idle.get_mut().read_to_end(&mut rest).expect("idle conn sees EOF");
+        // and the server's named threads are gone (joined, not detached)
+        let mut names = String::new();
+        for t in std::fs::read_dir("/proc/self/task").unwrap() {
+            let p = t.unwrap().path().join("comm");
+            names.push_str(&std::fs::read_to_string(p).unwrap_or_default());
         }
-        let resp = |id: u64| Response {
-            id,
-            slot: 0,
-            group: 0,
-            logits: vec![0.0, 1.0].into(),
-            n_classes: 2,
-            latency: Duration::ZERO,
-        };
-        // completions land out of submission order: tag 2 first
-        cq.send((2, Ok(resp(2)))).unwrap();
-        cq.send((1, Err(EngineError::DeadlineExceeded))).unwrap();
-        cq.close();
-        let writer = Mutex::new(Vec::new());
-        run_completion_pump(&cq, &pending, &writer);
-        let ls = lines(&writer);
-        assert_eq!(ls.len(), 2);
-        assert!(ls[0].contains("\"id\":\"second\"") && ls[0].contains("\"ok\":true"), "{}", ls[0]);
-        assert!(ls[1].contains("\"id\":\"first\"") && ls[1].contains("deadline"), "{}", ls[1]);
-        assert!(pending.lock().unwrap().is_empty());
+        assert!(!names.contains("datamux-reactor"), "orphaned reactor thread: {names}");
+        assert!(!names.contains("datamux-completions"), "orphaned pump thread: {names}");
     }
 }

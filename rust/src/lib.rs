@@ -25,8 +25,8 @@ pub mod util;
 pub mod workload;
 
 pub use coordinator::{
-    BucketStatus, Buckets, CoordinatorConfig, EngineBuilder, EngineError, InferenceRequest,
-    LaneStatus, LogitsView, MuxCoordinator, MuxRouter, MuxTemplate, Payload, RequestHandle,
-    Response, Submit, SubmitError, TaskKind,
+    BucketStatus, Buckets, ClassStatus, CoordinatorConfig, EngineBuilder, EngineError,
+    InferenceRequest, LaneStatus, LogitsView, MuxCoordinator, MuxRouter, MuxTemplate, Payload,
+    Priority, RequestHandle, Response, Submit, SubmitError, TaskKind,
 };
 pub use runtime::{ArtifactManifest, FakeBackend, InferenceBackend, ModelRuntime, NativeBackend};

@@ -23,6 +23,7 @@ fn main() -> Result<()> {
         .describe("artifact", "", "artifact name (default: first trained, else first)")
         .describe("backend", "pjrt", "pjrt | native (pure-rust forward, no PJRT)")
         .describe("addr", "127.0.0.1:7071", "TCP bind address for serve")
+        .describe("max-connections", "64", "concurrent client connections served")
         .describe("max-wait-ms", "5", "batcher deadline")
         .describe("queue-cap", "1024", "admission queue capacity (per bucket)")
         .describe(
@@ -92,7 +93,7 @@ fn main() -> Result<()> {
                     SlotPolicy::Fill
                 })
                 .addr(args.str("addr", "127.0.0.1:7071"))
-                .max_connections(64);
+                .max_connections(args.usize("max-connections", 64));
 
             // all branches produce the same trait object: the server is
             // generic over whichever engine shape (and backend) is behind it

@@ -1,8 +1,11 @@
 //! Minimal JSON parser / writer (serde stand-in).
 //!
-//! Supports the full JSON grammar minus exotic escapes (`\uXXXX` is
-//! decoded for the BMP only). Used for the artifact manifest written by
-//! `python/compile/aot.py` and for bench/experiment result files.
+//! Supports the full JSON grammar, including `\uXXXX` escapes: BMP
+//! code points decode directly and astral characters decode via UTF-16
+//! surrogate pairs (`\uD83D\uDE00` → 😀); a lone or mismatched
+//! surrogate is a clean parse error, never a silent U+FFFD. Used for
+//! the artifact manifest written by `python/compile/aot.py`, the v2
+//! wire protocol, and bench/experiment result files.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -296,6 +299,22 @@ impl<'a> Parser<'a> {
             .ok_or_else(|| self.err("bad number"))
     }
 
+    /// Read exactly four hex digits at the cursor, advancing past them.
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        if self.i + 4 > self.b.len() {
+            return Err(self.err("bad \\u escape"));
+        }
+        let hex = &self.b[self.i..self.i + 4];
+        // strict: from_str_radix would also accept a leading '+'
+        if hex.iter().any(|c| !c.is_ascii_hexdigit()) {
+            return Err(self.err("bad \\u escape"));
+        }
+        let cp = u32::from_str_radix(std::str::from_utf8(hex).unwrap(), 16)
+            .map_err(|_| self.err("bad \\u escape"))?;
+        self.i += 4;
+        Ok(cp)
+    }
+
     fn string(&mut self) -> Result<String, JsonError> {
         self.eat(b'"')?;
         let mut out = String::new();
@@ -318,15 +337,37 @@ impl<'a> Parser<'a> {
                         Some(b'b') => out.push('\u{8}'),
                         Some(b'f') => out.push('\u{c}'),
                         Some(b'u') => {
-                            if self.i + 4 >= self.b.len() {
-                                return Err(self.err("bad \\u escape"));
-                            }
-                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
-                            self.i += 4;
+                            self.i += 1; // past 'u'
+                            let hi = self.hex4()?;
+                            let cp = match hi {
+                                // high surrogate: a low surrogate escape
+                                // MUST follow (UTF-16 pair -> astral char)
+                                0xD800..=0xDBFF => {
+                                    if self.peek() != Some(b'\\')
+                                        || self.b.get(self.i + 1) != Some(&b'u')
+                                    {
+                                        return Err(
+                                            self.err("unpaired surrogate in \\u escape")
+                                        );
+                                    }
+                                    self.i += 2;
+                                    let lo = self.hex4()?;
+                                    if !(0xDC00..=0xDFFF).contains(&lo) {
+                                        return Err(
+                                            self.err("unpaired surrogate in \\u escape")
+                                        );
+                                    }
+                                    0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                                }
+                                0xDC00..=0xDFFF => {
+                                    return Err(self.err("unpaired surrogate in \\u escape"))
+                                }
+                                cp => cp,
+                            };
+                            out.push(
+                                char::from_u32(cp).ok_or_else(|| self.err("bad \\u escape"))?,
+                            );
+                            continue; // cursor already past the escape
                         }
                         _ => return Err(self.err("bad escape")),
                     }
@@ -440,6 +481,34 @@ mod tests {
     fn unicode_strings() {
         let v = Json::parse("\"caf\\u00e9 ✓\"").unwrap();
         assert_eq!(v.as_str(), Some("café ✓"));
+    }
+
+    #[test]
+    fn surrogate_pairs_decode_to_astral_chars() {
+        let v = Json::parse("\"\\ud83d\\ude00\"").unwrap(); // U+1F600
+        assert_eq!(v.as_str(), Some("😀"));
+        let v = Json::parse("\"a\\uD834\\uDD1Eb\"").unwrap(); // U+1D11E
+        assert_eq!(v.as_str(), Some("a𝄞b"));
+        // the writer emits the raw char; a parse of its output round-trips
+        let v2 = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn lone_surrogates_are_a_clean_error_not_a_replacement_char() {
+        for src in [
+            "\"\\ud800\"",       // high, end of string
+            "\"\\ud800x\"",      // high, ordinary char follows
+            "\"\\ud800\\n\"",    // high, non-\u escape follows
+            "\"\\udc00\"",       // lone low
+            "\"\\ud800\\ud800\"", // high followed by high
+        ] {
+            let e = Json::parse(src).unwrap_err();
+            assert!(e.msg.contains("surrogate"), "{src}: {}", e.msg);
+        }
+        assert!(Json::parse("\"\\u12g4\"").is_err(), "non-hex digit");
+        assert!(Json::parse("\"\\u+123\"").is_err(), "sign is not a hex digit");
+        assert!(Json::parse("\"\\u12\"").is_err(), "truncated escape");
     }
 
     #[test]

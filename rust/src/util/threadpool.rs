@@ -261,6 +261,224 @@ impl<T> Channel<T> {
 }
 
 // ---------------------------------------------------------------------------
+// class-prioritized bounded MPMC channel
+// ---------------------------------------------------------------------------
+
+struct PrioInner<T> {
+    q: Mutex<PrioState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    /// capacity per class (head-of-line isolation between classes: a
+    /// saturated bulk class cannot crowd high traffic out of admission)
+    cap_per_class: usize,
+    /// per-class mirrors of the queue depths, readable without the lock
+    /// (admission overload checks and STATS poll these)
+    depths: Vec<AtomicUsize>,
+    /// mirror of the total depth
+    depth: AtomicUsize,
+    closed: AtomicBool,
+}
+
+struct PrioState<T> {
+    bufs: Vec<VecDeque<T>>,
+    closed: bool,
+}
+
+impl<T> PrioState<T> {
+    fn total(&self) -> usize {
+        self.bufs.iter().map(VecDeque::len).sum()
+    }
+}
+
+/// Bounded MPMC channel with a fixed number of priority classes.
+///
+/// One mutex + condvar pair spans every class, so a receiver parked on
+/// an empty channel wakes on an arrival in *any* class — the property a
+/// vector of independent [`Channel`]s cannot give a single parked
+/// batcher. Receivers drain class 0 (highest) fully before touching
+/// class 1, and so on: strict priority, by design. Each class has its
+/// own capacity, so shedding pressure in a low class never consumes a
+/// higher class's admission slots.
+pub struct PrioChannel<T> {
+    inner: Arc<PrioInner<T>>,
+}
+
+impl<T> Clone for PrioChannel<T> {
+    fn clone(&self) -> Self {
+        PrioChannel { inner: self.inner.clone() }
+    }
+}
+
+impl<T> PrioChannel<T> {
+    pub fn bounded(classes: usize, cap_per_class: usize) -> Self {
+        assert!(classes > 0 && cap_per_class > 0);
+        PrioChannel {
+            inner: Arc::new(PrioInner {
+                q: Mutex::new(PrioState {
+                    bufs: (0..classes).map(|_| VecDeque::new()).collect(),
+                    closed: false,
+                }),
+                not_empty: Condvar::new(),
+                not_full: Condvar::new(),
+                cap_per_class,
+                depths: (0..classes).map(|_| AtomicUsize::new(0)).collect(),
+                depth: AtomicUsize::new(0),
+                closed: AtomicBool::new(false),
+            }),
+        }
+    }
+
+    pub fn classes(&self) -> usize {
+        self.inner.depths.len()
+    }
+
+    fn mirror(&self, st: &PrioState<T>, class: usize) {
+        self.inner.depths[class].store(st.bufs[class].len(), Ordering::Relaxed);
+        self.inner.depth.store(st.total(), Ordering::Relaxed);
+    }
+
+    /// Blocking send into `class` (0 = highest); blocks while that
+    /// class is at capacity, errs when closed.
+    pub fn send(&self, item: T, class: usize) -> Result<(), SendError> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(SendError::Closed);
+            }
+            if st.bufs[class].len() < self.inner.cap_per_class {
+                st.bufs[class].push_back(item);
+                self.mirror(&st, class);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking send into `class`; distinguishes the class being
+    /// full from the channel being closed and hands the item back.
+    pub fn try_send(&self, item: T, class: usize) -> Result<(), TrySendError<T>> {
+        let mut st = self.inner.q.lock().unwrap();
+        if st.closed {
+            return Err(TrySendError::Closed(item));
+        }
+        if st.bufs[class].len() >= self.inner.cap_per_class {
+            return Err(TrySendError::Full(item));
+        }
+        st.bufs[class].push_back(item);
+        self.mirror(&st, class);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Drain up to `max` items into `out`, highest class first, with a
+    /// single lock acquisition per wakeup (see [`Channel::recv_up_to`]).
+    /// Returns 0 only on closed+drained or an elapsed `deadline`.
+    pub fn recv_up_to(
+        &self,
+        out: &mut Vec<T>,
+        max: usize,
+        deadline: Option<std::time::Instant>,
+    ) -> usize {
+        if max == 0 {
+            return 0;
+        }
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            let n = self.drain_locked(&mut st, out, max);
+            if n > 0 {
+                if n > 1 {
+                    self.inner.not_full.notify_all();
+                } else {
+                    self.inner.not_full.notify_one();
+                }
+                return n;
+            }
+            if st.closed {
+                return 0;
+            }
+            match deadline {
+                None => st = self.inner.not_empty.wait(st).unwrap(),
+                Some(dl) => {
+                    let now = std::time::Instant::now();
+                    if now >= dl {
+                        return 0;
+                    }
+                    st = self.inner.not_empty.wait_timeout(st, dl - now).unwrap().0;
+                }
+            }
+        }
+    }
+
+    /// Non-blocking multi-item drain, highest class first.
+    pub fn try_recv_up_to(&self, out: &mut Vec<T>, max: usize) -> usize {
+        if max == 0 {
+            return 0;
+        }
+        let mut st = self.inner.q.lock().unwrap();
+        let n = self.drain_locked(&mut st, out, max);
+        if n > 1 {
+            self.inner.not_full.notify_all();
+        } else if n == 1 {
+            self.inner.not_full.notify_one();
+        }
+        n
+    }
+
+    fn drain_locked(&self, st: &mut PrioState<T>, out: &mut Vec<T>, max: usize) -> usize {
+        let mut taken = 0;
+        for class in 0..st.bufs.len() {
+            if taken >= max {
+                break;
+            }
+            let n = (max - taken).min(st.bufs[class].len());
+            if n > 0 {
+                out.extend(st.bufs[class].drain(..n));
+                self.mirror(st, class);
+                taken += n;
+            }
+        }
+        taken
+    }
+
+    /// Total queued depth across classes (lock-free mirror).
+    pub fn len(&self) -> usize {
+        self.inner.depth.load(Ordering::Relaxed)
+    }
+
+    /// Queued depth of exactly `class` (lock-free mirror).
+    pub fn depth_class(&self, class: usize) -> usize {
+        self.inner.depths[class].load(Ordering::Relaxed)
+    }
+
+    /// Queued depth of `class` and every higher class — the work that
+    /// drains before a new arrival of `class` (lock-free mirrors).
+    pub fn depth_at_or_above(&self, class: usize) -> usize {
+        self.inner.depths[..=class]
+            .iter()
+            .map(|d| d.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.closed.load(Ordering::Acquire)
+    }
+
+    /// Close: senders fail, receivers drain then get 0.
+    pub fn close(&self) {
+        let mut st = self.inner.q.lock().unwrap();
+        st.closed = true;
+        self.inner.closed.store(true, Ordering::Release);
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
 // one-shot completion cell (request -> response handoff)
 // ---------------------------------------------------------------------------
 
@@ -601,6 +819,110 @@ mod tests {
         let mut out = Vec::new();
         c.try_recv_up_to(&mut out, 8);
         assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn prio_channel_drains_highest_class_first_fifo_within_class() {
+        let c: PrioChannel<u32> = PrioChannel::bounded(3, 8);
+        c.send(20, 2).unwrap();
+        c.send(10, 1).unwrap();
+        c.send(0, 0).unwrap();
+        c.send(21, 2).unwrap();
+        c.send(1, 0).unwrap();
+        let mut out = Vec::new();
+        assert_eq!(c.recv_up_to(&mut out, 16, None), 5);
+        assert_eq!(out, vec![0, 1, 10, 20, 21]);
+    }
+
+    #[test]
+    fn prio_channel_caps_are_per_class() {
+        let c: PrioChannel<u32> = PrioChannel::bounded(2, 1);
+        c.send(1, 1).unwrap();
+        assert!(matches!(c.try_send(2, 1), Err(TrySendError::Full(2))));
+        // a full low class never consumes the high class's slots
+        c.try_send(3, 0).unwrap();
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.depth_at_or_above(0), 1);
+        assert_eq!(c.depth_at_or_above(1), 2);
+        let mut out = Vec::new();
+        assert_eq!(c.try_recv_up_to(&mut out, 1), 1);
+        assert_eq!(out, vec![3], "high drains before the earlier-queued low item");
+    }
+
+    #[test]
+    fn prio_channel_parked_receiver_wakes_on_any_class() {
+        let c: PrioChannel<u32> = PrioChannel::bounded(3, 4);
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || {
+            let mut out = Vec::new();
+            c2.recv_up_to(&mut out, 4, None);
+            out
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        c.send(7, 2).unwrap(); // lowest class still wakes the receiver
+        assert_eq!(h.join().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn prio_channel_close_drains_then_zero() {
+        let c: PrioChannel<u32> = PrioChannel::bounded(2, 4);
+        c.send(1, 1).unwrap();
+        c.close();
+        assert_eq!(c.send(2, 0), Err(SendError::Closed));
+        let mut out = Vec::new();
+        assert_eq!(c.recv_up_to(&mut out, 4, None), 1);
+        assert_eq!(c.recv_up_to(&mut out, 4, None), 0);
+        assert!(c.is_closed());
+    }
+
+    #[test]
+    fn prio_channel_deadline_expires() {
+        let c: PrioChannel<u32> = PrioChannel::bounded(2, 4);
+        let mut out = Vec::new();
+        let t0 = std::time::Instant::now();
+        let dl = t0 + Duration::from_millis(30);
+        assert_eq!(c.recv_up_to(&mut out, 4, Some(dl)), 0);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    /// Property: a concurrent producer spraying items across classes +
+    /// wave receivers lose nothing and duplicate nothing.
+    #[test]
+    fn prop_prio_channel_exactly_once() {
+        crate::util::proptest::check("prio exactly-once", 25, |g| {
+            let n_items = g.sized(300);
+            let classes = 3;
+            let c: PrioChannel<usize> = PrioChannel::bounded(classes, 16);
+            let producer = {
+                let c = c.clone();
+                let seed = g.rng.below(1 << 30) as u64;
+                std::thread::spawn(move || {
+                    let mut r = crate::util::rng::Rng::new(seed);
+                    for i in 0..n_items {
+                        c.send(i, r.below(classes)).unwrap();
+                    }
+                    c.close();
+                })
+            };
+            let mut got: Vec<usize> = Vec::with_capacity(n_items);
+            loop {
+                let wave = g.rng.range(1, 9);
+                if c.recv_up_to(&mut got, wave, None) == 0 {
+                    break;
+                }
+            }
+            producer.join().unwrap();
+            if got.len() != n_items {
+                return Err(format!("lost/duplicated: got {} of {n_items}", got.len()));
+            }
+            let mut sorted = got.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != n_items {
+                return Err("duplicate delivery".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]

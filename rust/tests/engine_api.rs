@@ -504,6 +504,7 @@ fn server_stop_terminates_idle_connections() {
             addr: "127.0.0.1:0".into(),
             max_connections: 2,
             read_timeout: Duration::from_millis(100),
+            ..Default::default()
         },
     )
     .unwrap();
