@@ -370,6 +370,14 @@ pub trait Submit: Send + Sync {
         Vec::new()
     }
 
+    /// One human-readable line per serving backend (model name, mux
+    /// width, and — for the native backend — the selected GEMM kernel
+    /// and weight precision). Surfaced in `serve` startup output and
+    /// the v2 STATS payload. Default: no backend detail.
+    fn backend_info(&self) -> Vec<String> {
+        Vec::new()
+    }
+
     /// Convenience: submit one framed row for whatever task the model
     /// serves. The common path for drivers and benches.
     fn submit_framed(&self, ids: Vec<i32>) -> Result<RequestHandle, SubmitError> {

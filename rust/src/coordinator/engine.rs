@@ -27,6 +27,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::runtime::native::Precision;
 use crate::runtime::{ArtifactMeta, InferenceBackend, LoadedModel, NativeBackend};
 
 use super::api::Submit;
@@ -44,6 +45,8 @@ pub struct EngineBuilder {
     write_buf_cap: usize,
     /// model execute-time estimate driving adaptive-N routing (us)
     exec_time_us: f64,
+    /// weight precision for native backends built via `build_native`
+    precision: Precision,
 }
 
 impl Default for EngineBuilder {
@@ -57,6 +60,7 @@ impl Default for EngineBuilder {
             max_line: server.max_line,
             write_buf_cap: server.write_buf_cap,
             exec_time_us: 20_000.0,
+            precision: Precision::F32,
         }
     }
 }
@@ -139,6 +143,15 @@ impl EngineBuilder {
         self
     }
 
+    /// Weight precision for native backends built through
+    /// [`build_native`](Self::build_native): `F32` (default) or `Int8`
+    /// (per-output-channel symmetric weights, dynamic per-row activation
+    /// quantization).
+    pub fn precision(mut self, p: Precision) -> Self {
+        self.precision = p;
+        self
+    }
+
     pub fn coordinator_config(&self) -> &CoordinatorConfig {
         &self.coordinator
     }
@@ -168,7 +181,7 @@ impl EngineBuilder {
     /// ([`NativeBackend`]): real T-MUX math executed straight from the
     /// artifact's weights blob — no PJRT anywhere in the process.
     pub fn build_native(&self, meta: &ArtifactMeta) -> Result<MuxCoordinator> {
-        self.build_backend(Arc::new(NativeBackend::from_artifact(meta)?))
+        self.build_backend(Arc::new(NativeBackend::from_artifact_prec(meta, self.precision)?))
     }
 
     /// Adaptive-N router: one work-stealing lane per model (paper's

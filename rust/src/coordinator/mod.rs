@@ -267,6 +267,9 @@ pub struct MuxCoordinator {
     pub seq_len: usize,
     buckets: Buckets,
     task: TaskKind,
+    /// captured at start: the backend's one-line self-description
+    /// (surfaced by [`Submit::backend_info`])
+    backend_desc: String,
     next_id: AtomicU64,
     drain: DrainMeter,
     batcher: Option<std::thread::JoinHandle<u64>>,
@@ -285,6 +288,7 @@ impl MuxCoordinator {
         cfg: CoordinatorConfig,
     ) -> Result<Self> {
         let meta = backend.meta().clone();
+        let backend_desc = backend.describe();
         let task = TaskKind::from_model_task(&meta.task)
             .ok_or_else(|| anyhow::anyhow!("unsupported serving task '{}'", meta.task))?;
         let tokenizer =
@@ -369,6 +373,7 @@ impl MuxCoordinator {
             seq_len,
             buckets,
             task,
+            backend_desc,
             next_id: AtomicU64::new(1),
             drain: DrainMeter::new(),
             batcher: Some(batcher),
@@ -569,6 +574,10 @@ impl Submit for MuxCoordinator {
         }
         classes
     }
+
+    fn backend_info(&self) -> Vec<String> {
+        vec![self.backend_desc.clone()]
+    }
 }
 
 impl Drop for MuxCoordinator {
@@ -608,6 +617,9 @@ pub struct MuxRouter {
     seq_len: usize,
     buckets: Buckets,
     task: TaskKind,
+    /// one description per lane backend, captured at start and ascending
+    /// by n_mux (surfaced by [`Submit::backend_info`])
+    backend_descs: Vec<String>,
     next_id: AtomicU64,
     drain: DrainMeter,
 }
@@ -656,6 +668,7 @@ impl MuxRouter {
             cfg.queue_cap,
             buckets.count(),
         ));
+        let backend_descs: Vec<String> = backends.iter().map(|b| b.describe()).collect();
         let lanes = backends
             .into_iter()
             .map(|b| Lane::start(b, &cfg, &state, &tokenizer, &buckets))
@@ -668,6 +681,7 @@ impl MuxRouter {
             seq_len: m0.seq_len,
             buckets,
             task,
+            backend_descs,
             next_id: AtomicU64::new(1),
             drain: DrainMeter::new(),
         })
@@ -874,5 +888,9 @@ impl Submit for MuxRouter {
             c.depth = self.state.queue.depth_class(c.priority.index());
         }
         classes
+    }
+
+    fn backend_info(&self) -> Vec<String> {
+        self.backend_descs.clone()
     }
 }

@@ -713,6 +713,12 @@ fn stats_json(engine: &dyn Submit) -> Json {
                 ("buckets", Json::Arr(buckets)),
                 ("classes", Json::Arr(classes)),
                 ("lanes", Json::Arr(lanes)),
+                // one line per serving backend: model, kernel arm,
+                // weight precision (native backends)
+                (
+                    "backends",
+                    Json::Arr(engine.backend_info().iter().map(|d| s(d)).collect()),
+                ),
             ]),
         ),
     ])

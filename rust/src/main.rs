@@ -10,6 +10,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 use datamux::coordinator::{EngineBuilder, SlotPolicy, Submit};
+use datamux::runtime::native::Precision;
 use datamux::runtime::{
     default_artifacts_dir, ArtifactManifest, ArtifactMeta, InferenceBackend, ModelRuntime,
     NativeBackend,
@@ -22,6 +23,7 @@ fn main() -> Result<()> {
         .describe("artifacts", "<auto>", "artifacts directory")
         .describe("artifact", "", "artifact name (default: first trained, else first)")
         .describe("backend", "pjrt", "pjrt | native (pure-rust forward, no PJRT)")
+        .describe("precision", "f32", "f32 | int8 weight precision (native backend only)")
         .describe("addr", "127.0.0.1:7071", "TCP bind address for serve")
         .describe("max-connections", "64", "concurrent client connections served")
         .describe("max-wait-ms", "5", "batcher deadline")
@@ -39,6 +41,14 @@ fn main() -> Result<()> {
     let backend = args
         .choice("backend", "pjrt", &["pjrt", "native"])
         .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let precision = match args
+        .choice("precision", "f32", &["f32", "int8"])
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .as_str()
+    {
+        "int8" => Precision::Int8,
+        _ => Precision::F32,
+    };
     let dir = match args.str("artifacts", "") {
         s if s.is_empty() => default_artifacts_dir(),
         s => s.into(),
@@ -93,7 +103,8 @@ fn main() -> Result<()> {
                     SlotPolicy::Fill
                 })
                 .addr(args.str("addr", "127.0.0.1:7071"))
-                .max_connections(args.usize("max-connections", 64));
+                .max_connections(args.usize("max-connections", 64))
+                .precision(precision);
 
             // all branches produce the same trait object: the server is
             // generic over whichever engine shape (and backend) is behind it
@@ -128,7 +139,7 @@ fn main() -> Result<()> {
                 if backend == "native" {
                     let mut lanes: Vec<Arc<dyn InferenceBackend>> = Vec::new();
                     for meta in &metas {
-                        lanes.push(Arc::new(NativeBackend::from_artifact(meta)?));
+                        lanes.push(Arc::new(NativeBackend::from_artifact_prec(meta, precision)?));
                     }
                     Arc::new(builder.build_router_backends(lanes)?)
                 } else {
@@ -172,6 +183,10 @@ fn main() -> Result<()> {
                 server.local_addr,
                 engine.buckets()
             );
+            // native backends report their kernel arm + weight precision
+            for line in engine.backend_info() {
+                println!("backend: {line}");
+            }
             // watch lane health: a dead lane stops pulling from the
             // shared queue and is reported once, loudly; the process
             // keeps serving on whatever lanes survive

@@ -37,6 +37,14 @@ pub trait InferenceBackend: Send + Sync {
     /// returning flattened f32 logits of length `meta().output_len()`.
     fn run_ids(&self, ids: &[i32]) -> anyhow::Result<Vec<f32>>;
 
+    /// One-line human description of this backend for startup output and
+    /// stats endpoints. Backends with interesting execution detail (the
+    /// native backend reports its GEMM kernel and weight precision)
+    /// override this; the default just names the model.
+    fn describe(&self) -> String {
+        format!("{} (N={})", self.meta().name, self.meta().n_mux)
+    }
+
     /// Can this backend execute a wave whose content rows are `seq_len`
     /// tokens long? Compiled backends (PJRT) bake one shape, so the
     /// default accepts only `meta().seq_len`; the native and fake

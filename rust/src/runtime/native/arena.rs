@@ -45,6 +45,11 @@ pub(crate) struct Workspace {
     pub z: Vec<f32>,
     /// demultiplexed hidden states, `(batch * n_mux * demux_len, d_model)`
     pub dem: Vec<f32>,
+    /// int8 path: biased-u8 activation codes, sized for the largest
+    /// quantized GEMM input (residual stream, FFN hidden, or demux z)
+    pub aq: Vec<u8>,
+    /// int8 path: per-row activation scales, one per row of `aq`
+    pub ascale: Vec<f32>,
 }
 
 impl Workspace {
@@ -65,6 +70,8 @@ impl Workspace {
             hproj: vec![0.0; d.batch * lp * d.d_demux],
             z: vec![0.0; d.batch * d.n_mux * lp * d.d_demux],
             dem: vec![0.0; d.batch * d.n_mux * lp * d.d_model],
+            aq: vec![0; stream.max(d.rows() * d.d_ff).max(d.batch * d.n_mux * lp * d.d_demux)],
+            ascale: vec![0.0; d.rows().max(d.batch * d.n_mux * lp)],
         }
     }
 }

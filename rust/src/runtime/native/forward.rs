@@ -27,17 +27,61 @@
 use anyhow::{bail, Result};
 
 use super::arena::Workspace;
-use super::gemm::{gemm_bt_pooled, parallel_for, SendMut};
-use super::pack::PackedWeights;
-use super::Dims;
+use super::gemm::{gemm_bt_pooled, gemm_bt_q8_pooled, parallel_for, SendMut};
+use super::pack::{Mat, PackedWeights};
+use super::{quant, Dims};
 use crate::util::threadpool::ThreadPool;
 
 /// sqrt(2/pi) — the tanh-approximate GELU constant jax.nn.gelu uses.
-const GELU_C: f32 = 0.797_884_6;
+pub(crate) const GELU_C: f32 = 0.797_884_6;
 
 #[inline]
 pub(crate) fn gelu(x: f32) -> f32 {
     0.5 * x * (1.0 + (GELU_C * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+/// GELU over a whole buffer, vectorized when the AVX2 kernel is active.
+pub(crate) fn gelu_buf(xs: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if super::simd::active_kernel() == super::simd::Kernel::Avx2Fma {
+        // SAFETY: feature presence was verified by `active_kernel`.
+        unsafe { super::simd::gelu_avx2(xs) };
+        return;
+    }
+    for v in xs.iter_mut() {
+        *v = gelu(*v);
+    }
+}
+
+/// One projection at the weight's precision: f32 mats run the f32 GEMM
+/// on `a`; int8 mats run the quantized GEMM on the codes `aq`/`ascale`
+/// that [`quant_rows_if`] prepared from the same `a`. `aq`/`ascale` may
+/// be oversized tails of the shared workspace scratch.
+#[allow(clippy::too_many_arguments)]
+fn run_mat(
+    pool: Option<&ThreadPool>,
+    w: &Mat,
+    a: &[f32],
+    aq: &[u8],
+    ascale: &[f32],
+    bias: Option<&[f32]>,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    match w {
+        Mat::F32(wt) => gemm_bt_pooled(pool, &a[..m * k], wt, bias, c, m, k, n),
+        Mat::Q8(qm) => gemm_bt_q8_pooled(pool, &aq[..m * k], &ascale[..m], qm, bias, c, m, k, n),
+    }
+}
+
+/// Quantize `m` rows of `a` into the workspace scratch iff the matrix
+/// they will multiply is int8 (no-op on the f32 path).
+fn quant_rows_if(w: &Mat, a: &[f32], m: usize, k: usize, aq: &mut [u8], ascale: &mut [f32]) {
+    if matches!(w, Mat::Q8(_)) {
+        quant::quantize_rows(&a[..m * k], m, k, aq, ascale);
+    }
 }
 
 /// Row-wise layer norm (eps 1e-5, matching `model.py::_layer_norm`).
@@ -117,9 +161,11 @@ pub(crate) fn forward(
     let scale = 1.0 / (dh as f32).sqrt();
     for lp in &w.layers {
         layer_norm(&ws.x, &lp.ln1_g, &lp.ln1_b, &mut ws.ln, d);
-        gemm_bt_pooled(pool, &ws.ln, &lp.wq_t, Some(&lp.bq), &mut ws.q, rows, d, d);
-        gemm_bt_pooled(pool, &ws.ln, &lp.wk_t, Some(&lp.bk), &mut ws.k, rows, d, d);
-        gemm_bt_pooled(pool, &ws.ln, &lp.wv_t, Some(&lp.bv), &mut ws.v, rows, d, d);
+        // Q, K, V share one quantization of the normed stream
+        quant_rows_if(&lp.wq_t, &ws.ln, rows, d, &mut ws.aq, &mut ws.ascale);
+        run_mat(pool, &lp.wq_t, &ws.ln, &ws.aq, &ws.ascale, Some(&lp.bq), &mut ws.q, rows, d, d);
+        run_mat(pool, &lp.wk_t, &ws.ln, &ws.aq, &ws.ascale, Some(&lp.bk), &mut ws.k, rows, d, d);
+        run_mat(pool, &lp.wv_t, &ws.ln, &ws.aq, &ws.ascale, Some(&lp.bv), &mut ws.v, rows, d, d);
         {
             // attention fans out over (batch, head): each pair owns its
             // scores block and a disjoint column stripe of ctx
@@ -165,16 +211,39 @@ pub(crate) fn forward(
                 }
             }
         }
-        gemm_bt_pooled(pool, &ws.ctx, &lp.wo_t, Some(&lp.bo), &mut ws.proj, rows, d, d);
+        quant_rows_if(&lp.wo_t, &ws.ctx, rows, d, &mut ws.aq, &mut ws.ascale);
+        run_mat(pool, &lp.wo_t, &ws.ctx, &ws.aq, &ws.ascale, Some(&lp.bo), &mut ws.proj, rows, d, d);
         for (x, p) in ws.x.iter_mut().zip(&ws.proj) {
             *x += p;
         }
         layer_norm(&ws.x, &lp.ln2_g, &lp.ln2_b, &mut ws.ln, d);
-        gemm_bt_pooled(pool, &ws.ln, &lp.ff1_t, Some(&lp.fb1), &mut ws.ffh, rows, d, dims.d_ff);
-        for h in ws.ffh.iter_mut() {
-            *h = gelu(*h);
-        }
-        gemm_bt_pooled(pool, &ws.ffh, &lp.ff2_t, Some(&lp.fb2), &mut ws.proj, rows, dims.d_ff, d);
+        quant_rows_if(&lp.ff1_t, &ws.ln, rows, d, &mut ws.aq, &mut ws.ascale);
+        run_mat(
+            pool,
+            &lp.ff1_t,
+            &ws.ln,
+            &ws.aq,
+            &ws.ascale,
+            Some(&lp.fb1),
+            &mut ws.ffh,
+            rows,
+            d,
+            dims.d_ff,
+        );
+        gelu_buf(&mut ws.ffh);
+        quant_rows_if(&lp.ff2_t, &ws.ffh, rows, dims.d_ff, &mut ws.aq, &mut ws.ascale);
+        run_mat(
+            pool,
+            &lp.ff2_t,
+            &ws.ffh,
+            &ws.aq,
+            &ws.ascale,
+            Some(&lp.fb2),
+            &mut ws.proj,
+            rows,
+            dims.d_ff,
+            d,
+        );
         for (x, p) in ws.x.iter_mut().zip(&ws.proj) {
             *x += p;
         }
@@ -186,15 +255,29 @@ pub(crate) fn forward(
     let fd = dims.d_demux;
     let lp_out = dims.demux_len();
     let prefix = dims.prefix_len;
+    // one quantization of the full final-LN stream serves both the
+    // prefix (w1p) and content (w1h) projections via row offsets
+    quant_rows_if(&w.w1h_t, &ws.ln, rows, d, &mut ws.aq, &mut ws.ascale);
     for bb in 0..b {
         // prefix hidden rows are the first n positions of each batch row,
         // content rows follow — both contiguous, no gather copies
         let src = &ws.ln[bb * li * d..][..n * d];
         let dst = &mut ws.pproj[bb * n * fd..][..n * fd];
-        gemm_bt_pooled(pool, src, &w.w1p_t, None, dst, n, d, fd);
+        run_mat(pool, &w.w1p_t, src, &ws.aq[bb * li * d..], &ws.ascale[bb * li..], None, dst, n, d, fd);
         let src = &ws.ln[(bb * li + prefix) * d..][..lp_out * d];
         let dst = &mut ws.hproj[bb * lp_out * fd..][..lp_out * fd];
-        gemm_bt_pooled(pool, src, &w.w1h_t, None, dst, lp_out, d, fd);
+        run_mat(
+            pool,
+            &w.w1h_t,
+            src,
+            &ws.aq[(bb * li + prefix) * d..],
+            &ws.ascale[bb * li + prefix..],
+            None,
+            dst,
+            lp_out,
+            d,
+            fd,
+        );
     }
     for bb in 0..b {
         for slot in 0..n {
@@ -203,13 +286,15 @@ pub(crate) fn forward(
                 let hp = &ws.hproj[(bb * lp_out + l) * fd..][..fd];
                 let z = &mut ws.z[((bb * n + slot) * lp_out + l) * fd..][..fd];
                 for t in 0..fd {
-                    z[t] = gelu(hp[t] + pp[t] + w.db1[t]);
+                    z[t] = hp[t] + pp[t] + w.db1[t];
                 }
             }
         }
     }
+    gelu_buf(&mut ws.z);
     let zrows = b * n * lp_out;
-    gemm_bt_pooled(pool, &ws.z, &w.w2_t, Some(&w.db2), &mut ws.dem, zrows, fd, d);
+    quant_rows_if(&w.w2_t, &ws.z, zrows, fd, &mut ws.aq, &mut ws.ascale);
+    run_mat(pool, &w.w2_t, &ws.z, &ws.aq, &ws.ascale, Some(&w.db2), &mut ws.dem, zrows, fd, d);
     let mut out = vec![0.0f32; zrows * dims.n_classes];
     gemm_bt_pooled(pool, &ws.dem, &w.head_t, Some(&w.head_b), &mut out, zrows, d, dims.n_classes);
     Ok(out)

@@ -20,6 +20,8 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
+use super::quant::QuantMat;
+use super::simd;
 use crate::util::threadpool::ThreadPool;
 
 /// Output-column tile width: one tile of `bt` (`NC * k * 4` bytes) is
@@ -35,6 +37,10 @@ const PAR_MIN_MACS: usize = 1 << 16;
 
 /// `c = a @ bt^T (+ bias)`: `a` is `(m, k)`, `bt` is the pre-transposed
 /// weight `(n, k)`, `c` is `(m, n)`, all row-major. Allocation-free.
+///
+/// Dispatches once per process: the AVX2+FMA microkernel in `simd.rs`
+/// when the host supports it (and `DATAMUX_FORCE_SCALAR` is unset), the
+/// blocked-scalar kernel below otherwise.
 pub fn gemm_bt(
     a: &[f32],
     bt: &[f32],
@@ -50,6 +56,27 @@ pub fn gemm_bt(
     if let Some(b) = bias {
         assert_eq!(b.len(), n, "gemm: bias is not (n,)");
     }
+    #[cfg(target_arch = "x86_64")]
+    if simd::active_kernel() == simd::Kernel::Avx2Fma {
+        // SAFETY: feature presence was verified by `active_kernel`;
+        // lengths were asserted above.
+        unsafe { simd::gemm_bt_f32_avx2(a, bt, bias, c, m, k, n) };
+        return;
+    }
+    gemm_bt_scalar(a, bt, bias, c, m, k, n);
+}
+
+/// The portable blocked-scalar arm (pre-SIMD kernel, kept as the
+/// fallback and the reference the vectorized arm is tested against).
+pub(crate) fn gemm_bt_scalar(
+    a: &[f32],
+    bt: &[f32],
+    bias: Option<&[f32]>,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
     let mut jb = 0;
     while jb < n {
         let je = (jb + NC).min(n);
@@ -89,14 +116,22 @@ pub fn gemm_bt(
                 }
                 j += NR;
             }
+            // bias is resolved once for the whole tail, like the NR-wide
+            // body above — not re-matched per element
+            let tail = j;
             while j < je {
                 let br = &bt[j * k..(j + 1) * k];
                 let mut s = 0.0f32;
                 for kk in 0..k {
                     s += ar[kk] * br[kk];
                 }
-                cr[j] = s + bias.map_or(0.0, |b| b[j]);
+                cr[j] = s;
                 j += 1;
+            }
+            if let Some(b) = bias {
+                for j in tail..je {
+                    cr[j] += b[j];
+                }
             }
         }
         jb = je;
@@ -132,17 +167,78 @@ pub fn gemm_bt_pooled(
         _ => return gemm_bt(a, bt, bias, c, m, k, n),
     };
     let bands = pool.n_workers().min(m).max(1);
-    let rows_per = m.div_ceil(bands);
+    // balanced split: the first `m % bands` bands get one extra row, so
+    // band sizes differ by at most 1 and no trailing band is ever empty
+    // (ceil(m/bands) strands whole bands when m % bands != 0).
+    let base = m / bands;
+    let extra = m % bands;
     let cptr = SendMut(c.as_mut_ptr());
     parallel_for(pool, bands, |band| {
-        let r0 = band * rows_per;
-        if r0 >= m {
-            return;
-        }
-        let r1 = (r0 + rows_per).min(m);
+        let r0 = band * base + band.min(extra);
+        let r1 = r0 + base + usize::from(band < extra);
         // each band owns rows r0..r1 of `c` — disjoint across bands
         let cband = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(r0 * n), (r1 - r0) * n) };
         gemm_bt(&a[r0 * k..r1 * k], bt, bias, cband, r1 - r0, k, n);
+    });
+}
+
+/// Int8 sibling of [`gemm_bt`]: biased-u8 activations `aq` (m, k) with
+/// per-row scales against a [`QuantMat`] (n output channels over k).
+/// Both arms accumulate in exact i32 and share one f32 epilogue, so
+/// dispatch never changes the result bitwise.
+pub(crate) fn gemm_bt_q8(
+    aq: &[u8],
+    ascale: &[f32],
+    w: &QuantMat,
+    bias: Option<&[f32]>,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(aq.len(), m * k, "q8 gemm: aq is not (m, k)");
+    assert_eq!(ascale.len(), m, "q8 gemm: ascale is not (m,)");
+    assert_eq!(w.q.len(), n * k, "q8 gemm: weights are not (n, k)");
+    assert_eq!(c.len(), m * n, "q8 gemm: c is not (m, n)");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), n, "q8 gemm: bias is not (n,)");
+    }
+    #[cfg(target_arch = "x86_64")]
+    if simd::active_kernel() == simd::Kernel::Avx2Fma {
+        // SAFETY: feature presence verified by `active_kernel`; lengths
+        // asserted above.
+        unsafe { simd::gemm_bt_q8_avx2(aq, ascale, w, bias, c, m, k, n) };
+        return;
+    }
+    super::quant::gemm_bt_q8_scalar(aq, ascale, w, bias, c, m, k, n);
+}
+
+/// [`gemm_bt_q8`] with the same balanced row banding as
+/// [`gemm_bt_pooled`]; bitwise identical to the serial call.
+pub(crate) fn gemm_bt_q8_pooled(
+    pool: Option<&ThreadPool>,
+    aq: &[u8],
+    ascale: &[f32],
+    w: &QuantMat,
+    bias: Option<&[f32]>,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let pool = match pool {
+        Some(p) if m >= 2 && m.saturating_mul(k).saturating_mul(n) >= PAR_MIN_MACS => p,
+        _ => return gemm_bt_q8(aq, ascale, w, bias, c, m, k, n),
+    };
+    let bands = pool.n_workers().min(m).max(1);
+    let base = m / bands;
+    let extra = m % bands;
+    let cptr = SendMut(c.as_mut_ptr());
+    parallel_for(pool, bands, |band| {
+        let r0 = band * base + band.min(extra);
+        let r1 = r0 + base + usize::from(band < extra);
+        let cband = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(r0 * n), (r1 - r0) * n) };
+        gemm_bt_q8(&aq[r0 * k..r1 * k], &ascale[r0..r1], w, bias, cband, r1 - r0, k, n);
     });
 }
 
@@ -272,6 +368,137 @@ mod tests {
                 assert!((no_bias[i] - want_nb[i]).abs() <= 1e-4 * (1.0 + want_nb[i].abs()));
             }
         }
+    }
+
+    /// Satellite: odd kernel shapes — `k` not a multiple of the SIMD
+    /// width, `n < NR`, `m == 1` — must agree across the dispatch path,
+    /// the scalar arm, and (where the host supports it) the explicit
+    /// AVX2 arm.
+    #[test]
+    fn prop_gemm_bt_odd_shapes_agree_across_arms() {
+        crate::util::proptest::check("gemm_bt_odd_shapes", 64, |g| {
+            let m = if g.rng.bool(0.5) { 1 } else { g.sized(6) };
+            let k = g.sized(69); // frequently not a multiple of 8 or 32
+            let n = g.sized(11); // frequently < NR
+            let a: Vec<f32> = (0..m * k).map(|_| g.rng.normal() as f32).collect();
+            let bt: Vec<f32> = (0..n * k).map(|_| g.rng.normal() as f32).collect();
+            let bias_vec: Vec<f32> = (0..n).map(|_| g.rng.normal() as f32).collect();
+            let bias = if g.rng.bool(0.5) { Some(bias_vec.as_slice()) } else { None };
+            let mut want = vec![0.0f32; m * n];
+            gemm_bt_scalar(&a, &bt, bias, &mut want, m, k, n);
+            let mut got = vec![0.0f32; m * n];
+            gemm_bt(&a, &bt, bias, &mut got, m, k, n);
+            for i in 0..want.len() {
+                let tol = 1e-4 * (1.0 + want[i].abs());
+                if (got[i] - want[i]).abs() > tol {
+                    return Err(format!(
+                        "dispatch vs scalar ({m},{k},{n})[{i}]: {} vs {}",
+                        got[i], want[i]
+                    ));
+                }
+            }
+            #[cfg(target_arch = "x86_64")]
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                let mut vec_arm = vec![0.0f32; m * n];
+                unsafe { simd::gemm_bt_f32_avx2(&a, &bt, bias, &mut vec_arm, m, k, n) };
+                for i in 0..want.len() {
+                    let tol = 1e-4 * (1.0 + want[i].abs());
+                    if (vec_arm[i] - want[i]).abs() > tol {
+                        return Err(format!(
+                            "avx2 vs scalar ({m},{k},{n})[{i}]: {} vs {}",
+                            vec_arm[i], want[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Int8 arms must be bitwise identical to each other (exact integer
+    /// accumulation + shared epilogue) and track the f32 kernel within
+    /// the analytic quantization-noise bound.
+    #[test]
+    fn prop_q8_gemm_arms_bitwise_identical_and_near_f32() {
+        crate::util::proptest::check("gemm_bt_q8_arms", 48, |g| {
+            let m = g.sized(5);
+            let k = g.sized(80);
+            let n = g.sized(10);
+            let a: Vec<f32> = (0..m * k).map(|_| g.rng.normal() as f32).collect();
+            let bt: Vec<f32> = (0..n * k).map(|_| g.rng.normal() as f32).collect();
+            let w = QuantMat::from_bt(&bt, n, k);
+            let mut aq = vec![0u8; m * k];
+            let mut ascale = vec![0.0f32; m];
+            super::super::quant::quantize_rows(&a, m, k, &mut aq, &mut ascale);
+            let bias_vec: Vec<f32> = (0..n).map(|_| g.rng.normal() as f32).collect();
+            let bias = if g.rng.bool(0.5) { Some(bias_vec.as_slice()) } else { None };
+            let mut scalar = vec![0.0f32; m * n];
+            super::super::quant::gemm_bt_q8_scalar(&aq, &ascale, &w, bias, &mut scalar, m, k, n);
+            let mut dispatched = vec![0.0f32; m * n];
+            gemm_bt_q8(&aq, &ascale, &w, bias, &mut dispatched, m, k, n);
+            for i in 0..scalar.len() {
+                if scalar[i].to_bits() != dispatched[i].to_bits() {
+                    return Err(format!(
+                        "q8 arms diverged at ({m},{k},{n})[{i}]: {} vs {}",
+                        scalar[i], dispatched[i]
+                    ));
+                }
+            }
+            let mut f32_ref = vec![0.0f32; m * n];
+            gemm_bt_scalar(&a, &bt, bias, &mut f32_ref, m, k, n);
+            for i in 0..m {
+                for j in 0..n {
+                    let bound =
+                        0.0125 * k as f32 * (ascale[i] * 127.0) * (w.scales[j] * 63.0) + 1e-5;
+                    let err = (dispatched[i * n + j] - f32_ref[i * n + j]).abs();
+                    if err > bound {
+                        return Err(format!(
+                            "q8 vs f32 ({m},{k},{n})[{i},{j}]: err {err} > bound {bound}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Satellite regression: when `m % bands != 0` the old ceil split
+    /// left trailing bands empty; the balanced split must still be
+    /// bitwise identical and must engage every worker's band.
+    #[test]
+    fn pooled_gemm_balanced_split_handles_uneven_rows() {
+        let mut rng = Rng::new(13);
+        let pool = ThreadPool::new(4, 32);
+        // m = 5 with 4 workers: old split gave bands of 2,2,1,0; the
+        // balanced split gives 2,1,1,1. k*n big enough to parallelize.
+        for &(m, k, n) in &[(5usize, 64usize, 256usize), (7, 64, 256), (9, 64, 256)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let bt: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+            let mut serial = vec![0.0f32; m * n];
+            gemm_bt(&a, &bt, None, &mut serial, m, k, n);
+            let mut pooled = vec![0.0f32; m * n];
+            gemm_bt_pooled(Some(&pool), &a, &bt, None, &mut pooled, m, k, n);
+            assert_eq!(serial, pooled, "uneven banding changed the math at m={m}");
+        }
+    }
+
+    #[test]
+    fn pooled_q8_gemm_is_bitwise_identical_to_serial() {
+        let mut rng = Rng::new(14);
+        let (m, k, n) = (37, 64, 48); // above PAR_MIN_MACS, m % 3 != 0
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let bt: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+        let w = QuantMat::from_bt(&bt, n, k);
+        let mut aq = vec![0u8; m * k];
+        let mut ascale = vec![0.0f32; m];
+        super::super::quant::quantize_rows(&a, m, k, &mut aq, &mut ascale);
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut serial = vec![0.0f32; m * n];
+        gemm_bt_q8(&aq, &ascale, &w, Some(&bias), &mut serial, m, k, n);
+        let pool = ThreadPool::new(3, 32);
+        let mut pooled = vec![0.0f32; m * n];
+        gemm_bt_q8_pooled(Some(&pool), &aq, &ascale, &w, Some(&bias), &mut pooled, m, k, n);
+        assert_eq!(serial, pooled, "q8 row banding must not change the math");
     }
 
     #[test]

@@ -29,7 +29,9 @@ mod arena;
 mod forward;
 mod gemm;
 mod pack;
+mod quant;
 pub mod reference;
+mod simd;
 
 use std::path::PathBuf;
 
@@ -41,6 +43,33 @@ use crate::runtime::InferenceBackend;
 use crate::util::threadpool::ThreadPool;
 
 pub use pack::RawWeights;
+pub use simd::{active_kernel, Kernel};
+
+/// Weight precision the forward executes at. `F32` is the default;
+/// `Int8` runs the projection GEMMs on per-output-channel symmetric int8
+/// weights with dynamic per-row activation quantization (attention score
+/// math, layer norms, and the task head stay f32).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    #[default]
+    F32,
+    Int8,
+}
+
+impl Precision {
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
 
 /// Task the native forward serves (`retrieval` artifacts are rejected).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -175,6 +204,7 @@ pub struct NativeBackend {
     /// owns the blob; the token table is gathered zero-copy out of it
     wf: WeightsFile,
     weights: pack::PackedWeights,
+    precision: Precision,
     pool: Option<ThreadPool>,
     arenas: arena::ArenaPool,
 }
@@ -196,20 +226,44 @@ fn default_threads() -> usize {
 }
 
 impl NativeBackend {
-    /// Load the artifact's weights blob from disk and pack it.
+    /// Load the artifact's weights blob from disk and pack it at f32.
     pub fn from_artifact(meta: &ArtifactMeta) -> Result<Self> {
+        Self::from_artifact_prec(meta, Precision::F32)
+    }
+
+    /// Load the artifact's weights blob from disk and pack it at the
+    /// requested precision (f32 blobs are quantized online for `Int8`;
+    /// `DMUXW2` int8 blobs are dequantized for `F32`).
+    pub fn from_artifact_prec(meta: &ArtifactMeta, precision: Precision) -> Result<Self> {
         let wf = WeightsFile::load(&meta.weights)?;
-        Self::from_weights(meta.clone(), wf)
+        Self::from_weights_prec(meta.clone(), wf, precision)
     }
 
     /// Build from an already-parsed blob (tests hand in synthetic ones).
     pub fn from_weights(meta: ArtifactMeta, wf: WeightsFile) -> Result<Self> {
-        let (dims, weights) = pack::pack(&meta, &wf)?;
+        Self::from_weights_prec(meta, wf, Precision::F32)
+    }
+
+    /// [`from_weights`](Self::from_weights) at an explicit precision.
+    pub fn from_weights_prec(
+        meta: ArtifactMeta,
+        wf: WeightsFile,
+        precision: Precision,
+    ) -> Result<Self> {
+        let (dims, weights) = pack::pack(&meta, &wf, precision)?;
+        // observability: one line per backend build so operators can see
+        // which kernel arm and weight precision actually run
+        eprintln!(
+            "native backend {}: kernel={}, precision={precision}",
+            meta.name,
+            simd::active_kernel()
+        );
         Ok(NativeBackend {
             meta,
             dims,
             wf,
             weights,
+            precision,
             pool: make_pool(default_threads()),
             arenas: arena::ArenaPool::new(),
         })
@@ -247,6 +301,16 @@ impl NativeBackend {
         &self.dims
     }
 
+    /// The weight precision this backend executes at.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// GEMM worker threads actually in use (1 = single-threaded).
+    pub fn n_threads(&self) -> usize {
+        self.pool.as_ref().map_or(1, |p| p.n_workers())
+    }
+
     /// Tensor-arena materializations so far; flat after warmup is the
     /// allocation-free steady-state invariant (bench-gated).
     pub fn arena_reallocs(&self) -> u64 {
@@ -275,6 +339,17 @@ impl InferenceBackend for NativeBackend {
 
     fn run_ids(&self, ids: &[i32]) -> Result<Vec<f32>> {
         self.run_ids_at(ids, self.dims.seq_len)
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "{} (N={}, native, kernel={}, precision={}, threads={})",
+            self.meta.name,
+            self.dims.n_mux,
+            simd::active_kernel(),
+            self.precision,
+            self.n_threads()
+        )
     }
 
     /// Shape-polymorphic: the pure-rust forward takes its shapes at
@@ -405,6 +480,43 @@ mod tests {
         assert_eq!(out.len(), b.dims().at_seq_len(short).output_len());
         assert!(out.iter().all(|x| x.is_finite()));
         assert!(b.run_ids_at(&ids, 7).is_err(), "beyond the baked max");
+    }
+
+    #[test]
+    fn int8_backend_runs_and_reports_its_precision() {
+        let meta = synthetic_meta("cls", 2, 1, 6, 8, 1, 2, 3);
+        let raw = RawWeights::random(&meta, 16, 21);
+        let wf = WeightsFile::parse(raw.to_blob()).unwrap();
+        let b = NativeBackend::from_weights_prec(meta, wf, Precision::Int8).unwrap();
+        assert_eq!(b.precision(), Precision::Int8);
+        assert!(b.describe().contains("precision=int8"), "{}", b.describe());
+        assert!(b.describe().contains("kernel="), "{}", b.describe());
+        let ids: Vec<i32> = (0..b.meta().ids_len() as i32).map(|i| i % 44).collect();
+        let out = b.run_ids(&ids).expect("int8 forward");
+        assert_eq!(out.len(), b.dims().output_len());
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn int8_stays_close_to_f32_on_a_small_model() {
+        let meta = synthetic_meta("token", 2, 1, 5, 8, 1, 2, 3);
+        let raw = RawWeights::random(&meta, 16, 9);
+        let wf32 = WeightsFile::parse(raw.to_blob()).unwrap();
+        let wq = WeightsFile::parse(raw.to_blob()).unwrap();
+        let f = NativeBackend::from_weights(meta.clone(), wf32).unwrap();
+        let q = NativeBackend::from_weights_prec(meta, wq, Precision::Int8).unwrap();
+        let ids: Vec<i32> = (0..f.meta().ids_len() as i32).map(|i| (i * 7) % 200).collect();
+        let of = f.run_ids(&ids).unwrap();
+        let oq = q.run_ids(&ids).unwrap();
+        assert_eq!(of.len(), oq.len());
+        let scale = 1.0 + of.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        for (i, (a, b)) in of.iter().zip(&oq).enumerate() {
+            assert!(
+                (a - b).abs() <= 0.08 * scale,
+                "logit {i}: f32 {a} vs int8 {b} (allowed {})",
+                0.08 * scale
+            );
+        }
     }
 
     #[test]

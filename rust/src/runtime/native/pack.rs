@@ -21,29 +21,48 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, ensure, Result};
 
-use super::{Dims, NativeTask};
+use super::quant::QuantMat;
+use super::{Dims, NativeTask, Precision};
 use crate::runtime::manifest::ArtifactMeta;
-use crate::runtime::weights::WeightsFile;
+use crate::runtime::weights::{Dtype, WeightsFile};
 use crate::util::json::{arr, num, obj, s};
 use crate::util::rng::Rng;
+
+/// A projection matrix in execution layout: pre-transposed f32, or int8
+/// codes with per-output-channel scales, per the backend's precision.
+pub(crate) enum Mat {
+    F32(Vec<f32>),
+    Q8(QuantMat),
+}
+
+impl Mat {
+    /// The f32 payload, if this matrix is f32 (tests and the f32-only
+    /// paths use this).
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Mat::F32(v) => Some(v),
+            Mat::Q8(_) => None,
+        }
+    }
+}
 
 /// One encoder layer in execution layout (`*_t` = pre-transposed).
 pub(crate) struct LayerPack {
     pub ln1_g: Vec<f32>,
     pub ln1_b: Vec<f32>,
-    pub wq_t: Vec<f32>,
+    pub wq_t: Mat,
     pub bq: Vec<f32>,
-    pub wk_t: Vec<f32>,
+    pub wk_t: Mat,
     pub bk: Vec<f32>,
-    pub wv_t: Vec<f32>,
+    pub wv_t: Mat,
     pub bv: Vec<f32>,
-    pub wo_t: Vec<f32>,
+    pub wo_t: Mat,
     pub bo: Vec<f32>,
     pub ln2_g: Vec<f32>,
     pub ln2_b: Vec<f32>,
-    pub ff1_t: Vec<f32>,
+    pub ff1_t: Mat,
     pub fb1: Vec<f32>,
-    pub ff2_t: Vec<f32>,
+    pub ff2_t: Mat,
     pub fb2: Vec<f32>,
 }
 
@@ -60,10 +79,10 @@ pub(crate) struct PackedWeights {
     pub layers: Vec<LayerPack>,
     pub lnf_g: Vec<f32>,
     pub lnf_b: Vec<f32>,
-    pub w1h_t: Vec<f32>,
-    pub w1p_t: Vec<f32>,
+    pub w1h_t: Mat,
+    pub w1p_t: Mat,
     pub db1: Vec<f32>,
-    pub w2_t: Vec<f32>,
+    pub w2_t: Mat,
     pub db2: Vec<f32>,
     pub head_t: Vec<f32>,
     pub head_b: Vec<f32>,
@@ -119,10 +138,54 @@ impl<'a> Resolver<'a> {
         }
         Ok(out)
     }
+
+    /// A `(rows, cols)` projection resolved into execution layout at the
+    /// requested precision, converting across the blob's storage dtype:
+    /// f32 blobs are quantized online for `Precision::Int8` (bitwise the
+    /// same codes a `DMUXW2` writer would store), int8 blobs are
+    /// dequantized for `Precision::F32`.
+    fn mat(&self, name: &str, rows: usize, cols: usize, precision: Precision) -> Result<Mat> {
+        let i = self.idx(name)?;
+        let t = &self.wf.tensors[i];
+        ensure!(
+            t.shape.as_slice() == [rows, cols],
+            "tensor '{name}' shape {:?} != expected {:?}",
+            t.shape,
+            [rows, cols]
+        );
+        match t.dtype {
+            Dtype::F32 => {
+                let bt = self.transposed(name, rows, cols)?;
+                Ok(match precision {
+                    Precision::F32 => Mat::F32(bt),
+                    Precision::Int8 => Mat::Q8(QuantMat::from_bt(&bt, cols, rows)),
+                })
+            }
+            Dtype::I8 => {
+                let data = self.wf.tensor_i8_view(i)?;
+                let scales = self.wf.tensor_scales(i)?;
+                ensure!(
+                    scales.len() == cols,
+                    "tensor '{name}' has {} scales for {cols} output channels",
+                    scales.len()
+                );
+                let qm = QuantMat::from_parts(data, scales, rows, cols);
+                Ok(match precision {
+                    Precision::F32 => Mat::F32(qm.dequantize(cols, rows)),
+                    Precision::Int8 => Mat::Q8(qm),
+                })
+            }
+        }
+    }
 }
 
-/// Validate the artifact against the blob and build execution layout.
-pub(crate) fn pack(meta: &ArtifactMeta, wf: &WeightsFile) -> Result<(Dims, PackedWeights)> {
+/// Validate the artifact against the blob and build execution layout at
+/// the requested weight precision.
+pub(crate) fn pack(
+    meta: &ArtifactMeta,
+    wf: &WeightsFile,
+    precision: Precision,
+) -> Result<(Dims, PackedWeights)> {
     match meta.mux.as_str() {
         "hadamard" | "learned_hadamard" | "binary" | "identity" => {}
         other => bail!(
@@ -209,19 +272,19 @@ pub(crate) fn pack(meta: &ArtifactMeta, wf: &WeightsFile) -> Result<(Dims, Packe
         layers.push(LayerPack {
             ln1_g: r.vec(&p("ln1/g"), &[d])?,
             ln1_b: r.vec(&p("ln1/b"), &[d])?,
-            wq_t: r.transposed(&p("wq/w"), d, d)?,
+            wq_t: r.mat(&p("wq/w"), d, d, precision)?,
             bq: r.vec(&p("wq/b"), &[d])?,
-            wk_t: r.transposed(&p("wk/w"), d, d)?,
+            wk_t: r.mat(&p("wk/w"), d, d, precision)?,
             bk: r.vec(&p("wk/b"), &[d])?,
-            wv_t: r.transposed(&p("wv/w"), d, d)?,
+            wv_t: r.mat(&p("wv/w"), d, d, precision)?,
             bv: r.vec(&p("wv/b"), &[d])?,
-            wo_t: r.transposed(&p("wo/w"), d, d)?,
+            wo_t: r.mat(&p("wo/w"), d, d, precision)?,
             bo: r.vec(&p("wo/b"), &[d])?,
             ln2_g: r.vec(&p("ln2/g"), &[d])?,
             ln2_b: r.vec(&p("ln2/b"), &[d])?,
-            ff1_t: r.transposed(&p("ff1/w"), d, d_ff)?,
+            ff1_t: r.mat(&p("ff1/w"), d, d_ff, precision)?,
             fb1: r.vec(&p("ff1/b"), &[d_ff])?,
-            ff2_t: r.transposed(&p("ff2/w"), d_ff, d)?,
+            ff2_t: r.mat(&p("ff2/w"), d_ff, d, precision)?,
             fb2: r.vec(&p("ff2/b"), &[d])?,
         });
     }
@@ -254,10 +317,10 @@ pub(crate) fn pack(meta: &ArtifactMeta, wf: &WeightsFile) -> Result<(Dims, Packe
         layers,
         lnf_g: r.vec("ln_f/g", &[d])?,
         lnf_b: r.vec("ln_f/b", &[d])?,
-        w1h_t: r.transposed("demux/w1h", d, d_demux)?,
-        w1p_t: r.transposed("demux/w1p", d, d_demux)?,
+        w1h_t: r.mat("demux/w1h", d, d_demux, precision)?,
+        w1p_t: r.mat("demux/w1p", d, d_demux, precision)?,
         db1: r.vec("demux/b1", &[d_demux])?,
-        w2_t: r.transposed("demux/w2", d_demux, d)?,
+        w2_t: r.mat("demux/w2", d_demux, d, precision)?,
         db2: r.vec("demux/b2", &[d])?,
         head_t: r.transposed(&format!("{head_name}/w"), d, meta.n_classes)?,
         head_b: r.vec(&format!("{head_name}/b"), &[meta.n_classes])?,
@@ -383,6 +446,76 @@ impl RawWeights {
         out
     }
 
+    /// Serialize as a `DMUXW2` blob with the projection matrices stored
+    /// int8 (per-output-channel symmetric scales) and everything else
+    /// f32. Uses the same fold order and ties-to-even rounding as the
+    /// online quantizer (`QuantMat::from_bt`), so a backend loaded from
+    /// this blob is bitwise identical to one quantized at load time.
+    pub fn to_blob_q8(&self) -> Vec<u8> {
+        let mut entries = Vec::new();
+        let mut payload: Vec<u8> = Vec::new();
+        for (name, shape, data) in &self.tensors {
+            if quantized_in_blob(name, shape) {
+                let (rows, cols) = (shape[0], shape[1]);
+                let mut scales = vec![0.0f32; cols];
+                let mut codes = vec![0i8; rows * cols];
+                for o in 0..cols {
+                    let mut amax = 0.0f32;
+                    for r in 0..rows {
+                        amax = amax.max(data[r * cols + o].abs());
+                    }
+                    if amax <= 0.0 {
+                        continue;
+                    }
+                    let inv = 63.0 / amax;
+                    scales[o] = amax / 63.0;
+                    for r in 0..rows {
+                        codes[r * cols + o] = (data[r * cols + o] * inv).round_ties_even() as i32 as i8;
+                    }
+                }
+                let offset = payload.len();
+                let nbytes = codes.len();
+                payload.extend(codes.iter().map(|&q| q as u8));
+                while payload.len() % 4 != 0 {
+                    payload.push(0); // pad so the scales stay 4-aligned
+                }
+                let scales_offset = payload.len();
+                for &sc in &scales {
+                    payload.extend_from_slice(&sc.to_le_bytes());
+                }
+                entries.push(obj(vec![
+                    ("name", s(name)),
+                    ("shape", arr(shape.iter().map(|&x| num(x as f64)))),
+                    ("dtype", s("i8")),
+                    ("offset", num(offset as f64)),
+                    ("nbytes", num(nbytes as f64)),
+                    ("scales_offset", num(scales_offset as f64)),
+                    ("scales_nbytes", num((scales.len() * 4) as f64)),
+                ]));
+            } else {
+                let offset = payload.len();
+                let nbytes = data.len() * 4;
+                for &v in data {
+                    payload.extend_from_slice(&v.to_le_bytes());
+                }
+                entries.push(obj(vec![
+                    ("name", s(name)),
+                    ("shape", arr(shape.iter().map(|&x| num(x as f64)))),
+                    ("dtype", s("f32")),
+                    ("offset", num(offset as f64)),
+                    ("nbytes", num(nbytes as f64)),
+                ]));
+            }
+        }
+        let header = obj(vec![("tensors", arr(entries))]).to_string();
+        let mut out = Vec::with_capacity(11 + header.len() + payload.len());
+        out.extend_from_slice(b"DMUXW2\n");
+        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
     /// Total tensor count (what the manifest's `n_weight_tensors` pins).
     pub fn len(&self) -> usize {
         self.tensors.len()
@@ -391,6 +524,15 @@ impl RawWeights {
     pub fn is_empty(&self) -> bool {
         self.tensors.is_empty()
     }
+}
+
+/// Which tensors the `DMUXW2` writer stores int8: the 2-D projection
+/// matrices the forward multiplies by (encoder projections + demux MLP).
+/// Embeddings, biases, layer-norm params, and the task head stay f32.
+fn quantized_in_blob(name: &str, shape: &[usize]) -> bool {
+    shape.len() == 2
+        && ((name.starts_with("layers/") && name.ends_with("/w"))
+            || matches!(name, "demux/w1h" | "demux/w1p" | "demux/w2"))
 }
 
 #[cfg(test)]
@@ -419,15 +561,16 @@ mod tests {
         let m = meta();
         let raw = RawWeights::random(&m, 16, 6);
         let wf = WeightsFile::parse(raw.to_blob()).unwrap();
-        let (dims, packed) = pack(&m, &wf).expect("pack");
+        let (dims, packed) = pack(&m, &wf, Precision::F32).expect("pack");
         assert_eq!(dims.d_ff, 16);
         assert_eq!(dims.d_demux, 16);
         assert_eq!(dims.d_head, 4);
         let (shape, wq) = raw.get("layers/0/wq/w").unwrap();
         let d = shape[0];
+        let wq_t = packed.layers[0].wq_t.as_f32().expect("f32 precision packs f32 mats");
         for r in 0..d {
             for c in 0..d {
-                assert_eq!(packed.layers[0].wq_t[c * d + r], wq[r * d + c]);
+                assert_eq!(wq_t[c * d + r], wq[r * d + c]);
             }
         }
         // fused mux precomputation: vecs/N and pos ⊙ mean(vecs)
@@ -447,15 +590,15 @@ mod tests {
         m.mux = "ortho".into();
         let raw = RawWeights::random(&meta(), 16, 7);
         let wf = WeightsFile::parse(raw.to_blob()).unwrap();
-        assert!(pack(&m, &wf).is_err(), "ortho mux must be rejected");
+        assert!(pack(&m, &wf, Precision::F32).is_err(), "ortho mux must be rejected");
         let mut m = meta();
         m.demux = "mlp".into();
         let wf = WeightsFile::parse(raw.to_blob()).unwrap();
-        assert!(pack(&m, &wf).is_err(), "mlp demux must be rejected");
+        assert!(pack(&m, &wf, Precision::F32).is_err(), "mlp demux must be rejected");
         let mut m = meta();
         m.task = "retrieval".into();
         let wf = WeightsFile::parse(raw.to_blob()).unwrap();
-        assert!(pack(&m, &wf).is_err(), "retrieval must be rejected");
+        assert!(pack(&m, &wf, Precision::F32).is_err(), "retrieval must be rejected");
     }
 
     #[test]
@@ -466,7 +609,62 @@ mod tests {
         let wf = WeightsFile::parse(raw.to_blob()).unwrap();
         let mut m2 = m.clone();
         m2.n_weight_tensors = raw.len();
-        let err = pack(&m2, &wf).unwrap_err().to_string();
+        let err = pack(&m2, &wf, Precision::F32).unwrap_err().to_string();
         assert!(err.contains("demux/w1h"), "{err}");
+    }
+
+    #[test]
+    fn q8_blob_roundtrips_and_keeps_nonprojection_tensors_f32() {
+        let m = meta();
+        let raw = RawWeights::random(&m, 16, 9);
+        let wf = WeightsFile::parse(raw.to_blob_q8()).expect("parse DMUXW2");
+        assert_eq!(wf.tensors.len(), raw.len());
+        for (i, (name, shape, data)) in raw.tensors.iter().enumerate() {
+            assert_eq!(&wf.tensors[i].name, name);
+            assert_eq!(&wf.tensors[i].shape, shape);
+            if quantized_in_blob(name, shape) {
+                assert_eq!(wf.tensors[i].dtype, crate::runtime::weights::Dtype::I8);
+                assert_eq!(wf.tensor_scales(i).unwrap().len(), shape[1]);
+            } else {
+                assert_eq!(wf.tensors[i].dtype, crate::runtime::weights::Dtype::F32);
+                assert_eq!(wf.tensor_f32_view(i).unwrap(), data.as_slice());
+            }
+        }
+        // both precisions pack from the quantized blob
+        assert!(pack(&m, &wf, Precision::Int8).is_ok());
+        assert!(pack(&m, &wf, Precision::F32).is_ok());
+    }
+
+    /// The writer's per-column quantization and the online `from_bt`
+    /// quantization of the same f32 tensor must agree bitwise — this is
+    /// what makes a `DMUXW2`-loaded backend identical to an
+    /// online-quantized one.
+    #[test]
+    fn blob_quantization_matches_online_quantization_bitwise() {
+        let m = meta();
+        let raw = RawWeights::random(&m, 16, 10);
+        let wf_f32 = WeightsFile::parse(raw.to_blob()).unwrap();
+        let wf_q8 = WeightsFile::parse(raw.to_blob_q8()).unwrap();
+        let (_, from_f32) = pack(&m, &wf_f32, Precision::Int8).unwrap();
+        let (_, from_q8) = pack(&m, &wf_q8, Precision::Int8).unwrap();
+        let pairs = [
+            (&from_f32.layers[0].wq_t, &from_q8.layers[0].wq_t),
+            (&from_f32.layers[0].ff1_t, &from_q8.layers[0].ff1_t),
+            (&from_f32.w1h_t, &from_q8.w1h_t),
+            (&from_f32.w2_t, &from_q8.w2_t),
+        ];
+        for (a, b) in pairs {
+            match (a, b) {
+                (Mat::Q8(x), Mat::Q8(y)) => {
+                    assert_eq!(x.q, y.q);
+                    assert_eq!(x.wsum, y.wsum);
+                    assert_eq!(
+                        x.scales.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        y.scales.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                    );
+                }
+                _ => panic!("Int8 precision must pack Q8 mats"),
+            }
+        }
     }
 }

@@ -1,0 +1,269 @@
+//! Int8 quantization for the native backend: symmetric per-output-channel
+//! weight quantization, dynamic symmetric per-row activation quantization,
+//! and the scalar int8 GEMM arm.
+//!
+//! Scheme (matches the `DMUXW2` on-disk format, see DESIGN.md):
+//! - Weights: per output channel o, `s_w[o] = max|w[·,o]| / 63`; codes are
+//!   `round_ties_even(w / s_w)` clamped by construction to ±63. 7-bit
+//!   codes keep the AVX2 `maddubs` pair-sums inside i16 (2·255·63 < 2^15).
+//! - Activations: per row, `s_a = max|x| / 127`, stored biased as
+//!   `u8 = q + 128` so the unsigned×signed `maddubs` path applies; the
+//!   bias is removed exactly in the epilogue via the precomputed per-
+//!   channel weight sums (`acc - 128·Σq_w`).
+//! - `dequant` is the single f32 epilogue shared by the scalar and AVX2
+//!   arms, which keeps the two bitwise-identical.
+#![allow(clippy::needless_range_loop)]
+
+const W_QMAX: f32 = 63.0;
+const A_QMAX: f32 = 127.0;
+
+/// A weight matrix quantized to int8, stored (n, k) row-major — row o is
+/// output channel o, i.e. the same transposed-for-dot layout the f32
+/// `*_t` matrices use.
+pub(crate) struct QuantMat {
+    /// int8 codes, `q[o*k + p]`.
+    pub q: Vec<i8>,
+    /// Per-output-channel scale: `w ≈ q * scales[o]`.
+    pub scales: Vec<f32>,
+    /// Per-output-channel code sum `Σ_p q[o*k+p]`, used to cancel the
+    /// +128 activation bias exactly in the epilogue.
+    pub wsum: Vec<i32>,
+}
+
+impl QuantMat {
+    /// Quantize an already-transposed (n, k) f32 matrix. This is the
+    /// same fold order and rounding the `DMUXW2` writer uses, so a
+    /// blob-quantized tensor loads to bitwise-identical codes.
+    pub fn from_bt(bt: &[f32], n: usize, k: usize) -> QuantMat {
+        assert_eq!(bt.len(), n * k);
+        let mut q = vec![0i8; n * k];
+        let mut scales = vec![0.0f32; n];
+        let mut wsum = vec![0i32; n];
+        for o in 0..n {
+            let row = &bt[o * k..(o + 1) * k];
+            let mut amax = 0.0f32;
+            for &v in row {
+                amax = amax.max(v.abs());
+            }
+            if amax <= 0.0 {
+                continue; // scale stays 0.0, codes stay 0
+            }
+            let inv = W_QMAX / amax;
+            scales[o] = amax / W_QMAX;
+            let dst = &mut q[o * k..(o + 1) * k];
+            let mut s = 0i32;
+            for (d, &v) in dst.iter_mut().zip(row) {
+                let qi = (v * inv).round_ties_even() as i32;
+                *d = qi as i8;
+                s += qi;
+            }
+            wsum[o] = s;
+        }
+        QuantMat { q, scales, wsum }
+    }
+
+    /// Assemble from a `DMUXW2` tensor: `data` is the blob's (k, n)
+    /// row-major int8 payload, `scales` its per-column scales. Transposes
+    /// to the (n, k) dot layout and recomputes the code sums.
+    pub fn from_parts(data: &[i8], scales: &[f32], k: usize, n: usize) -> QuantMat {
+        assert_eq!(data.len(), k * n);
+        assert_eq!(scales.len(), n);
+        let mut q = vec![0i8; n * k];
+        let mut wsum = vec![0i32; n];
+        for p in 0..k {
+            for o in 0..n {
+                let v = data[p * n + o];
+                q[o * k + p] = v;
+                wsum[o] += v as i32;
+            }
+        }
+        QuantMat { q, scales: scales.to_vec(), wsum }
+    }
+
+    /// Expand back to the (n, k) f32 dot layout (used when `--precision
+    /// f32` is requested against an int8 blob).
+    pub fn dequantize(&self, n: usize, k: usize) -> Vec<f32> {
+        assert_eq!(self.q.len(), n * k);
+        let mut out = vec![0.0f32; n * k];
+        for o in 0..n {
+            let s = self.scales[o];
+            for p in 0..k {
+                out[o * k + p] = self.q[o * k + p] as f32 * s;
+            }
+        }
+        out
+    }
+}
+
+/// The one f32 epilogue both int8 GEMM arms share: remove the +128
+/// activation bias exactly, apply both scales, add the f32 bias.
+#[inline]
+pub(crate) fn dequant(acc: i32, wsum: i32, sa: f32, sw: f32, bias: f32) -> f32 {
+    (acc - 128 * wsum) as f32 * (sa * sw) + bias
+}
+
+/// Scalar arm of the per-row activation quantizer. `round_ties_even`
+/// matches `_mm256_cvtps_epi32` under the default MXCSR, so the AVX2 arm
+/// produces identical codes. Returns the row scale (`amax/127`), or 0.0
+/// for an all-zero row (codes all 128 = bias).
+pub(crate) fn quantize_row_scalar(x: &[f32], out: &mut [u8]) -> f32 {
+    let k = x.len();
+    let mut amax = 0.0f32;
+    for &v in x {
+        amax = amax.max(v.abs());
+    }
+    if amax <= 0.0 {
+        out[..k].fill(128);
+        return 0.0;
+    }
+    let inv = A_QMAX / amax;
+    for (o, &v) in out[..k].iter_mut().zip(x) {
+        *o = ((v * inv).round_ties_even() as i32 + 128) as u8;
+    }
+    amax / A_QMAX
+}
+
+/// Quantize m rows of activations, dispatching to the AVX2 arm when it
+/// is the active kernel. Scales land in `ascale[..m]`, codes in
+/// `aq[..m*k]`.
+pub(crate) fn quantize_rows(a: &[f32], m: usize, k: usize, aq: &mut [u8], ascale: &mut [f32]) {
+    assert!(a.len() >= m * k && aq.len() >= m * k && ascale.len() >= m);
+    #[cfg(target_arch = "x86_64")]
+    if super::simd::active_kernel() == super::simd::Kernel::Avx2Fma {
+        for i in 0..m {
+            ascale[i] =
+                unsafe { super::simd::quantize_row_avx2(&a[i * k..(i + 1) * k], &mut aq[i * k..(i + 1) * k]) };
+        }
+        return;
+    }
+    for i in 0..m {
+        ascale[i] = quantize_row_scalar(&a[i * k..(i + 1) * k], &mut aq[i * k..(i + 1) * k]);
+    }
+}
+
+/// Scalar int8 GEMM arm: exact i32 accumulation, shared `dequant`
+/// epilogue. Same contract as `simd::gemm_bt_q8_avx2`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_bt_q8_scalar(
+    aq: &[u8],
+    ascale: &[f32],
+    w: &QuantMat,
+    bias: Option<&[f32]>,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    for i in 0..m {
+        let ar = &aq[i * k..(i + 1) * k];
+        let cr = &mut c[i * n..(i + 1) * n];
+        let sa = ascale[i];
+        for j in 0..n {
+            let wr = &w.q[j * k..(j + 1) * k];
+            let mut acc = 0i32;
+            for p in 0..k {
+                acc += ar[p] as i32 * wr[p] as i32;
+            }
+            let b = match bias {
+                Some(b) => b[j],
+                None => 0.0,
+            };
+            cr[j] = dequant(acc, w.wsum[j], sa, w.scales[j], b);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn from_bt_codes_stay_within_seven_bits_and_sums_match() {
+        let mut rng = Rng::new(7);
+        let (n, k) = (9, 33);
+        let bt: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32 * 2.0).collect();
+        let w = QuantMat::from_bt(&bt, n, k);
+        for o in 0..n {
+            let mut s = 0i32;
+            for p in 0..k {
+                let q = w.q[o * k + p] as i32;
+                assert!((-63..=63).contains(&q), "code {q} out of 7-bit range");
+                s += q;
+            }
+            assert_eq!(s, w.wsum[o]);
+        }
+    }
+
+    #[test]
+    fn dequantize_roundtrip_error_is_bounded_by_half_step() {
+        let mut rng = Rng::new(8);
+        let (n, k) = (5, 17);
+        let bt: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+        let w = QuantMat::from_bt(&bt, n, k);
+        let back = w.dequantize(n, k);
+        for o in 0..n {
+            // half a quantization step per element, plus f32 slack
+            let tol = 0.5 * w.scales[o] + 1e-6;
+            for p in 0..k {
+                let err = (back[o * k + p] - bt[o * k + p]).abs();
+                assert!(err <= tol, "err {err} > tol {tol}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_parts_transposes_to_from_bt_layout() {
+        let mut rng = Rng::new(9);
+        let (k, n) = (6, 4);
+        let bt: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+        let w = QuantMat::from_bt(&bt, n, k);
+        // serialize the codes the way the blob stores them: (k, n)
+        let mut blob = vec![0i8; k * n];
+        for o in 0..n {
+            for p in 0..k {
+                blob[p * n + o] = w.q[o * k + p];
+            }
+        }
+        let w2 = QuantMat::from_parts(&blob, &w.scales, k, n);
+        assert_eq!(w.q, w2.q);
+        assert_eq!(w.wsum, w2.wsum);
+        assert_eq!(
+            w.scales.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+            w2.scales.iter().map(|s| s.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn zero_row_quantizes_to_bias_code_and_zero_scale() {
+        let x = vec![0.0f32; 11];
+        let mut q = vec![0u8; 11];
+        assert_eq!(quantize_row_scalar(&x, &mut q), 0.0);
+        assert!(q.iter().all(|&v| v == 128));
+        // and the zero scale kills the row in dequant
+        assert_eq!(dequant(12345, 678, 0.0, 0.5, 1.5), 1.5);
+    }
+
+    #[test]
+    fn scalar_q8_gemm_tracks_f32_within_quantization_noise() {
+        let mut rng = Rng::new(10);
+        let (m, k, n) = (3, 40, 6);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let bt: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+        let w = QuantMat::from_bt(&bt, n, k);
+        let mut aq = vec![0u8; m * k];
+        let mut ascale = vec![0.0f32; m];
+        quantize_rows(&a, m, k, &mut aq, &mut ascale);
+        let mut got = vec![0.0f32; m * n];
+        gemm_bt_q8_scalar(&aq, &ascale, &w, None, &mut got, m, k, n);
+        let mut want = vec![0.0f32; m * n];
+        super::super::gemm::gemm_bt(&a, &bt, None, &mut want, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let bound = 0.0125 * k as f32 * (ascale[i] * 127.0) * (w.scales[j] * 63.0) + 1e-5;
+                let err = (got[i * n + j] - want[i * n + j]).abs();
+                assert!(err <= bound, "({i},{j}): err {err} > bound {bound}");
+            }
+        }
+    }
+}

@@ -10,6 +10,12 @@
 //! `(in, out)` layout (stride-`n` weight walks), nothing is blocked,
 //! pre-transposed, fused, arena-reused, or threaded, and every
 //! intermediate allocates. Keep it that way — its slowness is the point.
+//!
+//! The reference is **f32-only by design**: it is the single scalar
+//! oracle both execution arms answer to. The f32 path must match it
+//! within float-reassociation tolerance; the int8 path is pinned against
+//! the f32 path separately (`tests/native.rs`) with a quantization-noise
+//! bound, so it inherits this oracle transitively.
 
 #![allow(clippy::needless_range_loop)]
 

@@ -1,0 +1,608 @@
+//! Runtime-dispatched SIMD kernels for the native backend.
+//!
+//! Everything hot in the forward pass funnels through here when the host
+//! CPU has AVX2+FMA: the f32 GEMM microkernel, the int8 (maddubs) GEMM,
+//! per-row activation quantization, and a vectorized tanh-GELU. Dispatch
+//! is decided once per process (`active_kernel`, cached in a `OnceLock`)
+//! from CPUID, with a `DATAMUX_FORCE_SCALAR=1` override so the scalar
+//! fallback arm is exercisable on any host (CI runs a leg with it set).
+//!
+//! The scalar fallbacks live in `gemm.rs` (f32) and `quant.rs` (int8);
+//! both pairs of arms are kept bitwise-comparable where the math allows
+//! (int8: identical integer accumulation and a shared `dequant` epilogue;
+//! f32: same per-element rounding in the quantizer via ties-to-even).
+#![allow(clippy::too_many_arguments, clippy::excessive_precision)]
+
+use std::sync::OnceLock;
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+#[cfg(target_arch = "x86_64")]
+use super::forward::{gelu, GELU_C};
+#[cfg(target_arch = "x86_64")]
+use super::quant::{dequant, QuantMat};
+
+/// Which GEMM/quant kernel family this process selected at startup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernel {
+    /// `std::arch` AVX2+FMA microkernels (x86_64 with CPUID support).
+    Avx2Fma,
+    /// Portable blocked-scalar kernels — non-x86_64 hosts, CPUs without
+    /// AVX2/FMA, or a `DATAMUX_FORCE_SCALAR=1` override.
+    Scalar,
+}
+
+impl Kernel {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Avx2Fma => "avx2+fma",
+            Kernel::Scalar => "scalar",
+        }
+    }
+}
+
+impl std::fmt::Display for Kernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The kernel family every dispatch site in this process uses. Decided
+/// once; the env override is read at first call, not per call.
+pub fn active_kernel() -> Kernel {
+    static KERNEL: OnceLock<Kernel> = OnceLock::new();
+    *KERNEL.get_or_init(detect)
+}
+
+fn forced_scalar() -> bool {
+    match std::env::var("DATAMUX_FORCE_SCALAR") {
+        Ok(v) => !v.is_empty() && v != "0",
+        Err(_) => false,
+    }
+}
+
+fn detect() -> Kernel {
+    if forced_scalar() {
+        return Kernel::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return Kernel::Avx2Fma;
+        }
+    }
+    Kernel::Scalar
+}
+
+// ---------------------------------------------------------------- f32 GEMM
+
+/// Column-tile width: keeps NC rows of bt resident in L1/L2 across the
+/// whole m sweep (matches the scalar kernel's blocking).
+#[cfg(target_arch = "x86_64")]
+const NC: usize = 64;
+/// Rows of bt (= output columns) processed together per inner kernel.
+#[cfg(target_arch = "x86_64")]
+const NR: usize = 4;
+
+/// AVX2+FMA `C = A * B^T (+ bias)`. Same contract as `gemm::gemm_bt`:
+/// `a` is (m,k) row-major, `bt` is (n,k) row-major, `c` is (m,n).
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2 and FMA (see `active_kernel`)
+/// and that the slice lengths match the dimensions (asserted by the
+/// dispatching wrapper).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn gemm_bt_f32_avx2(
+    a: &[f32],
+    bt: &[f32],
+    bias: Option<&[f32]>,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let mut jb = 0usize;
+    while jb < n {
+        let je = (jb + NC).min(n);
+        for i in 0..m {
+            let ar = a.as_ptr().add(i * k);
+            let cr = c.as_mut_ptr().add(i * n);
+            let mut j = jb;
+            while j + NR <= je {
+                let b0 = bt.as_ptr().add(j * k);
+                let b1 = bt.as_ptr().add((j + 1) * k);
+                let b2 = bt.as_ptr().add((j + 2) * k);
+                let b3 = bt.as_ptr().add((j + 3) * k);
+                let (s0, s1, s2, s3) = dot4(ar, b0, b1, b2, b3, k);
+                match bias {
+                    Some(b) => {
+                        *cr.add(j) = s0 + b[j];
+                        *cr.add(j + 1) = s1 + b[j + 1];
+                        *cr.add(j + 2) = s2 + b[j + 2];
+                        *cr.add(j + 3) = s3 + b[j + 3];
+                    }
+                    None => {
+                        *cr.add(j) = s0;
+                        *cr.add(j + 1) = s1;
+                        *cr.add(j + 2) = s2;
+                        *cr.add(j + 3) = s3;
+                    }
+                }
+                j += NR;
+            }
+            while j < je {
+                let s = dot1(ar, bt.as_ptr().add(j * k), k);
+                *cr.add(j) = s + bias.map_or(0.0, |b| b[j]);
+                j += 1;
+            }
+        }
+        jb = je;
+    }
+}
+
+/// One A row against four B^T rows; 4 independent FMA chains.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot4(
+    a: *const f32,
+    b0: *const f32,
+    b1: *const f32,
+    b2: *const f32,
+    b3: *const f32,
+    k: usize,
+) -> (f32, f32, f32, f32) {
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut acc2 = _mm256_setzero_ps();
+    let mut acc3 = _mm256_setzero_ps();
+    let mut p = 0usize;
+    while p + 8 <= k {
+        let av = _mm256_loadu_ps(a.add(p));
+        acc0 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b0.add(p)), acc0);
+        acc1 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b1.add(p)), acc1);
+        acc2 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b2.add(p)), acc2);
+        acc3 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b3.add(p)), acc3);
+        p += 8;
+    }
+    let mut s0 = hsum_ps(acc0);
+    let mut s1 = hsum_ps(acc1);
+    let mut s2 = hsum_ps(acc2);
+    let mut s3 = hsum_ps(acc3);
+    while p < k {
+        let av = *a.add(p);
+        s0 += av * *b0.add(p);
+        s1 += av * *b1.add(p);
+        s2 += av * *b2.add(p);
+        s3 += av * *b3.add(p);
+        p += 1;
+    }
+    (s0, s1, s2, s3)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot1(a: *const f32, b: *const f32, k: usize) -> f32 {
+    let mut acc = _mm256_setzero_ps();
+    let mut p = 0usize;
+    while p + 8 <= k {
+        acc = _mm256_fmadd_ps(_mm256_loadu_ps(a.add(p)), _mm256_loadu_ps(b.add(p)), acc);
+        p += 8;
+    }
+    let mut s = hsum_ps(acc);
+    while p < k {
+        s += *a.add(p) * *b.add(p);
+        p += 1;
+    }
+    s
+}
+
+/// Deterministic horizontal sum of 8 lanes (fixed reduction order, so
+/// results are reproducible run to run and thread-count independent).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn hsum_ps(v: __m256) -> f32 {
+    let s = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps(v, 1));
+    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_add_ss(s, _mm_movehdup_ps(s));
+    _mm_cvtss_f32(s)
+}
+
+// ---------------------------------------------------------------- int8 GEMM
+
+/// AVX2 int8 `C = dequant(Aq * Wq^T) (+ bias)`. `aq` is (m,k) row-major
+/// biased-u8 activations (value = q+128), `w` holds (n,k) row-major int8
+/// weights with per-output-channel scales and column sums.
+///
+/// Integer accumulation is exact, and the f32 epilogue is the shared
+/// `quant::dequant`, so this arm is bitwise-identical to
+/// `quant::gemm_bt_q8_scalar`.
+///
+/// # Safety
+/// Caller must ensure AVX2 support and matching slice lengths.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn gemm_bt_q8_avx2(
+    aq: &[u8],
+    ascale: &[f32],
+    w: &QuantMat,
+    bias: Option<&[f32]>,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let mut jb = 0usize;
+    while jb < n {
+        let je = (jb + NC).min(n);
+        for i in 0..m {
+            let ar = aq.as_ptr().add(i * k);
+            let cr = c.as_mut_ptr().add(i * n);
+            let sa = ascale[i];
+            let mut j = jb;
+            while j + NR <= je {
+                let w0 = w.q.as_ptr().add(j * k);
+                let w1 = w.q.as_ptr().add((j + 1) * k);
+                let w2 = w.q.as_ptr().add((j + 2) * k);
+                let w3 = w.q.as_ptr().add((j + 3) * k);
+                let (d0, d1, d2, d3) = qdot4(ar, w0, w1, w2, w3, k);
+                match bias {
+                    Some(b) => {
+                        *cr.add(j) = dequant(d0, w.wsum[j], sa, w.scales[j], b[j]);
+                        *cr.add(j + 1) = dequant(d1, w.wsum[j + 1], sa, w.scales[j + 1], b[j + 1]);
+                        *cr.add(j + 2) = dequant(d2, w.wsum[j + 2], sa, w.scales[j + 2], b[j + 2]);
+                        *cr.add(j + 3) = dequant(d3, w.wsum[j + 3], sa, w.scales[j + 3], b[j + 3]);
+                    }
+                    None => {
+                        *cr.add(j) = dequant(d0, w.wsum[j], sa, w.scales[j], 0.0);
+                        *cr.add(j + 1) = dequant(d1, w.wsum[j + 1], sa, w.scales[j + 1], 0.0);
+                        *cr.add(j + 2) = dequant(d2, w.wsum[j + 2], sa, w.scales[j + 2], 0.0);
+                        *cr.add(j + 3) = dequant(d3, w.wsum[j + 3], sa, w.scales[j + 3], 0.0);
+                    }
+                }
+                j += NR;
+            }
+            while j < je {
+                let d = qdot1(ar, w.q.as_ptr().add(j * k), k);
+                let b = match bias {
+                    Some(b) => b[j],
+                    None => 0.0,
+                };
+                *cr.add(j) = dequant(d, w.wsum[j], sa, w.scales[j], b);
+                j += 1;
+            }
+        }
+        jb = je;
+    }
+}
+
+/// One u8 activation row against four i8 weight rows. `maddubs` pairs
+/// u8×i8 into i16 (weights are clamped to ±63 so the pair-sum cannot
+/// saturate: 2·255·63 = 32130 < i16::MAX), then `madd` widens to i32.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn qdot4(
+    a: *const u8,
+    w0: *const i8,
+    w1: *const i8,
+    w2: *const i8,
+    w3: *const i8,
+    k: usize,
+) -> (i32, i32, i32, i32) {
+    let ones = _mm256_set1_epi16(1);
+    let mut acc0 = _mm256_setzero_si256();
+    let mut acc1 = _mm256_setzero_si256();
+    let mut acc2 = _mm256_setzero_si256();
+    let mut acc3 = _mm256_setzero_si256();
+    let mut p = 0usize;
+    while p + 32 <= k {
+        let av = _mm256_loadu_si256(a.add(p) as *const __m256i);
+        let m0 = _mm256_maddubs_epi16(av, _mm256_loadu_si256(w0.add(p) as *const __m256i));
+        let m1 = _mm256_maddubs_epi16(av, _mm256_loadu_si256(w1.add(p) as *const __m256i));
+        let m2 = _mm256_maddubs_epi16(av, _mm256_loadu_si256(w2.add(p) as *const __m256i));
+        let m3 = _mm256_maddubs_epi16(av, _mm256_loadu_si256(w3.add(p) as *const __m256i));
+        acc0 = _mm256_add_epi32(acc0, _mm256_madd_epi16(m0, ones));
+        acc1 = _mm256_add_epi32(acc1, _mm256_madd_epi16(m1, ones));
+        acc2 = _mm256_add_epi32(acc2, _mm256_madd_epi16(m2, ones));
+        acc3 = _mm256_add_epi32(acc3, _mm256_madd_epi16(m3, ones));
+        p += 32;
+    }
+    let mut s0 = hsum_epi32(acc0);
+    let mut s1 = hsum_epi32(acc1);
+    let mut s2 = hsum_epi32(acc2);
+    let mut s3 = hsum_epi32(acc3);
+    while p < k {
+        let av = *a.add(p) as i32;
+        s0 += av * *w0.add(p) as i32;
+        s1 += av * *w1.add(p) as i32;
+        s2 += av * *w2.add(p) as i32;
+        s3 += av * *w3.add(p) as i32;
+        p += 1;
+    }
+    (s0, s1, s2, s3)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn qdot1(a: *const u8, w: *const i8, k: usize) -> i32 {
+    let ones = _mm256_set1_epi16(1);
+    let mut acc = _mm256_setzero_si256();
+    let mut p = 0usize;
+    while p + 32 <= k {
+        let av = _mm256_loadu_si256(a.add(p) as *const __m256i);
+        let mu = _mm256_maddubs_epi16(av, _mm256_loadu_si256(w.add(p) as *const __m256i));
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(mu, ones));
+        p += 32;
+    }
+    let mut s = hsum_epi32(acc);
+    while p < k {
+        s += (*a.add(p) as i32) * (*w.add(p) as i32);
+        p += 1;
+    }
+    s
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_epi32(v: __m256i) -> i32 {
+    let s = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256(v, 1));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0x4E));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0xB1));
+    _mm_cvtsi128_si32(s)
+}
+
+// --------------------------------------------------- activation quantization
+
+/// Symmetric per-row activation quantization to biased u8 (`q+128`).
+/// Returns the row scale `amax/127`. Bitwise-identical to
+/// `quant::quantize_row_scalar`: `_mm256_cvtps_epi32` rounds to nearest
+/// even under the default MXCSR, matching `round_ties_even` in the
+/// scalar arm.
+///
+/// # Safety
+/// Caller must ensure AVX2+FMA support and `out.len() >= x.len()`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn quantize_row_avx2(x: &[f32], out: &mut [u8]) -> f32 {
+    let k = x.len();
+    let sign = _mm256_set1_ps(-0.0);
+    let mut mx = _mm256_setzero_ps();
+    let mut p = 0usize;
+    while p + 8 <= k {
+        mx = _mm256_max_ps(mx, _mm256_andnot_ps(sign, _mm256_loadu_ps(x.as_ptr().add(p))));
+        p += 8;
+    }
+    let mut amax = hmax_ps(mx);
+    while p < k {
+        amax = amax.max(x[p].abs());
+        p += 1;
+    }
+    if amax <= 0.0 {
+        out[..k].fill(128);
+        return 0.0;
+    }
+    let inv = 127.0 / amax;
+    let invv = _mm256_set1_ps(inv);
+    let bias128 = _mm256_set1_epi32(128);
+    let optr = out.as_mut_ptr();
+    p = 0;
+    while p + 8 <= k {
+        let q = _mm256_cvtps_epi32(_mm256_mul_ps(_mm256_loadu_ps(x.as_ptr().add(p)), invv));
+        let q = _mm256_add_epi32(q, bias128);
+        let lo = _mm256_castsi256_si128(q);
+        let hi = _mm256_extracti128_si256(q, 1);
+        let w16 = _mm_packs_epi32(lo, hi);
+        let w8 = _mm_packus_epi16(w16, w16);
+        _mm_storel_epi64(optr.add(p) as *mut __m128i, w8);
+        p += 8;
+    }
+    while p < k {
+        out[p] = ((x[p] * inv).round_ties_even() as i32 + 128) as u8;
+        p += 1;
+    }
+    amax / 127.0
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn hmax_ps(v: __m256) -> f32 {
+    let s = _mm_max_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps(v, 1));
+    let s = _mm_max_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_max_ss(s, _mm_movehdup_ps(s));
+    _mm_cvtss_f32(s)
+}
+
+// ------------------------------------------------------------------- GELU
+
+/// Vectorized tanh-GELU over a whole buffer, matching `forward::gelu`'s
+/// formula. tanh is computed as `1 - 2/(e^{2t}+1)` with a polynomial
+/// `exp` (Cephes coefficients), accurate to ~1 ulp over the clamped
+/// range — within the forward pass's existing 1e-3 parity budget.
+///
+/// # Safety
+/// Caller must ensure AVX2+FMA support.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn gelu_avx2(xs: &mut [f32]) {
+    let half = _mm256_set1_ps(0.5);
+    let one = _mm256_set1_ps(1.0);
+    let two = _mm256_set1_ps(2.0);
+    let c_cube = _mm256_set1_ps(0.044_715);
+    let c_gelu = _mm256_set1_ps(GELU_C);
+    let len = xs.len();
+    let ptr = xs.as_mut_ptr();
+    let mut p = 0usize;
+    while p + 8 <= len {
+        let x = _mm256_loadu_ps(ptr.add(p));
+        let x2 = _mm256_mul_ps(x, x);
+        // t = GELU_C * (x + 0.044715 x^3) = GELU_C * x * (1 + 0.044715 x^2)
+        let inner = _mm256_mul_ps(x, _mm256_fmadd_ps(c_cube, x2, one));
+        let t = _mm256_mul_ps(c_gelu, inner);
+        // tanh(t) = 1 - 2/(exp(2t) + 1)
+        let e = exp_ps(_mm256_add_ps(t, t));
+        let tanh = _mm256_sub_ps(one, _mm256_div_ps(two, _mm256_add_ps(e, one)));
+        let y = _mm256_mul_ps(_mm256_mul_ps(half, x), _mm256_add_ps(one, tanh));
+        _mm256_storeu_ps(ptr.add(p), y);
+        p += 8;
+    }
+    for v in xs[p..].iter_mut() {
+        *v = gelu(*v);
+    }
+}
+
+/// Polynomial exp over 8 lanes (Cephes `expf` scheme: range-reduce by
+/// log2(e), degree-5 polynomial, scale by 2^n through the exponent bits).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn exp_ps(x: __m256) -> __m256 {
+    let one = _mm256_set1_ps(1.0);
+    let x = _mm256_min_ps(x, _mm256_set1_ps(88.3762626647949));
+    let x = _mm256_max_ps(x, _mm256_set1_ps(-88.3762626647949));
+    // n = floor(x * log2(e) + 0.5); x -= n*ln2 in two exact-ish steps
+    let fx = _mm256_floor_ps(_mm256_fmadd_ps(
+        x,
+        _mm256_set1_ps(std::f32::consts::LOG2_E),
+        _mm256_set1_ps(0.5),
+    ));
+    let x = _mm256_fnmadd_ps(fx, _mm256_set1_ps(0.693359375), x);
+    let x = _mm256_fnmadd_ps(fx, _mm256_set1_ps(-2.12194440e-4), x);
+    let x2 = _mm256_mul_ps(x, x);
+    let mut y = _mm256_set1_ps(1.9875691500E-4);
+    y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(1.3981999507E-3));
+    y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(8.3334519073E-3));
+    y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(4.1665795894E-2));
+    y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(1.6666665459E-1));
+    y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(5.0000001201E-1));
+    y = _mm256_fmadd_ps(y, x2, _mm256_add_ps(x, one));
+    // 2^n via the float exponent field
+    let pow2n = _mm256_castsi256_ps(_mm256_slli_epi32(
+        _mm256_add_epi32(_mm256_cvttps_epi32(fx), _mm256_set1_epi32(0x7f)),
+        23,
+    ));
+    _mm256_mul_ps(y, pow2n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_selection_is_cached_and_consistent() {
+        let first = active_kernel();
+        for _ in 0..4 {
+            assert_eq!(active_kernel(), first);
+        }
+        assert!(!first.name().is_empty());
+        assert_eq!(format!("{first}"), first.name());
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    fn has_avx2_fma() -> bool {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_f32_gemm_matches_scalar_kernel() {
+        if !has_avx2_fma() {
+            return;
+        }
+        let mut rng = crate::util::rng::Rng::new(0x51AD);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 5, 7), (2, 9, 3), (5, 33, 66), (7, 64, 130)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let bt: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+            let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            for with_bias in [false, true] {
+                let b = if with_bias { Some(bias.as_slice()) } else { None };
+                let mut want = vec![0.0f32; m * n];
+                super::super::gemm::gemm_bt_scalar(&a, &bt, b, &mut want, m, k, n);
+                let mut got = vec![0.0f32; m * n];
+                unsafe { gemm_bt_f32_avx2(&a, &bt, b, &mut got, m, k, n) };
+                for (g, w) in got.iter().zip(&want) {
+                    assert!((g - w).abs() <= 1e-4 * (1.0 + w.abs()), "{g} vs {w} ({m},{k},{n})");
+                }
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_quantize_row_is_bitwise_identical_to_scalar() {
+        if !has_avx2_fma() {
+            return;
+        }
+        let mut rng = crate::util::rng::Rng::new(0xA11A);
+        for k in [1usize, 7, 8, 9, 31, 64, 130] {
+            let x: Vec<f32> = (0..k).map(|_| rng.normal() as f32 * 3.0).collect();
+            let mut qs = vec![0u8; k];
+            let mut qv = vec![0u8; k];
+            let ss = super::super::quant::quantize_row_scalar(&x, &mut qs);
+            let sv = unsafe { quantize_row_avx2(&x, &mut qv) };
+            assert_eq!(ss.to_bits(), sv.to_bits(), "scale mismatch at k={k}");
+            assert_eq!(qs, qv, "codes mismatch at k={k}");
+        }
+        // all-zero row: both arms emit the bias code and a zero scale
+        let zeros = vec![0.0f32; 13];
+        let mut qs = vec![0u8; 13];
+        let mut qv = vec![0u8; 13];
+        assert_eq!(super::super::quant::quantize_row_scalar(&zeros, &mut qs), 0.0);
+        assert_eq!(unsafe { quantize_row_avx2(&zeros, &mut qv) }, 0.0);
+        assert_eq!(qs, qv);
+        assert!(qs.iter().all(|&q| q == 128));
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_q8_gemm_is_bitwise_identical_to_scalar() {
+        if !has_avx2_fma() {
+            return;
+        }
+        let mut rng = crate::util::rng::Rng::new(0x0808);
+        for &(m, k, n) in &[(1usize, 3usize, 1usize), (2, 32, 5), (3, 37, 9), (4, 96, 70)] {
+            let bt: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+            let w = QuantMat::from_bt(&bt, n, k);
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let mut aq = vec![0u8; m * k];
+            let mut ascale = vec![0.0f32; m];
+            for i in 0..m {
+                ascale[i] =
+                    super::super::quant::quantize_row_scalar(&a[i * k..(i + 1) * k], &mut aq[i * k..(i + 1) * k]);
+            }
+            let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            for with_bias in [false, true] {
+                let b = if with_bias { Some(bias.as_slice()) } else { None };
+                let mut want = vec![0.0f32; m * n];
+                super::super::quant::gemm_bt_q8_scalar(&aq, &ascale, &w, b, &mut want, m, k, n);
+                let mut got = vec![0.0f32; m * n];
+                unsafe { gemm_bt_q8_avx2(&aq, &ascale, &w, b, &mut got, m, k, n) };
+                assert_eq!(
+                    want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "q8 arms diverged at ({m},{k},{n})"
+                );
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_gelu_matches_scalar_gelu() {
+        if !has_avx2_fma() {
+            return;
+        }
+        let mut rng = crate::util::rng::Rng::new(0x6E1);
+        for len in [1usize, 7, 8, 9, 40, 257] {
+            let xs: Vec<f32> = (0..len).map(|_| rng.normal() as f32 * 4.0).collect();
+            let mut got = xs.clone();
+            unsafe { gelu_avx2(&mut got) };
+            for (x, g) in xs.iter().zip(&got) {
+                let want = gelu(*x);
+                assert!(
+                    (g - want).abs() <= 2e-5 * (1.0 + want.abs()),
+                    "gelu({x}) = {g}, want {want}"
+                );
+            }
+        }
+    }
+}

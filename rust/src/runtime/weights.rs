@@ -1,14 +1,24 @@
 //! Weight blob loader.
 //!
-//! Format written by `python/compile/aot.py::write_weights`:
+//! Format written by `python/compile/aot.py::write_weights` (v1) and
+//! `RawWeights::to_blob{,_q8}` (v1/v2):
 //!
 //! ```text
 //! b"DMUXW1\n"  |  u32 header_len (LE)  |  json header  |  raw f32 data
+//! b"DMUXW2\n"  |  u32 header_len (LE)  |  json header  |  mixed data
 //! ```
 //!
 //! The header lists tensors **in the jax pytree flatten order**, which is
 //! exactly the parameter order of the lowered HLO — the runtime uploads
 //! them in this order and appends the ids input last.
+//!
+//! `DMUXW2` extends v1 with per-tensor `dtype` of `"i8"`: the payload is
+//! int8 codes (still in the tensor's row-major shape order), and the
+//! entry carries `scales_offset`/`scales_nbytes` pointing at f32
+//! per-output-channel scales (one per column of the 2-D tensor, since
+//! the blob layout is `(in, out)`). int8 regions are padded to 4-byte
+//! alignment before the next f32 region. `DMUXW1` files — all-f32, no
+//! padding — parse exactly as before.
 
 use std::path::Path;
 
@@ -16,7 +26,31 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
 
-const MAGIC: &[u8] = b"DMUXW1\n";
+const MAGIC_V1: &[u8] = b"DMUXW1\n";
+const MAGIC_V2: &[u8] = b"DMUXW2\n";
+
+/// On-disk element type of one tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I8,
+}
+
+impl Dtype {
+    pub fn bytes(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::I8 => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::I8 => "i8",
+        }
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct TensorMeta {
@@ -24,6 +58,10 @@ pub struct TensorMeta {
     pub shape: Vec<usize>,
     pub offset: usize,
     pub nbytes: usize,
+    pub dtype: Dtype,
+    /// Byte offset of the f32 per-output-channel scales (i8 tensors only).
+    pub scales_offset: usize,
+    pub scales_nbytes: usize,
 }
 
 #[derive(Debug)]
@@ -40,10 +78,15 @@ impl WeightsFile {
     }
 
     pub fn parse(mut bytes: Vec<u8>) -> Result<Self> {
-        if bytes.len() < MAGIC.len() + 4 || &bytes[..MAGIC.len()] != MAGIC {
-            bail!("not a DMUXW1 weights file");
+        if bytes.len() < MAGIC_V1.len() + 4 {
+            bail!("not a DMUXW1/DMUXW2 weights file");
         }
-        let hl_off = MAGIC.len();
+        let v2 = match &bytes[..MAGIC_V1.len()] {
+            m if m == MAGIC_V1 => false,
+            m if m == MAGIC_V2 => true,
+            _ => bail!("not a DMUXW1/DMUXW2 weights file"),
+        };
+        let hl_off = MAGIC_V1.len();
         let header_len =
             u32::from_le_bytes(bytes[hl_off..hl_off + 4].try_into().unwrap()) as usize;
         let hdr_start = hl_off + 4;
@@ -67,10 +110,12 @@ impl WeightsFile {
                 .iter()
                 .filter_map(Json::as_usize)
                 .collect();
-            let dtype = t.get("dtype").and_then(Json::as_str).unwrap_or("f32");
-            if dtype != "f32" {
-                bail!("unsupported tensor dtype {dtype}");
-            }
+            let dtype = match t.get("dtype").and_then(Json::as_str).unwrap_or("f32") {
+                "f32" => Dtype::F32,
+                "i8" if v2 => Dtype::I8,
+                "i8" => bail!("int8 tensors require the DMUXW2 format revision"),
+                other => bail!("unsupported tensor dtype {other}"),
+            };
             let meta = TensorMeta {
                 name: t
                     .get("name")
@@ -86,10 +131,27 @@ impl WeightsFile {
                     .get("nbytes")
                     .and_then(Json::as_usize)
                     .ok_or_else(|| anyhow!("tensor missing nbytes"))?,
+                dtype,
+                scales_offset: t.get("scales_offset").and_then(Json::as_usize).unwrap_or(0),
+                scales_nbytes: t.get("scales_nbytes").and_then(Json::as_usize).unwrap_or(0),
             };
             let elems: usize = meta.shape.iter().product::<usize>().max(1);
-            if elems * 4 != meta.nbytes {
+            if elems * meta.dtype.bytes() != meta.nbytes {
                 bail!("tensor {} shape/nbytes mismatch", meta.name);
+            }
+            if meta.dtype == Dtype::I8 {
+                if meta.shape.len() != 2 {
+                    bail!("int8 tensor {} must be 2-D (got {:?})", meta.name, meta.shape);
+                }
+                if meta.scales_nbytes != meta.shape[1] * 4 {
+                    bail!(
+                        "int8 tensor {} needs {} scale bytes (one f32 per output \
+                         channel), header says {}",
+                        meta.name,
+                        meta.shape[1] * 4,
+                        meta.scales_nbytes
+                    );
+                }
             }
             tensors.push(meta);
         }
@@ -99,17 +161,46 @@ impl WeightsFile {
         // the data section alive at once — 2x peak RSS on load.
         bytes.drain(..data_start);
         let data = bytes;
-        let total: usize = tensors.iter().map(|t| t.nbytes).sum();
-        if data.len() != total {
-            bail!("weights data length {} != header total {}", data.len(), total);
+        if v2 {
+            // v2 interleaves i8 payloads, alignment padding, and scale
+            // arrays, so the sum-of-nbytes invariant no longer holds;
+            // instead require the data section to end exactly at (or
+            // within one padding word of) the furthest declared region.
+            let max_end = tensors
+                .iter()
+                .flat_map(|t| {
+                    [t.offset + t.nbytes, t.scales_offset + t.scales_nbytes]
+                })
+                .max()
+                .unwrap_or(0);
+            if data.len() < max_end || data.len() - max_end >= 4 {
+                bail!("weights data length {} inconsistent with header end {}", data.len(), max_end);
+            }
+        } else {
+            let total: usize = tensors.iter().map(|t| t.nbytes).sum();
+            if data.len() != total {
+                bail!("weights data length {} != header total {}", data.len(), total);
+            }
         }
         for t in &tensors {
-            if t.offset % 4 != 0 || t.offset + t.nbytes > data.len() {
+            let aligned = t.dtype != Dtype::F32 || t.offset % 4 == 0;
+            if !aligned || t.offset + t.nbytes > data.len() {
                 bail!(
                     "tensor {} range {}..{} invalid for data length {}",
                     t.name,
                     t.offset,
                     t.offset + t.nbytes,
+                    data.len()
+                );
+            }
+            if t.dtype == Dtype::I8
+                && (t.scales_offset % 4 != 0 || t.scales_offset + t.scales_nbytes > data.len())
+            {
+                bail!(
+                    "tensor {} scales range {}..{} invalid for data length {}",
+                    t.name,
+                    t.scales_offset,
+                    t.scales_offset + t.scales_nbytes,
                     data.len()
                 );
             }
@@ -120,6 +211,9 @@ impl WeightsFile {
     /// Owned f32 copy of one tensor's data.
     pub fn tensor_f32(&self, idx: usize) -> Result<Vec<f32>> {
         let t = self.tensors.get(idx).ok_or_else(|| anyhow!("tensor index {idx} oob"))?;
+        if t.dtype != Dtype::F32 {
+            bail!("tensor {} is {}, not f32", t.name, t.dtype.name());
+        }
         let raw = &self.data[t.offset..t.offset + t.nbytes];
         Ok(raw
             .chunks_exact(4)
@@ -137,6 +231,9 @@ impl WeightsFile {
     /// [`tensor_f32`](Self::tensor_f32).
     pub fn tensor_f32_view(&self, idx: usize) -> Result<&[f32]> {
         let t = self.tensors.get(idx).ok_or_else(|| anyhow!("tensor index {idx} oob"))?;
+        if t.dtype != Dtype::F32 {
+            bail!("tensor {} is {}, not f32", t.name, t.dtype.name());
+        }
         let raw = &self.data[t.offset..t.offset + t.nbytes];
         // SAFETY: every f32 bit pattern is valid; align_to hands back
         // non-empty prefix/suffix only when the allocation is unaligned,
@@ -148,12 +245,40 @@ impl WeightsFile {
         Ok(mid)
     }
 
+    /// Zero-copy int8 view of a `DMUXW2` quantized tensor's codes.
+    pub fn tensor_i8_view(&self, idx: usize) -> Result<&[i8]> {
+        let t = self.tensors.get(idx).ok_or_else(|| anyhow!("tensor index {idx} oob"))?;
+        if t.dtype != Dtype::I8 {
+            bail!("tensor {} is {}, not i8", t.name, t.dtype.name());
+        }
+        let raw = &self.data[t.offset..t.offset + t.nbytes];
+        // SAFETY: i8 and u8 have identical layout and every bit pattern
+        // is valid; the range was validated at parse time.
+        Ok(unsafe { std::slice::from_raw_parts(raw.as_ptr() as *const i8, raw.len()) })
+    }
+
+    /// The per-output-channel f32 scales of a quantized tensor.
+    pub fn tensor_scales(&self, idx: usize) -> Result<&[f32]> {
+        let t = self.tensors.get(idx).ok_or_else(|| anyhow!("tensor index {idx} oob"))?;
+        if t.dtype != Dtype::I8 {
+            bail!("tensor {} is {}, has no scales", t.name, t.dtype.name());
+        }
+        let raw = &self.data[t.scales_offset..t.scales_offset + t.scales_nbytes];
+        // SAFETY: as in tensor_f32_view.
+        let (pre, mid, post) = unsafe { raw.align_to::<f32>() };
+        if !pre.is_empty() || !post.is_empty() {
+            bail!("weights allocation is not 4-byte aligned");
+        }
+        Ok(mid)
+    }
+
     pub fn total_bytes(&self) -> usize {
         self.data.len()
     }
 
+    /// Logical parameter count (independent of on-disk precision).
     pub fn param_count(&self) -> usize {
-        self.data.len() / 4
+        self.tensors.iter().map(|t| t.shape.iter().product::<usize>().max(1)).sum()
     }
 }
 
@@ -167,10 +292,33 @@ mod tests {
             {"name": "b", "shape": [3], "dtype": "f32", "offset": 16, "nbytes": 12}
         ]}"#;
         let mut bytes = Vec::new();
-        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(MAGIC_V1);
         bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
         bytes.extend_from_slice(header);
         for v in [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        bytes
+    }
+
+    /// v2 file: one (2, 3) int8 tensor (+ padding + 3 scales), then a
+    /// (2,) f32 tensor.
+    fn sample_file_v2() -> Vec<u8> {
+        let header = br#"{"tensors": [
+            {"name": "q", "shape": [2, 3], "dtype": "i8", "offset": 0, "nbytes": 6,
+             "scales_offset": 8, "scales_nbytes": 12},
+            {"name": "b", "shape": [2], "dtype": "f32", "offset": 20, "nbytes": 8}
+        ]}"#;
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC_V2);
+        bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(header);
+        bytes.extend_from_slice(&[1i8 as u8, 2, 3, (-4i8) as u8, 5, 63]); // codes
+        bytes.extend_from_slice(&[0u8; 2]); // pad to 4
+        for s in [0.5f32, 0.25, 2.0] {
+            bytes.extend_from_slice(&s.to_le_bytes());
+        }
+        for v in [9.0f32, 10.0] {
             bytes.extend_from_slice(&v.to_le_bytes());
         }
         bytes
@@ -181,6 +329,7 @@ mod tests {
         let w = WeightsFile::parse(sample_file()).unwrap();
         assert_eq!(w.tensors.len(), 2);
         assert_eq!(w.tensors[0].shape, vec![2, 2]);
+        assert_eq!(w.tensors[0].dtype, Dtype::F32);
         assert_eq!(w.tensor_f32(0).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
         assert_eq!(w.tensor_f32(1).unwrap(), vec![5.0, 6.0, 7.0]);
         assert_eq!(w.param_count(), 7);
@@ -196,12 +345,50 @@ mod tests {
     }
 
     #[test]
+    fn parses_v2_int8_tensors_with_scales() {
+        let w = WeightsFile::parse(sample_file_v2()).unwrap();
+        assert_eq!(w.tensors[0].dtype, Dtype::I8);
+        assert_eq!(w.tensor_i8_view(0).unwrap(), &[1, 2, 3, -4, 5, 63]);
+        assert_eq!(w.tensor_scales(0).unwrap(), &[0.5, 0.25, 2.0]);
+        assert_eq!(w.tensor_f32(1).unwrap(), vec![9.0, 10.0]);
+        // logical param count ignores precision: 6 + 2
+        assert_eq!(w.param_count(), 8);
+        // dtype-mismatched accessors refuse rather than mis-read
+        assert!(w.tensor_f32(0).is_err());
+        assert!(w.tensor_f32_view(0).is_err());
+        assert!(w.tensor_i8_view(1).is_err());
+        assert!(w.tensor_scales(1).is_err());
+    }
+
+    #[test]
+    fn rejects_int8_under_v1_magic() {
+        let mut bytes = sample_file_v2();
+        bytes[..MAGIC_V1.len()].copy_from_slice(MAGIC_V1);
+        let err = WeightsFile::parse(bytes).unwrap_err().to_string();
+        assert!(err.contains("DMUXW2"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn rejects_v2_scales_out_of_range() {
+        let header = br#"{"tensors": [
+            {"name": "q", "shape": [2, 3], "dtype": "i8", "offset": 0, "nbytes": 6,
+             "scales_offset": 8, "scales_nbytes": 12}
+        ]}"#;
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC_V2);
+        bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(header);
+        bytes.extend_from_slice(&[0u8; 8]); // codes + pad, but no scales
+        assert!(WeightsFile::parse(bytes).is_err());
+    }
+
+    #[test]
     fn rejects_out_of_range_tensor_offsets() {
         let header = br#"{"tensors": [
             {"name": "a", "shape": [2, 2], "dtype": "f32", "offset": 8, "nbytes": 16}
         ]}"#;
         let mut bytes = Vec::new();
-        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(MAGIC_V1);
         bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
         bytes.extend_from_slice(header);
         bytes.extend_from_slice(&[0u8; 16]);
@@ -229,7 +416,7 @@ mod tests {
             {"name": "a", "shape": [2, 3], "dtype": "f32", "offset": 0, "nbytes": 16}
         ]}"#;
         let mut bytes = Vec::new();
-        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(MAGIC_V1);
         bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
         bytes.extend_from_slice(header);
         bytes.extend_from_slice(&[0u8; 16]);

@@ -12,7 +12,7 @@ use std::sync::Arc;
 use datamux::coordinator::request::argmax;
 use datamux::coordinator::scheduler::MuxTemplate;
 use datamux::coordinator::server::{Server, ServerConfig};
-use datamux::runtime::native::{reference, synthetic_meta, RawWeights};
+use datamux::runtime::native::{reference, synthetic_meta, Precision, RawWeights};
 use datamux::runtime::{default_artifacts_dir, ArtifactManifest, WeightsFile};
 use datamux::tokenizer::{default_vocab, Tokenizer};
 use datamux::util::json::Json;
@@ -377,6 +377,110 @@ fn native_matches_artifact_parity_blobs() {
     if checked == 0 {
         eprintln!("skipping: no native-servable parity artifacts found");
     }
+}
+
+/// Property: the int8 quantized forward tracks the f32 forward across
+/// random models and **every bucket length**. Two bounds, two twin
+/// models per case:
+///
+/// * on the plain random model, the max absolute int8-vs-f32 logit
+///   error stays within `0.08 * (1 + max |logit_f32|)` — quantization
+///   noise scaled to the logit range;
+/// * on a twin whose head biases are inflated (class margins dwarf
+///   quantization noise, as a trained head's do), argmax predictions
+///   agree ≥ 99.5% aggregated over the whole run.
+///
+/// The int8 backend loads a **DMUXW2** blob (`to_blob_q8`) while the
+/// f32 backend loads the unchanged v1 blob — so this also pins that
+/// both format revisions keep loading side by side.
+#[test]
+fn prop_int8_forward_tracks_f32_at_every_bucket() {
+    let mut total = 0usize;
+    let mut agree = 0usize;
+    datamux::util::proptest::check("int8 vs f32 native forward", 6, |g| {
+        let n_heads = [1usize, 2][g.rng.below(2)];
+        let d_model = n_heads * 8;
+        let n_layers = g.rng.range(1, 3);
+        let n_mux = g.rng.range(1, 4);
+        let batch = g.rng.range(1, 3);
+        let seq_len_max = g.rng.range(4, 9);
+        let n_classes = g.rng.range(2, 5);
+        let task = if g.rng.below(2) == 0 { "cls" } else { "token" };
+        let seed = g.rng.next_u64();
+        let meta = synthetic_meta(
+            task, n_mux, batch, seq_len_max, d_model, n_layers, n_heads, n_classes,
+        );
+        let mut raw = RawWeights::random(&meta, 2 * d_model, seed);
+        let build = |raw: &RawWeights, precision: Precision| -> Result<NativeBackend, String> {
+            let blob = match precision {
+                Precision::F32 => raw.to_blob(),
+                Precision::Int8 => raw.to_blob_q8(),
+            };
+            let wf = WeightsFile::parse(blob).map_err(|e| e.to_string())?;
+            NativeBackend::from_weights_prec(meta.clone(), wf, precision)
+                .map_err(|e| e.to_string())
+        };
+        let bf = build(&raw, Precision::F32)?;
+        let bq = build(&raw, Precision::Int8)?;
+        for bucket in 1..=seq_len_max {
+            let li = n_mux + bucket;
+            let ids: Vec<i32> = (0..batch * n_mux * li)
+                .map(|_| g.rng.below(meta.vocab_size) as i32)
+                .collect();
+            let lf = bf.run_ids_at(&ids, bucket).map_err(|e| e.to_string())?;
+            let lq = bq.run_ids_at(&ids, bucket).map_err(|e| e.to_string())?;
+            if lf.len() != lq.len() {
+                return Err(format!(
+                    "bucket {bucket}: int8 length {} != f32 {}",
+                    lq.len(),
+                    lf.len()
+                ));
+            }
+            let allowed = 0.08 * (1.0 + lf.iter().fold(0.0f32, |m, x| m.max(x.abs())));
+            for i in 0..lf.len() {
+                if (lf[i] - lq[i]).abs() > allowed {
+                    return Err(format!(
+                        "task {task} d={d_model} l={n_layers} n={n_mux} b={batch} \
+                         bucket={bucket}: logit {i} f32 {} vs int8 {} (allowed {allowed})",
+                        lf[i], lq[i]
+                    ));
+                }
+            }
+        }
+        // argmax twin: a trained head separates classes by margins far
+        // above quantization noise — model that by inflating the head
+        // biases, then require near-perfect prediction agreement
+        for (name, _, data) in raw.tensors.iter_mut() {
+            if name == "head_cls/b" || name == "head_token/b" {
+                for v in data.iter_mut() {
+                    *v = (g.rng.normal() * 55.0) as f32;
+                }
+            }
+        }
+        let bf = build(&raw, Precision::F32)?;
+        let bq = build(&raw, Precision::Int8)?;
+        for bucket in 1..=seq_len_max {
+            let li = n_mux + bucket;
+            let ids: Vec<i32> = (0..batch * n_mux * li)
+                .map(|_| g.rng.below(meta.vocab_size) as i32)
+                .collect();
+            let lf = bf.run_ids_at(&ids, bucket).map_err(|e| e.to_string())?;
+            let lq = bq.run_ids_at(&ids, bucket).map_err(|e| e.to_string())?;
+            for (gf, gq) in lf.chunks_exact(n_classes).zip(lq.chunks_exact(n_classes)) {
+                total += 1;
+                if argmax(gf) == argmax(gq) {
+                    agree += 1;
+                }
+            }
+        }
+        Ok(())
+    });
+    assert!(total > 0, "the property must have scored predictions");
+    let ratio = agree as f64 / total as f64;
+    assert!(
+        ratio >= 0.995,
+        "int8 argmax agreement {agree}/{total} = {ratio:.4} < 0.995"
+    );
 }
 
 /// Same blob, same ids, different thread counts: bitwise identical —
