@@ -1,0 +1,494 @@
+//! Shard-failover soak: a [`ShardRouter`] over three real `datamux
+//! serve` **child processes**, driven by a trace replay with a mid-run
+//! SIGKILL and a later restart of one shard.
+//!
+//! The trace models an MNLI-like classification stream: bimodal lengths
+//! (~70% short rows in the 16-token bucket, ~30% long rows in the
+//! 64-token bucket), bursty arrivals (fixed-size bursts on a fixed
+//! period), and a 20% high-priority slice carrying a 250 ms deadline.
+//!
+//! Timeline: warm -> SIGKILL shard 1 -> soak through the outage
+//! (closed-loop high-tier probes measure client-observed latency while
+//! the pool is degraded) -> restart shard 1 on the same port -> the
+//! half-open probe re-adopts it.
+//!
+//! Three gates make the bench (and the CI job) **exit non-zero**:
+//!
+//! 1. **zero_lost_across_kill** — every request the router admitted
+//!    resolves to exactly one typed answer, and every successful answer
+//!    carries the class the fake model assigns to that exact row (no
+//!    crossed wires through failover).
+//! 2. **high_p99_within_slo_during_failover** — closed-loop high-tier
+//!    probes stay under the SLO budget while a third of the pool is
+//!    dead.
+//! 3. **killed_shard_readopted** — after the restart the breaker closes
+//!    again and the returned shard serves traffic.
+//!
+//! Results go to `BENCH_shards.json` at the repo root.
+//!
+//!   cargo bench --bench shard_failover            # full
+//!   cargo bench --bench shard_failover -- --quick # CI-sized
+
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use datamux::coordinator::{
+    InferenceRequest, Placement, Priority, ShardConfig, ShardRouter, ShardState,
+};
+use datamux::util::bench::Table;
+use datamux::util::json::{num, obj, s, Json};
+use datamux::util::rng::Rng;
+use datamux::{FakeBackend, RequestHandle, Submit};
+
+const N_SHARDS: usize = 3;
+const KILLED: usize = 1;
+const SEQ_LEN: usize = 64;
+const N_CLASSES: usize = 3;
+const EXEC_DELAY_MS: u64 = 2;
+const HIGH_DEADLINE_MS: u64 = 250;
+/// Client-observed p99 budget for high-tier probes during the outage.
+const HIGH_SLO_MS: f64 = 150.0;
+const BURST: usize = 8;
+const BURST_PERIOD_MS: f64 = 25.0;
+const PROBE_THREADS: usize = 2;
+
+// ------------------------------------------------------------- shard procs
+
+/// One backend shard as a real child process (`datamux serve --backend
+/// fake`), killable with SIGKILL and restartable on the same port.
+struct ShardProc {
+    child: Option<Child>,
+}
+
+impl ShardProc {
+    fn spawn(addr: &str) -> anyhow::Result<ShardProc> {
+        let child = Command::new(env!("CARGO_BIN_EXE_datamux"))
+            .args([
+                "--cmd",
+                "serve",
+                "--backend",
+                "fake",
+                "--addr",
+                addr,
+                "--fake-seq-len",
+                "64",
+                "--fake-classes",
+                "3",
+                "--fake-n",
+                "2",
+                "--fake-delay-ms",
+                "2",
+                "--buckets",
+                "16,64",
+                "--max-wait-ms",
+                "1",
+                "--queue-cap",
+                "4096",
+                "--max-connections",
+                "16",
+            ])
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()?;
+        let t0 = Instant::now();
+        while TcpStream::connect(addr).is_err() {
+            anyhow::ensure!(
+                t0.elapsed() < Duration::from_secs(15),
+                "shard {addr} did not start listening"
+            );
+            thread::sleep(Duration::from_millis(25));
+        }
+        Ok(ShardProc { child: Some(child) })
+    }
+
+    /// SIGKILL: no drain, no goodbye — the crash the failover path is for.
+    fn kill(&mut self) {
+        if let Some(mut c) = self.child.take() {
+            c.kill().ok();
+            c.wait().ok();
+        }
+    }
+}
+
+impl Drop for ShardProc {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// Pick `n` distinct free ports (bind, read, release).
+fn free_addrs(n: usize) -> Vec<String> {
+    let listeners: Vec<TcpListener> =
+        (0..n).map(|_| TcpListener::bind("127.0.0.1:0").expect("bind :0")).collect();
+    listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect()
+}
+
+// ------------------------------------------------------------------ trace
+
+struct TraceEvent {
+    due: Duration,
+    row: Vec<i32>,
+    high: bool,
+}
+
+/// Bimodal bursty trace: bursts of [`BURST`] requests every
+/// [`BURST_PERIOD_MS`], rows ~70% short (16-token bucket) / ~30% long
+/// (64-token bucket), 20% high priority. Seeded — the same trace
+/// replays identically run to run.
+fn build_trace(seed: u64, duration: Duration) -> Vec<TraceEvent> {
+    let mut rng = Rng::new(seed);
+    let bursts = (duration.as_secs_f64() * 1e3 / BURST_PERIOD_MS) as usize;
+    let mut trace = Vec::with_capacity(bursts * BURST);
+    for b in 0..bursts {
+        let due = Duration::from_secs_f64(b as f64 * BURST_PERIOD_MS / 1e3);
+        for _ in 0..BURST {
+            let content_len =
+                if rng.bool(0.7) { rng.range(3, 13) } else { rng.range(20, SEQ_LEN - 2) };
+            let mut row = Vec::with_capacity(content_len + 2);
+            row.push(1); // [CLS]
+            for _ in 0..content_len {
+                row.push(44 + rng.below(200) as i32);
+            }
+            row.push(2); // [SEP]
+            trace.push(TraceEvent { due, row, high: rng.bool(0.2) });
+        }
+    }
+    trace
+}
+
+struct Admitted {
+    expected: usize,
+    handle: RequestHandle,
+}
+
+/// Open-loop replay on its own thread: pace by the trace clock, submit
+/// everything, hand the handles back for the zero-lost audit.
+fn replay(
+    router: Arc<ShardRouter>,
+    trace: Vec<TraceEvent>,
+    t0: Instant,
+) -> (Vec<Admitted>, usize) {
+    let mut admitted = Vec::with_capacity(trace.len());
+    let mut refused = 0usize;
+    for ev in trace {
+        let due = t0 + ev.due;
+        let now = Instant::now();
+        if due > now {
+            thread::sleep(due - now);
+        }
+        let expected = FakeBackend::expected_class(&ev.row, N_CLASSES);
+        let mut req = InferenceRequest::classify_framed(ev.row);
+        if ev.high {
+            req = req
+                .with_priority(Priority::High)
+                .with_deadline(Duration::from_millis(HIGH_DEADLINE_MS));
+        }
+        match router.submit(req) {
+            Ok(handle) => admitted.push(Admitted { expected, handle }),
+            Err(_) => refused += 1,
+        }
+    }
+    (admitted, refused)
+}
+
+// ------------------------------------------------------------- SLO probes
+
+struct ProbeReport {
+    samples: Vec<f64>,
+    failures: usize,
+}
+
+/// Closed-loop high-tier probe: submit one request, wait for its own
+/// answer, record the client-observed wall time. Runs only while the
+/// pool is degraded — this *is* the "p99 during failover" measurement.
+fn probe_loop(router: Arc<ShardRouter>, stop: Arc<AtomicBool>, out: Arc<Mutex<ProbeReport>>) {
+    let row = vec![1, 50, 60, 70, 2];
+    while !stop.load(Ordering::Acquire) {
+        let req = InferenceRequest::classify_framed(row.clone())
+            .with_priority(Priority::High)
+            .with_deadline(Duration::from_millis(HIGH_DEADLINE_MS));
+        let t = Instant::now();
+        let outcome = router.submit(req).ok().and_then(|h| h.wait_timeout(Duration::from_secs(2)));
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        let mut r = out.lock().unwrap();
+        match outcome {
+            Some(Ok(_)) => r.samples.push(ms),
+            _ => r.failures += 1,
+        }
+        drop(r);
+        thread::sleep(Duration::from_millis(2));
+    }
+}
+
+fn p99(samples: &mut [f64]) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_by(f64::total_cmp);
+    samples[((samples.len() as f64 * 0.99) as usize).min(samples.len() - 1)]
+}
+
+// ------------------------------------------------------------------- main
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (warm, down, post) = if quick {
+        (Duration::from_millis(1000), Duration::from_millis(1500), Duration::from_millis(1000))
+    } else {
+        (Duration::from_secs(3), Duration::from_secs(4), Duration::from_secs(3))
+    };
+    let total = warm + down + post;
+
+    let addrs = free_addrs(N_SHARDS);
+    let mut shards: Vec<ShardProc> = Vec::with_capacity(N_SHARDS);
+    for a in &addrs {
+        shards.push(ShardProc::spawn(a)?);
+    }
+    println!("{N_SHARDS} shard processes up: {addrs:?}");
+
+    let router = Arc::new(ShardRouter::connect(
+        ShardConfig::new(addrs.clone())
+            .placement(Placement::RoundRobin)
+            .probe_interval(Duration::from_millis(50))
+            .probe_timeout(Duration::from_millis(250))
+            .backoff(Duration::from_millis(50), Duration::from_millis(400))
+            .connect_timeout(Duration::from_millis(500))
+            .hop_timeout(Duration::from_secs(5)),
+    )?);
+
+    let trace = build_trace(7, total);
+    let offered = trace.len();
+    println!(
+        "trace: {offered} requests over {:.1}s (bursts of {BURST} / {BURST_PERIOD_MS}ms, \
+         70/30 short/long, 20% high@{HIGH_DEADLINE_MS}ms)",
+        total.as_secs_f64()
+    );
+
+    // replay the whole timeline on a driver thread; orchestrate the
+    // kill and restart from here on the same clock
+    let t0 = Instant::now();
+    let driver = {
+        let router = router.clone();
+        thread::spawn(move || replay(router, trace, t0))
+    };
+
+    // --- warm, then SIGKILL one shard mid-stream ------------------------
+    thread::sleep(warm.saturating_sub(t0.elapsed()));
+    shards[KILLED].kill();
+    let killed_at = Instant::now();
+    println!("killed shard {KILLED} ({}) at t={:.2}s", addrs[KILLED], t0.elapsed().as_secs_f64());
+
+    // closed-loop high-tier probes across the outage window
+    let stop = Arc::new(AtomicBool::new(false));
+    let report = Arc::new(Mutex::new(ProbeReport { samples: Vec::new(), failures: 0 }));
+    let probes: Vec<_> = (0..PROBE_THREADS)
+        .map(|_| {
+            let (r, st, rep) = (router.clone(), stop.clone(), report.clone());
+            thread::spawn(move || probe_loop(r, st, rep))
+        })
+        .collect();
+
+    thread::sleep((warm + down).saturating_sub(t0.elapsed()));
+    stop.store(true, Ordering::Release);
+    for p in probes {
+        p.join().ok();
+    }
+
+    // --- restart the shard on the same port; wait for re-adoption -------
+    shards[KILLED] = ShardProc::spawn(&addrs[KILLED])?;
+    let restarted_at = Instant::now();
+    println!("restarted shard {KILLED} at t={:.2}s", t0.elapsed().as_secs_f64());
+    let mut readopt_ms = -1.0;
+    let give_up = Instant::now() + Duration::from_secs(10);
+    while Instant::now() < give_up {
+        if router.shard_status()[KILLED].state == ShardState::Closed {
+            readopt_ms = restarted_at.elapsed().as_secs_f64() * 1e3;
+            break;
+        }
+        thread::sleep(Duration::from_millis(20));
+    }
+
+    let (admitted, refused) = driver.join().expect("driver thread");
+
+    // the returned shard must serve again: push a burst and watch its
+    // completed counter move
+    let completed_before = router.shard_status()[KILLED].completed;
+    let mut tail = Vec::new();
+    for i in 0..50 {
+        let row = vec![1, 44 + (i % 100), 2];
+        tail.push(router.submit(InferenceRequest::classify_framed(row))?);
+    }
+    for h in &tail {
+        let _ = h.wait_timeout(Duration::from_secs(5));
+    }
+    let served_after_return = router.shard_status()[KILLED].completed - completed_before;
+
+    // --- audit: nothing admitted is lost, nothing crossed wires ---------
+    let (mut ok, mut failed_typed, mut wrong, mut unresolved) = (0usize, 0usize, 0usize, 0usize);
+    for a in &admitted {
+        match a.handle.wait_timeout(Duration::from_secs(15)) {
+            Some(Ok(resp)) => {
+                if resp.pred_class() == a.expected {
+                    ok += 1;
+                } else {
+                    wrong += 1;
+                }
+            }
+            Some(Err(_)) => failed_typed += 1,
+            None => unresolved += 1,
+        }
+    }
+    let status = router.shard_status();
+    let failovers: u64 = status.iter().map(|sh| sh.failovers).sum();
+    let mut rep = Arc::try_unwrap(report).ok().expect("probes joined").into_inner().unwrap();
+    let probe_p99_ms = p99(&mut rep.samples);
+
+    let mut t = Table::new("shard failover soak", &["metric", "value"]);
+    for (k, v) in [
+        ("offered", offered.to_string()),
+        ("admitted", admitted.len().to_string()),
+        ("refused at admission", refused.to_string()),
+        ("ok (correct class)", ok.to_string()),
+        ("failed typed", failed_typed.to_string()),
+        ("wrong class", wrong.to_string()),
+        ("unresolved", unresolved.to_string()),
+        ("failovers", failovers.to_string()),
+        ("outage probes", rep.samples.len().to_string()),
+        ("outage probe failures", rep.failures.to_string()),
+        ("outage high p99 ms", format!("{probe_p99_ms:.1}")),
+        ("readopt ms after restart", format!("{readopt_ms:.0}")),
+        ("served after return", served_after_return.to_string()),
+    ] {
+        t.row(&[k.to_string(), v]);
+    }
+    t.print();
+
+    drop(router); // shut the pool down before the children die
+
+    // ----- gates --------------------------------------------------------
+    let zero_lost = unresolved == 0 && wrong == 0 && !admitted.is_empty();
+    let slo_gate = rep.failures == 0 && !rep.samples.is_empty() && probe_p99_ms <= HIGH_SLO_MS;
+    let readopted = readopt_ms >= 0.0 && served_after_return > 0;
+
+    let result = obj(vec![
+        ("schema", s("shard_failover/v1")),
+        ("quick", Json::Bool(quick)),
+        (
+            "config",
+            obj(vec![
+                ("n_shards", num(N_SHARDS as f64)),
+                ("seq_len", num(SEQ_LEN as f64)),
+                ("n_classes", num(N_CLASSES as f64)),
+                ("exec_delay_ms", num(EXEC_DELAY_MS as f64)),
+                ("burst", num(BURST as f64)),
+                ("burst_period_ms", num(BURST_PERIOD_MS)),
+                ("high_deadline_ms", num(HIGH_DEADLINE_MS as f64)),
+                ("high_slo_ms", num(HIGH_SLO_MS)),
+                ("warm_s", num(warm.as_secs_f64())),
+                ("down_s", num(down.as_secs_f64())),
+                ("post_s", num(post.as_secs_f64())),
+            ]),
+        ),
+        (
+            "soak",
+            obj(vec![
+                ("offered", num(offered as f64)),
+                ("admitted", num(admitted.len() as f64)),
+                ("refused", num(refused as f64)),
+                ("ok", num(ok as f64)),
+                ("failed_typed", num(failed_typed as f64)),
+                ("wrong_class", num(wrong as f64)),
+                ("unresolved", num(unresolved as f64)),
+                ("failovers", num(failovers as f64)),
+            ]),
+        ),
+        (
+            "outage",
+            obj(vec![
+                ("probe_samples", num(rep.samples.len() as f64)),
+                ("probe_failures", num(rep.failures as f64)),
+                ("high_p99_ms", num(probe_p99_ms)),
+                ("window_s", num(restarted_at.duration_since(killed_at).as_secs_f64())),
+            ]),
+        ),
+        (
+            "recovery",
+            obj(vec![
+                ("readopt_ms", num(readopt_ms)),
+                ("served_after_return", num(served_after_return as f64)),
+            ]),
+        ),
+        (
+            "shards",
+            Json::Arr(
+                status
+                    .iter()
+                    .map(|sh| {
+                        obj(vec![
+                            ("addr", s(&sh.addr)),
+                            ("state", s(sh.state.as_str())),
+                            ("probes", num(sh.probes as f64)),
+                            ("probe_failures", num(sh.probe_failures as f64)),
+                            ("failovers", num(sh.failovers as f64)),
+                            ("completed", num(sh.completed as f64)),
+                            ("ewma_rtt_us", num(sh.ewma_rtt_us)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "gates",
+            obj(vec![
+                ("zero_lost_across_kill", Json::Bool(zero_lost)),
+                ("high_p99_within_slo_during_failover", Json::Bool(slo_gate)),
+                ("killed_shard_readopted", Json::Bool(readopted)),
+            ]),
+        ),
+    ]);
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate sits one level below the repo root");
+    let path = root.join("BENCH_shards.json");
+    std::fs::write(&path, result.to_pretty())?;
+
+    // self-check: the file must exist, parse, and carry results
+    let written = std::fs::read_to_string(&path)?;
+    let parsed = Json::parse(&written).map_err(|e| anyhow::anyhow!("reparse: {e}"))?;
+    anyhow::ensure!(
+        parsed.get("soak").and_then(|x| x.get("unresolved")).is_some()
+            && parsed.get("outage").and_then(|x| x.get("high_p99_ms")).is_some(),
+        "BENCH_shards.json is missing results"
+    );
+    println!("\nwrote {}", path.display());
+
+    anyhow::ensure!(
+        zero_lost,
+        "zero-lost gate failed: {unresolved} unresolved, {wrong} wrong-class of {} admitted \
+         — every admitted request must resolve to exactly one correct typed answer",
+        admitted.len()
+    );
+    anyhow::ensure!(
+        slo_gate,
+        "failover SLO gate failed: high p99 {probe_p99_ms:.1}ms (budget {HIGH_SLO_MS}ms), \
+         {} probe failures of {} samples while a shard was down",
+        rep.failures,
+        rep.samples.len()
+    );
+    anyhow::ensure!(
+        readopted,
+        "re-adoption gate failed: readopt_ms={readopt_ms:.0} served_after_return=\
+         {served_after_return} — the restarted shard must be probed back into rotation"
+    );
+    println!(
+        "gates OK: {}/{} admitted answered correctly across a SIGKILL; outage high p99 \
+         {probe_p99_ms:.1}ms; shard re-adopted in {readopt_ms:.0}ms",
+        ok,
+        admitted.len()
+    );
+    Ok(())
+}

@@ -198,6 +198,11 @@ pub enum SubmitError {
     /// work ahead of its class and the engine's measured drain rate —
     /// shed fast at admission instead of expiring in the queue
     Overloaded,
+    /// no backend shard can take the request: every shard's breaker is
+    /// open (or half-open, still probing). Returned *fast* by the shard
+    /// router instead of hanging on dead connections — the caller can
+    /// retry with backoff or fail over to another front
+    Unavailable,
     /// the engine has stopped accepting requests
     Shutdown,
 }
@@ -213,6 +218,7 @@ impl SubmitError {
             SubmitError::WrongTask { .. } => "wrong_task",
             SubmitError::Expired => "expired",
             SubmitError::Overloaded => "overloaded",
+            SubmitError::Unavailable => "unavailable",
             SubmitError::Shutdown => "shutdown",
         }
     }
@@ -238,6 +244,9 @@ impl std::fmt::Display for SubmitError {
             SubmitError::Expired => write!(f, "deadline already expired at submit"),
             SubmitError::Overloaded => {
                 write!(f, "deadline cannot be met at current load (shed at admission)")
+            }
+            SubmitError::Unavailable => {
+                write!(f, "no shard available (all breakers open); retry with backoff")
             }
             SubmitError::Shutdown => write!(f, "engine is shut down"),
         }
@@ -274,6 +283,53 @@ pub struct LaneStatus {
     pub completed: u64,
     /// per-bucket waves/entries, aligned with [`Submit::buckets`]
     pub buckets: Vec<BucketStatus>,
+}
+
+/// Breaker state of one backend shard, as seen by the shard router's
+/// health machinery (see `coordinator/shards.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardState {
+    /// healthy: taking traffic, probed on the regular interval
+    Closed,
+    /// failed: no traffic; the next half-open probe is scheduled with
+    /// seeded-jitter exponential backoff
+    Open,
+    /// probing: one reconnect+STATS attempt in flight; success closes
+    /// the breaker, failure re-opens it with a doubled delay
+    HalfOpen,
+}
+
+impl ShardState {
+    /// Wire name (v2 STATS `shards[].state`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ShardState::Closed => "closed",
+            ShardState::Open => "open",
+            ShardState::HalfOpen => "half_open",
+        }
+    }
+}
+
+/// Health and progress of one backend shard, as reported by
+/// [`Submit::shard_status`]. Engines that are not shard routers report
+/// an empty list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardStatus {
+    /// backend address (`host:port`)
+    pub addr: String,
+    pub state: ShardState,
+    /// health probes sent to this shard
+    pub probes: u64,
+    /// probes that timed out or failed (each one trips the breaker)
+    pub probe_failures: u64,
+    /// in-flight requests resubmitted *off* this shard when it died
+    pub failovers: u64,
+    /// requests currently awaiting a reply from this shard
+    pub in_flight: usize,
+    /// requests this shard answered
+    pub completed: u64,
+    /// EWMA of probe/request round-trip time (us); 0 until first sample
+    pub ewma_rtt_us: f64,
 }
 
 /// Per-priority-class serving status, as reported by
@@ -337,6 +393,11 @@ pub trait Submit: Send + Sync {
     /// The model's maximum sequence length (the terminal bucket).
     fn seq_len(&self) -> usize;
 
+    /// Output classes of the served task head (cls: per sentence,
+    /// token: per position). Surfaced in the v2 STATS `model` block so
+    /// a shard router can reconstruct typed [`Response`]s client-side.
+    fn n_classes(&self) -> usize;
+
     /// The sequence-length buckets this engine executes, ascending; the
     /// last is always [`Submit::seq_len`]. A pad-to-max engine reports
     /// the single terminal bucket.
@@ -367,6 +428,12 @@ pub trait Submit: Send + Sync {
     /// Per-priority-class depth/progress/shedding (one entry per
     /// [`Priority`], highest first). Default: no class detail.
     fn class_status(&self) -> Vec<ClassStatus> {
+        Vec::new()
+    }
+
+    /// Per-shard breaker/health detail (one entry per backend shard for
+    /// a shard router, in configured order). Default: not sharded.
+    fn shard_status(&self) -> Vec<ShardStatus> {
         Vec::new()
     }
 
@@ -434,6 +501,7 @@ mod tests {
             },
             SubmitError::Expired,
             SubmitError::Overloaded,
+            SubmitError::Unavailable,
             SubmitError::Shutdown,
         ];
         let codes: std::collections::HashSet<_> = errs.iter().map(|e| e.code()).collect();
@@ -456,6 +524,13 @@ mod tests {
             Payload::Framed(ids) => assert_eq!(ids, vec![1, 2]),
             _ => panic!("expected framed"),
         }
+    }
+
+    #[test]
+    fn shard_state_wire_names_are_distinct() {
+        let states = [ShardState::Closed, ShardState::Open, ShardState::HalfOpen];
+        let names: std::collections::HashSet<_> = states.iter().map(|s| s.as_str()).collect();
+        assert_eq!(names.len(), states.len());
     }
 
     #[test]

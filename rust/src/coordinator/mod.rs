@@ -35,10 +35,12 @@ pub mod buckets;
 pub mod dispatch;
 pub mod engine;
 pub mod policy;
+pub mod pool;
 pub mod reactor;
 pub mod request;
 pub mod scheduler;
 pub mod server;
+pub mod shards;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -53,15 +55,18 @@ use crate::util::threadpool::{Channel, OnceCellSync, TrySendError};
 
 pub use api::{
     BucketStatus, ClassStatus, CompletionItem, CompletionQueue, InferenceRequest, LaneStatus,
-    Payload, Priority, Submit, SubmitError, TaskKind, N_PRIORITY_CLASSES,
+    Payload, Priority, ShardState, ShardStatus, Submit, SubmitError, TaskKind,
+    N_PRIORITY_CLASSES,
 };
 pub use batcher::{BatcherConfig, ExecBatch};
 pub use buckets::{BucketQueues, Buckets};
 pub use dispatch::{DispatchState, Lane};
 pub use engine::EngineBuilder;
 pub use policy::{AdaptiveN, SlotPolicy};
+pub use pool::{FaultInjector, FaultPlan};
 pub use request::{EngineError, LogitsView, Request, RequestHandle, Response};
 pub use scheduler::{ClassTally, MuxTemplate, SharedModel, Stats};
+pub use shards::{Placement, ShardConfig, ShardRouter};
 
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
@@ -265,6 +270,7 @@ pub struct MuxCoordinator {
     pub tokenizer: Tokenizer,
     pub n_mux: usize,
     pub seq_len: usize,
+    n_classes: usize,
     buckets: Buckets,
     task: TaskKind,
     /// captured at start: the backend's one-line self-description
@@ -371,6 +377,7 @@ impl MuxCoordinator {
             tokenizer,
             n_mux,
             seq_len,
+            n_classes: meta.n_classes,
             buckets,
             task,
             backend_desc,
@@ -528,6 +535,10 @@ impl Submit for MuxCoordinator {
         self.seq_len
     }
 
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
     fn buckets(&self) -> Vec<usize> {
         self.buckets.lens().to_vec()
     }
@@ -615,6 +626,7 @@ pub struct MuxRouter {
     pub stats: Arc<Stats>,
     tokenizer: Tokenizer,
     seq_len: usize,
+    n_classes: usize,
     buckets: Buckets,
     task: TaskKind,
     /// one description per lane backend, captured at start and ascending
@@ -679,6 +691,7 @@ impl MuxRouter {
             stats: Arc::new(Stats::default()),
             tokenizer,
             seq_len: m0.seq_len,
+            n_classes: m0.n_classes,
             buckets,
             task,
             backend_descs,
@@ -837,6 +850,10 @@ impl Submit for MuxRouter {
 
     fn seq_len(&self) -> usize {
         self.seq_len
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
     }
 
     fn buckets(&self) -> Vec<usize> {

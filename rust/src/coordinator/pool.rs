@@ -1,0 +1,863 @@
+//! Protocol-v2 client connection pool: the transport under
+//! [`super::shards::ShardRouter`].
+//!
+//! One [`ShardConn`] per backend shard: a blocking `TcpStream` writer
+//! (line-JSON v2 requests with pool-chosen numeric ids) plus one reader
+//! thread that reassembles reply lines ([`LineAssembler`]) and routes
+//! each reply to its waiter **exactly once** through a shared in-flight
+//! map — removal from the map is the only door to a completion, so a
+//! reply, a failover drain, and a shutdown can race without ever
+//! double-fulfilling or stranding a request.
+//!
+//! A [`FaultInjector`] can be layered into every pool I/O operation
+//! (env- or builder-configured, seeded LCG) for deterministic chaos
+//! testing: refuse connects, delay writes, split frames across writes,
+//! garble a frame byte, or drop the connection mid-frame. Every fault
+//! collapses into one of two recoverable outcomes — a typed error reply
+//! or a dead connection — both of which the router's failover machinery
+//! already handles, which is exactly the property CI asserts.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::framed::LineAssembler;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::metrics::Histogram;
+use crate::util::threadpool::Channel;
+
+use super::api::{Priority, TaskKind};
+use super::request::{Completion, EngineError, LogitsView, Response};
+
+// ---------------------------------------------------------------------------
+// fault injection
+// ---------------------------------------------------------------------------
+
+/// Chaos configuration for the pool's I/O layer. All probabilities are
+/// per-operation in `[0, 1]`; the stream of decisions is drawn from a
+/// seeded LCG, so a fixed seed reproduces the exact same fault schedule.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// refuse a connect attempt (the client-side mirror of a backend
+    /// refusing accepts)
+    pub refuse_connect: f64,
+    /// drop the connection mid-frame: write half the request bytes,
+    /// then shut the socket down
+    pub drop_conn: f64,
+    /// sleep up to `max_delay` before a write
+    pub delay_write: f64,
+    pub max_delay: Duration,
+    /// split a request frame across two writes with a pause between
+    pub split_write: f64,
+    /// overwrite one request byte with `0x01` — depending on where it
+    /// lands the server answers a typed error or an uncorrelatable
+    /// `bad_json`, which poisons the connection (failover path)
+    pub garble: f64,
+}
+
+impl FaultPlan {
+    /// No faults (the production default).
+    pub fn disabled() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            refuse_connect: 0.0,
+            drop_conn: 0.0,
+            delay_write: 0.0,
+            max_delay: Duration::ZERO,
+            split_write: 0.0,
+            garble: 0.0,
+        }
+    }
+
+    /// Mild-but-mean defaults for a given seed: every fault class fires,
+    /// none so often that the system cannot make progress.
+    pub fn chaos(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            refuse_connect: 0.10,
+            drop_conn: 0.02,
+            delay_write: 0.05,
+            max_delay: Duration::from_millis(5),
+            split_write: 0.20,
+            garble: 0.01,
+        }
+    }
+
+    /// `DATAMUX_FAULT_SEED=<n>` enables [`FaultPlan::chaos`] with that
+    /// seed; unset or unparsable means no faults.
+    pub fn from_env() -> FaultPlan {
+        match std::env::var("DATAMUX_FAULT_SEED").ok().and_then(|v| v.parse::<u64>().ok()) {
+            Some(seed) => FaultPlan::chaos(seed),
+            None => FaultPlan::disabled(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.refuse_connect > 0.0
+            || self.drop_conn > 0.0
+            || self.delay_write > 0.0
+            || self.split_write > 0.0
+            || self.garble > 0.0
+    }
+}
+
+/// What the injector decided for one write.
+struct WriteFx {
+    delay: Option<Duration>,
+    split_at: Option<usize>,
+    garble_at: Option<usize>,
+    drop_mid_frame: bool,
+}
+
+/// Deterministic fault source shared by every connection of one router.
+pub struct FaultInjector {
+    plan: FaultPlan,
+    /// LCG state (Knuth MMIX constants)
+    state: Mutex<u64>,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        let seed = plan.seed;
+        FaultInjector {
+            plan,
+            state: Mutex::new(
+                seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407),
+            ),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.plan.enabled()
+    }
+
+    fn next_f64(&self) -> f64 {
+        let mut st = self.state.lock().unwrap();
+        *st = st.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        (*st >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    fn roll(&self, p: f64) -> bool {
+        p > 0.0 && self.next_f64() < p
+    }
+
+    /// Should this connect attempt be refused?
+    pub fn refuse_connect(&self) -> bool {
+        self.roll(self.plan.refuse_connect)
+    }
+
+    fn write_fx(&self, frame_len: usize) -> WriteFx {
+        if !self.enabled() {
+            return WriteFx { delay: None, split_at: None, garble_at: None, drop_mid_frame: false };
+        }
+        let delay = self
+            .roll(self.plan.delay_write)
+            .then(|| self.plan.max_delay.mul_f64(self.next_f64()));
+        // never split at 0 or len (that would be a plain write), and
+        // never garble the trailing newline (framing must survive)
+        let split_at = (frame_len > 2 && self.roll(self.plan.split_write))
+            .then(|| 1 + (self.next_f64() * (frame_len - 2) as f64) as usize);
+        let garble_at = (frame_len > 1 && self.roll(self.plan.garble))
+            .then(|| (self.next_f64() * (frame_len - 1) as f64) as usize);
+        let drop_mid_frame = self.roll(self.plan.drop_conn);
+        WriteFx { delay, split_at, garble_at, drop_mid_frame }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// in-flight tracking
+// ---------------------------------------------------------------------------
+
+/// A request the pool has written to a shard and not yet answered.
+/// Carries everything needed to resubmit it to a surviving shard with
+/// its *remaining* deadline budget on failover.
+pub(crate) struct PoolRequest {
+    pub content: Vec<i32>,
+    pub task: TaskKind,
+    pub priority: Priority,
+    pub bucket: usize,
+    /// absolute deadline (the client's total budget — never extended)
+    pub deadline: Option<Instant>,
+    pub submitted: Instant,
+    pub resubmits: u32,
+    pub done: Completion,
+}
+
+/// One slot in a connection's in-flight map.
+pub(crate) enum Entry {
+    /// a health probe (v2 STATS); answered by updating shard RTT/liveness
+    Probe { sent: Instant },
+    Req(Box<PoolRequest>),
+}
+
+pub(crate) type InFlightMap = Arc<Mutex<HashMap<u64, Entry>>>;
+
+/// Liveness/progress counters for one shard, shared between its
+/// connection reader, the router's submit path, and the monitor thread.
+#[derive(Default)]
+pub(crate) struct ShardShared {
+    pub probes: AtomicU64,
+    pub probe_failures: AtomicU64,
+    pub failovers: AtomicU64,
+    pub completed: AtomicU64,
+    /// requests that ended in `DeadlineExceeded` on this shard
+    pub expired: AtomicU64,
+    pub in_flight: AtomicU64,
+    /// front-observed end-to-end latency of requests answered here
+    pub e2e: Histogram,
+    /// f64 bits of the RTT EWMA in microseconds (0 until first sample)
+    ewma_rtt_us_bits: AtomicU64,
+}
+
+impl ShardShared {
+    pub fn note_rtt(&self, rtt: Duration) {
+        let us = rtt.as_secs_f64() * 1e6;
+        let old = f64::from_bits(self.ewma_rtt_us_bits.load(Ordering::Relaxed));
+        let new = if old == 0.0 { us } else { 0.8 * old + 0.2 * us };
+        self.ewma_rtt_us_bits.store(new.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn ewma_rtt_us(&self) -> f64 {
+        f64::from_bits(self.ewma_rtt_us_bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Events the connection readers push to the router's monitor thread.
+pub(crate) enum PoolEvent {
+    /// the shard's connection died; `orphans` are its unanswered
+    /// requests, to be resubmitted to surviving shards
+    ConnDown { shard: usize, generation: u64, orphans: Vec<PoolRequest> },
+    /// the shard answered with a retryable error (its queue was full /
+    /// it is shutting down): place the request on another shard
+    Retry { shard: usize, req: Box<PoolRequest> },
+}
+
+// ---------------------------------------------------------------------------
+// wire formatting / parsing
+// ---------------------------------------------------------------------------
+
+/// Serialize a pool request into a v2 line (no trailing newline).
+/// `deadline_ms` is the *remaining* budget the shard is given — the
+/// caller computes it from the absolute deadline minus the RTT margin.
+pub(crate) fn request_json(id: u64, req: &PoolRequest, deadline_ms: Option<f64>) -> Json {
+    let mut fields = vec![
+        ("id", num(id as f64)),
+        ("op", s(req.task.as_str())),
+        ("ids", arr(req.content.iter().map(|&t| num(t as f64)))),
+        ("priority", s(req.priority.as_str())),
+        // always fetch logits: the front fabricates a full typed
+        // Response (pred_class/pred_tokens/logits) from the reply
+        ("logits", Json::Bool(true)),
+    ];
+    if let Some(ms) = deadline_ms {
+        fields.push(("deadline_ms", num(ms)));
+    }
+    obj(fields)
+}
+
+pub(crate) fn probe_json(id: u64) -> Json {
+    obj(vec![("id", num(id as f64)), ("op", s("stats"))])
+}
+
+/// Model shape learned from a shard's v2 STATS handshake.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) struct ModelInfo {
+    pub task: TaskKind,
+    pub seq_len: usize,
+    pub n_classes: usize,
+    pub vocab_size: usize,
+    pub buckets: Vec<usize>,
+}
+
+impl ModelInfo {
+    pub fn parse(stats_reply: &Json) -> Result<ModelInfo> {
+        let m = stats_reply
+            .get("stats")
+            .and_then(|st| st.get("model"))
+            .ok_or_else(|| anyhow!("shard STATS reply has no stats.model block"))?;
+        let task_str = m.get("task").and_then(Json::as_str).unwrap_or("");
+        let task = match task_str {
+            "classify" => TaskKind::Classify,
+            "tag" => TaskKind::TagTokens,
+            other => return Err(anyhow!("shard serves unknown task '{other}'")),
+        };
+        Ok(ModelInfo {
+            task,
+            seq_len: m
+                .get("seq_len")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("model block missing seq_len"))?,
+            n_classes: m
+                .get("n_classes")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("model block missing n_classes"))?,
+            vocab_size: m
+                .get("vocab_size")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("model block missing vocab_size"))?,
+            buckets: m
+                .get("buckets")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// Build a typed [`Response`] from a successful v2 reply. Falls back to
+/// one-hot logits synthesized from `pred`/`tags` if the shard did not
+/// return logits (it always should — the pool asks for them).
+fn response_from_reply(id: u64, v: &Json, req: &PoolRequest, n_classes: usize) -> Response {
+    let slot = v.get("slot").and_then(Json::as_usize).unwrap_or(0);
+    let group = v.get("group").and_then(Json::as_i64).unwrap_or(0) as u64;
+    let logits: Vec<f32> = match v.get("logits").and_then(Json::as_arr) {
+        Some(a) if !a.is_empty() => {
+            a.iter().map(|x| x.as_f64().unwrap_or(0.0) as f32).collect()
+        }
+        _ => {
+            let mut one_hot = |class: usize, out: &mut Vec<f32>| {
+                let mut row = vec![0.0f32; n_classes];
+                if class < n_classes {
+                    row[class] = 1.0;
+                }
+                out.extend_from_slice(&row);
+            };
+            let mut out = Vec::new();
+            if let Some(tags) = v.get("tags").and_then(Json::as_arr) {
+                for t in tags {
+                    one_hot(t.as_usize().unwrap_or(0), &mut out);
+                }
+            } else {
+                one_hot(v.get("pred").and_then(Json::as_usize).unwrap_or(0), &mut out);
+            }
+            out
+        }
+    };
+    Response {
+        id,
+        slot,
+        group,
+        logits: LogitsView::from_vec(logits),
+        n_classes,
+        // front-observed end-to-end latency (includes the shard hop)
+        latency: req.submitted.elapsed(),
+    }
+}
+
+/// Route one reply line to its waiter. Returns `false` when the line
+/// poisons the connection (unparsable, or an uncorrelatable reply — the
+/// caller must kill the connection so its in-flight requests fail over).
+///
+/// Factored free of sockets so the frame-reassembly proptest can drive
+/// it directly with arbitrarily split/merged/interleaved reply streams.
+pub(crate) fn route_reply(
+    line: &str,
+    shard: usize,
+    map: &InFlightMap,
+    shared: &ShardShared,
+    events: &Channel<PoolEvent>,
+    n_classes: usize,
+) -> bool {
+    let v = match Json::parse(line) {
+        Ok(v) => v,
+        Err(_) => return false,
+    };
+    let Some(id) = v.get("id").and_then(Json::as_f64).filter(|f| *f >= 0.0).map(|f| f as u64)
+    else {
+        // a null/absent id cannot be correlated (e.g. the server's
+        // bad_json answer to a garbled frame): the only safe move is to
+        // drop the connection and resubmit everything in flight on it
+        return false;
+    };
+    let entry = map.lock().unwrap().remove(&id);
+    let Some(entry) = entry else {
+        return true; // late reply for a request already failed over
+    };
+    match entry {
+        Entry::Probe { sent } => {
+            shared.note_rtt(sent.elapsed());
+            true
+        }
+        Entry::Req(req) => {
+            shared.in_flight.fetch_sub(1, Ordering::Relaxed);
+            if v.get("ok").and_then(Json::as_bool) == Some(true) {
+                let elapsed = req.submitted.elapsed();
+                shared.note_rtt(elapsed);
+                shared.e2e.record_duration(elapsed);
+                shared.completed.fetch_add(1, Ordering::Relaxed);
+                let resp = response_from_reply(id, &v, &req, n_classes);
+                req.done.fulfill(Ok(resp));
+                return true;
+            }
+            let code = v.get("error").and_then(Json::as_str).unwrap_or("").to_string();
+            let msg = v.get("message").and_then(Json::as_str).unwrap_or("").to_string();
+            match code.as_str() {
+                "expired" | "deadline" => {
+                    shared.expired.fetch_add(1, Ordering::Relaxed);
+                    req.done.fulfill(Err(EngineError::DeadlineExceeded));
+                }
+                // transient shard-side conditions: place elsewhere. If
+                // the router is shutting down the channel is closed and
+                // the dropped completion fails typed (Shutdown).
+                "queue_full" | "overloaded" | "shutdown" | "unavailable" => {
+                    let _ = events.try_send(PoolEvent::Retry { shard, req });
+                }
+                _ => req
+                    .done
+                    .fulfill(Err(EngineError::WorkerFailed(format!("shard error {code}: {msg}")))),
+            }
+            true
+        }
+    }
+}
+
+/// Drain every in-flight entry of a dying connection: probes are
+/// dropped, requests become failover orphans.
+pub(crate) fn drain_orphans(map: &InFlightMap, shared: &ShardShared) -> Vec<PoolRequest> {
+    let entries: Vec<Entry> = {
+        let mut m = map.lock().unwrap();
+        m.drain().map(|(_, e)| e).collect()
+    };
+    let mut orphans = Vec::new();
+    for e in entries {
+        if let Entry::Req(r) = e {
+            shared.in_flight.fetch_sub(1, Ordering::Relaxed);
+            orphans.push(*r);
+        }
+    }
+    orphans
+}
+
+// ---------------------------------------------------------------------------
+// one live connection
+// ---------------------------------------------------------------------------
+
+/// A live v2 connection to one shard: locked writer + reader thread.
+pub(crate) struct ShardConn {
+    pub generation: u64,
+    /// writer half (the reader thread owns a separate clone)
+    writer: Mutex<TcpStream>,
+    /// handle for shutdown (same underlying socket as `writer`)
+    sock: TcpStream,
+    pub map: InFlightMap,
+    dead: AtomicBool,
+    reader: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl ShardConn {
+    /// Wrap an already-handshaken stream and start its reader thread.
+    pub fn start(
+        shard: usize,
+        generation: u64,
+        stream: TcpStream,
+        shared: Arc<ShardShared>,
+        events: Channel<PoolEvent>,
+        n_classes: usize,
+    ) -> Result<Arc<ShardConn>> {
+        let reader_stream = stream.try_clone().context("cloning shard stream")?;
+        let conn = Arc::new(ShardConn {
+            generation,
+            writer: Mutex::new(stream.try_clone().context("cloning shard stream")?),
+            sock: stream,
+            map: Arc::default(),
+            dead: AtomicBool::new(false),
+            reader: Mutex::new(None),
+        });
+        let c = conn.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("datamux-shard-{shard}-rx"))
+            .spawn(move || {
+                c.read_loop(reader_stream, shard, &shared, &events, n_classes);
+                c.dead.store(true, Ordering::Release);
+                let orphans = drain_orphans(&c.map, &shared);
+                let _ = events.try_send(PoolEvent::ConnDown {
+                    shard,
+                    generation: c.generation,
+                    orphans,
+                });
+            })?;
+        *conn.reader.lock().unwrap() = Some(handle);
+        Ok(conn)
+    }
+
+    fn read_loop(
+        &self,
+        mut stream: TcpStream,
+        shard: usize,
+        shared: &ShardShared,
+        events: &Channel<PoolEvent>,
+        n_classes: usize,
+    ) {
+        let mut asm = LineAssembler::new(1 << 22); // replies can carry logits
+        let mut buf = [0u8; 16 * 1024];
+        let mut lines: Vec<String> = Vec::new();
+        loop {
+            let n = match stream.read(&mut buf) {
+                Ok(0) | Err(_) => return,
+                Ok(n) => n,
+            };
+            if asm.feed(&buf[..n], &mut lines).is_err() {
+                return; // oversized reply: framing no longer trusted
+            }
+            for line in lines.drain(..) {
+                if line.is_empty() {
+                    continue;
+                }
+                if !route_reply(&line, shard, &self.map, shared, events, n_classes) {
+                    self.shutdown_now();
+                    return;
+                }
+            }
+        }
+    }
+
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::Acquire)
+    }
+
+    /// Force the connection down; the reader exits and drains orphans.
+    pub fn shutdown_now(&self) {
+        self.dead.store(true, Ordering::Release);
+        let _ = self.sock.shutdown(Shutdown::Both);
+    }
+
+    /// Write one request/probe line, with fault injection. An `Err`
+    /// means the connection is unusable (the caller fails over).
+    pub fn send_line(&self, json: &Json, fault: &FaultInjector) -> std::io::Result<()> {
+        let mut frame = json.to_string().into_bytes();
+        frame.push(b'\n');
+        let fx = fault.write_fx(frame.len());
+        if let Some(d) = fx.delay {
+            std::thread::sleep(d);
+        }
+        if let Some(i) = fx.garble_at {
+            frame[i] = 0x01;
+        }
+        let mut w = self.writer.lock().unwrap();
+        if fx.drop_mid_frame {
+            // write half a frame, then kill the socket: the server sees
+            // a truncated line, the reader exits, failover resubmits
+            let _ = w.write_all(&frame[..frame.len() / 2]);
+            drop(w);
+            self.shutdown_now();
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::ConnectionAborted,
+                "fault injection dropped the connection mid-frame",
+            ));
+        }
+        match fx.split_at {
+            Some(i) => {
+                w.write_all(&frame[..i])?;
+                w.flush()?;
+                std::thread::sleep(Duration::from_micros(50));
+                w.write_all(&frame[i..])?;
+            }
+            None => w.write_all(&frame)?,
+        }
+        w.flush()
+    }
+
+    pub fn join(&self) {
+        if let Some(h) = self.reader.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Connect to a shard and learn its model shape via a STATS handshake.
+/// Fault injection can refuse the connect (chaos "refused accept").
+pub(crate) fn connect_handshake(
+    addr: &str,
+    timeout: Duration,
+    fault: &FaultInjector,
+) -> Result<(TcpStream, ModelInfo)> {
+    if fault.refuse_connect() {
+        return Err(anyhow!("fault injection refused connect to {addr}"));
+    }
+    let sock_addr = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {addr}"))?
+        .next()
+        .ok_or_else(|| anyhow!("no address for {addr}"))?;
+    let stream = TcpStream::connect_timeout(&sock_addr, timeout)
+        .with_context(|| format!("connecting {addr}"))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(timeout)).context("set handshake timeout")?;
+    let mut w = stream.try_clone().context("cloning handshake stream")?;
+    w.write_all(b"{\"id\":0,\"op\":\"stats\"}\n").context("handshake write")?;
+    w.flush().ok();
+    // read exactly one reply line under the handshake timeout
+    let mut line = Vec::new();
+    let mut byte = [0u8; 1];
+    let mut r = stream.try_clone().context("cloning handshake stream")?;
+    loop {
+        match r.read(&mut byte) {
+            Ok(0) => return Err(anyhow!("{addr} closed during handshake")),
+            Ok(_) if byte[0] == b'\n' => break,
+            Ok(_) => {
+                line.push(byte[0]);
+                if line.len() > 1 << 20 {
+                    return Err(anyhow!("{addr} handshake reply too large"));
+                }
+            }
+            Err(e) => return Err(anyhow!("{addr} handshake read: {e}")),
+        }
+    }
+    let text = String::from_utf8_lossy(&line);
+    let v = Json::parse(&text).map_err(|e| anyhow!("{addr} handshake parse: {e}"))?;
+    let info = ModelInfo::parse(&v).with_context(|| format!("handshaking {addr}"))?;
+    stream.set_read_timeout(None).ok();
+    Ok((stream, info))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::RequestHandle;
+    use crate::util::proptest::check;
+    use crate::util::threadpool::OnceCellSync;
+
+    fn mk_req(done: Completion) -> Box<PoolRequest> {
+        Box::new(PoolRequest {
+            content: vec![1, 45, 2],
+            task: TaskKind::Classify,
+            priority: Priority::Normal,
+            bucket: 0,
+            deadline: None,
+            submitted: Instant::now(),
+            resubmits: 0,
+            done,
+        })
+    }
+
+    fn register(map: &InFlightMap, shared: &ShardShared, id: u64) -> RequestHandle {
+        let cell = OnceCellSync::new();
+        let handle = RequestHandle { id, deadline: None, done: cell.clone() };
+        map.lock().unwrap().insert(id, Entry::Req(mk_req(Completion::cell(cell))));
+        shared.in_flight.fetch_add(1, Ordering::Relaxed);
+        handle
+    }
+
+    fn ok_reply(id: u64, pred: usize) -> String {
+        let logits: Vec<&str> =
+            (0..3).map(|i| if i == pred { "9.0" } else { "0.0" }).collect();
+        format!(
+            "{{\"id\":{id},\"ok\":true,\"pred\":{pred},\"slot\":1,\"group\":9,\
+             \"us\":12,\"logits\":[{}]}}",
+            logits.join(",")
+        )
+    }
+
+    #[test]
+    fn reply_routes_to_the_right_waiter_with_typed_payload() {
+        let map: InFlightMap = Arc::default();
+        let shared = ShardShared::default();
+        let events: Channel<PoolEvent> = Channel::bounded(8);
+        let h7 = register(&map, &shared, 7);
+        let h8 = register(&map, &shared, 8);
+        assert!(route_reply(&ok_reply(8, 1), 0, &map, &shared, &events, 3));
+        let r = h8.wait().expect("id 8 answered");
+        assert_eq!(r.pred_class(), 1);
+        assert_eq!(r.slot, 1);
+        assert_eq!(r.n_classes, 3);
+        assert!(h7.wait_timeout(Duration::from_millis(10)).is_none(), "id 7 still waiting");
+        assert!(route_reply(&ok_reply(7, 0), 0, &map, &shared, &events, 3));
+        assert_eq!(h7.wait().expect("id 7 answered").pred_class(), 0);
+        assert_eq!(shared.completed.load(Ordering::Relaxed), 2);
+        assert_eq!(shared.in_flight.load(Ordering::Relaxed), 0);
+        assert!(map.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn error_replies_map_to_typed_outcomes() {
+        let map: InFlightMap = Arc::default();
+        let shared = ShardShared::default();
+        let events: Channel<PoolEvent> = Channel::bounded(8);
+        // deadline error -> DeadlineExceeded
+        let h = register(&map, &shared, 1);
+        assert!(route_reply(
+            r#"{"id":1,"ok":false,"error":"deadline","message":"m"}"#,
+            0,
+            &map,
+            &shared,
+            &events,
+            3
+        ));
+        assert_eq!(h.wait(), Err(EngineError::DeadlineExceeded));
+        // queue_full -> retry event, not a completion
+        let h = register(&map, &shared, 2);
+        assert!(route_reply(
+            r#"{"id":2,"ok":false,"error":"queue_full","message":"m"}"#,
+            4,
+            &map,
+            &shared,
+            &events,
+            3
+        ));
+        match events.try_recv() {
+            Some(PoolEvent::Retry { shard: 4, .. }) => {}
+            _ => panic!("expected a Retry event"),
+        }
+        assert!(h.wait_timeout(Duration::from_millis(10)).is_none(), "not answered yet");
+        // unknown code -> WorkerFailed
+        let h = register(&map, &shared, 3);
+        assert!(route_reply(
+            r#"{"id":3,"ok":false,"error":"worker_failed","message":"boom"}"#,
+            0,
+            &map,
+            &shared,
+            &events,
+            3
+        ));
+        match h.wait() {
+            Err(EngineError::WorkerFailed(m)) => assert!(m.contains("boom"), "{m}"),
+            other => panic!("expected WorkerFailed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn uncorrelatable_replies_poison_the_connection() {
+        let map: InFlightMap = Arc::default();
+        let shared = ShardShared::default();
+        let events: Channel<PoolEvent> = Channel::bounded(8);
+        let _h = register(&map, &shared, 1);
+        assert!(!route_reply("{not json", 0, &map, &shared, &events, 3));
+        assert!(
+            !route_reply(r#"{"id":null,"ok":false,"error":"bad_json"}"#, 0, &map, &shared, &events, 3),
+            "a null id cannot be correlated"
+        );
+        // an unknown-but-valid id is a late reply after failover: ignored
+        assert!(route_reply(&ok_reply(999, 0), 0, &map, &shared, &events, 3));
+        assert_eq!(map.lock().unwrap().len(), 1, "the waiter is untouched");
+    }
+
+    #[test]
+    fn drained_orphans_preserve_their_requests() {
+        let map: InFlightMap = Arc::default();
+        let shared = ShardShared::default();
+        let _h1 = register(&map, &shared, 1);
+        let _h2 = register(&map, &shared, 2);
+        map.lock().unwrap().insert(3, Entry::Probe { sent: Instant::now() });
+        let orphans = drain_orphans(&map, &shared);
+        assert_eq!(orphans.len(), 2, "probes are not orphans");
+        assert_eq!(shared.in_flight.load(Ordering::Relaxed), 0);
+        assert!(map.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn request_json_carries_remaining_budget_and_logits() {
+        let req = mk_req(Completion::cell(OnceCellSync::new()));
+        let j = request_json(42, &req, Some(123.5));
+        let text = j.to_string();
+        assert!(text.contains("\"id\":42"), "{text}");
+        assert!(text.contains("\"deadline_ms\":123.5"), "{text}");
+        assert!(text.contains("\"logits\":true"), "{text}");
+        assert!(text.contains("\"op\":\"classify\""), "{text}");
+        let j = request_json(1, &req, None);
+        assert!(!j.to_string().contains("deadline_ms"), "no budget -> no field");
+        // defuse the test requests' completions (synchronous error path)
+        let mut r = req;
+        r.done.defuse();
+    }
+
+    #[test]
+    fn fault_injector_is_deterministic_per_seed() {
+        let a = FaultInjector::new(FaultPlan::chaos(99));
+        let b = FaultInjector::new(FaultPlan::chaos(99));
+        let seq_a: Vec<bool> = (0..64).map(|_| a.refuse_connect()).collect();
+        let seq_b: Vec<bool> = (0..64).map(|_| b.refuse_connect()).collect();
+        assert_eq!(seq_a, seq_b);
+        assert!(seq_a.iter().any(|&x| x), "10% over 64 draws should fire");
+        assert!(!seq_a.iter().all(|&x| x));
+        let off = FaultInjector::new(FaultPlan::disabled());
+        assert!((0..256).all(|_| !off.refuse_connect()));
+        assert!(!off.enabled());
+    }
+
+    #[test]
+    fn fault_plan_from_env_parses_seed() {
+        // env mutation is process-global: run both cases in one test
+        std::env::set_var("DATAMUX_FAULT_SEED", "1234");
+        let p = FaultPlan::from_env();
+        assert!(p.enabled());
+        assert_eq!(p.seed, 1234);
+        std::env::remove_var("DATAMUX_FAULT_SEED");
+        assert!(!FaultPlan::from_env().enabled());
+    }
+
+    /// Satellite: client-side v2 frame reassembly. Replies arrive
+    /// arbitrarily split/merged across reads and interleaved out of
+    /// order; every reply must reach the right waiter exactly once, and
+    /// an oversized line must poison the stream, not truncate-and-parse.
+    #[test]
+    fn proptest_reply_reassembly_routes_exactly_once() {
+        check("pool_frame_reassembly", 60, |g| {
+            let n = g.sized(24);
+            let map: InFlightMap = Arc::default();
+            let shared = ShardShared::default();
+            let events: Channel<PoolEvent> = Channel::bounded(64);
+            let handles: Vec<RequestHandle> =
+                (0..n as u64).map(|id| register(&map, &shared, id)).collect();
+            // out-of-order replies, each predicting its own id % 3
+            let mut order: Vec<u64> = (0..n as u64).collect();
+            let mut rng = g.rng.split();
+            rng.shuffle(&mut order);
+            let mut stream = String::new();
+            for id in &order {
+                stream.push_str(&ok_reply(*id, (*id % 3) as usize));
+                stream.push('\n');
+            }
+            // feed in arbitrary fragments
+            let bytes = stream.as_bytes();
+            let mut asm = LineAssembler::new(1 << 16);
+            let mut lines = Vec::new();
+            let mut at = 0usize;
+            while at < bytes.len() {
+                let step = 1 + rng.below(40.min(bytes.len() - at)).min(bytes.len() - at - 1);
+                let mut got = Vec::new();
+                asm.feed(&bytes[at..at + step], &mut got)
+                    .map_err(|e| format!("unexpected oversize: {e:?}"))?;
+                lines.extend(got);
+                at += step;
+            }
+            for line in &lines {
+                if !route_reply(line, 0, &map, &shared, &events, 3) {
+                    return Err(format!("reply poisoned the stream: {line}"));
+                }
+            }
+            // every waiter answered exactly once, with its own payload
+            for (id, h) in handles.iter().enumerate() {
+                let r = h
+                    .wait_timeout(Duration::from_millis(50))
+                    .ok_or_else(|| format!("waiter {id} never answered"))?
+                    .map_err(|e| format!("waiter {id} failed: {e}"))?;
+                if r.pred_class() != id % 3 {
+                    return Err(format!(
+                        "waiter {id} got pred {} (crossed wires)",
+                        r.pred_class()
+                    ));
+                }
+            }
+            if !map.lock().unwrap().is_empty() {
+                return Err("in-flight map not drained".into());
+            }
+            if shared.completed.load(Ordering::Relaxed) != n as u64 {
+                return Err("completed counter mismatch".into());
+            }
+            // oversized reply line: poison, never a truncated parse
+            let mut asm = LineAssembler::new(64);
+            let huge = format!("{{\"id\":1,\"ok\":true,\"logits\":[{}]}}", "1,".repeat(200));
+            let mut got = Vec::new();
+            if asm.feed(huge.as_bytes(), &mut got).is_ok() {
+                return Err("oversized line must be rejected".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -691,11 +691,45 @@ fn stats_json(engine: &dyn Submit) -> Json {
             ])
         })
         .collect();
+    // model identity block: what this process serves. A sharding front
+    // reads it during the handshake to verify every backend agrees on
+    // task/shape before pooling them (see `coordinator::pool::ModelInfo`).
+    let tok = engine.tokenizer();
+    let vocab_size = tok.vocab.content_base as usize + tok.n_content;
+    let model = obj(vec![
+        ("task", s(engine.native_task().as_str())),
+        ("seq_len", num(engine.seq_len() as f64)),
+        ("n_classes", num(engine.n_classes() as f64)),
+        ("vocab_size", num(vocab_size as f64)),
+        (
+            "buckets",
+            Json::Arr(engine.buckets().iter().map(|&b| num(b as f64)).collect()),
+        ),
+    ]);
+    // shard pool health (empty unless the engine is a ShardRouter)
+    let shards: Vec<Json> = engine
+        .shard_status()
+        .iter()
+        .map(|sh| {
+            obj(vec![
+                ("addr", s(&sh.addr)),
+                ("state", s(sh.state.as_str())),
+                ("probes", num(sh.probes as f64)),
+                ("probe_failures", num(sh.probe_failures as f64)),
+                ("failovers", num(sh.failovers as f64)),
+                ("in_flight", num(sh.in_flight as f64)),
+                ("completed", num(sh.completed as f64)),
+                ("ewma_rtt_us", num(sh.ewma_rtt_us)),
+            ])
+        })
+        .collect();
     obj(vec![
         ("ok", Json::Bool(true)),
         (
             "stats",
             obj(vec![
+                ("model", model),
+                ("shards", Json::Arr(shards)),
                 ("submitted", num(c.submitted as f64)),
                 ("completed", num(c.completed as f64)),
                 ("rejected", num(c.rejected as f64)),
@@ -916,6 +950,17 @@ mod tests {
         assert_eq!(names, ["high", "normal", "bulk"], "{reply}");
         let high_done = classes[0].get("completed").and_then(Json::as_usize);
         assert_eq!(high_done, Some(1), "the high-priority classify is tallied: {reply}");
+        // model identity block — the sharding front's handshake reads this
+        let model = stats.get("model").expect("model block");
+        assert_eq!(model.get("task").and_then(Json::as_str), Some("classify"), "{reply}");
+        assert_eq!(model.get("seq_len").and_then(Json::as_usize), Some(8), "{reply}");
+        assert_eq!(model.get("n_classes").and_then(Json::as_usize), Some(3), "{reply}");
+        assert_eq!(model.get("vocab_size").and_then(Json::as_usize), Some(300), "{reply}");
+        let mbuckets = model.get("buckets").and_then(Json::as_arr).expect("bucket list");
+        assert!(!mbuckets.is_empty(), "{reply}");
+        // single-process engine: the shard array exists and is empty
+        let shards = stats.get("shards").and_then(Json::as_arr).expect("shards array");
+        assert!(shards.is_empty(), "{reply}");
         send(&mut c, r#"{"op":"quit"}"#);
         let mut rest = Vec::new();
         c.get_mut().read_to_end(&mut rest).expect("quit closes the conn");

@@ -1,0 +1,1087 @@
+//! Sharded multi-process serving tier: [`ShardRouter`] implements
+//! [`Submit`] over a pool of protocol-v2 TCP connections to N backend
+//! `datamux serve` processes.
+//!
+//! Health model — one three-state breaker per shard:
+//!
+//! ```text
+//!           probe/IO failure                 probe OK
+//!  Closed ───────────────────▶ Open ─────▶ HalfOpen ─────▶ Closed
+//!     ▲                         ▲  backoff     │
+//!     └───── (traffic + probes) └──────────────┘ probe fails:
+//!                                                re-open, delay doubles
+//! ```
+//!
+//! A `Closed` shard takes traffic and is pinged with a periodic v2 STATS
+//! probe; a probe timeout or any connection I/O failure opens the
+//! breaker. An `Open` shard takes no traffic; after a seeded-jitter
+//! exponential-backoff delay ([`crate::util::backoff::Backoff`]) the
+//! monitor moves it to `HalfOpen` and attempts one reconnect+handshake —
+//! success closes the breaker, failure re-opens it with a doubled delay.
+//!
+//! Failover is **loss-free** for admitted work, mirroring the in-process
+//! lane-requeue guarantee across the process boundary: every in-flight
+//! request is tracked in its connection's id map; when a shard dies, its
+//! unanswered requests are resubmitted to surviving shards with their
+//! *remaining* deadline budget (minus an RTT margin), and requests that
+//! cannot be placed anywhere are parked and retried until a shard
+//! returns or their deadline expires — nothing admitted is ever dropped
+//! without a typed answer. When every breaker is open, new submissions
+//! fail *fast* with [`SubmitError::Unavailable`] instead of queueing
+//! behind dead connections.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::tokenizer::{default_vocab, Tokenizer};
+use crate::util::backoff::Backoff;
+use crate::util::metrics::{CounterSnapshot, LatencySummary};
+use crate::util::threadpool::{Channel, OnceCellSync};
+
+use super::api::{
+    ClassStatus, CompletionQueue, InferenceRequest, ShardState, ShardStatus, Submit, SubmitError,
+    TaskKind,
+};
+use super::buckets::Buckets;
+use super::pool::{
+    connect_handshake, probe_json, request_json, Entry, FaultInjector, FaultPlan, ModelInfo,
+    PoolEvent, PoolRequest, ShardConn, ShardShared,
+};
+use super::request::{Completion, EngineError, RequestHandle};
+use super::scheduler::Stats;
+use super::{note_shed, prepare_request};
+
+// ---------------------------------------------------------------------------
+// breaker
+// ---------------------------------------------------------------------------
+
+/// Pure three-state breaker driven by the monitor thread. Time is always
+/// passed in, never read, so the unit tests control the clock.
+pub(crate) struct Breaker {
+    state: ShardState,
+    backoff: Backoff,
+    /// when (in `Open`) the next half-open attempt may start
+    next_probe_at: Option<Instant>,
+}
+
+impl Breaker {
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Breaker {
+        Breaker {
+            state: ShardState::Closed,
+            backoff: Backoff::new(base, cap, seed),
+            next_probe_at: None,
+        }
+    }
+
+    pub fn state(&self) -> ShardState {
+        self.state
+    }
+
+    /// A probe answered / a reconnect handshake succeeded.
+    pub fn on_success(&mut self) {
+        self.state = ShardState::Closed;
+        self.next_probe_at = None;
+        self.backoff.reset();
+    }
+
+    /// A probe timed out / connection I/O failed / handshake failed.
+    /// Schedules the next half-open attempt with exponential backoff.
+    pub fn on_failure(&mut self, now: Instant) {
+        self.state = ShardState::Open;
+        self.next_probe_at = Some(now + self.backoff.next_delay());
+    }
+
+    /// `Open` and the backoff delay elapsed → `HalfOpen` (the caller
+    /// owns the single reconnect attempt). Returns whether it moved.
+    pub fn try_half_open(&mut self, now: Instant) -> bool {
+        if self.state == ShardState::Open && self.next_probe_at.is_some_and(|t| t <= now) {
+            self.state = ShardState::HalfOpen;
+            self.next_probe_at = None;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// configuration
+// ---------------------------------------------------------------------------
+
+/// How requests are placed onto healthy shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// `bucket_index % n_shards`, falling through to the next closed
+    /// shard when the home shard is down — requests of one sequence-
+    /// length bucket colocate, so each shard's batcher sees dense
+    /// same-shape waves
+    #[default]
+    ByBucket,
+    /// strict rotation over closed shards
+    RoundRobin,
+}
+
+impl Placement {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Placement::ByBucket => "by_bucket",
+            Placement::RoundRobin => "round_robin",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Placement> {
+        match s {
+            "by_bucket" => Some(Placement::ByBucket),
+            "round_robin" => Some(Placement::RoundRobin),
+            _ => None,
+        }
+    }
+}
+
+/// Shard-router configuration (see field docs for defaults).
+#[derive(Debug, Clone)]
+pub struct ShardConfig {
+    /// backend `host:port` addresses, one per shard (non-empty)
+    pub addrs: Vec<String>,
+    pub placement: Placement,
+    /// interval between health probes to closed shards (default 250ms)
+    pub probe_interval: Duration,
+    /// a probe unanswered for this long trips the breaker (default 1s)
+    pub probe_timeout: Duration,
+    /// half-open backoff: base delay (default 100ms)
+    pub backoff_base: Duration,
+    /// half-open backoff: cap (default 5s)
+    pub backoff_cap: Duration,
+    /// seed for backoff jitter (fault injection has its own seed in
+    /// [`FaultPlan`])
+    pub seed: u64,
+    /// subtracted from the remaining deadline budget on every shard hop
+    /// (covers the extra network round trip; default 2ms)
+    pub rtt_margin: Duration,
+    /// per-shard in-flight cap: `try_submit` sheds `QueueFull` beyond
+    /// it, blocking `submit` waits (default 512)
+    pub in_flight_cap: usize,
+    /// a request bounced across more shard deaths than this fails typed
+    /// (`WorkerFailed`) instead of cycling forever (default 3)
+    pub max_resubmits: u32,
+    /// per-connect-attempt timeout, also the handshake read timeout
+    /// (default 1s)
+    pub connect_timeout: Duration,
+    /// how long `connect` waits for the *first* healthy shard before
+    /// giving up entirely (default 10s)
+    pub startup_timeout: Duration,
+    /// an in-flight request older than this kills its connection — the
+    /// belt-and-braces sweep that turns silent request loss (a wedged
+    /// shard, a reply the pool could not correlate) into failover
+    /// (default 10s)
+    pub hop_timeout: Duration,
+    /// chaos fault injection (default [`FaultPlan::from_env`])
+    pub fault: FaultPlan,
+}
+
+impl ShardConfig {
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(addrs: I) -> ShardConfig {
+        ShardConfig {
+            addrs: addrs.into_iter().map(Into::into).collect(),
+            placement: Placement::default(),
+            probe_interval: Duration::from_millis(250),
+            probe_timeout: Duration::from_secs(1),
+            backoff_base: Duration::from_millis(100),
+            backoff_cap: Duration::from_secs(5),
+            seed: 0,
+            rtt_margin: Duration::from_millis(2),
+            in_flight_cap: 512,
+            max_resubmits: 3,
+            connect_timeout: Duration::from_secs(1),
+            startup_timeout: Duration::from_secs(10),
+            hop_timeout: Duration::from_secs(10),
+            fault: FaultPlan::from_env(),
+        }
+    }
+
+    pub fn placement(mut self, p: Placement) -> Self {
+        self.placement = p;
+        self
+    }
+
+    pub fn probe_interval(mut self, d: Duration) -> Self {
+        self.probe_interval = d;
+        self
+    }
+
+    pub fn probe_timeout(mut self, d: Duration) -> Self {
+        self.probe_timeout = d;
+        self
+    }
+
+    pub fn backoff(mut self, base: Duration, cap: Duration) -> Self {
+        self.backoff_base = base;
+        self.backoff_cap = cap;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn rtt_margin(mut self, d: Duration) -> Self {
+        self.rtt_margin = d;
+        self
+    }
+
+    pub fn in_flight_cap(mut self, cap: usize) -> Self {
+        self.in_flight_cap = cap.max(1);
+        self
+    }
+
+    pub fn max_resubmits(mut self, n: u32) -> Self {
+        self.max_resubmits = n;
+        self
+    }
+
+    pub fn connect_timeout(mut self, d: Duration) -> Self {
+        self.connect_timeout = d;
+        self
+    }
+
+    pub fn startup_timeout(mut self, d: Duration) -> Self {
+        self.startup_timeout = d;
+        self
+    }
+
+    pub fn hop_timeout(mut self, d: Duration) -> Self {
+        self.hop_timeout = d;
+        self
+    }
+
+    pub fn fault(mut self, plan: FaultPlan) -> Self {
+        self.fault = plan;
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shard bookkeeping
+// ---------------------------------------------------------------------------
+
+struct Shard {
+    addr: String,
+    breaker: Mutex<Breaker>,
+    conn: Mutex<Option<Arc<ShardConn>>>,
+    shared: Arc<ShardShared>,
+}
+
+impl Shard {
+    fn state(&self) -> ShardState {
+        self.breaker.lock().unwrap().state()
+    }
+
+    /// Current connection if the breaker is closed and the reader alive.
+    fn live_conn(&self) -> Option<Arc<ShardConn>> {
+        if self.state() != ShardState::Closed {
+            return None;
+        }
+        self.conn.lock().unwrap().as_ref().filter(|c| !c.is_dead()).cloned()
+    }
+}
+
+/// Why a placement attempt found no home for a request.
+enum PlaceFailure {
+    /// no shard has a closed breaker — the caller sheds `Unavailable`
+    NoShard,
+    /// at least one closed shard exists but all are at the in-flight
+    /// cap — the caller sheds `QueueFull` or blocks
+    AtCapacity,
+}
+
+/// State shared between the router's submit path and the monitor thread.
+struct Core {
+    shards: Vec<Arc<Shard>>,
+    cfg: ShardConfig,
+    fault: Arc<FaultInjector>,
+    /// pool-global wire-id allocator: ids are never reused across shards
+    /// or reconnects, so a late reply can never be mis-correlated after
+    /// failover (also feeds connection generation numbers)
+    next_id: AtomicU64,
+    rr: AtomicUsize,
+    /// requests that expired while parked with every shard down
+    park_expired: AtomicU64,
+}
+
+impl Core {
+    fn pick_start(&self, bucket: usize) -> usize {
+        match self.cfg.placement {
+            Placement::ByBucket => bucket % self.shards.len(),
+            Placement::RoundRobin => self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len(),
+        }
+    }
+
+    /// Write one request to a specific shard connection, registering it
+    /// in-flight first (so a send failure can never lose it: either we
+    /// reclaim it here or the dying reader drains it into failover).
+    /// Returns the wire id, or the request back on connection failure.
+    fn send_request(
+        &self,
+        shard: &Shard,
+        conn: &Arc<ShardConn>,
+        req: PoolRequest,
+    ) -> Result<u64, PoolRequest> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let deadline_ms = req.deadline.map(|dl| {
+            dl.saturating_duration_since(Instant::now())
+                .saturating_sub(self.cfg.rtt_margin)
+                .as_secs_f64()
+                * 1e3
+        });
+        let line = request_json(id, &req, deadline_ms);
+        conn.map.lock().unwrap().insert(id, Entry::Req(Box::new(req)));
+        shard.shared.in_flight.fetch_add(1, Ordering::Relaxed);
+        let sent = conn.send_line(&line, &self.fault).is_ok();
+        if !sent {
+            conn.shutdown_now(); // the reader drains + fails over the rest
+        }
+        // reclaim after a failed send, and after a send that raced the
+        // reader's death (dead is set *before* the drain, so whoever
+        // removes the entry from the map owns it — exactly once)
+        if !sent || conn.is_dead() {
+            if let Some(Entry::Req(r)) = conn.map.lock().unwrap().remove(&id) {
+                shard.shared.in_flight.fetch_sub(1, Ordering::Relaxed);
+                return Err(*r);
+            }
+            // the reader already drained it into a ConnDown event
+        }
+        Ok(id)
+    }
+
+    /// Try every closed shard starting at `start`, falling through on
+    /// dead connections and (when `capped`) on full shards.
+    fn try_place(
+        &self,
+        start: usize,
+        req: PoolRequest,
+        capped: bool,
+    ) -> Result<u64, (PoolRequest, PlaceFailure)> {
+        let n = self.shards.len();
+        let mut req = req;
+        let mut saw_closed = false;
+        for k in 0..n {
+            let shard = &self.shards[(start + k) % n];
+            let Some(conn) = shard.live_conn() else { continue };
+            saw_closed = true;
+            let depth = shard.shared.in_flight.load(Ordering::Relaxed);
+            if capped && depth >= self.cfg.in_flight_cap as u64 {
+                continue;
+            }
+            match self.send_request(shard, &conn, req) {
+                Ok(id) => return Ok(id),
+                Err(r) => req = r,
+            }
+        }
+        let why = if saw_closed { PlaceFailure::AtCapacity } else { PlaceFailure::NoShard };
+        Err((req, why))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the router
+// ---------------------------------------------------------------------------
+
+/// A [`Submit`] engine that forwards every request over TCP to a pool of
+/// backend `datamux serve` shards, with per-shard breakers, health
+/// probes, and loss-free failover. See the module docs for the model.
+pub struct ShardRouter {
+    core: Arc<Core>,
+    tokenizer: Tokenizer,
+    buckets: Buckets,
+    task: TaskKind,
+    seq_len: usize,
+    n_classes: usize,
+    stats: Arc<Stats>,
+    events: Channel<PoolEvent>,
+    shutdown: Arc<AtomicBool>,
+    monitor: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl ShardRouter {
+    /// Connect to the configured shards. At least one shard must
+    /// handshake within `startup_timeout`; unreachable shards start with
+    /// their breaker open and are adopted by the monitor when they come
+    /// up. Every reachable shard must serve the same model shape.
+    pub fn connect(cfg: ShardConfig) -> Result<ShardRouter> {
+        if cfg.addrs.is_empty() {
+            return Err(anyhow!("shard router needs at least one backend address"));
+        }
+        let fault = Arc::new(FaultInjector::new(cfg.fault.clone()));
+        let events: Channel<PoolEvent> = Channel::bounded(4096);
+        let shards: Vec<Arc<Shard>> = cfg
+            .addrs
+            .iter()
+            .enumerate()
+            .map(|(i, addr)| {
+                Arc::new(Shard {
+                    addr: addr.clone(),
+                    breaker: Mutex::new(Breaker::new(
+                        cfg.backoff_base,
+                        cfg.backoff_cap,
+                        cfg.seed.wrapping_add(i as u64),
+                    )),
+                    conn: Mutex::new(None),
+                    shared: Arc::default(),
+                })
+            })
+            .collect();
+        let core = Arc::new(Core {
+            shards,
+            cfg,
+            fault,
+            next_id: AtomicU64::new(1),
+            rr: AtomicUsize::new(0),
+            park_expired: AtomicU64::new(0),
+        });
+
+        // startup: handshake every shard; insist on >= 1 success before
+        // the startup timeout, and on model agreement among successes
+        let deadline = Instant::now() + core.cfg.startup_timeout;
+        let mut model: Option<ModelInfo> = None;
+        let mut last_err: Option<anyhow::Error> = None;
+        loop {
+            for (i, shard) in core.shards.iter().enumerate() {
+                if shard.conn.lock().unwrap().is_some() {
+                    continue;
+                }
+                match connect_handshake(&shard.addr, core.cfg.connect_timeout, &core.fault) {
+                    Ok((stream, info)) => {
+                        match &model {
+                            None => model = Some(info),
+                            Some(m) if *m != info => {
+                                return Err(anyhow!(
+                                    "shard {} serves a different model shape than its peers",
+                                    shard.addr
+                                ));
+                            }
+                            Some(_) => {}
+                        }
+                        let n_classes = model.as_ref().map_or(0, |m| m.n_classes);
+                        // a wedged shard must not block writers forever:
+                        // a timed-out write reads as a dead connection
+                        stream.set_write_timeout(Some(core.cfg.probe_timeout)).ok();
+                        let generation = core.next_id.fetch_add(1, Ordering::Relaxed);
+                        let conn = ShardConn::start(
+                            i,
+                            generation,
+                            stream,
+                            shard.shared.clone(),
+                            events.clone(),
+                            n_classes,
+                        )?;
+                        *shard.conn.lock().unwrap() = Some(conn);
+                        shard.breaker.lock().unwrap().on_success();
+                    }
+                    Err(e) => last_err = Some(e),
+                }
+            }
+            if model.is_some() || Instant::now() >= deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        let model = model.ok_or_else(|| {
+            anyhow!(
+                "no shard reachable within {:?} ({})",
+                core.cfg.startup_timeout,
+                last_err.map_or_else(|| "no attempts".to_string(), |e| format!("{e:#}"))
+            )
+        })?;
+        // open the breaker once per still-unreachable shard (the startup
+        // loop itself must not compound the backoff while polling)
+        for shard in &core.shards {
+            if shard.conn.lock().unwrap().is_none() {
+                shard.breaker.lock().unwrap().on_failure(Instant::now());
+            }
+        }
+
+        let tokenizer = Tokenizer::new(default_vocab(), model.vocab_size);
+        let buckets = Buckets::new(&model.buckets, model.seq_len);
+        let stats = Arc::new(Stats::for_buckets(buckets.lens()));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let monitor = Monitor {
+            core: core.clone(),
+            events: events.clone(),
+            shutdown: shutdown.clone(),
+            model: model.clone(),
+        };
+        let handle = std::thread::Builder::new()
+            .name("datamux-shardmon".into())
+            .spawn(move || monitor.run())
+            .expect("spawn shard monitor");
+
+        Ok(ShardRouter {
+            core,
+            tokenizer,
+            buckets,
+            task: model.task,
+            seq_len: model.seq_len,
+            n_classes: model.n_classes,
+            stats,
+            events,
+            shutdown,
+            monitor: Mutex::new(Some(handle)),
+        })
+    }
+
+    /// Number of configured shards.
+    pub fn n_shards(&self) -> usize {
+        self.core.shards.len()
+    }
+
+    /// Shared admission: validate/frame the request, shed hopeless
+    /// deadlines, then place it on a shard. Consumes `done` either into
+    /// the in-flight map (success) or defused (typed error return).
+    fn admit(
+        &self,
+        req: InferenceRequest,
+        mut done: Completion,
+        blocking: bool,
+    ) -> Result<(u64, Option<Instant>), SubmitError> {
+        let priority = req.priority;
+        if self.shutdown.load(Ordering::Acquire) {
+            done.defuse();
+            self.stats.counters.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Shutdown);
+        }
+        let (content, bucket, deadline, priority) =
+            match prepare_request(&self.tokenizer, &self.buckets, self.task, req) {
+                Ok(t) => t,
+                Err(e) => {
+                    done.defuse();
+                    return Err(note_shed(&self.stats, priority, e));
+                }
+            };
+        // the hop costs a round trip: a budget at or under the margin
+        // cannot be met behind the wire, shed it now (typed, fast)
+        if let Some(dl) = deadline {
+            if dl.saturating_duration_since(Instant::now()) <= self.core.cfg.rtt_margin {
+                done.defuse();
+                return Err(note_shed(&self.stats, priority, SubmitError::Overloaded));
+            }
+        }
+        let mut preq = PoolRequest {
+            content,
+            task: self.task,
+            priority,
+            bucket,
+            deadline,
+            submitted: Instant::now(),
+            resubmits: 0,
+            done,
+        };
+        let start = self.core.pick_start(bucket);
+        loop {
+            match self.core.try_place(start, preq, true) {
+                Ok(id) => {
+                    self.stats.counters.submitted.fetch_add(1, Ordering::Relaxed);
+                    return Ok((id, deadline));
+                }
+                Err((mut r, PlaceFailure::NoShard)) => {
+                    r.done.defuse();
+                    self.stats.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                    return Err(SubmitError::Unavailable);
+                }
+                Err((r, PlaceFailure::AtCapacity)) => {
+                    if !blocking {
+                        let mut r = r;
+                        r.done.defuse();
+                        self.stats.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                        return Err(SubmitError::QueueFull);
+                    }
+                    preq = r;
+                    std::thread::sleep(Duration::from_micros(200));
+                    if self.shutdown.load(Ordering::Acquire) {
+                        preq.done.defuse();
+                        self.stats.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                        return Err(SubmitError::Shutdown);
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Submit for ShardRouter {
+    fn submit(&self, req: InferenceRequest) -> Result<RequestHandle, SubmitError> {
+        let cell = OnceCellSync::new();
+        let (id, deadline) = self.admit(req, Completion::cell(cell.clone()), true)?;
+        Ok(RequestHandle { id, deadline, done: cell })
+    }
+
+    fn try_submit(&self, req: InferenceRequest) -> Result<RequestHandle, SubmitError> {
+        let cell = OnceCellSync::new();
+        let (id, deadline) = self.admit(req, Completion::cell(cell.clone()), false)?;
+        Ok(RequestHandle { id, deadline, done: cell })
+    }
+
+    fn submit_tagged(
+        &self,
+        req: InferenceRequest,
+        tag: u64,
+        out: &CompletionQueue,
+    ) -> Result<(), SubmitError> {
+        self.admit(req, Completion::queue(tag, out.clone()), false).map(|_| ())
+    }
+
+    fn native_task(&self) -> TaskKind {
+        self.task
+    }
+
+    fn tokenizer(&self) -> &Tokenizer {
+        &self.tokenizer
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    fn buckets(&self) -> Vec<usize> {
+        self.buckets.lens().to_vec()
+    }
+
+    fn queue_depth(&self) -> usize {
+        self.core
+            .shards
+            .iter()
+            .map(|s| s.shared.in_flight.load(Ordering::Relaxed) as usize)
+            .sum()
+    }
+
+    fn counters(&self) -> CounterSnapshot {
+        let mut completed = 0;
+        let mut expired = self.core.park_expired.load(Ordering::Relaxed);
+        for s in &self.core.shards {
+            completed += s.shared.completed.load(Ordering::Relaxed);
+            expired += s.shared.expired.load(Ordering::Relaxed);
+        }
+        CounterSnapshot {
+            submitted: self.stats.counters.submitted.load(Ordering::Relaxed),
+            completed,
+            rejected: self.stats.counters.rejected.load(Ordering::Relaxed),
+            expired,
+            ..CounterSnapshot::default()
+        }
+    }
+
+    fn latency(&self) -> LatencySummary {
+        self.core
+            .shards
+            .iter()
+            .map(|s| s.shared.e2e.summary())
+            .fold(EMPTY_SUMMARY, LatencySummary::merge)
+    }
+
+    fn queue_wait(&self) -> LatencySummary {
+        // the front has no visibility into shard-side queue waits
+        EMPTY_SUMMARY
+    }
+
+    fn class_status(&self) -> Vec<ClassStatus> {
+        // shed tallies are front-side; completion detail lives shard-side
+        self.stats.class_snapshot()
+    }
+
+    fn shard_status(&self) -> Vec<ShardStatus> {
+        self.core
+            .shards
+            .iter()
+            .map(|s| ShardStatus {
+                addr: s.addr.clone(),
+                state: s.state(),
+                probes: s.shared.probes.load(Ordering::Relaxed),
+                probe_failures: s.shared.probe_failures.load(Ordering::Relaxed),
+                failovers: s.shared.failovers.load(Ordering::Relaxed),
+                in_flight: s.shared.in_flight.load(Ordering::Relaxed) as usize,
+                completed: s.shared.completed.load(Ordering::Relaxed),
+                ewma_rtt_us: s.shared.ewma_rtt_us(),
+            })
+            .collect()
+    }
+
+    fn backend_info(&self) -> Vec<String> {
+        self.core
+            .shards
+            .iter()
+            .map(|s| format!("shard {} [{}]", s.addr, s.state().as_str()))
+            .collect()
+    }
+}
+
+const EMPTY_SUMMARY: LatencySummary =
+    LatencySummary { count: 0, mean_ns: 0.0, p50_ns: 0, p95_ns: 0, p99_ns: 0, max_ns: 0 };
+
+impl Drop for ShardRouter {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Release);
+        self.events.close();
+        for s in &self.core.shards {
+            if let Some(c) = s.conn.lock().unwrap().as_ref() {
+                c.shutdown_now();
+            }
+        }
+        if let Some(h) = self.monitor.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// monitor thread
+// ---------------------------------------------------------------------------
+
+struct Monitor {
+    core: Arc<Core>,
+    events: Channel<PoolEvent>,
+    shutdown: Arc<AtomicBool>,
+    model: ModelInfo,
+}
+
+impl Monitor {
+    fn run(self) {
+        // requests that could not be placed anywhere (all shards down)
+        // wait here; they are answered — placed, expired, or shut down —
+        // never dropped
+        let mut pending: Vec<PoolRequest> = Vec::new();
+        let tick = (self.core.cfg.probe_interval / 4)
+            .clamp(Duration::from_millis(5), Duration::from_millis(100));
+        let mut last_probe = Instant::now();
+        loop {
+            if let Some(ev) = self.events.recv_timeout(tick) {
+                self.handle_event(ev, &mut pending);
+                while let Some(ev) = self.events.try_recv() {
+                    self.handle_event(ev, &mut pending);
+                }
+            }
+            if self.shutdown.load(Ordering::Acquire) {
+                break;
+            }
+            let now = Instant::now();
+            self.flush_pending(&mut pending, now);
+            if now.duration_since(last_probe) >= self.core.cfg.probe_interval {
+                last_probe = now;
+                self.send_probes(now);
+            }
+            self.sweep_stale(now);
+            self.reconnect_open(now);
+        }
+        // shutdown: tear down connections; their readers drain in-flight
+        // maps, and every stranded Completion's drop guard answers typed
+        // Shutdown — pending parked requests are dropped the same way
+        for s in &self.core.shards {
+            if let Some(c) = s.conn.lock().unwrap().take() {
+                c.shutdown_now();
+                c.join();
+            }
+        }
+    }
+
+    fn handle_event(&self, ev: PoolEvent, pending: &mut Vec<PoolRequest>) {
+        match ev {
+            PoolEvent::ConnDown { shard, generation, orphans } => {
+                let s = &self.core.shards[shard];
+                let stale_conn = {
+                    let mut conn = s.conn.lock().unwrap();
+                    if conn.as_ref().is_some_and(|c| c.generation == generation) {
+                        s.breaker.lock().unwrap().on_failure(Instant::now());
+                        conn.take()
+                    } else {
+                        None // a newer connection already replaced it
+                    }
+                };
+                if let Some(c) = stale_conn {
+                    c.join(); // the reader just sent this event; reap it
+                }
+                s.shared.failovers.fetch_add(orphans.len() as u64, Ordering::Relaxed);
+                for r in orphans {
+                    self.resubmit(r, pending);
+                }
+            }
+            PoolEvent::Retry { shard, req } => {
+                self.core.shards[shard].shared.failovers.fetch_add(1, Ordering::Relaxed);
+                self.resubmit(*req, pending);
+            }
+        }
+    }
+
+    /// Resubmit a failed-over request with its *remaining* deadline
+    /// budget. An expired budget fails typed; a bounce-count overflow
+    /// fails typed; no surviving shard parks it for retry.
+    fn resubmit(&self, mut r: PoolRequest, pending: &mut Vec<PoolRequest>) {
+        if let Some(dl) = r.deadline {
+            if dl.saturating_duration_since(Instant::now()) <= self.core.cfg.rtt_margin {
+                self.core.park_expired.fetch_add(1, Ordering::Relaxed);
+                r.done.fulfill(Err(EngineError::DeadlineExceeded));
+                return;
+            }
+        }
+        r.resubmits += 1;
+        if r.resubmits > self.core.cfg.max_resubmits {
+            let n = r.resubmits - 1;
+            r.done.fulfill(Err(EngineError::WorkerFailed(format!(
+                "request failed over {n} times without an answer"
+            ))));
+            return;
+        }
+        let start = self.core.pick_start(r.bucket);
+        // failover ignores the in-flight cap: an admitted request beats
+        // backpressure — losing it is worse than a temporarily deep shard
+        if let Err((r, _)) = self.core.try_place(start, r, false) {
+            pending.push(r);
+        }
+    }
+
+    /// Retry parked requests; expire the ones whose budget ran out.
+    fn flush_pending(&self, pending: &mut Vec<PoolRequest>, now: Instant) {
+        if pending.is_empty() {
+            return;
+        }
+        for r in std::mem::take(pending) {
+            if let Some(dl) = r.deadline {
+                if dl.saturating_duration_since(now) <= self.core.cfg.rtt_margin {
+                    self.core.park_expired.fetch_add(1, Ordering::Relaxed);
+                    r.done.fulfill(Err(EngineError::DeadlineExceeded));
+                    continue;
+                }
+            }
+            let start = self.core.pick_start(r.bucket);
+            if let Err((r, _)) = self.core.try_place(start, r, false) {
+                pending.push(r);
+            }
+        }
+    }
+
+    /// Ping every closed shard with a v2 STATS probe. The reply updates
+    /// the RTT EWMA; a missing reply is caught by [`Monitor::sweep_stale`].
+    fn send_probes(&self, now: Instant) {
+        for s in &self.core.shards {
+            let Some(conn) = s.live_conn() else { continue };
+            let id = self.core.next_id.fetch_add(1, Ordering::Relaxed);
+            conn.map.lock().unwrap().insert(id, Entry::Probe { sent: now });
+            s.shared.probes.fetch_add(1, Ordering::Relaxed);
+            if conn.send_line(&probe_json(id), &self.core.fault).is_err() {
+                s.shared.probe_failures.fetch_add(1, Ordering::Relaxed);
+                conn.map.lock().unwrap().remove(&id);
+                conn.shutdown_now();
+            }
+        }
+    }
+
+    /// Kill connections with an unanswered probe past `probe_timeout` or
+    /// a request past `hop_timeout` — both mean the shard stopped
+    /// answering without closing the socket; the reader's drain then
+    /// fails the rest over.
+    fn sweep_stale(&self, now: Instant) {
+        for s in &self.core.shards {
+            let Some(conn) = s.conn.lock().unwrap().as_ref().cloned() else { continue };
+            // backstop for a lost ConnDown event (full channel): a dead
+            // connection must still open the breaker or the shard would
+            // never be probed for re-adoption
+            if conn.is_dead() {
+                let mut slot = s.conn.lock().unwrap();
+                if slot.as_ref().is_some_and(|c| Arc::ptr_eq(c, &conn)) {
+                    slot.take();
+                    drop(slot);
+                    conn.join();
+                    s.breaker.lock().unwrap().on_failure(now);
+                }
+                continue;
+            }
+            let mut stale_probe = false;
+            let mut stale_req = false;
+            {
+                let m = conn.map.lock().unwrap();
+                for e in m.values() {
+                    match e {
+                        Entry::Probe { sent } => {
+                            if now.duration_since(*sent) > self.core.cfg.probe_timeout {
+                                stale_probe = true;
+                            }
+                        }
+                        Entry::Req(r) => {
+                            if now.duration_since(r.submitted) > self.core.cfg.hop_timeout {
+                                stale_req = true;
+                            }
+                        }
+                    }
+                }
+            }
+            if stale_probe {
+                s.shared.probe_failures.fetch_add(1, Ordering::Relaxed);
+            }
+            if stale_probe || stale_req {
+                conn.shutdown_now();
+            }
+        }
+    }
+
+    /// Move due `Open` breakers to `HalfOpen` and attempt one
+    /// reconnect+handshake each; verify the returning shard still serves
+    /// the same model before re-adopting it.
+    fn reconnect_open(&self, now: Instant) {
+        for (i, s) in self.core.shards.iter().enumerate() {
+            if !s.breaker.lock().unwrap().try_half_open(now) {
+                continue;
+            }
+            s.shared.probes.fetch_add(1, Ordering::Relaxed);
+            let timeout = self.core.cfg.connect_timeout;
+            let outcome = connect_handshake(&s.addr, timeout, &self.core.fault)
+                .and_then(|(stream, info)| {
+                    if info != self.model {
+                        return Err(anyhow!("shard {} changed model shape", s.addr));
+                    }
+                    stream.set_write_timeout(Some(self.core.cfg.probe_timeout)).ok();
+                    let generation = self.core.next_id.fetch_add(1, Ordering::Relaxed);
+                    ShardConn::start(
+                        i,
+                        generation,
+                        stream,
+                        s.shared.clone(),
+                        self.events.clone(),
+                        self.model.n_classes,
+                    )
+                });
+            match outcome {
+                Ok(conn) => {
+                    *s.conn.lock().unwrap() = Some(conn);
+                    s.breaker.lock().unwrap().on_success();
+                }
+                Err(_) => {
+                    s.shared.probe_failures.fetch_add(1, Ordering::Relaxed);
+                    s.breaker.lock().unwrap().on_failure(Instant::now());
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_breaker() -> Breaker {
+        Breaker::new(Duration::from_millis(100), Duration::from_secs(5), 7)
+    }
+
+    #[test]
+    fn breaker_closed_to_open_to_half_open_to_closed() {
+        let mut b = mk_breaker();
+        let t0 = Instant::now();
+        assert_eq!(b.state(), ShardState::Closed);
+        assert!(!b.try_half_open(t0), "closed breakers never half-open");
+
+        b.on_failure(t0);
+        assert_eq!(b.state(), ShardState::Open);
+        assert!(!b.try_half_open(t0), "the backoff delay must elapse first");
+        // base 100ms, jitter in [0.5, 1.0): due strictly before 100ms
+        assert!(b.try_half_open(t0 + Duration::from_millis(100)));
+        assert_eq!(b.state(), ShardState::HalfOpen);
+        assert!(!b.try_half_open(t0 + Duration::from_secs(9)), "only one attempt at a time");
+
+        b.on_success();
+        assert_eq!(b.state(), ShardState::Closed);
+    }
+
+    #[test]
+    fn breaker_failures_double_the_delay_up_to_the_cap() {
+        let mut b = mk_breaker();
+        let t0 = Instant::now();
+        let mut delays = Vec::new();
+        for _ in 0..8 {
+            b.on_failure(t0);
+            let due = b.next_probe_at.expect("open breaker schedules a probe");
+            delays.push(due.duration_since(t0));
+            assert!(b.try_half_open(due), "due exactly at the scheduled time");
+        }
+        // nominal schedule 100ms * 2^k capped at 5s, jitter in [0.5, 1.0)
+        for (k, d) in delays.iter().enumerate() {
+            let nominal = Duration::from_millis(100)
+                .saturating_mul(1 << k.min(10))
+                .min(Duration::from_secs(5));
+            assert!(*d <= nominal, "attempt {k}: {d:?} beyond nominal {nominal:?}");
+            assert!(*d >= nominal.mul_f64(0.5), "attempt {k}: {d:?} under half of {nominal:?}");
+            assert!(*d <= Duration::from_secs(5), "cap bounds every delay");
+        }
+        assert!(delays[7] >= Duration::from_secs(2), "late attempts sit near the cap");
+
+        // success resets: the next failure starts from base again
+        b.on_success();
+        b.on_failure(t0);
+        let due = b.next_probe_at.unwrap().duration_since(t0);
+        assert!(due <= Duration::from_millis(100), "reset restarts from base, got {due:?}");
+    }
+
+    #[test]
+    fn breaker_half_open_failure_reopens_with_longer_delay() {
+        let mut b = mk_breaker();
+        let t0 = Instant::now();
+        b.on_failure(t0);
+        let first = b.next_probe_at.unwrap().duration_since(t0);
+        assert!(b.try_half_open(t0 + first));
+        b.on_failure(t0);
+        assert_eq!(b.state(), ShardState::Open);
+        let second = b.next_probe_at.unwrap().duration_since(t0);
+        // first is under base (jitter < 1.0); the doubled nominal with
+        // jitter >= 0.5 puts the second at or above the full base
+        assert!(first < Duration::from_millis(100), "{first:?}");
+        assert!(second >= Duration::from_millis(100), "{second:?}");
+        assert!(second > first, "backoff grows: {first:?} -> {second:?}");
+    }
+
+    #[test]
+    fn shard_config_defaults_and_builders() {
+        let cfg = ShardConfig::new(["a:1", "b:2"])
+            .placement(Placement::RoundRobin)
+            .probe_interval(Duration::from_millis(50))
+            .probe_timeout(Duration::from_millis(200))
+            .backoff(Duration::from_millis(10), Duration::from_millis(500))
+            .seed(9)
+            .rtt_margin(Duration::from_millis(1))
+            .in_flight_cap(0)
+            .max_resubmits(5)
+            .connect_timeout(Duration::from_millis(300))
+            .startup_timeout(Duration::from_secs(2))
+            .hop_timeout(Duration::from_secs(3))
+            .fault(FaultPlan::disabled());
+        assert_eq!(cfg.addrs, vec!["a:1", "b:2"]);
+        assert_eq!(cfg.placement, Placement::RoundRobin);
+        assert_eq!(cfg.in_flight_cap, 1, "cap floors at 1");
+        assert_eq!(cfg.max_resubmits, 5);
+        assert!(!cfg.fault.enabled());
+    }
+
+    #[test]
+    fn placement_wire_names_round_trip() {
+        for p in [Placement::ByBucket, Placement::RoundRobin] {
+            assert_eq!(Placement::from_str(p.as_str()), Some(p));
+        }
+        assert_eq!(Placement::from_str("sticky"), None);
+        assert_eq!(Placement::default(), Placement::ByBucket);
+    }
+
+    #[test]
+    fn connect_refuses_empty_addrs_and_unreachable_shards() {
+        assert!(ShardRouter::connect(ShardConfig::new(Vec::<String>::new())).is_err());
+        // a port from the ephemeral range with nothing listening: the
+        // startup loop must give up after the (short) startup timeout
+        let cfg = ShardConfig::new(["127.0.0.1:1"])
+            .connect_timeout(Duration::from_millis(100))
+            .startup_timeout(Duration::from_millis(200))
+            .fault(FaultPlan::disabled());
+        let err = ShardRouter::connect(cfg).expect_err("nothing listening");
+        assert!(format!("{err:#}").contains("no shard reachable"), "{err:#}");
+    }
+}

@@ -26,7 +26,8 @@ pub mod workload;
 
 pub use coordinator::{
     BucketStatus, Buckets, ClassStatus, CoordinatorConfig, EngineBuilder, EngineError,
-    InferenceRequest, LaneStatus, LogitsView, MuxCoordinator, MuxRouter, MuxTemplate, Payload,
-    Priority, RequestHandle, Response, Submit, SubmitError, TaskKind,
+    FaultInjector, FaultPlan, InferenceRequest, LaneStatus, LogitsView, MuxCoordinator, MuxRouter,
+    MuxTemplate, Payload, Placement, Priority, RequestHandle, Response, ShardConfig, ShardRouter,
+    ShardState, ShardStatus, Submit, SubmitError, TaskKind,
 };
 pub use runtime::{ArtifactManifest, FakeBackend, InferenceBackend, ModelRuntime, NativeBackend};

@@ -7,22 +7,25 @@
 //! pure-rust T-MUX forward (`runtime/native`) straight from the weights
 //! blob, with no PJRT anywhere in the process.
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
-use datamux::coordinator::{EngineBuilder, SlotPolicy, Submit};
+use datamux::coordinator::{
+    EngineBuilder, Placement, ShardConfig, ShardRouter, ShardState, SlotPolicy, Submit,
+};
 use datamux::runtime::native::Precision;
 use datamux::runtime::{
-    default_artifacts_dir, ArtifactManifest, ArtifactMeta, InferenceBackend, ModelRuntime,
-    NativeBackend,
+    default_artifacts_dir, ArtifactManifest, ArtifactMeta, FakeBackend, InferenceBackend,
+    ModelRuntime, NativeBackend,
 };
 use datamux::util::cli::Args;
 
 fn main() -> Result<()> {
     let args = Args::parse_env()
-        .describe("cmd", "serve", "serve | list | parity")
+        .describe("cmd", "serve", "serve | front | list | parity")
         .describe("artifacts", "<auto>", "artifacts directory")
         .describe("artifact", "", "artifact name (default: first trained, else first)")
-        .describe("backend", "pjrt", "pjrt | native (pure-rust forward, no PJRT)")
+        .describe("backend", "pjrt", "pjrt | native (pure-rust forward) | fake (no artifacts)")
         .describe("precision", "f32", "f32 | int8 weight precision (native backend only)")
         .describe("addr", "127.0.0.1:7071", "TCP bind address for serve")
         .describe("max-connections", "64", "concurrent client connections served")
@@ -36,10 +39,22 @@ fn main() -> Result<()> {
         )
         .describe("rotate-slots", "false", "rotate slot assignment (paper A3)")
         .describe("adaptive", "false", "serve an adaptive-N router over every N of a profile")
-        .describe("profile", "", "profile for --adaptive (default: first with most N lanes)");
+        .describe("profile", "", "profile for --adaptive (default: first with most N lanes)")
+        .describe("shards", "", "front: comma-separated backend host:port list")
+        .describe("placement", "by_bucket", "front: by_bucket | round_robin")
+        .describe("probe-interval-ms", "250", "front: health-probe interval")
+        .describe("probe-timeout-ms", "1000", "front: unanswered probe trips the breaker")
+        .describe("rtt-margin-ms", "2", "front: deadline budget reserved per shard hop")
+        .describe("in-flight-cap", "512", "front: per-shard in-flight cap")
+        .describe("seed", "0", "front: backoff jitter seed")
+        .describe("fake-task", "cls", "fake backend: cls | token")
+        .describe("fake-n", "2", "fake backend: mux width N")
+        .describe("fake-seq-len", "8", "fake backend: model sequence length")
+        .describe("fake-classes", "3", "fake backend: number of classes")
+        .describe("fake-delay-ms", "0", "fake backend: per-execution delay");
     let cmd = args.str("cmd", "serve");
     let backend = args
-        .choice("backend", "pjrt", &["pjrt", "native"])
+        .choice("backend", "pjrt", &["pjrt", "native", "fake"])
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     let precision = match args
         .choice("precision", "f32", &["f32", "int8"])
@@ -53,10 +68,11 @@ fn main() -> Result<()> {
         s if s.is_empty() => default_artifacts_dir(),
         s => s.into(),
     };
-    let manifest = ArtifactManifest::load(&dir)?;
-
+    // loaded lazily: `front` and `serve --backend fake` run without any
+    // artifacts directory at all
     match cmd.as_str() {
         "list" => {
+            let manifest = ArtifactManifest::load(&dir)?;
             println!("{} artifacts in {}", manifest.artifacts.len(), dir.display());
             for a in &manifest.artifacts {
                 println!(
@@ -67,6 +83,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "parity" => {
+            let manifest = ArtifactManifest::load(&dir)?;
             if backend == "native" {
                 for meta in &manifest.artifacts {
                     if meta.parity.is_none() {
@@ -108,7 +125,22 @@ fn main() -> Result<()> {
 
             // all branches produce the same trait object: the server is
             // generic over whichever engine shape (and backend) is behind it
-            let engine: Arc<dyn Submit> = if args.bool("adaptive", false) {
+            let engine: Arc<dyn Submit> = if backend == "fake" {
+                let task = args
+                    .choice("fake-task", "cls", &["cls", "token"])
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                let n_mux = args.usize("fake-n", 2);
+                let seq_len = args.usize("fake-seq-len", 8);
+                let n_classes = args.usize("fake-classes", 3);
+                let mut fake = FakeBackend::new(&task, n_mux, 1, seq_len, n_classes);
+                let delay = args.u64("fake-delay-ms", 0);
+                if delay > 0 {
+                    fake = fake.with_delay(Duration::from_millis(delay));
+                }
+                println!("loading fake {task} model (N={n_mux}, L={seq_len}, C={n_classes})");
+                Arc::new(builder.build_backend(Arc::new(fake))?)
+            } else if args.bool("adaptive", false) {
+                let manifest = ArtifactManifest::load(&dir)?;
                 let profile = match args.str("profile", "") {
                     p if !p.is_empty() => p,
                     _ => best_profile(&manifest)
@@ -151,6 +183,7 @@ fn main() -> Result<()> {
                     Arc::new(builder.build_router(models)?)
                 }
             } else {
+                let manifest = ArtifactManifest::load(&dir)?;
                 let name = args.str("artifact", "");
                 let meta = if name.is_empty() {
                     manifest
@@ -201,6 +234,75 @@ fn main() -> Result<()> {
                             lane.n_mux, lane.pulls, lane.requeued
                         );
                     }
+                }
+            }
+        }
+        // sharding front: a v2 server whose engine is a ShardRouter over
+        // N backend `datamux serve` processes, with health-probed
+        // breakers and loss-free failover (coordinator/shards.rs)
+        "front" => {
+            let shards_arg = args.str("shards", "");
+            if shards_arg.is_empty() {
+                anyhow::bail!("front requires --shards host:port,host:port,...");
+            }
+            let addrs: Vec<String> = shards_arg
+                .split(',')
+                .map(|a| a.trim().to_string())
+                .filter(|a| !a.is_empty())
+                .collect();
+            let placement = args
+                .choice("placement", "by_bucket", &["by_bucket", "round_robin"])
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let cfg = ShardConfig::new(addrs)
+                .placement(Placement::from_str(&placement).expect("validated choice"))
+                .probe_interval(Duration::from_millis(args.u64("probe-interval-ms", 250)))
+                .probe_timeout(Duration::from_millis(args.u64("probe-timeout-ms", 1000)))
+                .rtt_margin(Duration::from_millis(args.u64("rtt-margin-ms", 2)))
+                .in_flight_cap(args.usize("in-flight-cap", 512))
+                .seed(args.u64("seed", 0));
+            let engine: Arc<dyn Submit> = Arc::new(ShardRouter::connect(cfg)?);
+            let server = EngineBuilder::new()
+                .addr(args.str("addr", "127.0.0.1:7071"))
+                .max_connections(args.usize("max-connections", 64))
+                .serve(engine.clone())?;
+            let shards = engine.shard_status();
+            println!(
+                "front serving on {} over {} shard(s), placement={placement}; \
+                 v2: line JSON (classify/tag/batch/stats, pipelined)",
+                server.local_addr,
+                shards.len()
+            );
+            for sh in &shards {
+                println!("  shard {:<21} [{}]", sh.addr, sh.state.as_str());
+            }
+            // watch shard health: report every breaker transition —
+            // loudly when a shard drops out, quietly when it returns;
+            // the front keeps serving on whatever shards survive
+            let mut last: Vec<ShardState> = shards.iter().map(|s| s.state).collect();
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(5));
+                for (i, sh) in engine.shard_status().iter().enumerate() {
+                    if sh.state == last[i] {
+                        continue;
+                    }
+                    if sh.state == ShardState::Closed {
+                        println!(
+                            "shard {} recovered [{} -> {}]",
+                            sh.addr,
+                            last[i].as_str(),
+                            sh.state.as_str()
+                        );
+                    } else {
+                        eprintln!(
+                            "WARNING: shard {} [{} -> {}]; {} failover(s), {} probe failure(s)",
+                            sh.addr,
+                            last[i].as_str(),
+                            sh.state.as_str(),
+                            sh.failovers,
+                            sh.probe_failures
+                        );
+                    }
+                    last[i] = sh.state;
                 }
             }
         }

@@ -1,0 +1,115 @@
+//! Seeded-jitter exponential backoff for reconnect/retry loops.
+//!
+//! Deterministic by construction: the jitter stream comes from a tiny
+//! seeded LCG, so a breaker driven by a fixed `DATAMUX_FAULT_SEED` run
+//! reproduces the exact same retry schedule in CI. The delay for attempt
+//! `k` is `min(cap, base * 2^k)` scaled by a jitter factor in
+//! `[0.5, 1.0)` — full-jitter-style decorrelation so a fleet of shards
+//! opened by one event does not thundering-herd their half-open probes.
+
+use std::time::Duration;
+
+/// Multiplier applied to the LCG state before taking the high bits —
+/// Knuth's MMIX constants, the same family the fault injector uses.
+const LCG_MUL: u64 = 6364136223846793005;
+const LCG_ADD: u64 = 1442695040888963407;
+
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    /// consecutive failures since the last reset
+    attempt: u32,
+    state: u64,
+}
+
+impl Backoff {
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Self {
+        Backoff { base, cap, attempt: 0, state: seed.wrapping_mul(LCG_MUL).wrapping_add(LCG_ADD) }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(LCG_MUL).wrapping_add(LCG_ADD);
+        self.state >> 11
+    }
+
+    /// Jitter factor in `[0.5, 1.0)`.
+    fn jitter(&mut self) -> f64 {
+        0.5 + 0.5 * (self.next_u64() as f64 / (1u64 << 53) as f64)
+    }
+
+    /// Delay before the next retry; each call counts one more failure.
+    /// Grows `base * 2^k`, saturates at `cap` (pre-jitter), never zero.
+    pub fn next_delay(&mut self) -> Duration {
+        let exp = self.attempt.min(32);
+        self.attempt = self.attempt.saturating_add(1);
+        let un_jittered = self
+            .base
+            .saturating_mul(1u32.checked_shl(exp).unwrap_or(u32::MAX))
+            .min(self.cap);
+        un_jittered.mul_f64(self.jitter()).max(Duration::from_millis(1))
+    }
+
+    /// Success: the next failure starts from `base` again.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_exponentially_and_caps() {
+        let base = Duration::from_millis(10);
+        let cap = Duration::from_millis(200);
+        let mut b = Backoff::new(base, cap, 42);
+        let delays: Vec<Duration> = (0..10).map(|_| b.next_delay()).collect();
+        // jitter is in [0.5, 1.0): delay k is within [0.5, 1.0) * min(cap, base * 2^k)
+        for (k, d) in delays.iter().enumerate() {
+            let nominal = base.saturating_mul(1 << k.min(20)).min(cap);
+            assert!(*d < nominal || nominal <= Duration::from_millis(1), "attempt {k}: {d:?}");
+            assert!(*d >= nominal.mul_f64(0.5).min(cap), "attempt {k}: {d:?} vs {nominal:?}");
+            assert!(*d <= cap, "cap must bound every delay: attempt {k} gave {d:?}");
+        }
+        // far attempts all sit at the (jittered) cap
+        assert!(delays[9] >= cap.mul_f64(0.5));
+    }
+
+    #[test]
+    fn reset_restarts_from_base() {
+        let mut b = Backoff::new(Duration::from_millis(10), Duration::from_secs(1), 7);
+        for _ in 0..6 {
+            b.next_delay();
+        }
+        assert_eq!(b.attempts(), 6);
+        b.reset();
+        assert_eq!(b.attempts(), 0);
+        assert!(b.next_delay() <= Duration::from_millis(10), "first delay after reset is base");
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let mk = |seed| {
+            let mut b = Backoff::new(Duration::from_millis(5), Duration::from_secs(2), seed);
+            (0..8).map(|_| b.next_delay()).collect::<Vec<_>>()
+        };
+        assert_eq!(mk(123), mk(123), "deterministic for a fixed seed");
+        assert_ne!(mk(123), mk(124), "different seeds decorrelate");
+    }
+
+    #[test]
+    fn huge_attempt_counts_do_not_overflow() {
+        let mut b = Backoff::new(Duration::from_secs(1), Duration::from_secs(30), 1);
+        for _ in 0..100 {
+            let d = b.next_delay();
+            assert!(d <= Duration::from_secs(30));
+            assert!(d >= Duration::from_millis(1));
+        }
+    }
+}

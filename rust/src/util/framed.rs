@@ -1,0 +1,113 @@
+//! Client-side line framing over a byte stream.
+//!
+//! The reactor (`coordinator/reactor.rs`) owns the *server* side of
+//! newline-delimited framing; this module is the **client** mirror used
+//! by the shard connection pool: bytes arrive from `read()` in arbitrary
+//! fragments (split, merged, many-lines-at-once), and [`LineAssembler`]
+//! turns them back into complete lines with the same oversized-line
+//! policy the server applies — a line beyond `max_line` poisons the
+//! stream instead of silently truncating a frame into a different,
+//! syntactically valid one.
+
+/// Incremental newline reassembler for one connection.
+#[derive(Debug)]
+pub struct LineAssembler {
+    buf: Vec<u8>,
+    max_line: usize,
+    poisoned: bool,
+}
+
+/// One `feed` outcome: zero or more complete lines, or stream poison.
+#[derive(Debug, PartialEq, Eq)]
+pub enum FeedError {
+    /// the current line exceeds `max_line` bytes with no terminator —
+    /// the framing can no longer be trusted; the caller must drop the
+    /// connection
+    Oversized { limit: usize },
+}
+
+impl LineAssembler {
+    pub fn new(max_line: usize) -> Self {
+        LineAssembler { buf: Vec::new(), max_line, poisoned: false }
+    }
+
+    /// Feed a read fragment; append every newly completed line (without
+    /// its `\n`, with a trailing `\r` stripped) to `out`. Returns
+    /// [`FeedError::Oversized`] once the unterminated tail passes
+    /// `max_line`; after that every call fails (the stream is poisoned).
+    pub fn feed(&mut self, chunk: &[u8], out: &mut Vec<String>) -> Result<(), FeedError> {
+        if self.poisoned {
+            return Err(FeedError::Oversized { limit: self.max_line });
+        }
+        self.buf.extend_from_slice(chunk);
+        let mut start = 0usize;
+        while let Some(pos) = self.buf[start..].iter().position(|&b| b == b'\n') {
+            let mut end = start + pos;
+            if end > start && self.buf[end - 1] == b'\r' {
+                end -= 1;
+            }
+            out.push(String::from_utf8_lossy(&self.buf[start..end]).into_owned());
+            start += pos + 1;
+        }
+        self.buf.drain(..start);
+        if self.buf.len() > self.max_line {
+            self.poisoned = true;
+            return Err(FeedError::Oversized { limit: self.max_line });
+        }
+        Ok(())
+    }
+
+    /// Bytes buffered waiting for a terminator.
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed_ok(a: &mut LineAssembler, chunk: &[u8]) -> Vec<String> {
+        let mut out = Vec::new();
+        a.feed(chunk, &mut out).expect("feed within limits");
+        out
+    }
+
+    #[test]
+    fn split_and_merged_fragments_reassemble() {
+        let mut a = LineAssembler::new(1024);
+        assert!(feed_ok(&mut a, b"hel").is_empty());
+        assert!(feed_ok(&mut a, b"lo").is_empty());
+        assert_eq!(feed_ok(&mut a, b"\nworld\npar"), vec!["hello", "world"]);
+        assert_eq!(a.pending(), 3);
+        assert_eq!(feed_ok(&mut a, b"tial\n"), vec!["partial"]);
+        assert_eq!(a.pending(), 0);
+    }
+
+    #[test]
+    fn crlf_and_empty_lines() {
+        let mut a = LineAssembler::new(64);
+        assert_eq!(feed_ok(&mut a, b"a\r\n\nb\n"), vec!["a", "", "b"]);
+    }
+
+    #[test]
+    fn oversized_line_poisons_the_stream() {
+        let mut a = LineAssembler::new(8);
+        let mut out = Vec::new();
+        assert_eq!(
+            a.feed(&[b'x'; 9], &mut out),
+            Err(FeedError::Oversized { limit: 8 }),
+            "an unterminated over-limit tail is rejected"
+        );
+        // poisoned: even a well-formed follow-up fails
+        assert!(a.feed(b"ok\n", &mut out).is_err());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn oversized_only_counts_the_unterminated_tail() {
+        let mut a = LineAssembler::new(8);
+        // 30 bytes arrive, but every line inside is short: fine
+        assert_eq!(feed_ok(&mut a, b"aaaa\nbbbb\ncccc\ndddd\neeee\nfff\n").len(), 6);
+    }
+}

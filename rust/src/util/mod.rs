@@ -5,11 +5,14 @@
 //! normally pulls from the ecosystem are implemented here: JSON
 //! (`json`), PRNG (`rng`), CLI parsing (`cli`),
 //! a thread pool + MPMC channel (`threadpool`), latency/throughput
-//! metrics (`metrics`), a criterion-style bench harness (`bench`), and a
-//! small property-testing helper (`proptest`).
+//! metrics (`metrics`), a criterion-style bench harness (`bench`), a
+//! small property-testing helper (`proptest`), client-side line framing
+//! (`framed`), and seeded-jitter exponential backoff (`backoff`).
 
+pub mod backoff;
 pub mod bench;
 pub mod cli;
+pub mod framed;
 pub mod json;
 pub mod metrics;
 pub mod proptest;
