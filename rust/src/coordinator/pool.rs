@@ -92,7 +92,14 @@ impl FaultPlan {
     /// `DATAMUX_FAULT_SEED=<n>` enables [`FaultPlan::chaos`] with that
     /// seed; unset or unparsable means no faults.
     pub fn from_env() -> FaultPlan {
-        match std::env::var("DATAMUX_FAULT_SEED").ok().and_then(|v| v.parse::<u64>().ok()) {
+        FaultPlan::from_env_value(std::env::var("DATAMUX_FAULT_SEED").ok().as_deref())
+    }
+
+    /// Parse an already-read `DATAMUX_FAULT_SEED` value. Pure — tests
+    /// inject the value here instead of mutating the process-global
+    /// environment under a multithreaded harness.
+    pub fn from_env_value(value: Option<&str>) -> FaultPlan {
+        match value.and_then(|v| v.parse::<u64>().ok()) {
             Some(seed) => FaultPlan::chaos(seed),
             None => FaultPlan::disabled(),
         }
@@ -184,7 +191,13 @@ pub(crate) struct PoolRequest {
     pub bucket: usize,
     /// absolute deadline (the client's total budget — never extended)
     pub deadline: Option<Instant>,
+    /// when the request was admitted (feeds e2e latency — never reset)
     pub submitted: Instant,
+    /// when the current hop was written to the wire; restamped by every
+    /// send, so hop-staleness sweeps judge the *current* shard, not the
+    /// request's whole lifetime (a failed-over or long-parked request
+    /// must not condemn the healthy connection it lands on)
+    pub sent_at: Instant,
     pub resubmits: u32,
     pub done: Completion,
 }
@@ -402,11 +415,16 @@ pub(crate) fn route_reply(
                     shared.expired.fetch_add(1, Ordering::Relaxed);
                     req.done.fulfill(Err(EngineError::DeadlineExceeded));
                 }
-                // transient shard-side conditions: place elsewhere. If
-                // the router is shutting down the channel is closed and
-                // the dropped completion fails typed (Shutdown).
+                // transient shard-side conditions: place elsewhere. The
+                // send blocks rather than dropping — losing the event
+                // would mis-answer an admitted request as Shutdown while
+                // the engine is still up. The monitor is the sole
+                // consumer and never blocks behind this channel, so a
+                // full buffer only delays the retry. A closed channel
+                // means real router shutdown, and the dropped
+                // completion's guard answers typed Shutdown.
                 "queue_full" | "overloaded" | "shutdown" | "unavailable" => {
-                    let _ = events.try_send(PoolEvent::Retry { shard, req });
+                    let _ = events.send(PoolEvent::Retry { shard, req });
                 }
                 _ => req
                     .done
@@ -476,7 +494,11 @@ impl ShardConn {
                 c.read_loop(reader_stream, shard, &shared, &events, n_classes);
                 c.dead.store(true, Ordering::Release);
                 let orphans = drain_orphans(&c.map, &shared);
-                let _ = events.try_send(PoolEvent::ConnDown {
+                // blocking send: orphans must reach the monitor or the
+                // failover guarantee is void (a full channel delays,
+                // never drops; closed means shutdown, where the dropped
+                // completions answer typed Shutdown)
+                let _ = events.send(PoolEvent::ConnDown {
                     shard,
                     generation: c.generation,
                     orphans,
@@ -631,6 +653,7 @@ mod tests {
             bucket: 0,
             deadline: None,
             submitted: Instant::now(),
+            sent_at: Instant::now(),
             resubmits: 0,
             done,
         })
@@ -781,14 +804,16 @@ mod tests {
     }
 
     #[test]
-    fn fault_plan_from_env_parses_seed() {
-        // env mutation is process-global: run both cases in one test
-        std::env::set_var("DATAMUX_FAULT_SEED", "1234");
-        let p = FaultPlan::from_env();
+    fn fault_plan_from_env_value_parses_seed() {
+        // the pure injected form: no process-global env mutation (other
+        // tests constructing ShardConfig::new run concurrently and read
+        // the real environment)
+        let p = FaultPlan::from_env_value(Some("1234"));
         assert!(p.enabled());
         assert_eq!(p.seed, 1234);
-        std::env::remove_var("DATAMUX_FAULT_SEED");
-        assert!(!FaultPlan::from_env().enabled());
+        assert!(!FaultPlan::from_env_value(None).enabled());
+        assert!(!FaultPlan::from_env_value(Some("not-a-number")).enabled());
+        assert!(!FaultPlan::from_env_value(Some("-3")).enabled());
     }
 
     /// Satellite: client-side v2 frame reassembly. Replies arrive

@@ -328,9 +328,14 @@ impl Core {
         &self,
         shard: &Shard,
         conn: &Arc<ShardConn>,
-        req: PoolRequest,
+        mut req: PoolRequest,
     ) -> Result<u64, PoolRequest> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        // restamp the hop clock: staleness sweeps must measure how long
+        // *this* connection has sat on the request, not how old the
+        // request is overall (failover/unparking resets the hop, never
+        // the deadline)
+        req.sent_at = Instant::now();
         let deadline_ms = req.deadline.map(|dl| {
             dl.saturating_duration_since(Instant::now())
                 .saturating_sub(self.cfg.rtt_margin)
@@ -561,26 +566,33 @@ impl ShardRouter {
                     return Err(note_shed(&self.stats, priority, e));
                 }
             };
-        // the hop costs a round trip: a budget at or under the margin
-        // cannot be met behind the wire, shed it now (typed, fast)
-        if let Some(dl) = deadline {
-            if dl.saturating_duration_since(Instant::now()) <= self.core.cfg.rtt_margin {
-                done.defuse();
-                return Err(note_shed(&self.stats, priority, SubmitError::Overloaded));
-            }
-        }
+        let now = Instant::now();
         let mut preq = PoolRequest {
             content,
             task: self.task,
             priority,
             bucket,
             deadline,
-            submitted: Instant::now(),
+            submitted: now,
+            sent_at: now, // restamped on every wire write
             resubmits: 0,
             done,
         };
         let start = self.core.pick_start(bucket);
+        // waiting at capacity backs off progressively (a fixed tight
+        // spin burns CPU under sustained saturation)
+        let mut wait = Duration::from_micros(200);
         loop {
+            // re-checked every pass: the hop costs a round trip, so a
+            // budget at or under the margin cannot be met behind the
+            // wire — shed it typed and fast instead of blocking past the
+            // deadline and shipping a zero remaining budget
+            if let Some(dl) = preq.deadline {
+                if dl.saturating_duration_since(Instant::now()) <= self.core.cfg.rtt_margin {
+                    preq.done.defuse();
+                    return Err(note_shed(&self.stats, priority, SubmitError::Overloaded));
+                }
+            }
             match self.core.try_place(start, preq, true) {
                 Ok(id) => {
                     self.stats.counters.submitted.fetch_add(1, Ordering::Relaxed);
@@ -599,7 +611,17 @@ impl ShardRouter {
                         return Err(SubmitError::QueueFull);
                     }
                     preq = r;
-                    std::thread::sleep(Duration::from_micros(200));
+                    // never sleep past the point where the budget dies:
+                    // wake exactly when the deadline check above sheds
+                    let mut nap = wait;
+                    if let Some(dl) = preq.deadline {
+                        nap = nap.min(
+                            dl.saturating_duration_since(Instant::now())
+                                .saturating_sub(self.core.cfg.rtt_margin),
+                        );
+                    }
+                    std::thread::sleep(nap);
+                    wait = (wait * 2).min(Duration::from_millis(5));
                     if self.shutdown.load(Ordering::Acquire) {
                         preq.done.defuse();
                         self.stats.counters.rejected.fetch_add(1, Ordering::Relaxed);
@@ -742,6 +764,33 @@ impl Drop for ShardRouter {
 // ---------------------------------------------------------------------------
 // monitor thread
 // ---------------------------------------------------------------------------
+
+/// What [`Monitor::sweep_stale`] found wrong with an in-flight entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Staleness {
+    /// a health probe unanswered past `probe_timeout`
+    Probe,
+    /// a request whose *current hop* is older than `hop_timeout`
+    Hop,
+}
+
+/// Staleness of one in-flight entry. Requests are judged by `sent_at` —
+/// the current hop's write time — never by `submitted`: a request that
+/// aged while parked or on a previous (dead) shard must not condemn the
+/// healthy connection it was failed over onto.
+fn entry_staleness(
+    e: &Entry,
+    now: Instant,
+    probe_timeout: Duration,
+    hop_timeout: Duration,
+) -> Option<Staleness> {
+    match e {
+        Entry::Probe { sent } => {
+            (now.duration_since(*sent) > probe_timeout).then_some(Staleness::Probe)
+        }
+        Entry::Req(r) => (now.duration_since(r.sent_at) > hop_timeout).then_some(Staleness::Hop),
+    }
+}
 
 struct Monitor {
     core: Arc<Core>,
@@ -887,15 +936,16 @@ impl Monitor {
     fn sweep_stale(&self, now: Instant) {
         for s in &self.core.shards {
             let Some(conn) = s.conn.lock().unwrap().as_ref().cloned() else { continue };
-            // backstop for a lost ConnDown event (full channel): a dead
-            // connection must still open the breaker or the shard would
-            // never be probed for re-adoption
+            // backstop for a missed ConnDown event (closed channel): a
+            // dead connection must still open the breaker or the shard
+            // would never be probed for re-adoption. Deliberately no
+            // join here: the reader may still be blocked delivering its
+            // ConnDown orphans to this very thread's channel — dropping
+            // the handle detaches it, and it exits right after the send.
             if conn.is_dead() {
                 let mut slot = s.conn.lock().unwrap();
                 if slot.as_ref().is_some_and(|c| Arc::ptr_eq(c, &conn)) {
                     slot.take();
-                    drop(slot);
-                    conn.join();
                     s.breaker.lock().unwrap().on_failure(now);
                 }
                 continue;
@@ -905,17 +955,11 @@ impl Monitor {
             {
                 let m = conn.map.lock().unwrap();
                 for e in m.values() {
-                    match e {
-                        Entry::Probe { sent } => {
-                            if now.duration_since(*sent) > self.core.cfg.probe_timeout {
-                                stale_probe = true;
-                            }
-                        }
-                        Entry::Req(r) => {
-                            if now.duration_since(r.submitted) > self.core.cfg.hop_timeout {
-                                stale_req = true;
-                            }
-                        }
+                    match entry_staleness(e, now, self.core.cfg.probe_timeout, self.core.cfg.hop_timeout)
+                    {
+                        Some(Staleness::Probe) => stale_probe = true,
+                        Some(Staleness::Hop) => stale_req = true,
+                        None => {}
                     }
                 }
             }
@@ -1070,6 +1114,45 @@ mod tests {
         }
         assert_eq!(Placement::from_str("sticky"), None);
         assert_eq!(Placement::default(), Placement::ByBucket);
+    }
+
+    #[test]
+    fn staleness_is_judged_per_hop_not_per_request_lifetime() {
+        use crate::coordinator::api::Priority;
+        let probe_t = Duration::from_secs(1);
+        let hop_t = Duration::from_secs(10);
+        let t0 = Instant::now();
+
+        let probe = Entry::Probe { sent: t0 };
+        assert_eq!(entry_staleness(&probe, t0 + Duration::from_millis(500), probe_t, hop_t), None);
+        assert_eq!(
+            entry_staleness(&probe, t0 + Duration::from_secs(2), probe_t, hop_t),
+            Some(Staleness::Probe)
+        );
+
+        // a request admitted 60s ago (far past hop_timeout) whose
+        // current hop was written 1s ago: NOT stale. Failover/unparking
+        // restamp sent_at, so one slow request can never serially
+        // condemn every healthy connection it lands on.
+        let req = Entry::Req(Box::new(PoolRequest {
+            content: vec![1, 45, 2],
+            task: TaskKind::Classify,
+            priority: Priority::Normal,
+            bucket: 0,
+            deadline: None,
+            submitted: t0,
+            sent_at: t0 + Duration::from_secs(60),
+            resubmits: 2,
+            done: Completion::cell(OnceCellSync::new()),
+        }));
+        let now = t0 + Duration::from_secs(61);
+        assert_eq!(entry_staleness(&req, now, probe_t, hop_t), None, "fresh hop, old request");
+        // only once the *hop itself* exceeds hop_timeout is it stale
+        let now = t0 + Duration::from_secs(75);
+        assert_eq!(entry_staleness(&req, now, probe_t, hop_t), Some(Staleness::Hop));
+        if let Entry::Req(mut r) = req {
+            r.done.defuse(); // synchronous test teardown, not a drop-guard answer
+        }
     }
 
     #[test]
