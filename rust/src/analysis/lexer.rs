@@ -1,0 +1,316 @@
+//! Line-preserving scrubber behind the `datamux lint` pass.
+//!
+//! Not a parser: a character state machine that splits a Rust source
+//! file into a *code channel* (string/char-literal contents and
+//! comments blanked to spaces) and a *comment channel* (the comment
+//! text each line carries). Rules run cheap token searches over the
+//! code channel — a banned token inside a string or comment can never
+//! fire — and read justifications (SAFETY notes, markers) from the
+//! comment channel.
+//!
+//! Handled: line and nested block comments, plain / byte / raw strings
+//! (any `#` depth), char literals vs lifetimes, escapes. Both channels
+//! keep the file's exact line structure, so every finding maps back to
+//! a real source line.
+
+/// One source file split into per-line code and comment channels.
+pub struct Scrubbed {
+    /// Original source lines, for allowlist matching and messages.
+    pub raw: Vec<String>,
+    /// Code with literal contents and comments blanked to spaces.
+    pub code: Vec<String>,
+    /// Comment text carried by each line (line, doc and block).
+    pub comments: Vec<String>,
+}
+
+#[derive(Clone, Copy)]
+enum State {
+    Code,
+    LineComment,
+    BlockComment { depth: u32 },
+    Str,
+    RawStr { hashes: usize },
+}
+
+/// Split `src` into its code and comment channels.
+pub fn scrub(src: &str) -> Scrubbed {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut code_lines = Vec::new();
+    let mut comment_lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = State::Code;
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(state, State::LineComment) {
+                state = State::Code;
+            }
+            code_lines.push(std::mem::take(&mut code));
+            comment_lines.push(std::mem::take(&mut comment));
+            i += 1;
+            continue;
+        }
+        let nxt = chars.get(i + 1).copied();
+        match state {
+            State::Code => {
+                if c == '/' && nxt == Some('/') {
+                    state = State::LineComment;
+                    i += 2;
+                } else if c == '/' && nxt == Some('*') {
+                    state = State::BlockComment { depth: 1 };
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !(i > 0 && is_word(chars[i - 1])) {
+                    if let Some((quote, hashes)) = raw_string_open(&chars, i) {
+                        for _ in i..quote {
+                            code.push(' ');
+                        }
+                        code.push('"');
+                        state = State::RawStr { hashes };
+                        i = quote + 1;
+                    } else if c == 'b' && nxt == Some('"') {
+                        code.push(' ');
+                        code.push('"');
+                        state = State::Str;
+                        i += 2;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // char literal iff escaped or exactly one char
+                    // wide; otherwise a lifetime, which stays code
+                    let is_char = nxt == Some('\\')
+                        || (chars.get(i + 2) == Some(&'\'') && nxt != Some('\''));
+                    match char_literal_end(&chars, i).filter(|_| is_char) {
+                        Some(end) => {
+                            code.push('\'');
+                            for _ in i + 1..end {
+                                code.push(' ');
+                            }
+                            code.push('\'');
+                            i = end + 1;
+                        }
+                        None => {
+                            code.push('\'');
+                            i += 1;
+                        }
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            State::BlockComment { depth } => {
+                if c == '/' && nxt == Some('*') {
+                    state = State::BlockComment { depth: depth + 1 };
+                    i += 2;
+                } else if c == '*' && nxt == Some('/') {
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment { depth: depth - 1 }
+                    };
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    code.push(' ');
+                    // consume the escaped char, but never a newline:
+                    // the line push above must still run for it
+                    if nxt.is_some() && nxt != Some('\n') {
+                        code.push(' ');
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            State::RawStr { hashes } => {
+                if c == '"' && (1..=hashes).all(|h| chars.get(i + h) == Some(&'#')) {
+                    code.push('"');
+                    for _ in 0..hashes {
+                        code.push(' ');
+                    }
+                    state = State::Code;
+                    i += 1 + hashes;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    code_lines.push(code);
+    comment_lines.push(comment);
+    let raw: Vec<String> = src.split('\n').map(str::to_string).collect();
+    debug_assert_eq!(raw.len(), code_lines.len());
+    debug_assert_eq!(raw.len(), comment_lines.len());
+    Scrubbed { raw, code: code_lines, comments: comment_lines }
+}
+
+/// If a raw (or raw byte) string opens at `i`, the index of its opening
+/// quote and its `#` count.
+fn raw_string_open(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    (chars.get(j) == Some(&'"')).then_some((j, hashes))
+}
+
+/// Index of the closing quote of a char literal opening at `i`, if it
+/// closes on the same line.
+fn char_literal_end(chars: &[char], i: usize) -> Option<usize> {
+    let mut j = i + 1;
+    while j < chars.len() && chars[j] != '\n' {
+        match chars[j] {
+            '\\' => j += 2,
+            '\'' => return Some(j),
+            _ => j += 1,
+        }
+    }
+    None
+}
+
+/// Identifier-forming character (the token boundary test).
+pub fn is_word(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Count occurrences of `word` in `line` with word boundaries on both
+/// sides — `Mutex` does not match inside `TrackedMutex`.
+pub fn count_word(line: &str, word: &str) -> usize {
+    let mut n = 0;
+    let mut start = 0;
+    while let Some(pos) = line[start..].find(word) {
+        let at = start + pos;
+        let end = at + word.len();
+        let before = line[..at].chars().next_back().is_none_or(|c| !is_word(c));
+        let after = line[end..].chars().next().is_none_or(|c| !is_word(c));
+        if before && after {
+            n += 1;
+        }
+        start = end;
+    }
+    n
+}
+
+/// `count_word(..) > 0`.
+pub fn has_word(line: &str, word: &str) -> bool {
+    count_word(line, word) > 0
+}
+
+/// Does `line` invoke macro `needle` (word boundary on the left only —
+/// the `!` already terminates the token on the right)?
+pub fn has_macro(line: &str, needle: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = line[start..].find(needle) {
+        let at = start + pos;
+        if line[..at].chars().next_back().is_none_or(|c| !is_word(c)) {
+            return true;
+        }
+        start = at + needle.len();
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_leave_the_code_channel() {
+        let s = scrub("let x = 1; // trailing .unwrap()\n/* block\npanic! */ let y = 2;\n");
+        assert!(!s.code[0].contains(".unwrap()"));
+        assert!(s.comments[0].contains(".unwrap()"));
+        assert!(!s.code[1].contains("panic!"));
+        assert!(s.comments[1].contains("panic!"));
+        assert!(s.code[2].contains("let y = 2;"));
+    }
+
+    #[test]
+    fn strings_are_blanked_but_quotes_remain() {
+        let s = scrub("let s = \"panic! // no comment\";\nlet t = 1;\n");
+        assert!(!s.code[0].contains("panic!"));
+        assert!(!s.code[0].contains("//"));
+        assert!(s.comments[0].is_empty());
+        assert_eq!(s.code[0].matches('"').count(), 2);
+        // string escapes cannot hide the closing quote
+        let s = scrub("let q = \"a\\\"b\"; q.unwrap();\n");
+        assert!(s.code[0].contains(".unwrap()"));
+    }
+
+    #[test]
+    fn raw_strings_close_only_on_matching_hashes() {
+        let s = scrub("let r = r#\"inner \" quote panic!\"#; x.unwrap();\n");
+        assert!(!s.code[0].contains("panic!"));
+        assert!(s.code[0].contains(".unwrap()"));
+    }
+
+    #[test]
+    fn char_literals_blank_but_lifetimes_survive() {
+        let s = scrub("fn f<'a>(x: &'a str) -> char { '{' }\n");
+        assert!(s.code[0].contains("<'a>"));
+        assert!(s.code[0].contains("&'a str"));
+        // the brace inside the char literal must not skew brace depth
+        assert!(!s.code[0].contains("'{'"));
+        let s = scrub("let c = '\\n'; let d = b'\\t';\n");
+        assert!(!s.code[0].contains('n'), "escape contents blanked: {}", s.code[0]);
+    }
+
+    #[test]
+    fn nested_block_comments_terminate_correctly() {
+        let s = scrub("/* outer /* inner */ still comment */ code();\n");
+        assert!(s.code[0].contains("code();"));
+        assert!(s.comments[0].contains("still comment"));
+    }
+
+    #[test]
+    fn multiline_strings_keep_line_structure() {
+        let s = scrub("let s = \"line one\n  line two .unwrap()\";\nnext();\n");
+        assert_eq!(s.code.len(), 4);
+        assert!(!s.code[1].contains(".unwrap()"));
+        assert!(s.code[2].contains("next();"));
+    }
+
+    #[test]
+    fn word_boundaries_reject_identifier_substrings() {
+        assert!(has_word("let m: Mutex<u32>;", "Mutex"));
+        assert!(!has_word("let m: TrackedMutex<u32>;", "Mutex"));
+        assert!(!has_word("let g: MutexGuard<u32>;", "Mutex"));
+        assert_eq!(count_word("unsafe impl Send {} unsafe impl Sync {}", "unsafe"), 2);
+        assert!(has_macro("    panic!(\"boom\")", "panic!"));
+        assert!(!has_macro("    dont_panic!(1)", "panic!"));
+    }
+}

@@ -1,0 +1,566 @@
+//! `datamux lint` — repo-native static analysis over the crate's own
+//! sources.
+//!
+//! `cargo run -- --cmd lint` (or the `lint` CI step) scans `src/` with
+//! a lightweight lexer ([`lexer::scrub`]) and enforces four invariants
+//! that ordinary rustc/clippy cannot see (documented in DESIGN.md,
+//! "Concurrency invariants"):
+//!
+//! 1. **unsafe-safety** — every `unsafe` outside test code carries a
+//!    `SAFETY:` (or `# Safety` doc) justification in the comment block
+//!    attached to it.
+//! 2. **unsafe-inventory** — the per-file count of non-test `unsafe`
+//!    tokens matches the pin in [`UNSAFE_INVENTORY`]. Growing the
+//!    unsafe surface fails the lint until the pin is updated in the
+//!    same change, which makes it a reviewed, deliberate act.
+//! 3. **serving-panic** — no `.unwrap()` / `.expect(` / `panic!` in
+//!    non-test serving code (`coordinator/`, `runtime/`, `main.rs`)
+//!    outside the justified [`PANIC_ALLOWLIST`].
+//! 4. **hot-path-alloc** — a function armed by the marker comment
+//!    [`HOT_PATH_MARKER`] must not contain an allocating construct
+//!    ([`HOT_PATH_BANNED`]).
+//! 5. **raw-lock** — `coordinator/` non-test code must not name the
+//!    raw `Mutex` / `Condvar` / `RwLock` primitives: every coordinator
+//!    lock goes through the instrumented wrappers in `util::sync`, so
+//!    the runtime lock-order/leak detector sees every acquisition.
+//!
+//! Test code (any `#[cfg(test)]`-attributed item) is exempt from all
+//! rules. The pass is deliberately token-based, not a full parser: it
+//! understands strings, comments and char literals well enough that a
+//! banned token inside either can never misfire, and nothing else.
+
+mod lexer;
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use lexer::{scrub, Scrubbed};
+
+use lexer::{count_word, has_macro, has_word, is_word};
+
+/// Marker comment (this constant's exact text) that arms the
+/// allocation ban on the next `fn`. Written directly above the
+/// function, after any doc comments.
+pub const HOT_PATH_MARKER: &str = "lint: hot-path";
+
+/// Allocating constructs banned inside marker-armed functions.
+pub const HOT_PATH_BANNED: &[&str] = &["Vec::new(", ".to_vec(", ".clone(", "format!", "Box::new("];
+
+/// Pinned per-file count of non-test `unsafe` tokens, relative to the
+/// scanned root. A file whose count drifts from its pin — including a
+/// first `unsafe` in an unlisted file — fails the lint until the pin
+/// is updated in the same change. Pinned files absent from the scanned
+/// tree are skipped, so fixture trees can be linted with the same
+/// driver.
+pub const UNSAFE_INVENTORY: &[(&str, usize)] = &[
+    ("coordinator/reactor.rs", 5),
+    ("coordinator/scheduler.rs", 2),
+    ("runtime/native/forward.rs", 3),
+    ("runtime/native/gemm.rs", 7),
+    ("runtime/native/quant.rs", 1),
+    ("runtime/native/simd.rs", 12),
+    ("runtime/weights.rs", 3),
+];
+
+/// One reviewed exception to the serving-panic rule.
+pub struct PanicAllow {
+    /// `/`-separated path suffix the entry applies to.
+    pub file: &'static str,
+    /// Substring of the raw offending line (matched against the
+    /// original source, so string contents count).
+    pub needle: &'static str,
+    /// Why the panic cannot fire — or is the correct response — on the
+    /// serving path.
+    pub why: &'static str,
+}
+
+/// The serving-panic exceptions. Keep this list short and each `why`
+/// honest: an entry is a claim that the panic is unreachable from the
+/// request path, reviewed like any other invariant.
+pub const PANIC_ALLOWLIST: &[PanicAllow] = &[
+    PanicAllow {
+        file: "coordinator/scheduler.rs",
+        needle: "unsupported serving task",
+        why: "task strings are validated at backend load; mux templates are \
+              built at startup, not per request",
+    },
+    PanicAllow {
+        file: "runtime/weights.rs",
+        needle: ".try_into().unwrap()",
+        why: "infallible: the slice is statically four bytes",
+    },
+    PanicAllow {
+        file: "runtime/manifest.rs",
+        needle: "unknown task",
+        why: "manifest task fields are checked when artifacts load; \
+              output_len runs at backend construction, not per request",
+    },
+    PanicAllow {
+        file: "runtime/native/gemm.rs",
+        needle: "a pool job panicked",
+        why: "deliberate re-raise of a worker panic after the join — the \
+              caller must never observe partial output as success",
+    },
+];
+
+/// Which rule a [`Violation`] came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    UnsafeSafety,
+    UnsafeInventory,
+    ServingPanic,
+    HotPathAlloc,
+    RawLock,
+}
+
+impl Rule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::UnsafeSafety => "unsafe-safety",
+            Rule::UnsafeInventory => "unsafe-inventory",
+            Rule::ServingPanic => "serving-panic",
+            Rule::HotPathAlloc => "hot-path-alloc",
+            Rule::RawLock => "raw-lock",
+        }
+    }
+}
+
+/// One finding: file, 1-based line, rule, human-readable detail.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Path relative to the scanned root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule.name(), self.message)
+    }
+}
+
+/// Outcome of a [`lint_dir`] run.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub violations: Vec<Violation>,
+    pub files_scanned: usize,
+}
+
+/// Lint every `.rs` file under `src_root` (recursively, sorted, so
+/// output order is deterministic).
+pub fn lint_dir(src_root: &Path) -> io::Result<LintReport> {
+    let mut files = Vec::new();
+    collect_rs(src_root, &mut files)?;
+    files.sort();
+    let mut report = LintReport::default();
+    for path in &files {
+        let rel: String = path
+            .strip_prefix(src_root)
+            .unwrap_or(path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = fs::read_to_string(path)?;
+        report.violations.extend(lint_source(&rel, &src));
+        report.files_scanned += 1;
+    }
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint one file's source. `rel` is the `/`-separated path relative to
+/// the source root; it drives the per-directory rule scopes.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Violation> {
+    let s = scrub(src);
+    let mask = test_mask(&s.code);
+    let mut out = Vec::new();
+    let serving = in_serving_scope(rel);
+    let coordinator = rel.starts_with("coordinator/");
+    let mut unsafe_count = 0usize;
+    for (i, code) in s.code.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        let hits = count_word(code, "unsafe");
+        if hits > 0 {
+            unsafe_count += hits;
+            if !safety_justified(&s, i) {
+                out.push(Violation {
+                    file: rel.to_string(),
+                    line: i + 1,
+                    rule: Rule::UnsafeSafety,
+                    message: "`unsafe` without an attached SAFETY justification".to_string(),
+                });
+            }
+        }
+        if serving {
+            serving_panic_check(rel, &s, i, &mut out);
+        }
+        if coordinator {
+            for tok in ["Mutex", "Condvar", "RwLock"] {
+                if has_word(code, tok) {
+                    out.push(Violation {
+                        file: rel.to_string(),
+                        line: i + 1,
+                        rule: Rule::RawLock,
+                        message: format!(
+                            "raw `{tok}` in coordinator code — use the tracked \
+                             wrappers in `util::sync`"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    check_inventory(rel, unsafe_count, &mut out);
+    check_hot_paths(rel, &s, &mask, &mut out);
+    out
+}
+
+/// Serving scope for the panic rule: the request path lives under
+/// `coordinator/` and `runtime/`, plus the binary entrypoint. `util/`
+/// (scaffolding), `workload/`, `baseline/` and `tokenizer/` (offline
+/// tooling) may unwrap.
+fn in_serving_scope(rel: &str) -> bool {
+    rel.starts_with("coordinator/") || rel.starts_with("runtime/") || rel == "main.rs"
+}
+
+fn serving_panic_check(rel: &str, s: &Scrubbed, i: usize, out: &mut Vec<Violation>) {
+    let code = &s.code[i];
+    let tok = if code.contains(".unwrap()") {
+        ".unwrap()"
+    } else if code.contains(".expect(") {
+        ".expect("
+    } else if has_macro(code, "panic!") {
+        "panic!"
+    } else {
+        return;
+    };
+    let allowed =
+        PANIC_ALLOWLIST.iter().any(|a| rel.ends_with(a.file) && s.raw[i].contains(a.needle));
+    if !allowed {
+        out.push(Violation {
+            file: rel.to_string(),
+            line: i + 1,
+            rule: Rule::ServingPanic,
+            message: format!(
+                "`{tok}` on a serving path — return a typed error instead \
+                 (or add a justified allowlist entry)"
+            ),
+        });
+    }
+}
+
+fn check_inventory(rel: &str, count: usize, out: &mut Vec<Violation>) {
+    let pinned = UNSAFE_INVENTORY.iter().find(|(f, _)| *f == rel).map_or(0, |&(_, c)| c);
+    if count != pinned {
+        out.push(Violation {
+            file: rel.to_string(),
+            line: 1,
+            rule: Rule::UnsafeInventory,
+            message: format!(
+                "non-test `unsafe` count is {count} but the inventory pins \
+                 {pinned} — update UNSAFE_INVENTORY in the same change"
+            ),
+        });
+    }
+}
+
+fn check_hot_paths(rel: &str, s: &Scrubbed, mask: &[bool], out: &mut Vec<Violation>) {
+    for i in 0..s.comments.len() {
+        if mask[i] || !s.comments[i].contains(HOT_PATH_MARKER) {
+            continue;
+        }
+        // the armed fn must open within the next few lines (attributes
+        // between the marker and the signature are fine)
+        let fn_line = (i + 1..s.code.len().min(i + 6)).find(|&j| has_word(&s.code[j], "fn"));
+        let Some(fn_line) = fn_line else {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: i + 1,
+                rule: Rule::HotPathAlloc,
+                message: "dangling hot-path marker: no fn within 5 lines".to_string(),
+            });
+            continue;
+        };
+        let end = item_end(&s.code, fn_line);
+        for l in fn_line..=end {
+            for tok in HOT_PATH_BANNED {
+                if banned_hit(&s.code[l], tok) {
+                    out.push(Violation {
+                        file: rel.to_string(),
+                        line: l + 1,
+                        rule: Rule::HotPathAlloc,
+                        message: format!("`{tok}` inside a hot-path function"),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Does `line` contain banned construct `tok`? Needles that start with
+/// a letter get a word-boundary check on the left; leading-`.` needles
+/// need none.
+fn banned_hit(line: &str, tok: &str) -> bool {
+    let named = tok.starts_with(|c: char| c.is_alphabetic());
+    let mut start = 0;
+    while let Some(pos) = line[start..].find(tok) {
+        let at = start + pos;
+        if !named || line[..at].chars().next_back().is_none_or(|c| !is_word(c)) {
+            return true;
+        }
+        start = at + tok.len();
+    }
+    false
+}
+
+const SAFETY_MARKS: [&str; 2] = ["SAFETY:", "# Safety"];
+
+fn is_safety(comment: &str) -> bool {
+    SAFETY_MARKS.iter().any(|m| comment.contains(m))
+}
+
+/// Walk up from the line holding `unsafe` through the comment /
+/// attribute / continuation lines attached to it, accepting the first
+/// safety mark found. One comment may cover a contiguous run of unsafe
+/// items (paired `unsafe impl`s), and a mark above a multi-line
+/// statement covers an `unsafe` on its continuation lines (a line not
+/// ending in `;`, `{` or `}` cannot end a statement, so the walk keeps
+/// climbing through it).
+fn safety_justified(s: &Scrubbed, i: usize) -> bool {
+    if is_safety(&s.comments[i]) {
+        return true;
+    }
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        if is_safety(&s.comments[j]) {
+            return true;
+        }
+        let t = s.code[j].trim();
+        let pure_comment = t.is_empty() && !s.comments[j].trim().is_empty();
+        let attr = t.starts_with("#[") || t.starts_with("#![");
+        let continuation = !t.is_empty() && !t.ends_with([';', '{', '}']);
+        if !(pure_comment || attr || continuation || has_word(t, "unsafe")) {
+            return false;
+        }
+    }
+    false
+}
+
+/// Mark every line covered by a `#[cfg(test)]`-attributed item —
+/// module, fn, impl, or a brace-less item up to its `;`. Rules skip
+/// masked lines: test code may unwrap, panic and use raw locks freely.
+fn test_mask(code: &[String]) -> Vec<bool> {
+    let mut mask = vec![false; code.len()];
+    for start in 0..code.len() {
+        if !code[start].contains("#[cfg(test)]") {
+            continue;
+        }
+        let end = item_end(code, start);
+        for m in mask.iter_mut().take(end + 1).skip(start) {
+            *m = true;
+        }
+    }
+    mask
+}
+
+/// Last line of the item starting at `start`: the line closing the
+/// brace pair opened first, or the first top-level `;` on a later line
+/// for brace-less items. Runs over the code channel, so braces in
+/// strings, chars and comments cannot skew the depth.
+fn item_end(code: &[String], start: usize) -> usize {
+    let mut depth = 0i32;
+    let mut opened = false;
+    for (l, line) in code.iter().enumerate().skip(start) {
+        for ch in line.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => {
+                    depth -= 1;
+                    if opened && depth == 0 {
+                        return l;
+                    }
+                }
+                ';' if !opened && l > start => return l,
+                _ => {}
+            }
+        }
+    }
+    code.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(v: &[Violation]) -> Vec<Rule> {
+        v.iter().map(|x| x.rule).collect()
+    }
+
+    #[test]
+    fn unwrap_fires_only_in_serving_scope() {
+        let src = "fn f() { x.unwrap(); }\n";
+        assert!(rules(&lint_source("coordinator/a.rs", src)).contains(&Rule::ServingPanic));
+        assert!(rules(&lint_source("runtime/b.rs", src)).contains(&Rule::ServingPanic));
+        assert!(rules(&lint_source("main.rs", src)).contains(&Rule::ServingPanic));
+        assert!(lint_source("util/c.rs", src).is_empty());
+        // unwrap_or_else and friends never match the exact token
+        let ok = "fn f() { x.unwrap_or_else(e); y.unwrap_or(0); }\n";
+        assert!(lint_source("coordinator/a.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn expect_and_panic_fire_too() {
+        let src = "fn f() { x.expect(\"boom\"); }\n";
+        assert!(rules(&lint_source("runtime/a.rs", src)).contains(&Rule::ServingPanic));
+        let src = "fn f() { panic!(\"boom\"); }\n";
+        assert!(rules(&lint_source("runtime/a.rs", src)).contains(&Rule::ServingPanic));
+    }
+
+    #[test]
+    fn allowlist_suppresses_by_file_and_needle() {
+        let src = "fn f(b: &[u8]) -> u32 { u32::from_le_bytes(b.try_into().unwrap()) }\n";
+        assert!(lint_source("runtime/weights.rs", src).is_empty());
+        // same line in another file still fires
+        assert!(!lint_source("runtime/other.rs", src).is_empty());
+    }
+
+    #[test]
+    fn tokens_in_strings_and_comments_never_fire() {
+        let src = "fn f() { log(\".unwrap() panic!\"); } // .unwrap() panic!\n";
+        assert!(lint_source("coordinator/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_items_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f() { x.unwrap(); }\n}\n";
+        assert!(lint_source("coordinator/a.rs", src).is_empty());
+        // a cfg(test) fn outside a tests module is exempt too
+        let src = "#[cfg(test)]\npub fn helper() -> u32 {\n    x.unwrap()\n}\n";
+        assert!(lint_source("coordinator/a.rs", src).is_empty());
+        // but code after the exempt item is back in scope
+        let src = "#[cfg(test)]\nfn h() { x.unwrap(); }\nfn f() { y.unwrap(); }\n";
+        let v = lint_source("coordinator/a.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 3);
+    }
+
+    #[test]
+    fn unsafe_requires_safety_comment() {
+        let bad = "fn f() {\n    unsafe { g() };\n}\n";
+        assert!(rules(&lint_source("util/a.rs", bad)).contains(&Rule::UnsafeSafety));
+        let good = "fn f() {\n    // SAFETY: g has no preconditions\n    unsafe { g() };\n}\n";
+        assert!(!rules(&lint_source("util/a.rs", good)).contains(&Rule::UnsafeSafety));
+        // doc-style safety sections satisfy the rule as well
+        let doc = "/// # Safety\n/// caller checks alignment\npub unsafe fn g() {}\n";
+        assert!(!rules(&lint_source("util/a.rs", doc)).contains(&Rule::UnsafeSafety));
+    }
+
+    #[test]
+    fn safety_comment_covers_unsafe_groups_and_continuations() {
+        let pair = "// SAFETY: both impls hold for the same reason\n\
+                    unsafe impl Send for X {}\nunsafe impl Sync for X {}\n";
+        assert!(!rules(&lint_source("util/a.rs", pair)).contains(&Rule::UnsafeSafety));
+        let cont = "fn f() {\n    // SAFETY: checked above\n    let x =\n        \
+                    unsafe { g() };\n}\n";
+        assert!(!rules(&lint_source("util/a.rs", cont)).contains(&Rule::UnsafeSafety));
+    }
+
+    #[test]
+    fn inventory_pins_unsafe_counts() {
+        // an unlisted file gains an unsafe block: count 1 vs pin 0
+        let src = "fn f() {\n    // SAFETY: fine\n    unsafe { g() };\n}\n";
+        let v = lint_source("util/new_file.rs", src);
+        assert!(rules(&v).contains(&Rule::UnsafeInventory), "{v:?}");
+        // a pinned file with the right count is clean
+        let two = "// SAFETY: raw fd, closed once\nunsafe impl Send for X {}\n\
+                   unsafe impl Sync for X {}\n";
+        let v = lint_source("coordinator/scheduler.rs", two);
+        assert!(!rules(&v).contains(&Rule::UnsafeInventory), "{v:?}");
+    }
+
+    #[test]
+    fn hot_path_marker_bans_allocation() {
+        let marker = format!("// {HOT_PATH_MARKER}");
+        let bad = format!("{marker}\nfn f() {{\n    let v = Vec::new();\n}}\n");
+        let v = lint_source("util/a.rs", &bad);
+        assert!(rules(&v).contains(&Rule::HotPathAlloc), "{v:?}");
+        assert_eq!(v[0].line, 3);
+        for tok in ["x.to_vec()", "x.clone()", "format!(\"x\")", "Box::new(1)"] {
+            let bad = format!("{marker}\nfn f() {{\n    let v = {tok};\n}}\n");
+            assert!(
+                rules(&lint_source("util/a.rs", &bad)).contains(&Rule::HotPathAlloc),
+                "{tok} not caught"
+            );
+        }
+        let good = format!("{marker}\nfn f(x: &mut [f32]) {{\n    x[0] = 1.0;\n}}\n");
+        assert!(lint_source("util/a.rs", &good).is_empty());
+        // an unmarked fn may allocate freely
+        assert!(lint_source("util/a.rs", "fn f() { let v = Vec::new(); }\n").is_empty());
+        // a marker with no fn is itself an error
+        let dangling = format!("{marker}\nconst X: u32 = 1;\n");
+        assert!(rules(&lint_source("util/a.rs", &dangling)).contains(&Rule::HotPathAlloc));
+    }
+
+    #[test]
+    fn raw_locks_banned_in_coordinator_only() {
+        let src = "use std::sync::Mutex;\nfn f(m: &Mutex<u32>) {}\n";
+        let v = lint_source("coordinator/a.rs", src);
+        assert_eq!(rules(&v), [Rule::RawLock, Rule::RawLock]);
+        assert!(lint_source("runtime/native/a.rs", src).is_empty());
+        for tok in ["Condvar", "RwLock"] {
+            let src = format!("fn f(c: &{tok}) {{}}\n");
+            assert!(
+                rules(&lint_source("coordinator/a.rs", &src)).contains(&Rule::RawLock),
+                "{tok} not caught"
+            );
+        }
+        // the tracked wrappers never match the raw tokens
+        let ok = "use crate::util::sync::{TrackedCondvar, TrackedMutex};\n\
+                  fn f(m: &TrackedMutex<u32>, c: &TrackedCondvar) {}\n";
+        assert!(lint_source("coordinator/a.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn allowlist_entries_carry_justifications() {
+        for a in PANIC_ALLOWLIST {
+            assert!(!a.why.is_empty(), "{} entry missing a why", a.file);
+        }
+        for (file, count) in UNSAFE_INVENTORY {
+            assert!(*count > 0, "{file} pinned at zero — drop the entry instead");
+        }
+    }
+
+    #[test]
+    fn violation_display_is_grep_friendly() {
+        let v = Violation {
+            file: "coordinator/a.rs".to_string(),
+            line: 7,
+            rule: Rule::ServingPanic,
+            message: "boom".to_string(),
+        };
+        assert_eq!(v.to_string(), "coordinator/a.rs:7: [serving-panic] boom");
+    }
+}

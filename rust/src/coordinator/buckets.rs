@@ -66,7 +66,10 @@ impl Buckets {
     }
 
     pub fn max_len(&self) -> usize {
-        *self.lens.last().unwrap()
+        // `new` always appends the terminal `seq_len_max` bucket, so the
+        // registry is never empty; read an (impossible) empty registry
+        // as 0 rather than panicking on the serving path
+        self.lens.last().copied().unwrap_or(0)
     }
 
     pub fn len_of(&self, idx: usize) -> usize {
@@ -75,6 +78,7 @@ impl Buckets {
 
     /// Index of the smallest bucket that fits a `content_len`-token row;
     /// `None` when the row exceeds the model max (reject at admission).
+    // lint: hot-path
     pub fn index_for(&self, content_len: usize) -> Option<usize> {
         if content_len == 0 {
             return None;

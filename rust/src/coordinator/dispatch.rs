@@ -24,13 +24,14 @@
 //! with `Shutdown`.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::runtime::InferenceBackend;
 use crate::tokenizer::Tokenizer;
+use crate::util::sync::{rank, TrackedMutex};
 use crate::util::threadpool::Channel;
 
 use super::api::{BucketStatus, LaneStatus};
@@ -54,7 +55,7 @@ pub struct DispatchState {
     /// FIFO per sequence-length bucket, requests routed by shape at
     /// admission so every stolen wave is shape-homogeneous
     pub queue: BucketQueues,
-    gate: Mutex<AdaptiveN>,
+    gate: TrackedMutex<AdaptiveN>,
     epoch: Instant,
     live: AtomicUsize,
 }
@@ -69,7 +70,11 @@ impl DispatchState {
         let n_lanes = candidates.len();
         DispatchState {
             queue: BucketQueues::new(n_buckets, queue_cap),
-            gate: Mutex::new(AdaptiveN::new(candidates, exec_time_us)),
+            gate: TrackedMutex::new(
+                "dispatch.gate",
+                rank::DISPATCH_GATE,
+                AdaptiveN::new(candidates, exec_time_us),
+            ),
             epoch: Instant::now(),
             live: AtomicUsize::new(n_lanes),
         }
@@ -81,7 +86,7 @@ impl DispatchState {
 
     /// Record one admission into the rate estimate.
     pub fn on_arrival(&self) {
-        self.gate.lock().unwrap().on_arrival(self.now_us());
+        self.gate.lock().on_arrival(self.now_us());
     }
 
     /// Pull-gate decision for a lane multiplexing `lane_n` requests.
@@ -89,7 +94,7 @@ impl DispatchState {
     /// large lanes engaged on idle traffic.
     pub fn should_pull(&self, lane_n: usize) -> bool {
         let depth = self.queue.len();
-        let mut g = self.gate.lock().unwrap();
+        let mut g = self.gate.lock();
         g.decay(self.now_us());
         g.should_pull(lane_n, depth)
     }
@@ -99,7 +104,7 @@ impl DispatchState {
     /// admission queue and fail its backlog — from here on submissions
     /// (and only from here on) answer `Shutdown`.
     pub fn lane_died(&self, lane_n: usize) {
-        self.gate.lock().unwrap().remove_candidate(lane_n);
+        self.gate.lock().remove_candidate(lane_n);
         if self.live.fetch_sub(1, Ordering::AcqRel) == 1 {
             self.queue.close();
             // nobody will pull again: drain what was admitted (every

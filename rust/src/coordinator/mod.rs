@@ -43,7 +43,7 @@ pub mod server;
 pub mod shards;
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -51,6 +51,7 @@ use anyhow::Result;
 use crate::runtime::{InferenceBackend, LoadedModel};
 use crate::tokenizer::{TokenizeError, Tokenizer};
 use crate::util::metrics::{CounterSnapshot, LatencySummary};
+use crate::util::sync::{rank, TrackedMutex};
 use crate::util::threadpool::{Channel, OnceCellSync, TrySendError};
 
 pub use api::{
@@ -162,9 +163,13 @@ fn prepare_request(
                 other => SubmitError::Tokenize(other.to_string()),
             })?,
     };
-    let bucket = buckets
-        .index_for(content.len())
-        .expect("length validated against the terminal bucket");
+    // the length was validated against the terminal bucket above, so a
+    // miss here means the registry itself is inconsistent — surface it as
+    // a typed reject rather than a panic on the serving path
+    let bucket = match buckets.index_for(content.len()) {
+        Some(b) => b,
+        None => return Err(SubmitError::TooLong { got: content.len(), max }),
+    };
     let deadline = req.deadline.map(|d| Instant::now() + d);
     Ok((content, bucket, deadline, req.priority))
 }
@@ -185,7 +190,7 @@ const OVERLOAD_MARGIN: f64 = 2.0;
 /// counter; windows shorter than 50ms are ignored so per-request calls
 /// stay cheap and the EWMA is not dominated by timer noise.
 struct DrainMeter {
-    inner: Mutex<DrainWindow>,
+    inner: TrackedMutex<DrainWindow>,
 }
 
 struct DrainWindow {
@@ -198,18 +203,18 @@ struct DrainWindow {
 impl DrainMeter {
     fn new() -> Self {
         DrainMeter {
-            inner: Mutex::new(DrainWindow {
-                last_completed: 0,
-                last_at: Instant::now(),
-                rate: 0.0,
-            }),
+            inner: TrackedMutex::new(
+                "engine.drain_meter",
+                rank::DISPATCH_GATE,
+                DrainWindow { last_completed: 0, last_at: Instant::now(), rate: 0.0 },
+            ),
         }
     }
 
     /// Update with the cumulative completion count; returns the current
     /// completions/sec estimate (0.0 while cold).
     fn observe(&self, completed: u64) -> f64 {
-        let mut w = self.inner.lock().unwrap();
+        let mut w = self.inner.lock();
         let dt = w.last_at.elapsed();
         if dt >= Duration::from_millis(50) {
             let inst = completed.saturating_sub(w.last_completed) as f64 / dt.as_secs_f64();
@@ -875,13 +880,13 @@ impl Submit for MuxRouter {
 
     fn latency(&self) -> LatencySummary {
         let mut it = self.lanes.iter().map(|l| l.stats.e2e_latency.summary());
-        let first = it.next().expect("router has at least one lane");
+        let first = it.next().unwrap_or_default();
         it.fold(first, LatencySummary::merge)
     }
 
     fn queue_wait(&self) -> LatencySummary {
         let mut it = self.lanes.iter().map(|l| l.stats.queue_wait.summary());
-        let first = it.next().expect("router has at least one lane");
+        let first = it.next().unwrap_or_default();
         it.fold(first, LatencySummary::merge)
     }
 

@@ -120,6 +120,9 @@ impl AdaptiveN {
     }
 
     /// `choose_checked`, for callers that know candidates remain.
+    /// Test-only: production callers go through `should_pull`, which
+    /// handles the no-candidates-left case without panicking.
+    #[cfg(test)]
     pub fn choose(&self, queue_depth: usize) -> usize {
         self.choose_checked(queue_depth).expect("AdaptiveN has no candidates left")
     }

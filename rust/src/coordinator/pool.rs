@@ -21,7 +21,7 @@ use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
@@ -29,6 +29,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::util::framed::LineAssembler;
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::metrics::Histogram;
+use crate::util::sync::{rank, TrackedMutex};
 use crate::util::threadpool::Channel;
 
 use super::api::{Priority, TaskKind};
@@ -126,7 +127,7 @@ struct WriteFx {
 pub struct FaultInjector {
     plan: FaultPlan,
     /// LCG state (Knuth MMIX constants)
-    state: Mutex<u64>,
+    state: TrackedMutex<u64>,
 }
 
 impl FaultInjector {
@@ -134,7 +135,9 @@ impl FaultInjector {
         let seed = plan.seed;
         FaultInjector {
             plan,
-            state: Mutex::new(
+            state: TrackedMutex::new(
+                "pool.fault",
+                rank::FAULT_STATE,
                 seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407),
             ),
         }
@@ -145,7 +148,7 @@ impl FaultInjector {
     }
 
     fn next_f64(&self) -> f64 {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         *st = st.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
         (*st >> 11) as f64 / (1u64 << 53) as f64
     }
@@ -209,7 +212,13 @@ pub(crate) enum Entry {
     Req(Box<PoolRequest>),
 }
 
-pub(crate) type InFlightMap = Arc<Mutex<HashMap<u64, Entry>>>;
+pub(crate) type InFlightMap = Arc<TrackedMutex<HashMap<u64, Entry>>>;
+
+/// Fresh in-flight map for one connection (named + ranked for the
+/// runtime lock-order detector).
+pub(crate) fn new_in_flight_map() -> InFlightMap {
+    Arc::new(TrackedMutex::new("pool.in_flight", rank::POOL_IN_FLIGHT, HashMap::new()))
+}
 
 /// Liveness/progress counters for one shard, shared between its
 /// connection reader, the router's submit path, and the monitor thread.
@@ -388,7 +397,7 @@ pub(crate) fn route_reply(
         // drop the connection and resubmit everything in flight on it
         return false;
     };
-    let entry = map.lock().unwrap().remove(&id);
+    let entry = map.lock().remove(&id);
     let Some(entry) = entry else {
         return true; // late reply for a request already failed over
     };
@@ -439,7 +448,7 @@ pub(crate) fn route_reply(
 /// dropped, requests become failover orphans.
 pub(crate) fn drain_orphans(map: &InFlightMap, shared: &ShardShared) -> Vec<PoolRequest> {
     let entries: Vec<Entry> = {
-        let mut m = map.lock().unwrap();
+        let mut m = map.lock();
         m.drain().map(|(_, e)| e).collect()
     };
     let mut orphans = Vec::new();
@@ -460,12 +469,12 @@ pub(crate) fn drain_orphans(map: &InFlightMap, shared: &ShardShared) -> Vec<Pool
 pub(crate) struct ShardConn {
     pub generation: u64,
     /// writer half (the reader thread owns a separate clone)
-    writer: Mutex<TcpStream>,
+    writer: TrackedMutex<TcpStream>,
     /// handle for shutdown (same underlying socket as `writer`)
     sock: TcpStream,
     pub map: InFlightMap,
     dead: AtomicBool,
-    reader: Mutex<Option<std::thread::JoinHandle<()>>>,
+    reader: TrackedMutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl ShardConn {
@@ -481,11 +490,15 @@ impl ShardConn {
         let reader_stream = stream.try_clone().context("cloning shard stream")?;
         let conn = Arc::new(ShardConn {
             generation,
-            writer: Mutex::new(stream.try_clone().context("cloning shard stream")?),
+            writer: TrackedMutex::new(
+                "pool.conn_writer",
+                rank::CONN_WRITER,
+                stream.try_clone().context("cloning shard stream")?,
+            ),
             sock: stream,
-            map: Arc::default(),
+            map: new_in_flight_map(),
             dead: AtomicBool::new(false),
-            reader: Mutex::new(None),
+            reader: TrackedMutex::new("pool.conn_reader", rank::THREAD_HANDLE, None),
         });
         let c = conn.clone();
         let handle = std::thread::Builder::new()
@@ -504,7 +517,7 @@ impl ShardConn {
                     orphans,
                 });
             })?;
-        *conn.reader.lock().unwrap() = Some(handle);
+        *conn.reader.lock() = Some(handle);
         Ok(conn)
     }
 
@@ -561,7 +574,7 @@ impl ShardConn {
         if let Some(i) = fx.garble_at {
             frame[i] = 0x01;
         }
-        let mut w = self.writer.lock().unwrap();
+        let mut w = self.writer.lock();
         if fx.drop_mid_frame {
             // write half a frame, then kill the socket: the server sees
             // a truncated line, the reader exits, failover resubmits
@@ -586,7 +599,7 @@ impl ShardConn {
     }
 
     pub fn join(&self) {
-        if let Some(h) = self.reader.lock().unwrap().take() {
+        if let Some(h) = self.reader.lock().take() {
             let _ = h.join();
         }
     }
@@ -662,7 +675,7 @@ mod tests {
     fn register(map: &InFlightMap, shared: &ShardShared, id: u64) -> RequestHandle {
         let cell = OnceCellSync::new();
         let handle = RequestHandle { id, deadline: None, done: cell.clone() };
-        map.lock().unwrap().insert(id, Entry::Req(mk_req(Completion::cell(cell))));
+        map.lock().insert(id, Entry::Req(mk_req(Completion::cell(cell))));
         shared.in_flight.fetch_add(1, Ordering::Relaxed);
         handle
     }
@@ -679,7 +692,7 @@ mod tests {
 
     #[test]
     fn reply_routes_to_the_right_waiter_with_typed_payload() {
-        let map: InFlightMap = Arc::default();
+        let map: InFlightMap = new_in_flight_map();
         let shared = ShardShared::default();
         let events: Channel<PoolEvent> = Channel::bounded(8);
         let h7 = register(&map, &shared, 7);
@@ -694,12 +707,12 @@ mod tests {
         assert_eq!(h7.wait().expect("id 7 answered").pred_class(), 0);
         assert_eq!(shared.completed.load(Ordering::Relaxed), 2);
         assert_eq!(shared.in_flight.load(Ordering::Relaxed), 0);
-        assert!(map.lock().unwrap().is_empty());
+        assert!(map.lock().is_empty());
     }
 
     #[test]
     fn error_replies_map_to_typed_outcomes() {
-        let map: InFlightMap = Arc::default();
+        let map: InFlightMap = new_in_flight_map();
         let shared = ShardShared::default();
         let events: Channel<PoolEvent> = Channel::bounded(8);
         // deadline error -> DeadlineExceeded
@@ -746,7 +759,7 @@ mod tests {
 
     #[test]
     fn uncorrelatable_replies_poison_the_connection() {
-        let map: InFlightMap = Arc::default();
+        let map: InFlightMap = new_in_flight_map();
         let shared = ShardShared::default();
         let events: Channel<PoolEvent> = Channel::bounded(8);
         let _h = register(&map, &shared, 1);
@@ -757,20 +770,20 @@ mod tests {
         );
         // an unknown-but-valid id is a late reply after failover: ignored
         assert!(route_reply(&ok_reply(999, 0), 0, &map, &shared, &events, 3));
-        assert_eq!(map.lock().unwrap().len(), 1, "the waiter is untouched");
+        assert_eq!(map.lock().len(), 1, "the waiter is untouched");
     }
 
     #[test]
     fn drained_orphans_preserve_their_requests() {
-        let map: InFlightMap = Arc::default();
+        let map: InFlightMap = new_in_flight_map();
         let shared = ShardShared::default();
         let _h1 = register(&map, &shared, 1);
         let _h2 = register(&map, &shared, 2);
-        map.lock().unwrap().insert(3, Entry::Probe { sent: Instant::now() });
+        map.lock().insert(3, Entry::Probe { sent: Instant::now() });
         let orphans = drain_orphans(&map, &shared);
         assert_eq!(orphans.len(), 2, "probes are not orphans");
         assert_eq!(shared.in_flight.load(Ordering::Relaxed), 0);
-        assert!(map.lock().unwrap().is_empty());
+        assert!(map.lock().is_empty());
     }
 
     #[test]
@@ -824,7 +837,7 @@ mod tests {
     fn proptest_reply_reassembly_routes_exactly_once() {
         check("pool_frame_reassembly", 60, |g| {
             let n = g.sized(24);
-            let map: InFlightMap = Arc::default();
+            let map: InFlightMap = new_in_flight_map();
             let shared = ShardShared::default();
             let events: Channel<PoolEvent> = Channel::bounded(64);
             let handles: Vec<RequestHandle> =
@@ -869,7 +882,7 @@ mod tests {
                     ));
                 }
             }
-            if !map.lock().unwrap().is_empty() {
+            if !map.lock().is_empty() {
                 return Err("in-flight map not drained".into());
             }
             if shared.completed.load(Ordering::Relaxed) != n as u64 {

@@ -96,6 +96,8 @@ const RLIMIT_NOFILE: i32 = 7;
 /// C10K-scale benches call this so 5000 sockets don't hit the default
 /// 1024-fd ceiling; failure just leaves the current limit in place.
 pub fn raise_nofile_limit(want: u64) -> u64 {
+    // SAFETY: get/setrlimit only read/write the RLimit struct we pass by
+    // valid pointer; both live on this stack frame for the whole call.
     unsafe {
         let mut lim = RLimit { rlim_cur: 0, rlim_max: 0 };
         if getrlimit(RLIMIT_NOFILE, &mut lim) != 0 {
@@ -135,6 +137,8 @@ pub struct Poller {
 
 impl Poller {
     pub fn new() -> io::Result<Poller> {
+        // SAFETY: epoll_create1 takes no pointers; a negative return is
+        // checked below before the fd is used.
         let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
         if epfd < 0 {
             return Err(io::Error::last_os_error());
@@ -155,6 +159,9 @@ impl Poller {
 
     fn ctl(&self, op: i32, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
         let mut ev = EpollEvent { events, data: token };
+        // SAFETY: `ev` is a live, properly laid out (repr C) epoll_event;
+        // the kernel only reads it during the call. epfd/fd validity is
+        // the kernel's to check — errors surface as the -1 handled below.
         if unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) } != 0 {
             return Err(io::Error::last_os_error());
         }
@@ -187,6 +194,10 @@ impl Poller {
             Some(t) => t.as_millis().min(i32::MAX as u128) as i32,
         };
         let n = loop {
+            // SAFETY: `raw` is a live Vec of repr(C) epoll_event with
+            // exactly `raw.len()` writable slots; the kernel writes at
+            // most `maxevents` entries, and we only read the first
+            // `n <= raw.len()` below.
             let n = unsafe {
                 epoll_wait(self.epfd, self.raw.as_mut_ptr(), self.raw.len() as i32, ms)
             };
@@ -215,6 +226,8 @@ impl Poller {
 
 impl Drop for Poller {
     fn drop(&mut self) {
+        // SAFETY: epfd was returned by epoll_create1 and is closed exactly
+        // once, here; no other code path closes it.
         unsafe {
             close(self.epfd);
         }
@@ -673,17 +686,18 @@ impl<H: Handler> EventLoop<H> {
                 let Some(idx) = self.slot_of(token) else { continue };
                 match op {
                     Op::Send(bytes) => {
-                        {
-                            let conn = self.conns[idx].as_mut().unwrap();
+                        // slot_of validated the generation, so the slot
+                        // is occupied; stay defensive rather than panic
+                        // the reactor thread on a bookkeeping bug
+                        if let Some(conn) = self.conns[idx].as_mut() {
                             conn.wbuf.extend_from_slice(&bytes);
                         }
                         if !self.flush(idx) {
                             continue;
                         }
-                        let evict = {
-                            let conn = self.conns[idx].as_mut().unwrap();
-                            conn.pending_write() > self.cfg.write_buf_cap
-                        };
+                        let evict = self.conns[idx]
+                            .as_ref()
+                            .is_some_and(|c| c.pending_write() > self.cfg.write_buf_cap);
                         if evict {
                             // slow consumer: evict rather than let one
                             // unread backlog grow without bound
@@ -694,11 +708,15 @@ impl<H: Handler> EventLoop<H> {
                     }
                     Op::Close => self.begin_close(idx),
                     Op::Pause => {
-                        self.conns[idx].as_mut().unwrap().paused = true;
+                        if let Some(conn) = self.conns[idx].as_mut() {
+                            conn.paused = true;
+                        }
                         self.update_interest(idx);
                     }
                     Op::Resume => {
-                        self.conns[idx].as_mut().unwrap().paused = false;
+                        if let Some(conn) = self.conns[idx].as_mut() {
+                            conn.paused = false;
+                        }
                         self.update_interest(idx);
                         // lines may already be buffered from before the
                         // pause; dispatch them now (may stage more ops,

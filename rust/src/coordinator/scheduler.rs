@@ -275,6 +275,7 @@ impl MuxTemplate {
 
     /// Reset `scratch` to the empty-slot tensor with one bulk copy;
     /// allocation-free once `scratch` has reached full capacity.
+    // lint: hot-path
     pub fn stamp(&self, scratch: &mut Vec<i32>) {
         scratch.clear();
         scratch.extend_from_slice(&self.ids);

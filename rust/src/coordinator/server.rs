@@ -45,12 +45,13 @@
 
 use std::collections::{HashMap, HashSet};
 use std::net::TcpListener;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::util::json::{num, obj, s, Json};
+use crate::util::sync::{rank, TrackedMutex};
 use crate::util::threadpool::Channel;
 
 use super::api::{
@@ -107,7 +108,8 @@ impl Server {
         let listener = TcpListener::bind(&cfg.addr)?;
         let local_addr = listener.local_addr()?;
         let cq: CompletionQueue = Channel::bounded(COMPLETION_QUEUE_CAP);
-        let staging: Arc<Mutex<Vec<CompletionItem>>> = Arc::default();
+        let staging =
+            Arc::new(TrackedMutex::new("server.staging", rank::SERVER_STAGING, Vec::new()));
         let handler = SessionHandler {
             engine,
             cq: cq.clone(),
@@ -133,7 +135,7 @@ impl Server {
             .name("datamux-completions".into())
             .spawn(move || {
                 while let Some(item) = pump_cq.recv() {
-                    staging.lock().unwrap().push(item);
+                    staging.lock().push(item);
                     waker.wake();
                 }
             })?;
@@ -263,7 +265,7 @@ enum ReplyKind {
         kind: TaskKind,
         want_logits: bool,
         /// set when this request is one item of a BATCH submit
-        batch: Option<(Arc<Mutex<BatchAcc>>, usize)>,
+        batch: Option<(Arc<TrackedMutex<BatchAcc>>, usize)>,
     },
 }
 
@@ -282,7 +284,7 @@ struct SessionHandler {
     engine: Arc<dyn Submit>,
     cq: CompletionQueue,
     /// completions parked by the pump thread until `on_wake` runs
-    staging: Arc<Mutex<Vec<CompletionItem>>>,
+    staging: Arc<TrackedMutex<Vec<CompletionItem>>>,
     max_line: usize,
     pending: HashMap<u64, Pending>,
     conns: HashMap<ConnId, ConnState>,
@@ -407,11 +409,15 @@ impl SessionHandler {
             out.send(conn, line_bytes(&attach_id(id.clone(), empty)));
             return;
         }
-        let acc = Arc::new(Mutex::new(BatchAcc {
-            id: id.clone(),
-            remaining: items.len(),
-            results: vec![Json::Null; items.len()],
-        }));
+        let acc = Arc::new(TrackedMutex::new(
+            "server.batch_acc",
+            rank::SERVER_STAGING,
+            BatchAcc {
+                id: id.clone(),
+                remaining: items.len(),
+                results: vec![Json::Null; items.len()],
+            },
+        ));
         for (idx, item) in items.iter().enumerate() {
             match parse_task_item(item) {
                 Err(msg) => {
@@ -460,7 +466,7 @@ impl Handler for SessionHandler {
     }
 
     fn on_wake(&mut self, out: &mut Outbox) {
-        let items = std::mem::take(&mut *self.staging.lock().unwrap());
+        let items = std::mem::take(&mut *self.staging.lock());
         for (tag, result) in items {
             let Some(p) = self.pending.remove(&tag) else {
                 continue; // conn closed, or already answered synchronously
@@ -516,8 +522,8 @@ impl Handler for SessionHandler {
 
 /// Record one finished batch item; returns the reply line when the whole
 /// batch is done.
-fn batch_item_done(acc: &Mutex<BatchAcc>, idx: usize, result: Json) -> Option<String> {
-    let mut a = acc.lock().unwrap();
+fn batch_item_done(acc: &TrackedMutex<BatchAcc>, idx: usize, result: Json) -> Option<String> {
+    let mut a = acc.lock();
     a.results[idx] = result;
     a.remaining -= 1;
     if a.remaining > 0 {

@@ -31,7 +31,7 @@
 //! behind dead connections.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -39,6 +39,7 @@ use anyhow::{anyhow, Result};
 use crate::tokenizer::{default_vocab, Tokenizer};
 use crate::util::backoff::Backoff;
 use crate::util::metrics::{CounterSnapshot, LatencySummary};
+use crate::util::sync::{rank, TrackedMutex};
 use crate::util::threadpool::{Channel, OnceCellSync};
 
 use super::api::{
@@ -270,14 +271,14 @@ impl ShardConfig {
 
 struct Shard {
     addr: String,
-    breaker: Mutex<Breaker>,
-    conn: Mutex<Option<Arc<ShardConn>>>,
+    breaker: TrackedMutex<Breaker>,
+    conn: TrackedMutex<Option<Arc<ShardConn>>>,
     shared: Arc<ShardShared>,
 }
 
 impl Shard {
     fn state(&self) -> ShardState {
-        self.breaker.lock().unwrap().state()
+        self.breaker.lock().state()
     }
 
     /// Current connection if the breaker is closed and the reader alive.
@@ -285,7 +286,7 @@ impl Shard {
         if self.state() != ShardState::Closed {
             return None;
         }
-        self.conn.lock().unwrap().as_ref().filter(|c| !c.is_dead()).cloned()
+        self.conn.lock().as_ref().filter(|c| !c.is_dead()).cloned()
     }
 }
 
@@ -343,7 +344,7 @@ impl Core {
                 * 1e3
         });
         let line = request_json(id, &req, deadline_ms);
-        conn.map.lock().unwrap().insert(id, Entry::Req(Box::new(req)));
+        conn.map.lock().insert(id, Entry::Req(Box::new(req)));
         shard.shared.in_flight.fetch_add(1, Ordering::Relaxed);
         let sent = conn.send_line(&line, &self.fault).is_ok();
         if !sent {
@@ -353,7 +354,7 @@ impl Core {
         // reader's death (dead is set *before* the drain, so whoever
         // removes the entry from the map owns it — exactly once)
         if !sent || conn.is_dead() {
-            if let Some(Entry::Req(r)) = conn.map.lock().unwrap().remove(&id) {
+            if let Some(Entry::Req(r)) = conn.map.lock().remove(&id) {
                 shard.shared.in_flight.fetch_sub(1, Ordering::Relaxed);
                 return Err(*r);
             }
@@ -408,7 +409,7 @@ pub struct ShardRouter {
     stats: Arc<Stats>,
     events: Channel<PoolEvent>,
     shutdown: Arc<AtomicBool>,
-    monitor: Mutex<Option<std::thread::JoinHandle<()>>>,
+    monitor: TrackedMutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl ShardRouter {
@@ -429,12 +430,16 @@ impl ShardRouter {
             .map(|(i, addr)| {
                 Arc::new(Shard {
                     addr: addr.clone(),
-                    breaker: Mutex::new(Breaker::new(
-                        cfg.backoff_base,
-                        cfg.backoff_cap,
-                        cfg.seed.wrapping_add(i as u64),
-                    )),
-                    conn: Mutex::new(None),
+                    breaker: TrackedMutex::new(
+                        "shards.breaker",
+                        rank::SHARD_BREAKER,
+                        Breaker::new(
+                            cfg.backoff_base,
+                            cfg.backoff_cap,
+                            cfg.seed.wrapping_add(i as u64),
+                        ),
+                    ),
+                    conn: TrackedMutex::new("shards.conn", rank::SHARD_CONN, None),
                     shared: Arc::default(),
                 })
             })
@@ -455,7 +460,7 @@ impl ShardRouter {
         let mut last_err: Option<anyhow::Error> = None;
         loop {
             for (i, shard) in core.shards.iter().enumerate() {
-                if shard.conn.lock().unwrap().is_some() {
+                if shard.conn.lock().is_some() {
                     continue;
                 }
                 match connect_handshake(&shard.addr, core.cfg.connect_timeout, &core.fault) {
@@ -483,8 +488,8 @@ impl ShardRouter {
                             events.clone(),
                             n_classes,
                         )?;
-                        *shard.conn.lock().unwrap() = Some(conn);
-                        shard.breaker.lock().unwrap().on_success();
+                        *shard.conn.lock() = Some(conn);
+                        shard.breaker.lock().on_success();
                     }
                     Err(e) => last_err = Some(e),
                 }
@@ -504,8 +509,8 @@ impl ShardRouter {
         // open the breaker once per still-unreachable shard (the startup
         // loop itself must not compound the backoff while polling)
         for shard in &core.shards {
-            if shard.conn.lock().unwrap().is_none() {
-                shard.breaker.lock().unwrap().on_failure(Instant::now());
+            if shard.conn.lock().is_none() {
+                shard.breaker.lock().on_failure(Instant::now());
             }
         }
 
@@ -522,7 +527,7 @@ impl ShardRouter {
         let handle = std::thread::Builder::new()
             .name("datamux-shardmon".into())
             .spawn(move || monitor.run())
-            .expect("spawn shard monitor");
+            .map_err(|e| anyhow!("spawn shard monitor thread: {e}"))?;
 
         Ok(ShardRouter {
             core,
@@ -534,7 +539,7 @@ impl ShardRouter {
             stats,
             events,
             shutdown,
-            monitor: Mutex::new(Some(handle)),
+            monitor: TrackedMutex::new("shards.monitor", rank::THREAD_HANDLE, Some(handle)),
         })
     }
 
@@ -751,11 +756,11 @@ impl Drop for ShardRouter {
         self.shutdown.store(true, Ordering::Release);
         self.events.close();
         for s in &self.core.shards {
-            if let Some(c) = s.conn.lock().unwrap().as_ref() {
+            if let Some(c) = s.conn.lock().as_ref() {
                 c.shutdown_now();
             }
         }
-        if let Some(h) = self.monitor.lock().unwrap().take() {
+        if let Some(h) = self.monitor.lock().take() {
             let _ = h.join();
         }
     }
@@ -831,7 +836,7 @@ impl Monitor {
         // maps, and every stranded Completion's drop guard answers typed
         // Shutdown — pending parked requests are dropped the same way
         for s in &self.core.shards {
-            if let Some(c) = s.conn.lock().unwrap().take() {
+            if let Some(c) = s.conn.lock().take() {
                 c.shutdown_now();
                 c.join();
             }
@@ -843,9 +848,9 @@ impl Monitor {
             PoolEvent::ConnDown { shard, generation, orphans } => {
                 let s = &self.core.shards[shard];
                 let stale_conn = {
-                    let mut conn = s.conn.lock().unwrap();
+                    let mut conn = s.conn.lock();
                     if conn.as_ref().is_some_and(|c| c.generation == generation) {
-                        s.breaker.lock().unwrap().on_failure(Instant::now());
+                        s.breaker.lock().on_failure(Instant::now());
                         conn.take()
                     } else {
                         None // a newer connection already replaced it
@@ -919,11 +924,11 @@ impl Monitor {
         for s in &self.core.shards {
             let Some(conn) = s.live_conn() else { continue };
             let id = self.core.next_id.fetch_add(1, Ordering::Relaxed);
-            conn.map.lock().unwrap().insert(id, Entry::Probe { sent: now });
+            conn.map.lock().insert(id, Entry::Probe { sent: now });
             s.shared.probes.fetch_add(1, Ordering::Relaxed);
             if conn.send_line(&probe_json(id), &self.core.fault).is_err() {
                 s.shared.probe_failures.fetch_add(1, Ordering::Relaxed);
-                conn.map.lock().unwrap().remove(&id);
+                conn.map.lock().remove(&id);
                 conn.shutdown_now();
             }
         }
@@ -935,7 +940,7 @@ impl Monitor {
     /// fails the rest over.
     fn sweep_stale(&self, now: Instant) {
         for s in &self.core.shards {
-            let Some(conn) = s.conn.lock().unwrap().as_ref().cloned() else { continue };
+            let Some(conn) = s.conn.lock().as_ref().cloned() else { continue };
             // backstop for a missed ConnDown event (closed channel): a
             // dead connection must still open the breaker or the shard
             // would never be probed for re-adoption. Deliberately no
@@ -943,17 +948,17 @@ impl Monitor {
             // ConnDown orphans to this very thread's channel — dropping
             // the handle detaches it, and it exits right after the send.
             if conn.is_dead() {
-                let mut slot = s.conn.lock().unwrap();
+                let mut slot = s.conn.lock();
                 if slot.as_ref().is_some_and(|c| Arc::ptr_eq(c, &conn)) {
                     slot.take();
-                    s.breaker.lock().unwrap().on_failure(now);
+                    s.breaker.lock().on_failure(now);
                 }
                 continue;
             }
             let mut stale_probe = false;
             let mut stale_req = false;
             {
-                let m = conn.map.lock().unwrap();
+                let m = conn.map.lock();
                 for e in m.values() {
                     match entry_staleness(e, now, self.core.cfg.probe_timeout, self.core.cfg.hop_timeout)
                     {
@@ -977,7 +982,7 @@ impl Monitor {
     /// the same model before re-adopting it.
     fn reconnect_open(&self, now: Instant) {
         for (i, s) in self.core.shards.iter().enumerate() {
-            if !s.breaker.lock().unwrap().try_half_open(now) {
+            if !s.breaker.lock().try_half_open(now) {
                 continue;
             }
             s.shared.probes.fetch_add(1, Ordering::Relaxed);
@@ -1000,12 +1005,12 @@ impl Monitor {
                 });
             match outcome {
                 Ok(conn) => {
-                    *s.conn.lock().unwrap() = Some(conn);
-                    s.breaker.lock().unwrap().on_success();
+                    *s.conn.lock() = Some(conn);
+                    s.breaker.lock().on_success();
                 }
                 Err(_) => {
                     s.shared.probe_failures.fetch_add(1, Ordering::Relaxed);
-                    s.breaker.lock().unwrap().on_failure(Instant::now());
+                    s.breaker.lock().on_failure(Instant::now());
                 }
             }
         }

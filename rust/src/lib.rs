@@ -17,6 +17,7 @@
 //! submission API ([`coordinator::Submit`]) and the wire protocol
 //! grammar (v1 + v2).
 
+pub mod analysis;
 pub mod baseline;
 pub mod coordinator;
 pub mod runtime;

@@ -6,6 +6,7 @@
 //! artifact's HLO through the XLA CPU client; `native` runs the
 //! pure-rust T-MUX forward (`runtime/native`) straight from the weights
 //! blob, with no PJRT anywhere in the process.
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -22,7 +23,7 @@ use datamux::util::cli::Args;
 
 fn main() -> Result<()> {
     let args = Args::parse_env()
-        .describe("cmd", "serve", "serve | front | list | parity")
+        .describe("cmd", "serve", "serve | front | list | parity | lint")
         .describe("artifacts", "<auto>", "artifacts directory")
         .describe("artifact", "", "artifact name (default: first trained, else first)")
         .describe("backend", "pjrt", "pjrt | native (pure-rust forward) | fake (no artifacts)")
@@ -51,7 +52,8 @@ fn main() -> Result<()> {
         .describe("fake-n", "2", "fake backend: mux width N")
         .describe("fake-seq-len", "8", "fake backend: model sequence length")
         .describe("fake-classes", "3", "fake backend: number of classes")
-        .describe("fake-delay-ms", "0", "fake backend: per-execution delay");
+        .describe("fake-delay-ms", "0", "fake backend: per-execution delay")
+        .describe("src", "<crate src/>", "lint: source root to scan");
     let cmd = args.str("cmd", "serve");
     let backend = args
         .choice("backend", "pjrt", &["pjrt", "native", "fake"])
@@ -71,6 +73,29 @@ fn main() -> Result<()> {
     // loaded lazily: `front` and `serve --backend fake` run without any
     // artifacts directory at all
     match cmd.as_str() {
+        // repo-native static analysis (src/analysis): unsafe-SAFETY
+        // coverage, the pinned unsafe inventory, the serving-path panic
+        // ban, hot-path allocation checks and the coordinator raw-lock
+        // ban. Blocking in CI; run locally before sending a change.
+        "lint" => {
+            let root = match args.str("src", "") {
+                s if s.is_empty() => Path::new(env!("CARGO_MANIFEST_DIR")).join("src"),
+                s => s.into(),
+            };
+            let report = datamux::analysis::lint_dir(&root)?;
+            for v in &report.violations {
+                eprintln!("{v}");
+            }
+            if !report.violations.is_empty() {
+                anyhow::bail!(
+                    "datamux lint: {} violation(s) in {} file(s)",
+                    report.violations.len(),
+                    report.files_scanned
+                );
+            }
+            println!("datamux lint: clean ({} files)", report.files_scanned);
+            Ok(())
+        }
         "list" => {
             let manifest = ArtifactManifest::load(&dir)?;
             println!("{} artifacts in {}", manifest.artifacts.len(), dir.display());
@@ -156,12 +181,16 @@ fn main() -> Result<()> {
                 ns.dedup();
                 let mut metas: Vec<ArtifactMeta> = Vec::new();
                 for n in &ns {
-                    let meta = manifest
+                    // `ns` came from this same filter, so a miss is
+                    // impossible; skip defensively instead of panicking
+                    let Some(meta) = manifest
                         .artifacts
                         .iter()
                         .filter(|a| !a.trained && a.profile == profile && a.n_mux == *n)
                         .min_by_key(|a| a.batch)
-                        .unwrap();
+                    else {
+                        continue;
+                    };
                     println!(
                         "lane: {} (N={}, batch={}, backend={backend})",
                         meta.name, meta.n_mux, meta.batch
@@ -254,7 +283,7 @@ fn main() -> Result<()> {
                 .choice("placement", "by_bucket", &["by_bucket", "round_robin"])
                 .map_err(|e| anyhow::anyhow!("{e}"))?;
             let cfg = ShardConfig::new(addrs)
-                .placement(Placement::from_str(&placement).expect("validated choice"))
+                .placement(Placement::from_str(&placement).unwrap_or_default())
                 .probe_interval(Duration::from_millis(args.u64("probe-interval-ms", 250)))
                 .probe_timeout(Duration::from_millis(args.u64("probe-timeout-ms", 1000)))
                 .rtt_margin(Duration::from_millis(args.u64("rtt-margin-ms", 2)))

@@ -16,7 +16,7 @@
 //! after warmup.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, PoisonError};
 
 use super::Dims;
 
@@ -95,7 +95,9 @@ impl ArenaPool {
     /// a new one (counted).
     pub fn checkout(&self, dims: &Dims) -> Workspace {
         {
-            let mut free = self.free.lock().unwrap();
+            // a poisoning panic can only come from a forward that died
+            // mid-flight; the freelist itself is always consistent
+            let mut free = self.free.lock().unwrap_or_else(PoisonError::into_inner);
             if let Some(i) = free.iter().position(|(l, _)| *l == dims.seq_len) {
                 return free.swap_remove(i).1;
             }
@@ -105,7 +107,7 @@ impl ArenaPool {
     }
 
     pub fn give_back(&self, seq_len: usize, ws: Workspace) {
-        self.free.lock().unwrap().push((seq_len, ws));
+        self.free.lock().unwrap_or_else(PoisonError::into_inner).push((seq_len, ws));
     }
 
     /// Arenas materialized so far. Flat after per-bucket warmup is the

@@ -41,6 +41,7 @@ pub(crate) fn gelu(x: f32) -> f32 {
 }
 
 /// GELU over a whole buffer, vectorized when the AVX2 kernel is active.
+// lint: hot-path
 pub(crate) fn gelu_buf(xs: &mut [f32]) {
     #[cfg(target_arch = "x86_64")]
     if super::simd::active_kernel() == super::simd::Kernel::Avx2Fma {
@@ -85,6 +86,7 @@ fn quant_rows_if(w: &Mat, a: &[f32], m: usize, k: usize, aq: &mut [u8], ascale: 
 }
 
 /// Row-wise layer norm (eps 1e-5, matching `model.py::_layer_norm`).
+// lint: hot-path
 pub(crate) fn layer_norm(src: &[f32], g: &[f32], b: &[f32], dst: &mut [f32], d: usize) {
     for (srow, drow) in src.chunks_exact(d).zip(dst.chunks_exact_mut(d)) {
         let mean = srow.iter().sum::<f32>() / d as f32;
@@ -100,6 +102,7 @@ pub(crate) fn layer_norm(src: &[f32], g: &[f32], b: &[f32], dst: &mut [f32], d: 
     }
 }
 
+// lint: hot-path
 fn softmax_row(row: &mut [f32]) {
     let mut max = f32::NEG_INFINITY;
     for &v in row.iter() {
@@ -177,6 +180,9 @@ pub(crate) fn forward(
             let v = &ws.v;
             let run = |bh: usize| {
                 let (bb, hh) = (bh / heads, bh % heads);
+                // SAFETY: each (batch, head) job owns scores block `bh`
+                // exclusively, and the dispatch below joins before the
+                // borrow of `ws.scores` resumes.
                 let scores = unsafe { std::slice::from_raw_parts_mut(sptr.0.add(bh * lsq), lsq) };
                 for i in 0..li {
                     let qrow = &q[(bb * li + i) * d + hh * dh..][..dh];
@@ -189,6 +195,9 @@ pub(crate) fn forward(
                         scores[i * li + j] = sdot * scale;
                     }
                     softmax_row(&mut scores[i * li..(i + 1) * li]);
+                    // SAFETY: head `hh` writes only its own `dh`-wide
+                    // column stripe of ctx row `bb*li + i` — disjoint
+                    // across jobs, joined before the borrow resumes.
                     let crow = unsafe {
                         std::slice::from_raw_parts_mut(cptr.0.add((bb * li + i) * d + hh * dh), dh)
                     };

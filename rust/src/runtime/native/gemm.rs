@@ -18,7 +18,7 @@
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 
 use super::quant::QuantMat;
 use super::simd;
@@ -41,6 +41,7 @@ const PAR_MIN_MACS: usize = 1 << 16;
 /// Dispatches once per process: the AVX2+FMA microkernel in `simd.rs`
 /// when the host supports it (and `DATAMUX_FORCE_SCALAR` is unset), the
 /// blocked-scalar kernel below otherwise.
+// lint: hot-path
 pub fn gemm_bt(
     a: &[f32],
     bt: &[f32],
@@ -68,6 +69,7 @@ pub fn gemm_bt(
 
 /// The portable blocked-scalar arm (pre-SIMD kernel, kept as the
 /// fallback and the reference the vectorized arm is tested against).
+// lint: hot-path
 pub(crate) fn gemm_bt_scalar(
     a: &[f32],
     bt: &[f32],
@@ -176,7 +178,8 @@ pub fn gemm_bt_pooled(
     parallel_for(pool, bands, |band| {
         let r0 = band * base + band.min(extra);
         let r1 = r0 + base + usize::from(band < extra);
-        // each band owns rows r0..r1 of `c` — disjoint across bands
+        // SAFETY: each band owns rows r0..r1 of `c` — disjoint across
+        // bands — and `parallel_for` joins before the borrow of `c` ends.
         let cband = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(r0 * n), (r1 - r0) * n) };
         gemm_bt(&a[r0 * k..r1 * k], bt, bias, cband, r1 - r0, k, n);
     });
@@ -186,6 +189,7 @@ pub fn gemm_bt_pooled(
 /// per-row scales against a [`QuantMat`] (n output channels over k).
 /// Both arms accumulate in exact i32 and share one f32 epilogue, so
 /// dispatch never changes the result bitwise.
+// lint: hot-path
 pub(crate) fn gemm_bt_q8(
     aq: &[u8],
     ascale: &[f32],
@@ -237,6 +241,8 @@ pub(crate) fn gemm_bt_q8_pooled(
     parallel_for(pool, bands, |band| {
         let r0 = band * base + band.min(extra);
         let r1 = r0 + base + usize::from(band < extra);
+        // SAFETY: as in `gemm_bt_pooled` — bands write disjoint row
+        // ranges of `c` and are joined before the borrow ends.
         let cband = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(r0 * n), (r1 - r0) * n) };
         gemm_bt_q8(&aq[r0 * k..r1 * k], &ascale[r0..r1], w, bias, cband, r1 - r0, k, n);
     });
@@ -255,7 +261,9 @@ struct Done(Arc<Latch>);
 
 impl Drop for Done {
     fn drop(&mut self) {
-        let mut left = self.0.left.lock().unwrap();
+        // poison is survivable here: the count is the only state, and a
+        // job panic is reported separately through `panicked`
+        let mut left = self.0.left.lock().unwrap_or_else(PoisonError::into_inner);
         *left -= 1;
         if *left == 0 {
             self.0.cv.notify_all();
@@ -302,9 +310,9 @@ pub fn parallel_for<F: Fn(usize) + Sync>(pool: &ThreadPool, n: usize, f: F) {
             drop(done);
         });
     }
-    let mut left = latch.left.lock().unwrap();
+    let mut left = latch.left.lock().unwrap_or_else(PoisonError::into_inner);
     while *left > 0 {
-        left = latch.cv.wait(left).unwrap();
+        left = latch.cv.wait(left).unwrap_or_else(PoisonError::into_inner);
     }
     drop(left);
     if latch.panicked.load(Ordering::SeqCst) {

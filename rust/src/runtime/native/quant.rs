@@ -98,6 +98,7 @@ impl QuantMat {
 /// The one f32 epilogue both int8 GEMM arms share: remove the +128
 /// activation bias exactly, apply both scales, add the f32 bias.
 #[inline]
+// lint: hot-path
 pub(crate) fn dequant(acc: i32, wsum: i32, sa: f32, sw: f32, bias: f32) -> f32 {
     (acc - 128 * wsum) as f32 * (sa * sw) + bias
 }
@@ -106,6 +107,7 @@ pub(crate) fn dequant(acc: i32, wsum: i32, sa: f32, sw: f32, bias: f32) -> f32 {
 /// matches `_mm256_cvtps_epi32` under the default MXCSR, so the AVX2 arm
 /// produces identical codes. Returns the row scale (`amax/127`), or 0.0
 /// for an all-zero row (codes all 128 = bias).
+// lint: hot-path
 pub(crate) fn quantize_row_scalar(x: &[f32], out: &mut [u8]) -> f32 {
     let k = x.len();
     let mut amax = 0.0f32;
@@ -131,6 +133,8 @@ pub(crate) fn quantize_rows(a: &[f32], m: usize, k: usize, aq: &mut [u8], ascale
     #[cfg(target_arch = "x86_64")]
     if super::simd::active_kernel() == super::simd::Kernel::Avx2Fma {
         for i in 0..m {
+            // SAFETY: feature presence verified by `active_kernel`; the
+            // row slices are length-checked by the assert above.
             ascale[i] =
                 unsafe { super::simd::quantize_row_avx2(&a[i * k..(i + 1) * k], &mut aq[i * k..(i + 1) * k]) };
         }
@@ -144,6 +148,7 @@ pub(crate) fn quantize_rows(a: &[f32], m: usize, k: usize, aq: &mut [u8], ascale
 /// Scalar int8 GEMM arm: exact i32 accumulation, shared `dequant`
 /// epilogue. Same contract as `simd::gemm_bt_q8_avx2`.
 #[allow(clippy::too_many_arguments)]
+// lint: hot-path
 pub(crate) fn gemm_bt_q8_scalar(
     aq: &[u8],
     ascale: &[f32],

@@ -143,6 +143,10 @@ pub(crate) unsafe fn gemm_bt_f32_avx2(
 }
 
 /// One A row against four B^T rows; 4 independent FMA chains.
+///
+/// # Safety
+/// `a` and each `b*` must be valid for `k` f32 reads, and the CPU must
+/// support AVX2+FMA (guaranteed by the dispatching kernel).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn dot4(
@@ -181,6 +185,11 @@ unsafe fn dot4(
     (s0, s1, s2, s3)
 }
 
+/// One A row against one B^T row.
+///
+/// # Safety
+/// `a` and `b` must be valid for `k` f32 reads, and the CPU must
+/// support AVX2+FMA (guaranteed by the dispatching kernel).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn dot1(a: *const f32, b: *const f32, k: usize) -> f32 {
@@ -200,6 +209,10 @@ unsafe fn dot1(a: *const f32, b: *const f32, k: usize) -> f32 {
 
 /// Deterministic horizontal sum of 8 lanes (fixed reduction order, so
 /// results are reproducible run to run and thread-count independent).
+///
+/// # Safety
+/// Register-only math; unsafe solely for the AVX2+FMA target feature,
+/// which the dispatching kernel guarantees.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn hsum_ps(v: __m256) -> f32 {
@@ -280,6 +293,10 @@ pub(crate) unsafe fn gemm_bt_q8_avx2(
 /// One u8 activation row against four i8 weight rows. `maddubs` pairs
 /// u8×i8 into i16 (weights are clamped to ±63 so the pair-sum cannot
 /// saturate: 2·255·63 = 32130 < i16::MAX), then `madd` widens to i32.
+///
+/// # Safety
+/// `a` and each `w*` must be valid for `k` byte reads, and the CPU must
+/// support AVX2 (guaranteed by the dispatching kernel).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn qdot4(
@@ -323,6 +340,11 @@ unsafe fn qdot4(
     (s0, s1, s2, s3)
 }
 
+/// One u8 activation row against one i8 weight row.
+///
+/// # Safety
+/// `a` and `w` must be valid for `k` byte reads, and the CPU must
+/// support AVX2 (guaranteed by the dispatching kernel).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn qdot1(a: *const u8, w: *const i8, k: usize) -> i32 {
@@ -343,6 +365,11 @@ unsafe fn qdot1(a: *const u8, w: *const i8, k: usize) -> i32 {
     s
 }
 
+/// Horizontal sum of 8 i32 lanes.
+///
+/// # Safety
+/// Register-only math; unsafe solely for the AVX2 target feature, which
+/// the dispatching kernel guarantees.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn hsum_epi32(v: __m256i) -> i32 {
@@ -404,6 +431,11 @@ pub(crate) unsafe fn quantize_row_avx2(x: &[f32], out: &mut [u8]) -> f32 {
     amax / 127.0
 }
 
+/// Horizontal max of 8 f32 lanes.
+///
+/// # Safety
+/// Register-only math; unsafe solely for the AVX2+FMA target feature,
+/// which the dispatching kernel guarantees.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn hmax_ps(v: __m256) -> f32 {
@@ -453,6 +485,10 @@ pub(crate) unsafe fn gelu_avx2(xs: &mut [f32]) {
 
 /// Polynomial exp over 8 lanes (Cephes `expf` scheme: range-reduce by
 /// log2(e), degree-5 polynomial, scale by 2^n through the exponent bits).
+///
+/// # Safety
+/// Register-only math; unsafe solely for the AVX2+FMA target feature,
+/// which the dispatching kernel guarantees.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn exp_ps(x: __m256) -> __m256 {

@@ -116,7 +116,7 @@ impl Histogram {
     }
 }
 
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct LatencySummary {
     pub count: u64,
     pub mean_ns: f64,

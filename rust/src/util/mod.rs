@@ -7,7 +7,9 @@
 //! a thread pool + MPMC channel (`threadpool`), latency/throughput
 //! metrics (`metrics`), a criterion-style bench harness (`bench`), a
 //! small property-testing helper (`proptest`), client-side line framing
-//! (`framed`), and seeded-jitter exponential backoff (`backoff`).
+//! (`framed`), seeded-jitter exponential backoff (`backoff`), and
+//! instrumented lock primitives with a runtime lock-order / leak
+//! detector (`sync`).
 
 pub mod backoff;
 pub mod bench;
@@ -17,4 +19,5 @@ pub mod json;
 pub mod metrics;
 pub mod proptest;
 pub mod rng;
+pub mod sync;
 pub mod threadpool;

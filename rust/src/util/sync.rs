@@ -1,0 +1,718 @@
+//! Instrumented lock primitives with a runtime lock-order / leak detector.
+//!
+//! [`TrackedMutex`] and [`TrackedCondvar`] wrap the std primitives. In
+//! release builds they compile down to the plain std types (lock poisoning
+//! is swallowed, no bookkeeping). In debug builds a process-wide detector
+//! can be armed — `DATAMUX_LOCK_CHECK=1` in the environment, or
+//! [`force_arm`] from a test — and every acquisition is checked for:
+//!
+//! - **lock-order inversions**: a global name-level acquired-after graph is
+//!   maintained; acquiring `B` while holding `A` adds the edge `A -> B`,
+//!   and any acquisition that would close a cycle (including same-name
+//!   nesting of two instances) panics on the offending thread.
+//! - **rank violations**: locks carry an optional rank (see [`rank`]); a
+//!   ranked lock may only be acquired while every ranked lock already held
+//!   has a *strictly smaller* rank. Rank `0` means unranked (exempt from
+//!   rank checks, still covered by the order graph).
+//! - **reentrant acquisition** of the same instance — a guaranteed
+//!   deadlock with std mutexes — reported before blocking.
+//! - **wait cycles**: blocked acquisitions register in a waits-for table;
+//!   a cycle of threads each blocked on a lock the next one holds is
+//!   reported even if the order graph never saw the pattern before.
+//!
+//! Violations are recorded (see [`violations`]) and raised as panics, so a
+//! test can observe one with `catch_unwind`. Locked guards are counted
+//! process-wide; [`assert_quiescent`] asserts none is live (i.e. leaked)
+//! at a point where the process should hold nothing — call it only at true
+//! quiescent points (end of `main`, single-threaded tests), never
+//! mid-suite where parallel tests legitimately hold locks.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Lock ranks for the coordinator tier, lowest acquired first. A ranked
+/// lock may only be acquired while all held ranked locks have strictly
+/// smaller ranks; see DESIGN.md "Concurrency invariants" for the
+/// hierarchy rationale.
+pub mod rank {
+    /// Unranked: exempt from rank checks (still in the order graph).
+    pub const NONE: u32 = 0;
+    /// `shards.rs` per-shard connection slot (outermost).
+    pub const SHARD_CONN: u32 = 10;
+    /// `shards.rs` per-shard breaker state (nested inside the conn slot
+    /// on the connection-down path).
+    pub const SHARD_BREAKER: u32 = 20;
+    /// `pool.rs` in-flight request map.
+    pub const POOL_IN_FLIGHT: u32 = 30;
+    /// `pool.rs` connection writer half.
+    pub const CONN_WRITER: u32 = 40;
+    /// `pool.rs` / `shards.rs` thread-handle slots (reader, monitor).
+    pub const THREAD_HANDLE: u32 = 50;
+    /// `server.rs` staging buffers and batch accumulators.
+    pub const SERVER_STAGING: u32 = 60;
+    /// `dispatch.rs` adaptive gate and `mod.rs` drain meter.
+    pub const DISPATCH_GATE: u32 = 70;
+    /// `pool.rs` fault-injector state (innermost leaf).
+    pub const FAULT_STATE: u32 = 80;
+}
+
+#[cfg(debug_assertions)]
+mod detect {
+    use std::cell::RefCell;
+    use std::collections::{HashMap, HashSet};
+    use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+    use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError, TryLockError};
+    use std::thread::{self, ThreadId};
+
+    static LIVE_GUARDS: AtomicI64 = AtomicI64::new(0);
+    static FORCE: AtomicBool = AtomicBool::new(false);
+
+    pub(super) fn armed() -> bool {
+        static ENV: OnceLock<bool> = OnceLock::new();
+        *ENV.get_or_init(|| std::env::var("DATAMUX_LOCK_CHECK").is_ok_and(|v| v == "1"))
+            || FORCE.load(Ordering::Relaxed)
+    }
+
+    pub(super) fn force_arm() {
+        FORCE.store(true, Ordering::SeqCst);
+    }
+
+    pub(super) fn next_id() -> u64 {
+        static NEXT: AtomicU64 = AtomicU64::new(1);
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub(super) fn guard_created() {
+        LIVE_GUARDS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(super) fn guard_dropped() {
+        LIVE_GUARDS.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub(super) fn live_guards() -> i64 {
+        LIVE_GUARDS.load(Ordering::Relaxed)
+    }
+
+    #[derive(Clone, Copy)]
+    struct Held {
+        id: u64,
+        name: &'static str,
+        rank: u32,
+    }
+
+    thread_local! {
+        static HELD: RefCell<Vec<Held>> = const { RefCell::new(Vec::new()) };
+    }
+
+    /// Global detector state. Guarded by a *raw* std mutex on purpose: the
+    /// detector must not recurse into itself, and this lock is always a
+    /// leaf held for a few map operations.
+    #[derive(Default)]
+    struct State {
+        /// Name-level acquired-after graph: edge `A -> B` means some
+        /// thread acquired `B` while holding `A`.
+        edges: HashMap<&'static str, HashSet<&'static str>>,
+        /// Lock instance id -> thread currently holding it.
+        holders: HashMap<u64, ThreadId>,
+        /// Thread -> lock instance it is blocked acquiring.
+        waiting: HashMap<ThreadId, (u64, &'static str)>,
+        violations: Vec<String>,
+    }
+
+    fn state() -> MutexGuard<'static, State> {
+        static STATE: OnceLock<Mutex<State>> = OnceLock::new();
+        STATE
+            .get_or_init(|| Mutex::new(State::default()))
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+    }
+
+    pub(super) fn violations_snapshot() -> Vec<String> {
+        state().violations.clone()
+    }
+
+    fn fail(mut st: MutexGuard<'_, State>, msg: String) -> ! {
+        st.violations.push(msg.clone());
+        drop(st);
+        panic!("{msg}");
+    }
+
+    fn is_reachable(
+        edges: &HashMap<&'static str, HashSet<&'static str>>,
+        from: &'static str,
+        to: &'static str,
+    ) -> bool {
+        let mut stack = vec![from];
+        let mut seen: HashSet<&'static str> = HashSet::new();
+        while let Some(n) = stack.pop() {
+            if n == to {
+                return true;
+            }
+            if seen.insert(n) {
+                if let Some(next) = edges.get(n) {
+                    stack.extend(next.iter().copied());
+                }
+            }
+        }
+        false
+    }
+
+    /// Order / rank / reentrancy checks, run *before* blocking on the
+    /// inner mutex so a guaranteed deadlock becomes a typed panic instead.
+    pub(super) fn before_acquire(id: u64, name: &'static str, rank: u32) {
+        let held: Vec<Held> = HELD.with(|h| h.borrow().clone());
+        if held.iter().any(|e| e.id == id) {
+            fail(
+                state(),
+                format!("reentrant acquisition of lock `{name}` (would deadlock)"),
+            );
+        }
+        if let Some(same) = held.iter().find(|e| e.name == name) {
+            fail(
+                state(),
+                format!(
+                    "same-name nesting: acquiring a second `{}` instance while one is held",
+                    same.name
+                ),
+            );
+        }
+        if rank != 0 {
+            if let Some(worst) = held.iter().filter(|e| e.rank >= rank).max_by_key(|e| e.rank) {
+                fail(
+                    state(),
+                    format!(
+                        "rank inversion: acquiring `{name}` (rank {rank}) while holding `{}` \
+                         (rank {})",
+                        worst.name, worst.rank
+                    ),
+                );
+            }
+        }
+        if held.is_empty() {
+            return;
+        }
+        let mut st = state();
+        for h in &held {
+            if is_reachable(&st.edges, name, h.name) {
+                let msg = format!(
+                    "lock-order inversion: acquiring `{name}` while holding `{}`, but the \
+                     opposite order was observed before (cycle `{name}` -> ... -> `{}`)",
+                    h.name, h.name
+                );
+                fail(st, msg);
+            }
+        }
+        for h in &held {
+            st.edges.entry(h.name).or_default().insert(name);
+        }
+    }
+
+    pub(super) fn on_acquired(id: u64, name: &'static str, rank: u32) {
+        state().holders.insert(id, thread::current().id());
+        HELD.with(|h| h.borrow_mut().push(Held { id, name, rank }));
+    }
+
+    pub(super) fn on_released(id: u64) {
+        let me = thread::current().id();
+        let mut st = state();
+        if st.holders.get(&id) == Some(&me) {
+            st.holders.remove(&id);
+        }
+        drop(st);
+        HELD.with(|h| {
+            let mut h = h.borrow_mut();
+            if let Some(pos) = h.iter().rposition(|e| e.id == id) {
+                h.remove(pos);
+            }
+        });
+    }
+
+    /// Follow the waits-for chain starting at `me`; panic if it loops
+    /// back, which means a cycle of threads each blocked on a lock the
+    /// next one holds.
+    fn check_wait_cycle(mut st: MutexGuard<'_, State>, me: ThreadId) {
+        let mut path: Vec<&'static str> = Vec::new();
+        let mut t = me;
+        for _ in 0..64 {
+            let Some(&(lid, lname)) = st.waiting.get(&t) else {
+                return;
+            };
+            path.push(lname);
+            let Some(&holder) = st.holders.get(&lid) else {
+                return;
+            };
+            if holder == me {
+                let msg = format!("deadlock: wait cycle through locks [{}]", path.join(" -> "));
+                st.waiting.remove(&me);
+                fail(st, msg);
+            }
+            t = holder;
+        }
+    }
+
+    /// Acquire with waits-for registration: try-lock spin with periodic
+    /// wait-cycle checks instead of parking unobservably in the kernel.
+    pub(super) fn blocking_lock<'a, T>(
+        m: &'a Mutex<T>,
+        id: u64,
+        name: &'static str,
+    ) -> MutexGuard<'a, T> {
+        match m.try_lock() {
+            Ok(g) => return g,
+            Err(TryLockError::Poisoned(p)) => return p.into_inner(),
+            Err(TryLockError::WouldBlock) => {}
+        }
+        let me = thread::current().id();
+        {
+            let mut st = state();
+            st.waiting.insert(me, (id, name));
+            check_wait_cycle(st, me);
+        }
+        let mut spins: u32 = 0;
+        loop {
+            match m.try_lock() {
+                Ok(g) => {
+                    state().waiting.remove(&me);
+                    return g;
+                }
+                Err(TryLockError::Poisoned(p)) => {
+                    state().waiting.remove(&me);
+                    return p.into_inner();
+                }
+                Err(TryLockError::WouldBlock) => {}
+            }
+            spins = spins.wrapping_add(1);
+            if spins < 64 {
+                thread::yield_now();
+            } else {
+                thread::sleep(std::time::Duration::from_micros(500));
+                if spins % 16 == 0 {
+                    check_wait_cycle(state(), me);
+                }
+            }
+        }
+    }
+}
+
+/// A named, optionally ranked mutex. See the module docs for what the
+/// debug-build detector checks; in release this is a plain [`Mutex`] that
+/// swallows poisoning.
+pub struct TrackedMutex<T> {
+    name: &'static str,
+    rank: u32,
+    #[cfg_attr(not(debug_assertions), allow(dead_code))]
+    id: u64,
+    inner: Mutex<T>,
+}
+
+impl<T> TrackedMutex<T> {
+    pub fn new(name: &'static str, rank: u32, value: T) -> Self {
+        TrackedMutex {
+            name,
+            rank,
+            #[cfg(debug_assertions)]
+            id: detect::next_id(),
+            #[cfg(not(debug_assertions))]
+            id: 0,
+            inner: Mutex::new(value),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    #[cfg(debug_assertions)]
+    pub fn lock(&self) -> TrackedGuard<'_, T> {
+        let tracked = detect::armed();
+        let inner = if tracked {
+            detect::before_acquire(self.id, self.name, self.rank);
+            let g = detect::blocking_lock(&self.inner, self.id, self.name);
+            detect::on_acquired(self.id, self.name, self.rank);
+            g
+        } else {
+            self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+        };
+        detect::guard_created();
+        TrackedGuard {
+            inner: Some(inner),
+            lock: self,
+            tracked,
+        }
+    }
+
+    #[cfg(not(debug_assertions))]
+    pub fn lock(&self) -> TrackedGuard<'_, T> {
+        TrackedGuard {
+            inner: Some(self.inner.lock().unwrap_or_else(PoisonError::into_inner)),
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    pub fn try_lock(&self) -> Option<TrackedGuard<'_, T>> {
+        let inner = match self.inner.try_lock() {
+            Ok(g) => g,
+            Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(std::sync::TryLockError::WouldBlock) => return None,
+        };
+        let tracked = detect::armed();
+        if tracked {
+            // A successful try_lock still establishes ordering; check it.
+            detect::before_acquire(self.id, self.name, self.rank);
+            detect::on_acquired(self.id, self.name, self.rank);
+        }
+        detect::guard_created();
+        Some(TrackedGuard {
+            inner: Some(inner),
+            lock: self,
+            tracked,
+        })
+    }
+
+    #[cfg(not(debug_assertions))]
+    pub fn try_lock(&self) -> Option<TrackedGuard<'_, T>> {
+        match self.inner.try_lock() {
+            Ok(g) => Some(TrackedGuard { inner: Some(g) }),
+            Err(std::sync::TryLockError::Poisoned(p)) => Some(TrackedGuard {
+                inner: Some(p.into_inner()),
+            }),
+            Err(std::sync::TryLockError::WouldBlock) => None,
+        }
+    }
+}
+
+/// Locked guard for a [`TrackedMutex`]. `inner` is `Some` for the whole
+/// guard lifetime except transiently inside a condvar wait.
+pub struct TrackedGuard<'a, T> {
+    inner: Option<MutexGuard<'a, T>>,
+    #[cfg(debug_assertions)]
+    lock: &'a TrackedMutex<T>,
+    #[cfg(debug_assertions)]
+    tracked: bool,
+}
+
+#[cfg(debug_assertions)]
+impl<T> TrackedGuard<'_, T> {
+    fn suspend_tracking(&mut self) -> bool {
+        if self.tracked {
+            detect::on_released(self.lock.id);
+        }
+        std::mem::replace(&mut self.tracked, false)
+    }
+
+    fn resume_tracking(&mut self, was_tracked: bool) {
+        if was_tracked {
+            detect::before_acquire(self.lock.id, self.lock.name, self.lock.rank);
+            detect::on_acquired(self.lock.id, self.lock.name, self.lock.rank);
+            self.tracked = true;
+        }
+    }
+}
+
+impl<T> Deref for TrackedGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard emptied outside wait")
+    }
+}
+
+impl<T> DerefMut for TrackedGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard emptied outside wait")
+    }
+}
+
+impl<T> Drop for TrackedGuard<'_, T> {
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        {
+            if self.tracked {
+                detect::on_released(self.lock.id);
+            }
+            detect::guard_dropped();
+        }
+        // The inner MutexGuard drops here, releasing the lock.
+    }
+}
+
+/// Condvar companion to [`TrackedMutex`]: waits untrack the guard while
+/// the lock is released inside the wait and re-run the acquisition checks
+/// on wake.
+pub struct TrackedCondvar {
+    inner: Condvar,
+}
+
+impl TrackedCondvar {
+    pub fn new() -> Self {
+        TrackedCondvar {
+            inner: Condvar::new(),
+        }
+    }
+
+    pub fn wait<'a, T>(&self, mut guard: TrackedGuard<'a, T>) -> TrackedGuard<'a, T> {
+        #[cfg(debug_assertions)]
+        let retrack = guard.suspend_tracking();
+        let inner = guard.inner.take().expect("guard emptied outside wait");
+        let inner = self.inner.wait(inner).unwrap_or_else(PoisonError::into_inner);
+        guard.inner = Some(inner);
+        #[cfg(debug_assertions)]
+        guard.resume_tracking(retrack);
+        guard
+    }
+
+    pub fn wait_timeout<'a, T>(
+        &self,
+        mut guard: TrackedGuard<'a, T>,
+        dur: Duration,
+    ) -> (TrackedGuard<'a, T>, WaitTimeoutResult) {
+        #[cfg(debug_assertions)]
+        let retrack = guard.suspend_tracking();
+        let inner = guard.inner.take().expect("guard emptied outside wait");
+        let (inner, timed_out) = self
+            .inner
+            .wait_timeout(inner, dur)
+            .unwrap_or_else(PoisonError::into_inner);
+        guard.inner = Some(inner);
+        #[cfg(debug_assertions)]
+        guard.resume_tracking(retrack);
+        (guard, timed_out)
+    }
+
+    pub fn notify_one(&self) {
+        self.inner.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.inner.notify_all();
+    }
+}
+
+impl Default for TrackedCondvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// True when the runtime lock checker is armed (`DATAMUX_LOCK_CHECK=1` or
+/// [`force_arm`]). Always false in release builds.
+#[cfg(debug_assertions)]
+pub fn lock_check_armed() -> bool {
+    detect::armed()
+}
+
+#[cfg(not(debug_assertions))]
+pub fn lock_check_armed() -> bool {
+    false
+}
+
+/// Arm the detector for the rest of the process. One-way; used by tests.
+#[cfg(debug_assertions)]
+pub fn force_arm() {
+    detect::force_arm();
+}
+
+#[cfg(not(debug_assertions))]
+pub fn force_arm() {}
+
+/// Number of locked [`TrackedGuard`]s currently live process-wide.
+/// Always 0 in release builds.
+#[cfg(debug_assertions)]
+pub fn live_guard_count() -> i64 {
+    detect::live_guards()
+}
+
+#[cfg(not(debug_assertions))]
+pub fn live_guard_count() -> i64 {
+    0
+}
+
+/// Assert no locked guard is live. Call only at true quiescent points
+/// (end of `main`, single-threaded tests) — mid-suite, parallel tests
+/// legitimately hold locks.
+#[cfg(debug_assertions)]
+pub fn assert_quiescent() {
+    let live = detect::live_guards();
+    assert_eq!(live, 0, "leaked locked guards at shutdown: {live} still live");
+}
+
+#[cfg(not(debug_assertions))]
+pub fn assert_quiescent() {}
+
+/// Snapshot of every violation the detector has recorded this process.
+#[cfg(debug_assertions)]
+pub fn violations() -> Vec<String> {
+    detect::violations_snapshot()
+}
+
+#[cfg(not(debug_assertions))]
+pub fn violations() -> Vec<String> {
+    Vec::new()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::Arc;
+    use std::thread;
+
+    fn panic_msg(e: Box<dyn std::any::Any + Send>) -> String {
+        if let Some(s) = e.downcast_ref::<String>() {
+            s.clone()
+        } else if let Some(s) = e.downcast_ref::<&str>() {
+            (*s).to_string()
+        } else {
+            String::new()
+        }
+    }
+
+    #[test]
+    fn plain_lock_and_data() {
+        let m = TrackedMutex::new("t-plain", rank::NONE, 1u32);
+        *m.lock() += 1;
+        assert_eq!(*m.lock(), 2);
+    }
+
+    #[test]
+    fn try_lock_contended_returns_none() {
+        let m = TrackedMutex::new("t-try", rank::NONE, ());
+        let g = m.lock();
+        assert!(m.try_lock().is_none());
+        drop(g);
+        assert!(m.try_lock().is_some());
+    }
+
+    #[test]
+    fn catches_deliberate_inversion() {
+        force_arm();
+        let a = TrackedMutex::new("t-inv-a", rank::NONE, ());
+        let b = TrackedMutex::new("t-inv-b", rank::NONE, ());
+        {
+            let _ga = a.lock();
+            let _gb = b.lock(); // records edge t-inv-a -> t-inv-b
+        }
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            let _gb = b.lock();
+            let _ga = a.lock(); // closes the cycle
+        }))
+        .expect_err("inversion must panic");
+        let msg = panic_msg(err);
+        assert!(msg.contains("t-inv-a"), "unexpected message: {msg}");
+        assert!(
+            violations().iter().any(|v| v.contains("t-inv-a")),
+            "violation must be recorded"
+        );
+    }
+
+    #[test]
+    fn catches_rank_inversion() {
+        force_arm();
+        let low = TrackedMutex::new("t-rank-low", 10, ());
+        let high = TrackedMutex::new("t-rank-high", 20, ());
+        let _g = high.lock();
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            let _ = low.lock();
+        }))
+        .expect_err("rank inversion must panic");
+        assert!(panic_msg(err).contains("rank inversion"));
+    }
+
+    #[test]
+    fn catches_reentrant_acquisition() {
+        force_arm();
+        let m = TrackedMutex::new("t-reent", rank::NONE, ());
+        let _g = m.lock();
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            let _ = m.lock();
+        }))
+        .expect_err("reentrancy must panic, not deadlock");
+        assert!(panic_msg(err).contains("reentrant"));
+    }
+
+    #[test]
+    fn catches_same_name_nesting() {
+        force_arm();
+        let a = TrackedMutex::new("t-same", rank::NONE, ());
+        let b = TrackedMutex::new("t-same", rank::NONE, ());
+        let _ga = a.lock();
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            let _ = b.lock();
+        }))
+        .expect_err("same-name nesting must panic");
+        assert!(panic_msg(err).contains("same-name"));
+    }
+
+    #[test]
+    fn consistent_order_is_clean() {
+        force_arm();
+        let a = TrackedMutex::new("t-ord-a", 1, ());
+        let b = TrackedMutex::new("t-ord-b", 2, ());
+        for _ in 0..3 {
+            let _ga = a.lock();
+            let _gb = b.lock();
+        }
+        assert!(!violations().iter().any(|v| v.contains("t-ord-")));
+    }
+
+    #[test]
+    fn contended_lock_is_correct_when_armed() {
+        force_arm();
+        let m = Arc::new(TrackedMutex::new("t-contend", rank::NONE, 0u64));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let m = Arc::clone(&m);
+            handles.push(thread::spawn(move || {
+                for _ in 0..200 {
+                    *m.lock() += 1;
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("worker must not panic");
+        }
+        assert_eq!(*m.lock(), 800);
+    }
+
+    #[test]
+    fn condvar_roundtrip_under_detector() {
+        force_arm();
+        let pair = Arc::new((
+            TrackedMutex::new("t-cv", rank::NONE, false),
+            TrackedCondvar::new(),
+        ));
+        let p2 = Arc::clone(&pair);
+        let h = thread::spawn(move || {
+            let (m, cv) = &*p2;
+            *m.lock() = true;
+            cv.notify_one();
+        });
+        let (m, cv) = &*pair;
+        let mut g = m.lock();
+        let mut rounds = 0;
+        while !*g {
+            let (g2, _) = cv.wait_timeout(g, Duration::from_millis(100));
+            g = g2;
+            rounds += 1;
+            assert!(rounds < 100, "condvar wait never observed the flag");
+        }
+        drop(g);
+        h.join().expect("notifier must not panic");
+    }
+
+    #[test]
+    fn leaked_guard_detected() {
+        let m = TrackedMutex::new("t-leak", rank::NONE, ());
+        let g = m.lock();
+        assert!(live_guard_count() >= 1);
+        let err = catch_unwind(AssertUnwindSafe(assert_quiescent));
+        assert!(err.is_err(), "assert_quiescent must flag a live guard");
+        drop(g);
+    }
+}

@@ -3,11 +3,14 @@
 //! The coordinator's event loop is thread-based: worker threads pull mux
 //! groups from a bounded queue (backpressure = blocking senders), and
 //! request completion is signalled through a one-shot cell. Everything is
-//! std-only: `Mutex` + `Condvar`.
+//! std-only, via the instrumented [`TrackedMutex`] / [`TrackedCondvar`]
+//! wrappers so the `DATAMUX_LOCK_CHECK=1` runtime detector covers every
+//! channel wait.
 
+use crate::util::sync::{rank, TrackedCondvar, TrackedMutex};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 // ---------------------------------------------------------------------------
@@ -15,9 +18,9 @@ use std::thread::JoinHandle;
 // ---------------------------------------------------------------------------
 
 struct ChanInner<T> {
-    q: Mutex<ChanState<T>>,
-    not_empty: Condvar,
-    not_full: Condvar,
+    q: TrackedMutex<ChanState<T>>,
+    not_empty: TrackedCondvar,
+    not_full: TrackedCondvar,
     cap: usize,
     /// Mirror of `buf.len()`, maintained under the lock but readable
     /// without it. `len()` is called on every router pull-gate check
@@ -72,9 +75,13 @@ impl<T> Channel<T> {
         assert!(cap > 0);
         Channel {
             inner: Arc::new(ChanInner {
-                q: Mutex::new(ChanState { buf: VecDeque::new(), closed: false }),
-                not_empty: Condvar::new(),
-                not_full: Condvar::new(),
+                q: TrackedMutex::new(
+                    "util.chan",
+                    rank::NONE,
+                    ChanState { buf: VecDeque::new(), closed: false },
+                ),
+                not_empty: TrackedCondvar::new(),
+                not_full: TrackedCondvar::new(),
                 cap,
                 depth: AtomicUsize::new(0),
                 closed: AtomicBool::new(false),
@@ -85,7 +92,7 @@ impl<T> Channel<T> {
     /// Blocking send; returns Err if the channel is closed (backpressure:
     /// blocks while full).
     pub fn send(&self, item: T) -> Result<(), SendError> {
-        let mut st = self.inner.q.lock().unwrap();
+        let mut st = self.inner.q.lock();
         loop {
             if st.closed {
                 return Err(SendError::Closed);
@@ -96,14 +103,14 @@ impl<T> Channel<T> {
                 self.inner.not_empty.notify_one();
                 return Ok(());
             }
-            st = self.inner.not_full.wait(st).unwrap();
+            st = self.inner.not_full.wait(st);
         }
     }
 
     /// Non-blocking send attempt; the error distinguishes full from
     /// closed and hands the item back.
     pub fn try_send(&self, item: T) -> Result<(), TrySendError<T>> {
-        let mut st = self.inner.q.lock().unwrap();
+        let mut st = self.inner.q.lock();
         if st.closed {
             return Err(TrySendError::Closed(item));
         }
@@ -118,7 +125,7 @@ impl<T> Channel<T> {
 
     /// Blocking receive; None when the channel is closed *and* drained.
     pub fn recv(&self) -> Option<T> {
-        let mut st = self.inner.q.lock().unwrap();
+        let mut st = self.inner.q.lock();
         loop {
             if let Some(item) = st.buf.pop_front() {
                 self.inner.depth.store(st.buf.len(), Ordering::Relaxed);
@@ -128,7 +135,7 @@ impl<T> Channel<T> {
             if st.closed {
                 return None;
             }
-            st = self.inner.not_empty.wait(st).unwrap();
+            st = self.inner.not_empty.wait(st);
         }
     }
 
@@ -149,7 +156,7 @@ impl<T> Channel<T> {
         if max == 0 {
             return 0;
         }
-        let mut st = self.inner.q.lock().unwrap();
+        let mut st = self.inner.q.lock();
         loop {
             if !st.buf.is_empty() {
                 let n = max.min(st.buf.len());
@@ -167,13 +174,13 @@ impl<T> Channel<T> {
                 return 0;
             }
             match deadline {
-                None => st = self.inner.not_empty.wait(st).unwrap(),
+                None => st = self.inner.not_empty.wait(st),
                 Some(dl) => {
                     let now = std::time::Instant::now();
                     if now >= dl {
                         return 0;
                     }
-                    st = self.inner.not_empty.wait_timeout(st, dl - now).unwrap().0;
+                    st = self.inner.not_empty.wait_timeout(st, dl - now).0;
                 }
             }
         }
@@ -184,7 +191,7 @@ impl<T> Channel<T> {
         if max == 0 {
             return 0;
         }
-        let mut st = self.inner.q.lock().unwrap();
+        let mut st = self.inner.q.lock();
         let n = max.min(st.buf.len());
         if n > 0 {
             out.extend(st.buf.drain(..n));
@@ -201,7 +208,7 @@ impl<T> Channel<T> {
     /// Receive with a deadline; None on timeout or closed+drained.
     pub fn recv_timeout(&self, dur: std::time::Duration) -> Option<T> {
         let deadline = std::time::Instant::now() + dur;
-        let mut st = self.inner.q.lock().unwrap();
+        let mut st = self.inner.q.lock();
         loop {
             if let Some(item) = st.buf.pop_front() {
                 self.inner.depth.store(st.buf.len(), Ordering::Relaxed);
@@ -215,7 +222,7 @@ impl<T> Channel<T> {
             if now >= deadline {
                 return None;
             }
-            let (g, res) = self.inner.not_empty.wait_timeout(st, deadline - now).unwrap();
+            let (g, res) = self.inner.not_empty.wait_timeout(st, deadline - now);
             st = g;
             if res.timed_out() && st.buf.is_empty() {
                 return None;
@@ -224,7 +231,7 @@ impl<T> Channel<T> {
     }
 
     pub fn try_recv(&self) -> Option<T> {
-        let mut st = self.inner.q.lock().unwrap();
+        let mut st = self.inner.q.lock();
         let item = st.buf.pop_front();
         if item.is_some() {
             self.inner.depth.store(st.buf.len(), Ordering::Relaxed);
@@ -252,7 +259,7 @@ impl<T> Channel<T> {
 
     /// Close: senders fail, receivers drain then get None.
     pub fn close(&self) {
-        let mut st = self.inner.q.lock().unwrap();
+        let mut st = self.inner.q.lock();
         st.closed = true;
         self.inner.closed.store(true, Ordering::Release);
         self.inner.not_empty.notify_all();
@@ -265,9 +272,9 @@ impl<T> Channel<T> {
 // ---------------------------------------------------------------------------
 
 struct PrioInner<T> {
-    q: Mutex<PrioState<T>>,
-    not_empty: Condvar,
-    not_full: Condvar,
+    q: TrackedMutex<PrioState<T>>,
+    not_empty: TrackedCondvar,
+    not_full: TrackedCondvar,
     /// capacity per class (head-of-line isolation between classes: a
     /// saturated bulk class cannot crowd high traffic out of admission)
     cap_per_class: usize,
@@ -314,12 +321,16 @@ impl<T> PrioChannel<T> {
         assert!(classes > 0 && cap_per_class > 0);
         PrioChannel {
             inner: Arc::new(PrioInner {
-                q: Mutex::new(PrioState {
-                    bufs: (0..classes).map(|_| VecDeque::new()).collect(),
-                    closed: false,
-                }),
-                not_empty: Condvar::new(),
-                not_full: Condvar::new(),
+                q: TrackedMutex::new(
+                    "util.prio",
+                    rank::NONE,
+                    PrioState {
+                        bufs: (0..classes).map(|_| VecDeque::new()).collect(),
+                        closed: false,
+                    },
+                ),
+                not_empty: TrackedCondvar::new(),
+                not_full: TrackedCondvar::new(),
                 cap_per_class,
                 depths: (0..classes).map(|_| AtomicUsize::new(0)).collect(),
                 depth: AtomicUsize::new(0),
@@ -340,7 +351,7 @@ impl<T> PrioChannel<T> {
     /// Blocking send into `class` (0 = highest); blocks while that
     /// class is at capacity, errs when closed.
     pub fn send(&self, item: T, class: usize) -> Result<(), SendError> {
-        let mut st = self.inner.q.lock().unwrap();
+        let mut st = self.inner.q.lock();
         loop {
             if st.closed {
                 return Err(SendError::Closed);
@@ -351,14 +362,14 @@ impl<T> PrioChannel<T> {
                 self.inner.not_empty.notify_one();
                 return Ok(());
             }
-            st = self.inner.not_full.wait(st).unwrap();
+            st = self.inner.not_full.wait(st);
         }
     }
 
     /// Non-blocking send into `class`; distinguishes the class being
     /// full from the channel being closed and hands the item back.
     pub fn try_send(&self, item: T, class: usize) -> Result<(), TrySendError<T>> {
-        let mut st = self.inner.q.lock().unwrap();
+        let mut st = self.inner.q.lock();
         if st.closed {
             return Err(TrySendError::Closed(item));
         }
@@ -383,7 +394,7 @@ impl<T> PrioChannel<T> {
         if max == 0 {
             return 0;
         }
-        let mut st = self.inner.q.lock().unwrap();
+        let mut st = self.inner.q.lock();
         loop {
             let n = self.drain_locked(&mut st, out, max);
             if n > 0 {
@@ -398,13 +409,13 @@ impl<T> PrioChannel<T> {
                 return 0;
             }
             match deadline {
-                None => st = self.inner.not_empty.wait(st).unwrap(),
+                None => st = self.inner.not_empty.wait(st),
                 Some(dl) => {
                     let now = std::time::Instant::now();
                     if now >= dl {
                         return 0;
                     }
-                    st = self.inner.not_empty.wait_timeout(st, dl - now).unwrap().0;
+                    st = self.inner.not_empty.wait_timeout(st, dl - now).0;
                 }
             }
         }
@@ -415,7 +426,7 @@ impl<T> PrioChannel<T> {
         if max == 0 {
             return 0;
         }
-        let mut st = self.inner.q.lock().unwrap();
+        let mut st = self.inner.q.lock();
         let n = self.drain_locked(&mut st, out, max);
         if n > 1 {
             self.inner.not_full.notify_all();
@@ -470,7 +481,7 @@ impl<T> PrioChannel<T> {
 
     /// Close: senders fail, receivers drain then get 0.
     pub fn close(&self) {
-        let mut st = self.inner.q.lock().unwrap();
+        let mut st = self.inner.q.lock();
         st.closed = true;
         self.inner.closed.store(true, Ordering::Release);
         self.inner.not_empty.notify_all();
@@ -483,8 +494,8 @@ impl<T> PrioChannel<T> {
 // ---------------------------------------------------------------------------
 
 struct OnceInner<T> {
-    slot: Mutex<Option<T>>,
-    cv: Condvar,
+    slot: TrackedMutex<Option<T>>,
+    cv: TrackedCondvar,
 }
 
 /// One-shot value cell: the scheduler fulfills it, the caller waits on it.
@@ -507,30 +518,33 @@ impl<T> Default for OnceCellSync<T> {
 impl<T> OnceCellSync<T> {
     pub fn new() -> Self {
         OnceCellSync {
-            inner: Arc::new(OnceInner { slot: Mutex::new(None), cv: Condvar::new() }),
+            inner: Arc::new(OnceInner {
+                slot: TrackedMutex::new("util.once", rank::NONE, None),
+                cv: TrackedCondvar::new(),
+            }),
         }
     }
 
     pub fn set(&self, v: T) {
-        let mut s = self.inner.slot.lock().unwrap();
+        let mut s = self.inner.slot.lock();
         debug_assert!(s.is_none(), "OnceCellSync set twice");
         *s = Some(v);
         self.inner.cv.notify_all();
     }
 
     pub fn wait(&self) -> T {
-        let mut s = self.inner.slot.lock().unwrap();
+        let mut s = self.inner.slot.lock();
         loop {
             if let Some(v) = s.take() {
                 return v;
             }
-            s = self.inner.cv.wait(s).unwrap();
+            s = self.inner.cv.wait(s);
         }
     }
 
     pub fn wait_timeout(&self, dur: std::time::Duration) -> Option<T> {
         let deadline = std::time::Instant::now() + dur;
-        let mut s = self.inner.slot.lock().unwrap();
+        let mut s = self.inner.slot.lock();
         loop {
             if let Some(v) = s.take() {
                 return Some(v);
@@ -539,7 +553,7 @@ impl<T> OnceCellSync<T> {
             if now >= deadline {
                 return None;
             }
-            s = self.inner.cv.wait_timeout(s, deadline - now).unwrap().0;
+            s = self.inner.cv.wait_timeout(s, deadline - now).0;
         }
     }
 }
@@ -614,6 +628,7 @@ impl Drop for ThreadPool {
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicUsize;
+    use std::sync::Mutex;
     use std::time::Duration;
 
     #[test]

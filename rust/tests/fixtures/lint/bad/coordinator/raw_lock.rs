@@ -1,0 +1,9 @@
+//! Lint fixture: raw lock primitives in coordinator scope (raw-lock).
+//! Scanned by tests/lint_pass.rs, never compiled.
+
+use std::sync::{Condvar, Mutex};
+
+pub struct Queue {
+    items: Mutex<Vec<u32>>,
+    ready: Condvar,
+}

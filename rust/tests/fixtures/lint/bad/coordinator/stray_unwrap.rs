@@ -1,0 +1,14 @@
+//! Lint fixture: serving-path panics (serving-panic).
+//! Scanned by tests/lint_pass.rs, never compiled.
+
+pub fn take(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+pub fn must(v: Option<u32>) -> u32 {
+    v.expect("value missing")
+}
+
+pub fn boom() {
+    panic!("fixture panic");
+}

@@ -1,0 +1,9 @@
+//! Lint fixture: allocation inside a marker-armed function
+//! (hot-path-alloc). Scanned by tests/lint_pass.rs, never compiled.
+
+// lint: hot-path
+pub fn accumulate(xs: &[u32]) -> Vec<u32> {
+    let mut out = Vec::new();
+    out.extend_from_slice(xs);
+    out
+}

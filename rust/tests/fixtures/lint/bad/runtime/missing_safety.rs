@@ -1,0 +1,7 @@
+//! Lint fixture: unsafe without a SAFETY justification (unsafe-safety),
+//! in a file absent from the pinned inventory (unsafe-inventory).
+//! Scanned by tests/lint_pass.rs, never compiled.
+
+pub fn read_first(p: *const u32) -> u32 {
+    unsafe { *p }
+}

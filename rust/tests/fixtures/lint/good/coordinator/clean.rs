@@ -1,0 +1,29 @@
+//! Lint fixture: a clean coordinator file — tracked locks only, no
+//! serving-path panics. Scanned by tests/lint_pass.rs, never compiled.
+
+use crate::util::sync::{rank, TrackedMutex};
+
+pub struct Gate {
+    inner: TrackedMutex<u32>,
+}
+
+impl Gate {
+    pub fn new() -> Gate {
+        Gate { inner: TrackedMutex::new("fixture.gate", rank::NONE, 0) }
+    }
+
+    pub fn bump(&self) -> u32 {
+        let mut v = self.inner.lock();
+        *v += 1;
+        *v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_in_test_code() {
+        let v = Some(1).unwrap();
+        assert_eq!(v, 1);
+    }
+}

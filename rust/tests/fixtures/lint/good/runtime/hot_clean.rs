@@ -1,0 +1,9 @@
+//! Lint fixture: a marker-armed function that stays allocation-free.
+//! Scanned by tests/lint_pass.rs, never compiled.
+
+// lint: hot-path
+pub fn saxpy(a: f32, x: &[f32], y: &mut [f32]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * *xi;
+    }
+}

@@ -1,0 +1,6 @@
+//! Lint fixture: util scope — unwrap stays legal outside serving code.
+//! Scanned by tests/lint_pass.rs, never compiled.
+
+pub fn parse(s: &str) -> u32 {
+    s.parse().unwrap()
+}

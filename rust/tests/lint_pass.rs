@@ -1,0 +1,71 @@
+//! The lint pass's own gate: every seeded fixture violation fires, and
+//! the live source tree comes back clean.
+//!
+//! Fixtures live under `tests/fixtures/lint/{bad,good}/` — they mirror
+//! the `src/` directory layout (the rule scopes key on it) and are
+//! scanned by [`datamux::analysis::lint_dir`], never compiled.
+
+use std::path::PathBuf;
+
+use datamux::analysis::{lint_dir, Rule, Violation};
+
+fn fixture(which: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/lint").join(which)
+}
+
+fn lint_fixture(which: &str) -> Vec<Violation> {
+    lint_dir(&fixture(which)).expect("fixture tree scans").violations
+}
+
+fn fired(violations: &[Violation], file: &str, rule: Rule) -> bool {
+    violations.iter().any(|v| v.file == file && v.rule == rule)
+}
+
+#[test]
+fn seeded_violations_all_fire() {
+    let v = lint_fixture("bad");
+    assert!(fired(&v, "coordinator/raw_lock.rs", Rule::RawLock), "{v:#?}");
+    assert!(fired(&v, "coordinator/stray_unwrap.rs", Rule::ServingPanic), "{v:#?}");
+    assert!(fired(&v, "runtime/missing_safety.rs", Rule::UnsafeSafety), "{v:#?}");
+    assert!(fired(&v, "runtime/missing_safety.rs", Rule::UnsafeInventory), "{v:#?}");
+    assert!(fired(&v, "hot_alloc.rs", Rule::HotPathAlloc), "{v:#?}");
+}
+
+#[test]
+fn unwrap_expect_and_panic_each_fire() {
+    let v = lint_fixture("bad");
+    let hits: Vec<&Violation> =
+        v.iter().filter(|x| x.file == "coordinator/stray_unwrap.rs").collect();
+    assert_eq!(hits.len(), 3, "unwrap, expect and panic each flagged once: {hits:#?}");
+    assert!(hits.iter().all(|x| x.rule == Rule::ServingPanic), "{hits:#?}");
+}
+
+#[test]
+fn raw_mutex_and_condvar_both_flagged() {
+    let v = lint_fixture("bad");
+    let locks: Vec<&str> = v
+        .iter()
+        .filter(|x| x.file == "coordinator/raw_lock.rs")
+        .map(|x| x.message.as_str())
+        .collect();
+    assert!(locks.iter().any(|m| m.contains("`Mutex`")), "{locks:?}");
+    assert!(locks.iter().any(|m| m.contains("`Condvar`")), "{locks:?}");
+}
+
+#[test]
+fn good_tree_is_clean() {
+    let v = lint_fixture("good");
+    assert!(v.is_empty(), "{v:#?}");
+}
+
+#[test]
+fn live_tree_is_clean() {
+    let src = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = lint_dir(&src).expect("src tree scans");
+    assert!(
+        report.violations.is_empty(),
+        "datamux lint must pass on the live tree:\n{}",
+        report.violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+    );
+    assert!(report.files_scanned >= 40, "only {} files scanned", report.files_scanned);
+}
