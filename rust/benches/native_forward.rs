@@ -5,7 +5,7 @@
 //! paper's Fig 4c throughput-vs-N curve. Every N is measured at both
 //! weight precisions (f32 and int8) against the same random model.
 //!
-//! Three gates, all enforced wherever the bench runs (CI included):
+//! Six gates, all enforced wherever the bench runs (CI included):
 //!
 //! 1. **fused f32 ≥ 3x naive on AVX2+FMA hosts (≥ 2x scalar)** — at
 //!    every N, the optimized forward (vectorized microkernel, fused mux,
@@ -19,6 +19,23 @@
 //!    arm exists for parity, not speed, and is not gated).
 //! 3. **arena_reallocs == 0 in steady state** — after warmup, timed
 //!    forwards must not materialize new tensor arenas (both precisions).
+//! 4. **flash attention ≥ 1.5x the PR 7 attention path (≥ 1.15x
+//!    scalar-vs-scalar)** — the per-layer `attention` stage time of a
+//!    single-threaded forward at the largest N, against a live in-bench
+//!    reproduction of the pre-flash path (materialized `li×li` scores,
+//!    sequential scalar dots, two-pass libm softmax, scalar PV).
+//! 5. **one projection GEMM per layer** — the process-wide GEMM dispatch
+//!    delta across one forward must be exactly `4L + 2b + 2` (qkv, wo,
+//!    ff1, ff2 per layer; w1p + w1h per batch row; w2; head), pinning
+//!    the QKV fusion (three projections would make it `6L + 2b + 2`).
+//! 6. **workspace bytes linear in `li`** — three equally spaced buckets
+//!    must give exactly collinear workspace byte counts (the quadratic
+//!    scores block is gone; flash tile scratch is constant in `li`).
+//!
+//! Per-stage wall time (mux / qkv / attention / ffn / head, cumulative
+//! ns per forward) is reported for every row as `stage_ns` — the Amdahl
+//! breakdown future perf work reads from the artifact instead of
+//! guessing.
 //!
 //! Each row also reports `gflops_peak_frac`: achieved GFLOP/s over a
 //! theoretical machine peak derived from a measured clock estimate
@@ -36,7 +53,7 @@ use std::hint::black_box;
 use std::time::Instant;
 
 use datamux::runtime::native::{
-    active_kernel, reference, synthetic_meta, Kernel, Precision, RawWeights,
+    active_kernel, gemm_dispatches, reference, synthetic_meta, Kernel, Precision, RawWeights,
 };
 use datamux::runtime::{InferenceBackend, NativeBackend, WeightsFile};
 use datamux::util::bench::Table;
@@ -88,6 +105,9 @@ struct Measured {
     ns_per_req: f64,
     fused_ns: f64,
     arena_delta: u64,
+    /// average ns per forward spent in each stage over the timed loop,
+    /// in pipeline order (mux, qkv, attention, ffn, head)
+    stage_ns: Vec<(&'static str, f64)>,
 }
 
 fn measure(
@@ -101,6 +121,7 @@ fn measure(
         black_box(backend.run_ids(ids)?);
     }
     let arena_before = backend.arena_reallocs();
+    let stages_before = backend.stage_ns();
     let mut samples = Vec::with_capacity(iters);
     let t0 = Instant::now();
     for _ in 0..iters {
@@ -110,6 +131,12 @@ fn measure(
     }
     let wall = t0.elapsed().as_secs_f64();
     let arena_delta = backend.arena_reallocs() - arena_before;
+    let stage_ns: Vec<(&'static str, f64)> = backend
+        .stage_ns()
+        .iter()
+        .zip(&stages_before)
+        .map(|(&(k, after), &(_, before))| (k, (after - before) as f64 / iters as f64))
+        .collect();
     let fused_ns = median(&mut samples);
     let requests_per_exec = (backend.dims().batch * backend.dims().n_mux) as f64;
     Ok(Measured {
@@ -118,7 +145,136 @@ fn measure(
         ns_per_req: fused_ns / requests_per_exec,
         fused_ns,
         arena_delta,
+        stage_ns,
     })
+}
+
+/// Fill a buffer from a deterministic LCG stream, roughly uniform in
+/// [-0.5, 0.5) — activation-scale inputs for the attention baseline.
+fn lcg_fill(buf: &mut [f32], seed: &mut u64) {
+    for x in buf.iter_mut() {
+        *seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        *x = (*seed >> 40) as f32 / (1u64 << 24) as f32 - 0.5;
+    }
+}
+
+/// The PR 7 attention path, reproduced as a live in-bench baseline: a
+/// materialized `li×li` scores block per (batch, head), sequential
+/// scalar QK^T dots, two-pass softmax through libm `exp`, and a scalar
+/// PV accumulate. One call does exactly one layer's worth of attention
+/// for the given shape — the unit the flash kernel's `attention` stage
+/// counter is compared against.
+#[allow(clippy::too_many_arguments)]
+fn pr7_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    scores: &mut [f32],
+    ctx: &mut [f32],
+    b: usize,
+    heads: usize,
+    li: usize,
+    d: usize,
+    dh: usize,
+    scale: f32,
+) {
+    for bh in 0..b * heads {
+        let (bb, hh) = (bh / heads, bh % heads);
+        for i in 0..li {
+            let qrow = &q[(bb * li + i) * d + hh * dh..][..dh];
+            for j in 0..li {
+                let krow = &k[(bb * li + j) * d + hh * dh..][..dh];
+                let mut sdot = 0.0f32;
+                for t in 0..dh {
+                    sdot += qrow[t] * krow[t];
+                }
+                scores[i * li + j] = sdot * scale;
+            }
+            let row = &mut scores[i * li..(i + 1) * li];
+            let mut max = f32::NEG_INFINITY;
+            for &sv in row.iter() {
+                if sv > max {
+                    max = sv;
+                }
+            }
+            let mut sum = 0.0f32;
+            for sv in row.iter_mut() {
+                *sv = (*sv - max).exp();
+                sum += *sv;
+            }
+            let inv = 1.0 / sum;
+            for sv in row.iter_mut() {
+                *sv *= inv;
+            }
+            let crow = &mut ctx[(bb * li + i) * d + hh * dh..][..dh];
+            crow.fill(0.0);
+            for j in 0..li {
+                let p = scores[i * li + j];
+                let vrow = &v[(bb * li + j) * d + hh * dh..][..dh];
+                for t in 0..dh {
+                    crow[t] += p * vrow[t];
+                }
+            }
+        }
+    }
+}
+
+/// Gate 4: per-layer flash-attention stage time vs the PR 7 path at the
+/// largest N, both single-threaded so the comparison is kernel-vs-kernel
+/// rather than kernel-vs-fan-out. Returns (pr7_ns, flash_ns, speedup).
+fn attention_gate_measurement(
+    n: usize,
+    warmup: usize,
+    iters: usize,
+) -> anyhow::Result<(f64, f64, f64)> {
+    let meta = synthetic_meta("cls", n, BATCH, SEQ_LEN, D_MODEL, N_LAYERS, N_HEADS, N_CLASSES);
+    let raw = RawWeights::random(&meta, 2 * D_MODEL, 99);
+    let backend = NativeBackend::from_weights(meta.clone(), WeightsFile::parse(raw.to_blob())?)?
+        .with_threads(1);
+    let ids: Vec<i32> = (0..meta.ids_len())
+        .map(|i| ((i * 131 + 7) % meta.vocab_size) as i32)
+        .collect();
+    for _ in 0..warmup {
+        black_box(backend.run_ids(&ids)?);
+    }
+    let attn_before = stage_of(&backend, "attention");
+    for _ in 0..iters {
+        black_box(backend.run_ids(&ids)?);
+    }
+    let flash_ns =
+        (stage_of(&backend, "attention") - attn_before) as f64 / (iters * N_LAYERS) as f64;
+
+    // the baseline runs over synthetic activations of the same shape —
+    // identical op count and memory traffic to the pre-flash path
+    let li = n + SEQ_LEN;
+    let (d, dh) = (D_MODEL, D_MODEL / N_HEADS);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut seed = 0x9E37_79B9_7F4A_7C15u64;
+    let mut q = vec![0.0f32; BATCH * li * d];
+    let mut k = vec![0.0f32; BATCH * li * d];
+    let mut v = vec![0.0f32; BATCH * li * d];
+    lcg_fill(&mut q, &mut seed);
+    lcg_fill(&mut k, &mut seed);
+    lcg_fill(&mut v, &mut seed);
+    let mut scores = vec![0.0f32; li * li];
+    let mut ctx = vec![0.0f32; BATCH * li * d];
+    for _ in 0..warmup {
+        pr7_attention(&q, &k, &v, &mut scores, &mut ctx, BATCH, N_HEADS, li, d, dh, scale);
+        black_box(&mut ctx);
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t1 = Instant::now();
+        pr7_attention(&q, &k, &v, &mut scores, &mut ctx, BATCH, N_HEADS, li, d, dh, scale);
+        black_box(&mut ctx);
+        samples.push(t1.elapsed().as_nanos() as f64);
+    }
+    let pr7_ns = median(&mut samples);
+    Ok((pr7_ns, flash_ns, pr7_ns / flash_ns))
+}
+
+fn stage_of(backend: &NativeBackend, name: &str) -> u64 {
+    backend.stage_ns().iter().find(|(k, _)| *k == name).map_or(0, |&(_, ns)| ns)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -221,6 +377,10 @@ fn main() -> anyhow::Result<()> {
                 ("gflops_peak_frac", num(frac)),
                 ("ns_per_request", num(m.ns_per_req)),
                 ("arena_reallocs", num(m.arena_delta as f64)),
+                (
+                    "stage_ns",
+                    obj(m.stage_ns.iter().map(|&(k, ns)| (k, num(ns))).collect()),
+                ),
             ];
             if fused_speedup.is_some() {
                 fields.push(("naive_ns_per_request", num(naive_ns_per_req)));
@@ -234,8 +394,46 @@ fn main() -> anyhow::Result<()> {
     }
     table.print();
 
+    // gate 4: flash attention vs the PR 7 attention path at the largest N
+    let n_big = NS[NS.len() - 1];
+    let (pr7_attn_ns, flash_attn_ns, attn_speedup) =
+        attention_gate_measurement(n_big, warmup, iters)?;
+
+    // gate 5: QKV fusion means exactly one projection GEMM per layer —
+    // the dispatch delta across one forward is 4L + 2b + 2, not 6L + 2b + 2
+    let gemm_expected = (4 * N_LAYERS + 2 * BATCH + 2) as u64;
+    let gemm_per_forward = {
+        let meta =
+            synthetic_meta("cls", n_big, BATCH, SEQ_LEN, D_MODEL, N_LAYERS, N_HEADS, N_CLASSES);
+        let raw = RawWeights::random(&meta, 2 * D_MODEL, 7);
+        let backend =
+            NativeBackend::from_weights(meta.clone(), WeightsFile::parse(raw.to_blob())?)?;
+        let ids: Vec<i32> = (0..meta.ids_len())
+            .map(|i| ((i * 131 + 7) % meta.vocab_size) as i32)
+            .collect();
+        black_box(backend.run_ids(&ids)?); // settle the arena outside the count
+        let before = gemm_dispatches();
+        black_box(backend.run_ids(&ids)?);
+        gemm_dispatches() - before
+    };
+
+    // gate 6: workspace bytes must be exactly collinear across equally
+    // spaced buckets — a quadratic scores block would break the equality
+    let (ws_a, ws_b, ws_c) = {
+        let meta =
+            synthetic_meta("cls", n_big, BATCH, SEQ_LEN, D_MODEL, N_LAYERS, N_HEADS, N_CLASSES);
+        let raw = RawWeights::random(&meta, 2 * D_MODEL, 7);
+        let backend = NativeBackend::from_weights(meta, WeightsFile::parse(raw.to_blob())?)?;
+        (
+            backend.workspace_bytes_at(4)?,
+            backend.workspace_bytes_at(10)?,
+            backend.workspace_bytes_at(16)?,
+        )
+    };
+    let ws_linear = ws_b > ws_a && ws_c > ws_b && ws_b - ws_a == ws_c - ws_b;
+
     let result = obj(vec![
-        ("schema", s("native_forward/v2")),
+        ("schema", s("native_forward/v3")),
         ("quick", Json::Bool(quick)),
         ("kernel", s(kernel.name())),
         ("estimated_ghz", num(ghz)),
@@ -256,6 +454,17 @@ fn main() -> anyhow::Result<()> {
         ("min_fused_speedup", num(min_speedup)),
         ("min_int8_speedup_vs_f32", num(min_q8_speedup)),
         ("steady_state_arena_reallocs", num(steady_arena as f64)),
+        (
+            "attention",
+            obj(vec![
+                ("n_mux", num(n_big as f64)),
+                ("pr7_ns_per_layer", num(pr7_attn_ns)),
+                ("flash_ns_per_layer", num(flash_attn_ns)),
+            ]),
+        ),
+        ("attention_speedup", num(attn_speedup)),
+        ("gemm_dispatches_per_forward", num(gemm_per_forward as f64)),
+        ("workspace_linear_in_li", Json::Bool(ws_linear)),
     ]);
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()
@@ -269,12 +478,20 @@ fn main() -> anyhow::Result<()> {
     let parsed = Json::parse(&written).map_err(|e| anyhow::anyhow!("reparse: {e}"))?;
     anyhow::ensure!(
         parsed.get("sweep").and_then(Json::as_arr).map_or(0, |a| a.len()) == 2 * NS.len()
-            && parsed.get("min_fused_speedup").and_then(Json::as_f64).is_some(),
+            && parsed.get("min_fused_speedup").and_then(Json::as_f64).is_some()
+            && parsed.get("attention_speedup").and_then(Json::as_f64).is_some()
+            && parsed
+                .get("sweep")
+                .and_then(Json::as_arr)
+                .and_then(|a| a.first())
+                .and_then(|row| row.get("stage_ns"))
+                .is_some(),
         "BENCH_native.json is missing results"
     );
     println!(
         "\nwrote {} (kernel {}, min fused speedup vs naive: {min_speedup:.2}x, \
-         min int8 vs f32: {min_q8_speedup:.2}x)",
+         min int8 vs f32: {min_q8_speedup:.2}x, flash attention vs PR 7 path: \
+         {attn_speedup:.2}x)",
         path.display(),
         kernel.name()
     );
@@ -299,6 +516,29 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(
         steady_arena == 0,
         "tensor arena materialized {steady_arena} new workspaces in steady state (must be 0)"
+    );
+    // the flash kernel must beat the PR 7 attention path at the largest
+    // bucket — vectorized floor where AVX2 runs, scalar-vs-scalar floor
+    // under DATAMUX_FORCE_SCALAR / non-AVX2 hosts
+    let attn_floor = match kernel {
+        Kernel::Avx2Fma => 1.5,
+        Kernel::Scalar => 1.15,
+    };
+    anyhow::ensure!(
+        attn_speedup >= attn_floor,
+        "flash attention regression: {attn_speedup:.2}x < {attn_floor}x vs the PR 7 \
+         attention path at N={n_big} (kernel {})",
+        kernel.name()
+    );
+    anyhow::ensure!(
+        gemm_per_forward == gemm_expected,
+        "QKV fusion broken: {gemm_per_forward} GEMM dispatches per forward, expected \
+         {gemm_expected} (one fused projection GEMM per layer)"
+    );
+    anyhow::ensure!(
+        ws_linear,
+        "workspace bytes are not linear in li: {ws_a} / {ws_b} / {ws_c} at equally \
+         spaced seq lens (quadratic scores block reintroduced?)"
     );
     Ok(())
 }

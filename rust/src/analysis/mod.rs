@@ -57,10 +57,10 @@ pub const HOT_PATH_BANNED: &[&str] = &["Vec::new(", ".to_vec(", ".clone(", "form
 pub const UNSAFE_INVENTORY: &[(&str, usize)] = &[
     ("coordinator/reactor.rs", 5),
     ("coordinator/scheduler.rs", 2),
-    ("runtime/native/forward.rs", 3),
+    ("runtime/native/forward.rs", 8),
     ("runtime/native/gemm.rs", 7),
     ("runtime/native/quant.rs", 1),
-    ("runtime/native/simd.rs", 12),
+    ("runtime/native/simd.rs", 16),
     ("runtime/weights.rs", 3),
 ];
 

@@ -445,6 +445,14 @@ pub trait Submit: Send + Sync {
         Vec::new()
     }
 
+    /// Per-stage cumulative execution nanoseconds per backend, aligned
+    /// index-for-index with [`Submit::backend_info`]. Backends without
+    /// stage instrumentation contribute an empty list. Surfaced in the
+    /// v2 STATS `backends` block. Default: no stage detail.
+    fn backend_stage_ns(&self) -> Vec<Vec<(&'static str, u64)>> {
+        Vec::new()
+    }
+
     /// Convenience: submit one framed row for whatever task the model
     /// serves. The common path for drivers and benches.
     fn submit_framed(&self, ids: Vec<i32>) -> Result<RequestHandle, SubmitError> {

@@ -281,6 +281,9 @@ pub struct MuxCoordinator {
     /// captured at start: the backend's one-line self-description
     /// (surfaced by [`Submit::backend_info`])
     backend_desc: String,
+    /// retained handle to the running backend so live execution detail
+    /// (per-stage timers) can be snapshotted by [`Submit::backend_stage_ns`]
+    backend: Arc<dyn InferenceBackend>,
     next_id: AtomicU64,
     drain: DrainMeter,
     batcher: Option<std::thread::JoinHandle<u64>>,
@@ -386,6 +389,7 @@ impl MuxCoordinator {
             buckets,
             task,
             backend_desc,
+            backend,
             next_id: AtomicU64::new(1),
             drain: DrainMeter::new(),
             batcher: Some(batcher),
@@ -594,6 +598,10 @@ impl Submit for MuxCoordinator {
     fn backend_info(&self) -> Vec<String> {
         vec![self.backend_desc.clone()]
     }
+
+    fn backend_stage_ns(&self) -> Vec<Vec<(&'static str, u64)>> {
+        vec![self.backend.stage_ns()]
+    }
 }
 
 impl Drop for MuxCoordinator {
@@ -637,6 +645,9 @@ pub struct MuxRouter {
     /// one description per lane backend, captured at start and ascending
     /// by n_mux (surfaced by [`Submit::backend_info`])
     backend_descs: Vec<String>,
+    /// retained lane backend handles, same order as `backend_descs`, so
+    /// live per-stage timers flow out via [`Submit::backend_stage_ns`]
+    backend_handles: Vec<Arc<dyn InferenceBackend>>,
     next_id: AtomicU64,
     drain: DrainMeter,
 }
@@ -686,6 +697,7 @@ impl MuxRouter {
             buckets.count(),
         ));
         let backend_descs: Vec<String> = backends.iter().map(|b| b.describe()).collect();
+        let backend_handles: Vec<Arc<dyn InferenceBackend>> = backends.to_vec();
         let lanes = backends
             .into_iter()
             .map(|b| Lane::start(b, &cfg, &state, &tokenizer, &buckets))
@@ -700,6 +712,7 @@ impl MuxRouter {
             buckets,
             task,
             backend_descs,
+            backend_handles,
             next_id: AtomicU64::new(1),
             drain: DrainMeter::new(),
         })
@@ -914,5 +927,9 @@ impl Submit for MuxRouter {
 
     fn backend_info(&self) -> Vec<String> {
         self.backend_descs.clone()
+    }
+
+    fn backend_stage_ns(&self) -> Vec<Vec<(&'static str, u64)>> {
+        self.backend_handles.iter().map(|b| b.stage_ns()).collect()
     }
 }

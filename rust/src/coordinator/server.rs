@@ -753,11 +753,34 @@ fn stats_json(engine: &dyn Submit) -> Json {
                 ("buckets", Json::Arr(buckets)),
                 ("classes", Json::Arr(classes)),
                 ("lanes", Json::Arr(lanes)),
-                // one line per serving backend: model, kernel arm,
-                // weight precision (native backends)
+                // one entry per serving backend: the description line
+                // (model, kernel arm, weight precision) plus, for
+                // instrumented backends, cumulative per-stage ns
                 (
                     "backends",
-                    Json::Arr(engine.backend_info().iter().map(|d| s(d)).collect()),
+                    Json::Arr({
+                        let stage_ns = engine.backend_stage_ns();
+                        engine
+                            .backend_info()
+                            .iter()
+                            .enumerate()
+                            .map(|(i, d)| {
+                                let mut fields = vec![("desc", s(d))];
+                                if let Some(stages) =
+                                    stage_ns.get(i).filter(|st| !st.is_empty())
+                                {
+                                    fields.push((
+                                        "stage_ns",
+                                        obj(stages
+                                            .iter()
+                                            .map(|&(k, v)| (k, num(v as f64)))
+                                            .collect()),
+                                    ));
+                                }
+                                obj(fields)
+                            })
+                            .collect()
+                    }),
                 ),
             ]),
         ),

@@ -68,4 +68,12 @@ pub trait InferenceBackend: Send + Sync {
         );
         self.run_ids(ids)
     }
+
+    /// Cumulative per-stage execution time as `(stage, ns)` pairs, for
+    /// backends that instrument their forward (the native backend
+    /// reports mux/qkv/attention/ffn/head). Stats endpoints and benches
+    /// read this for Amdahl analysis; the default reports no detail.
+    fn stage_ns(&self) -> Vec<(&'static str, u64)> {
+        Vec::new()
+    }
 }

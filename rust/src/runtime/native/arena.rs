@@ -1,7 +1,8 @@
 //! Per-worker tensor arenas for the native forward.
 //!
-//! Every intermediate of one forward — residual stream, QKV, attention
-//! scores, FFN hidden, demux activations — lives in a [`Workspace`]
+//! Every intermediate of one forward — residual stream, fused QKV,
+//! flash-attention tile scratch, FFN hidden, demux activations — lives
+//! in a [`Workspace`]
 //! whose buffers are sized from the *runtime* shape of the call: since
 //! the forward became shape-polymorphic, the pool is keyed on the
 //! sequence-length bucket, and a checkout only reuses a workspace built
@@ -26,15 +27,18 @@ pub(crate) struct Workspace {
     pub x: Vec<f32>,
     /// layer-normed input / final hidden states, same shape as `x`
     pub ln: Vec<f32>,
-    pub q: Vec<f32>,
-    pub k: Vec<f32>,
-    pub v: Vec<f32>,
+    /// fused QKV projections, `(batch * input_len, 3 * d_model)` with each
+    /// row laid out `[q | k | v]` — one GEMM output, consumed in place by
+    /// the flash-attention kernel
+    pub qkv: Vec<f32>,
     /// attention context (heads merged), same shape as `x`
     pub ctx: Vec<f32>,
     /// projection output added back into the residual stream
     pub proj: Vec<f32>,
-    /// attention probabilities, `(batch * n_heads, input_len, input_len)`
-    pub scores: Vec<f32>,
+    /// per-(batch, head) flash-attention score tiles,
+    /// `(batch * n_heads, ATTN_TILE)` — constant in `input_len`, replacing
+    /// the old quadratic `(batch * n_heads, input_len, input_len)` scores
+    pub attn_tile: Vec<f32>,
     /// FFN hidden, `(batch * input_len, d_ff)`
     pub ffh: Vec<f32>,
     /// demux prefix projections, `(batch * n_mux, d_demux)`
@@ -59,12 +63,10 @@ impl Workspace {
         Workspace {
             x: vec![0.0; stream],
             ln: vec![0.0; stream],
-            q: vec![0.0; stream],
-            k: vec![0.0; stream],
-            v: vec![0.0; stream],
+            qkv: vec![0.0; 3 * stream],
             ctx: vec![0.0; stream],
             proj: vec![0.0; stream],
-            scores: vec![0.0; d.batch * d.n_heads * d.input_len * d.input_len],
+            attn_tile: vec![0.0; d.batch * d.n_heads * super::simd::ATTN_TILE],
             ffh: vec![0.0; d.rows() * d.d_ff],
             pproj: vec![0.0; d.batch * d.n_mux * d.d_demux],
             hproj: vec![0.0; d.batch * lp * d.d_demux],
@@ -73,6 +75,30 @@ impl Workspace {
             aq: vec![0; stream.max(d.rows() * d.d_ff).max(d.batch * d.n_mux * lp * d.d_demux)],
             ascale: vec![0.0; d.rows().max(d.batch * d.n_mux * lp)],
         }
+    }
+
+    /// Total heap bytes a workspace for `d` occupies, computed analytically
+    /// (mirrors [`Workspace::new`] — kept in lockstep by
+    /// `workspace_bytes_match_allocated_buffers`). The `native_forward`
+    /// bench uses this to gate that attention memory scales *linearly* in
+    /// `input_len` now that the quadratic scores block is gone.
+    pub fn bytes_for(d: &Dims) -> usize {
+        let stream = d.rows() * d.d_model;
+        let lp = d.demux_len();
+        let f32s = stream // x
+            + stream // ln
+            + 3 * stream // qkv
+            + stream // ctx
+            + stream // proj
+            + d.batch * d.n_heads * super::simd::ATTN_TILE // attn_tile
+            + d.rows() * d.d_ff // ffh
+            + d.batch * d.n_mux * d.d_demux // pproj
+            + d.batch * lp * d.d_demux // hproj
+            + d.batch * d.n_mux * lp * d.d_demux // z
+            + d.batch * d.n_mux * lp * d.d_model // dem
+            + d.rows().max(d.batch * d.n_mux * lp); // ascale
+        let aq = stream.max(d.rows() * d.d_ff).max(d.batch * d.n_mux * lp * d.d_demux);
+        f32s * std::mem::size_of::<f32>() + aq
     }
 }
 
@@ -114,5 +140,66 @@ impl ArenaPool {
     /// allocation-free steady-state invariant the benches enforce.
     pub fn reallocs(&self) -> u64 {
         self.materializations.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Dims, NativeTask};
+    use super::Workspace;
+
+    fn dims(seq_len: usize) -> Dims {
+        let n_mux = 4;
+        Dims {
+            batch: 2,
+            n_mux,
+            seq_len,
+            prefix_len: n_mux,
+            input_len: n_mux + seq_len,
+            vocab_size: 300,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 4,
+            d_head: 8,
+            d_ff: 128,
+            d_demux: 64,
+            n_classes: 3,
+            task: NativeTask::Cls,
+        }
+    }
+
+    #[test]
+    fn workspace_bytes_match_allocated_buffers() {
+        for seq_len in [1usize, 5, 16] {
+            let d = dims(seq_len);
+            let ws = Workspace::new(&d);
+            let f32s = ws.x.len()
+                + ws.ln.len()
+                + ws.qkv.len()
+                + ws.ctx.len()
+                + ws.proj.len()
+                + ws.attn_tile.len()
+                + ws.ffh.len()
+                + ws.pproj.len()
+                + ws.hproj.len()
+                + ws.z.len()
+                + ws.dem.len()
+                + ws.ascale.len();
+            assert_eq!(Workspace::bytes_for(&d), f32s * 4 + ws.aq.len(), "seq_len={seq_len}");
+        }
+    }
+
+    #[test]
+    fn workspace_bytes_are_linear_in_input_len() {
+        // three equally spaced seq lens: exactly collinear byte counts now
+        // that the quadratic scores block is gone (cls task — every buffer
+        // is degree-1 in input_len)
+        let (b1, b2, b3) = (
+            Workspace::bytes_for(&dims(4)),
+            Workspace::bytes_for(&dims(10)),
+            Workspace::bytes_for(&dims(16)),
+        );
+        assert_eq!(b2 - b1, b3 - b2, "workspace growth is not linear in li");
+        assert!(b3 > b2 && b2 > b1);
     }
 }

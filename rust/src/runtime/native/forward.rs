@@ -9,7 +9,16 @@
 //!   accumulated directly from the token gather:
 //!   `x[b,l] = pos_mux[l] + Σ_s tok[ids[b,s,l]] ⊙ (vecs[s]/N)`, where
 //!   `pos_mux` pre-folds the positional table with the mux mean (the
-//!   shared positional add commutes with the mean over slots).
+//!   shared positional add commutes with the mean over slots). The
+//!   gather is row-banded across the thread pool and FMA-vectorized.
+//! * **Fused QKV** — one `(d, 3d)` GEMM over the normed stream replaces
+//!   three `(d, d)` projections; the activation row is quantized once
+//!   and read once on the int8 path.
+//! * **Flash-style attention** — per-(batch, head) jobs stream K/V
+//!   tiles through an online-softmax accumulator
+//!   ([`super::simd::flash_attn_row_scalar`] /
+//!   [`super::simd::flash_attn_row_avx2`]); no `li×li` scores block is
+//!   ever materialized, so attention scratch is linear in `input_len`.
 //! * **Blocked GEMM** over pre-transposed weights for every projection
 //!   ([`super::gemm`]), row-banded across the thread pool.
 //! * **CLS-only demux** for classification (`demux_len = 1`), matching
@@ -24,16 +33,22 @@
 
 #![allow(clippy::needless_range_loop)]
 
+use std::time::Instant;
+
 use anyhow::{bail, Result};
 
 use super::arena::Workspace;
 use super::gemm::{gemm_bt_pooled, gemm_bt_q8_pooled, parallel_for, SendMut};
 use super::pack::{Mat, PackedWeights};
-use super::{quant, Dims};
+use super::{quant, Dims, StageTimers};
 use crate::util::threadpool::ThreadPool;
 
 /// sqrt(2/pi) — the tanh-approximate GELU constant jax.nn.gelu uses.
 pub(crate) const GELU_C: f32 = 0.797_884_6;
+
+/// Minimum gather mul-adds (`rows * n_mux * d_model`) before the fused
+/// mux gather is worth a fork-join across the pool.
+const GATHER_PAR_MIN_MACS: usize = 1 << 14;
 
 #[inline]
 pub(crate) fn gelu(x: f32) -> f32 {
@@ -85,9 +100,25 @@ fn quant_rows_if(w: &Mat, a: &[f32], m: usize, k: usize, aq: &mut [u8], ascale: 
     }
 }
 
-/// Row-wise layer norm (eps 1e-5, matching `model.py::_layer_norm`).
+/// Row-wise layer norm (eps 1e-5, matching `model.py::_layer_norm`),
+/// vectorized when the AVX2 kernel is active.
 // lint: hot-path
 pub(crate) fn layer_norm(src: &[f32], g: &[f32], b: &[f32], dst: &mut [f32], d: usize) {
+    #[cfg(target_arch = "x86_64")]
+    if super::simd::active_kernel() == super::simd::Kernel::Avx2Fma {
+        // SAFETY: feature presence was verified by `active_kernel`;
+        // src/dst are equal-length whole-row buffers and g/b hold d
+        // floats by the callers' shapes.
+        unsafe { super::simd::layer_norm_avx2(src, g, b, dst, d) };
+        return;
+    }
+    layer_norm_scalar(src, g, b, dst, d);
+}
+
+/// Scalar layer-norm arm (also the reference the AVX2 arm is tested
+/// against).
+// lint: hot-path
+pub(crate) fn layer_norm_scalar(src: &[f32], g: &[f32], b: &[f32], dst: &mut [f32], d: usize) {
     for (srow, drow) in src.chunks_exact(d).zip(dst.chunks_exact_mut(d)) {
         let mean = srow.iter().sum::<f32>() / d as f32;
         let mut var = 0.0f32;
@@ -102,23 +133,46 @@ pub(crate) fn layer_norm(src: &[f32], g: &[f32], b: &[f32], dst: &mut [f32], d: 
     }
 }
 
+/// Residual add `dst += src`, vectorized when the AVX2 kernel is active
+/// (bitwise identical across arms — pure elementwise addition).
 // lint: hot-path
-fn softmax_row(row: &mut [f32]) {
-    let mut max = f32::NEG_INFINITY;
-    for &v in row.iter() {
-        if v > max {
-            max = v;
-        }
+fn add_assign_buf(dst: &mut [f32], src: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if super::simd::active_kernel() == super::simd::Kernel::Avx2Fma {
+        // SAFETY: feature presence was verified by `active_kernel`;
+        // src is at least as long as dst (same stream shape).
+        unsafe { super::simd::add_assign_avx2(dst, src) };
+        return;
     }
-    let mut sum = 0.0f32;
-    for v in row.iter_mut() {
-        *v = (*v - max).exp();
-        sum += *v;
+    for (x, p) in dst.iter_mut().zip(src) {
+        *x += p;
     }
-    let inv = 1.0 / sum;
-    for v in row.iter_mut() {
-        *v *= inv;
+}
+
+/// `dst[i] += a[i] * b[i]` over one row — the mux accumulate —
+/// vectorized when the AVX2 kernel is active.
+// lint: hot-path
+fn fmadd_buf(dst: &mut [f32], a: &[f32], b: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if super::simd::active_kernel() == super::simd::Kernel::Avx2Fma {
+        // SAFETY: feature presence was verified by `active_kernel`; the
+        // callers slice a and b to exactly dst.len() elements.
+        unsafe { super::simd::fmadd_buf_avx2(dst, a, b) };
+        return;
     }
+    for i in 0..dst.len() {
+        dst[i] += a[i] * b[i];
+    }
+}
+
+/// Nanoseconds since `mark`, advancing `mark` to now — the per-stage
+/// lap counter.
+#[inline]
+fn lap(mark: &mut Instant) -> u64 {
+    let now = Instant::now();
+    let ns = now.duration_since(*mark).as_nanos() as u64;
+    *mark = now;
+    ns
 }
 
 /// One full forward: `ids` flattened `(batch, n_mux, input_len)` →
@@ -130,6 +184,7 @@ pub(crate) fn forward(
     pool: Option<&ThreadPool>,
     ids: &[i32],
     ws: &mut Workspace,
+    timers: &StageTimers,
 ) -> Result<Vec<f32>> {
     let d = dims.d_model;
     let li = dims.input_len;
@@ -141,74 +196,112 @@ pub(crate) fn forward(
             bail!("token id {t} at flat index {i} out of range 0..{}", dims.vocab_size);
         }
     }
+    let mut mark = Instant::now();
 
     // ---- fused mux + embedding gather -----------------------------------
-    for bb in 0..b {
-        for l in 0..li {
-            let row = &mut ws.x[(bb * li + l) * d..(bb * li + l + 1) * d];
-            row.copy_from_slice(&w.pos_mux[l * d..(l + 1) * d]);
-            for slot in 0..n {
-                let id = ids[(bb * n + slot) * li + l] as usize;
-                let emb = &tok[id * d..(id + 1) * d];
-                let vec = &w.mux_scaled[slot * d..(slot + 1) * d];
-                for dd in 0..d {
-                    row[dd] += emb[dd] * vec[dd];
+    {
+        let xptr = SendMut(ws.x.as_mut_ptr());
+        let gather_rows = |r0: usize, r1: usize| {
+            for row_i in r0..r1 {
+                let (bb, l) = (row_i / li, row_i % li);
+                // SAFETY: each band owns rows r0..r1 of `ws.x`
+                // exclusively — the bands partition 0..rows — and the
+                // dispatch below joins before the borrow of `ws.x`
+                // resumes.
+                let row = unsafe { std::slice::from_raw_parts_mut(xptr.0.add(row_i * d), d) };
+                row.copy_from_slice(&w.pos_mux[l * d..(l + 1) * d]);
+                for slot in 0..n {
+                    let id = ids[(bb * n + slot) * li + l] as usize;
+                    let emb = &tok[id * d..(id + 1) * d];
+                    let vec = &w.mux_scaled[slot * d..(slot + 1) * d];
+                    fmadd_buf(row, emb, vec);
                 }
             }
+        };
+        match pool {
+            Some(p) if rows > 1 && rows * n * d >= GATHER_PAR_MIN_MACS => {
+                // balanced band split, same scheme as the pooled GEMMs —
+                // banding never changes per-row arithmetic, so results
+                // stay bitwise identical to the serial path
+                let bands = p.n_workers().min(rows);
+                let base = rows / bands;
+                let extra = rows % bands;
+                parallel_for(p, bands, |band| {
+                    let r0 = band * base + band.min(extra);
+                    let r1 = r0 + base + usize::from(band < extra);
+                    gather_rows(r0, r1);
+                });
+            }
+            _ => gather_rows(0, rows),
         }
     }
+    let ns_mux = lap(&mut mark);
 
     // ---- pre-LN transformer encoder -------------------------------------
     let heads = dims.n_heads;
     let dh = dims.d_head;
+    let d3 = 3 * d;
     let scale = 1.0 / (dh as f32).sqrt();
+    #[cfg(target_arch = "x86_64")]
+    let use_avx2 = super::simd::active_kernel() == super::simd::Kernel::Avx2Fma;
+    let mut ns_qkv = 0u64;
+    let mut ns_attn = 0u64;
+    let mut ns_ffn = 0u64;
     for lp in &w.layers {
         layer_norm(&ws.x, &lp.ln1_g, &lp.ln1_b, &mut ws.ln, d);
-        // Q, K, V share one quantization of the normed stream
-        quant_rows_if(&lp.wq_t, &ws.ln, rows, d, &mut ws.aq, &mut ws.ascale);
-        run_mat(pool, &lp.wq_t, &ws.ln, &ws.aq, &ws.ascale, Some(&lp.bq), &mut ws.q, rows, d, d);
-        run_mat(pool, &lp.wk_t, &ws.ln, &ws.aq, &ws.ascale, Some(&lp.bk), &mut ws.k, rows, d, d);
-        run_mat(pool, &lp.wv_t, &ws.ln, &ws.aq, &ws.ascale, Some(&lp.bv), &mut ws.v, rows, d, d);
+        // one quantization of the normed stream, one fused GEMM for Q|K|V
+        quant_rows_if(&lp.wqkv_t, &ws.ln, rows, d, &mut ws.aq, &mut ws.ascale);
+        run_mat(
+            pool,
+            &lp.wqkv_t,
+            &ws.ln,
+            &ws.aq,
+            &ws.ascale,
+            Some(&lp.bqkv),
+            &mut ws.qkv,
+            rows,
+            d,
+            d3,
+        );
+        ns_qkv += lap(&mut mark);
         {
-            // attention fans out over (batch, head): each pair owns its
-            // scores block and a disjoint column stripe of ctx
-            let lsq = li * li;
-            let sptr = SendMut(ws.scores.as_mut_ptr());
+            // flash attention fans out over (batch, head): each pair owns
+            // its score tile and a disjoint column stripe of ctx
+            let tptr = SendMut(ws.attn_tile.as_mut_ptr());
             let cptr = SendMut(ws.ctx.as_mut_ptr());
-            let q = &ws.q;
-            let k = &ws.k;
-            let v = &ws.v;
+            let qkv = &ws.qkv;
+            let tile = super::simd::ATTN_TILE;
             let run = |bh: usize| {
                 let (bb, hh) = (bh / heads, bh % heads);
-                // SAFETY: each (batch, head) job owns scores block `bh`
+                // SAFETY: each (batch, head) job owns score tile `bh`
                 // exclusively, and the dispatch below joins before the
-                // borrow of `ws.scores` resumes.
-                let scores = unsafe { std::slice::from_raw_parts_mut(sptr.0.add(bh * lsq), lsq) };
+                // borrow of `ws.attn_tile` resumes.
+                let stile = unsafe { std::slice::from_raw_parts_mut(tptr.0.add(bh * tile), tile) };
+                let kbase = bb * li * d3 + d + hh * dh;
+                let vbase = bb * li * d3 + 2 * d + hh * dh;
                 for i in 0..li {
-                    let qrow = &q[(bb * li + i) * d + hh * dh..][..dh];
-                    for j in 0..li {
-                        let krow = &k[(bb * li + j) * d + hh * dh..][..dh];
-                        let mut sdot = 0.0f32;
-                        for t in 0..dh {
-                            sdot += qrow[t] * krow[t];
-                        }
-                        scores[i * li + j] = sdot * scale;
-                    }
-                    softmax_row(&mut scores[i * li..(i + 1) * li]);
+                    let qoff = (bb * li + i) * d3 + hh * dh;
                     // SAFETY: head `hh` writes only its own `dh`-wide
                     // column stripe of ctx row `bb*li + i` — disjoint
                     // across jobs, joined before the borrow resumes.
                     let crow = unsafe {
                         std::slice::from_raw_parts_mut(cptr.0.add((bb * li + i) * d + hh * dh), dh)
                     };
-                    crow.fill(0.0);
-                    for j in 0..li {
-                        let p = scores[i * li + j];
-                        let vrow = &v[(bb * li + j) * d + hh * dh..][..dh];
-                        for t in 0..dh {
-                            crow[t] += p * vrow[t];
-                        }
+                    #[cfg(target_arch = "x86_64")]
+                    if use_avx2 {
+                        // SAFETY: AVX2+FMA presence was verified by
+                        // `active_kernel`; qoff/kbase/vbase address head
+                        // slices of qkv rows, all within `rows * 3d`.
+                        unsafe {
+                            super::simd::flash_attn_row_avx2(
+                                qkv, qoff, kbase, vbase, d3, li, dh, scale, stile, crow,
+                            )
+                        };
+                        continue;
                     }
+                    super::simd::flash_attn_row_scalar(
+                        qkv, qoff, kbase, vbase, d3, li, dh, scale, stile, crow,
+                    );
                 }
             };
             match pool {
@@ -220,11 +313,10 @@ pub(crate) fn forward(
                 }
             }
         }
+        ns_attn += lap(&mut mark);
         quant_rows_if(&lp.wo_t, &ws.ctx, rows, d, &mut ws.aq, &mut ws.ascale);
         run_mat(pool, &lp.wo_t, &ws.ctx, &ws.aq, &ws.ascale, Some(&lp.bo), &mut ws.proj, rows, d, d);
-        for (x, p) in ws.x.iter_mut().zip(&ws.proj) {
-            *x += p;
-        }
+        add_assign_buf(&mut ws.x, &ws.proj);
         layer_norm(&ws.x, &lp.ln2_g, &lp.ln2_b, &mut ws.ln, d);
         quant_rows_if(&lp.ff1_t, &ws.ln, rows, d, &mut ws.aq, &mut ws.ascale);
         run_mat(
@@ -253,9 +345,8 @@ pub(crate) fn forward(
             dims.d_ff,
             d,
         );
-        for (x, p) in ws.x.iter_mut().zip(&ws.proj) {
-            *x += p;
-        }
+        add_assign_buf(&mut ws.x, &ws.proj);
+        ns_ffn += lap(&mut mark);
     }
     // final hidden states land in ws.ln
     layer_norm(&ws.x, &w.lnf_g, &w.lnf_b, &mut ws.ln, d);
@@ -306,5 +397,7 @@ pub(crate) fn forward(
     run_mat(pool, &w.w2_t, &ws.z, &ws.aq, &ws.ascale, Some(&w.db2), &mut ws.dem, zrows, fd, d);
     let mut out = vec![0.0f32; zrows * dims.n_classes];
     gemm_bt_pooled(pool, &ws.dem, &w.head_t, Some(&w.head_b), &mut out, zrows, d, dims.n_classes);
+    let ns_head = lap(&mut mark);
+    timers.record(ns_mux, ns_qkv, ns_attn, ns_ffn, ns_head);
     Ok(out)
 }

@@ -17,7 +17,7 @@
 // more directly than iterator chains would
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
 
 use super::quant::QuantMat;
@@ -34,6 +34,18 @@ const NR: usize = 4;
 /// Minimum multiply-accumulates before a GEMM is worth fanning out to
 /// the pool; below this the fork-join latency exceeds the win.
 const PAR_MIN_MACS: usize = 1 << 16;
+
+/// Process-wide count of top-level GEMM dispatches (the f32 and int8
+/// pooled entry points; per-band calls inside a fan-out are not
+/// re-counted). The `native_forward` bench takes a delta across one
+/// forward to pin the QKV-fusion invariant: one projection GEMM per
+/// layer, not three.
+static GEMM_DISPATCHES: AtomicU64 = AtomicU64::new(0);
+
+/// Top-level GEMM dispatches so far (monotonic, process-wide).
+pub fn gemm_dispatches() -> u64 {
+    GEMM_DISPATCHES.load(Ordering::Relaxed)
+}
 
 /// `c = a @ bt^T (+ bias)`: `a` is `(m, k)`, `bt` is the pre-transposed
 /// weight `(n, k)`, `c` is `(m, n)`, all row-major. Allocation-free.
@@ -164,6 +176,7 @@ pub fn gemm_bt_pooled(
     k: usize,
     n: usize,
 ) {
+    GEMM_DISPATCHES.fetch_add(1, Ordering::Relaxed);
     let pool = match pool {
         Some(p) if m >= 2 && m.saturating_mul(k).saturating_mul(n) >= PAR_MIN_MACS => p,
         _ => return gemm_bt(a, bt, bias, c, m, k, n),
@@ -230,6 +243,7 @@ pub(crate) fn gemm_bt_q8_pooled(
     k: usize,
     n: usize,
 ) {
+    GEMM_DISPATCHES.fetch_add(1, Ordering::Relaxed);
     let pool = match pool {
         Some(p) if m >= 2 && m.saturating_mul(k).saturating_mul(n) >= PAR_MIN_MACS => p,
         _ => return gemm_bt_q8(aq, ascale, w, bias, c, m, k, n),

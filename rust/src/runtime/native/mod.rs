@@ -34,6 +34,7 @@ pub mod reference;
 mod simd;
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{anyhow, ensure, Result};
 
@@ -42,8 +43,46 @@ use crate::runtime::weights::WeightsFile;
 use crate::runtime::InferenceBackend;
 use crate::util::threadpool::ThreadPool;
 
+pub use gemm::gemm_dispatches;
 pub use pack::RawWeights;
 pub use simd::{active_kernel, Kernel};
+
+/// Cumulative per-stage wall time (ns) across every forward a backend has
+/// run — the Amdahl observability the v2 STATS `backends` block and the
+/// `native_forward` bench `stage_ns` map read from. Stage boundaries:
+/// `mux` = fused mux+embedding gather; `qkv` = ln1 + activation
+/// quantization + the fused QKV GEMM; `attention` = the flash-attention
+/// fan-out only; `ffn` = output projection + residuals + ln2 + FFN;
+/// `head` = final LN + demux + task head. The forward accumulates laps
+/// locally and lands one relaxed add per stage per call.
+#[derive(Default)]
+pub(crate) struct StageTimers {
+    mux: AtomicU64,
+    qkv: AtomicU64,
+    attention: AtomicU64,
+    ffn: AtomicU64,
+    head: AtomicU64,
+}
+
+impl StageTimers {
+    pub fn record(&self, mux: u64, qkv: u64, attention: u64, ffn: u64, head: u64) {
+        self.mux.fetch_add(mux, Ordering::Relaxed);
+        self.qkv.fetch_add(qkv, Ordering::Relaxed);
+        self.attention.fetch_add(attention, Ordering::Relaxed);
+        self.ffn.fetch_add(ffn, Ordering::Relaxed);
+        self.head.fetch_add(head, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> [(&'static str, u64); 5] {
+        [
+            ("mux", self.mux.load(Ordering::Relaxed)),
+            ("qkv", self.qkv.load(Ordering::Relaxed)),
+            ("attention", self.attention.load(Ordering::Relaxed)),
+            ("ffn", self.ffn.load(Ordering::Relaxed)),
+            ("head", self.head.load(Ordering::Relaxed)),
+        ]
+    }
+}
 
 /// Weight precision the forward executes at. `F32` is the default;
 /// `Int8` runs the projection GEMMs on per-output-channel symmetric int8
@@ -207,6 +246,7 @@ pub struct NativeBackend {
     precision: Precision,
     pool: Option<ThreadPool>,
     arenas: arena::ArenaPool,
+    timers: StageTimers,
 }
 
 fn make_pool(threads: usize) -> Option<ThreadPool> {
@@ -266,6 +306,7 @@ impl NativeBackend {
             precision,
             pool: make_pool(default_threads()),
             arenas: arena::ArenaPool::new(),
+            timers: StageTimers::default(),
         })
     }
 
@@ -317,6 +358,20 @@ impl NativeBackend {
         self.arenas.reallocs()
     }
 
+    /// Heap bytes one workspace occupies at runtime bucket `seq_len`,
+    /// computed analytically without allocating. The `native_forward`
+    /// bench gates on this growing *linearly* in `input_len` now that
+    /// flash attention removed the quadratic scores block.
+    pub fn workspace_bytes_at(&self, seq_len: usize) -> Result<usize> {
+        ensure!(
+            self.supports_seq_len(seq_len),
+            "{}: runtime seq_len {seq_len} outside 1..={}",
+            self.meta.name,
+            self.dims.seq_len
+        );
+        Ok(arena::Workspace::bytes_for(&self.dims.at_seq_len(seq_len)))
+    }
+
     /// Run the manifest's parity vector against the native forward.
     /// Tolerance gets a floor of 1e-3: the fused path sums in a
     /// different order than the jax reduction, so bit-parity headroom
@@ -359,6 +414,10 @@ impl InferenceBackend for NativeBackend {
         (1..=self.dims.seq_len).contains(&seq_len)
     }
 
+    fn stage_ns(&self) -> Vec<(&'static str, u64)> {
+        self.timers.snapshot().to_vec()
+    }
+
     fn run_ids_at(&self, ids: &[i32], seq_len: usize) -> Result<Vec<f32>> {
         ensure!(
             self.supports_seq_len(seq_len),
@@ -382,7 +441,15 @@ impl InferenceBackend for NativeBackend {
         // its own workspace set, so a mixed-bucket serving loop still
         // allocates nothing after per-bucket warmup
         let mut ws = self.arenas.checkout(&dims);
-        let result = forward::forward(&self.weights, tok, &dims, self.pool.as_ref(), ids, &mut ws);
+        let result = forward::forward(
+            &self.weights,
+            tok,
+            &dims,
+            self.pool.as_ref(),
+            ids,
+            &mut ws,
+            &self.timers,
+        );
         self.arenas.give_back(dims.seq_len, ws);
         let out = result?;
         debug_assert_eq!(out.len(), dims.output_len());

@@ -47,15 +47,17 @@ impl Mat {
 }
 
 /// One encoder layer in execution layout (`*_t` = pre-transposed).
+///
+/// The Q/K/V projections are stored **fused**: `wqkv_t` stacks the three
+/// transposed `(d, d)` matrices row-wise into one `(3d, d)` matrix whose
+/// output channels are `[q(d) | k(d) | v(d)]`, so the forward runs one
+/// GEMM over the normed stream instead of three (and, at int8, the
+/// activation row is quantized once and read once).
 pub(crate) struct LayerPack {
     pub ln1_g: Vec<f32>,
     pub ln1_b: Vec<f32>,
-    pub wq_t: Mat,
-    pub bq: Vec<f32>,
-    pub wk_t: Mat,
-    pub bk: Vec<f32>,
-    pub wv_t: Mat,
-    pub bv: Vec<f32>,
+    pub wqkv_t: Mat,
+    pub bqkv: Vec<f32>,
     pub wo_t: Mat,
     pub bo: Vec<f32>,
     pub ln2_g: Vec<f32>,
@@ -86,6 +88,22 @@ pub(crate) struct PackedWeights {
     pub db2: Vec<f32>,
     pub head_t: Vec<f32>,
     pub head_b: Vec<f32>,
+}
+
+/// Stack three same-shape projections into one fused matrix: output
+/// channels (rows of the `(n, k)` dot layout) are concatenated, so a
+/// single GEMM produces `[a | b | c]` per activation row. All parts come
+/// from the same `Resolver::mat` precision, so a mix is a packing bug.
+fn fuse3(a: Mat, b: Mat, c: Mat) -> Result<Mat> {
+    match (a, b, c) {
+        (Mat::F32(mut x), Mat::F32(y), Mat::F32(z)) => {
+            x.extend_from_slice(&y);
+            x.extend_from_slice(&z);
+            Ok(Mat::F32(x))
+        }
+        (Mat::Q8(x), Mat::Q8(y), Mat::Q8(z)) => Ok(Mat::Q8(QuantMat::concat(&[&x, &y, &z]))),
+        _ => bail!("qkv fusion: projection precisions diverged within one layer"),
+    }
 }
 
 /// Name-indexed access to a weights blob with shape validation.
@@ -269,15 +287,17 @@ pub(crate) fn pack(
     let mut layers = Vec::with_capacity(meta.n_layers);
     for li in 0..meta.n_layers {
         let p = |stem: &str| format!("layers/{li}/{stem}");
+        let wq = r.mat(&p("wq/w"), d, d, precision)?;
+        let wk = r.mat(&p("wk/w"), d, d, precision)?;
+        let wv = r.mat(&p("wv/w"), d, d, precision)?;
+        let mut bqkv = r.vec(&p("wq/b"), &[d])?;
+        bqkv.extend(r.vec(&p("wk/b"), &[d])?);
+        bqkv.extend(r.vec(&p("wv/b"), &[d])?);
         layers.push(LayerPack {
             ln1_g: r.vec(&p("ln1/g"), &[d])?,
             ln1_b: r.vec(&p("ln1/b"), &[d])?,
-            wq_t: r.mat(&p("wq/w"), d, d, precision)?,
-            bq: r.vec(&p("wq/b"), &[d])?,
-            wk_t: r.mat(&p("wk/w"), d, d, precision)?,
-            bk: r.vec(&p("wk/b"), &[d])?,
-            wv_t: r.mat(&p("wv/w"), d, d, precision)?,
-            bv: r.vec(&p("wv/b"), &[d])?,
+            wqkv_t: fuse3(wq, wk, wv)?,
+            bqkv,
             wo_t: r.mat(&p("wo/w"), d, d, precision)?,
             bo: r.vec(&p("wo/b"), &[d])?,
             ln2_g: r.vec(&p("ln2/g"), &[d])?,
@@ -566,13 +586,23 @@ mod tests {
         assert_eq!(dims.d_demux, 16);
         assert_eq!(dims.d_head, 4);
         let (shape, wq) = raw.get("layers/0/wq/w").unwrap();
+        let (_, wk) = raw.get("layers/0/wk/w").unwrap();
+        let (_, wv) = raw.get("layers/0/wv/w").unwrap();
         let d = shape[0];
-        let wq_t = packed.layers[0].wq_t.as_f32().expect("f32 precision packs f32 mats");
-        for r in 0..d {
-            for c in 0..d {
-                assert_eq!(wq_t[c * d + r], wq[r * d + c]);
+        // fused QKV: rows 0..d are wq^T, d..2d are wk^T, 2d..3d are wv^T
+        let qkv = packed.layers[0].wqkv_t.as_f32().expect("f32 precision packs f32 mats");
+        assert_eq!(qkv.len(), 3 * d * d);
+        for (block, w) in [wq, wk, wv].into_iter().enumerate() {
+            for r in 0..d {
+                for c in 0..d {
+                    assert_eq!(qkv[(block * d + c) * d + r], w[r * d + c]);
+                }
             }
         }
+        let (_, bq) = raw.get("layers/0/wq/b").unwrap();
+        let (_, bv) = raw.get("layers/0/wv/b").unwrap();
+        assert_eq!(&packed.layers[0].bqkv[..d], bq);
+        assert_eq!(&packed.layers[0].bqkv[2 * d..], bv);
         // fused mux precomputation: vecs/N and pos ⊙ mean(vecs)
         let (_, vecs) = raw.get("mux/vecs").unwrap();
         let (_, pos) = raw.get("pos_emb").unwrap();
@@ -648,7 +678,7 @@ mod tests {
         let (_, from_f32) = pack(&m, &wf_f32, Precision::Int8).unwrap();
         let (_, from_q8) = pack(&m, &wf_q8, Precision::Int8).unwrap();
         let pairs = [
-            (&from_f32.layers[0].wq_t, &from_q8.layers[0].wq_t),
+            (&from_f32.layers[0].wqkv_t, &from_q8.layers[0].wqkv_t),
             (&from_f32.layers[0].ff1_t, &from_q8.layers[0].ff1_t),
             (&from_f32.w1h_t, &from_q8.w1h_t),
             (&from_f32.w2_t, &from_q8.w2_t),

@@ -80,6 +80,25 @@ impl QuantMat {
         QuantMat { q, scales: scales.to_vec(), wsum }
     }
 
+    /// Concatenate the output channels of several quantized matrices
+    /// that share the same `k` (row-wise in the (n, k) dot layout).
+    /// Per-channel scales and code sums are channel-local, so the fused
+    /// matrix is exactly the stack of its parts — this is what backs the
+    /// fused-QKV packing at int8 precision.
+    pub fn concat(parts: &[&QuantMat]) -> QuantMat {
+        let total_codes: usize = parts.iter().map(|p| p.q.len()).sum();
+        let total_n: usize = parts.iter().map(|p| p.scales.len()).sum();
+        let mut q = Vec::with_capacity(total_codes);
+        let mut scales = Vec::with_capacity(total_n);
+        let mut wsum = Vec::with_capacity(total_n);
+        for p in parts {
+            q.extend_from_slice(&p.q);
+            scales.extend_from_slice(&p.scales);
+            wsum.extend_from_slice(&p.wsum);
+        }
+        QuantMat { q, scales, wsum }
+    }
+
     /// Expand back to the (n, k) f32 dot layout (used when `--precision
     /// f32` is requested against an int8 blob).
     pub fn dequantize(&self, n: usize, k: usize) -> Vec<f32> {

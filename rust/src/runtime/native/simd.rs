@@ -11,7 +11,11 @@
 //! both pairs of arms are kept bitwise-comparable where the math allows
 //! (int8: identical integer accumulation and a shared `dequant` epilogue;
 //! f32: same per-element rounding in the quantizer via ties-to-even).
-#![allow(clippy::too_many_arguments, clippy::excessive_precision)]
+#![allow(
+    clippy::too_many_arguments,
+    clippy::excessive_precision,
+    clippy::needless_range_loop
+)]
 
 use std::sync::OnceLock;
 
@@ -519,6 +523,364 @@ unsafe fn exp_ps(x: __m256) -> __m256 {
     _mm256_mul_ps(y, pow2n)
 }
 
+// ---------------------------------------------------------- flash attention
+
+/// K/V block width for the tiled online-softmax attention. Scores are
+/// materialized `ATTN_TILE` at a time per query row, so attention scratch
+/// is constant in `input_len` instead of quadratic.
+pub(crate) const ATTN_TILE: usize = 16;
+
+/// Scalar twin of [`exp_ps`]: the same Cephes range reduction and
+/// degree-5 polynomial, evaluated with `mul_add` so every step rounds
+/// exactly like the corresponding vector FMA — one lane of `exp_ps` and
+/// this function agree bitwise. Both flash-attention arms use it (the
+/// scalar arm throughout, the AVX2 arm for sub-8-lane tile tails), which
+/// keeps the two arms' probabilities identical for identical scores.
+#[inline]
+pub(crate) fn exp_approx(x: f32) -> f32 {
+    let x = x.clamp(-88.3762626647949, 88.3762626647949);
+    let fx = x.mul_add(std::f32::consts::LOG2_E, 0.5).floor();
+    let x = fx.mul_add(-0.693359375, x);
+    let x = fx.mul_add(2.12194440e-4, x);
+    let x2 = x * x;
+    let mut y = 1.9875691500e-4f32;
+    y = y.mul_add(x, 1.3981999507e-3);
+    y = y.mul_add(x, 8.3334519073e-3);
+    y = y.mul_add(x, 4.1665795894e-2);
+    y = y.mul_add(x, 1.6666665459e-1);
+    y = y.mul_add(x, 5.0000001201e-1);
+    y = y.mul_add(x2, x + 1.0);
+    y * f32::from_bits(((fx as i32 + 0x7f) as u32) << 23)
+}
+
+/// One query row of tiled flash attention, scalar arm. `qkv` is the fused
+/// projection stream with row stride `stride` laid out `[q | k | v]`;
+/// `qoff` addresses this row's query head slice, `kbase`/`vbase` the head's
+/// K/V column at sequence position 0. K/V blocks of `ATTN_TILE` positions
+/// stream through an online-softmax accumulator (running max `m`, running
+/// mass `l`, unnormalized context in `out`): when a block raises the max,
+/// the accumulated state is rescaled by `exp(m_old - m_new)` instead of
+/// revisiting earlier positions. Only `stile` (`ATTN_TILE` floats) is ever
+/// materialized — no `li×li` scores block exists at any point.
+// lint: hot-path
+pub(crate) fn flash_attn_row_scalar(
+    qkv: &[f32],
+    qoff: usize,
+    kbase: usize,
+    vbase: usize,
+    stride: usize,
+    li: usize,
+    dh: usize,
+    scale: f32,
+    stile: &mut [f32],
+    out: &mut [f32],
+) {
+    let q = &qkv[qoff..qoff + dh];
+    let mut m = f32::NEG_INFINITY;
+    let mut l = 0.0f32;
+    out.fill(0.0);
+    let mut j0 = 0usize;
+    while j0 < li {
+        let tl = (j0 + ATTN_TILE).min(li) - j0;
+        // QK^T scores for this tile: 4 K rows per pass, independent chains
+        let mut t = 0usize;
+        while t + 4 <= tl {
+            let k0 = &qkv[kbase + (j0 + t) * stride..][..dh];
+            let k1 = &qkv[kbase + (j0 + t + 1) * stride..][..dh];
+            let k2 = &qkv[kbase + (j0 + t + 2) * stride..][..dh];
+            let k3 = &qkv[kbase + (j0 + t + 3) * stride..][..dh];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for u in 0..dh {
+                let qv = q[u];
+                s0 += qv * k0[u];
+                s1 += qv * k1[u];
+                s2 += qv * k2[u];
+                s3 += qv * k3[u];
+            }
+            stile[t] = s0 * scale;
+            stile[t + 1] = s1 * scale;
+            stile[t + 2] = s2 * scale;
+            stile[t + 3] = s3 * scale;
+            t += 4;
+        }
+        while t < tl {
+            let kr = &qkv[kbase + (j0 + t) * stride..][..dh];
+            let mut s = 0.0f32;
+            for u in 0..dh {
+                s += q[u] * kr[u];
+            }
+            stile[t] = s * scale;
+            t += 1;
+        }
+        // online softmax: rescale the running state when the max grows
+        let mut mt = stile[0];
+        for &sv in &stile[1..tl] {
+            mt = mt.max(sv);
+        }
+        if mt > m {
+            if m > f32::NEG_INFINITY {
+                let r = exp_approx(m - mt);
+                l *= r;
+                for v in out.iter_mut() {
+                    *v *= r;
+                }
+            }
+            m = mt;
+        }
+        for t in 0..tl {
+            let p = exp_approx(stile[t] - m);
+            l += p;
+            let vr = &qkv[vbase + (j0 + t) * stride..][..dh];
+            for u in 0..dh {
+                out[u] += p * vr[u];
+            }
+        }
+        j0 += ATTN_TILE;
+    }
+    let inv = 1.0 / l;
+    for v in out.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// AVX2 arm of one flash-attention query row: `dot4`/`dot1` for the QK^T
+/// scores, `exp_ps` for full 8-lane probability groups with an
+/// [`exp_approx`] tail (bitwise-identical per lane), broadcast-FMA PV
+/// accumulation with a `mul_add` scalar tail, same online-softmax state
+/// machine as the scalar arm.
+///
+/// # Safety
+/// Caller must ensure AVX2+FMA support (see `active_kernel`) and that
+/// `qoff + dh`, `kbase + (li-1)*stride + dh` and `vbase + (li-1)*stride + dh`
+/// stay within `qkv`; `stile` must hold at least `ATTN_TILE` floats and
+/// `out` exactly `dh`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn flash_attn_row_avx2(
+    qkv: &[f32],
+    qoff: usize,
+    kbase: usize,
+    vbase: usize,
+    stride: usize,
+    li: usize,
+    dh: usize,
+    scale: f32,
+    stile: &mut [f32],
+    out: &mut [f32],
+) {
+    let base = qkv.as_ptr();
+    let qp = base.add(qoff);
+    let mut m = f32::NEG_INFINITY;
+    let mut l = 0.0f32;
+    out.fill(0.0);
+    let optr = out.as_mut_ptr();
+    let mut j0 = 0usize;
+    while j0 < li {
+        let tl = (j0 + ATTN_TILE).min(li) - j0;
+        let mut t = 0usize;
+        while t + 4 <= tl {
+            let (s0, s1, s2, s3) = dot4(
+                qp,
+                base.add(kbase + (j0 + t) * stride),
+                base.add(kbase + (j0 + t + 1) * stride),
+                base.add(kbase + (j0 + t + 2) * stride),
+                base.add(kbase + (j0 + t + 3) * stride),
+                dh,
+            );
+            stile[t] = s0 * scale;
+            stile[t + 1] = s1 * scale;
+            stile[t + 2] = s2 * scale;
+            stile[t + 3] = s3 * scale;
+            t += 4;
+        }
+        while t < tl {
+            stile[t] = dot1(qp, base.add(kbase + (j0 + t) * stride), dh) * scale;
+            t += 1;
+        }
+        let mut mt = stile[0];
+        for &sv in &stile[1..tl] {
+            mt = mt.max(sv);
+        }
+        if mt > m {
+            if m > f32::NEG_INFINITY {
+                let r = exp_approx(m - mt);
+                l *= r;
+                let rv = _mm256_set1_ps(r);
+                let mut u = 0usize;
+                while u + 8 <= dh {
+                    _mm256_storeu_ps(optr.add(u), _mm256_mul_ps(_mm256_loadu_ps(optr.add(u)), rv));
+                    u += 8;
+                }
+                while u < dh {
+                    *optr.add(u) *= r;
+                    u += 1;
+                }
+            }
+            m = mt;
+        }
+        // probabilities: vector exp over full 8-lane groups, exp_approx tail
+        let mv = _mm256_set1_ps(m);
+        let sp = stile.as_mut_ptr();
+        let mut t = 0usize;
+        while t + 8 <= tl {
+            _mm256_storeu_ps(
+                sp.add(t),
+                exp_ps(_mm256_sub_ps(_mm256_loadu_ps(sp.add(t)), mv)),
+            );
+            t += 8;
+        }
+        while t < tl {
+            stile[t] = exp_approx(stile[t] - m);
+            t += 1;
+        }
+        for &p in &stile[..tl] {
+            l += p;
+        }
+        for t in 0..tl {
+            let vr = base.add(vbase + (j0 + t) * stride);
+            let pv = _mm256_set1_ps(stile[t]);
+            let mut u = 0usize;
+            while u + 8 <= dh {
+                _mm256_storeu_ps(
+                    optr.add(u),
+                    _mm256_fmadd_ps(pv, _mm256_loadu_ps(vr.add(u)), _mm256_loadu_ps(optr.add(u))),
+                );
+                u += 8;
+            }
+            while u < dh {
+                *optr.add(u) = stile[t].mul_add(*vr.add(u), *optr.add(u));
+                u += 1;
+            }
+        }
+        j0 += ATTN_TILE;
+    }
+    let inv = 1.0 / l;
+    let iv = _mm256_set1_ps(inv);
+    let mut u = 0usize;
+    while u + 8 <= dh {
+        _mm256_storeu_ps(optr.add(u), _mm256_mul_ps(_mm256_loadu_ps(optr.add(u)), iv));
+        u += 8;
+    }
+    while u < dh {
+        *optr.add(u) *= inv;
+        u += 1;
+    }
+}
+
+// --------------------------------------------------- vectorized elementwise
+
+/// Vectorized row-wise layer norm (eps 1e-5). Mean and variance reduce
+/// through the deterministic `hsum_ps` with plain-add scalar tails; the
+/// normalize step pairs a vector FMA with a `mul_add` tail so each element
+/// rounds identically regardless of its position in the row.
+///
+/// # Safety
+/// Caller must ensure AVX2+FMA support; `src.len()` and `dst.len()` must be
+/// equal multiples of `d`, and `g`/`b` must each hold at least `d` floats.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn layer_norm_avx2(src: &[f32], g: &[f32], b: &[f32], dst: &mut [f32], d: usize) {
+    let inv_d = 1.0 / d as f32;
+    for (srow, drow) in src.chunks_exact(d).zip(dst.chunks_exact_mut(d)) {
+        let sp = srow.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let mut p = 0usize;
+        while p + 8 <= d {
+            acc = _mm256_add_ps(acc, _mm256_loadu_ps(sp.add(p)));
+            p += 8;
+        }
+        let mut sum = hsum_ps(acc);
+        while p < d {
+            sum += srow[p];
+            p += 1;
+        }
+        let mean = sum * inv_d;
+        let meanv = _mm256_set1_ps(mean);
+        let mut vacc = _mm256_setzero_ps();
+        p = 0;
+        while p + 8 <= d {
+            let c = _mm256_sub_ps(_mm256_loadu_ps(sp.add(p)), meanv);
+            vacc = _mm256_fmadd_ps(c, c, vacc);
+            p += 8;
+        }
+        let mut var = hsum_ps(vacc);
+        while p < d {
+            let c = srow[p] - mean;
+            var = c.mul_add(c, var);
+            p += 1;
+        }
+        let inv = 1.0 / (var * inv_d + 1e-5).sqrt();
+        let invv = _mm256_set1_ps(inv);
+        let dp = drow.as_mut_ptr();
+        p = 0;
+        while p + 8 <= d {
+            let t = _mm256_mul_ps(_mm256_sub_ps(_mm256_loadu_ps(sp.add(p)), meanv), invv);
+            let y = _mm256_fmadd_ps(
+                t,
+                _mm256_loadu_ps(g.as_ptr().add(p)),
+                _mm256_loadu_ps(b.as_ptr().add(p)),
+            );
+            _mm256_storeu_ps(dp.add(p), y);
+            p += 8;
+        }
+        while p < d {
+            drow[p] = ((srow[p] - mean) * inv).mul_add(g[p], b[p]);
+            p += 1;
+        }
+    }
+}
+
+/// `dst[i] += a[i] * b[i]` with FMA; the scalar tail uses `mul_add` so every
+/// element rounds identically to a vector lane (the fused mux accumulate).
+///
+/// # Safety
+/// Caller must ensure AVX2+FMA support and that `a` and `b` each hold at
+/// least `dst.len()` floats.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn fmadd_buf_avx2(dst: &mut [f32], a: &[f32], b: &[f32]) {
+    let n = dst.len();
+    let (dp, ap, bp) = (dst.as_mut_ptr(), a.as_ptr(), b.as_ptr());
+    let mut p = 0usize;
+    while p + 8 <= n {
+        let y = _mm256_fmadd_ps(
+            _mm256_loadu_ps(ap.add(p)),
+            _mm256_loadu_ps(bp.add(p)),
+            _mm256_loadu_ps(dp.add(p)),
+        );
+        _mm256_storeu_ps(dp.add(p), y);
+        p += 8;
+    }
+    while p < n {
+        *dp.add(p) = (*ap.add(p)).mul_add(*bp.add(p), *dp.add(p));
+        p += 1;
+    }
+}
+
+/// Residual add `dst[i] += src[i]`. Pure elementwise addition, so the
+/// vector body and scalar tail are bitwise identical by construction.
+///
+/// # Safety
+/// Caller must ensure AVX2 support and `src.len() >= dst.len()`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn add_assign_avx2(dst: &mut [f32], src: &[f32]) {
+    let n = dst.len();
+    let (dp, sp) = (dst.as_mut_ptr(), src.as_ptr());
+    let mut p = 0usize;
+    while p + 8 <= n {
+        _mm256_storeu_ps(
+            dp.add(p),
+            _mm256_add_ps(_mm256_loadu_ps(dp.add(p)), _mm256_loadu_ps(sp.add(p))),
+        );
+        p += 8;
+    }
+    while p < n {
+        *dp.add(p) += *sp.add(p);
+        p += 1;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -638,6 +1000,214 @@ mod tests {
                     (g - want).abs() <= 2e-5 * (1.0 + want.abs()),
                     "gelu({x}) = {g}, want {want}"
                 );
+            }
+        }
+    }
+
+    /// Straightforward two-pass softmax attention over one query row —
+    /// the oracle both flash arms are checked against.
+    fn naive_attn_row(
+        qkv: &[f32],
+        qoff: usize,
+        kbase: usize,
+        vbase: usize,
+        stride: usize,
+        li: usize,
+        dh: usize,
+        scale: f32,
+    ) -> Vec<f32> {
+        let q = &qkv[qoff..qoff + dh];
+        let mut scores: Vec<f32> = (0..li)
+            .map(|j| {
+                let k = &qkv[kbase + j * stride..][..dh];
+                q.iter().zip(k).map(|(a, b)| a * b).sum::<f32>() * scale
+            })
+            .collect();
+        let m = scores.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut l = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - m).exp();
+            l += *s;
+        }
+        let mut out = vec![0.0f32; dh];
+        for (j, p) in scores.iter().enumerate() {
+            let v = &qkv[vbase + j * stride..][..dh];
+            for u in 0..dh {
+                out[u] += (p / l) * v[u];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn flash_attention_scalar_matches_naive_softmax() {
+        let mut rng = crate::util::rng::Rng::new(0xF1A5);
+        // li crossing the tile boundary both ways, dh crossing the 8-lane
+        // vector width both ways
+        for &(li, dh) in &[
+            (1usize, 4usize),
+            (2, 8),
+            (5, 12),
+            (15, 8),
+            (16, 8),
+            (17, 4),
+            (33, 32),
+            (48, 8),
+        ] {
+            let heads = 2usize;
+            let d = heads * dh;
+            let stride = 3 * d;
+            let qkv: Vec<f32> = (0..li * stride).map(|_| rng.normal() as f32).collect();
+            let scale = 1.0 / (dh as f32).sqrt();
+            for hh in 0..heads {
+                let kbase = d + hh * dh;
+                let vbase = 2 * d + hh * dh;
+                for i in 0..li {
+                    let qoff = i * stride + hh * dh;
+                    let want = naive_attn_row(&qkv, qoff, kbase, vbase, stride, li, dh, scale);
+                    let mut stile = [0.0f32; ATTN_TILE];
+                    let mut got = vec![0.0f32; dh];
+                    flash_attn_row_scalar(
+                        &qkv, qoff, kbase, vbase, stride, li, dh, scale, &mut stile, &mut got,
+                    );
+                    for (g, w) in got.iter().zip(&want) {
+                        assert!(
+                            (g - w).abs() <= 2e-5 * (1.0 + w.abs()),
+                            "scalar flash {g} vs naive {w} (li={li}, dh={dh}, row={i})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn flash_attention_avx2_matches_scalar_arm() {
+        if !has_avx2_fma() {
+            return;
+        }
+        let mut rng = crate::util::rng::Rng::new(0xF1A6);
+        for &(li, dh) in &[
+            (1usize, 4usize),
+            (3, 8),
+            (15, 12),
+            (16, 16),
+            (17, 8),
+            (31, 4),
+            (48, 32),
+        ] {
+            let heads = 2usize;
+            let d = heads * dh;
+            let stride = 3 * d;
+            let qkv: Vec<f32> = (0..li * stride).map(|_| rng.normal() as f32).collect();
+            let scale = 1.0 / (dh as f32).sqrt();
+            for hh in 0..heads {
+                let kbase = d + hh * dh;
+                let vbase = 2 * d + hh * dh;
+                for i in 0..li {
+                    let qoff = i * stride + hh * dh;
+                    let mut stile_s = [0.0f32; ATTN_TILE];
+                    let mut want = vec![0.0f32; dh];
+                    flash_attn_row_scalar(
+                        &qkv, qoff, kbase, vbase, stride, li, dh, scale, &mut stile_s, &mut want,
+                    );
+                    let mut stile_v = [0.0f32; ATTN_TILE];
+                    let mut got = vec![0.0f32; dh];
+                    unsafe {
+                        flash_attn_row_avx2(
+                            &qkv, qoff, kbase, vbase, stride, li, dh, scale, &mut stile_v,
+                            &mut got,
+                        )
+                    };
+                    for (g, w) in got.iter().zip(&want) {
+                        assert!(
+                            (g - w).abs() <= 1e-5 * (1.0 + w.abs()),
+                            "avx2 flash {g} vs scalar {w} (li={li}, dh={dh}, row={i})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn exp_approx_is_bitwise_identical_to_exp_ps_lanes() {
+        if !has_avx2_fma() {
+            return;
+        }
+        let mut rng = crate::util::rng::Rng::new(0xE4B);
+        let mut xs: Vec<f32> = vec![0.0, -0.5, 1.0, -90.0, 90.0, 88.376, -88.376, -13.7];
+        xs.extend((0..64).map(|_| rng.normal() as f32 * 20.0));
+        for chunk in xs.chunks(8) {
+            let mut buf = [0.0f32; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            let mut got = [0.0f32; 8];
+            unsafe {
+                _mm256_storeu_ps(got.as_mut_ptr(), exp_ps(_mm256_loadu_ps(buf.as_ptr())));
+            }
+            for (x, g) in buf.iter().zip(&got) {
+                assert_eq!(
+                    exp_approx(*x).to_bits(),
+                    g.to_bits(),
+                    "exp_approx({x}) diverged from exp_ps lane"
+                );
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_layer_norm_matches_plain_scalar_norm() {
+        if !has_avx2_fma() {
+            return;
+        }
+        let mut rng = crate::util::rng::Rng::new(0x17A0);
+        for &(rows, d) in &[(1usize, 4usize), (2, 8), (3, 13), (2, 64), (1, 130)] {
+            let src: Vec<f32> = (0..rows * d).map(|_| rng.normal() as f32).collect();
+            let g: Vec<f32> = (0..d).map(|_| 1.0 + rng.normal() as f32 * 0.1).collect();
+            let b: Vec<f32> = (0..d).map(|_| rng.normal() as f32 * 0.1).collect();
+            let mut got = vec![0.0f32; rows * d];
+            unsafe { layer_norm_avx2(&src, &g, &b, &mut got, d) };
+            for r in 0..rows {
+                let row = &src[r * d..(r + 1) * d];
+                let mean = row.iter().sum::<f32>() / d as f32;
+                let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+                let inv = 1.0 / (var + 1e-5).sqrt();
+                for c in 0..d {
+                    let want = (row[c] - mean) * inv * g[c] + b[c];
+                    let gv = got[r * d + c];
+                    assert!(
+                        (gv - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                        "layer_norm[{r},{c}] = {gv}, want {want} (d={d})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_fmadd_and_residual_add_match_scalar() {
+        if !has_avx2_fma() {
+            return;
+        }
+        let mut rng = crate::util::rng::Rng::new(0xADD);
+        for n in [1usize, 7, 8, 9, 40, 130] {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let base: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let mut got = base.clone();
+            unsafe { fmadd_buf_avx2(&mut got, &a, &b) };
+            for i in 0..n {
+                let want = a[i].mul_add(b[i], base[i]);
+                assert_eq!(got[i].to_bits(), want.to_bits(), "fmadd lane {i} (n={n})");
+            }
+            let mut got = base.clone();
+            unsafe { add_assign_avx2(&mut got, &a) };
+            for i in 0..n {
+                assert_eq!(got[i].to_bits(), (base[i] + a[i]).to_bits(), "add lane {i}");
             }
         }
     }

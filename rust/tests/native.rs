@@ -29,7 +29,9 @@ fn prop_native_forward_matches_scalar_reference() {
         let n_layers = g.rng.range(1, 3);
         let n_mux = g.rng.range(1, 5);
         let batch = g.rng.range(1, 3);
-        let seq_len = g.rng.range(3, 9);
+        // up to input_len = 5 + 20 = 25: crosses the flash-attention
+        // tile width (16), covering the multi-tile online-softmax path
+        let seq_len = g.rng.range(3, 20);
         let n_classes = g.rng.range(2, 6);
         let task = if g.rng.below(2) == 0 { "cls" } else { "token" };
         let threads = if g.rng.below(2) == 0 { 1 } else { 3 };
@@ -76,7 +78,9 @@ fn prop_bucketed_native_forward_matches_scalar_reference_at_every_bucket() {
         let n_layers = g.rng.range(1, 3);
         let n_mux = g.rng.range(1, 4);
         let batch = g.rng.range(1, 3);
-        let seq_len_max = g.rng.range(6, 12);
+        // buckets past the flash-attention tile width (16) exercise the
+        // tile-tail path (li not divisible by ATTN_TILE) at every length
+        let seq_len_max = g.rng.range(6, 18);
         let n_classes = g.rng.range(2, 5);
         let task = if g.rng.below(2) == 0 { "cls" } else { "token" };
         let threads = if g.rng.below(2) == 0 { 1 } else { 3 };
@@ -403,7 +407,9 @@ fn prop_int8_forward_tracks_f32_at_every_bucket() {
         let n_layers = g.rng.range(1, 3);
         let n_mux = g.rng.range(1, 4);
         let batch = g.rng.range(1, 3);
-        let seq_len_max = g.rng.range(4, 9);
+        // past the flash-attention tile width so int8 QKV fusion is
+        // exercised on the multi-tile path too
+        let seq_len_max = g.rng.range(4, 17);
         let n_classes = g.rng.range(2, 5);
         let task = if g.rng.below(2) == 0 { "cls" } else { "token" };
         let seed = g.rng.next_u64();
